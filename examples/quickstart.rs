@@ -1,0 +1,54 @@
+//! Quickstart: load a classic network, ask diagnostic questions.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the full public API surface once: parse BIF → compile the
+//! junction tree → build an engine → set evidence → read posteriors.
+
+use std::sync::Arc;
+
+use fastbn::prelude::*;
+
+fn main() -> Result<()> {
+    // 1. A network. Embedded classics parse from BIF text; your own
+    //    networks load with `fastbn::bn::bif::parse_file`.
+    let net = fastbn::bn::embedded::asia();
+    println!("network: {}", net.stats());
+
+    // 2. Compile the junction tree once per network.
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
+    println!("junction tree: {}", jt.stats());
+
+    // 3. Build the engine. `Hybrid` is Fast-BNI-par, the paper's
+    //    contribution; see EngineKind for the five comparison engines.
+    let mut engine = EngineKind::Hybrid.build(Arc::clone(&jt), &EngineConfig::default());
+
+    // 4. One reusable state per engine; reset happens inside infer().
+    let mut state = TreeState::fresh(&jt);
+
+    // Prior: how likely is lung cancer with no information?
+    let prior = engine.infer(&mut state, &Evidence::none())?;
+    println!("\nP(lung) prior               = {:.4}", prior.marginal(&net, "lung")?[0]);
+
+    // A smoker walks in...
+    let ev = Evidence::from_pairs(&net, &[("smoke", "yes")])?;
+    let post = engine.infer(&mut state, &ev)?;
+    println!("P(lung | smoke)             = {:.4}", post.marginal(&net, "lung")?[0]);
+
+    // ...with a positive X-ray and dyspnoea.
+    let ev = Evidence::from_pairs(&net, &[("smoke", "yes"), ("xray", "yes"), ("dysp", "yes")])?;
+    let post = engine.infer(&mut state, &ev)?;
+    println!("P(lung | smoke, xray, dysp) = {:.4}", post.marginal(&net, "lung")?[0]);
+    println!("P(tub  | smoke, xray, dysp) = {:.4}", post.marginal(&net, "tub")?[0]);
+    println!("P(e) = {:.6}", post.evidence_probability());
+
+    // Impossible evidence is an error, not a NaN.
+    let bad = Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")])?;
+    match engine.infer(&mut state, &bad) {
+        Err(Error::InconsistentEvidence) => println!("\nimpossible evidence correctly rejected"),
+        other => panic!("expected InconsistentEvidence, got {other:?}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,134 @@
+"""AOT: lower the L2 entry points to HLO **text** artifacts per shape
+bucket, for the Rust PJRT runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the published
+``xla`` crate's XLA (xla_extension 0.5.1) rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Buckets: clique tables are padded by the Rust runtime to the smallest
+``(M, K)`` bucket that fits (sep-major 2-D view; padding rows/cols are
+zero, which both ops treat as absent mass). One compiled executable per
+(op, bucket) pair; the manifest lists them all.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+# The Rust tables are f64; without x64 jax silently downcasts the lowered
+# modules to f32 and PJRT rejects the runtime's buffers.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (M, K) buckets for the sep-major clique view. Powers of two, spanning
+# tiny separators up to ~1M-entry cliques (1024 * 1024).
+BUCKETS = [(16, 16), (64, 64), (256, 256), (1024, 256), (1024, 1024)]
+
+# Case-batched variants (batch, M, K) — emitted for the batched-dispatch
+# extension benchmarked on the Python side.
+BATCHED_BUCKETS = [(8, 256, 256)]
+
+DTYPE = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_marginalize(m: int, k: int) -> str:
+    spec = jax.ShapeDtypeStruct((m, k), DTYPE)
+    return to_hlo_text(jax.jit(model.marginalize).lower(spec))
+
+
+def lower_absorb(m: int, k: int) -> str:
+    clique = jax.ShapeDtypeStruct((m, k), DTYPE)
+    sep = jax.ShapeDtypeStruct((m,), DTYPE)
+    return to_hlo_text(jax.jit(model.absorb).lower(clique, sep, sep))
+
+
+def lower_message(m: int, k: int) -> str:
+    """Fused child->parent message for same-bucket child/parent tables."""
+    table = jax.ShapeDtypeStruct((m, k), DTYPE)
+    sep = jax.ShapeDtypeStruct((m,), DTYPE)
+    return to_hlo_text(jax.jit(model.message_pass).lower(table, table, sep))
+
+
+def lower_marginalize_batch(b: int, m: int, k: int) -> str:
+    spec = jax.ShapeDtypeStruct((b, m, k), DTYPE)
+    return to_hlo_text(jax.jit(model.marginalize_batch).lower(spec))
+
+
+def lower_absorb_batch(b: int, m: int, k: int) -> str:
+    clique = jax.ShapeDtypeStruct((b, m, k), DTYPE)
+    sep = jax.ShapeDtypeStruct((b, m), DTYPE)
+    return to_hlo_text(jax.jit(model.absorb_batch).lower(clique, sep, sep))
+
+
+def build_all(out_dir: str, buckets=None, batched=None) -> list[str]:
+    """Write every artifact + manifest into ``out_dir``; returns manifest
+    lines (``op M K filename`` / ``op B M K filename``)."""
+    buckets = BUCKETS if buckets is None else buckets
+    batched = BATCHED_BUCKETS if batched is None else batched
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: list[str] = []
+
+    for m, k in buckets:
+        for op, lower in [("marg", lower_marginalize), ("absorb", lower_absorb)]:
+            fname = f"{op}_{m}x{k}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(lower(m, k))
+            manifest.append(f"{op} {m} {k} {fname}")
+
+    # one fused-message artifact (mid bucket) as the L2-composition demo
+    m, k = buckets[len(buckets) // 2]
+    fname = f"msg_{m}x{k}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(lower_message(m, k))
+    manifest.append(f"msg {m} {k} {fname}")
+
+    for b, m, k in batched:
+        for op, lower in [("bmarg", lower_marginalize_batch), ("babsorb", lower_absorb_batch)]:
+            fname = f"{op}_{b}x{m}x{k}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(lower(b, m, k))
+            manifest.append(f"{op} {b} {m} {k} {fname}")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    parser.add_argument(
+        "--tiny", action="store_true", help="only the smallest bucket (fast smoke builds in tests)"
+    )
+    args = parser.parse_args()
+    buckets = BUCKETS[:1] if args.tiny else None
+    batched = [] if args.tiny else None
+    manifest = build_all(args.out_dir, buckets=buckets, batched=batched)
+    total = sum(
+        os.path.getsize(os.path.join(args.out_dir, line.split()[-1])) for line in manifest
+    )
+    print(f"wrote {len(manifest)} artifacts ({total} bytes of HLO text) to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

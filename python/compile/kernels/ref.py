@@ -1,0 +1,47 @@
+"""Pure-jnp reference oracle for the Pallas table-op kernels.
+
+Every kernel in :mod:`compile.kernels.table_ops` must match these
+definitions exactly (pytest sweeps shapes/dtypes with hypothesis). These
+are also the semantics the Rust native backend implements, so the chain
+``rust native == HLO artifact == pallas kernel == ref`` is closed by the
+combination of this suite and ``rust/tests/runtime_xla.rs``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def marginalize(clique):
+    """Row sums of the sep-major view: ``(M, K) -> (M,)``."""
+    return jnp.sum(clique, axis=1)
+
+
+def _safe_ratio(new, old):
+    """Junction-tree division: ``new/old`` with 0/0 = 0."""
+    return jnp.where(old != 0.0, new / jnp.where(old != 0.0, old, 1.0), 0.0)
+
+
+def absorb(clique, sep_new, sep_old):
+    """``out[m, k] = clique[m, k] * new[m] / old[m]`` (0/0 = 0)."""
+    return clique * _safe_ratio(sep_new, sep_old)[:, None]
+
+
+def sep_update(sep_new, sep_old):
+    """Returns ``(ratio, normalized_new, mass)``; mass may be 0."""
+    mass = jnp.sum(sep_new)
+    scale = jnp.where(mass > 0.0, 1.0 / jnp.where(mass > 0.0, mass, 1.0), 0.0)
+    normalized = sep_new * scale
+    return _safe_ratio(normalized, sep_old), normalized, mass
+
+
+def message_pass(child, parent, sep_old):
+    """One junction-tree message in the 2-D view (both tables sep-major).
+
+    Returns ``(parent_out, sep_out, mass)`` — the composition the L2
+    model lowers per edge.
+    """
+    msg = marginalize(child)
+    ratio, norm, mass = sep_update(msg, sep_old)
+    del ratio
+    return absorb(parent, norm, sep_old), norm, mass

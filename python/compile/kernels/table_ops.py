@@ -1,0 +1,183 @@
+"""L1 — Pallas kernels for the dominant potential-table operations.
+
+The paper parallelizes three table operations on CPU threads via index
+mappings (gather/scatter). The TPU re-think (DESIGN.md §Hardware-Adaptation)
+reshapes each clique table into a 2-D *separator-major* view ``(M, K)``:
+``M`` enumerates separator configurations, ``K`` the remaining clique
+digits. Then
+
+* **marginalization** is a row reduction ``(M, K) -> (M,)`` on the VPU
+  (with an alternative one-hot **MXU matmul** formulation for wide tables),
+* **extension + reduction** ("absorb") is a broadcast multiply of the
+  per-row ratio ``new/old``,
+
+and the HBM <-> VMEM schedule that the paper expressed with threadblocks is
+expressed here with ``BlockSpec`` tiles over ``M``.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowering produces plain HLO that
+both pytest and the Rust runtime execute. Tile shapes are still chosen for
+a real TPU VMEM budget (see ``vmem_footprint_bytes``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile heights (rows of the sep-major view per grid step). Chosen
+# so a (TILE_M, K<=1024) f32/f64 block stays well under a 16 MiB VMEM
+# budget alongside the output tile and double-buffering headroom.
+TILE_M = 256
+
+
+def _row_sum_kernel(x_ref, o_ref):
+    """One grid step: reduce a (tile_m, K) block to (tile_m,) row sums."""
+    o_ref[...] = jnp.sum(x_ref[...], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def marginalize(clique, tile_m: int = TILE_M):
+    """Row-sum marginalization ``(M, K) -> (M,)`` as a tiled Pallas kernel.
+
+    ``M`` must be a multiple of ``tile_m`` or smaller than it (the grid
+    covers ``ceil(M / tile_m)`` row tiles; ragged edges are handled by
+    Pallas block clamping).
+    """
+    m, k = clique.shape
+    tile = min(tile_m, m)
+    grid = (pl.cdiv(m, tile),)
+    return pl.pallas_call(
+        _row_sum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), clique.dtype),
+        interpret=True,
+    )(clique)
+
+
+def _absorb_kernel(x_ref, new_ref, old_ref, o_ref):
+    """One grid step: multiply a (tile_m, K) block by the per-row ratio.
+
+    The reduction ratio ``new/old`` uses the junction-tree convention
+    0/0 = 0 (evidence-killed entries stay dead).
+    """
+    new = new_ref[...]
+    old = old_ref[...]
+    ratio = jnp.where(old != 0.0, new / jnp.where(old != 0.0, old, 1.0), 0.0)
+    o_ref[...] = x_ref[...] * ratio[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def absorb(clique, sep_new, sep_old, tile_m: int = TILE_M):
+    """Fused extension+reduction: ``out[m,k] = clique[m,k] * new[m]/old[m]``.
+
+    This is the paper's separator-update absorbed into the receiving
+    clique, with the division folded in (one pass over the table instead
+    of two).
+    """
+    m, k = clique.shape
+    tile = min(tile_m, m)
+    grid = (pl.cdiv(m, tile),)
+    return pl.pallas_call(
+        _absorb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), clique.dtype),
+        interpret=True,
+    )(clique, sep_new, sep_old)
+
+
+def _matmul_marg_kernel(x_ref, sel_ref, o_ref):
+    """MXU formulation: ``o = sel @ x`` with ``sel`` a (tile_m, M) one-hot
+    selector — marginalization as a systolic-array matmul.
+
+    On real TPU hardware this variant wins when ``K`` is large enough to
+    amortize the selector traffic (the selector is fused from an iota
+    comparison, so it never materializes in HBM).
+    """
+    o_ref[...] = jnp.dot(sel_ref[...], x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def marginalize_mxu(clique, tile_m: int = TILE_M):
+    """Marginalization routed through the MXU (see `_matmul_marg_kernel`).
+
+    Semantically identical to :func:`marginalize`; exists so the §Perf
+    estimate can compare VPU-reduce vs MXU-matmul schedules.
+    """
+    m, k = clique.shape
+    tile = min(tile_m, m)
+    grid = (pl.cdiv(m, tile),)
+    # one-hot row selector: sel[i, j] = 1 iff j == global_row(i)
+    sel = jnp.eye(m, dtype=clique.dtype)
+    out = pl.pallas_call(
+        _matmul_marg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), clique.dtype),
+        interpret=True,
+    )(clique, sel)
+    return jnp.sum(out, axis=1)
+
+
+def _sep_update_kernel(new_ref, old_ref, ratio_ref, norm_ref):
+    """Normalize a separator message and emit the update ratio.
+
+    Outputs: ratio = normalized_new / old (0/0 = 0), norm = normalized_new.
+    The mass (pre-normalization sum) is returned by the caller from a
+    plain reduction — scalars are cheap at the JAX level.
+    """
+    new = new_ref[...]
+    old = old_ref[...]
+    total = jnp.sum(new)
+    scale = jnp.where(total > 0.0, 1.0 / jnp.where(total > 0.0, total, 1.0), 0.0)
+    normalized = new * scale
+    ratio_ref[...] = jnp.where(old != 0.0, normalized / jnp.where(old != 0.0, old, 1.0), 0.0)
+    norm_ref[...] = normalized
+
+
+@jax.jit
+def sep_update(sep_new, sep_old):
+    """Separator finish: returns ``(ratio, normalized_new, mass)``.
+
+    Single-tile kernel (separators are small relative to cliques); the
+    mass is computed outside the kernel so callers can fold ``ln(mass)``
+    into their evidence-likelihood accumulator.
+    """
+    (m,) = sep_new.shape
+    ratio, norm = pl.pallas_call(
+        _sep_update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((m,), sep_new.dtype),
+            jax.ShapeDtypeStruct((m,), sep_new.dtype),
+        ),
+        interpret=True,
+    )(sep_new, sep_old)
+    mass = jnp.sum(sep_new)
+    return ratio, norm, mass
+
+
+def vmem_footprint_bytes(tile_m: int, k: int, dtype_bytes: int = 4, buffers: int = 2) -> int:
+    """Estimated VMEM bytes for one :func:`absorb` grid step.
+
+    ``buffers=2`` accounts for double-buffered input + output tiles; the
+    two (tile_m,) separator vectors are negligible but included. Used by
+    DESIGN.md §Perf to justify tile choices against a 16 MiB budget.
+    """
+    tile_bytes = tile_m * k * dtype_bytes
+    sep_bytes = 2 * tile_m * dtype_bytes
+    return buffers * (2 * tile_bytes + sep_bytes)

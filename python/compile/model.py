@@ -1,0 +1,85 @@
+"""L2 — the JAX compute graph over the L1 kernels.
+
+The Rust coordinator owns the *tree traversal* (which message when); the
+compute per message is a fixed dataflow over the sep-major 2-D views:
+
+    msg   = marginalize(child)            # L1 kernel
+    ratio, new, mass = sep_update(msg, sep_old)
+    parent' = absorb-by-ratio(parent)     # folded into absorb()
+
+``aot.py`` lowers three entry points per shape bucket — ``marginalize``,
+``absorb`` and the fused ``message_pass`` — plus case-batched variants
+(``vmap`` over a leading batch axis), and the Rust runtime executes them
+via PJRT. Python never runs at inference time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import table_ops as k
+
+
+def marginalize(clique):
+    """L2 wrapper over the L1 row-sum kernel (``(M,K) -> (M,)``)."""
+    return k.marginalize(clique)
+
+
+def absorb(clique, sep_new, sep_old):
+    """L2 wrapper over the fused extension+reduction kernel."""
+    return k.absorb(clique, sep_new, sep_old)
+
+
+def message_pass(child, parent, sep_old):
+    """One full junction-tree message (see module docs).
+
+    Returns ``(parent_out, sep_out, mass)``. ``mass`` is the
+    pre-normalization separator sum; the coordinator accumulates
+    ``ln(mass)`` into ``ln P(e)`` and treats ``mass == 0`` as inconsistent
+    evidence.
+    """
+    msg = k.marginalize(child)
+    ratio, norm, mass = k.sep_update(msg, sep_old)
+    parent_out = k.absorb(parent, norm, sep_old)
+    del ratio  # the absorb kernel recomputes the ratio fused
+    return parent_out, norm, mass
+
+
+def marginalize_batch(cliques):
+    """Case-batched marginalization: ``(B, M, K) -> (B, M)``.
+
+    The 2 000-test-case protocol makes the batch axis the natural
+    additional parallel dimension on an accelerator; the Rust coordinator
+    can pack same-bucket messages from different cases into one call.
+    """
+    return jax.vmap(k.marginalize)(cliques)
+
+
+def absorb_batch(cliques, sep_new, sep_old):
+    """Case-batched absorb: ``(B, M, K), (B, M), (B, M) -> (B, M, K)``."""
+    return jax.vmap(k.absorb)(cliques, sep_new, sep_old)
+
+
+def normalize(table):
+    """Table normalization (used for posteriors): zero-safe."""
+    total = jnp.sum(table)
+    scale = jnp.where(total > 0.0, 1.0 / jnp.where(total > 0.0, total, 1.0), 0.0)
+    return table * scale
+
+
+def chain_calibrate(cliques, sep_olds):
+    """Collect over a fixed chain of cliques (pedagogical / test target).
+
+    ``cliques`` is a list of same-bucket (M, K) tables forming a chain
+    ``c0 - c1 - ... - cn``; messages flow left to right. Returns the final
+    clique and the accumulated log-mass. Demonstrates that L2 composes the
+    kernels into multi-step programs that lower into a single HLO module.
+    """
+    log_mass = jnp.zeros((), dtype=cliques[0].dtype)
+    current = cliques[0]
+    for nxt, sep_old in zip(cliques[1:], sep_olds):
+        nxt, _, mass = message_pass(current, nxt, sep_old)
+        log_mass = log_mass + jnp.log(jnp.maximum(mass, 1e-300))
+        current = nxt
+    return current, log_mass

@@ -1,0 +1,4 @@
+import os, sys
+sys.path.insert(0, os.path.dirname(__file__))
+import jax
+jax.config.update("jax_enable_x64", True)

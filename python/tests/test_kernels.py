@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; every kernel must match ``ref``
+to float tolerance on random tables, including the junction-tree edge
+cases (zero rows from evidence, 0/0 separator entries).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, table_ops
+
+jax.config.update("jax_enable_x64", True)
+
+DIMS = st.sampled_from([1, 2, 3, 5, 16, 17, 64, 100, 256])
+DTYPES = st.sampled_from([np.float32, np.float64])
+
+
+def rand_table(rng, m, k, dtype, zero_rows=0.0):
+    x = rng.uniform(0.0, 1.0, size=(m, k)).astype(dtype)
+    if zero_rows > 0:
+        mask = rng.uniform(size=m) < zero_rows
+        x[mask] = 0.0
+    return x
+
+
+def tol(dtype):
+    return 1e-5 if dtype == np.float32 else 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIMS, k=DIMS, dtype=DTYPES, seed=st.integers(0, 2**32 - 1))
+def test_marginalize_matches_ref(m, k, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_table(rng, m, k, dtype)
+    got = table_ops.marginalize(jnp.asarray(x))
+    want = ref.marginalize(jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=tol(dtype), atol=tol(dtype))
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIMS, k=DIMS, dtype=DTYPES, seed=st.integers(0, 2**32 - 1))
+def test_absorb_matches_ref(m, k, dtype, seed):
+    rng = np.random.default_rng(seed)
+    clique = rand_table(rng, m, k, dtype)
+    new = rng.uniform(0.0, 1.0, size=m).astype(dtype)
+    old = rand_table(rng, m, 1, dtype, zero_rows=0.3)[:, 0]  # some zeros
+    new = np.where(old == 0.0, 0.0, new).astype(dtype)  # 0/0 pattern
+    got = table_ops.absorb(jnp.asarray(clique), jnp.asarray(new), jnp.asarray(old))
+    want = ref.absorb(jnp.asarray(clique), jnp.asarray(new), jnp.asarray(old))
+    np.testing.assert_allclose(got, want, rtol=tol(dtype), atol=tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, dtype=DTYPES, seed=st.integers(0, 2**32 - 1))
+def test_sep_update_matches_ref(m, dtype, seed):
+    rng = np.random.default_rng(seed)
+    new = rng.uniform(0.0, 1.0, size=m).astype(dtype)
+    old = rng.uniform(0.0, 1.0, size=m).astype(dtype)
+    got_r, got_n, got_m = table_ops.sep_update(jnp.asarray(new), jnp.asarray(old))
+    want_r, want_n, want_m = ref.sep_update(jnp.asarray(new), jnp.asarray(old))
+    np.testing.assert_allclose(got_r, want_r, rtol=tol(dtype), atol=tol(dtype))
+    np.testing.assert_allclose(got_n, want_n, rtol=tol(dtype), atol=tol(dtype))
+    np.testing.assert_allclose(got_m, want_m, rtol=tol(dtype), atol=tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.sampled_from([2, 4, 16, 64]), k=st.sampled_from([1, 8, 64]), seed=st.integers(0, 2**32 - 1))
+def test_mxu_marginalize_agrees_with_vpu_variant(m, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_table(rng, m, k, np.float64)
+    a = table_ops.marginalize(jnp.asarray(x))
+    b = table_ops.marginalize_mxu(jnp.asarray(x))
+    np.testing.assert_allclose(a, b, rtol=1e-12, atol=1e-12)
+
+
+def test_marginalize_zero_table():
+    x = jnp.zeros((8, 4), dtype=jnp.float64)
+    np.testing.assert_array_equal(table_ops.marginalize(x), np.zeros(8))
+
+
+def test_absorb_zero_over_zero_is_zero():
+    clique = jnp.ones((4, 4), dtype=jnp.float64)
+    new = jnp.zeros(4, dtype=jnp.float64)
+    old = jnp.zeros(4, dtype=jnp.float64)
+    out = table_ops.absorb(clique, new, old)
+    np.testing.assert_array_equal(out, np.zeros((4, 4)))
+
+
+def test_sep_update_zero_mass_reports_zero():
+    new = jnp.zeros(4, dtype=jnp.float64)
+    old = jnp.ones(4, dtype=jnp.float64)
+    ratio, norm, mass = table_ops.sep_update(new, old)
+    assert float(mass) == 0.0
+    np.testing.assert_array_equal(norm, np.zeros(4))
+    np.testing.assert_array_equal(ratio, np.zeros(4))
+
+
+def test_tile_sweep_changes_nothing():
+    rng = np.random.default_rng(7)
+    x = rand_table(rng, 300, 17, np.float64)
+    want = ref.marginalize(jnp.asarray(x))
+    for tile_m in [1, 7, 64, 256, 300, 512]:
+        got = table_ops.marginalize(jnp.asarray(x), tile_m=tile_m)
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_vmem_footprint_estimate_is_sane():
+    # default tile on the largest bucket must fit a 16 MiB VMEM budget
+    bytes_needed = table_ops.vmem_footprint_bytes(table_ops.TILE_M, 1024, dtype_bytes=4)
+    assert bytes_needed < 16 * 1024 * 1024, f"{bytes_needed} bytes exceeds VMEM"
+    # and the estimate grows linearly in K
+    assert table_ops.vmem_footprint_bytes(64, 512) == pytest.approx(
+        2 * table_ops.vmem_footprint_bytes(64, 256), rel=0.02
+    )

@@ -1,0 +1,137 @@
+//! Bench: **ablations** of the design choices DESIGN.md calls out.
+//!
+//! 1. *Root selection* (paper §2): tree-center root vs naive first root —
+//!    layer counts (structural, exact) + modeled hybrid time at t=16 +
+//!    real measured sequential time (root affects only message order
+//!    sequentially, so measured Δ should be ≈0 — separating structural
+//!    from execution effects).
+//! 2. *Index-mapping strategy* (the "bottleneck simplification"): cached
+//!    per-edge maps vs odometer vs per-entry div/mod — real measured, the
+//!    heart of the Fast-BNI-seq vs UnBBayes gap.
+//! 3. *Flattening chunk size*: hybrid min_chunk sweep (modeled at t=16).
+//! 4. *Case-level replicas* (extension beyond the paper): real measured
+//!    throughput at replicas ∈ {1, 2, 4} on this host.
+//!
+//! Scale knobs: FASTBN_CASES (default 10).
+
+use std::sync::Arc;
+
+use fastbn::bench::{env_usize, print_table, Bench};
+use fastbn::bn::netgen;
+use fastbn::coordinator::{BatchConfig, BatchRunner};
+use fastbn::engine::simulate::{simulate_seconds, CostModel};
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::infer::cases::{generate, CaseSpec};
+use fastbn::jt::propagate::MapMode;
+use fastbn::jt::schedule::{RootStrategy, Schedule};
+use fastbn::jt::state::TreeState;
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+
+fn main() {
+    let n_cases = env_usize("FASTBN_CASES", 10);
+    let model = CostModel::calibrate();
+    let bench = Bench::new(1, 3);
+
+    // ---- 1. root selection ----
+    let mut rows = Vec::new();
+    for spec in netgen::paper_suite() {
+        let net = spec.generate();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let center = Schedule::build(&jt, RootStrategy::Center);
+        let first = Schedule::build(&jt, RootStrategy::First);
+        let cfg_center = EngineConfig { root_strategy: RootStrategy::Center, ..Default::default() };
+        let cfg_first = EngineConfig { root_strategy: RootStrategy::First, ..Default::default() };
+        let m_center = simulate_seconds(EngineKind::Hybrid, &jt, 16, &cfg_center, &model);
+        let m_first = simulate_seconds(EngineKind::Hybrid, &jt, 16, &cfg_first, &model);
+        rows.push(vec![
+            spec.name.clone(),
+            format!("{}", center.height()),
+            format!("{}", first.height()),
+            format!("{:.3}ms", m_center * 1e3),
+            format!("{:.3}ms", m_first * 1e3),
+            format!("{:.2}", m_first / m_center),
+        ]);
+    }
+    print_table(
+        "ablation 1: root selection (layers exact; times modeled hybrid t=16)",
+        &["BN", "layers(center)", "layers(first)", "hybrid(center)", "hybrid(first)", "gain"],
+        &rows,
+    );
+
+    // ---- 2. index-mapping strategy (real measured, sequential) ----
+    let mut rows = Vec::new();
+    for name in ["hailfinder-sim", "pigs-sim", "munin2-sim"] {
+        let net = netgen::paper_net(name).unwrap();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cases = generate(&net, &CaseSpec { n_cases, observed_fraction: 0.2, seed: 0xAB });
+        let mut row = vec![name.to_string()];
+        let mut cached_s = 0.0;
+        for mode in [MapMode::Cached, MapMode::Odometer, MapMode::DivMod] {
+            let cfg = EngineConfig { map_mode: mode, threads: 1, ..Default::default() };
+            let mut engine = EngineKind::Seq.build(Arc::clone(&jt), &cfg);
+            let mut state = TreeState::fresh(&jt);
+            let stat = bench.run(|| {
+                for ev in &cases {
+                    let _ = engine.infer(&mut state, ev);
+                }
+            });
+            if matches!(mode, MapMode::Cached) {
+                cached_s = stat.mean.as_secs_f64();
+            }
+            row.push(format!("{:.3}s", stat.mean.as_secs_f64()));
+        }
+        let divmod_s: f64 = row[3].trim_end_matches('s').parse().unwrap();
+        row.push(format!("{:.2}x", divmod_s / cached_s));
+        rows.push(row);
+    }
+    print_table(
+        &format!("ablation 2: index-mapping strategy (measured, seq, {n_cases} cases)"),
+        &["BN", "cached", "odometer", "divmod", "divmod/cached"],
+        &rows,
+    );
+
+    // ---- 3. hybrid chunk-size sweep (modeled t=16) ----
+    let mut rows = Vec::new();
+    for name in ["pigs-sim", "munin4-sim"] {
+        let net = netgen::paper_net(name).unwrap();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let mut row = vec![name.to_string()];
+        for min_chunk in [64usize, 512, 2048, 8192, 65536] {
+            let cfg = EngineConfig { min_chunk, ..Default::default() };
+            let s = simulate_seconds(EngineKind::Hybrid, &jt, 16, &cfg, &model);
+            row.push(format!("{:.3}ms", s * 1e3));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "ablation 3: hybrid flattening chunk size (modeled per-case, t=16)",
+        &["BN", "chunk=64", "512", "2048", "8192", "65536"],
+        &rows,
+    );
+
+    // ---- 4. case-level replicas (real measured) ----
+    let mut rows = Vec::new();
+    let net = netgen::paper_net("hailfinder-sim").unwrap();
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let cases = generate(&net, &CaseSpec { n_cases: n_cases * 10, observed_fraction: 0.2, seed: 0xAC });
+    let runner = BatchRunner::new(Arc::clone(&jt));
+    for replicas in [1usize, 2, 4] {
+        let cfg = BatchConfig {
+            engine: EngineKind::Seq,
+            engine_cfg: EngineConfig::default().with_threads(1),
+            replicas,
+        };
+        let report = runner.run(&cases, &cfg).unwrap();
+        rows.push(vec![
+            format!("{replicas}"),
+            format!("{:?}", report.wall),
+            format!("{:.1}", report.throughput()),
+        ]);
+    }
+    print_table(
+        "ablation 4: case-level replicas (measured; 1 core => flat is expected)",
+        &["replicas", "wall", "cases/s"],
+        &rows,
+    );
+}

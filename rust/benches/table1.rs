@@ -1,0 +1,114 @@
+//! Bench: **Table 1** — sequential and parallel execution-time comparison
+//! over the six network analogs.
+//!
+//! Sequential columns (UnBBayes vs Fast-BNI-seq) are measured wall-clock.
+//! Parallel columns follow the paper's protocol — "varied the number of
+//! threads t from 1 to 32 and chose the shortest" — through the
+//! calibrated cost model (single-core container; DESIGN.md §3). The model
+//! is validated in-run: modeled Fast-BNI-seq time at t=1 is printed next
+//! to the measured time, and the ratio is reported.
+//!
+//! Scale knobs: FASTBN_CASES (default 12), FASTBN_NETS (comma list).
+
+use std::sync::Arc;
+
+use fastbn::bench::{env_usize, fmt_duration, print_table, Bench};
+use fastbn::bn::netgen;
+use fastbn::coordinator::{BatchConfig, BatchRunner};
+use fastbn::engine::simulate::{best_over_threads, simulate_seconds, CostModel};
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::infer::cases::{generate, CaseSpec};
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+
+fn main() {
+    let n_cases = env_usize("FASTBN_CASES", 12);
+    let filter: Option<Vec<String>> =
+        std::env::var("FASTBN_NETS").ok().map(|v| v.split(',').map(|s| s.to_string()).collect());
+    let sweep = [1usize, 2, 4, 8, 16, 32];
+    let bench = Bench::new(0, 1); // batches are already N-case aggregates
+
+    println!("calibrating cost model...");
+    let model = CostModel::calibrate();
+    println!("{model:?}");
+
+    let mut rows = Vec::new();
+    let mut validation = Vec::new();
+    for spec in netgen::paper_suite() {
+        if let Some(f) = &filter {
+            if !f.contains(&spec.name) {
+                continue;
+            }
+        }
+        let net = spec.generate();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cases = generate(&net, &CaseSpec { n_cases, observed_fraction: 0.2, seed: 0x7AB1 });
+        let runner = BatchRunner::new(Arc::clone(&jt));
+        eprintln!("[{}] {}", spec.name, jt.stats());
+
+        let mut measured = std::collections::HashMap::new();
+        for kind in [EngineKind::Unb, EngineKind::Seq] {
+            let cfg = BatchConfig {
+                engine: kind,
+                engine_cfg: EngineConfig::default().with_threads(1),
+                replicas: 1,
+            };
+            let stat = bench.run(|| {
+                runner.run(&cases, &cfg).unwrap();
+            });
+            measured.insert(kind, stat.mean);
+        }
+
+        // model validation: modeled seq time at t=1 vs measured
+        let modeled_seq =
+            simulate_seconds(EngineKind::Seq, &jt, 1, &EngineConfig::default(), &model) * n_cases as f64;
+        let measured_seq = measured[&EngineKind::Seq].as_secs_f64();
+        validation.push(vec![
+            spec.name.clone(),
+            format!("{measured_seq:.3}s"),
+            format!("{modeled_seq:.3}s"),
+            format!("{:.2}", modeled_seq / measured_seq),
+        ]);
+
+        let cfg = EngineConfig::default();
+        let mut best: Vec<(EngineKind, usize, f64)> = EngineKind::PARALLEL
+            .iter()
+            .map(|&k| {
+                let (t, s) = best_over_threads(k, &jt, &sweep, &cfg, &model);
+                (k, t, s * n_cases as f64)
+            })
+            .collect();
+        let hybrid = best.pop().unwrap(); // Hybrid is last in PARALLEL
+        let unb = measured[&EngineKind::Unb].as_secs_f64();
+        let seq = measured[&EngineKind::Seq].as_secs_f64();
+
+        rows.push(vec![
+            spec.name.clone(),
+            fmt_duration(measured[&EngineKind::Unb]),
+            fmt_duration(measured[&EngineKind::Seq]),
+            format!("{:.1}", unb / seq),
+            format!("{:.3}s", best[0].2),
+            format!("{:.3}s", best[1].2),
+            format!("{:.3}s", best[2].2),
+            format!("{:.3}s", hybrid.2),
+            format!("{:.1}", best[0].2 / hybrid.2),
+            format!("{:.1}", best[1].2 / hybrid.2),
+            format!("{:.1}", best[2].2 / hybrid.2),
+            format!("{}", hybrid.1),
+        ]);
+    }
+
+    print_table(
+        &format!("Table 1 ({n_cases} cases; seq measured, par modeled best-t)"),
+        &[
+            "BN", "UnBBayes", "FBNI-seq", "spd", "Dir.", "Prim.", "Elem.", "FBNI-par", "spd-D", "spd-P",
+            "spd-E", "best-t",
+        ],
+        &rows,
+    );
+    print_table(
+        "cost-model validation (modeled vs measured Fast-BNI-seq, t = 1)",
+        &["BN", "measured", "modeled", "ratio"],
+        &validation,
+    );
+}

@@ -1,0 +1,97 @@
+//! Bench: **table-op backends** — native Rust loops vs the AOT-compiled
+//! XLA artifacts through PJRT, over the bucket ladder.
+//!
+//! This is the L1/L2 integration benchmark: it locates the table size at
+//! which PJRT dispatch overhead amortizes (on CPU the native loops win
+//! below that). Skips with a notice if `artifacts/` is not built.
+
+use std::path::Path;
+
+use fastbn::bench::{print_table, Bench};
+use fastbn::rng::Rng;
+use fastbn::runtime::ops::{NativeOps, TableOps2d, XlaOps};
+use fastbn::runtime::{artifacts_available, DEFAULT_ARTIFACT_DIR};
+
+fn main() {
+    let dir = Path::new(DEFAULT_ARTIFACT_DIR);
+    if !artifacts_available(dir) {
+        println!("artifacts/ not built — run `make artifacts` first; skipping table_ops bench");
+        return;
+    }
+    let mut xla = XlaOps::load(dir).unwrap();
+    let mut native = NativeOps;
+    let bench = Bench::new(3, 10);
+    let mut rng = Rng::new(0xBE);
+
+    let shapes: Vec<(usize, usize)> = vec![(16, 16), (64, 64), (256, 256), (1024, 256), (1024, 1024)];
+    let mut rows = Vec::new();
+    for (m, k) in shapes {
+        if !xla.fits(m, k) {
+            continue;
+        }
+        let table: Vec<f64> = (0..m * k).map(|_| rng.f64()).collect();
+        let sep_new: Vec<f64> = (0..m).map(|_| rng.f64()).collect();
+        let sep_old: Vec<f64> = (0..m).map(|_| rng.f64() + 0.1).collect();
+        let mut out = vec![0.0; m];
+
+        let marg_native = bench.run(|| {
+            native.marginalize(&table, m, k, &mut out).unwrap();
+        });
+        let marg_xla = bench.run(|| {
+            xla.marginalize(&table, m, k, &mut out).unwrap();
+        });
+        let mut t = table.clone();
+        let abs_native = bench.run(|| {
+            native.absorb(&mut t, m, k, &sep_new, &sep_old).unwrap();
+        });
+        let mut t2 = table.clone();
+        let abs_xla = bench.run(|| {
+            xla.absorb(&mut t2, m, k, &sep_new, &sep_old).unwrap();
+        });
+
+        rows.push(vec![
+            format!("{m}x{k}"),
+            format!("{:.1}µs", marg_native.mean.as_secs_f64() * 1e6),
+            format!("{:.1}µs", marg_xla.mean.as_secs_f64() * 1e6),
+            format!("{:.2}", marg_xla.mean.as_secs_f64() / marg_native.mean.as_secs_f64()),
+            format!("{:.1}µs", abs_native.mean.as_secs_f64() * 1e6),
+            format!("{:.1}µs", abs_xla.mean.as_secs_f64() * 1e6),
+            format!("{:.2}", abs_xla.mean.as_secs_f64() / abs_native.mean.as_secs_f64()),
+        ]);
+    }
+    print_table(
+        "table-op backends: native loops vs AOT XLA via PJRT (mean of 10)",
+        &["shape", "marg-nat", "marg-xla", "ratio", "absorb-nat", "absorb-xla", "ratio"],
+        &rows,
+    );
+    println!("\nratio < 1 means the XLA artifact beats the native loop at that size;");
+    println!("PJRT dispatch (+pad/copy) dominates small tables — see EXPERIMENTS.md.");
+
+    // batched dispatch amortization: B same-bucket ops in one PJRT call
+    let mut rows = Vec::new();
+    for (b, m, k) in xla.batched_buckets() {
+        let tables: Vec<f64> = (0..b * m * k).map(|_| rng.f64()).collect();
+        let single = bench.run(|| {
+            let mut out = vec![0.0; m];
+            for i in 0..b {
+                xla.marginalize(&tables[i * m * k..(i + 1) * m * k], m, k, &mut out).unwrap();
+            }
+        });
+        let batched = bench.run(|| {
+            xla.marginalize_batch(&tables, b, m, k).unwrap();
+        });
+        rows.push(vec![
+            format!("{b}x{m}x{k}"),
+            format!("{:.1}µs", single.mean.as_secs_f64() * 1e6),
+            format!("{:.1}µs", batched.mean.as_secs_f64() * 1e6),
+            format!("{:.2}", single.mean.as_secs_f64() / batched.mean.as_secs_f64()),
+        ]);
+    }
+    if !rows.is_empty() {
+        print_table(
+            "batched dispatch: B single marg calls vs one (B,M,K) call",
+            &["shape", "B singles", "batched", "amortization"],
+            &rows,
+        );
+    }
+}

@@ -1,0 +1,76 @@
+//! Bench: **thread scaling** — the paper's prose observation that
+//! "Fast-BNI always achieves its shortest execution time when t = 32 on
+//! large BNs" while small networks saturate (or degrade) earlier.
+//!
+//! Modeled per-case times across t ∈ {1..32} per engine (cost model,
+//! DESIGN.md §3), plus a real measured sanity section: hybrid at t = 1 vs
+//! t = 2 on this single-core host (expected ≥ 1×: oversubscription — the
+//! same region/task overheads the model's constants capture).
+//!
+//! Scale knobs: FASTBN_NETS (comma list; default hailfinder-sim,
+//! pigs-sim, munin4-sim).
+
+use std::sync::Arc;
+
+use fastbn::bench::print_table;
+use fastbn::bn::netgen;
+use fastbn::engine::simulate::{simulate_seconds, CostModel};
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::infer::cases::{generate, CaseSpec};
+use fastbn::jt::state::TreeState;
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+
+fn main() {
+    let nets: Vec<String> = std::env::var("FASTBN_NETS")
+        .map(|v| v.split(',').map(|s| s.to_string()).collect())
+        .unwrap_or_else(|_| vec!["hailfinder-sim".into(), "pigs-sim".into(), "munin4-sim".into()]);
+    let sweep = [1usize, 2, 4, 8, 16, 24, 32];
+
+    println!("calibrating cost model...");
+    let model = CostModel::calibrate();
+    let cfg = EngineConfig::default();
+
+    for name in &nets {
+        let Some(net) = netgen::paper_net(name) else {
+            eprintln!("skipping unknown paper net {name}");
+            continue;
+        };
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let mut rows = Vec::new();
+        for kind in EngineKind::PARALLEL {
+            let mut row = vec![kind.label().to_string()];
+            let mut best = (0usize, f64::INFINITY);
+            for &t in &sweep {
+                let s = simulate_seconds(kind, &jt, t, &cfg, &model);
+                if s < best.1 {
+                    best = (t, s);
+                }
+                row.push(format!("{:.2}ms", s * 1e3));
+            }
+            row.push(format!("t={}", best.0));
+            rows.push(row);
+        }
+        let headers: Vec<String> = std::iter::once("engine".to_string())
+            .chain(sweep.iter().map(|t| format!("t={t}")))
+            .chain(std::iter::once("best".to_string()))
+            .collect();
+        let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        print_table(&format!("modeled per-case time — {name} ({})", jt.stats()), &headers_ref, &rows);
+    }
+
+    // real measured sanity: oversubscription overhead on one core
+    println!("\n== real measured sanity (single-core host) ==");
+    let net = netgen::paper_net("hailfinder-sim").unwrap();
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let cases = generate(&net, &CaseSpec { n_cases: 50, observed_fraction: 0.2, seed: 3 });
+    for t in [1usize, 2] {
+        let mut eng = EngineKind::Hybrid.build(Arc::clone(&jt), &EngineConfig::default().with_threads(t));
+        let mut state = TreeState::fresh(&jt);
+        let t0 = std::time::Instant::now();
+        for ev in &cases {
+            let _ = eng.infer(&mut state, ev);
+        }
+        println!("hybrid measured, {} thread(s): {:?} for {} cases", t, t0.elapsed(), cases.len());
+    }
+}

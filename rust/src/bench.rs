@@ -1,0 +1,186 @@
+//! Criterion-lite benchmark harness.
+//!
+//! `criterion` is unavailable offline; this module supplies the subset the
+//! bench targets need — warmup + N timed samples, robust summary stats,
+//! and aligned table printing — with `harness = false` targets so
+//! `cargo bench` works unchanged.
+
+use std::time::{Duration, Instant};
+
+/// Summary over timed samples.
+#[derive(Clone, Debug)]
+pub struct Stat {
+    pub n: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stat {
+    /// Compute from raw samples (must be non-empty).
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stat {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples.iter().map(|s| (s.as_secs_f64() - mean_s).powi(2)).sum::<f64>() / n as f64;
+        Stat {
+            n,
+            mean,
+            median: samples[n / 2],
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    /// Mean in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+impl std::fmt::Display for Stat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.3?}  median {:>10.3?}  σ {:>9.3?}  min {:>10.3?}  max {:>10.3?}  (n={})",
+            self.mean, self.median, self.stddev, self.min, self.max, self.n
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    /// Untimed warmup iterations.
+    pub warmup: usize,
+    /// Timed samples.
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, samples: 7 }
+    }
+}
+
+impl Bench {
+    /// New runner.
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bench { warmup, samples }
+    }
+
+    /// Time `f` (whole-call granularity).
+    pub fn run(&self, mut f: impl FnMut()) -> Stat {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let samples = (0..self.samples.max(1))
+            .map(|_| {
+                let t0 = Instant::now();
+                f();
+                t0.elapsed()
+            })
+            .collect();
+        Stat::from_samples(samples)
+    }
+}
+
+/// Environment-variable override helper for bench scale knobs
+/// (`FASTBN_CASES=100 cargo bench`).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Print an aligned table: `headers`, then rows.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>width$}", c, width = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Format a duration in adaptive units for table cells.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Format a speedup factor the way Table 1 does.
+pub fn fmt_speedup(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stat_from_known_samples() {
+        let s = Stat::from_samples(vec![
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.mean, Duration::from_millis(20));
+        assert_eq!(s.median, Duration::from_millis(20));
+        assert_eq!(s.min, Duration::from_millis(10));
+        assert_eq!(s.max, Duration::from_millis(30));
+    }
+
+    #[test]
+    fn bench_runs_requested_iterations() {
+        let mut count = 0usize;
+        let b = Bench::new(3, 5);
+        let counter = std::cell::RefCell::new(&mut count);
+        b.run(|| {
+            **counter.borrow_mut() += 1;
+        });
+        assert_eq!(count, 8);
+    }
+
+    #[test]
+    fn env_override() {
+        assert_eq!(env_usize("FASTBN_TEST_NOT_SET_XYZ", 42), 42);
+        std::env::set_var("FASTBN_TEST_SET_XYZ", "7");
+        assert_eq!(env_usize("FASTBN_TEST_SET_XYZ", 42), 7);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.00ms");
+        assert_eq!(fmt_duration(Duration::from_micros(3)), "3.0µs");
+        assert_eq!(fmt_speedup(7.25), "7.2");
+    }
+}

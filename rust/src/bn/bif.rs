@@ -1,0 +1,617 @@
+//! Parser and writer for the BIF (Bayesian Interchange Format) dialect used
+//! by the bnlearn repository and UnBBayes — the format the paper's six
+//! evaluation networks are distributed in.
+//!
+//! Supported constructs:
+//!
+//! ```text
+//! network <name> { ... }                      // properties ignored
+//! variable <name> {
+//!   type discrete [ <k> ] { s1, s2, ... };
+//! }
+//! probability ( <child> ) { table p...; }
+//! probability ( <child> | p1, p2 ) {
+//!   table p...;                               // row-major, child fastest
+//!   // or per-row entries:
+//!   (s_a, s_b) p1, p2, ...;
+//!   default p1, p2, ...;                      // fills unlisted rows
+//! }
+//! ```
+
+use std::collections::HashMap;
+
+use crate::bn::cpt::Cpt;
+use crate::bn::network::Network;
+use crate::bn::variable::Variable;
+use crate::{Error, Result};
+
+// ---------------------------------------------------------------- lexer --
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Ident(String),
+    Number(f64),
+    Punct(char),
+}
+
+struct Lexer {
+    toks: Vec<(Tok, usize)>, // (token, line)
+    pos: usize,
+}
+
+fn lex(src: &str) -> Result<Vec<(Tok, usize)>> {
+    let mut toks = Vec::new();
+    let mut chars = src.char_indices().peekable();
+    let mut line = 1usize;
+    let bytes = src.as_bytes();
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '\n' => line += 1,
+            c if c.is_whitespace() => {}
+            '/' if matches!(chars.peek(), Some((_, '/'))) => {
+                // line comment
+                for (_, c2) in chars.by_ref() {
+                    if c2 == '\n' {
+                        line += 1;
+                        break;
+                    }
+                }
+            }
+            '/' if matches!(chars.peek(), Some((_, '*'))) => {
+                chars.next();
+                let mut prev = ' ';
+                for (_, c2) in chars.by_ref() {
+                    if c2 == '\n' {
+                        line += 1;
+                    }
+                    if prev == '*' && c2 == '/' {
+                        break;
+                    }
+                    prev = c2;
+                }
+            }
+            '{' | '}' | '(' | ')' | '[' | ']' | ',' | ';' | '|' | '=' => toks.push((Tok::Punct(c), line)),
+            '"' => {
+                // quoted identifier / property value
+                let start = i + 1;
+                let mut end = start;
+                for (j, c2) in chars.by_ref() {
+                    if c2 == '"' {
+                        end = j;
+                        break;
+                    }
+                    if c2 == '\n' {
+                        line += 1;
+                    }
+                }
+                toks.push((Tok::Ident(src[start..end].to_string()), line));
+            }
+            c if c.is_ascii_digit() || c == '-' || c == '+' || c == '.' => {
+                let start = i;
+                let mut end = i + c.len_utf8();
+                while let Some(&(j, c2)) = chars.peek() {
+                    if c2.is_ascii_digit() || c2 == '.' || c2 == 'e' || c2 == 'E' || c2 == '-' || c2 == '+' {
+                        // only allow -/+ after an exponent marker
+                        if (c2 == '-' || c2 == '+') && !matches!(bytes[j - 1], b'e' | b'E') {
+                            break;
+                        }
+                        end = j + c2.len_utf8();
+                        chars.next();
+                    } else {
+                        break;
+                    }
+                }
+                let text = &src[start..end];
+                let n: f64 = text
+                    .parse()
+                    .map_err(|_| Error::Parse { line, msg: format!("bad number {text:?}") })?;
+                toks.push((Tok::Number(n), line));
+            }
+            c if c.is_alphanumeric() || c == '_' => {
+                let start = i;
+                let mut end = i + c.len_utf8();
+                while let Some(&(j, c2)) = chars.peek() {
+                    if c2.is_alphanumeric() || c2 == '_' || c2 == '-' || c2 == '.' {
+                        end = j + c2.len_utf8();
+                        chars.next();
+                    } else {
+                        break;
+                    }
+                }
+                toks.push((Tok::Ident(src[start..end].to_string()), line));
+            }
+            other => {
+                return Err(Error::Parse { line, msg: format!("unexpected character {other:?}") });
+            }
+        }
+    }
+    Ok(toks)
+}
+
+impl Lexer {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|(t, _)| t)
+    }
+
+    fn line(&self) -> usize {
+        self.toks
+            .get(self.pos.min(self.toks.len().saturating_sub(1)))
+            .map(|&(_, l)| l)
+            .unwrap_or(0)
+    }
+
+    fn next(&mut self) -> Result<Tok> {
+        let t = self
+            .toks
+            .get(self.pos)
+            .cloned()
+            .ok_or_else(|| Error::Parse { line: self.line(), msg: "unexpected end of input".into() })?;
+        self.pos += 1;
+        Ok(t.0)
+    }
+
+    fn expect_punct(&mut self, c: char) -> Result<()> {
+        match self.next()? {
+            Tok::Punct(p) if p == c => Ok(()),
+            other => Err(Error::Parse { line: self.line(), msg: format!("expected {c:?}, found {other:?}") }),
+        }
+    }
+
+    fn expect_ident(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Ident(s) => Ok(s),
+            other => Err(Error::Parse { line: self.line(), msg: format!("expected identifier, found {other:?}") }),
+        }
+    }
+
+    fn expect_number(&mut self) -> Result<f64> {
+        match self.next()? {
+            Tok::Number(n) => Ok(n),
+            Tok::Ident(s) => s
+                .parse()
+                .map_err(|_| Error::Parse { line: self.line(), msg: format!("expected number, found {s:?}") }),
+            other => Err(Error::Parse { line: self.line(), msg: format!("expected number, found {other:?}") }),
+        }
+    }
+
+    /// Skip a balanced `{ ... }` block (for ignored properties).
+    fn skip_block(&mut self) -> Result<()> {
+        self.expect_punct('{')?;
+        let mut depth = 1usize;
+        while depth > 0 {
+            match self.next()? {
+                Tok::Punct('{') => depth += 1,
+                Tok::Punct('}') => depth -= 1,
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------------- parser --
+
+/// Parse BIF text into a [`Network`].
+pub fn parse(src: &str) -> Result<Network> {
+    let toks = lex(src)?;
+    let mut lx = Lexer { toks, pos: 0 };
+
+    let mut net_name = String::from("network");
+    let mut vars: Vec<Variable> = Vec::new();
+    let mut index: HashMap<String, usize> = HashMap::new();
+    // (child, parents, entries) — resolved to Cpts once all cards are known.
+    struct RawProb {
+        child: usize,
+        parents: Vec<usize>,
+        body: ProbBody,
+        line: usize,
+    }
+    enum ProbBody {
+        Table(Vec<f64>),
+        Rows { rows: Vec<(Vec<String>, Vec<f64>)>, default: Option<Vec<f64>> },
+    }
+    let mut probs: Vec<RawProb> = Vec::new();
+
+    while lx.peek().is_some() {
+        let kw = lx.expect_ident()?;
+        match kw.as_str() {
+            "network" => {
+                net_name = lx.expect_ident()?;
+                lx.skip_block()?;
+            }
+            "variable" => {
+                let name = lx.expect_ident()?;
+                lx.expect_punct('{')?;
+                let mut states: Vec<String> = Vec::new();
+                loop {
+                    match lx.next()? {
+                        Tok::Punct('}') => break,
+                        Tok::Ident(s) if s == "type" => {
+                            let kind = lx.expect_ident()?;
+                            if kind != "discrete" {
+                                return Err(Error::Parse {
+                                    line: lx.line(),
+                                    msg: format!("unsupported variable type {kind:?}"),
+                                });
+                            }
+                            lx.expect_punct('[')?;
+                            let k = lx.expect_number()? as usize;
+                            lx.expect_punct(']')?;
+                            lx.expect_punct('{')?;
+                            loop {
+                                match lx.next()? {
+                                    Tok::Punct('}') => break,
+                                    Tok::Punct(',') => {}
+                                    Tok::Ident(s) => states.push(s),
+                                    Tok::Number(n) => states.push(format!("{n}")),
+                                    other => {
+                                        return Err(Error::Parse {
+                                            line: lx.line(),
+                                            msg: format!("bad state name {other:?}"),
+                                        })
+                                    }
+                                }
+                            }
+                            lx.expect_punct(';')?;
+                            if states.len() != k {
+                                return Err(Error::Parse {
+                                    line: lx.line(),
+                                    msg: format!("variable {name}: declared {k} states, listed {}", states.len()),
+                                });
+                            }
+                        }
+                        Tok::Ident(s) if s == "property" => {
+                            // skip to ';'
+                            while lx.next()? != Tok::Punct(';') {}
+                        }
+                        other => {
+                            return Err(Error::Parse { line: lx.line(), msg: format!("unexpected {other:?} in variable") })
+                        }
+                    }
+                }
+                if index.insert(name.clone(), vars.len()).is_some() {
+                    return Err(Error::Parse { line: lx.line(), msg: format!("duplicate variable {name:?}") });
+                }
+                vars.push(Variable { name, states });
+            }
+            "probability" => {
+                let line = lx.line();
+                lx.expect_punct('(')?;
+                let child_name = lx.expect_ident()?;
+                let child = *index
+                    .get(&child_name)
+                    .ok_or_else(|| Error::Parse { line, msg: format!("unknown variable {child_name:?}") })?;
+                let mut parents: Vec<usize> = Vec::new();
+                match lx.next()? {
+                    Tok::Punct(')') => {}
+                    Tok::Punct('|') => loop {
+                        let p = lx.expect_ident()?;
+                        let pid = *index
+                            .get(&p)
+                            .ok_or_else(|| Error::Parse { line, msg: format!("unknown parent {p:?}") })?;
+                        parents.push(pid);
+                        match lx.next()? {
+                            Tok::Punct(',') => {}
+                            Tok::Punct(')') => break,
+                            other => {
+                                return Err(Error::Parse { line, msg: format!("expected ',' or ')', found {other:?}") })
+                            }
+                        }
+                    },
+                    other => return Err(Error::Parse { line, msg: format!("expected '|' or ')', found {other:?}") }),
+                }
+                lx.expect_punct('{')?;
+                let mut table: Option<Vec<f64>> = None;
+                let mut rows: Vec<(Vec<String>, Vec<f64>)> = Vec::new();
+                let mut default: Option<Vec<f64>> = None;
+                loop {
+                    match lx.next()? {
+                        Tok::Punct('}') => break,
+                        Tok::Ident(s) if s == "table" => {
+                            let mut v = Vec::new();
+                            loop {
+                                match lx.next()? {
+                                    Tok::Punct(';') => break,
+                                    Tok::Punct(',') => {}
+                                    Tok::Number(n) => v.push(n),
+                                    other => {
+                                        return Err(Error::Parse { line, msg: format!("bad table entry {other:?}") })
+                                    }
+                                }
+                            }
+                            table = Some(v);
+                        }
+                        Tok::Ident(s) if s == "default" => {
+                            let mut v = Vec::new();
+                            loop {
+                                match lx.next()? {
+                                    Tok::Punct(';') => break,
+                                    Tok::Punct(',') => {}
+                                    Tok::Number(n) => v.push(n),
+                                    other => {
+                                        return Err(Error::Parse { line, msg: format!("bad default entry {other:?}") })
+                                    }
+                                }
+                            }
+                            default = Some(v);
+                        }
+                        Tok::Punct('(') => {
+                            let mut config: Vec<String> = Vec::new();
+                            loop {
+                                match lx.next()? {
+                                    Tok::Punct(')') => break,
+                                    Tok::Punct(',') => {}
+                                    Tok::Ident(s) => config.push(s),
+                                    Tok::Number(n) => config.push(format!("{n}")),
+                                    other => {
+                                        return Err(Error::Parse { line, msg: format!("bad row config {other:?}") })
+                                    }
+                                }
+                            }
+                            let mut v = Vec::new();
+                            loop {
+                                match lx.next()? {
+                                    Tok::Punct(';') => break,
+                                    Tok::Punct(',') => {}
+                                    Tok::Number(n) => v.push(n),
+                                    other => {
+                                        return Err(Error::Parse { line, msg: format!("bad row entry {other:?}") })
+                                    }
+                                }
+                            }
+                            rows.push((config, v));
+                        }
+                        Tok::Ident(s) if s == "property" => {
+                            while lx.next()? != Tok::Punct(';') {}
+                        }
+                        other => {
+                            return Err(Error::Parse { line, msg: format!("unexpected {other:?} in probability") })
+                        }
+                    }
+                }
+                let body = if let Some(t) = table {
+                    ProbBody::Table(t)
+                } else {
+                    ProbBody::Rows { rows, default }
+                };
+                probs.push(RawProb { child, parents, body, line });
+            }
+            other => {
+                return Err(Error::Parse { line: lx.line(), msg: format!("unexpected top-level keyword {other:?}") })
+            }
+        }
+    }
+
+    // Resolve probability blocks into CPTs.
+    let cards: Vec<usize> = vars.iter().map(|v| v.card()).collect();
+    let mut cpts: Vec<Option<Cpt>> = (0..vars.len()).map(|_| None).collect();
+    for rp in probs {
+        let child_card = cards[rp.child];
+        let n_rows: usize = rp.parents.iter().map(|&p| cards[p]).product();
+        let probs_flat: Vec<f64> = match rp.body {
+            ProbBody::Table(t) => t,
+            ProbBody::Rows { rows, default } => {
+                let mut flat = vec![f64::NAN; n_rows * child_card];
+                if let Some(d) = &default {
+                    if d.len() != child_card {
+                        return Err(Error::Parse {
+                            line: rp.line,
+                            msg: format!("default row has {} entries, child has {} states", d.len(), child_card),
+                        });
+                    }
+                    for r in 0..n_rows {
+                        flat[r * child_card..(r + 1) * child_card].copy_from_slice(d);
+                    }
+                }
+                for (config, v) in rows {
+                    if config.len() != rp.parents.len() {
+                        return Err(Error::Parse {
+                            line: rp.line,
+                            msg: format!("row lists {} parent states, expected {}", config.len(), rp.parents.len()),
+                        });
+                    }
+                    if v.len() != child_card {
+                        return Err(Error::Parse {
+                            line: rp.line,
+                            msg: format!("row has {} entries, child has {} states", v.len(), child_card),
+                        });
+                    }
+                    let mut row = 0usize;
+                    for (i, &p) in rp.parents.iter().enumerate() {
+                        let s = vars[p].state_index(&config[i]).ok_or_else(|| Error::Parse {
+                            line: rp.line,
+                            msg: format!("unknown state {:?} of parent {:?}", config[i], vars[p].name),
+                        })?;
+                        row = row * cards[p] + s;
+                    }
+                    flat[row * child_card..(row + 1) * child_card].copy_from_slice(&v);
+                }
+                if flat.iter().any(|p| p.is_nan()) {
+                    return Err(Error::Parse {
+                        line: rp.line,
+                        msg: format!("probability block for {:?} leaves rows unspecified", vars[rp.child].name),
+                    });
+                }
+                flat
+            }
+        };
+        let cpt = Cpt::new(rp.child, rp.parents, probs_flat, &cards).map_err(|e| Error::Parse {
+            line: rp.line,
+            msg: format!("{e}"),
+        })?;
+        if cpts[rp.child].is_some() {
+            return Err(Error::Parse {
+                line: rp.line,
+                msg: format!("duplicate probability block for {:?}", vars[rp.child].name),
+            });
+        }
+        cpts[rp.child] = Some(cpt);
+    }
+    let cpts: Vec<Cpt> = cpts
+        .into_iter()
+        .enumerate()
+        .map(|(v, c)| c.ok_or_else(|| Error::InvalidNetwork(format!("no probability block for {:?}", vars[v].name))))
+        .collect::<Result<_>>()?;
+
+    Network::new(net_name, vars, cpts)
+}
+
+/// Read a network from a `.bif` file.
+pub fn parse_file(path: &std::path::Path) -> Result<Network> {
+    let src = std::fs::read_to_string(path)?;
+    parse(&src)
+}
+
+// --------------------------------------------------------------- writer --
+
+/// Serialize a network to BIF text (table form).
+pub fn write(net: &Network) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("network {} {{\n}}\n", net.name));
+    for v in &net.vars {
+        out.push_str(&format!("variable {} {{\n  type discrete [ {} ] {{ ", v.name, v.card()));
+        out.push_str(&v.states.join(", "));
+        out.push_str(" };\n}\n");
+    }
+    for cpt in &net.cpts {
+        if cpt.parents.is_empty() {
+            out.push_str(&format!("probability ( {} ) {{\n  table ", net.vars[cpt.child].name));
+        } else {
+            let ps: Vec<&str> = cpt.parents.iter().map(|&p| net.vars[p].name.as_str()).collect();
+            out.push_str(&format!(
+                "probability ( {} | {} ) {{\n  table ",
+                net.vars[cpt.child].name,
+                ps.join(", ")
+            ));
+        }
+        let entries: Vec<String> = cpt.probs.iter().map(|p| format!("{p}")).collect();
+        out.push_str(&entries.join(", "));
+        out.push_str(";\n}\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"
+network mini {
+}
+variable rain {
+  type discrete [ 2 ] { yes, no };
+}
+variable grass {
+  type discrete [ 2 ] { wet, dry };
+}
+probability ( rain ) {
+  table 0.2, 0.8;
+}
+probability ( grass | rain ) {
+  (yes) 0.9, 0.1;
+  (no) 0.1, 0.9;
+}
+"#;
+
+    #[test]
+    fn parse_mini_rowform() {
+        let net = parse(MINI).unwrap();
+        assert_eq!(net.name, "mini");
+        assert_eq!(net.n(), 2);
+        let g = net.var_id("grass").unwrap();
+        assert_eq!(net.parents(g), &[net.var_id("rain").unwrap()]);
+        let cards = net.cards();
+        assert_eq!(net.cpts[g].row(&[0], &cards), &[0.9, 0.1]);
+        assert_eq!(net.cpts[g].row(&[1], &cards), &[0.1, 0.9]);
+    }
+
+    #[test]
+    fn parse_table_form() {
+        let src = r#"
+network t { }
+variable a { type discrete [ 3 ] { x, y, z }; }
+variable b { type discrete [ 2 ] { t, f }; }
+probability ( a ) { table 0.2, 0.3, 0.5; }
+probability ( b | a ) { table 0.1, 0.9, 0.4, 0.6, 0.7, 0.3; }
+"#;
+        let net = parse(src).unwrap();
+        let cards = net.cards();
+        assert_eq!(net.cpts[1].row(&[2], &cards), &[0.7, 0.3]);
+    }
+
+    #[test]
+    fn parse_default_rows() {
+        let src = r#"
+network d { }
+variable a { type discrete [ 2 ] { t, f }; }
+variable b { type discrete [ 2 ] { t, f }; }
+probability ( a ) { table 0.5, 0.5; }
+probability ( b | a ) {
+  default 0.5, 0.5;
+  (t) 0.99, 0.01;
+}
+"#;
+        let net = parse(src).unwrap();
+        let cards = net.cards();
+        assert_eq!(net.cpts[1].row(&[0], &cards), &[0.99, 0.01]);
+        assert_eq!(net.cpts[1].row(&[1], &cards), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn comments_and_properties_ignored() {
+        let src = r#"
+// top comment
+network c { property "version 1"; }
+variable a {
+  property "position = (10, 20)";
+  type discrete [ 2 ] { t, f }; /* inline */
+}
+probability ( a ) { table 0.3, 0.7; }
+"#;
+        let net = parse(src).unwrap();
+        assert_eq!(net.n(), 1);
+        assert_eq!(net.cpts[0].probs, vec![0.3, 0.7]);
+    }
+
+    #[test]
+    fn roundtrip_write_parse() {
+        let net = parse(MINI).unwrap();
+        let text = write(&net);
+        let net2 = parse(&text).unwrap();
+        assert_eq!(net.n(), net2.n());
+        for v in 0..net.n() {
+            assert_eq!(net.vars[v], net2.vars[v]);
+            assert_eq!(net.cpts[v].parents, net2.cpts[v].parents);
+            for (a, b) in net.cpts[v].probs.iter().zip(&net2.cpts[v].probs) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn errors_have_lines() {
+        let src = "network x { }\nvariable a { type discrete [ 2 ] { t, f }; }\nprobability ( zzz ) { table 1; }";
+        match parse(src) {
+            Err(Error::Parse { line, .. }) => assert!(line >= 3),
+            other => panic!("expected parse error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_cpt_rejected() {
+        let src = "network x { }\nvariable a { type discrete [ 2 ] { t, f }; }";
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn scientific_notation_numbers() {
+        let src = r#"
+network s { }
+variable a { type discrete [ 2 ] { t, f }; }
+probability ( a ) { table 1e-1, 9.0E-1; }
+"#;
+        let net = parse(src).unwrap();
+        assert!((net.cpts[0].probs[0] - 0.1).abs() < 1e-12);
+        assert!((net.cpts[0].probs[1] - 0.9).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,136 @@
+//! Conditional probability tables.
+
+use crate::bn::variable::VarId;
+
+/// The conditional probability table `P(child | parents)`.
+///
+/// # Layout
+///
+/// `probs` is row-major over `[parents..., child]` with the **child state
+/// varying fastest**: entry for parent configuration `(p_0, .., p_{k-1})`
+/// and child state `c` lives at
+///
+/// ```text
+/// ((p_0 * card(parent_1) + p_1) * card(parent_2) + ...) * card(child) + c
+/// ```
+///
+/// This matches the BIF `table` ordering used by bnlearn / UnBBayes
+/// exports, so parsing is a straight copy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cpt {
+    /// The variable this CPT distributes over.
+    pub child: VarId,
+    /// Parent variables, in the order the probability rows are indexed.
+    pub parents: Vec<VarId>,
+    /// Flattened probabilities; length = child card × Π parent cards.
+    pub probs: Vec<f64>,
+}
+
+impl Cpt {
+    /// Build a CPT, checking the table length against the cardinalities.
+    ///
+    /// `cards[v]` must give the cardinality of every variable id used.
+    pub fn new(child: VarId, parents: Vec<VarId>, probs: Vec<f64>, cards: &[usize]) -> crate::Result<Self> {
+        let expected: usize = parents.iter().map(|&p| cards[p]).product::<usize>() * cards[child];
+        if probs.len() != expected {
+            return Err(crate::Error::InvalidNetwork(format!(
+                "CPT for variable {} has {} entries, expected {}",
+                child,
+                probs.len(),
+                expected
+            )));
+        }
+        Ok(Cpt { child, parents, probs })
+    }
+
+    /// A uniform CPT (handy for tests and placeholder nodes).
+    pub fn uniform(child: VarId, parents: Vec<VarId>, cards: &[usize]) -> Self {
+        let rows: usize = parents.iter().map(|&p| cards[p]).product();
+        let c = cards[child];
+        Cpt {
+            child,
+            parents,
+            probs: vec![1.0 / c as f64; rows * c],
+        }
+    }
+
+    /// Number of parent configurations (rows).
+    pub fn rows(&self, cards: &[usize]) -> usize {
+        self.parents.iter().map(|&p| cards[p]).product()
+    }
+
+    /// The distribution over the child for one parent configuration,
+    /// `config[i]` being the state of `parents[i]`.
+    pub fn row<'a>(&'a self, config: &[usize], cards: &[usize]) -> &'a [f64] {
+        debug_assert_eq!(config.len(), self.parents.len());
+        let mut row = 0usize;
+        for (i, &p) in self.parents.iter().enumerate() {
+            debug_assert!(config[i] < cards[p]);
+            row = row * cards[p] + config[i];
+        }
+        let c = cards[self.child];
+        &self.probs[row * c..(row + 1) * c]
+    }
+
+    /// Check every row sums to 1 (within `tol`) and entries are in [0, 1].
+    pub fn validate(&self, cards: &[usize], tol: f64) -> crate::Result<()> {
+        let c = cards[self.child];
+        if self.probs.iter().any(|&p| !(0.0..=1.0 + tol).contains(&p) || p.is_nan()) {
+            return Err(crate::Error::InvalidNetwork(format!(
+                "CPT for variable {} has probabilities outside [0,1]",
+                self.child
+            )));
+        }
+        for (r, row) in self.probs.chunks(c).enumerate() {
+            let s: f64 = row.iter().sum();
+            if (s - 1.0).abs() > tol {
+                return Err(crate::Error::InvalidNetwork(format!(
+                    "CPT row {} of variable {} sums to {}, expected 1",
+                    r, self.child, s
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // cards: v0 has 2 states, v1 has 3, v2 has 2.
+    const CARDS: &[usize] = &[2, 3, 2];
+
+    #[test]
+    fn new_checks_length() {
+        assert!(Cpt::new(0, vec![], vec![0.3, 0.7], CARDS).is_ok());
+        assert!(Cpt::new(0, vec![], vec![0.3, 0.3, 0.4], CARDS).is_err());
+        assert!(Cpt::new(2, vec![0, 1], vec![0.5; 12], CARDS).is_ok());
+        assert!(Cpt::new(2, vec![0, 1], vec![0.5; 10], CARDS).is_err());
+    }
+
+    #[test]
+    fn uniform_rows_sum_to_one() {
+        let c = Cpt::uniform(1, vec![0, 2], CARDS);
+        assert_eq!(c.probs.len(), 2 * 2 * 3);
+        c.validate(CARDS, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn row_indexing_matches_layout() {
+        // P(v2 | v0, v1): rows ordered (v0, v1) with v1 fastest.
+        let probs: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let c = Cpt { child: 2, parents: vec![0, 1], probs };
+        // config (v0=1, v1=2) -> row = 1*3+2 = 5 -> entries 10, 11
+        assert_eq!(c.row(&[1, 2], CARDS), &[10.0, 11.0]);
+        assert_eq!(c.row(&[0, 0], CARDS), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_rows() {
+        let c = Cpt { child: 0, parents: vec![], probs: vec![0.5, 0.6] };
+        assert!(c.validate(CARDS, 1e-9).is_err());
+        let c = Cpt { child: 0, parents: vec![], probs: vec![-0.1, 1.1] };
+        assert!(c.validate(CARDS, 1e-9).is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! Classic textbook networks embedded as BIF text.
+//!
+//! The paper's six evaluation networks come from the bnlearn repository,
+//! which is not reachable in this offline environment; these small,
+//! well-known networks (with their published CPTs) anchor correctness:
+//! JT posteriors on them are checked against hand-derived values and the
+//! brute-force enumeration oracle. Structural analogs of the six paper
+//! networks are produced by [`crate::bn::netgen`].
+
+use crate::bn::bif;
+use crate::bn::network::Network;
+
+/// The "Asia" / "chest clinic" network (Lauritzen & Spiegelhalter 1988):
+/// 8 binary variables, the canonical JT example.
+pub const ASIA_BIF: &str = r#"
+network asia {
+}
+variable asia {
+  type discrete [ 2 ] { yes, no };
+}
+variable tub {
+  type discrete [ 2 ] { yes, no };
+}
+variable smoke {
+  type discrete [ 2 ] { yes, no };
+}
+variable lung {
+  type discrete [ 2 ] { yes, no };
+}
+variable bronc {
+  type discrete [ 2 ] { yes, no };
+}
+variable either {
+  type discrete [ 2 ] { yes, no };
+}
+variable xray {
+  type discrete [ 2 ] { yes, no };
+}
+variable dysp {
+  type discrete [ 2 ] { yes, no };
+}
+probability ( asia ) {
+  table 0.01, 0.99;
+}
+probability ( tub | asia ) {
+  (yes) 0.05, 0.95;
+  (no) 0.01, 0.99;
+}
+probability ( smoke ) {
+  table 0.5, 0.5;
+}
+probability ( lung | smoke ) {
+  (yes) 0.1, 0.9;
+  (no) 0.01, 0.99;
+}
+probability ( bronc | smoke ) {
+  (yes) 0.6, 0.4;
+  (no) 0.3, 0.7;
+}
+probability ( either | lung, tub ) {
+  (yes, yes) 1.0, 0.0;
+  (yes, no) 1.0, 0.0;
+  (no, yes) 1.0, 0.0;
+  (no, no) 0.0, 1.0;
+}
+probability ( xray | either ) {
+  (yes) 0.98, 0.02;
+  (no) 0.05, 0.95;
+}
+probability ( dysp | bronc, either ) {
+  (yes, yes) 0.9, 0.1;
+  (yes, no) 0.8, 0.2;
+  (no, yes) 0.7, 0.3;
+  (no, no) 0.1, 0.9;
+}
+"#;
+
+/// The "Cancer" network (Korb & Nicholson): 5 binary variables.
+pub const CANCER_BIF: &str = r#"
+network cancer {
+}
+variable Pollution {
+  type discrete [ 2 ] { low, high };
+}
+variable Smoker {
+  type discrete [ 2 ] { True, False };
+}
+variable Cancer {
+  type discrete [ 2 ] { True, False };
+}
+variable Xray {
+  type discrete [ 2 ] { positive, negative };
+}
+variable Dyspnoea {
+  type discrete [ 2 ] { True, False };
+}
+probability ( Pollution ) {
+  table 0.9, 0.1;
+}
+probability ( Smoker ) {
+  table 0.3, 0.7;
+}
+probability ( Cancer | Pollution, Smoker ) {
+  (low, True) 0.03, 0.97;
+  (low, False) 0.001, 0.999;
+  (high, True) 0.05, 0.95;
+  (high, False) 0.02, 0.98;
+}
+probability ( Xray | Cancer ) {
+  (True) 0.9, 0.1;
+  (False) 0.2, 0.8;
+}
+probability ( Dyspnoea | Cancer ) {
+  (True) 0.65, 0.35;
+  (False) 0.3, 0.7;
+}
+"#;
+
+/// The "Sprinkler" network (Pearl): 4 binary variables, a diamond —
+/// the smallest network whose moral graph is not already triangulated.
+pub const SPRINKLER_BIF: &str = r#"
+network sprinkler {
+}
+variable cloudy {
+  type discrete [ 2 ] { yes, no };
+}
+variable sprinkler {
+  type discrete [ 2 ] { on, off };
+}
+variable rain {
+  type discrete [ 2 ] { yes, no };
+}
+variable wetgrass {
+  type discrete [ 2 ] { yes, no };
+}
+probability ( cloudy ) {
+  table 0.5, 0.5;
+}
+probability ( sprinkler | cloudy ) {
+  (yes) 0.1, 0.9;
+  (no) 0.5, 0.5;
+}
+probability ( rain | cloudy ) {
+  (yes) 0.8, 0.2;
+  (no) 0.2, 0.8;
+}
+probability ( wetgrass | sprinkler, rain ) {
+  (on, yes) 0.99, 0.01;
+  (on, no) 0.9, 0.1;
+  (off, yes) 0.9, 0.1;
+  (off, no) 0.0, 1.0;
+}
+"#;
+
+/// Parse the Asia network.
+pub fn asia() -> Network {
+    bif::parse(ASIA_BIF).expect("embedded asia BIF must parse")
+}
+
+/// Parse the Cancer network.
+pub fn cancer() -> Network {
+    bif::parse(CANCER_BIF).expect("embedded cancer BIF must parse")
+}
+
+/// Parse the Sprinkler network.
+pub fn sprinkler() -> Network {
+    bif::parse(SPRINKLER_BIF).expect("embedded sprinkler BIF must parse")
+}
+
+/// A 12-node mixed-cardinality network (cards 2–4), generated
+/// deterministically — exercises non-binary paths in tests and examples.
+pub fn mixed12() -> Network {
+    use crate::bn::netgen::NetSpec;
+    NetSpec {
+        name: "mixed12".into(),
+        nodes: 12,
+        arcs: 16,
+        max_parents: 3,
+        card_choices: vec![(2, 0.5), (3, 0.3), (4, 0.2)],
+        locality: 6,
+        max_table: 1 << 12,
+        alpha: 1.0,
+        seed: 0xA51A,
+    }
+    .generate()
+}
+
+/// Look an embedded network up by name.
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "asia" => Some(asia()),
+        "cancer" => Some(cancer()),
+        "sprinkler" => Some(sprinkler()),
+        "mixed12" => Some(mixed12()),
+        _ => None,
+    }
+}
+
+/// Names of all embedded networks.
+pub const NAMES: &[&str] = &["asia", "cancer", "sprinkler", "mixed12"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asia_parses_with_expected_shape() {
+        let net = asia();
+        assert_eq!(net.n(), 8);
+        assert_eq!(net.n_arcs(), 8);
+        // bnlearn reports 18 independent parameters for asia
+        assert_eq!(net.n_params(), 18);
+    }
+
+    #[test]
+    fn cancer_parses() {
+        let net = cancer();
+        assert_eq!(net.n(), 5);
+        assert_eq!(net.n_arcs(), 4);
+        assert_eq!(net.n_params(), 10);
+    }
+
+    #[test]
+    fn sprinkler_parses() {
+        let net = sprinkler();
+        assert_eq!(net.n(), 4);
+        assert_eq!(net.n_arcs(), 4);
+    }
+
+    #[test]
+    fn mixed12_is_valid_and_deterministic() {
+        let a = mixed12();
+        let b = mixed12();
+        assert_eq!(a.n(), 12);
+        a.validate().unwrap();
+        for v in 0..a.n() {
+            assert_eq!(a.cpts[v].probs, b.cpts[v].probs);
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in NAMES {
+            assert!(by_name(name).is_some(), "missing embedded net {name}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

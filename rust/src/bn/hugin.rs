@@ -1,0 +1,358 @@
+//! Parser for the Hugin `.net` format — the other format the bnlearn
+//! repository (and the Hugin / GeNIe tools) distribute networks in.
+//!
+//! Supported subset (what bnlearn exports):
+//!
+//! ```text
+//! net { }
+//! node A {
+//!   states = ( "yes" "no" );
+//! }
+//! potential ( A | B C ) {
+//!   data = (( 0.2 0.8 )
+//!           ( 0.3 0.7 ));   % comment
+//! }
+//! ```
+//!
+//! `data` is row-major over the parents (as listed) with the child
+//! varying fastest — the same flattening as a BIF `table`, so the nested
+//! parentheses carry no information beyond grouping and are skipped.
+
+use std::collections::HashMap;
+
+use crate::bn::cpt::Cpt;
+use crate::bn::network::Network;
+use crate::bn::variable::Variable;
+use crate::{Error, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Ident(String),
+    Str(String),
+    Number(f64),
+    Punct(char),
+}
+
+fn lex(src: &str) -> Result<Vec<(Tok, usize)>> {
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut chars = src.char_indices().peekable();
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '\n' => line += 1,
+            c if c.is_whitespace() => {}
+            '%' => {
+                // comment to end of line
+                for (_, c2) in chars.by_ref() {
+                    if c2 == '\n' {
+                        line += 1;
+                        break;
+                    }
+                }
+            }
+            '{' | '}' | '(' | ')' | '|' | '=' | ';' => toks.push((Tok::Punct(c), line)),
+            '"' => {
+                let start = i + 1;
+                let mut end = start;
+                for (j, c2) in chars.by_ref() {
+                    if c2 == '"' {
+                        end = j;
+                        break;
+                    }
+                    if c2 == '\n' {
+                        line += 1;
+                    }
+                }
+                toks.push((Tok::Str(src[start..end].to_string()), line));
+            }
+            c if c.is_ascii_digit() || c == '-' || c == '.' => {
+                let start = i;
+                let mut end = i + c.len_utf8();
+                while let Some(&(j, c2)) = chars.peek() {
+                    if c2.is_ascii_digit() || matches!(c2, '.' | 'e' | 'E' | '-' | '+') {
+                        end = j + c2.len_utf8();
+                        chars.next();
+                    } else {
+                        break;
+                    }
+                }
+                let text = &src[start..end];
+                let n: f64 =
+                    text.parse().map_err(|_| Error::Parse { line, msg: format!("bad number {text:?}") })?;
+                toks.push((Tok::Number(n), line));
+            }
+            c if c.is_alphanumeric() || c == '_' => {
+                let start = i;
+                let mut end = i + c.len_utf8();
+                while let Some(&(j, c2)) = chars.peek() {
+                    if c2.is_alphanumeric() || c2 == '_' || c2 == '-' || c2 == '.' {
+                        end = j + c2.len_utf8();
+                        chars.next();
+                    } else {
+                        break;
+                    }
+                }
+                toks.push((Tok::Ident(src[start..end].to_string()), line));
+            }
+            other => return Err(Error::Parse { line, msg: format!("unexpected character {other:?}") }),
+        }
+    }
+    Ok(toks)
+}
+
+/// Parse Hugin `.net` text into a [`Network`].
+pub fn parse(src: &str) -> Result<Network> {
+    let toks = lex(src)?;
+    let mut pos = 0usize;
+    let line_at = |p: usize| toks.get(p.min(toks.len().saturating_sub(1))).map(|&(_, l)| l).unwrap_or(0);
+    let next = |p: &mut usize| -> Result<&Tok> {
+        let t = toks.get(*p).map(|(t, _)| t).ok_or_else(|| Error::Parse {
+            line: line_at(*p),
+            msg: "unexpected end of input".into(),
+        })?;
+        *p += 1;
+        Ok(t)
+    };
+
+    let mut vars: Vec<Variable> = Vec::new();
+    let mut index: HashMap<String, usize> = HashMap::new();
+    let mut raw_pots: Vec<(usize, Vec<usize>, Vec<f64>, usize)> = Vec::new();
+    let mut net_name = String::from("network");
+
+    while pos < toks.len() {
+        let line = line_at(pos);
+        match next(&mut pos)? {
+            Tok::Ident(kw) if kw == "net" => {
+                // optional name, then a block to skip
+                if let Some((Tok::Ident(name), _)) = toks.get(pos) {
+                    net_name = name.clone();
+                    pos += 1;
+                }
+                skip_block(&toks, &mut pos, line)?;
+            }
+            Tok::Ident(kw) if kw == "node" => {
+                let name = match next(&mut pos)? {
+                    Tok::Ident(n) => n.clone(),
+                    Tok::Str(n) => n.clone(),
+                    other => return Err(Error::Parse { line, msg: format!("bad node name {other:?}") }),
+                };
+                expect_punct(&toks, &mut pos, '{')?;
+                let mut states: Vec<String> = Vec::new();
+                let mut depth = 1usize;
+                while depth > 0 {
+                    match next(&mut pos)? {
+                        Tok::Punct('{') => depth += 1,
+                        Tok::Punct('}') => depth -= 1,
+                        Tok::Ident(f) if f == "states" && depth == 1 => {
+                            expect_punct(&toks, &mut pos, '=')?;
+                            expect_punct(&toks, &mut pos, '(')?;
+                            loop {
+                                match next(&mut pos)? {
+                                    Tok::Punct(')') => break,
+                                    Tok::Str(s) => states.push(s.clone()),
+                                    Tok::Ident(s) => states.push(s.clone()),
+                                    Tok::Number(n) => states.push(format!("{n}")),
+                                    other => {
+                                        return Err(Error::Parse {
+                                            line,
+                                            msg: format!("bad state {other:?}"),
+                                        })
+                                    }
+                                }
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                if states.is_empty() {
+                    return Err(Error::Parse { line, msg: format!("node {name} has no states") });
+                }
+                if index.insert(name.clone(), vars.len()).is_some() {
+                    return Err(Error::Parse { line, msg: format!("duplicate node {name:?}") });
+                }
+                vars.push(Variable { name, states });
+            }
+            Tok::Ident(kw) if kw == "potential" => {
+                expect_punct(&toks, &mut pos, '(')?;
+                let child_name = match next(&mut pos)? {
+                    Tok::Ident(n) => n.clone(),
+                    other => return Err(Error::Parse { line, msg: format!("bad child {other:?}") }),
+                };
+                let child = *index
+                    .get(&child_name)
+                    .ok_or_else(|| Error::Parse { line, msg: format!("unknown node {child_name:?}") })?;
+                let mut parents: Vec<usize> = Vec::new();
+                loop {
+                    match next(&mut pos)? {
+                        Tok::Punct(')') => break,
+                        Tok::Punct('|') => {}
+                        Tok::Ident(p) => {
+                            let pid = *index
+                                .get(p)
+                                .ok_or_else(|| Error::Parse { line, msg: format!("unknown parent {p:?}") })?;
+                            parents.push(pid);
+                        }
+                        other => return Err(Error::Parse { line, msg: format!("bad parent {other:?}") }),
+                    }
+                }
+                expect_punct(&toks, &mut pos, '{')?;
+                // scan the block: collect every number inside `data = ...;`
+                let mut probs: Vec<f64> = Vec::new();
+                let mut depth = 1usize;
+                let mut in_data = false;
+                while depth > 0 {
+                    match next(&mut pos)? {
+                        Tok::Punct('{') => depth += 1,
+                        Tok::Punct('}') => depth -= 1,
+                        Tok::Ident(f) if f == "data" && depth == 1 => in_data = true,
+                        Tok::Punct(';') => in_data = false,
+                        Tok::Number(n) if in_data => probs.push(*n),
+                        _ => {}
+                    }
+                }
+                raw_pots.push((child, parents, probs, line));
+            }
+            other => return Err(Error::Parse { line, msg: format!("unexpected top-level {other:?}") }),
+        }
+    }
+
+    let cards: Vec<usize> = vars.iter().map(|v| v.card()).collect();
+    let mut cpts: Vec<Option<Cpt>> = (0..vars.len()).map(|_| None).collect();
+    for (child, parents, probs, line) in raw_pots {
+        let cpt = Cpt::new(child, parents, probs, &cards)
+            .map_err(|e| Error::Parse { line, msg: e.to_string() })?;
+        if cpts[child].is_some() {
+            return Err(Error::Parse { line, msg: format!("duplicate potential for {:?}", vars[child].name) });
+        }
+        cpts[child] = Some(cpt);
+    }
+    let cpts: Vec<Cpt> = cpts
+        .into_iter()
+        .enumerate()
+        .map(|(v, c)| c.ok_or_else(|| Error::InvalidNetwork(format!("no potential for {:?}", vars[v].name))))
+        .collect::<Result<_>>()?;
+    Network::new(net_name, vars, cpts)
+}
+
+fn expect_punct(toks: &[(Tok, usize)], pos: &mut usize, c: char) -> Result<()> {
+    match toks.get(*pos) {
+        Some((Tok::Punct(p), _)) if *p == c => {
+            *pos += 1;
+            Ok(())
+        }
+        Some((other, line)) => Err(Error::Parse { line: *line, msg: format!("expected {c:?}, found {other:?}") }),
+        None => Err(Error::Parse { line: 0, msg: format!("expected {c:?}, found end of input") }),
+    }
+}
+
+fn skip_block(toks: &[(Tok, usize)], pos: &mut usize, line: usize) -> Result<()> {
+    expect_punct(toks, pos, '{')?;
+    let mut depth = 1usize;
+    while depth > 0 {
+        match toks.get(*pos) {
+            Some((Tok::Punct('{'), _)) => depth += 1,
+            Some((Tok::Punct('}'), _)) => depth -= 1,
+            Some(_) => {}
+            None => return Err(Error::Parse { line, msg: "unterminated block".into() }),
+        }
+        *pos += 1;
+    }
+    Ok(())
+}
+
+/// Read a network from a `.net` file.
+pub fn parse_file(path: &std::path::Path) -> Result<Network> {
+    parse(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"
+net
+{
+  node_size = (80 40);
+}
+node rain
+{
+  states = ( "yes" "no" );
+  label = "Rain today";
+}
+node grass
+{
+  states = ( "wet" "dry" );
+}
+potential ( rain )
+{
+  data = ( 0.2 0.8 );
+}
+potential ( grass | rain )
+{
+  data = (( 0.9 0.1 )   % rain = yes
+          ( 0.1 0.9 )); % rain = no
+}
+"#;
+
+    #[test]
+    fn parses_mini_net() {
+        let net = parse(MINI).unwrap();
+        assert_eq!(net.n(), 2);
+        let g = net.var_id("grass").unwrap();
+        let r = net.var_id("rain").unwrap();
+        assert_eq!(net.parents(g), &[r]);
+        let cards = net.cards();
+        assert_eq!(net.cpts[g].row(&[0], &cards), &[0.9, 0.1]);
+        assert_eq!(net.cpts[r].probs, vec![0.2, 0.8]);
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn agrees_with_bif_parse_of_the_same_network() {
+        // same distribution written in both formats must produce identical
+        // posteriors
+        use crate::jt::evidence::Evidence;
+        let bif_src = r#"
+network mini { }
+variable rain { type discrete [ 2 ] { yes, no }; }
+variable grass { type discrete [ 2 ] { wet, dry }; }
+probability ( rain ) { table 0.2, 0.8; }
+probability ( grass | rain ) { (yes) 0.9, 0.1; (no) 0.1, 0.9; }
+"#;
+        let a = parse(MINI).unwrap();
+        let b = crate::bn::bif::parse(bif_src).unwrap();
+        let pa = crate::infer::exact::enumerate(&a, &Evidence::none()).unwrap();
+        let pb = crate::infer::exact::enumerate(&b, &Evidence::none()).unwrap();
+        for v in 0..2 {
+            for s in 0..2 {
+                assert!((pa.probs[v][s] - pb.probs[v][s]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_potential_rejected() {
+        let src = r#"
+net { }
+node a { states = ( "x" "y" ); }
+"#;
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn bad_data_length_rejected() {
+        let src = r#"
+net { }
+node a { states = ( "x" "y" ); }
+potential ( a ) { data = ( 0.5 0.3 0.2 ); }
+"#;
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn comments_and_properties_ignored() {
+        let src = "net { } % top\nnode a { states = ( \"t\" \"f\" ); position = (10 20); }\npotential ( a ) { data = ( 1.0 0.0 ); }";
+        let net = parse(src).unwrap();
+        assert_eq!(net.cpts[0].probs, vec![1.0, 0.0]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Discrete Bayesian-network model and I/O.
+//!
+//! This is the substrate layer the paper assumes: random variables with a
+//! finite state space, a DAG of conditional dependencies, and one
+//! conditional probability table (CPT) per variable. The module also owns
+//! everything needed to *obtain* networks in this offline environment:
+//! a BIF parser/writer ([`bif`]), classic textbook networks embedded as BIF
+//! text ([`embedded`]), and a seeded synthetic generator that produces
+//! structural analogs of the six bnlearn networks used in the paper's
+//! Table 1 ([`netgen`]).
+
+pub mod bif;
+pub mod cpt;
+pub mod embedded;
+pub mod hugin;
+pub mod netgen;
+pub mod network;
+pub mod sample;
+pub mod variable;
+
+pub use cpt::Cpt;
+pub use network::Network;
+pub use variable::Variable;

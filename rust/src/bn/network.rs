@@ -1,0 +1,305 @@
+//! The Bayesian network: variables + DAG + CPTs.
+
+use std::collections::HashMap;
+
+use crate::bn::cpt::Cpt;
+use crate::bn::variable::{VarId, Variable};
+use crate::{Error, Result};
+
+/// A discrete Bayesian network.
+///
+/// Invariants (enforced by [`Network::validate`], which all constructors in
+/// this crate run):
+/// * exactly one CPT per variable, `cpts[v].child == v`;
+/// * the parent relation is acyclic;
+/// * every CPT row is a probability distribution.
+#[derive(Clone, Debug)]
+pub struct Network {
+    /// Network name (from BIF or generator).
+    pub name: String,
+    /// Variables; `VarId` indexes into this.
+    pub vars: Vec<Variable>,
+    /// `cpts[v]` is the CPT of variable `v`.
+    pub cpts: Vec<Cpt>,
+    name_index: HashMap<String, VarId>,
+    children: Vec<Vec<VarId>>,
+}
+
+impl Network {
+    /// Assemble and validate a network.
+    pub fn new(name: impl Into<String>, vars: Vec<Variable>, cpts: Vec<Cpt>) -> Result<Self> {
+        let mut name_index = HashMap::with_capacity(vars.len());
+        for (i, v) in vars.iter().enumerate() {
+            if name_index.insert(v.name.clone(), i).is_some() {
+                return Err(Error::InvalidNetwork(format!("duplicate variable name {:?}", v.name)));
+            }
+        }
+        let mut children = vec![Vec::new(); vars.len()];
+        for cpt in &cpts {
+            for &p in &cpt.parents {
+                children[p].push(cpt.child);
+            }
+        }
+        let net = Network {
+            name: name.into(),
+            vars,
+            cpts,
+            name_index,
+            children,
+        };
+        net.validate()?;
+        Ok(net)
+    }
+
+    /// Number of variables.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.vars.len()
+    }
+
+    /// Cardinality of variable `v`.
+    #[inline]
+    pub fn card(&self, v: VarId) -> usize {
+        self.vars[v].card()
+    }
+
+    /// All cardinalities, indexed by `VarId`.
+    pub fn cards(&self) -> Vec<usize> {
+        self.vars.iter().map(|v| v.card()).collect()
+    }
+
+    /// Parents of `v` (CPT order).
+    #[inline]
+    pub fn parents(&self, v: VarId) -> &[VarId] {
+        &self.cpts[v].parents
+    }
+
+    /// Children of `v`.
+    #[inline]
+    pub fn children(&self, v: VarId) -> &[VarId] {
+        &self.children[v]
+    }
+
+    /// Look a variable up by name.
+    pub fn var_id(&self, name: &str) -> Result<VarId> {
+        self.name_index
+            .get(name)
+            .copied()
+            .ok_or_else(|| Error::UnknownVariable(name.to_string()))
+    }
+
+    /// Resolve `(variable, state)` names to ids.
+    pub fn state_id(&self, var: &str, state: &str) -> Result<(VarId, usize)> {
+        let v = self.var_id(var)?;
+        let s = self.vars[v]
+            .state_index(state)
+            .ok_or_else(|| Error::UnknownState { var: var.to_string(), state: state.to_string() })?;
+        Ok((v, s))
+    }
+
+    /// Total number of directed edges.
+    pub fn n_arcs(&self) -> usize {
+        self.cpts.iter().map(|c| c.parents.len()).sum()
+    }
+
+    /// Total number of independent CPT parameters
+    /// (Σ_v (card(v) − 1) · Π_p card(p); the bnlearn repository statistic).
+    pub fn n_params(&self) -> usize {
+        self.cpts
+            .iter()
+            .map(|c| {
+                let rows: usize = c.parents.iter().map(|&p| self.card(p)).product();
+                rows * (self.card(c.child) - 1)
+            })
+            .sum()
+    }
+
+    /// A topological order of the variables (parents before children).
+    pub fn topo_order(&self) -> Result<Vec<VarId>> {
+        let n = self.n();
+        let mut indeg: Vec<usize> = (0..n).map(|v| self.parents(v).len()).collect();
+        let mut stack: Vec<VarId> = (0..n).filter(|&v| indeg[v] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(v) = stack.pop() {
+            order.push(v);
+            for &c in self.children(v) {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    stack.push(c);
+                }
+            }
+        }
+        if order.len() != n {
+            return Err(Error::InvalidNetwork("parent relation contains a cycle".into()));
+        }
+        Ok(order)
+    }
+
+    /// Validate all invariants (one CPT per var, acyclicity, row sums).
+    pub fn validate(&self) -> Result<()> {
+        if self.cpts.len() != self.vars.len() {
+            return Err(Error::InvalidNetwork(format!(
+                "{} variables but {} CPTs",
+                self.vars.len(),
+                self.cpts.len()
+            )));
+        }
+        let cards = self.cards();
+        for (v, cpt) in self.cpts.iter().enumerate() {
+            if cpt.child != v {
+                return Err(Error::InvalidNetwork(format!(
+                    "CPT at slot {} is for variable {}",
+                    v, cpt.child
+                )));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for &p in &cpt.parents {
+                if p >= self.n() {
+                    return Err(Error::InvalidNetwork(format!("variable {} has out-of-range parent {}", v, p)));
+                }
+                if p == v {
+                    return Err(Error::InvalidNetwork(format!("variable {} is its own parent", v)));
+                }
+                if !seen.insert(p) {
+                    return Err(Error::InvalidNetwork(format!("variable {} has duplicate parent {}", v, p)));
+                }
+            }
+            cpt.validate(&cards, 1e-6)?;
+        }
+        self.topo_order()?;
+        Ok(())
+    }
+
+    /// Human-readable summary (node/arc/parameter counts, max in-degree,
+    /// max state count) — the statistics the bnlearn repository reports.
+    pub fn stats(&self) -> NetworkStats {
+        NetworkStats {
+            name: self.name.clone(),
+            nodes: self.n(),
+            arcs: self.n_arcs(),
+            params: self.n_params(),
+            max_in_degree: (0..self.n()).map(|v| self.parents(v).len()).max().unwrap_or(0),
+            max_card: self.vars.iter().map(|v| v.card()).max().unwrap_or(0),
+            avg_card: if self.n() == 0 {
+                0.0
+            } else {
+                self.vars.iter().map(|v| v.card()).sum::<usize>() as f64 / self.n() as f64
+            },
+        }
+    }
+}
+
+/// Summary statistics for a network (see [`Network::stats`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkStats {
+    pub name: String,
+    pub nodes: usize,
+    pub arcs: usize,
+    pub params: usize,
+    pub max_in_degree: usize,
+    pub max_card: usize,
+    pub avg_card: f64,
+}
+
+impl std::fmt::Display for NetworkStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {} nodes, {} arcs, {} params, max in-degree {}, max card {}, avg card {:.2}",
+            self.name, self.nodes, self.arcs, self.params, self.max_in_degree, self.max_card, self.avg_card
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain3() -> Network {
+        // a -> b -> c, all binary
+        let vars = vec![
+            Variable::new("a", &["t", "f"]),
+            Variable::new("b", &["t", "f"]),
+            Variable::new("c", &["t", "f"]),
+        ];
+        let cards = [2, 2, 2];
+        let cpts = vec![
+            Cpt::new(0, vec![], vec![0.6, 0.4], &cards).unwrap(),
+            Cpt::new(1, vec![0], vec![0.7, 0.3, 0.2, 0.8], &cards).unwrap(),
+            Cpt::new(2, vec![1], vec![0.9, 0.1, 0.5, 0.5], &cards).unwrap(),
+        ];
+        Network::new("chain3", vars, cpts).unwrap()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let net = chain3();
+        assert_eq!(net.n(), 3);
+        assert_eq!(net.n_arcs(), 2);
+        assert_eq!(net.card(0), 2);
+        assert_eq!(net.parents(1), &[0]);
+        assert_eq!(net.children(0), &[1]);
+        assert_eq!(net.var_id("c").unwrap(), 2);
+        assert!(net.var_id("zzz").is_err());
+        assert_eq!(net.state_id("a", "f").unwrap(), (0, 1));
+        assert!(net.state_id("a", "x").is_err());
+    }
+
+    #[test]
+    fn n_params_matches_bnlearn_convention() {
+        let net = chain3();
+        // a: 1, b: 2 rows * 1, c: 2 rows * 1 -> 5
+        assert_eq!(net.n_params(), 5);
+    }
+
+    #[test]
+    fn topo_order_is_valid() {
+        let net = chain3();
+        let order = net.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 3];
+            for (i, &v) in order.iter().enumerate() {
+                p[v] = i;
+            }
+            p
+        };
+        assert!(pos[0] < pos[1] && pos[1] < pos[2]);
+    }
+
+    #[test]
+    fn cycle_is_rejected() {
+        let vars = vec![Variable::with_card("a", 2), Variable::with_card("b", 2)];
+        let cards = [2, 2];
+        let cpts = vec![
+            Cpt::new(0, vec![1], vec![0.5; 4], &cards).unwrap(),
+            Cpt::new(1, vec![0], vec![0.5; 4], &cards).unwrap(),
+        ];
+        assert!(Network::new("cyc", vars, cpts).is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let vars = vec![Variable::with_card("a", 2), Variable::with_card("a", 2)];
+        let cards = [2, 2];
+        let cpts = vec![
+            Cpt::new(0, vec![], vec![0.5, 0.5], &cards).unwrap(),
+            Cpt::new(1, vec![], vec![0.5, 0.5], &cards).unwrap(),
+        ];
+        assert!(Network::new("dup", vars, cpts).is_err());
+    }
+
+    #[test]
+    fn self_parent_rejected() {
+        let vars = vec![Variable::with_card("a", 2)];
+        let cpts = vec![Cpt { child: 0, parents: vec![0], probs: vec![0.5; 4] }];
+        assert!(Network::new("selfp", vars, cpts).is_err());
+    }
+
+    #[test]
+    fn stats_display() {
+        let s = chain3().stats();
+        assert_eq!(s.nodes, 3);
+        assert_eq!(s.arcs, 2);
+        assert!(format!("{s}").contains("chain3"));
+    }
+}

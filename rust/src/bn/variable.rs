@@ -1,0 +1,71 @@
+//! Discrete random variables.
+
+/// A discrete random variable: a name plus an ordered, named state space.
+///
+/// Variables are referenced everywhere else by their index (`VarId`) in the
+/// owning [`crate::bn::Network`]; the struct itself carries only metadata.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Variable {
+    /// Unique (within a network) variable name.
+    pub name: String,
+    /// Ordered state names; `states.len()` is the cardinality.
+    pub states: Vec<String>,
+}
+
+/// Index of a variable within its [`crate::bn::Network`].
+pub type VarId = usize;
+
+impl Variable {
+    /// Create a variable from a name and state names.
+    pub fn new(name: impl Into<String>, states: &[&str]) -> Self {
+        Variable {
+            name: name.into(),
+            states: states.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Create a variable with anonymous states `s0..s{card-1}`.
+    pub fn with_card(name: impl Into<String>, card: usize) -> Self {
+        assert!(card >= 1, "a variable needs at least one state");
+        Variable {
+            name: name.into(),
+            states: (0..card).map(|i| format!("s{i}")).collect(),
+        }
+    }
+
+    /// Number of states.
+    #[inline]
+    pub fn card(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Index of a state by name.
+    pub fn state_index(&self, state: &str) -> Option<usize> {
+        self.states.iter().position(|s| s == state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn card_and_state_lookup() {
+        let v = Variable::new("smoke", &["yes", "no"]);
+        assert_eq!(v.card(), 2);
+        assert_eq!(v.state_index("no"), Some(1));
+        assert_eq!(v.state_index("maybe"), None);
+    }
+
+    #[test]
+    fn with_card_names_states() {
+        let v = Variable::with_card("x", 3);
+        assert_eq!(v.states, vec!["s0", "s1", "s2"]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_card_panics() {
+        Variable::with_card("x", 0);
+    }
+}

@@ -1,0 +1,467 @@
+//! Hand-rolled CLI (no `clap` in this offline environment).
+//!
+//! ```text
+//! fastbn nets
+//! fastbn info      --net <spec> [--heuristic min-fill]
+//! fastbn query     --net <spec> --target <var> [--evidence a=x,b=y] [--engine hybrid] [--threads N]
+//! fastbn batch     --net <spec> [--cases 2000] [--obs 0.2] [--engine hybrid] [--threads N] [--replicas 1] [--seed S]
+//! fastbn generate  --nodes N [--arcs M] [--max-parents 3] [--seed S] [--out net.bif]
+//! fastbn serve     --net <spec> [--bind 127.0.0.1:7979] [--engine hybrid] [--threads N]
+//! fastbn simulate  --net <spec> [--threads 1,2,4,8,16,32]
+//! fastbn selftest
+//! ```
+//!
+//! `<spec>` is an embedded name (`asia`, `cancer`, `sprinkler`,
+//! `mixed12`), a paper-suite analog (`hailfinder-sim`, ... `munin4-sim`),
+//! or a path to a `.bif` file.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::bn::network::Network;
+use crate::bn::{bif, embedded, netgen};
+use crate::coordinator::server::Server;
+use crate::coordinator::{BatchConfig, BatchRunner};
+use crate::engine::simulate::{best_over_threads, simulate_seconds, CostModel};
+use crate::engine::{EngineConfig, EngineKind};
+use crate::infer::cases::{generate, CaseSpec};
+use crate::jt::evidence::Evidence;
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::jt::triangulate::TriangulationHeuristic;
+use crate::{Error, Result};
+
+/// Resolve a network spec string (see module docs).
+pub fn resolve_net(spec: &str) -> Result<Network> {
+    if let Some(net) = embedded::by_name(spec) {
+        return Ok(net);
+    }
+    if let Some(net) = netgen::paper_net(spec) {
+        return Ok(net);
+    }
+    let path = std::path::Path::new(spec);
+    if path.exists() {
+        // dispatch on extension: .net = Hugin, everything else = BIF
+        if path.extension().map(|e| e == "net").unwrap_or(false) {
+            return crate::bn::hugin::parse_file(path);
+        }
+        return bif::parse_file(path);
+    }
+    Err(Error::msg(format!(
+        "unknown network {spec:?} (embedded: {}; paper suite: {}; or a .bif/.net path)",
+        embedded::NAMES.join(", "),
+        netgen::paper_names().join(", ")
+    )))
+}
+
+/// Parsed `--flag value` arguments.
+pub struct Args {
+    flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (after the subcommand).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    let v = argv.get(i + 1).ok_or_else(|| Error::msg(format!("--{name} needs a value")))?;
+                    flags.insert(name.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { flags, positional })
+    }
+
+    /// String flag.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Required string flag.
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| Error::msg(format!("missing required --{name}")))
+    }
+
+    /// Parsed flag with default.
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| Error::msg(format!("bad value for --{name}: {v:?}"))),
+        }
+    }
+}
+
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    Ok(EngineConfig {
+        threads: args.parse_or("threads", 0usize)?,
+        ..Default::default()
+    })
+}
+
+fn parse_evidence(net: &Network, text: Option<&str>) -> Result<Evidence> {
+    let Some(text) = text else { return Ok(Evidence::none()) };
+    let mut pairs = Vec::new();
+    for tok in text.split(',').filter(|t| !t.is_empty()) {
+        let (var, state) = tok
+            .split_once('=')
+            .ok_or_else(|| Error::msg(format!("evidence token {tok:?} is not var=state")))?;
+        pairs.push((var.trim(), state.trim()));
+    }
+    Evidence::from_pairs(net, &pairs)
+}
+
+/// Run the CLI; returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[argv.len().min(1)..])?;
+    match cmd {
+        "nets" => cmd_nets(),
+        "info" => cmd_info(&args),
+        "query" => cmd_query(&args),
+        "mpe" => cmd_mpe(&args),
+        "batch" => cmd_batch(&args),
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "selftest" => cmd_selftest(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(Error::msg(format!("unknown command {other:?}; see `fastbn help`"))),
+    }
+}
+
+const HELP: &str = "\
+fastbn — fast parallel exact inference on Bayesian networks (Fast-BNI reproduction)
+
+USAGE: fastbn <command> [--flag value ...]
+
+COMMANDS:
+  nets                               list available networks
+  info      --net S                  network + junction tree statistics
+  query     --net S --target V       posterior of V given --evidence a=x,b=y
+  mpe       --net S                  most probable explanation given --evidence
+  batch     --net S                  run an evidence-case batch (--cases, --obs,
+                                     --engine, --threads, --replicas, --seed)
+  generate  --nodes N                make a synthetic network (--arcs, --max-parents,
+                                     --seed, --out file.bif)
+  serve     --net S                  TCP inference server (--bind, --engine)
+  simulate  --net S                  modeled parallel times across --threads list
+  selftest                           engine-agreement smoke check
+  help                               this text
+
+ENGINES: unb | seq | direct | primitive | element | hybrid (default)
+";
+
+fn cmd_nets() -> Result<()> {
+    println!("embedded:");
+    for name in embedded::NAMES {
+        let net = embedded::by_name(name).unwrap();
+        println!("  {:<16} {}", name, net.stats());
+    }
+    println!("paper suite (synthetic analogs of the Table-1 networks):");
+    for spec in netgen::paper_suite() {
+        let net = spec.generate();
+        println!("  {:<16} {}", spec.name, net.stats());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let net = resolve_net(args.require("net")?)?;
+    let heuristic: TriangulationHeuristic = args.get("heuristic").unwrap_or("min-fill").parse()?;
+    println!("network: {}", net.stats());
+    let t0 = std::time::Instant::now();
+    let jt = JunctionTree::compile(&net, heuristic)?;
+    println!("junction tree ({heuristic:?}, compiled in {:?}): {}", t0.elapsed(), jt.stats());
+    let center = crate::jt::schedule::Schedule::build(&jt, crate::jt::schedule::RootStrategy::Center);
+    let first = crate::jt::schedule::Schedule::build(&jt, crate::jt::schedule::RootStrategy::First);
+    println!(
+        "layers: {} with center root (paper's root selection), {} with naive first root",
+        center.height(),
+        first.height()
+    );
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let net = resolve_net(args.require("net")?)?;
+    let target = args.require("target")?;
+    let engine_kind: EngineKind = args.get("engine").unwrap_or("hybrid").parse()?;
+    let cfg = engine_config(args)?;
+    let ev = parse_evidence(&net, args.get("evidence"))?;
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
+    let mut engine = engine_kind.build(Arc::clone(&jt), &cfg);
+    let mut state = TreeState::fresh(&jt);
+    let t0 = std::time::Instant::now();
+    let post = engine.infer(&mut state, &ev)?;
+    let elapsed = t0.elapsed();
+    let v = net.var_id(target)?;
+    println!("P({target} | {}) [{} in {elapsed:?}]:", ev.describe(&net), engine.name());
+    for (s, p) in net.vars[v].states.iter().zip(&post.probs[v]) {
+        println!("  {s:<16} {p:.6}");
+    }
+    println!("ln P(e) = {:.6}", post.log_z);
+    Ok(())
+}
+
+fn cmd_mpe(args: &Args) -> Result<()> {
+    let net = resolve_net(args.require("net")?)?;
+    let ev = parse_evidence(&net, args.get("evidence"))?;
+    let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?;
+    let sched = crate::jt::schedule::Schedule::build(&jt, crate::jt::schedule::RootStrategy::Center);
+    let mut state = TreeState::fresh(&jt);
+    let t0 = std::time::Instant::now();
+    let mpe = crate::jt::mpe::most_probable_explanation(&jt, &sched, &mut state, &ev)?;
+    println!("MPE given {} (found in {:?}):", ev.describe(&net), t0.elapsed());
+    for v in 0..net.n() {
+        let marker = if ev.get(v).is_some() { " (observed)" } else { "" };
+        println!("  {:<16} = {}{}", net.vars[v].name, net.vars[v].states[mpe.assignment[v]], marker);
+    }
+    println!("ln P(assignment) = {:.6}", mpe.log_prob);
+    Ok(())
+}
+
+fn cmd_batch(args: &Args) -> Result<()> {
+    let net = resolve_net(args.require("net")?)?;
+    let engine: EngineKind = args.get("engine").unwrap_or("hybrid").parse()?;
+    let spec = CaseSpec {
+        n_cases: args.parse_or("cases", 2000usize)?,
+        observed_fraction: args.parse_or("obs", 0.2f64)?,
+        seed: args.parse_or("seed", 0xCA5Eu64)?,
+    };
+    let cfg = BatchConfig {
+        engine,
+        engine_cfg: engine_config(args)?,
+        replicas: args.parse_or("replicas", 1usize)?,
+    };
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
+    println!("{} | {}", net.stats(), jt.stats());
+    let cases = generate(&net, &spec);
+    let runner = BatchRunner::new(jt);
+    let report = runner.run(&cases, &cfg)?;
+    println!(
+        "engine {} | {} cases in {:?} | throughput {:.1} cases/s | {} failures",
+        report.engine,
+        report.latency.count,
+        report.wall,
+        report.throughput(),
+        report.failures.len()
+    );
+    println!("latency: {}", report.latency);
+    println!("mean ln P(e): {:.6}", report.mean_log_z);
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let nodes = args.parse_or("nodes", 50usize)?;
+    let spec = netgen::NetSpec {
+        name: args.get("name").unwrap_or("generated").to_string(),
+        nodes,
+        arcs: args.parse_or("arcs", nodes * 3 / 2)?,
+        max_parents: args.parse_or("max-parents", 3usize)?,
+        card_choices: vec![(2, 0.6), (3, 0.25), (4, 0.15)],
+        locality: args.parse_or("locality", 8usize)?,
+        max_table: args.parse_or("max-table", 1usize << 14)?,
+        alpha: args.parse_or("alpha", 1.0f64)?,
+        seed: args.parse_or("seed", 1u64)?,
+    };
+    let net = spec.generate();
+    let text = bif::write(&net);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("wrote {} ({})", path, net.stats());
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let net = resolve_net(args.require("net")?)?;
+    let engine: EngineKind = args.get("engine").unwrap_or("hybrid").parse()?;
+    let cfg = engine_config(args)?;
+    let bind = args.get("bind").unwrap_or("127.0.0.1:7979");
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
+    let server = Server::start(jt, engine, cfg, bind)?;
+    println!("serving {} on {} with {} — protocol: QUERY <var> [| ev=state ...] / STATS / QUIT", net.name, server.addr(), engine.label());
+    // serve until killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let net = resolve_net(args.require("net")?)?;
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
+    let threads: Vec<usize> = args
+        .get("threads")
+        .unwrap_or("1,2,4,8,16,32")
+        .split(',')
+        .map(|t| t.parse().map_err(|_| Error::msg("bad --threads list")))
+        .collect::<Result<_>>()?;
+    println!("calibrating cost model...");
+    let model = CostModel::calibrate();
+    println!("{model:?}");
+    let cfg = EngineConfig::default();
+    println!("modeled per-case seconds on {} (see DESIGN.md §3 hardware substitution):", net.name);
+    print!("{:>10}", "t");
+    for kind in EngineKind::ALL {
+        print!("{:>14}", kind.label());
+    }
+    println!();
+    for &t in &threads {
+        print!("{t:>10}");
+        for kind in EngineKind::ALL {
+            let s = simulate_seconds(kind, &jt, t, &cfg, &model);
+            print!("{:>14.6}", s);
+        }
+        println!();
+    }
+    let (best_t, best) = best_over_threads(EngineKind::Hybrid, &jt, &threads, &cfg, &model);
+    println!("hybrid best: {best:.6}s at t={best_t}");
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    let net = embedded::asia();
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
+    let ev = Evidence::from_pairs(&net, &[("dysp", "yes")])?;
+    let exact = crate::infer::exact::enumerate(&net, &ev)?;
+    for kind in EngineKind::ALL {
+        let mut engine = kind.build(Arc::clone(&jt), &EngineConfig { threads: 2, min_chunk: 4, ..Default::default() });
+        let mut state = TreeState::fresh(&jt);
+        let post = engine.infer(&mut state, &ev)?;
+        let mut worst = 0.0f64;
+        for v in 0..net.n() {
+            for s in 0..net.card(v) {
+                worst = worst.max((post.probs[v][s] - exact.probs[v][s]).abs());
+            }
+        }
+        println!("{:<14} max |Δ| vs oracle = {:.2e}  {}", kind.label(), worst, if worst < 1e-9 { "OK" } else { "FAIL" });
+        if worst >= 1e-9 {
+            return Err(Error::msg(format!("{kind} disagrees with the oracle")));
+        }
+    }
+    println!("selftest passed");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parsing() {
+        let argv: Vec<String> =
+            ["--net", "asia", "--threads=4", "pos1"].iter().map(|s| s.to_string()).collect();
+        let a = Args::parse(&argv).unwrap();
+        assert_eq!(a.get("net"), Some("asia"));
+        assert_eq!(a.parse_or("threads", 0usize).unwrap(), 4);
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert!(a.require("missing").is_err());
+        assert!(a.parse_or::<usize>("net", 0).is_err());
+    }
+
+    #[test]
+    fn resolve_embedded_paper_and_missing() {
+        assert!(resolve_net("asia").is_ok());
+        assert!(resolve_net("pigs-sim").is_ok());
+        assert!(resolve_net("no-such-net").is_err());
+    }
+
+    #[test]
+    fn evidence_parser() {
+        let net = embedded::asia();
+        let ev = parse_evidence(&net, Some("smoke=yes,xray=no")).unwrap();
+        assert_eq!(ev.len(), 2);
+        assert!(parse_evidence(&net, Some("bogus")).is_err());
+        assert!(parse_evidence(&net, None).unwrap().is_empty());
+    }
+
+    #[test]
+    fn selftest_passes() {
+        cmd_selftest().unwrap();
+    }
+
+    #[test]
+    fn query_command_runs() {
+        let argv: Vec<String> = ["query", "--net", "asia", "--target", "lung", "--evidence", "smoke=yes", "--threads", "1"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(run(argv), 0);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert_ne!(run(vec!["frobnicate".into()]), 0);
+    }
+
+    #[test]
+    fn info_and_nets_commands_run() {
+        let argv: Vec<String> = ["info", "--net", "asia"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(run(argv), 0);
+        assert_eq!(run(vec!["help".into()]), 0);
+    }
+
+    #[test]
+    fn batch_command_runs_small() {
+        let argv: Vec<String> =
+            ["batch", "--net", "asia", "--cases", "5", "--engine", "seq", "--threads", "1"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert_eq!(run(argv), 0);
+    }
+
+    #[test]
+    fn mpe_command_runs() {
+        let argv: Vec<String> = ["mpe", "--net", "asia", "--evidence", "dysp=yes"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(run(argv), 0);
+    }
+
+    #[test]
+    fn generate_roundtrips_through_a_file() {
+        let path = std::env::temp_dir().join(format!("fastbn-gen-{}.bif", std::process::id()));
+        let argv: Vec<String> = [
+            "generate", "--nodes", "12", "--seed", "9", "--out",
+            path.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(argv), 0);
+        // the generated file is a loadable network spec
+        let net = resolve_net(path.to_str().unwrap()).unwrap();
+        assert_eq!(net.n(), 12);
+        let _ = std::fs::remove_file(path);
+    }
+}

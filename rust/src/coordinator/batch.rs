@@ -1,0 +1,214 @@
+//! Batch router: runs a case list through engine replicas.
+//!
+//! Work distribution is dynamic (a shared atomic cursor over the case
+//! list), so stragglers — cases whose evidence makes propagation cheaper
+//! or costlier — don't serialize the batch. Each replica owns a full
+//! engine instance (with its own thread pool of `engine_cfg.threads`) and
+//! a reusable [`TreeState`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::LatencySummary;
+use crate::engine::{EngineConfig, EngineKind};
+use crate::jt::evidence::Evidence;
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::Result;
+
+/// Batch-run configuration.
+#[derive(Clone, Debug)]
+pub struct BatchConfig {
+    /// Which engine to run.
+    pub engine: EngineKind,
+    /// Engine construction parameters (threads = intra-case parallelism).
+    pub engine_cfg: EngineConfig,
+    /// Engine replicas processing cases concurrently (1 = the paper's
+    /// protocol: cases sequential, parallelism inside each case).
+    pub replicas: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { engine: EngineKind::Hybrid, engine_cfg: EngineConfig::default(), replicas: 1 }
+    }
+}
+
+/// Outcome of a batch run.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    /// Engine label.
+    pub engine: String,
+    /// Wall-clock duration of the whole batch.
+    pub wall: Duration,
+    /// Per-case latency summary (successful cases).
+    pub latency: LatencySummary,
+    /// Cases that failed (index, error text) — e.g. inconsistent evidence.
+    pub failures: Vec<(usize, String)>,
+    /// Mean `ln P(e)` across successful cases (a checksum-like quantity
+    /// used to verify different engines computed the same thing).
+    pub mean_log_z: f64,
+}
+
+impl BatchReport {
+    /// Cases per second.
+    pub fn throughput(&self) -> f64 {
+        self.latency.throughput(self.wall)
+    }
+}
+
+/// Runs case batches against one junction tree.
+pub struct BatchRunner {
+    jt: Arc<JunctionTree>,
+}
+
+impl BatchRunner {
+    /// Create a runner for a tree.
+    pub fn new(jt: Arc<JunctionTree>) -> Self {
+        BatchRunner { jt }
+    }
+
+    /// The tree in use.
+    pub fn tree(&self) -> &Arc<JunctionTree> {
+        &self.jt
+    }
+
+    /// Run all `cases`, returning the report.
+    pub fn run(&self, cases: &[Evidence], cfg: &BatchConfig) -> Result<BatchReport> {
+        let replicas = cfg.replicas.max(1);
+        let cursor = AtomicUsize::new(0);
+        let results: Mutex<Vec<(usize, Duration, std::result::Result<f64, String>)>> =
+            Mutex::new(Vec::with_capacity(cases.len()));
+
+        let started = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..replicas {
+                scope.spawn(|| {
+                    let mut engine = cfg.engine.build(Arc::clone(&self.jt), &cfg.engine_cfg);
+                    let mut state = TreeState::fresh(&self.jt);
+                    let mut local = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= cases.len() {
+                            break;
+                        }
+                        let t0 = Instant::now();
+                        let outcome = engine
+                            .infer(&mut state, &cases[i])
+                            .map(|post| post.log_z)
+                            .map_err(|e| e.to_string());
+                        local.push((i, t0.elapsed(), outcome));
+                    }
+                    results.lock().unwrap().extend(local);
+                });
+            }
+        });
+        let wall = started.elapsed();
+
+        let mut results = results.into_inner().unwrap();
+        results.sort_by_key(|&(i, _, _)| i);
+        let mut latencies = Vec::with_capacity(results.len());
+        let mut failures = Vec::new();
+        let mut log_z_sum = 0.0f64;
+        let mut ok = 0usize;
+        for (i, lat, outcome) in results {
+            match outcome {
+                Ok(log_z) => {
+                    latencies.push(lat);
+                    log_z_sum += log_z;
+                    ok += 1;
+                }
+                Err(e) => failures.push((i, e)),
+            }
+        }
+        Ok(BatchReport {
+            engine: cfg.engine.label().to_string(),
+            wall,
+            latency: LatencySummary::from_samples(&latencies),
+            failures,
+            mean_log_z: if ok > 0 { log_z_sum / ok as f64 } else { 0.0 },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::infer::cases::{generate, CaseSpec};
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    fn setup() -> (Arc<JunctionTree>, Vec<Evidence>) {
+        let net = embedded::mixed12();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cases = generate(&net, &CaseSpec { n_cases: 24, observed_fraction: 0.25, seed: 77 });
+        (jt, cases)
+    }
+
+    #[test]
+    fn single_replica_processes_all_cases() {
+        let (jt, cases) = setup();
+        let runner = BatchRunner::new(jt);
+        let cfg = BatchConfig {
+            engine: EngineKind::Seq,
+            engine_cfg: EngineConfig::default().with_threads(1),
+            replicas: 1,
+        };
+        let report = runner.run(&cases, &cfg).unwrap();
+        assert_eq!(report.latency.count + report.failures.len(), cases.len());
+        assert!(report.failures.is_empty());
+        assert!(report.throughput() > 0.0);
+    }
+
+    #[test]
+    fn replicas_produce_same_aggregate_as_single() {
+        let (jt, cases) = setup();
+        let runner = BatchRunner::new(jt);
+        let single = runner
+            .run(
+                &cases,
+                &BatchConfig {
+                    engine: EngineKind::Seq,
+                    engine_cfg: EngineConfig::default().with_threads(1),
+                    replicas: 1,
+                },
+            )
+            .unwrap();
+        let multi = runner
+            .run(
+                &cases,
+                &BatchConfig {
+                    engine: EngineKind::Seq,
+                    engine_cfg: EngineConfig::default().with_threads(1),
+                    replicas: 4,
+                },
+            )
+            .unwrap();
+        assert_eq!(single.latency.count, multi.latency.count);
+        assert!((single.mean_log_z - multi.mean_log_z).abs() < 1e-9);
+    }
+
+    #[test]
+    fn engines_agree_on_mean_log_z() {
+        let (jt, cases) = setup();
+        let runner = BatchRunner::new(jt);
+        let mut means = Vec::new();
+        for kind in EngineKind::ALL {
+            let report = runner
+                .run(
+                    &cases,
+                    &BatchConfig {
+                        engine: kind,
+                        engine_cfg: EngineConfig { threads: 2, min_chunk: 8, ..Default::default() },
+                        replicas: 2,
+                    },
+                )
+                .unwrap();
+            means.push((kind, report.mean_log_z));
+        }
+        for (kind, m) in &means[1..] {
+            assert!((means[0].1 - m).abs() < 1e-9, "{kind} mean_log_z {m} vs {}", means[0].1);
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Latency/throughput metrics for batch runs.
+
+use std::time::Duration;
+
+/// Summary statistics over per-case latencies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencySummary {
+    /// Number of samples.
+    pub count: usize,
+    /// Total wall time of the samples (sum of latencies).
+    pub total: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+}
+
+impl LatencySummary {
+    /// Compute from raw samples (empty input → all zeros).
+    pub fn from_samples(samples: &[Duration]) -> Self {
+        if samples.is_empty() {
+            let z = Duration::ZERO;
+            return LatencySummary { count: 0, total: z, mean: z, min: z, max: z, p50: z, p95: z, p99: z };
+        }
+        let mut sorted: Vec<Duration> = samples.to_vec();
+        sorted.sort_unstable();
+        let total: Duration = sorted.iter().sum();
+        let pct = |p: f64| -> Duration {
+            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+            sorted[idx]
+        };
+        LatencySummary {
+            count: sorted.len(),
+            total,
+            mean: total / sorted.len() as u32,
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+        }
+    }
+
+    /// Cases per second given the *wall* duration of the whole batch
+    /// (which differs from `total` when replicas run concurrently).
+    pub fn throughput(&self, wall: Duration) -> f64 {
+        if wall.is_zero() {
+            return 0.0;
+        }
+        self.count as f64 / wall.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.3?} p50={:.3?} p95={:.3?} p99={:.3?} max={:.3?}",
+            self.count, self.mean, self.p50, self.p95, self.p99, self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_samples_are_zeroed() {
+        let s = LatencySummary::from_samples(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, Duration::ZERO);
+        assert_eq!(s.throughput(Duration::from_secs(1)), 0.0);
+    }
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        let s = LatencySummary::from_samples(&samples);
+        assert_eq!(s.count, 100);
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.max, Duration::from_millis(100));
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        // nearest-rank on 100 samples: index round(99 * .5) = 50 -> 51ms
+        assert_eq!(s.p50, Duration::from_millis(51));
+        assert_eq!(s.p95, Duration::from_millis(95));
+    }
+
+    #[test]
+    fn throughput_uses_wall_time() {
+        let samples = vec![Duration::from_millis(10); 100];
+        let s = LatencySummary::from_samples(&samples);
+        let t = s.throughput(Duration::from_secs(1));
+        assert!((t - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn display_contains_fields() {
+        let s = LatencySummary::from_samples(&[Duration::from_millis(5)]);
+        let text = format!("{s}");
+        assert!(text.contains("n=1"));
+    }
+}

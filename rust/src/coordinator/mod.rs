@@ -1,0 +1,16 @@
+//! The batch-inference coordinator — the L3 serving loop.
+//!
+//! The paper's evaluation protocol runs 2 000 evidence cases through one
+//! engine per network. This module owns that loop as a service-shaped
+//! component: a [`batch::BatchRunner`] that shards cases over engine
+//! replicas (the paper's protocol is the `replicas = 1` special case,
+//! intra-case parallel; `replicas > 1` adds the case-level dimension as an
+//! extension benchmarked in `benches/ablation.rs`), latency/throughput
+//! [`metrics`], and a line-protocol TCP [`server`] for interactive use
+//! (`fastbn serve`).
+
+pub mod batch;
+pub mod metrics;
+pub mod server;
+
+pub use batch::{BatchConfig, BatchReport, BatchRunner};

@@ -1,0 +1,284 @@
+//! Line-protocol TCP inference server (`fastbn serve`).
+//!
+//! One engine replica per connection thread; the compiled tree is shared.
+//! Protocol (one request per line, UTF-8):
+//!
+//! ```text
+//! QUERY <target-var> [| ev1=state1 ev2=state2 ...]
+//! STATS
+//! QUIT
+//! ```
+//!
+//! Responses are single lines: `OK <state>=<prob> ...`, `STATS ...`,
+//! `ERR <message>`. This is intentionally minimal — the coordinator story
+//! for this paper is the batch runner; the server exists so the system is
+//! deployable interactively without Python anywhere near the request path.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::engine::{EngineConfig, EngineKind};
+use crate::jt::evidence::Evidence;
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::Result;
+
+/// Server handle; dropping it stops accepting new connections.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    queries: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Start serving on `bind` (use port 0 for an ephemeral port).
+    pub fn start(jt: Arc<JunctionTree>, engine: EngineKind, cfg: EngineConfig, bind: &str) -> Result<Server> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let queries = Arc::new(AtomicU64::new(0));
+
+        let accept_stop = Arc::clone(&stop);
+        let accept_queries = Arc::clone(&queries);
+        let accept_thread = std::thread::Builder::new().name("fastbn-accept".into()).spawn(move || {
+            let mut conn_threads = Vec::new();
+            while !accept_stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let jt = Arc::clone(&jt);
+                        let cfg = cfg.clone();
+                        let stop = Arc::clone(&accept_stop);
+                        let queries = Arc::clone(&accept_queries);
+                        conn_threads.push(std::thread::spawn(move || {
+                            let _ = handle_connection(stream, jt, engine, cfg, stop, queries);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for t in conn_threads {
+                let _ = t.join();
+            }
+        })?;
+
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread), queries })
+    }
+
+    /// Bound address (useful with port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Number of queries served so far.
+    pub fn queries_served(&self) -> u64 {
+        self.queries.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and wait for the accept loop to end.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    jt: Arc<JunctionTree>,
+    engine_kind: EngineKind,
+    cfg: EngineConfig,
+    stop: Arc<AtomicBool>,
+    queries: Arc<AtomicU64>,
+) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut engine = engine_kind.build(Arc::clone(&jt), &cfg);
+    let mut state = TreeState::fresh(&jt);
+    let mut line = String::new();
+
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) => {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let response = match respond(&line, &jt, engine.as_mut(), &mut state, &queries) {
+            Reply::Line(s) => s,
+            Reply::Quit => return Ok(()),
+        };
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+enum Reply {
+    Line(String),
+    Quit,
+}
+
+fn respond(
+    line: &str,
+    jt: &JunctionTree,
+    engine: &mut dyn crate::engine::Engine,
+    state: &mut TreeState,
+    queries: &AtomicU64,
+) -> Reply {
+    let line = line.trim();
+    if line.is_empty() {
+        return Reply::Line("ERR empty request".into());
+    }
+    let mut parts = line.splitn(2, ' ');
+    let verb = parts.next().unwrap_or("");
+    let rest = parts.next().unwrap_or("").trim();
+    match verb.to_ascii_uppercase().as_str() {
+        "QUIT" => Reply::Quit,
+        "STATS" => {
+            let s = jt.stats();
+            Reply::Line(format!(
+                "STATS net={} engine={} cliques={} width={} entries={} queries={}",
+                jt.net.name,
+                engine.name(),
+                s.cliques,
+                s.width,
+                s.total_clique_entries,
+                queries.load(Ordering::Relaxed)
+            ))
+        }
+        "QUERY" => {
+            let (target, ev_text) = match rest.split_once('|') {
+                Some((t, e)) => (t.trim(), e.trim()),
+                None => (rest, ""),
+            };
+            if target.is_empty() {
+                return Reply::Line("ERR usage: QUERY <var> [| ev=state ...]".into());
+            }
+            let mut pairs = Vec::new();
+            for tok in ev_text.split_whitespace() {
+                match tok.split_once('=') {
+                    Some((v, s)) => pairs.push((v, s)),
+                    None => return Reply::Line(format!("ERR bad evidence token {tok:?}")),
+                }
+            }
+            let ev = match Evidence::from_pairs(&jt.net, &pairs) {
+                Ok(ev) => ev,
+                Err(e) => return Reply::Line(format!("ERR {e}")),
+            };
+            let v = match jt.net.var_id(target) {
+                Ok(v) => v,
+                Err(e) => return Reply::Line(format!("ERR {e}")),
+            };
+            match engine.infer(state, &ev) {
+                Ok(post) => {
+                    queries.fetch_add(1, Ordering::Relaxed);
+                    let var = &jt.net.vars[v];
+                    let entries: Vec<String> = var
+                        .states
+                        .iter()
+                        .zip(&post.probs[v])
+                        .map(|(s, p)| format!("{s}={p:.6}"))
+                        .collect();
+                    Reply::Line(format!("OK {} logZ={:.6}", entries.join(" "), post.log_z))
+                }
+                Err(e) => Reply::Line(format!("ERR {e}")),
+            }
+        }
+        other => Reply::Line(format!("ERR unknown verb {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::jt::triangulate::TriangulationHeuristic;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn ask(addr: std::net::SocketAddr, requests: &[&str]) -> Vec<String> {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut out = Vec::new();
+        for r in requests {
+            stream.write_all(r.as_bytes()).unwrap();
+            stream.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            out.push(line.trim().to_string());
+        }
+        out
+    }
+
+    #[test]
+    fn serves_queries_and_stats() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let server = Server::start(
+            jt,
+            EngineKind::Seq,
+            EngineConfig::default().with_threads(1),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let addr = server.addr();
+
+        let replies = ask(addr, &["QUERY lung | smoke=yes", "QUERY lung", "STATS", "BOGUS x"]);
+        assert!(replies[0].starts_with("OK yes=0.1000"), "{}", replies[0]);
+        assert!(replies[1].starts_with("OK yes=0.055"), "{}", replies[1]);
+        assert!(replies[2].contains("cliques=6"), "{}", replies[2]);
+        assert!(replies[3].starts_with("ERR"), "{}", replies[3]);
+        assert_eq!(server.queries_served(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn error_paths_are_reported_not_fatal() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let server = Server::start(
+            jt,
+            EngineKind::Hybrid,
+            EngineConfig::default().with_threads(2),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let replies = ask(
+            server.addr(),
+            &[
+                "QUERY nosuchvar",
+                "QUERY lung | smoke=bogus",
+                "QUERY lung | either=no lung=yes", // impossible
+                "QUERY lung | smoke=no",           // still works after errors
+            ],
+        );
+        assert!(replies[0].starts_with("ERR"));
+        assert!(replies[1].starts_with("ERR"));
+        assert!(replies[2].starts_with("ERR"));
+        assert!(replies[3].starts_with("OK yes=0.01"), "{}", replies[3]);
+        server.shutdown();
+    }
+}

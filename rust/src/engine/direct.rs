@@ -1,0 +1,234 @@
+//! **Direct inter-clique parallelism** — the Kozlov & Singh '94 baseline
+//! (Table 1 column "Dir.").
+//!
+//! Message passing of different cliques in the same layer runs
+//! concurrently; each *task* is one receiving clique (all messages into it,
+//! processed sequentially inside the task), so concurrent tasks never touch
+//! the same table. The paper's criticism — which `benches/table1.rs`
+//! reproduces — is load imbalance: a layer's wall time is its largest
+//! clique, and layers with few cliques leave threads idle.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::engine::pool::Pool;
+use crate::engine::share::{PerWorker, SharedTables};
+use crate::engine::{Engine, EngineConfig};
+use crate::infer::query::Posteriors;
+use crate::jt::evidence::Evidence;
+use crate::jt::ops;
+use crate::jt::propagate::Scratch;
+use crate::jt::schedule::{Msg, Schedule};
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::{Error, Result};
+
+/// Worker-local accumulator for one parallel region.
+struct WorkerCtx {
+    scratch: Scratch,
+    log_z: f64,
+}
+
+/// Inter-clique engine (see module docs).
+pub struct DirectEngine {
+    jt: Arc<JunctionTree>,
+    sched: Schedule,
+    pool: Pool,
+    /// Collect phase: `up_groups[layer][task]` = messages into one parent.
+    up_groups: Vec<Vec<Vec<Msg>>>,
+    /// Distribute phase: one task per message (receivers are distinct).
+    down_tasks: Vec<Vec<Msg>>,
+    workers: PerWorker<WorkerCtx>,
+}
+
+impl DirectEngine {
+    /// Build for a tree.
+    pub fn new(jt: Arc<JunctionTree>, cfg: &EngineConfig) -> Self {
+        let sched = Schedule::build(&jt, cfg.root_strategy);
+        let threads = cfg.resolved_threads();
+        let pool = Pool::new(threads);
+
+        let up_groups = sched
+            .up_layers
+            .iter()
+            .map(|layer| {
+                let mut by_parent: std::collections::BTreeMap<usize, Vec<Msg>> = Default::default();
+                for &m in layer {
+                    by_parent.entry(m.to).or_default().push(m);
+                }
+                by_parent.into_values().collect()
+            })
+            .collect();
+        let down_tasks = sched.down_layers.clone();
+        let workers = PerWorker::new(threads, |_| WorkerCtx { scratch: Scratch::for_tree(&jt), log_z: 0.0 });
+
+        DirectEngine { jt, sched, pool, up_groups, down_tasks, workers }
+    }
+
+    /// Send one message inside a task. Safety contract: the caller's
+    /// schedule guarantees exclusive access to `msg.to`'s clique and
+    /// `msg.sep`'s separator, and read access to `msg.from`.
+    fn send_in_task(jt: &JunctionTree, shared: &SharedTables, ctx: &mut WorkerCtx, msg: Msg, failed: &AtomicBool) {
+        let sep_meta = &jt.seps[msg.sep];
+        let maps = &jt.edge_maps[msg.sep];
+        let new_sep = &mut ctx.scratch.new_sep[..sep_meta.len];
+        ops::zero(new_sep);
+        // SAFETY: see method contract.
+        let src = unsafe { shared.clique(msg.from) };
+        ops::marg_with_map(src, maps.from(sep_meta, msg.from), new_sep);
+        let mass = ops::sum(new_sep);
+        if mass == 0.0 {
+            failed.store(true, Ordering::Relaxed);
+            return;
+        }
+        ops::scale(new_sep, 1.0 / mass);
+        ctx.log_z += mass.ln();
+        let ratio = &mut ctx.scratch.ratio[..sep_meta.len];
+        // SAFETY: msg.sep is owned by this task.
+        let sep_tab = unsafe { shared.sep_mut(msg.sep) };
+        ops::ratio(new_sep, sep_tab, ratio);
+        sep_tab.copy_from_slice(new_sep);
+        // SAFETY: msg.to is owned by this task.
+        let dst = unsafe { shared.clique_mut(msg.to) };
+        ops::extend_with_map(dst, maps.from(sep_meta, msg.to), ratio);
+    }
+
+    fn collect_logz(&mut self, state: &mut TreeState) {
+        for ctx in self.workers.iter_mut() {
+            state.log_z += ctx.log_z;
+            ctx.log_z = 0.0;
+        }
+    }
+}
+
+impl Engine for DirectEngine {
+    fn name(&self) -> &'static str {
+        "Dir."
+    }
+
+    fn infer(&mut self, state: &mut TreeState, ev: &Evidence) -> Result<Posteriors> {
+        state.reset(&self.jt);
+        ev.apply(&self.jt, state);
+        let failed = AtomicBool::new(false);
+
+        // collect
+        for layer in &self.up_groups {
+            let shared = SharedTables::new(state);
+            let jt = &self.jt;
+            let workers = &self.workers;
+            self.pool.parallel(layer.len(), &|w, t| {
+                // SAFETY: one task per worker id at a time.
+                let ctx = unsafe { workers.get(w) };
+                for &msg in &layer[t] {
+                    Self::send_in_task(jt, &shared, ctx, msg, &failed);
+                }
+            });
+            if failed.load(Ordering::Relaxed) {
+                self.collect_logz(state);
+                return Err(Error::InconsistentEvidence);
+            }
+        }
+        self.collect_logz(state);
+        for &root in &self.sched.roots {
+            let data = &mut state.cliques[root];
+            let mass = ops::sum(data);
+            if mass == 0.0 {
+                return Err(Error::InconsistentEvidence);
+            }
+            ops::scale(data, 1.0 / mass);
+            state.log_z += mass.ln();
+        }
+
+        // distribute (scale factors here don't contribute to P(e))
+        let z = state.log_z;
+        for layer in &self.down_tasks {
+            let shared = SharedTables::new(state);
+            let jt = &self.jt;
+            let workers = &self.workers;
+            self.pool.parallel(layer.len(), &|w, t| {
+                let ctx = unsafe { workers.get(w) };
+                Self::send_in_task(jt, &shared, ctx, layer[t], &failed);
+            });
+            if failed.load(Ordering::Relaxed) {
+                return Err(Error::InconsistentEvidence);
+            }
+        }
+        for ctx in self.workers.iter_mut() {
+            ctx.log_z = 0.0;
+        }
+        state.log_z = z;
+        Posteriors::compute(&self.jt, state)
+    }
+
+    fn schedule(&self) -> &Schedule {
+        &self.sched
+    }
+
+    fn tree(&self) -> &Arc<JunctionTree> {
+        &self.jt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::engine::seq::SeqEngine;
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    #[test]
+    fn up_groups_have_distinct_parents_and_sources() {
+        let net = embedded::mixed12();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let e = DirectEngine::new(Arc::clone(&jt), &EngineConfig::default().with_threads(2));
+        for layer in &e.up_groups {
+            let mut parents = std::collections::HashSet::new();
+            let mut sources = std::collections::HashSet::new();
+            for group in layer {
+                assert!(parents.insert(group[0].to), "duplicate parent task");
+                for m in group {
+                    assert_eq!(m.to, group[0].to);
+                    assert!(sources.insert(m.from), "duplicate source in layer");
+                }
+            }
+            // parents never appear as sources in the same layer
+            for p in &parents {
+                assert!(!sources.contains(p));
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_seq_on_random_cases() {
+        let net = embedded::mixed12();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cfg = EngineConfig::default().with_threads(4);
+        let mut dir = DirectEngine::new(Arc::clone(&jt), &cfg);
+        let mut seq = SeqEngine::new(Arc::clone(&jt), &cfg);
+        let mut s1 = TreeState::fresh(&jt);
+        let mut s2 = TreeState::fresh(&jt);
+        let cases = crate::infer::cases::generate(
+            &net,
+            &crate::infer::cases::CaseSpec { n_cases: 10, observed_fraction: 0.25, seed: 11 },
+        );
+        for (i, ev) in cases.iter().enumerate() {
+            let a = dir.infer(&mut s1, ev).unwrap();
+            let b = seq.infer(&mut s2, ev).unwrap();
+            assert!(a.max_abs_diff(&b) < 1e-9, "case {i}: diff {}", a.max_abs_diff(&b));
+        }
+    }
+
+    #[test]
+    fn detects_impossible_evidence() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let mut e = DirectEngine::new(Arc::clone(&jt), &EngineConfig::default().with_threads(2));
+        let mut state = TreeState::fresh(&jt);
+        let ev = Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        assert!(matches!(e.infer(&mut state, &ev), Err(Error::InconsistentEvidence)));
+        // engine remains usable after the error
+        let ok = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+        let post = e.infer(&mut state, &ok).unwrap();
+        assert!((post.evidence_probability() - 0.5).abs() < 1e-9);
+    }
+}

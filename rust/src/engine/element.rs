@@ -1,0 +1,189 @@
+//! **Element-wise parallelism** — the Zheng '13 (GPU JT) baseline adapted
+//! to CPU threads (Table 1 column "Elem.").
+//!
+//! Like [`crate::engine::primitive::PrimitiveEngine`] this parallelizes
+//! inside each message, but in the GPU idiom: one flat element range per
+//! message with **atomic scatter-adds** into the separator (the CPU analog
+//! of `atomicAdd`), instead of per-worker partials + reduction. Contended
+//! atomics on small separators are its characteristic cost.
+
+use std::sync::Arc;
+
+use crate::engine::pool::{chunk_ranges, Pool};
+use crate::engine::share::SharedTables;
+use crate::engine::{Engine, EngineConfig};
+use crate::infer::query::Posteriors;
+use crate::jt::evidence::Evidence;
+use crate::jt::ops;
+use crate::jt::schedule::{Msg, Schedule};
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::{Error, Result};
+
+/// Element-wise engine (see module docs).
+pub struct ElementEngine {
+    jt: Arc<JunctionTree>,
+    sched: Schedule,
+    pool: Pool,
+    threads: usize,
+    min_chunk: usize,
+    max_chunks: usize,
+    new_sep: Vec<f64>,
+    ratio: Vec<f64>,
+}
+
+impl ElementEngine {
+    /// Build for a tree.
+    pub fn new(jt: Arc<JunctionTree>, cfg: &EngineConfig) -> Self {
+        let sched = Schedule::build(&jt, cfg.root_strategy);
+        let threads = cfg.resolved_threads();
+        let pool = Pool::new(threads);
+        let max_sep = jt.seps.iter().map(|s| s.len).max().unwrap_or(1);
+        ElementEngine {
+            jt,
+            sched,
+            pool,
+            threads,
+            min_chunk: cfg.min_chunk,
+            max_chunks: cfg.max_chunks,
+            new_sep: vec![0.0; max_sep],
+            ratio: vec![0.0; max_sep],
+        }
+    }
+
+    fn send(&mut self, state: &mut TreeState, msg: Msg) -> f64 {
+        let jt = &self.jt;
+        let sep_meta = &jt.seps[msg.sep];
+        let sep_len = sep_meta.len;
+        let maps = &jt.edge_maps[msg.sep];
+        let from_map = maps.from(sep_meta, msg.from);
+        let to_map = maps.from(sep_meta, msg.to);
+
+        // element-wise marginalization: atomic scatter into new_sep
+        ops::zero(&mut self.new_sep[..sep_len]);
+        let src_len = jt.cliques[msg.from].len;
+        let chunks = chunk_ranges(src_len, self.min_chunk, self.max_chunks.max(self.threads));
+        {
+            let slots = ops::as_atomic(&mut self.new_sep[..sep_len]);
+            let src = &state.cliques[msg.from];
+            let chunks_ref = &chunks;
+            self.pool.parallel(chunks_ref.len(), &|_w, t| {
+                ops::atomic_marg_range(src, from_map, chunks_ref[t].clone(), slots);
+            });
+        }
+
+        // leader: scale + ratio + store
+        {
+            let new_sep = &mut self.new_sep[..sep_len];
+            let mass = ops::sum(new_sep);
+            if mass == 0.0 {
+                return 0.0;
+            }
+            ops::scale(new_sep, 1.0 / mass);
+            state.log_z += mass.ln();
+            let old = &mut state.seps[msg.sep];
+            ops::ratio(new_sep, old, &mut self.ratio[..sep_len]);
+            old.copy_from_slice(new_sep);
+        }
+
+        // element-wise extension
+        let dst_len = jt.cliques[msg.to].len;
+        let chunks = chunk_ranges(dst_len, self.min_chunk, self.max_chunks.max(self.threads));
+        {
+            let shared = SharedTables::new(state);
+            let ratio = &self.ratio[..sep_len];
+            let chunks_ref = &chunks;
+            self.pool.parallel(chunks_ref.len(), &|_w, t| {
+                // SAFETY: chunks of msg.to are disjoint.
+                let dst = unsafe { shared.clique_mut(msg.to) };
+                ops::extend_range(dst, to_map, chunks_ref[t].clone(), ratio);
+            });
+        }
+        1.0
+    }
+}
+
+impl Engine for ElementEngine {
+    fn name(&self) -> &'static str {
+        "Elem."
+    }
+
+    fn infer(&mut self, state: &mut TreeState, ev: &Evidence) -> Result<Posteriors> {
+        state.reset(&self.jt);
+        ev.apply(&self.jt, state);
+        let layers: Vec<Vec<Msg>> = self.sched.up_layers.clone();
+        for layer in &layers {
+            for &msg in layer {
+                if self.send(state, msg) == 0.0 {
+                    return Err(Error::InconsistentEvidence);
+                }
+            }
+        }
+        for root in self.sched.roots.clone() {
+            let data = &mut state.cliques[root];
+            let mass = ops::sum(data);
+            if mass == 0.0 {
+                return Err(Error::InconsistentEvidence);
+            }
+            ops::scale(data, 1.0 / mass);
+            state.log_z += mass.ln();
+        }
+        let z = state.log_z;
+        let layers: Vec<Vec<Msg>> = self.sched.down_layers.clone();
+        for layer in &layers {
+            for &msg in layer {
+                if self.send(state, msg) == 0.0 {
+                    return Err(Error::InconsistentEvidence);
+                }
+            }
+        }
+        state.log_z = z;
+        Posteriors::compute(&self.jt, state)
+    }
+
+    fn schedule(&self) -> &Schedule {
+        &self.sched
+    }
+
+    fn tree(&self) -> &Arc<JunctionTree> {
+        &self.jt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::engine::seq::SeqEngine;
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    #[test]
+    fn agrees_with_seq_on_random_cases() {
+        let net = embedded::mixed12();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cfg = EngineConfig { threads: 4, min_chunk: 4, ..Default::default() };
+        let mut elem = ElementEngine::new(Arc::clone(&jt), &cfg);
+        let mut seq = SeqEngine::new(Arc::clone(&jt), &cfg);
+        let mut s1 = TreeState::fresh(&jt);
+        let mut s2 = TreeState::fresh(&jt);
+        let cases = crate::infer::cases::generate(
+            &net,
+            &crate::infer::cases::CaseSpec { n_cases: 10, observed_fraction: 0.25, seed: 31 },
+        );
+        for (i, ev) in cases.iter().enumerate() {
+            let a = elem.infer(&mut s1, ev).unwrap();
+            let b = seq.infer(&mut s2, ev).unwrap();
+            assert!(a.max_abs_diff(&b) < 1e-9, "case {i}: diff {}", a.max_abs_diff(&b));
+        }
+    }
+
+    #[test]
+    fn detects_impossible_evidence() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let mut e = ElementEngine::new(Arc::clone(&jt), &EngineConfig::default().with_threads(2));
+        let mut state = TreeState::fresh(&jt);
+        let ev = Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        assert!(matches!(e.infer(&mut state, &ev), Err(Error::InconsistentEvidence)));
+    }
+}

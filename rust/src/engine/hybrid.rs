@@ -1,0 +1,436 @@
+//! **Fast-BNI-par** — the paper's contribution: hybrid inter-/intra-clique
+//! parallelism with flattened per-layer task pools.
+//!
+//! §2: *"At the beginning of each layer, all the potential table entries
+//! corresponding to this layer are packed to constitute one of the
+//! parallel tasks. The tasks are then distributed to the parallel threads
+//! to perform concurrently."*
+//!
+//! Per traversal layer the engine enters exactly four parallel regions,
+//! independent of how many messages the layer contains:
+//!
+//! * **A — flat marginalization**: every message's source-clique entries
+//!   are chunked and pooled together; a chunk scatters into its worker's
+//!   per-(message) partial buffer (zeroed lazily via generation stamps).
+//!   Large and small cliques coexist in one queue → load balance
+//!   (advantage i) with one region entry (advantage ii), regardless of
+//!   tree shape (advantage iii).
+//! * **B1 — flat partial reduction**: separator entries are chunked and
+//!   pooled; each chunk sums the (touched) worker partials, so one huge
+//!   separator cannot serialize the layer.
+//! * **B2 — separator finish**: per message, mass + scale (accumulating
+//!   `ln P(e)`), update ratio, store the new separator.
+//! * **C — flat extension**: receiving cliques' entries are chunked and
+//!   pooled; a chunk multiplies in the ratios of *all* messages aimed at
+//!   its clique in this layer (grouping by receiver keeps writes
+//!   disjoint).
+//!
+//! All plans (chunk lists, buffer offsets, receiver groups) depend only on
+//! the tree, so they are precomputed at construction and shared by every
+//! test case.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::engine::pool::{chunk_ranges, Pool};
+use crate::engine::share::{PerWorker, SharedTables};
+use crate::engine::{Engine, EngineConfig};
+use crate::infer::query::Posteriors;
+use crate::jt::evidence::Evidence;
+use crate::jt::ops;
+use crate::jt::schedule::{Msg, Schedule};
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::{Error, Result};
+
+/// Precomputed flat plan for one traversal layer.
+struct LayerPlan {
+    /// Messages of this layer.
+    msgs: Vec<Msg>,
+    /// Offset of each message's separator in the layer's ratio/partial
+    /// buffers.
+    sep_off: Vec<usize>,
+    /// Total separator entries of the layer.
+    sep_total: usize,
+    /// Region-A tasks: (message index, source-clique entry range).
+    marg_tasks: Vec<(usize, Range<usize>)>,
+    /// Region-B1 tasks: (message index, separator entry range) — the
+    /// partial reduction is itself flattened, so one huge separator does
+    /// not serialize the layer (§Perf item 3 in EXPERIMENTS.md).
+    reduce_tasks: Vec<(usize, Range<usize>)>,
+    /// Receiver groups: (receiving clique, message indices into it).
+    groups: Vec<(usize, Vec<usize>)>,
+    /// Region-C tasks: (group index, receiver-clique entry range).
+    ext_tasks: Vec<(usize, Range<usize>)>,
+}
+
+impl LayerPlan {
+    fn build(jt: &JunctionTree, layer: &[Msg], min_chunk: usize, max_chunks: usize) -> Self {
+        let msgs = layer.to_vec();
+        let mut sep_off = Vec::with_capacity(msgs.len());
+        let mut sep_total = 0usize;
+        for m in &msgs {
+            sep_off.push(sep_total);
+            sep_total += jt.seps[m.sep].len;
+        }
+        // region A: flatten all source entries
+        let mut marg_tasks = Vec::new();
+        for (mi, m) in msgs.iter().enumerate() {
+            for r in chunk_ranges(jt.cliques[m.from].len, min_chunk, max_chunks) {
+                marg_tasks.push((mi, r));
+            }
+        }
+        // region B1: flatten all separator entries
+        let mut reduce_tasks = Vec::new();
+        for (mi, m) in msgs.iter().enumerate() {
+            for r in chunk_ranges(jt.seps[m.sep].len, min_chunk.min(1 << 12), max_chunks) {
+                reduce_tasks.push((mi, r));
+            }
+        }
+        // receiver groups (a parent may receive several messages per layer)
+        let mut by_to: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+        for (mi, m) in msgs.iter().enumerate() {
+            by_to.entry(m.to).or_default().push(mi);
+        }
+        let groups: Vec<(usize, Vec<usize>)> = by_to.into_iter().collect();
+        // region C: flatten all receiver entries
+        let mut ext_tasks = Vec::new();
+        for (gi, (to, _)) in groups.iter().enumerate() {
+            for r in chunk_ranges(jt.cliques[*to].len, min_chunk, max_chunks) {
+                ext_tasks.push((gi, r));
+            }
+        }
+        LayerPlan { msgs, sep_off, sep_total, marg_tasks, reduce_tasks, groups, ext_tasks }
+    }
+}
+
+/// Per-worker region-A scratch: the partial separator buffer plus one
+/// generation stamp per message. A worker zeroes its slice for message
+/// `mi` lazily on first touch of the current generation, and region B
+/// reduces only stamped (actually touched) workers — so partial-buffer
+/// traffic scales with the work done, not with `threads × sep_total`
+/// (§Perf item 2 in EXPERIMENTS.md).
+struct Partial {
+    buf: Vec<f64>,
+    stamps: Vec<u64>,
+}
+
+/// The hybrid Fast-BNI-par engine (see module docs).
+pub struct HybridEngine {
+    jt: Arc<JunctionTree>,
+    sched: Schedule,
+    pool: Pool,
+    threads: usize,
+    up_plans: Vec<LayerPlan>,
+    down_plans: Vec<LayerPlan>,
+    /// Per-worker partial buffers with lazy-zero stamps.
+    partials: PerWorker<Partial>,
+    /// Layer-wide ratio buffer.
+    ratio: Vec<f64>,
+    /// Per-worker `ln`-mass accumulators for region B.
+    log_z: PerWorker<f64>,
+    /// Current stamp generation (bumped per layer execution).
+    generation: u64,
+}
+
+impl HybridEngine {
+    /// Build for a tree; all layer plans are precomputed here.
+    pub fn new(jt: Arc<JunctionTree>, cfg: &EngineConfig) -> Self {
+        let sched = Schedule::build(&jt, cfg.root_strategy);
+        let threads = cfg.resolved_threads();
+        let pool = Pool::new(threads);
+        let up_plans: Vec<LayerPlan> =
+            sched.up_layers.iter().map(|l| LayerPlan::build(&jt, l, cfg.min_chunk, cfg.max_chunks)).collect();
+        let down_plans: Vec<LayerPlan> =
+            sched.down_layers.iter().map(|l| LayerPlan::build(&jt, l, cfg.min_chunk, cfg.max_chunks)).collect();
+        let max_sep_total =
+            up_plans.iter().chain(&down_plans).map(|p| p.sep_total).max().unwrap_or(1).max(1);
+        let max_msgs =
+            up_plans.iter().chain(&down_plans).map(|p| p.msgs.len()).max().unwrap_or(1).max(1);
+        let partials =
+            PerWorker::new(threads, |_| Partial { buf: vec![0.0; max_sep_total], stamps: vec![0; max_msgs] });
+        let ratio = vec![0.0; max_sep_total];
+        let log_z = PerWorker::new(threads, |_| 0.0);
+        HybridEngine { jt, sched, pool, threads, up_plans, down_plans, partials, ratio, log_z, generation: 0 }
+    }
+
+    /// Run one layer: regions A, B, C.
+    fn run_layer(&mut self, state: &mut TreeState, up: bool, li: usize) -> Result<()> {
+        let plan = if up { &self.up_plans[li] } else { &self.down_plans[li] };
+        let jt = &self.jt;
+        let sep_total = plan.sep_total;
+        if plan.msgs.is_empty() {
+            return Ok(());
+        }
+
+        // region A: flat marginalization into per-worker partials.
+        // Slices are zeroed lazily on first touch per (worker, message)
+        // via generation stamps — no O(threads × sep_total) memset.
+        self.generation += 1;
+        let generation = self.generation;
+        {
+            let shared = SharedTables::new(state);
+            let partials = &self.partials;
+            self.pool.parallel(plan.marg_tasks.len(), &|w, t| {
+                let (mi, ref range) = plan.marg_tasks[t];
+                let m = plan.msgs[mi];
+                let sep_meta = &jt.seps[m.sep];
+                let rm = jt.edge_maps[m.sep].runs_from(sep_meta, m.from);
+                // SAFETY: sources are read-only in region A; worker w owns
+                // its partial slot.
+                let src = unsafe { shared.clique(m.from) };
+                let partial = unsafe { partials.get(w) };
+                let off = plan.sep_off[mi];
+                let slice = &mut partial.buf[off..off + sep_meta.len];
+                if partial.stamps[mi] != generation {
+                    partial.stamps[mi] = generation;
+                    ops::zero(slice);
+                }
+                ops::marg_runs_range(src, rm, range.clone(), slice);
+            });
+        }
+
+        // region B1: flat partial reduction — separator entry chunks, so a
+        // single huge separator never serializes the layer
+        {
+            let partials = &self.partials;
+            let ratio_buf = ops::as_atomic(&mut self.ratio[..sep_total]);
+            let n_workers = self.threads;
+            self.pool.parallel(plan.reduce_tasks.len(), &|_w, t| {
+                let (mi, ref range) = plan.reduce_tasks[t];
+                let off = plan.sep_off[mi];
+                // SAFETY: tasks of one message cover disjoint sub-ranges of
+                // [off, off+len); tasks of different messages are disjoint
+                // by construction.
+                let slice = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        ratio_buf.as_ptr().add(off + range.start) as *mut f64,
+                        range.len(),
+                    )
+                };
+                for x in slice.iter_mut() {
+                    *x = 0.0;
+                }
+                for wk in 0..n_workers {
+                    // SAFETY: region A is complete; partial reads race-free.
+                    let partial = unsafe { partials.get(wk) };
+                    if partial.stamps[mi] != generation {
+                        continue;
+                    }
+                    let p = &partial.buf[off + range.start..off + range.end];
+                    for (d, &x) in slice.iter_mut().zip(p) {
+                        *d += x;
+                    }
+                }
+            });
+        }
+
+        // region B2: per-message finish (mass, scale, ratio, store)
+        let failed = AtomicBool::new(false);
+        {
+            let shared = SharedTables::new(state);
+            let log_z = &self.log_z;
+            let ratio_buf = ops::as_atomic(&mut self.ratio[..sep_total]);
+            self.pool.parallel(plan.msgs.len(), &|w, mi| {
+                let m = plan.msgs[mi];
+                let sep_meta = &jt.seps[m.sep];
+                let off = plan.sep_off[mi];
+                let len = sep_meta.len;
+                // SAFETY: message mi owns [off, off+len) of the ratio
+                // buffer and its separator table exclusively.
+                let ratio_slice = unsafe {
+                    std::slice::from_raw_parts_mut(ratio_buf.as_ptr().add(off) as *mut f64, len)
+                };
+                let mass = ops::sum(ratio_slice);
+                if mass == 0.0 {
+                    failed.store(true, Ordering::Relaxed);
+                    return;
+                }
+                ops::scale(ratio_slice, 1.0 / mass);
+                // SAFETY: worker w owns its log_z slot.
+                unsafe {
+                    *log_z.get(w) += mass.ln();
+                }
+                // store new separator, convert slice to ratio in place
+                let sep_tab = unsafe { shared.sep_mut(m.sep) };
+                for j in 0..len {
+                    let new = ratio_slice[j];
+                    let old = sep_tab[j];
+                    sep_tab[j] = new;
+                    ratio_slice[j] = if old != 0.0 { new / old } else { 0.0 };
+                }
+            });
+        }
+        for w in self.log_z.iter_mut() {
+            state.log_z += *w;
+            *w = 0.0;
+        }
+        if failed.load(Ordering::Relaxed) {
+            return Err(Error::InconsistentEvidence);
+        }
+
+        // region C: flat extension grouped by receiver
+        {
+            let shared = SharedTables::new(state);
+            let ratio = &self.ratio;
+            self.pool.parallel(plan.ext_tasks.len(), &|_w, t| {
+                let (gi, ref range) = plan.ext_tasks[t];
+                let (to, ref mis) = plan.groups[gi];
+                // SAFETY: groups have distinct receivers; ranges of one
+                // receiver are disjoint.
+                let dst = unsafe { shared.clique_mut(to) };
+                for &mi in mis {
+                    let m = plan.msgs[mi];
+                    let sep_meta = &jt.seps[m.sep];
+                    let rm = jt.edge_maps[m.sep].runs_from(sep_meta, m.to);
+                    let off = plan.sep_off[mi];
+                    ops::extend_runs_range(dst, rm, range.clone(), &ratio[off..off + sep_meta.len]);
+                }
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Engine for HybridEngine {
+    fn name(&self) -> &'static str {
+        "Fast-BNI-par"
+    }
+
+    fn infer(&mut self, state: &mut TreeState, ev: &Evidence) -> Result<Posteriors> {
+        state.reset(&self.jt);
+        ev.apply(&self.jt, state);
+        for li in 0..self.up_plans.len() {
+            self.run_layer(state, true, li)?;
+        }
+        for root in self.sched.roots.clone() {
+            let data = &mut state.cliques[root];
+            let mass = ops::sum(data);
+            if mass == 0.0 {
+                return Err(Error::InconsistentEvidence);
+            }
+            ops::scale(data, 1.0 / mass);
+            state.log_z += mass.ln();
+        }
+        let z = state.log_z;
+        for li in 0..self.down_plans.len() {
+            self.run_layer(state, false, li)?;
+        }
+        state.log_z = z;
+        Posteriors::compute(&self.jt, state)
+    }
+
+    fn schedule(&self) -> &Schedule {
+        &self.sched
+    }
+
+    fn tree(&self) -> &Arc<JunctionTree> {
+        &self.jt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::{embedded, netgen};
+    use crate::engine::seq::SeqEngine;
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    #[test]
+    fn plans_cover_all_entries_exactly_once() {
+        let net = embedded::mixed12();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cfg = EngineConfig { threads: 4, min_chunk: 4, ..Default::default() };
+        let e = HybridEngine::new(Arc::clone(&jt), &cfg);
+        for plan in e.up_plans.iter().chain(&e.down_plans) {
+            // per message, region A ranges must tile the source clique
+            for (mi, m) in plan.msgs.iter().enumerate() {
+                let mut covered = vec![false; jt.cliques[m.from].len];
+                for (tmi, r) in &plan.marg_tasks {
+                    if *tmi == mi {
+                        for i in r.clone() {
+                            assert!(!covered[i], "entry {i} covered twice");
+                            covered[i] = true;
+                        }
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "message {mi} incompletely covered");
+            }
+            // groups: receivers distinct, messages partitioned
+            let mut seen_to = std::collections::HashSet::new();
+            let mut seen_mi = std::collections::HashSet::new();
+            for (to, mis) in &plan.groups {
+                assert!(seen_to.insert(*to));
+                for mi in mis {
+                    assert!(seen_mi.insert(*mi));
+                }
+            }
+            assert_eq!(seen_mi.len(), plan.msgs.len());
+        }
+    }
+
+    #[test]
+    fn agrees_with_seq_on_random_cases() {
+        let net = embedded::mixed12();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cfg = EngineConfig { threads: 4, min_chunk: 4, ..Default::default() };
+        let mut hyb = HybridEngine::new(Arc::clone(&jt), &cfg);
+        let mut seq = SeqEngine::new(Arc::clone(&jt), &cfg);
+        let mut s1 = TreeState::fresh(&jt);
+        let mut s2 = TreeState::fresh(&jt);
+        let cases = crate::infer::cases::generate(
+            &net,
+            &crate::infer::cases::CaseSpec { n_cases: 20, observed_fraction: 0.25, seed: 41 },
+        );
+        for (i, ev) in cases.iter().enumerate() {
+            let a = hyb.infer(&mut s1, ev).unwrap();
+            let b = seq.infer(&mut s2, ev).unwrap();
+            assert!(a.max_abs_diff(&b) < 1e-9, "case {i}: diff {}", a.max_abs_diff(&b));
+        }
+    }
+
+    #[test]
+    fn agrees_with_seq_on_a_larger_generated_network() {
+        let net = netgen::NetSpec {
+            name: "hyb-test".into(),
+            nodes: 80,
+            arcs: 110,
+            max_parents: 3,
+            card_choices: vec![(2, 0.6), (3, 0.25), (4, 0.15)],
+            locality: 10,
+            max_table: 1 << 12,
+            alpha: 1.0,
+            seed: 77,
+        }
+        .generate();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cfg = EngineConfig { threads: 8, min_chunk: 16, ..Default::default() };
+        let mut hyb = HybridEngine::new(Arc::clone(&jt), &cfg);
+        let mut seq = SeqEngine::new(Arc::clone(&jt), &cfg);
+        let mut s1 = TreeState::fresh(&jt);
+        let mut s2 = TreeState::fresh(&jt);
+        let cases = crate::infer::cases::generate(
+            &net,
+            &crate::infer::cases::CaseSpec { n_cases: 5, observed_fraction: 0.2, seed: 43 },
+        );
+        for (i, ev) in cases.iter().enumerate() {
+            let a = hyb.infer(&mut s1, ev).unwrap();
+            let b = seq.infer(&mut s2, ev).unwrap();
+            assert!(a.max_abs_diff(&b) < 1e-9, "case {i}: diff {}", a.max_abs_diff(&b));
+        }
+    }
+
+    #[test]
+    fn detects_impossible_evidence_and_recovers() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let mut e = HybridEngine::new(Arc::clone(&jt), &EngineConfig::default().with_threads(2));
+        let mut state = TreeState::fresh(&jt);
+        let bad = Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        assert!(matches!(e.infer(&mut state, &bad), Err(Error::InconsistentEvidence)));
+        let ok = Evidence::from_pairs(&net, &[("smoke", "no")]).unwrap();
+        let post = e.infer(&mut state, &ok).unwrap();
+        assert!((post.evidence_probability() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,219 @@
+//! The six propagation engines of the paper's Table 1.
+//!
+//! | Engine | Paper column | Strategy |
+//! |---|---|---|
+//! | [`unb::UnbEngine`] | UnBBayes | sequential, naive: per-entry div/mod index mapping recomputed per message, per-message allocation |
+//! | [`seq::SeqEngine`] | Fast-BNI-seq | sequential, cached index maps, zero per-case allocation |
+//! | [`direct::DirectEngine`] | Dir. (Kozlov & Singh '94) | coarse inter-clique: one task per receiving clique per layer |
+//! | [`primitive::PrimitiveEngine`] | Prim. (Xia & Prasanna '07) | fine intra-clique: each table operation is its own parallel region |
+//! | [`element::ElementEngine`] | Elem. (Zheng '13) | fine element-wise: GPU-style atomic scatter per message |
+//! | [`hybrid::HybridEngine`] | Fast-BNI-par | **the contribution**: per layer, all table entries of all messages flattened into one task pool |
+//!
+//! All engines share the substrate (tree, maps, kernels) so measured
+//! differences isolate the parallelization strategy, mirroring the
+//! paper's comparison.
+
+pub mod direct;
+pub mod element;
+pub mod hybrid;
+pub mod pool;
+pub mod primitive;
+pub mod seq;
+pub mod share;
+pub mod simulate;
+pub mod unb;
+
+use std::sync::Arc;
+
+use crate::infer::query::Posteriors;
+use crate::jt::evidence::Evidence;
+use crate::jt::propagate::MapMode;
+use crate::jt::schedule::{RootStrategy, Schedule};
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::Result;
+
+/// A calibrated-inference engine: given evidence, produce all posteriors.
+///
+/// Not `Send`: the XLA-backed engine holds PJRT handles that are
+/// thread-affine. Multi-threaded consumers (the batch coordinator, the
+/// server) construct one engine *inside* each worker thread instead of
+/// moving engines across threads.
+pub trait Engine {
+    /// Engine name as used in reports (matches Table 1 labels).
+    fn name(&self) -> &'static str;
+
+    /// Run one case: reset `state`, absorb `ev`, calibrate, extract
+    /// posteriors. `state` must come from the same tree the engine was
+    /// built for.
+    fn infer(&mut self, state: &mut TreeState, ev: &Evidence) -> Result<Posteriors>;
+
+    /// The traversal schedule in use (for layer-count reporting).
+    fn schedule(&self) -> &Schedule;
+
+    /// The tree this engine runs on.
+    fn tree(&self) -> &Arc<JunctionTree>;
+}
+
+/// Engine-construction parameters.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Worker threads (including the calling thread). 0 = all cores.
+    pub threads: usize,
+    /// Root selection (paper default: tree center).
+    pub root_strategy: RootStrategy,
+    /// Index-mapping strategy for the sequential engine (ablation knob).
+    pub map_mode: MapMode,
+    /// Minimum table entries per flattened task (hybrid/primitive);
+    /// balances stealing overhead against load balance.
+    pub min_chunk: usize,
+    /// Maximum chunks a single table is split into.
+    pub max_chunks: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            threads: 0,
+            root_strategy: RootStrategy::Center,
+            map_mode: MapMode::Cached,
+            min_chunk: 1 << 11,
+            max_chunks: 256,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Resolved thread count (0 → available parallelism).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+
+    /// Copy with a specific thread count.
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t;
+        self
+    }
+}
+
+/// The engine selector (Table 1 columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// UnBBayes-style naive sequential baseline.
+    Unb,
+    /// Fast-BNI-seq.
+    Seq,
+    /// Direct inter-clique parallelism (Kozlov & Singh).
+    Direct,
+    /// Node-level primitives (Xia & Prasanna).
+    Primitive,
+    /// Element-wise parallelism (Zheng).
+    Element,
+    /// Fast-BNI-par hybrid parallelism (the paper's contribution).
+    Hybrid,
+}
+
+impl EngineKind {
+    /// All kinds in Table-1 column order.
+    pub const ALL: [EngineKind; 6] = [
+        EngineKind::Unb,
+        EngineKind::Seq,
+        EngineKind::Direct,
+        EngineKind::Primitive,
+        EngineKind::Element,
+        EngineKind::Hybrid,
+    ];
+
+    /// The parallel kinds compared in the "Parallel implementation" half
+    /// of Table 1.
+    pub const PARALLEL: [EngineKind; 4] =
+        [EngineKind::Direct, EngineKind::Primitive, EngineKind::Element, EngineKind::Hybrid];
+
+    /// Construct the engine.
+    pub fn build(&self, jt: Arc<JunctionTree>, cfg: &EngineConfig) -> Box<dyn Engine> {
+        match self {
+            EngineKind::Unb => Box::new(unb::UnbEngine::new(jt, cfg)),
+            EngineKind::Seq => Box::new(seq::SeqEngine::new(jt, cfg)),
+            EngineKind::Direct => Box::new(direct::DirectEngine::new(jt, cfg)),
+            EngineKind::Primitive => Box::new(primitive::PrimitiveEngine::new(jt, cfg)),
+            EngineKind::Element => Box::new(element::ElementEngine::new(jt, cfg)),
+            EngineKind::Hybrid => Box::new(hybrid::HybridEngine::new(jt, cfg)),
+        }
+    }
+
+    /// Paper label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Unb => "UnBBayes",
+            EngineKind::Seq => "Fast-BNI-seq",
+            EngineKind::Direct => "Dir.",
+            EngineKind::Primitive => "Prim.",
+            EngineKind::Element => "Elem.",
+            EngineKind::Hybrid => "Fast-BNI-par",
+        }
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = crate::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "unb" | "unbbayes" => Ok(EngineKind::Unb),
+            "seq" | "fast-bni-seq" => Ok(EngineKind::Seq),
+            "direct" | "dir" => Ok(EngineKind::Direct),
+            "primitive" | "prim" => Ok(EngineKind::Primitive),
+            "element" | "elem" => Ok(EngineKind::Element),
+            "hybrid" | "par" | "fast-bni-par" => Ok(EngineKind::Hybrid),
+            other => Err(crate::Error::msg(format!("unknown engine {other:?}"))),
+        }
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    #[test]
+    fn kind_parsing_and_labels() {
+        assert_eq!("hybrid".parse::<EngineKind>().unwrap(), EngineKind::Hybrid);
+        assert_eq!("Prim".parse::<EngineKind>().unwrap(), EngineKind::Primitive);
+        assert!("warp".parse::<EngineKind>().is_err());
+        assert_eq!(EngineKind::Hybrid.label(), "Fast-BNI-par");
+        assert_eq!(format!("{}", EngineKind::Unb), "UnBBayes");
+    }
+
+    #[test]
+    fn all_kinds_build_and_infer() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cfg = EngineConfig { threads: 2, ..Default::default() };
+        let ev = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+        for kind in EngineKind::ALL {
+            let mut engine = kind.build(Arc::clone(&jt), &cfg);
+            let mut state = TreeState::fresh(&jt);
+            let post = engine.infer(&mut state, &ev).unwrap();
+            let lung = post.marginal(&net, "lung").unwrap();
+            assert!((lung[0] - 0.1).abs() < 1e-9, "{kind}: P(lung|smoke)={}", lung[0]);
+            assert!((post.evidence_probability() - 0.5).abs() < 1e-9, "{kind}");
+        }
+    }
+
+    #[test]
+    fn config_thread_resolution() {
+        let c = EngineConfig::default();
+        assert!(c.resolved_threads() >= 1);
+        assert_eq!(c.with_threads(3).resolved_threads(), 3);
+    }
+}

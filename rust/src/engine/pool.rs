@@ -1,0 +1,307 @@
+//! Persistent worker pool with a flat, dynamically-stolen task queue.
+//!
+//! The paper's hybrid parallelism claims *"smaller parallelization
+//! overhead"* because it enters one parallel region per layer instead of
+//! one per table operation. That only matters if entering a region is
+//! cheap: spawning OS threads per region (≈10–20 µs each) would drown the
+//! small layers. This pool keeps `threads − 1` workers parked on a
+//! condvar; publishing a job is one mutex lock + notify, and tasks are
+//! claimed with a single `fetch_add` (dynamic self-scheduling, the OpenMP
+//! `schedule(dynamic)` analog the paper's implementations use).
+//!
+//! The leader participates in the work, so `Pool::new(1)` degrades to a
+//! plain inline loop with zero synchronization.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased job: `(worker_id, task_index)` callback plus the shared
+/// task counter. The raw pointer erases the borrow lifetime; safety comes
+/// from `parallel()` not returning until every worker is done with it.
+struct Job {
+    /// Borrowed closure, valid for the duration of the `parallel()` call.
+    f: *const (dyn Fn(usize, usize) + Sync),
+    /// Next task index to claim.
+    next: Arc<AtomicUsize>,
+    /// Total tasks.
+    n_tasks: usize,
+}
+
+unsafe impl Send for Job {}
+
+struct Slot {
+    /// Monotone generation counter; bumped per published job.
+    generation: u64,
+    /// Current job, if a generation is active.
+    job: Option<Job>,
+    /// Workers still running the current generation.
+    active: usize,
+    /// Pool is shutting down.
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Workers wait here for a new generation.
+    work_cv: Condvar,
+    /// The leader waits here for `active == 0`.
+    done_cv: Condvar,
+}
+
+/// A persistent thread pool running flat task queues.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Pool {
+    /// Create a pool that runs jobs on `threads` threads total (the
+    /// calling thread counts as one; `threads - 1` workers are spawned).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot { generation: 0, job: None, active: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|wid| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("fastbn-worker-{wid}"))
+                    .spawn(move || worker_loop(shared, wid))
+                    .expect("failed to spawn worker thread")
+            })
+            .collect();
+        Pool { shared, workers, threads }
+    }
+
+    /// Number of threads participating in `parallel` (including the
+    /// leader).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(worker_id, task)` for every `task in 0..n_tasks`, dynamically
+    /// load-balanced across all threads. Returns when all tasks finished.
+    /// `worker_id` is in `0..threads()` (leader = 0) and is stable within a
+    /// call — tasks may use it to index per-worker scratch without locking.
+    pub fn parallel(&self, n_tasks: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        if self.threads == 1 || n_tasks == 1 {
+            for t in 0..n_tasks {
+                f(0, t);
+            }
+            return;
+        }
+        let next = Arc::new(AtomicUsize::new(0));
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            debug_assert!(slot.job.is_none(), "parallel() is not reentrant");
+            slot.generation += 1;
+            slot.active = self.workers.len();
+            slot.job = Some(Job {
+                // SAFETY: we block below until `active == 0`, so the borrow
+                // outlives every worker's use of the pointer. The transmute
+                // only erases the lifetime, not the type.
+                f: unsafe {
+                    std::mem::transmute::<&(dyn Fn(usize, usize) + Sync), &'static (dyn Fn(usize, usize) + Sync)>(f)
+                        as *const _
+                },
+                next: Arc::clone(&next),
+                n_tasks,
+            });
+            self.shared.work_cv.notify_all();
+        }
+        // Leader works too (worker id 0).
+        loop {
+            let t = next.fetch_add(1, Ordering::Relaxed);
+            if t >= n_tasks {
+                break;
+            }
+            f(0, t);
+        }
+        // Wait for the workers to drain the queue.
+        let mut slot = self.shared.slot.lock().unwrap();
+        while slot.active > 0 {
+            slot = self.shared.done_cv.wait(slot).unwrap();
+        }
+        slot.job = None;
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, wid: usize) {
+    let mut last_gen = 0u64;
+    loop {
+        // wait for a new generation (or shutdown)
+        let (f, next, n_tasks) = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.generation != last_gen {
+                    if let Some(job) = &slot.job {
+                        last_gen = slot.generation;
+                        break (job.f, Arc::clone(&job.next), job.n_tasks);
+                    }
+                }
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        };
+        // SAFETY: the leader blocks in `parallel()` until we decrement
+        // `active`, so `f` is alive for the whole claim loop.
+        let f = unsafe { &*f };
+        loop {
+            let t = next.fetch_add(1, Ordering::Relaxed);
+            if t >= n_tasks {
+                break;
+            }
+            f(wid, t);
+        }
+        let mut slot = shared.slot.lock().unwrap();
+        slot.active -= 1;
+        if slot.active == 0 {
+            shared.done_cv.notify_one();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Split `0..len` into at most `max_chunks` contiguous ranges of at least
+/// `min_chunk` elements — the flattening helper engines use to turn table
+/// entries into tasks.
+pub fn chunk_ranges(len: usize, min_chunk: usize, max_chunks: usize) -> Vec<std::ops::Range<usize>> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let min_chunk = min_chunk.max(1);
+    let n_chunks = (len / min_chunk).clamp(1, max_chunks.max(1));
+    let base = len / n_chunks;
+    let rem = len % n_chunks;
+    let mut out = Vec::with_capacity(n_chunks);
+    let mut start = 0usize;
+    for i in 0..n_chunks {
+        let sz = base + usize::from(i < rem);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    debug_assert_eq!(start, len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn all_tasks_run_exactly_once() {
+        let pool = Pool::new(4);
+        let n = 1000;
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel(n, &|_w, t| {
+            counts[t].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let counter = AtomicUsize::new(0);
+        pool.parallel(17, &|w, _t| {
+            assert_eq!(w, 0);
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 17);
+    }
+
+    #[test]
+    fn worker_ids_stay_in_range() {
+        let pool = Pool::new(3);
+        let seen = Mutex::new(std::collections::HashSet::new());
+        pool.parallel(200, &|w, _t| {
+            assert!(w < 3);
+            seen.lock().unwrap().insert(w);
+        });
+        // at least the leader participated
+        assert!(seen.lock().unwrap().contains(&0));
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_workers() {
+        let pool = Pool::new(4);
+        for round in 0..50 {
+            let total = AtomicUsize::new(0);
+            pool.parallel(100, &|_w, t| {
+                total.fetch_add(t, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), 4950, "round {round}");
+        }
+    }
+
+    #[test]
+    fn zero_tasks_is_a_noop() {
+        let pool = Pool::new(2);
+        pool.parallel(0, &|_w, _t| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let pool = Pool::new(8);
+        let data: Vec<f64> = (0..10_000).map(|i| i as f64).collect();
+        let partials: Vec<Mutex<f64>> = (0..8).map(|_| Mutex::new(0.0)).collect();
+        let chunks = chunk_ranges(data.len(), 64, 100);
+        let chunks_ref = &chunks;
+        let data_ref = &data;
+        pool.parallel(chunks.len(), &|w, t| {
+            let s: f64 = data_ref[chunks_ref[t].clone()].iter().sum();
+            *partials[w].lock().unwrap() += s;
+        });
+        let total: f64 = partials.iter().map(|p| *p.lock().unwrap()).sum();
+        assert_eq!(total, 49_995_000.0);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (len, min, maxc) in [(0usize, 1usize, 4usize), (10, 3, 4), (100, 7, 3), (5, 100, 8), (64, 1, 64)] {
+            let ranges = chunk_ranges(len, min, maxc);
+            let mut covered = 0usize;
+            let mut expect_start = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, expect_start);
+                covered += r.len();
+                expect_start = r.end;
+            }
+            assert_eq!(covered, len, "len={len} min={min} maxc={maxc}");
+            if len > 0 {
+                assert!(ranges.len() <= maxc);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = Pool::new(4);
+        pool.parallel(10, &|_w, _t| {});
+        drop(pool); // must not hang
+    }
+}

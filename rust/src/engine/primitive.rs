@@ -1,0 +1,209 @@
+//! **Node-level primitives** — the Xia & Prasanna '07 baseline (Table 1
+//! column "Prim.").
+//!
+//! Messages are processed one at a time (sequentially), but each potential
+//! table *operation* is parallelized as its own primitive: a parallel
+//! marginalization (entry chunks scattering into per-worker partial
+//! buffers, then a reduction), followed by a parallel extension. Every
+//! message therefore pays two parallel-region entries plus a partial-buffer
+//! zeroing — the "large parallelization overhead since the table
+//! operations are invoked frequently" the paper criticizes, and the effect
+//! `benches/table1.rs` shows on trees with many small cliques.
+
+use std::sync::Arc;
+
+use crate::engine::pool::{chunk_ranges, Pool};
+use crate::engine::share::{PerWorker, SharedTables};
+use crate::engine::{Engine, EngineConfig};
+use crate::infer::query::Posteriors;
+use crate::jt::evidence::Evidence;
+use crate::jt::ops;
+use crate::jt::schedule::{Msg, Schedule};
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::{Error, Result};
+
+/// Node-level-primitive engine (see module docs).
+pub struct PrimitiveEngine {
+    jt: Arc<JunctionTree>,
+    sched: Schedule,
+    pool: Pool,
+    threads: usize,
+    min_chunk: usize,
+    max_chunks: usize,
+    /// Per-worker partial separator buffers (max sep len each).
+    partials: PerWorker<Vec<f64>>,
+    /// Leader buffers for the reduced message and the update ratio.
+    new_sep: Vec<f64>,
+    ratio: Vec<f64>,
+}
+
+impl PrimitiveEngine {
+    /// Build for a tree.
+    pub fn new(jt: Arc<JunctionTree>, cfg: &EngineConfig) -> Self {
+        let sched = Schedule::build(&jt, cfg.root_strategy);
+        let threads = cfg.resolved_threads();
+        let pool = Pool::new(threads);
+        let max_sep = jt.seps.iter().map(|s| s.len).max().unwrap_or(1);
+        let partials = PerWorker::new(threads, |_| vec![0.0; max_sep]);
+        PrimitiveEngine {
+            jt,
+            sched,
+            pool,
+            threads,
+            min_chunk: cfg.min_chunk,
+            max_chunks: cfg.max_chunks,
+            partials,
+            new_sep: vec![0.0; max_sep],
+            ratio: vec![0.0; max_sep],
+        }
+    }
+
+    /// One message with per-operation parallel primitives.
+    fn send(&mut self, state: &mut TreeState, msg: Msg) -> f64 {
+        let jt = &self.jt;
+        let sep_meta = &jt.seps[msg.sep];
+        let sep_len = sep_meta.len;
+        let maps = &jt.edge_maps[msg.sep];
+        let from_map = maps.from(sep_meta, msg.from);
+        let to_map = maps.from(sep_meta, msg.to);
+
+        // primitive 1: parallel marginalization into per-worker partials
+        for p in self.partials.iter_mut() {
+            ops::zero(&mut p[..sep_len]);
+        }
+        let src_len = jt.cliques[msg.from].len;
+        let chunks = chunk_ranges(src_len, self.min_chunk, self.max_chunks.max(self.threads));
+        {
+            let src = &state.cliques[msg.from];
+            let partials = &self.partials;
+            let chunks_ref = &chunks;
+            self.pool.parallel(chunks_ref.len(), &|w, t| {
+                // SAFETY: worker w owns its partial slot.
+                let partial = unsafe { partials.get(w) };
+                ops::marg_range(src, from_map, chunks_ref[t].clone(), &mut partial[..sep_len]);
+            });
+        }
+
+        // primitive 2 (leader): reduce partials, scale, ratio
+        {
+            let new_sep = &mut self.new_sep[..sep_len];
+            ops::zero(new_sep);
+            for p in self.partials.iter_mut() {
+                for (d, &x) in new_sep.iter_mut().zip(&p[..sep_len]) {
+                    *d += x;
+                }
+            }
+            let mass = ops::sum(new_sep);
+            if mass == 0.0 {
+                return 0.0;
+            }
+            ops::scale(new_sep, 1.0 / mass);
+            state.log_z += mass.ln();
+            let old = &mut state.seps[msg.sep];
+            ops::ratio(new_sep, old, &mut self.ratio[..sep_len]);
+            old.copy_from_slice(new_sep);
+        }
+
+        // primitive 3: parallel extension of the receiving clique
+        let dst_len = jt.cliques[msg.to].len;
+        let chunks = chunk_ranges(dst_len, self.min_chunk, self.max_chunks.max(self.threads));
+        {
+            let shared = SharedTables::new(state);
+            let ratio = &self.ratio[..sep_len];
+            let chunks_ref = &chunks;
+            self.pool.parallel(chunks_ref.len(), &|_w, t| {
+                // SAFETY: chunks of msg.to are disjoint.
+                let dst = unsafe { shared.clique_mut(msg.to) };
+                ops::extend_range(dst, to_map, chunks_ref[t].clone(), ratio);
+            });
+        }
+        1.0
+    }
+}
+
+impl Engine for PrimitiveEngine {
+    fn name(&self) -> &'static str {
+        "Prim."
+    }
+
+    fn infer(&mut self, state: &mut TreeState, ev: &Evidence) -> Result<Posteriors> {
+        state.reset(&self.jt);
+        ev.apply(&self.jt, state);
+        let layers: Vec<Vec<Msg>> = self.sched.up_layers.clone();
+        for layer in &layers {
+            for &msg in layer {
+                if self.send(state, msg) == 0.0 {
+                    return Err(Error::InconsistentEvidence);
+                }
+            }
+        }
+        for root in self.sched.roots.clone() {
+            let data = &mut state.cliques[root];
+            let mass = ops::sum(data);
+            if mass == 0.0 {
+                return Err(Error::InconsistentEvidence);
+            }
+            ops::scale(data, 1.0 / mass);
+            state.log_z += mass.ln();
+        }
+        let z = state.log_z;
+        let layers: Vec<Vec<Msg>> = self.sched.down_layers.clone();
+        for layer in &layers {
+            for &msg in layer {
+                if self.send(state, msg) == 0.0 {
+                    return Err(Error::InconsistentEvidence);
+                }
+            }
+        }
+        state.log_z = z;
+        Posteriors::compute(&self.jt, state)
+    }
+
+    fn schedule(&self) -> &Schedule {
+        &self.sched
+    }
+
+    fn tree(&self) -> &Arc<JunctionTree> {
+        &self.jt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::engine::seq::SeqEngine;
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    #[test]
+    fn agrees_with_seq_on_random_cases() {
+        let net = embedded::mixed12();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        // tiny chunks force real multi-chunk parallelism on small tables
+        let cfg = EngineConfig { threads: 4, min_chunk: 4, ..Default::default() };
+        let mut prim = PrimitiveEngine::new(Arc::clone(&jt), &cfg);
+        let mut seq = SeqEngine::new(Arc::clone(&jt), &cfg);
+        let mut s1 = TreeState::fresh(&jt);
+        let mut s2 = TreeState::fresh(&jt);
+        let cases = crate::infer::cases::generate(
+            &net,
+            &crate::infer::cases::CaseSpec { n_cases: 10, observed_fraction: 0.25, seed: 21 },
+        );
+        for (i, ev) in cases.iter().enumerate() {
+            let a = prim.infer(&mut s1, ev).unwrap();
+            let b = seq.infer(&mut s2, ev).unwrap();
+            assert!(a.max_abs_diff(&b) < 1e-9, "case {i}: diff {}", a.max_abs_diff(&b));
+        }
+    }
+
+    #[test]
+    fn detects_impossible_evidence() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let mut e = PrimitiveEngine::new(Arc::clone(&jt), &EngineConfig::default().with_threads(2));
+        let mut state = TreeState::fresh(&jt);
+        let ev = Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        assert!(matches!(e.infer(&mut state, &ev), Err(Error::InconsistentEvidence)));
+    }
+}

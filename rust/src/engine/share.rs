@@ -1,0 +1,161 @@
+//! Unsafe-but-contained sharing utilities for the parallel engines.
+//!
+//! The engines' schedules guarantee structural disjointness (each task
+//! writes a distinct clique / separator / chunk range), but the borrow
+//! checker cannot see through a `Vec<Vec<f64>>` indexed from multiple
+//! worker threads. These two small wrappers concentrate the `unsafe` in
+//! one audited place:
+//!
+//! * [`SharedTables`] — hands out raw clique/separator slices of a
+//!   [`TreeState`] across threads; callers must touch disjoint regions.
+//! * [`PerWorker`] — one scratch slot per pool worker; the pool guarantees
+//!   a worker id runs one task at a time, so access is race-free.
+
+use std::cell::UnsafeCell;
+
+use crate::jt::state::TreeState;
+
+/// Raw shared view of a `TreeState` for one parallel region.
+pub struct SharedTables {
+    cliques: *mut Vec<f64>,
+    n_cliques: usize,
+    seps: *mut Vec<f64>,
+    n_seps: usize,
+}
+
+// SAFETY: access contracts are delegated to the unsafe methods below.
+unsafe impl Send for SharedTables {}
+unsafe impl Sync for SharedTables {}
+
+impl SharedTables {
+    /// Wrap a state for the duration of one parallel region. The `&mut`
+    /// receipt guarantees exclusivity at the region boundary.
+    pub fn new(state: &mut TreeState) -> Self {
+        SharedTables {
+            cliques: state.cliques.as_mut_ptr(),
+            n_cliques: state.cliques.len(),
+            seps: state.seps.as_mut_ptr(),
+            n_seps: state.seps.len(),
+        }
+    }
+
+    /// Read-only view of clique `c`.
+    ///
+    /// # Safety
+    /// No concurrent task may hold a mutable view of the same clique.
+    #[inline]
+    pub unsafe fn clique(&self, c: usize) -> &[f64] {
+        debug_assert!(c < self.n_cliques);
+        &*self.cliques.add(c)
+    }
+
+    /// Mutable view of clique `c`.
+    ///
+    /// # Safety
+    /// Concurrent tasks must write disjoint cliques, or disjoint entry
+    /// ranges of the same clique.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn clique_mut(&self, c: usize) -> &mut [f64] {
+        debug_assert!(c < self.n_cliques);
+        &mut *self.cliques.add(c)
+    }
+
+    /// Mutable view of separator `s`.
+    ///
+    /// # Safety
+    /// Concurrent tasks must write disjoint separators.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn sep_mut(&self, s: usize) -> &mut [f64] {
+        debug_assert!(s < self.n_seps);
+        &mut *self.seps.add(s)
+    }
+}
+
+/// One value per pool worker, accessed without locks.
+pub struct PerWorker<T> {
+    slots: Vec<UnsafeCell<T>>,
+}
+
+// SAFETY: each worker id accesses only its own slot, and the pool runs one
+// task per worker id at a time.
+unsafe impl<T: Send> Sync for PerWorker<T> {}
+
+impl<T> PerWorker<T> {
+    /// Build `threads` slots from a constructor.
+    pub fn new(threads: usize, mut init: impl FnMut(usize) -> T) -> Self {
+        PerWorker { slots: (0..threads).map(|w| UnsafeCell::new(init(w))).collect() }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when there are no slots.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Mutable access to worker `w`'s slot.
+    ///
+    /// # Safety
+    /// Must only be called from the task currently running as worker `w`.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get(&self, w: usize) -> &mut T {
+        &mut *self.slots[w].get()
+    }
+
+    /// Exclusive iteration over all slots (for post-region reduction).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut T> {
+        self.slots.iter_mut().map(|c| c.get_mut())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::pool::Pool;
+
+    #[test]
+    fn per_worker_accumulates_independently() {
+        let pool = Pool::new(4);
+        let mut pw = PerWorker::new(4, |_| 0u64);
+        {
+            let pw_ref = &pw;
+            pool.parallel(1000, &|w, t| unsafe {
+                *pw_ref.get(w) += t as u64;
+            });
+        }
+        let total: u64 = pw.iter_mut().map(|x| *x).sum();
+        assert_eq!(total, 499_500);
+    }
+
+    #[test]
+    fn shared_tables_disjoint_writes() {
+        use crate::bn::embedded;
+        use crate::jt::tree::JunctionTree;
+        use crate::jt::triangulate::TriangulationHeuristic;
+
+        let net = embedded::asia();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let mut state = TreeState::fresh(&jt);
+        let n = state.cliques.len();
+        let pool = Pool::new(4);
+        {
+            let shared = SharedTables::new(&mut state);
+            let shared_ref = &shared;
+            pool.parallel(n, &|_w, c| unsafe {
+                // each task owns clique c exclusively
+                for x in shared_ref.clique_mut(c) {
+                    *x = c as f64;
+                }
+            });
+        }
+        for (c, data) in state.cliques.iter().enumerate() {
+            assert!(data.iter().all(|&x| x == c as f64));
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Inference-level APIs: queries over a calibrated tree, the brute-force
+//! oracle, and the benchmark test-case generator.
+
+pub mod approx;
+pub mod cases;
+pub mod exact;
+pub mod query;

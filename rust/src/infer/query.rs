@@ -1,0 +1,172 @@
+//! Posterior extraction from a calibrated junction tree.
+
+use crate::bn::network::Network;
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::{Error, Result};
+
+/// Posterior marginals `P(v | e)` for every variable, plus `ln P(e)`.
+///
+/// This is the paper's inference output: after calibration every clique
+/// holds (a scaled copy of) `P(clique vars, e)`, so the marginal of each
+/// variable is read off its home clique and normalized.
+#[derive(Clone, Debug)]
+pub struct Posteriors {
+    /// `probs[v][s] = P(v = s | e)`. For observed variables this is the
+    /// indicator of the observed state.
+    pub probs: Vec<Vec<f64>>,
+    /// Log evidence probability `ln P(e)`.
+    pub log_z: f64,
+}
+
+impl Posteriors {
+    /// Extract posteriors from a calibrated state.
+    pub fn compute(jt: &JunctionTree, state: &TreeState) -> Result<Posteriors> {
+        let n = jt.net.n();
+        let mut probs = Vec::with_capacity(n);
+        for v in 0..n {
+            let slot = &jt.var_slot[v];
+            let data = &state.cliques[slot.clique];
+            let mut marg = vec![0.0; slot.card];
+            let stride = slot.stride;
+            let card = slot.card;
+            let block = stride * card;
+            let mut base = 0usize;
+            while base < data.len() {
+                for s in 0..card {
+                    let lo = base + s * stride;
+                    let mut acc = 0.0;
+                    for &x in &data[lo..lo + stride] {
+                        acc += x;
+                    }
+                    marg[s] += acc;
+                }
+                base += block;
+            }
+            let total: f64 = marg.iter().sum();
+            if total <= 0.0 {
+                return Err(Error::InconsistentEvidence);
+            }
+            for x in &mut marg {
+                *x /= total;
+            }
+            probs.push(marg);
+        }
+        Ok(Posteriors { probs, log_z: state.log_z })
+    }
+
+    /// Posterior of a variable by name.
+    pub fn marginal(&self, net: &Network, var: &str) -> Result<&[f64]> {
+        let v = net.var_id(var)?;
+        Ok(&self.probs[v])
+    }
+
+    /// `P(e)`.
+    pub fn evidence_probability(&self) -> f64 {
+        self.log_z.exp()
+    }
+
+    /// Maximum absolute difference against another posterior set (used by
+    /// engine-agreement tests).
+    pub fn max_abs_diff(&self, other: &Posteriors) -> f64 {
+        let mut worst: f64 = (self.log_z - other.log_z).abs();
+        for (a, b) in self.probs.iter().zip(&other.probs) {
+            for (x, y) in a.iter().zip(b) {
+                worst = worst.max((x - y).abs());
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::jt::evidence::Evidence;
+    use crate::jt::propagate::{calibrate, MapMode, Scratch};
+    use crate::jt::schedule::{RootStrategy, Schedule};
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    fn posterior(net: &crate::bn::network::Network, pairs: &[(&str, &str)]) -> Posteriors {
+        let jt = JunctionTree::compile(net, TriangulationHeuristic::MinFill).unwrap();
+        let sched = Schedule::build(&jt, RootStrategy::Center);
+        let mut state = crate::jt::state::TreeState::fresh(&jt);
+        let mut scratch = Scratch::for_tree(&jt);
+        let ev = Evidence::from_pairs(net, pairs).unwrap();
+        calibrate(&jt, &sched, &mut state, &ev, MapMode::Cached, &mut scratch).unwrap();
+        Posteriors::compute(&jt, &state).unwrap()
+    }
+
+    #[test]
+    fn asia_priors_match_hand_computation() {
+        let net = embedded::asia();
+        let post = posterior(&net, &[]);
+        // P(lung=yes) = .5*.1 + .5*.01 = .055
+        let lung = post.marginal(&net, "lung").unwrap();
+        assert!((lung[0] - 0.055).abs() < 1e-9, "{}", lung[0]);
+        // P(bronc=yes) = .5*.6 + .5*.3 = .45
+        let bronc = post.marginal(&net, "bronc").unwrap();
+        assert!((bronc[0] - 0.45).abs() < 1e-9);
+        // P(tub=yes) = .01*.05+.99*.01 = .0104
+        let tub = post.marginal(&net, "tub").unwrap();
+        assert!((tub[0] - 0.0104).abs() < 1e-9);
+        // P(either=yes) = 1-(1-.055)(1-.0104) ... lung ⟂ tub
+        let either = post.marginal(&net, "either").unwrap();
+        let expect = 1.0 - (1.0 - 0.055) * (1.0 - 0.0104);
+        assert!((either[0] - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn observed_variable_has_indicator_posterior() {
+        let net = embedded::asia();
+        let post = posterior(&net, &[("smoke", "no")]);
+        let smoke = post.marginal(&net, "smoke").unwrap();
+        assert!((smoke[0] - 0.0).abs() < 1e-12);
+        assert!((smoke[1] - 1.0).abs() < 1e-12);
+        // conditional: P(lung=yes | smoke=no) = 0.01
+        let lung = post.marginal(&net, "lung").unwrap();
+        assert!((lung[0] - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diagnostic_reasoning_flows_upstream() {
+        // Observing dyspnoea raises P(bronc=yes)
+        let net = embedded::asia();
+        let prior = posterior(&net, &[]);
+        let post = posterior(&net, &[("dysp", "yes")]);
+        let b0 = prior.marginal(&net, "bronc").unwrap()[0];
+        let b1 = post.marginal(&net, "bronc").unwrap()[0];
+        assert!(b1 > b0, "bronc {b0} -> {b1} should increase");
+    }
+
+    #[test]
+    fn cancer_network_posterior() {
+        // P(Cancer=True) = 0.9*(0.3*0.03+0.7*0.001) + 0.1*(0.3*0.05+0.7*0.02)
+        let net = embedded::cancer();
+        let post = posterior(&net, &[]);
+        let expect = 0.9 * (0.3 * 0.03 + 0.7 * 0.001) + 0.1 * (0.3 * 0.05 + 0.7 * 0.02);
+        let got = post.marginal(&net, "Cancer").unwrap()[0];
+        assert!((got - expect).abs() < 1e-9, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn sprinkler_explaining_away() {
+        // P(sprinkler=on | wet) decreases once rain is also observed
+        let net = embedded::sprinkler();
+        let wet = posterior(&net, &[("wetgrass", "yes")]);
+        let wet_rain = posterior(&net, &[("wetgrass", "yes"), ("rain", "yes")]);
+        let s_wet = wet.marginal(&net, "sprinkler").unwrap()[0];
+        let s_wet_rain = wet_rain.marginal(&net, "sprinkler").unwrap()[0];
+        assert!(s_wet_rain < s_wet, "explaining away: {s_wet_rain} < {s_wet}");
+    }
+
+    #[test]
+    fn max_abs_diff_detects_difference() {
+        let net = embedded::asia();
+        let a = posterior(&net, &[]);
+        let b = posterior(&net, &[("smoke", "yes")]);
+        assert!(a.max_abs_diff(&b) > 1e-3);
+        assert!(a.max_abs_diff(&a) < 1e-15);
+    }
+}

@@ -1,0 +1,269 @@
+//! Evidence: observed variable/state pairs and their entry into the tree.
+//!
+//! Evidence is absorbed by zeroing the clique-table entries that disagree
+//! with each observation (a "finding" vector multiply). Each observation
+//! touches exactly one clique — the variable's home slot — and the
+//! subsequent propagation spreads it to the whole tree.
+
+use crate::bn::network::Network;
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::Result;
+
+/// A set of observations `(variable, state)`, optionally with **soft
+/// (likelihood) evidence**: per-variable weight vectors multiplied into
+/// the home clique instead of hard 0/1 indicators — Pearl's virtual
+/// evidence, the standard way to absorb noisy sensor readings.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Evidence {
+    /// Observed pairs, sorted by variable id, at most one per variable.
+    pub obs: Vec<(usize, usize)>,
+    /// Soft findings `(variable, likelihood per state)`; weights must be
+    /// non-negative and not all zero. Sorted by variable id.
+    pub soft: Vec<(usize, Vec<f64>)>,
+}
+
+impl Evidence {
+    /// Empty evidence (prior inference).
+    pub fn none() -> Self {
+        Evidence { obs: Vec::new(), soft: Vec::new() }
+    }
+
+    /// Build from `(variable id, state id)` pairs.
+    pub fn from_ids(mut obs: Vec<(usize, usize)>) -> Self {
+        obs.sort_unstable_by_key(|&(v, _)| v);
+        obs.dedup_by_key(|&mut (v, _)| v);
+        Evidence { obs, soft: Vec::new() }
+    }
+
+    /// Add a soft (likelihood) finding for `v`: `weights[s]` multiplies
+    /// the probability mass of state `s`. Replaces any previous soft
+    /// finding on the same variable.
+    pub fn with_soft(mut self, v: usize, weights: Vec<f64>) -> crate::Result<Self> {
+        if weights.iter().any(|&w| w < 0.0 || w.is_nan()) || weights.iter().all(|&w| w == 0.0) {
+            return Err(crate::Error::msg(format!(
+                "soft evidence for variable {v} must be non-negative and not all zero"
+            )));
+        }
+        self.soft.retain(|&(var, _)| var != v);
+        let pos = self.soft.partition_point(|&(var, _)| var < v);
+        self.soft.insert(pos, (v, weights));
+        Ok(self)
+    }
+
+    /// Build from `(variable name, state name)` pairs.
+    pub fn from_pairs(net: &Network, pairs: &[(&str, &str)]) -> Result<Self> {
+        let mut obs = Vec::with_capacity(pairs.len());
+        for &(var, state) in pairs {
+            obs.push(net.state_id(var, state)?);
+        }
+        Ok(Self::from_ids(obs))
+    }
+
+    /// Number of observed variables (hard findings only).
+    pub fn len(&self) -> usize {
+        self.obs.len()
+    }
+
+    /// True when no variable is observed (hard or soft).
+    pub fn is_empty(&self) -> bool {
+        self.obs.is_empty() && self.soft.is_empty()
+    }
+
+    /// The observed state of `v`, if any.
+    pub fn get(&self, v: usize) -> Option<usize> {
+        self.obs.binary_search_by_key(&v, |&(var, _)| var).ok().map(|i| self.obs[i].1)
+    }
+
+    /// Enter the findings: zero disagreeing entries for hard observations,
+    /// multiply likelihood weights for soft ones — each in the variable's
+    /// home clique.
+    pub fn apply(&self, jt: &JunctionTree, state: &mut TreeState) {
+        for &(v, obs_state) in &self.obs {
+            let slot = &jt.var_slot[v];
+            let data = &mut state.cliques[slot.clique];
+            let stride = slot.stride;
+            let card = slot.card;
+            let block = stride * card;
+            // entries where digit(v) != obs_state -> 0
+            let mut base = 0usize;
+            while base < data.len() {
+                for s in 0..card {
+                    if s != obs_state {
+                        let lo = base + s * stride;
+                        for x in &mut data[lo..lo + stride] {
+                            *x = 0.0;
+                        }
+                    }
+                }
+                base += block;
+            }
+        }
+        for (v, weights) in &self.soft {
+            let slot = &jt.var_slot[*v];
+            debug_assert_eq!(weights.len(), slot.card);
+            let data = &mut state.cliques[slot.clique];
+            let stride = slot.stride;
+            let block = stride * slot.card;
+            let mut base = 0usize;
+            while base < data.len() {
+                for (s, &w) in weights.iter().enumerate() {
+                    if w != 1.0 {
+                        let lo = base + s * stride;
+                        for x in &mut data[lo..lo + stride] {
+                            *x *= w;
+                        }
+                    }
+                }
+                base += block;
+            }
+        }
+    }
+}
+
+/// `Display` shows `v3=1, v7=0` style pairs (ids, not names — names need
+/// the network; use [`Evidence::describe`] for those).
+impl std::fmt::Display for Evidence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let parts: Vec<String> = self.obs.iter().map(|(v, s)| format!("v{v}={s}")).collect();
+        write!(f, "{}", parts.join(", "))
+    }
+}
+
+impl Evidence {
+    /// Human-readable description using network names.
+    pub fn describe(&self, net: &Network) -> String {
+        let parts: Vec<String> = self
+            .obs
+            .iter()
+            .map(|&(v, s)| format!("{}={}", net.vars[v].name, net.vars[v].states[s]))
+            .collect();
+        parts.join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    #[test]
+    fn from_pairs_resolves_names() {
+        let net = embedded::asia();
+        let ev = Evidence::from_pairs(&net, &[("smoke", "yes"), ("xray", "no")]).unwrap();
+        assert_eq!(ev.len(), 2);
+        let smoke = net.var_id("smoke").unwrap();
+        assert_eq!(ev.get(smoke), Some(0));
+        assert_eq!(ev.get(net.var_id("asia").unwrap()), None);
+        assert!(Evidence::from_pairs(&net, &[("bogus", "yes")]).is_err());
+        assert!(Evidence::from_pairs(&net, &[("smoke", "bogus")]).is_err());
+    }
+
+    #[test]
+    fn from_ids_sorts_and_dedups() {
+        let ev = Evidence::from_ids(vec![(5, 1), (2, 0), (5, 0)]);
+        assert_eq!(ev.obs, vec![(2, 0), (5, 1)]);
+    }
+
+    #[test]
+    fn apply_zeroes_only_disagreeing_entries() {
+        let net = embedded::asia();
+        let jt = crate::jt::tree::JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let mut st = crate::jt::state::TreeState::fresh(&jt);
+        let smoke = net.var_id("smoke").unwrap();
+        let ev = Evidence::from_ids(vec![(smoke, 0)]);
+        ev.apply(&jt, &mut st);
+
+        let slot = &jt.var_slot[smoke];
+        let data = &st.cliques[slot.clique];
+        for (i, &x) in data.iter().enumerate() {
+            let digit = (i / slot.stride) % slot.card;
+            if digit != 0 {
+                assert_eq!(x, 0.0, "entry {i} should be zeroed");
+            } else {
+                assert_eq!(x, jt.prototype[slot.clique][i], "entry {i} should be untouched");
+            }
+        }
+        // other cliques untouched
+        for (c, data) in st.cliques.iter().enumerate() {
+            if c != slot.clique {
+                assert_eq!(data, &jt.prototype[c]);
+            }
+        }
+    }
+
+    #[test]
+    fn describe_uses_names() {
+        let net = embedded::asia();
+        let ev = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+        assert_eq!(ev.describe(&net), "smoke=yes");
+    }
+
+    #[test]
+    fn soft_evidence_validation() {
+        let ev = Evidence::none();
+        assert!(ev.clone().with_soft(0, vec![0.5, -0.1]).is_err());
+        assert!(ev.clone().with_soft(0, vec![0.0, 0.0]).is_err());
+        assert!(ev.clone().with_soft(0, vec![f64::NAN, 1.0]).is_err());
+        let ok = ev.with_soft(0, vec![2.0, 1.0]).unwrap();
+        assert!(!ok.is_empty());
+        // replacing an existing soft finding
+        let ok = ok.with_soft(0, vec![1.0, 3.0]).unwrap();
+        assert_eq!(ok.soft.len(), 1);
+        assert_eq!(ok.soft[0].1, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn soft_evidence_multiplies_home_clique() {
+        let net = embedded::asia();
+        let jt = crate::jt::tree::JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let mut st = crate::jt::state::TreeState::fresh(&jt);
+        let smoke = net.var_id("smoke").unwrap();
+        let ev = Evidence::none().with_soft(smoke, vec![3.0, 0.5]).unwrap();
+        ev.apply(&jt, &mut st);
+        let slot = &jt.var_slot[smoke];
+        let data = &st.cliques[slot.clique];
+        for (i, &x) in data.iter().enumerate() {
+            let digit = (i / slot.stride) % slot.card;
+            let w = if digit == 0 { 3.0 } else { 0.5 };
+            assert!((x - jt.prototype[slot.clique][i] * w).abs() < 1e-12, "entry {i}");
+        }
+    }
+
+    #[test]
+    fn hard_evidence_is_extreme_soft_evidence() {
+        // P(v | hard e) == P(v | soft e with indicator weights)
+        use crate::engine::{EngineConfig, EngineKind};
+        use std::sync::Arc;
+        let net = embedded::asia();
+        let jt = Arc::new(crate::jt::tree::JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let mut engine = EngineKind::Seq.build(Arc::clone(&jt), &EngineConfig::default().with_threads(1));
+        let mut state = crate::jt::state::TreeState::fresh(&jt);
+        let smoke = net.var_id("smoke").unwrap();
+        let hard = Evidence::from_ids(vec![(smoke, 0)]);
+        let soft = Evidence::none().with_soft(smoke, vec![1.0, 0.0]).unwrap();
+        let a = engine.infer(&mut state, &hard).unwrap();
+        let b = engine.infer(&mut state, &soft).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-12);
+    }
+
+    #[test]
+    fn soft_evidence_bayes_update_matches_hand_computation() {
+        // virtual evidence on smoke with likelihood ratio 4:1 ->
+        // posterior odds = prior odds * 4 (prior is 50/50)
+        use crate::engine::{EngineConfig, EngineKind};
+        use std::sync::Arc;
+        let net = embedded::asia();
+        let jt = Arc::new(crate::jt::tree::JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let mut engine = EngineKind::Hybrid.build(Arc::clone(&jt), &EngineConfig { threads: 2, ..Default::default() });
+        let mut state = crate::jt::state::TreeState::fresh(&jt);
+        let smoke = net.var_id("smoke").unwrap();
+        let ev = Evidence::none().with_soft(smoke, vec![4.0, 1.0]).unwrap();
+        let post = engine.infer(&mut state, &ev).unwrap();
+        assert!((post.probs[smoke][0] - 0.8).abs() < 1e-9, "got {}", post.probs[smoke][0]);
+        // downstream propagation: P(lung | soft) = .8*.1 + .2*.01
+        let lung = net.var_id("lung").unwrap();
+        assert!((post.probs[lung][0] - (0.8 * 0.1 + 0.2 * 0.01)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,373 @@
+//! Index mappings between clique and separator tables.
+//!
+//! "The key step to the potential table operations is to find the index
+//! mappings between the original and the updated tables" (§2). For a
+//! clique table over variables `C` and a separator table over `S ⊆ C`,
+//! entry `i` of the clique projects to entry `proj(i)` of the separator by
+//! keeping only the digits of `S` in the mixed-radix decomposition of `i`.
+//!
+//! Three strategies are implemented, in increasing order of the
+//! "bottleneck simplification" the paper applies:
+//!
+//! * [`project_divmod`] — recompute each projection with div/mod chains
+//!   (what a naive implementation, e.g. UnBBayes, does per entry per
+//!   message);
+//! * [`Odometer`] — walk entries in order while maintaining the digit
+//!   vector and projected index incrementally (O(1) amortized per entry,
+//!   no divisions);
+//! * [`build_map`] — materialize the projection once per (clique,
+//!   separator) edge as a `Vec<u32>` and reuse it for every message of
+//!   every test case (the maps depend only on the tree, not the evidence).
+//!
+//! All three must agree; property tests in this module and in
+//! `rust/tests/` check them against each other.
+
+use crate::bn::variable::VarId;
+
+/// Mixed-radix strides of `vars`/`cards` (last variable fastest).
+/// `strides[i]` is the step in flat index per unit of digit `i`.
+pub fn strides(cards: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; cards.len()];
+    for i in (0..cards.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * cards[i + 1];
+    }
+    s
+}
+
+/// For each position in `src_vars`, the stride it contributes to the
+/// destination index (0 when the variable is not in `dst_vars`).
+pub fn projection_strides(
+    src_vars: &[VarId],
+    dst_vars: &[VarId],
+    dst_cards: &[usize],
+) -> Vec<usize> {
+    let dst_strides = strides(dst_cards);
+    src_vars
+        .iter()
+        .map(|v| match dst_vars.binary_search(v) {
+            Ok(p) => dst_strides[p],
+            Err(_) => 0,
+        })
+        .collect()
+}
+
+/// Project a single flat index with div/mod chains (the naive strategy).
+#[inline]
+pub fn project_divmod(
+    src_cards: &[usize],
+    src_strides: &[usize],
+    proj_strides: &[usize],
+    idx: usize,
+) -> usize {
+    let mut out = 0usize;
+    for i in 0..src_cards.len() {
+        let digit = (idx / src_strides[i]) % src_cards[i];
+        out += digit * proj_strides[i];
+    }
+    out
+}
+
+/// Incremental mixed-radix counter over a card vector, tracking one or two
+/// projected indices without any division.
+pub struct Odometer {
+    cards: Vec<usize>,
+    digits: Vec<usize>,
+}
+
+impl Odometer {
+    /// Counter positioned at entry 0.
+    pub fn new(cards: &[usize]) -> Self {
+        Odometer { cards: cards.to_vec(), digits: vec![0; cards.len()] }
+    }
+
+    /// Current digit vector.
+    #[inline]
+    pub fn digits(&self) -> &[usize] {
+        &self.digits
+    }
+
+    /// Advance to the next entry (wraps at the end).
+    #[inline]
+    pub fn step(&mut self) {
+        for i in (0..self.cards.len()).rev() {
+            self.digits[i] += 1;
+            if self.digits[i] < self.cards[i] {
+                return;
+            }
+            self.digits[i] = 0;
+        }
+    }
+}
+
+/// Incremental projection: walks `0..Π src_cards` in order, yielding the
+/// projected destination index per step with O(1) amortized updates.
+pub struct ProjectedOdometer {
+    cards: Vec<usize>,
+    digits: Vec<usize>,
+    proj_strides: Vec<usize>,
+    /// `wrap_delta[i]` = amount subtracted from the projection when digit
+    /// `i` wraps from `cards[i]-1` back to 0: `(cards[i]-1) * proj_strides[i]`.
+    wrap_delta: Vec<usize>,
+    current: usize,
+}
+
+impl ProjectedOdometer {
+    /// Build from source cards and per-position projection strides
+    /// (see [`projection_strides`]).
+    pub fn new(src_cards: &[usize], proj_strides: &[usize]) -> Self {
+        debug_assert_eq!(src_cards.len(), proj_strides.len());
+        let wrap_delta = src_cards
+            .iter()
+            .zip(proj_strides)
+            .map(|(&c, &s)| (c - 1) * s)
+            .collect();
+        ProjectedOdometer {
+            cards: src_cards.to_vec(),
+            digits: vec![0; src_cards.len()],
+            proj_strides: proj_strides.to_vec(),
+            wrap_delta,
+            current: 0,
+        }
+    }
+
+    /// Projected destination index of the current source entry.
+    #[inline]
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    /// Advance one source entry.
+    #[inline]
+    pub fn step(&mut self) {
+        for i in (0..self.cards.len()).rev() {
+            self.digits[i] += 1;
+            if self.digits[i] < self.cards[i] {
+                self.current += self.proj_strides[i];
+                return;
+            }
+            self.digits[i] = 0;
+            self.current -= self.wrap_delta[i];
+        }
+    }
+
+    /// Jump to an arbitrary source entry (used to start mid-table when a
+    /// parallel chunk begins at `idx`).
+    pub fn seek(&mut self, src_strides: &[usize], idx: usize) {
+        let mut out = 0usize;
+        for i in 0..self.cards.len() {
+            let digit = (idx / src_strides[i]) % self.cards[i];
+            self.digits[i] = digit;
+            out += digit * self.proj_strides[i];
+        }
+        self.current = out;
+    }
+}
+
+/// Materialize the full projection map `src index → dst index` (u32 —
+/// separator tables beyond 2³² entries are far outside feasible JT sizes).
+pub fn build_map(
+    src_vars: &[VarId],
+    src_cards: &[usize],
+    dst_vars: &[VarId],
+    dst_cards: &[usize],
+) -> Vec<u32> {
+    let len: usize = src_cards.iter().product();
+    let proj = projection_strides(src_vars, dst_vars, dst_cards);
+    let mut odo = ProjectedOdometer::new(src_cards, &proj);
+    let mut map = Vec::with_capacity(len);
+    for _ in 0..len {
+        map.push(odo.current() as u32);
+        odo.step();
+    }
+    map
+}
+
+/// Run-compressed projection map (the §Perf "bottleneck simplification"
+/// beyond the paper's): the projected index is constant over contiguous
+/// runs of `run_len = Π` (cards of source variables *after* the last
+/// destination variable). Storing one `u32` per run instead of per entry
+/// shrinks map traffic by `run_len`× and turns marginalization/extension
+/// inner loops into contiguous (vectorizable) slice ops.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RunMap {
+    /// `map[r]` = destination index of run `r`.
+    pub map: Vec<u32>,
+    /// Entries per run (≥ 1). Source length = `map.len() * run_len`.
+    pub run_len: usize,
+}
+
+/// Build the run-compressed projection (see [`RunMap`]).
+pub fn build_run_map(
+    src_vars: &[VarId],
+    src_cards: &[usize],
+    dst_vars: &[VarId],
+    dst_cards: &[usize],
+) -> RunMap {
+    let last_dst_pos = src_vars.iter().rposition(|v| dst_vars.binary_search(v).is_ok());
+    match last_dst_pos {
+        None => {
+            // destination scope is empty (or disjoint): one run, index 0
+            let len: usize = src_cards.iter().product();
+            RunMap { map: vec![0], run_len: len.max(1) }
+        }
+        Some(p) => {
+            let run_len: usize = src_cards[p + 1..].iter().product::<usize>().max(1);
+            let prefix_vars = &src_vars[..=p];
+            let prefix_cards = &src_cards[..=p];
+            RunMap { map: build_map(prefix_vars, prefix_cards, dst_vars, dst_cards), run_len }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn strides_last_fastest() {
+        assert_eq!(strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides(&[5]), vec![1]);
+        assert_eq!(strides(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn projection_onto_self_is_identity() {
+        let vars = [0usize, 2, 5];
+        let cards = [2usize, 3, 2];
+        let map = build_map(&vars, &cards, &vars, &cards);
+        let expect: Vec<u32> = (0..12u32).collect();
+        assert_eq!(map, expect);
+    }
+
+    #[test]
+    fn projection_onto_empty_is_zero() {
+        let map = build_map(&[1, 2], &[2, 3], &[], &[]);
+        assert!(map.iter().all(|&m| m == 0));
+        assert_eq!(map.len(), 6);
+    }
+
+    #[test]
+    fn divmod_matches_map_small() {
+        let src_vars = [0usize, 1, 3];
+        let src_cards = [2usize, 3, 4];
+        let dst_vars = [1usize, 3];
+        let dst_cards = [3usize, 4];
+        let map = build_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+        let ss = strides(&src_cards);
+        let ps = projection_strides(&src_vars, &dst_vars, &dst_cards);
+        for i in 0..24 {
+            assert_eq!(map[i] as usize, project_divmod(&src_cards, &ss, &ps, i));
+        }
+    }
+
+    #[test]
+    fn all_strategies_agree_randomized() {
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            // random source scope of 1..5 vars with cards 1..5
+            let k = rng.range(1, 4);
+            let mut src_vars: Vec<usize> = (0..10).collect();
+            rng.shuffle(&mut src_vars);
+            src_vars.truncate(k);
+            src_vars.sort_unstable();
+            let src_cards: Vec<usize> = (0..k).map(|_| rng.range(1, 4)).collect();
+            // random subset as destination
+            let keep: Vec<bool> = (0..k).map(|_| rng.chance(0.6)).collect();
+            let dst_vars: Vec<usize> =
+                src_vars.iter().zip(&keep).filter(|&(_, &k)| k).map(|(&v, _)| v).collect();
+            let dst_cards: Vec<usize> =
+                src_cards.iter().zip(&keep).filter(|&(_, &k)| k).map(|(&c, _)| c).collect();
+
+            let map = build_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+            let ss = strides(&src_cards);
+            let ps = projection_strides(&src_vars, &dst_vars, &dst_cards);
+            let len: usize = src_cards.iter().product();
+            let dst_len: usize = dst_cards.iter().product();
+            let mut odo = ProjectedOdometer::new(&src_cards, &ps);
+            for i in 0..len {
+                let dm = project_divmod(&src_cards, &ss, &ps, i);
+                assert_eq!(map[i] as usize, dm);
+                assert_eq!(odo.current(), dm);
+                assert!(dm < dst_len.max(1));
+                odo.step();
+            }
+        }
+    }
+
+    #[test]
+    fn seek_matches_sequential_walk() {
+        let src_cards = [3usize, 2, 4];
+        let ps = [8usize, 0, 1]; // project onto vars 0 and 2, dst cards (3,4)... strides (4,1)*? arbitrary but consistent
+        let ss = strides(&src_cards);
+        let mut walker = ProjectedOdometer::new(&src_cards, &ps);
+        for i in 0..24 {
+            let mut seeker = ProjectedOdometer::new(&src_cards, &ps);
+            seeker.seek(&ss, i);
+            assert_eq!(seeker.current(), walker.current(), "at {i}");
+            walker.step();
+        }
+    }
+
+    #[test]
+    fn run_map_expands_to_entry_map() {
+        let mut rng = Rng::new(123);
+        for _ in 0..40 {
+            let k = rng.range(1, 4);
+            let mut src_vars: Vec<usize> = (0..10).collect();
+            rng.shuffle(&mut src_vars);
+            src_vars.truncate(k);
+            src_vars.sort_unstable();
+            let src_cards: Vec<usize> = (0..k).map(|_| rng.range(1, 4)).collect();
+            let keep: Vec<bool> = (0..k).map(|_| rng.chance(0.5)).collect();
+            let dst_vars: Vec<usize> =
+                src_vars.iter().zip(&keep).filter(|&(_, &kp)| kp).map(|(&v, _)| v).collect();
+            let dst_cards: Vec<usize> =
+                src_cards.iter().zip(&keep).filter(|&(_, &kp)| kp).map(|(&c, _)| c).collect();
+            let entry = build_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+            let rm = build_run_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+            assert_eq!(rm.map.len() * rm.run_len, entry.len(), "size mismatch");
+            for (i, &e) in entry.iter().enumerate() {
+                assert_eq!(rm.map[i / rm.run_len], e, "entry {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_map_empty_destination() {
+        let rm = build_run_map(&[1, 2], &[3, 4], &[], &[]);
+        assert_eq!(rm.run_len, 12);
+        assert_eq!(rm.map, vec![0]);
+    }
+
+    #[test]
+    fn run_map_trailing_destination_has_unit_runs() {
+        // dst is the LAST src var -> run_len = 1
+        let rm = build_run_map(&[0, 1], &[2, 3], &[1], &[3]);
+        assert_eq!(rm.run_len, 1);
+        assert_eq!(rm.map.len(), 6);
+    }
+
+    #[test]
+    fn run_map_leading_destination_has_long_runs() {
+        // dst is the FIRST src var -> run_len = product of the rest
+        let rm = build_run_map(&[0, 1, 2], &[2, 3, 4], &[0], &[2]);
+        assert_eq!(rm.run_len, 12);
+        assert_eq!(rm.map, vec![0, 1]);
+    }
+
+    #[test]
+    fn projection_counts_preimages_evenly() {
+        // every destination entry must have the same number of sources
+        let src_vars = [0usize, 1, 2];
+        let src_cards = [2usize, 3, 4];
+        let dst_vars = [1usize];
+        let dst_cards = [3usize];
+        let map = build_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+        let mut counts = [0usize; 3];
+        for &m in &map {
+            counts[m as usize] += 1;
+        }
+        assert_eq!(counts, [8, 8, 8]);
+    }
+}

@@ -1,0 +1,33 @@
+//! Junction-tree compilation and calibration substrate.
+//!
+//! The classical pipeline the paper builds on:
+//!
+//! 1. **moralize** the DAG ([`moralize`]);
+//! 2. **triangulate** the moral graph with an elimination heuristic and
+//!    read off the maximal cliques ([`triangulate`]);
+//! 3. assemble the **junction tree** — maximum-weight spanning tree over
+//!    the clique graph, running-intersection property guaranteed
+//!    ([`tree`]);
+//! 4. attach **potential tables** (one per clique/separator) initialized
+//!    from the CPTs ([`potential`], [`state`]);
+//! 5. enter **evidence** ([`evidence`]) and **propagate** messages
+//!    (collect + distribute) to calibrate ([`propagate`]).
+//!
+//! The potential-table *operations* — marginalization, extension,
+//! reduction — and the **index mappings** between clique and separator
+//! tables that dominate their cost (the bottleneck the paper simplifies)
+//! live in [`ops`] and [`mapping`]. The parallel schedules over this
+//! substrate (leveling, root selection, the six engines) live in
+//! [`crate::engine`].
+
+pub mod evidence;
+pub mod mapping;
+pub mod moralize;
+pub mod mpe;
+pub mod ops;
+pub mod potential;
+pub mod propagate;
+pub mod schedule;
+pub mod state;
+pub mod tree;
+pub mod triangulate;

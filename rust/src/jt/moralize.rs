@@ -1,0 +1,147 @@
+//! Moralization: DAG → undirected moral graph.
+//!
+//! The moral graph connects every variable to its parents and "marries"
+//! co-parents (connects every pair of parents of a common child), then
+//! drops edge directions. Triangulating this graph yields the cliques of
+//! the junction tree.
+
+use crate::bn::network::Network;
+
+/// Undirected graph as sorted adjacency lists (no self-loops, no dups).
+#[derive(Clone, Debug, Default)]
+pub struct UGraph {
+    /// `adj[v]` = sorted neighbor list of `v`.
+    pub adj: Vec<Vec<usize>>,
+}
+
+impl UGraph {
+    /// Empty graph on `n` vertices.
+    pub fn new(n: usize) -> Self {
+        UGraph { adj: vec![Vec::new(); n] }
+    }
+
+    /// Number of vertices.
+    pub fn n(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Insert an undirected edge (idempotent).
+    pub fn add_edge(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        if let Err(pos) = self.adj[a].binary_search(&b) {
+            self.adj[a].insert(pos, b);
+        }
+        if let Err(pos) = self.adj[b].binary_search(&a) {
+            self.adj[b].insert(pos, a);
+        }
+    }
+
+    /// Edge membership test.
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.adj[a].binary_search(&b).is_ok()
+    }
+
+    /// Total number of undirected edges.
+    pub fn n_edges(&self) -> usize {
+        self.adj.iter().map(|l| l.len()).sum::<usize>() / 2
+    }
+
+    /// Connected-component label per vertex (labels are 0..k, BFS order).
+    pub fn components(&self) -> Vec<usize> {
+        let n = self.n();
+        let mut comp = vec![usize::MAX; n];
+        let mut next = 0usize;
+        let mut queue = std::collections::VecDeque::new();
+        for start in 0..n {
+            if comp[start] != usize::MAX {
+                continue;
+            }
+            comp[start] = next;
+            queue.push_back(start);
+            while let Some(v) = queue.pop_front() {
+                for &w in &self.adj[v] {
+                    if comp[w] == usize::MAX {
+                        comp[w] = next;
+                        queue.push_back(w);
+                    }
+                }
+            }
+            next += 1;
+        }
+        comp
+    }
+}
+
+/// Build the moral graph of a network.
+pub fn moralize(net: &Network) -> UGraph {
+    let mut g = UGraph::new(net.n());
+    for v in 0..net.n() {
+        let parents = net.parents(v);
+        for &p in parents {
+            g.add_edge(v, p);
+        }
+        // marry co-parents
+        for (i, &p) in parents.iter().enumerate() {
+            for &q in &parents[i + 1..] {
+                g.add_edge(p, q);
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+
+    #[test]
+    fn ugraph_basics() {
+        let mut g = UGraph::new(4);
+        g.add_edge(0, 1);
+        g.add_edge(1, 0); // duplicate
+        g.add_edge(2, 2); // self-loop ignored
+        assert_eq!(g.n_edges(), 1);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 2));
+    }
+
+    #[test]
+    fn sprinkler_moral_marries_coparents() {
+        // sprinkler and rain are co-parents of wetgrass -> married
+        let net = embedded::sprinkler();
+        let g = moralize(&net);
+        let s = net.var_id("sprinkler").unwrap();
+        let r = net.var_id("rain").unwrap();
+        assert!(g.has_edge(s, r));
+        // cloudy-wetgrass not adjacent
+        let c = net.var_id("cloudy").unwrap();
+        let w = net.var_id("wetgrass").unwrap();
+        assert!(!g.has_edge(c, w));
+        // 4 directed arcs + 1 marriage
+        assert_eq!(g.n_edges(), 5);
+    }
+
+    #[test]
+    fn asia_moral_edge_count() {
+        // asia has 8 arcs; marriages: (lung,tub) for either, (bronc,either)
+        // for dysp -> 10 moral edges
+        let net = embedded::asia();
+        let g = moralize(&net);
+        assert_eq!(g.n_edges(), 10);
+    }
+
+    #[test]
+    fn components_of_disconnected_graph() {
+        let mut g = UGraph::new(5);
+        g.add_edge(0, 1);
+        g.add_edge(3, 4);
+        let comp = g.components();
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[3], comp[4]);
+        assert_ne!(comp[0], comp[2]);
+        assert_ne!(comp[2], comp[3]);
+    }
+}

@@ -1,0 +1,274 @@
+//! Most Probable Explanation (MPE) via max-product message passing.
+//!
+//! The same junction tree that answers sum-product queries answers
+//! max-product ones: replace marginalization's Σ with max in the upward
+//! pass, then decode greedily from the root — each clique's restricted
+//! argmax (consistent with the variables already fixed by its parent) is
+//! globally optimal by the max-calibration property. An extension beyond
+//! the poster (exact MPE is the other canonical JT workload), reusing the
+//! compiled tree, evidence entry and schedules.
+
+use crate::jt::evidence::Evidence;
+use crate::jt::schedule::Schedule;
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::{Error, Result};
+
+/// An MPE solution.
+#[derive(Clone, Debug)]
+pub struct MpeResult {
+    /// State index per variable (evidence variables at their observed
+    /// states).
+    pub assignment: Vec<usize>,
+    /// `ln P(assignment)` — joint probability of the completion
+    /// (includes the evidence).
+    pub log_prob: f64,
+}
+
+/// `dst[map[i]] = max(dst[map[i]], src[i])` — the max-product analog of
+/// marginalization.
+fn max_with_map(src: &[f64], map: &[u32], dst: &mut [f64]) {
+    for (x, &m) in src.iter().zip(map) {
+        let d = &mut dst[m as usize];
+        if *x > *d {
+            *d = *x;
+        }
+    }
+}
+
+/// Compute the MPE for `ev` on a calibrot tree state.
+///
+/// `state` is reset, evidence is applied, one upward max-pass runs, and
+/// the assignment is decoded root-to-leaves.
+pub fn most_probable_explanation(
+    jt: &JunctionTree,
+    sched: &Schedule,
+    state: &mut TreeState,
+    ev: &Evidence,
+) -> Result<MpeResult> {
+    state.reset(jt);
+    ev.apply(jt, state);
+    let mut log_scale = 0.0f64;
+
+    // upward max-pass
+    let mut new_sep_buf = vec![0.0f64; jt.seps.iter().map(|s| s.len).max().unwrap_or(1)];
+    let mut ratio_buf = new_sep_buf.clone();
+    for layer in &sched.up_layers {
+        for msg in layer {
+            let sep_meta = &jt.seps[msg.sep];
+            let new_sep = &mut new_sep_buf[..sep_meta.len];
+            for x in new_sep.iter_mut() {
+                *x = 0.0;
+            }
+            let maps = &jt.edge_maps[msg.sep];
+            max_with_map(&state.cliques[msg.from], maps.from(sep_meta, msg.from), new_sep);
+            // scale by the max for numerical stability
+            let peak = new_sep.iter().cloned().fold(0.0f64, f64::max);
+            if peak == 0.0 {
+                return Err(Error::InconsistentEvidence);
+            }
+            for x in new_sep.iter_mut() {
+                *x /= peak;
+            }
+            log_scale += peak.ln();
+            let ratio = &mut ratio_buf[..sep_meta.len];
+            crate::jt::ops::ratio(new_sep, &state.seps[msg.sep], ratio);
+            state.seps[msg.sep].copy_from_slice(new_sep);
+            crate::jt::ops::extend_with_map(&mut state.cliques[msg.to], maps.from(sep_meta, msg.to), ratio);
+        }
+    }
+
+    // decode: roots first, then children restricted to their parents
+    let n = jt.net.n();
+    let mut assignment = vec![usize::MAX; n];
+    let mut log_prob = log_scale;
+    let mut order: Vec<usize> = Vec::with_capacity(jt.n_cliques());
+    for &r in &sched.roots {
+        order.push(r);
+    }
+    let mut qi = 0usize;
+    while qi < order.len() {
+        let c = order[qi];
+        qi += 1;
+        for &(ch, _) in &sched.children[c] {
+            order.push(ch);
+        }
+    }
+
+    for &c in &order {
+        let clique = &jt.cliques[c];
+        let data = &state.cliques[c];
+        // restricted argmax: entries whose digits agree with already-fixed vars
+        let mut best_idx = usize::MAX;
+        let mut best_val = -1.0f64;
+        'entry: for (i, &x) in data.iter().enumerate() {
+            if x <= best_val {
+                continue;
+            }
+            for (pos, &v) in clique.vars.iter().enumerate() {
+                if assignment[v] != usize::MAX {
+                    let digit = (i / clique.strides[pos]) % clique.cards[pos];
+                    if digit != assignment[v] {
+                        continue 'entry;
+                    }
+                }
+            }
+            best_val = x;
+            best_idx = i;
+        }
+        if best_idx == usize::MAX || best_val <= 0.0 {
+            return Err(Error::InconsistentEvidence);
+        }
+        for (pos, &v) in clique.vars.iter().enumerate() {
+            if assignment[v] == usize::MAX {
+                assignment[v] = (best_idx / clique.strides[pos]) % clique.cards[pos];
+            }
+        }
+        if sched.parent[c].is_none() {
+            // root clique contributes its (scaled) maximum once
+            log_prob += best_val.ln();
+        }
+    }
+    debug_assert!(assignment.iter().all(|&s| s != usize::MAX));
+
+    // exact joint log-probability of the decoded assignment (cheap and
+    // removes any residual scaling approximation from the reported value)
+    let cards = jt.net.cards();
+    let mut exact_logp = 0.0f64;
+    for v in 0..n {
+        let cpt = &jt.net.cpts[v];
+        let config: Vec<usize> = cpt.parents.iter().map(|&p| assignment[p]).collect();
+        let p = cpt.row(&config, &cards)[assignment[v]];
+        if p == 0.0 {
+            return Err(Error::InconsistentEvidence);
+        }
+        exact_logp += p.ln();
+    }
+    let _ = log_prob;
+    Ok(MpeResult { assignment, log_prob: exact_logp })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::{embedded, netgen};
+    use crate::jt::schedule::RootStrategy;
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    /// Brute-force MPE by joint enumeration (small nets only).
+    fn brute_mpe(net: &crate::bn::network::Network, ev: &Evidence) -> (Vec<usize>, f64) {
+        let cards = net.cards();
+        let order = net.topo_order().unwrap();
+        let mut best = (Vec::new(), -1.0f64);
+        let mut assignment = vec![0usize; net.n()];
+        'outer: loop {
+            let consistent = ev.obs.iter().all(|&(v, s)| assignment[v] == s);
+            if consistent {
+                let mut p = 1.0f64;
+                for &v in &order {
+                    let cpt = &net.cpts[v];
+                    let config: Vec<usize> = cpt.parents.iter().map(|&q| assignment[q]).collect();
+                    p *= cpt.row(&config, &cards)[assignment[v]];
+                }
+                if p > best.1 {
+                    best = (assignment.clone(), p);
+                }
+            }
+            for i in (0..net.n()).rev() {
+                assignment[i] += 1;
+                if assignment[i] < cards[i] {
+                    continue 'outer;
+                }
+                assignment[i] = 0;
+                if i == 0 {
+                    break 'outer;
+                }
+            }
+        }
+        best
+    }
+
+    fn check_net(net: &crate::bn::network::Network, ev: &Evidence) {
+        let jt = JunctionTree::compile(net, TriangulationHeuristic::MinFill).unwrap();
+        let sched = Schedule::build(&jt, RootStrategy::Center);
+        let mut state = TreeState::fresh(&jt);
+        let got = most_probable_explanation(&jt, &sched, &mut state, ev).unwrap();
+        let (want_assign, want_p) = brute_mpe(net, ev);
+        assert!(
+            (got.log_prob - want_p.ln()).abs() < 1e-9,
+            "MPE prob mismatch: {} vs {} (assignment {:?} vs {:?})",
+            got.log_prob,
+            want_p.ln(),
+            got.assignment,
+            want_assign
+        );
+        // evidence respected
+        for &(v, s) in &ev.obs {
+            assert_eq!(got.assignment[v], s);
+        }
+    }
+
+    #[test]
+    fn mpe_matches_brute_force_on_asia() {
+        let net = embedded::asia();
+        check_net(&net, &Evidence::none());
+        check_net(&net, &Evidence::from_pairs(&net, &[("xray", "yes")]).unwrap());
+        check_net(&net, &Evidence::from_pairs(&net, &[("dysp", "yes"), ("smoke", "no")]).unwrap());
+    }
+
+    #[test]
+    fn mpe_matches_brute_force_on_random_nets() {
+        for seed in 0..10 {
+            let net = netgen::tiny_random(seed + 500, 7);
+            let mut rng = crate::rng::Rng::new(seed);
+            let full = crate::bn::sample::forward_sample(&net, &mut rng);
+            let ev = Evidence::from_ids(vec![(0, full[0])]);
+            check_net(&net, &ev);
+        }
+    }
+
+    #[test]
+    fn mpe_dominates_sampled_assignments_on_a_large_net() {
+        // no brute force possible; instead: the MPE's joint probability
+        // must upper-bound every forward-sampled completion of the evidence
+        let net = netgen::paper_net("hailfinder-sim").unwrap();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let sched = Schedule::build(&jt, RootStrategy::Center);
+        let mut state = TreeState::fresh(&jt);
+        let mut rng = crate::rng::Rng::new(777);
+        let full = crate::bn::sample::forward_sample(&net, &mut rng);
+        let ev = Evidence::from_ids((0..6).map(|v| (v, full[v])).collect());
+        let mpe = most_probable_explanation(&jt, &sched, &mut state, &ev).unwrap();
+        let cards = net.cards();
+        let logp = |assignment: &[usize]| -> f64 {
+            (0..net.n())
+                .map(|v| {
+                    let cpt = &net.cpts[v];
+                    let config: Vec<usize> = cpt.parents.iter().map(|&p| assignment[p]).collect();
+                    cpt.row(&config, &cards)[assignment[v]].max(1e-300).ln()
+                })
+                .sum()
+        };
+        assert!((mpe.log_prob - logp(&mpe.assignment)).abs() < 1e-9);
+        for _ in 0..200 {
+            let mut sample = crate::bn::sample::forward_sample(&net, &mut rng);
+            for &(v, s) in &ev.obs {
+                sample[v] = s;
+            }
+            assert!(
+                logp(&sample) <= mpe.log_prob + 1e-9,
+                "sampled completion beats the claimed MPE"
+            );
+        }
+    }
+
+    #[test]
+    fn impossible_evidence_rejected() {
+        let net = embedded::asia();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let sched = Schedule::build(&jt, RootStrategy::Center);
+        let mut state = TreeState::fresh(&jt);
+        let ev = Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        assert!(most_probable_explanation(&jt, &sched, &mut state, &ev).is_err());
+    }
+}

@@ -1,0 +1,438 @@
+//! The three dominant potential-table operations, as flat kernels.
+//!
+//! The paper identifies **marginalization** (clique → separator sum),
+//! **extension** (separator broadcast into a clique) and **reduction**
+//! (separator division, folded here into the extension of the ratio
+//! `new/old`) as the operations that dominate junction-tree inference.
+//! Everything here works on raw `&[f64]` tables plus the precomputed index
+//! maps of [`crate::jt::mapping`]; engines differ only in *how* they chunk
+//! and schedule these kernels.
+//!
+//! Range variants (`*_range`) operate on a sub-interval of the source
+//! table so parallel engines can flatten entries into tasks; the
+//! `*_divmod` variants recompute projections per entry (the naive
+//! baseline); `atomic_*` variants implement the element-wise GPU-style
+//! scatter used by the `Element` comparison engine.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::jt::mapping::{project_divmod, ProjectedOdometer};
+
+/// `dst[map[i]] += src[i]` over the whole table. `dst` must be pre-zeroed.
+#[inline]
+pub fn marg_with_map(src: &[f64], map: &[u32], dst: &mut [f64]) {
+    debug_assert_eq!(src.len(), map.len());
+    for (x, &m) in src.iter().zip(map) {
+        dst[m as usize] += x;
+    }
+}
+
+/// `dst[map[i]] += src[i]` for `i` in `range` only.
+#[inline]
+pub fn marg_range(src: &[f64], map: &[u32], range: std::ops::Range<usize>, dst: &mut [f64]) {
+    for i in range {
+        dst[map[i] as usize] += src[i];
+    }
+}
+
+/// Marginalization with per-entry div/mod projection (naive baseline).
+pub fn marg_divmod(
+    src: &[f64],
+    src_cards: &[usize],
+    src_strides: &[usize],
+    proj_strides: &[usize],
+    dst: &mut [f64],
+) {
+    for (i, &x) in src.iter().enumerate() {
+        dst[project_divmod(src_cards, src_strides, proj_strides, i)] += x;
+    }
+}
+
+/// Marginalization with an incremental odometer (no divisions, no map).
+pub fn marg_odometer(src: &[f64], src_cards: &[usize], proj_strides: &[usize], dst: &mut [f64]) {
+    let mut odo = ProjectedOdometer::new(src_cards, proj_strides);
+    for &x in src {
+        dst[odo.current()] += x;
+    // advancing after the read keeps the final wrap cost off the hot loop
+        odo.step();
+    }
+}
+
+/// Atomic scatter-add used by the element-wise engine: each element does a
+/// CAS loop on the destination bits (the CPU analog of GPU atomicAdd).
+#[inline]
+pub fn atomic_add_f64(slot: &AtomicU64, value: f64) {
+    let mut cur = slot.load(Ordering::Relaxed);
+    loop {
+        let new = f64::from_bits(cur) + value;
+        match slot.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+/// `dst[map[i]] += src[i]` for `i` in `range`, with atomic accumulation.
+#[inline]
+pub fn atomic_marg_range(src: &[f64], map: &[u32], range: std::ops::Range<usize>, dst: &[AtomicU64]) {
+    for i in range {
+        atomic_add_f64(&dst[map[i] as usize], src[i]);
+    }
+}
+
+/// Extension + reduction fused: `dst[i] *= ratio[map[i]]` over the table.
+#[inline]
+pub fn extend_with_map(dst: &mut [f64], map: &[u32], ratio: &[f64]) {
+    debug_assert_eq!(dst.len(), map.len());
+    for (x, &m) in dst.iter_mut().zip(map) {
+        *x *= ratio[m as usize];
+    }
+}
+
+/// `dst[i] *= ratio[map[i]]` for `i` in `range` only.
+#[inline]
+pub fn extend_range(dst: &mut [f64], map: &[u32], range: std::ops::Range<usize>, ratio: &[f64]) {
+    for i in range {
+        dst[i] *= ratio[map[i] as usize];
+    }
+}
+
+/// Extension with per-entry div/mod projection (naive baseline).
+pub fn extend_divmod(
+    dst: &mut [f64],
+    dst_cards: &[usize],
+    dst_strides: &[usize],
+    proj_strides: &[usize],
+    ratio: &[f64],
+) {
+    for (i, x) in dst.iter_mut().enumerate() {
+        *x *= ratio[project_divmod(dst_cards, dst_strides, proj_strides, i)];
+    }
+}
+
+/// Extension with an incremental odometer.
+pub fn extend_odometer(dst: &mut [f64], dst_cards: &[usize], proj_strides: &[usize], ratio: &[f64]) {
+    let mut odo = ProjectedOdometer::new(dst_cards, proj_strides);
+    for x in dst.iter_mut() {
+        *x *= ratio[odo.current()];
+        odo.step();
+    }
+}
+
+// ------------------------------------------------------------ run-based --
+// Run-compressed kernels (see `mapping::RunMap`): the projected index is
+// constant over contiguous runs, so marginalization sums whole slices and
+// extension broadcasts one ratio per slice — vectorizable, and the map
+// array shrinks by `run_len`×. Used by the Fast-BNI engines (seq, hybrid,
+// the XLA packer); comparison baselines keep the per-entry kernels their
+// source papers describe. §Perf in EXPERIMENTS.md records the gain.
+
+use crate::jt::mapping::RunMap;
+
+/// `dst[rm.map[r]] += Σ src[r·L .. (r+1)·L]` over the whole table.
+#[inline]
+pub fn marg_runs(src: &[f64], rm: &RunMap, dst: &mut [f64]) {
+    let l = rm.run_len;
+    debug_assert_eq!(src.len(), rm.map.len() * l);
+    for (r, &m) in rm.map.iter().enumerate() {
+        let run = &src[r * l..(r + 1) * l];
+        let mut acc = 0.0;
+        for &x in run {
+            acc += x;
+        }
+        dst[m as usize] += acc;
+    }
+}
+
+/// Run-based marginalization over an **entry** range (partial head/tail
+/// runs handled) — lets engines keep entry-based chunking.
+pub fn marg_runs_range(src: &[f64], rm: &RunMap, entries: std::ops::Range<usize>, dst: &mut [f64]) {
+    let l = rm.run_len;
+    let (start, end) = (entries.start, entries.end);
+    if start >= end {
+        return;
+    }
+    let first_run = start / l;
+    let last_run = (end - 1) / l;
+    for r in first_run..=last_run {
+        let lo = (r * l).max(start);
+        let hi = ((r + 1) * l).min(end);
+        let mut acc = 0.0;
+        for &x in &src[lo..hi] {
+            acc += x;
+        }
+        dst[rm.map[r] as usize] += acc;
+    }
+}
+
+/// `dst[r·L..(r+1)·L] *= ratio[rm.map[r]]` over the whole table.
+#[inline]
+pub fn extend_runs(dst: &mut [f64], rm: &RunMap, ratio: &[f64]) {
+    let l = rm.run_len;
+    debug_assert_eq!(dst.len(), rm.map.len() * l);
+    for (r, &m) in rm.map.iter().enumerate() {
+        let f = ratio[m as usize];
+        for x in &mut dst[r * l..(r + 1) * l] {
+            *x *= f;
+        }
+    }
+}
+
+/// Run-based extension over an **entry** range.
+pub fn extend_runs_range(dst: &mut [f64], rm: &RunMap, entries: std::ops::Range<usize>, ratio: &[f64]) {
+    let l = rm.run_len;
+    let (start, end) = (entries.start, entries.end);
+    if start >= end {
+        return;
+    }
+    let first_run = start / l;
+    let last_run = (end - 1) / l;
+    for r in first_run..=last_run {
+        let lo = (r * l).max(start);
+        let hi = ((r + 1) * l).min(end);
+        let f = ratio[rm.map[r] as usize];
+        for x in &mut dst[lo..hi] {
+            *x *= f;
+        }
+    }
+}
+
+/// Separator update ratio: `out[j] = new[j] / old[j]`, with the standard
+/// junction-tree convention `0 / 0 = 0` (entries killed by evidence stay
+/// dead).
+#[inline]
+pub fn ratio(new: &[f64], old: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(new.len(), old.len());
+    debug_assert_eq!(new.len(), out.len());
+    for ((o, &n), &d) in out.iter_mut().zip(new).zip(old) {
+        *o = if d != 0.0 { n / d } else { 0.0 };
+    }
+}
+
+/// Sum of a slice (kept as a function so engines share one definition).
+#[inline]
+pub fn sum(xs: &[f64]) -> f64 {
+    xs.iter().sum()
+}
+
+/// Scale a slice in place.
+#[inline]
+pub fn scale(xs: &mut [f64], factor: f64) {
+    for x in xs {
+        *x *= factor;
+    }
+}
+
+/// Zero a slice in place.
+#[inline]
+pub fn zero(xs: &mut [f64]) {
+    for x in xs {
+        *x = 0.0;
+    }
+}
+
+/// Reduce per-worker partial separator buffers into `dst`:
+/// `dst[j] = Σ_w partials[w][j]`.
+#[inline]
+pub fn reduce_partials(partials: &[&[f64]], dst: &mut [f64]) {
+    zero(dst);
+    for p in partials {
+        debug_assert_eq!(p.len(), dst.len());
+        for (d, &x) in dst.iter_mut().zip(*p) {
+            *d += x;
+        }
+    }
+}
+
+/// View a `&mut [f64]` as atomic u64 slots (same layout; used by the
+/// element engine during its scatter phase).
+///
+/// Safety: `AtomicU64` has the same size/alignment as `u64`/`f64`; the
+/// borrow is exclusive, so re-typing the region for the duration of the
+/// borrow is sound.
+pub fn as_atomic(xs: &mut [f64]) -> &[AtomicU64] {
+    unsafe { std::slice::from_raw_parts(xs.as_mut_ptr() as *const AtomicU64, xs.len()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jt::mapping::{build_map, projection_strides, strides};
+    use crate::rng::Rng;
+
+    fn setup() -> (Vec<f64>, Vec<usize>, Vec<usize>, Vec<u32>, Vec<usize>, usize) {
+        // clique over vars (0,1,2) cards (2,3,4); sep over (1,) card 3
+        let src_vars = [0usize, 1, 2];
+        let src_cards = vec![2usize, 3, 4];
+        let dst_vars = [1usize];
+        let dst_cards = [3usize];
+        let map = build_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+        let ps = projection_strides(&src_vars, &dst_vars, &dst_cards);
+        let ss = strides(&src_cards);
+        let mut rng = Rng::new(5);
+        let src: Vec<f64> = (0..24).map(|_| rng.f64()).collect();
+        (src, src_cards, ss, map, ps, 3)
+    }
+
+    #[test]
+    fn marg_strategies_agree() {
+        let (src, cards, ss, map, ps, dst_len) = setup();
+        let mut a = vec![0.0; dst_len];
+        let mut b = vec![0.0; dst_len];
+        let mut c = vec![0.0; dst_len];
+        marg_with_map(&src, &map, &mut a);
+        marg_divmod(&src, &cards, &ss, &ps, &mut b);
+        marg_odometer(&src, &cards, &ps, &mut c);
+        for j in 0..dst_len {
+            assert!((a[j] - b[j]).abs() < 1e-12);
+            assert!((a[j] - c[j]).abs() < 1e-12);
+        }
+        // total mass is conserved
+        let total: f64 = src.iter().sum();
+        assert!((a.iter().sum::<f64>() - total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn marg_range_partitions_compose() {
+        let (src, _, _, map, _, dst_len) = setup();
+        let mut whole = vec![0.0; dst_len];
+        marg_with_map(&src, &map, &mut whole);
+        let mut parts = vec![0.0; dst_len];
+        marg_range(&src, &map, 0..7, &mut parts);
+        marg_range(&src, &map, 7..20, &mut parts);
+        marg_range(&src, &map, 20..24, &mut parts);
+        for j in 0..dst_len {
+            assert!((whole[j] - parts[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn atomic_marg_matches_serial() {
+        let (src, _, _, map, _, dst_len) = setup();
+        let mut expect = vec![0.0; dst_len];
+        marg_with_map(&src, &map, &mut expect);
+        let mut dst = vec![0.0; dst_len];
+        {
+            let slots = as_atomic(&mut dst);
+            atomic_marg_range(&src, &map, 0..24, slots);
+        }
+        for j in 0..dst_len {
+            assert!((dst[j] - expect[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn extend_strategies_agree() {
+        let (mut a, cards, ss, map, ps, dst_len) = setup();
+        let mut b = a.clone();
+        let mut c = a.clone();
+        let ratio_tab: Vec<f64> = (0..dst_len).map(|j| (j + 1) as f64).collect();
+        extend_with_map(&mut a, &map, &ratio_tab);
+        extend_divmod(&mut b, &cards, &ss, &ps, &ratio_tab);
+        extend_odometer(&mut c, &cards, &ps, &ratio_tab);
+        for i in 0..a.len() {
+            assert!((a[i] - b[i]).abs() < 1e-12);
+            assert!((a[i] - c[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn extend_range_partitions_compose() {
+        let (mut whole, _, _, map, _, dst_len) = setup();
+        let ratio_tab: Vec<f64> = (0..dst_len).map(|j| 0.5 + j as f64).collect();
+        let mut parts = whole.clone();
+        extend_with_map(&mut whole, &map, &ratio_tab);
+        extend_range(&mut parts, &map, 0..11, &ratio_tab);
+        extend_range(&mut parts, &map, 11..24, &ratio_tab);
+        assert_eq!(whole, parts);
+    }
+
+    #[test]
+    fn run_kernels_match_entry_kernels() {
+        use crate::jt::mapping::build_run_map;
+        let src_vars = [0usize, 1, 2];
+        let src_cards = [2usize, 3, 4];
+        // dst = {1}: run_len = 4
+        let dst_vars = [1usize];
+        let dst_cards = [3usize];
+        let map = build_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+        let rm = build_run_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+        assert_eq!(rm.run_len, 4);
+        let mut rng = Rng::new(17);
+        let src: Vec<f64> = (0..24).map(|_| rng.f64()).collect();
+
+        let mut a = vec![0.0; 3];
+        let mut b = vec![0.0; 3];
+        marg_with_map(&src, &map, &mut a);
+        marg_runs(&src, &rm, &mut b);
+        for j in 0..3 {
+            assert!((a[j] - b[j]).abs() < 1e-12);
+        }
+
+        // ranged versions compose across arbitrary (non-run-aligned) splits
+        let mut c = vec![0.0; 3];
+        marg_runs_range(&src, &rm, 0..5, &mut c);
+        marg_runs_range(&src, &rm, 5..6, &mut c);
+        marg_runs_range(&src, &rm, 6..19, &mut c);
+        marg_runs_range(&src, &rm, 19..24, &mut c);
+        for j in 0..3 {
+            assert!((a[j] - c[j]).abs() < 1e-12, "ranged run marg entry {j}");
+        }
+
+        let ratio_tab = [0.5, 2.0, 3.0];
+        let mut x = src.clone();
+        let mut y = src.clone();
+        extend_with_map(&mut x, &map, &ratio_tab);
+        extend_runs(&mut y, &rm, &ratio_tab);
+        assert_eq!(x, y);
+        let mut z = src.clone();
+        extend_runs_range(&mut z, &rm, 0..7, &ratio_tab);
+        extend_runs_range(&mut z, &rm, 7..24, &ratio_tab);
+        assert_eq!(x, z);
+    }
+
+    #[test]
+    fn run_kernels_empty_and_degenerate_ranges() {
+        use crate::jt::mapping::RunMap;
+        let rm = RunMap { map: vec![0, 1], run_len: 3 };
+        let src = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut dst = [0.0, 0.0];
+        marg_runs_range(&src, &rm, 3..3, &mut dst);
+        assert_eq!(dst, [0.0, 0.0]);
+        let mut t = src;
+        extend_runs_range(&mut t, &rm, 0..0, &[2.0, 2.0]);
+        assert_eq!(t, src);
+    }
+
+    #[test]
+    fn ratio_zero_over_zero_is_zero() {
+        let mut out = vec![f64::NAN; 3];
+        ratio(&[1.0, 0.0, 2.0], &[2.0, 0.0, 0.5], &mut out);
+        assert_eq!(out, vec![0.5, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn reduce_partials_sums_workers() {
+        let p1 = vec![1.0, 2.0];
+        let p2 = vec![10.0, 20.0];
+        let mut dst = vec![99.0, 99.0];
+        reduce_partials(&[&p1, &p2], &mut dst);
+        assert_eq!(dst, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn atomic_add_is_exactly_float_add() {
+        let slot = AtomicU64::new(1.5f64.to_bits());
+        atomic_add_f64(&slot, 2.25);
+        assert_eq!(f64::from_bits(slot.load(Ordering::Relaxed)), 3.75);
+    }
+
+    #[test]
+    fn zero_scale_sum_roundtrip() {
+        let mut v = vec![1.0, 2.0, 3.0];
+        scale(&mut v, 2.0);
+        assert_eq!(sum(&v), 12.0);
+        zero(&mut v);
+        assert_eq!(sum(&v), 0.0);
+    }
+}

@@ -1,0 +1,289 @@
+//! Dense potential tables over sets of discrete variables.
+//!
+//! A [`Potential`] maps every joint configuration of its variables to a
+//! non-negative real. Layout is row-major over the variable list with the
+//! **last variable varying fastest**; variable lists are kept sorted by
+//! `VarId` so two potentials over the same set share a layout.
+//!
+//! This type is the *general* (metadata-carrying) interface used for
+//! construction, queries, tests and the brute-force oracle. The inference
+//! hot path works on raw `&[f64]` slices plus precomputed index maps — see
+//! [`crate::jt::ops`] and [`crate::jt::mapping`].
+
+use crate::bn::network::Network;
+use crate::bn::variable::VarId;
+use crate::jt::mapping::{build_map, Odometer};
+
+/// A dense table over a sorted set of discrete variables.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Potential {
+    /// Variable ids, strictly ascending.
+    pub vars: Vec<VarId>,
+    /// `cards[i]` = cardinality of `vars[i]`.
+    pub cards: Vec<usize>,
+    /// Row-major values, `vars.last()` fastest; `len = Π cards`.
+    pub data: Vec<f64>,
+}
+
+impl Potential {
+    /// A constant-1 potential (multiplicative identity) over `vars`.
+    pub fn ones(mut vars: Vec<VarId>, all_cards: &[usize]) -> Self {
+        vars.sort_unstable();
+        vars.dedup();
+        let cards: Vec<usize> = vars.iter().map(|&v| all_cards[v]).collect();
+        let len: usize = cards.iter().product();
+        Potential { vars, cards, data: vec![1.0; len] }
+    }
+
+    /// The empty-scope potential holding a single scalar.
+    pub fn scalar(value: f64) -> Self {
+        Potential { vars: vec![], cards: vec![], data: vec![value] }
+    }
+
+    /// Convert the CPT of variable `v` into a potential over its family
+    /// `{v} ∪ parents(v)` (sorted).
+    pub fn from_cpt(net: &Network, v: VarId) -> Self {
+        let cpt = &net.cpts[v];
+        let all_cards = net.cards();
+        let mut fam: Vec<VarId> = cpt.parents.clone();
+        fam.push(v);
+        let mut pot = Potential::ones(fam, &all_cards);
+
+        // CPT index order is [parents..., child] (child fastest); the
+        // potential is over sorted vars. Walk the potential's entries with
+        // an odometer and compute the CPT index from per-variable strides.
+        let mut cpt_stride = vec![0usize; pot.vars.len()];
+        // child contributes stride 1
+        let child_pos = pot.vars.binary_search(&v).unwrap();
+        cpt_stride[child_pos] = 1;
+        let mut acc = all_cards[v];
+        for &p in cpt.parents.iter().rev() {
+            let pos = pot.vars.binary_search(&p).unwrap();
+            cpt_stride[pos] = acc;
+            acc *= all_cards[p];
+        }
+        let mut odo = Odometer::new(&pot.cards);
+        for slot in pot.data.iter_mut() {
+            let mut idx = 0usize;
+            for (d, &s) in odo.digits().iter().zip(&cpt_stride) {
+                idx += d * s;
+            }
+            *slot = cpt.probs[idx];
+            odo.step();
+        }
+        pot
+    }
+
+    /// Number of entries.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the scope is empty (scalar potential).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.vars.is_empty()
+    }
+
+    /// Entry index for a full assignment (indexed by `VarId`).
+    pub fn index_of(&self, assignment: &[usize]) -> usize {
+        let mut idx = 0usize;
+        for (i, &v) in self.vars.iter().enumerate() {
+            debug_assert!(assignment[v] < self.cards[i]);
+            idx = idx * self.cards[i] + assignment[v];
+        }
+        idx
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Normalize to sum 1; returns the pre-normalization sum (0 if the
+    /// table was all zero, in which case it is left untouched).
+    pub fn normalize(&mut self) -> f64 {
+        let s = self.sum();
+        if s > 0.0 {
+            let inv = 1.0 / s;
+            for x in &mut self.data {
+                *x *= inv;
+            }
+        }
+        s
+    }
+
+    /// Multiply a potential over a **subset** of this scope into this one
+    /// (table *extension* in the paper's terminology).
+    pub fn multiply_in(&mut self, sub: &Potential) {
+        debug_assert!(sub.vars.iter().all(|v| self.vars.contains(v)), "multiply_in requires a sub-scope");
+        let map = build_map(&self.vars, &self.cards, &sub.vars, &sub.cards);
+        for (i, x) in self.data.iter_mut().enumerate() {
+            *x *= sub.data[map[i] as usize];
+        }
+    }
+
+    /// Marginalize onto a subset of the scope (sum out the rest).
+    pub fn marginalize_onto(&self, keep: &[VarId]) -> Potential {
+        let mut keep: Vec<VarId> = keep.iter().copied().filter(|v| self.vars.contains(v)).collect();
+        keep.sort_unstable();
+        keep.dedup();
+        let cards: Vec<usize> = keep
+            .iter()
+            .map(|v| self.cards[self.vars.binary_search(v).unwrap()])
+            .collect();
+        let len: usize = cards.iter().product();
+        let mut out = Potential { vars: keep, cards, data: vec![0.0; len] };
+        let map = build_map(&self.vars, &self.cards, &out.vars, &out.cards);
+        for (i, &x) in self.data.iter().enumerate() {
+            out.data[map[i] as usize] += x;
+        }
+        out
+    }
+
+    /// Restrict a variable to one state: zero out all disagreeing entries
+    /// (evidence entry; the paper's table *reduction* acts on the result).
+    pub fn reduce(&mut self, v: VarId, state: usize) {
+        let pos = match self.vars.binary_search(&v) {
+            Ok(p) => p,
+            Err(_) => return,
+        };
+        let card = self.cards[pos];
+        let stride: usize = self.cards[pos + 1..].iter().product();
+        let block = stride * card;
+        for chunk in self.data.chunks_mut(block) {
+            for s in 0..card {
+                if s != state {
+                    for x in &mut chunk[s * stride..(s + 1) * stride] {
+                        *x = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+
+    #[test]
+    fn ones_and_scalar() {
+        let p = Potential::ones(vec![2, 0], &[2, 3, 4]);
+        assert_eq!(p.vars, vec![0, 2]);
+        assert_eq!(p.cards, vec![2, 4]);
+        assert_eq!(p.len(), 8);
+        assert!(p.data.iter().all(|&x| x == 1.0));
+        let s = Potential::scalar(3.5);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.sum(), 3.5);
+    }
+
+    #[test]
+    fn from_cpt_root_variable() {
+        let net = embedded::asia();
+        let a = net.var_id("asia").unwrap();
+        let p = Potential::from_cpt(&net, a);
+        assert_eq!(p.vars, vec![a]);
+        assert_eq!(p.data, vec![0.01, 0.99]);
+    }
+
+    #[test]
+    fn from_cpt_child_variable_matches_rows() {
+        let net = embedded::asia();
+        let (tub, asia) = (net.var_id("tub").unwrap(), net.var_id("asia").unwrap());
+        let p = Potential::from_cpt(&net, tub);
+        // vars sorted: asia < tub (ids follow declaration order: asia=0, tub=1)
+        assert_eq!(p.vars, vec![asia, tub]);
+        // P(tub=yes|asia=yes)=0.05 etc. Entry (asia=yes, tub=yes) = index 0.
+        assert_eq!(p.data, vec![0.05, 0.95, 0.01, 0.99]);
+    }
+
+    #[test]
+    fn from_cpt_two_parents_or_gate() {
+        let net = embedded::asia();
+        let either = net.var_id("either").unwrap();
+        let lung = net.var_id("lung").unwrap();
+        let tub = net.var_id("tub").unwrap();
+        let p = Potential::from_cpt(&net, either);
+        // P(either=yes | lung, tub) = OR
+        let mut assignment = vec![0usize; net.n()];
+        for ls in 0..2 {
+            for ts in 0..2 {
+                for es in 0..2 {
+                    assignment[lung] = ls;
+                    assignment[tub] = ts;
+                    assignment[either] = es;
+                    let want = if ls == 0 || ts == 0 {
+                        if es == 0 { 1.0 } else { 0.0 }
+                    } else if es == 0 {
+                        0.0
+                    } else {
+                        1.0
+                    };
+                    assert_eq!(p.data[p.index_of(&assignment)], want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn marginalize_inverts_structure() {
+        let net = embedded::asia();
+        let tub = net.var_id("tub").unwrap();
+        let asia = net.var_id("asia").unwrap();
+        let joint = {
+            // P(asia) * P(tub|asia)
+            let mut p = Potential::from_cpt(&net, tub);
+            p.multiply_in(&Potential::from_cpt(&net, asia));
+            p
+        };
+        // marginal over asia recovers the prior
+        let m = joint.marginalize_onto(&[asia]);
+        assert!((m.data[0] - 0.01).abs() < 1e-12);
+        assert!((m.data[1] - 0.99).abs() < 1e-12);
+        // marginal over tub: P(tub=yes) = .01*.05 + .99*.01
+        let m = joint.marginalize_onto(&[tub]);
+        assert!((m.data[0] - (0.01 * 0.05 + 0.99 * 0.01)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn marginalize_onto_empty_gives_total() {
+        let net = embedded::asia();
+        let p = Potential::from_cpt(&net, net.var_id("asia").unwrap());
+        let s = p.marginalize_onto(&[]);
+        assert_eq!(s.len(), 1);
+        assert!((s.data[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduce_zeroes_disagreeing_entries() {
+        let mut p = Potential::ones(vec![0, 1], &[2, 3]);
+        p.reduce(1, 2);
+        // entries with var1 != 2 are zero
+        assert_eq!(p.data, vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0]);
+        // reducing a variable not in scope is a no-op
+        let before = p.clone();
+        p.reduce(7, 0);
+        assert_eq!(p, before);
+    }
+
+    #[test]
+    fn normalize_handles_zero_table() {
+        let mut p = Potential { vars: vec![0], cards: vec![2], data: vec![0.0, 0.0] };
+        assert_eq!(p.normalize(), 0.0);
+        assert_eq!(p.data, vec![0.0, 0.0]);
+        let mut q = Potential { vars: vec![0], cards: vec![2], data: vec![1.0, 3.0] };
+        assert_eq!(q.normalize(), 4.0);
+        assert!((q.data[1] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multiply_in_scalar_is_uniform_scale() {
+        let mut p = Potential::ones(vec![0], &[3]);
+        p.multiply_in(&Potential::scalar(0.5));
+        assert_eq!(p.data, vec![0.5; 3]);
+    }
+}

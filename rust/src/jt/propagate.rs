@@ -1,0 +1,304 @@
+//! Sequential message passing (collect + distribute), the reference
+//! implementation all parallel engines must agree with.
+//!
+//! One message `from → to` through separator `sep` is the classic Hugin
+//! update:
+//!
+//! 1. **marginalization**: `new_sep[j] = Σ_{i: map(i)=j} clique_from[i]`;
+//! 2. scaling: `new_sep /= Σ new_sep` (underflow protection on deep trees;
+//!    the scale factor is accumulated into `log_z`, so `P(e)` is exact);
+//! 3. **reduction**: `ratio[j] = new_sep[j] / old_sep[j]` (0/0 → 0);
+//! 4. **extension**: `clique_to[i] *= ratio[map(i)]`.
+//!
+//! The [`MapMode`] parameter selects the index-mapping strategy — the
+//! bottleneck the paper simplifies — so the same code path can run in
+//! "naive" (per-entry div/mod, the UnBBayes-style baseline) or "cached"
+//! (precomputed per-edge maps) mode. See `benches/ablation.rs`.
+
+use crate::jt::mapping::{projection_strides, strides};
+use crate::jt::ops;
+use crate::jt::schedule::{Msg, Schedule};
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::{Error, Result};
+
+/// Index-mapping strategy for the table operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MapMode {
+    /// Precomputed per-edge maps (Fast-BNI).
+    #[default]
+    Cached,
+    /// Incremental odometer, no materialized map (memory-lean middle
+    /// ground; ablation point).
+    Odometer,
+    /// Per-entry div/mod chains recomputed every message (naive baseline).
+    DivMod,
+}
+
+/// Reusable scratch buffers for one propagation pass.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// New separator values (capacity = max separator length).
+    pub new_sep: Vec<f64>,
+    /// Ratio `new/old` (same capacity).
+    pub ratio: Vec<f64>,
+}
+
+impl Scratch {
+    /// Scratch sized for a tree.
+    pub fn for_tree(jt: &JunctionTree) -> Self {
+        let cap = jt.seps.iter().map(|s| s.len).max().unwrap_or(1);
+        Scratch { new_sep: vec![0.0; cap], ratio: vec![0.0; cap] }
+    }
+}
+
+/// Send one message sequentially. Returns the separator mass before
+/// scaling (0.0 signals inconsistent evidence).
+pub fn send_message(
+    jt: &JunctionTree,
+    state: &mut TreeState,
+    msg: Msg,
+    mode: MapMode,
+    scratch: &mut Scratch,
+) -> f64 {
+    let sep_meta = &jt.seps[msg.sep];
+    let sep_len = sep_meta.len;
+    let new_sep = &mut scratch.new_sep[..sep_len];
+    ops::zero(new_sep);
+
+    // 1. marginalization: clique_from -> new_sep
+    {
+        let src = &state.cliques[msg.from];
+        match mode {
+            MapMode::Cached => {
+                let rm = jt.edge_maps[msg.sep].runs_from(sep_meta, msg.from);
+                ops::marg_runs(src, rm, new_sep);
+            }
+            MapMode::Odometer => {
+                let c = &jt.cliques[msg.from];
+                let ps = projection_strides(&c.vars, &sep_meta.vars, &sep_meta.cards);
+                ops::marg_odometer(src, &c.cards, &ps, new_sep);
+            }
+            MapMode::DivMod => {
+                let c = &jt.cliques[msg.from];
+                let ps = projection_strides(&c.vars, &sep_meta.vars, &sep_meta.cards);
+                let ss = strides(&c.cards);
+                ops::marg_divmod(src, &c.cards, &ss, &ps, new_sep);
+            }
+        }
+    }
+
+    // 2. scale
+    let mass = ops::sum(new_sep);
+    if mass == 0.0 {
+        return 0.0;
+    }
+    ops::scale(new_sep, 1.0 / mass);
+    state.log_z += mass.ln();
+
+    // 3. reduction: ratio = new / old; store new into the separator
+    let ratio = &mut scratch.ratio[..sep_len];
+    {
+        let old_sep = &mut state.seps[msg.sep];
+        ops::ratio(new_sep, old_sep, ratio);
+        old_sep.copy_from_slice(new_sep);
+    }
+
+    // 4. extension: clique_to *= ratio[map]
+    {
+        let dst = &mut state.cliques[msg.to];
+        match mode {
+            MapMode::Cached => {
+                let rm = jt.edge_maps[msg.sep].runs_from(sep_meta, msg.to);
+                ops::extend_runs(dst, rm, ratio);
+            }
+            MapMode::Odometer => {
+                let c = &jt.cliques[msg.to];
+                let ps = projection_strides(&c.vars, &sep_meta.vars, &sep_meta.cards);
+                ops::extend_odometer(dst, &c.cards, &ps, ratio);
+            }
+            MapMode::DivMod => {
+                let c = &jt.cliques[msg.to];
+                let ps = projection_strides(&c.vars, &sep_meta.vars, &sep_meta.cards);
+                let ss = strides(&c.cards);
+                ops::extend_divmod(dst, &c.cards, &ss, &ps, ratio);
+            }
+        }
+    }
+    mass
+}
+
+/// Collect phase: leaves → roots, layer by layer. Finishes by folding each
+/// root's residual mass into `log_z`, after which `state.log_z = ln P(e)`.
+pub fn collect(
+    jt: &JunctionTree,
+    sched: &Schedule,
+    state: &mut TreeState,
+    mode: MapMode,
+    scratch: &mut Scratch,
+) -> Result<()> {
+    for layer in &sched.up_layers {
+        for &msg in layer {
+            if send_message(jt, state, msg, mode, scratch) == 0.0 {
+                return Err(Error::InconsistentEvidence);
+            }
+        }
+    }
+    for &root in &sched.roots {
+        let data = &mut state.cliques[root];
+        let mass = ops::sum(data);
+        if mass == 0.0 {
+            return Err(Error::InconsistentEvidence);
+        }
+        ops::scale(data, 1.0 / mass);
+        state.log_z += mass.ln();
+    }
+    Ok(())
+}
+
+/// Distribute phase: roots → leaves, layer by layer. Downward scale
+/// factors do not contribute evidence mass, so `log_z` is preserved.
+pub fn distribute(
+    jt: &JunctionTree,
+    sched: &Schedule,
+    state: &mut TreeState,
+    mode: MapMode,
+    scratch: &mut Scratch,
+) -> Result<()> {
+    let z = state.log_z;
+    for layer in &sched.down_layers {
+        for &msg in layer {
+            if send_message(jt, state, msg, mode, scratch) == 0.0 {
+                return Err(Error::InconsistentEvidence);
+            }
+        }
+    }
+    state.log_z = z;
+    Ok(())
+}
+
+/// Full calibration: reset → evidence → collect → distribute.
+pub fn calibrate(
+    jt: &JunctionTree,
+    sched: &Schedule,
+    state: &mut TreeState,
+    ev: &crate::jt::evidence::Evidence,
+    mode: MapMode,
+    scratch: &mut Scratch,
+) -> Result<()> {
+    state.reset(jt);
+    ev.apply(jt, state);
+    collect(jt, sched, state, mode, scratch)?;
+    distribute(jt, sched, state, mode, scratch)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::jt::evidence::Evidence;
+    use crate::jt::schedule::RootStrategy;
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    fn setup(net: &crate::bn::network::Network) -> (JunctionTree, Schedule, TreeState, Scratch) {
+        let jt = JunctionTree::compile(net, TriangulationHeuristic::MinFill).unwrap();
+        let sched = Schedule::build(&jt, RootStrategy::Center);
+        let state = TreeState::fresh(&jt);
+        let scratch = Scratch::for_tree(&jt);
+        (jt, sched, state, scratch)
+    }
+
+    #[test]
+    fn no_evidence_log_z_is_zero() {
+        let net = embedded::asia();
+        let (jt, sched, mut state, mut scratch) = setup(&net);
+        calibrate(&jt, &sched, &mut state, &Evidence::none(), MapMode::Cached, &mut scratch).unwrap();
+        assert!(state.log_z.abs() < 1e-9, "ln P() = {} should be 0", state.log_z);
+    }
+
+    #[test]
+    fn log_z_matches_hand_computed_evidence_probability() {
+        // P(smoke=yes) = 0.5
+        let net = embedded::asia();
+        let (jt, sched, mut state, mut scratch) = setup(&net);
+        let ev = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+        calibrate(&jt, &sched, &mut state, &ev, MapMode::Cached, &mut scratch).unwrap();
+        assert!((state.log_z.exp() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibration_makes_neighboring_cliques_consistent() {
+        // after calibrate, both endpoints of every separator must agree on
+        // the separator marginal
+        let net = embedded::asia();
+        let (jt, sched, mut state, mut scratch) = setup(&net);
+        let ev = Evidence::from_pairs(&net, &[("xray", "yes")]).unwrap();
+        calibrate(&jt, &sched, &mut state, &ev, MapMode::Cached, &mut scratch).unwrap();
+        for (sid, sep) in jt.seps.iter().enumerate() {
+            let mut from_a = vec![0.0; sep.len];
+            let mut from_b = vec![0.0; sep.len];
+            ops::marg_with_map(&state.cliques[sep.a], &jt.edge_maps[sid].from_a, &mut from_a);
+            ops::marg_with_map(&state.cliques[sep.b], &jt.edge_maps[sid].from_b, &mut from_b);
+            let sa = ops::sum(&from_a);
+            let sb = ops::sum(&from_b);
+            for j in 0..sep.len {
+                assert!(
+                    (from_a[j] / sa - from_b[j] / sb).abs() < 1e-9,
+                    "sep {sid} entry {j}: {} vs {}",
+                    from_a[j] / sa,
+                    from_b[j] / sb
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn map_modes_agree() {
+        let net = embedded::mixed12();
+        let (jt, sched, _, mut scratch) = setup(&net);
+        let ev = Evidence::from_ids(vec![(0, 0), (5, 1)]);
+        let mut results = Vec::new();
+        for mode in [MapMode::Cached, MapMode::Odometer, MapMode::DivMod] {
+            let mut state = TreeState::fresh(&jt);
+            calibrate(&jt, &sched, &mut state, &ev, mode, &mut scratch).unwrap();
+            results.push(state);
+        }
+        for other in &results[1..] {
+            assert!((results[0].log_z - other.log_z).abs() < 1e-9);
+            for (a, b) in results[0].cliques.iter().zip(&other.cliques) {
+                for (x, y) in a.iter().zip(b) {
+                    assert!((x - y).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn impossible_evidence_is_detected() {
+        // either = no but xray = yes is possible; need truly impossible:
+        // either=no AND lung=yes (either is the OR of lung and tub)
+        let net = embedded::asia();
+        let (jt, sched, mut state, mut scratch) = setup(&net);
+        let ev = Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        let r = calibrate(&jt, &sched, &mut state, &ev, MapMode::Cached, &mut scratch);
+        assert!(matches!(r, Err(Error::InconsistentEvidence)));
+    }
+
+    #[test]
+    fn root_strategy_does_not_change_results() {
+        let net = embedded::mixed12();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let ev = Evidence::from_ids(vec![(3, 0)]);
+        let mut scratch = Scratch::for_tree(&jt);
+        let mut outs = Vec::new();
+        for strat in [RootStrategy::Center, RootStrategy::First, RootStrategy::Fixed(0)] {
+            let sched = Schedule::build(&jt, strat);
+            let mut state = TreeState::fresh(&jt);
+            calibrate(&jt, &sched, &mut state, &ev, MapMode::Cached, &mut scratch).unwrap();
+            outs.push(state.log_z);
+        }
+        assert!((outs[0] - outs[1]).abs() < 1e-9);
+        assert!((outs[0] - outs[2]).abs() < 1e-9);
+    }
+}

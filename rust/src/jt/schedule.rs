@@ -1,0 +1,335 @@
+//! The paper's inter-clique machinery: BFS leveling + root selection.
+//!
+//! §2: *"Our traversal method views all the cliques and separators as
+//! nodes of the tree and marks the layer where each of them is located"* —
+//! [`Schedule::build`] roots the tree (forest) and records, per depth
+//! layer, the set of messages whose dependencies are satisfied, so all
+//! messages of a layer can run concurrently.
+//!
+//! *"We employ a root selection strategy to construct a more balanced tree
+//! with the minimal number of layers"* — [`RootStrategy::Center`] picks the
+//! tree center (midpoint of a diameter path), which minimizes tree height
+//! and hence the number of parallel-region invocations.
+
+use crate::jt::tree::JunctionTree;
+
+/// How to pick the root clique of each tree in the forest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RootStrategy {
+    /// Tree center — minimal height (the paper's strategy, default).
+    #[default]
+    Center,
+    /// First clique of each component (the naive baseline ablated in
+    /// `benches/ablation.rs`).
+    First,
+    /// A fixed clique id (single-tree networks only; useful in tests).
+    Fixed(usize),
+}
+
+/// One message: clique `from` sends to clique `to` through separator `sep`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Msg {
+    pub from: usize,
+    pub to: usize,
+    pub sep: usize,
+}
+
+/// A rooted traversal schedule over the junction forest.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// Root clique of each component.
+    pub roots: Vec<usize>,
+    /// `parent[c]` = (parent clique, separator) or None for roots.
+    pub parent: Vec<Option<(usize, usize)>>,
+    /// `children[c]` = (child clique, separator) pairs.
+    pub children: Vec<Vec<(usize, usize)>>,
+    /// BFS depth per clique (roots at 0).
+    pub depth: Vec<usize>,
+    /// `levels[d]` = cliques at depth `d`.
+    pub levels: Vec<Vec<usize>>,
+    /// Collect-phase layers, deepest first: `up_layers[i]` holds all
+    /// messages from depth `height-i` cliques to their parents.
+    pub up_layers: Vec<Vec<Msg>>,
+    /// Distribute-phase layers, shallowest first.
+    pub down_layers: Vec<Vec<Msg>>,
+}
+
+impl Schedule {
+    /// Build the schedule for a tree under a root strategy.
+    pub fn build(jt: &JunctionTree, strategy: RootStrategy) -> Schedule {
+        let m = jt.n_cliques();
+        let mut comp = vec![usize::MAX; m];
+        let mut comps: Vec<Vec<usize>> = Vec::new();
+        for start in 0..m {
+            if comp[start] != usize::MAX {
+                continue;
+            }
+            let id = comps.len();
+            let mut members = Vec::new();
+            let mut queue = std::collections::VecDeque::new();
+            comp[start] = id;
+            queue.push_back(start);
+            while let Some(c) = queue.pop_front() {
+                members.push(c);
+                for &(nb, _) in &jt.adj[c] {
+                    if comp[nb] == usize::MAX {
+                        comp[nb] = id;
+                        queue.push_back(nb);
+                    }
+                }
+            }
+            comps.push(members);
+        }
+
+        let roots: Vec<usize> = comps
+            .iter()
+            .map(|members| match strategy {
+                RootStrategy::First => members[0],
+                RootStrategy::Fixed(r) => {
+                    assert!(members.contains(&r) || comps.len() > 1, "fixed root must be a clique id");
+                    if members.contains(&r) {
+                        r
+                    } else {
+                        members[0]
+                    }
+                }
+                RootStrategy::Center => tree_center(jt, members),
+            })
+            .collect();
+
+        // BFS from the roots
+        let mut parent: Vec<Option<(usize, usize)>> = vec![None; m];
+        let mut children: Vec<Vec<(usize, usize)>> = vec![Vec::new(); m];
+        let mut depth = vec![usize::MAX; m];
+        let mut queue = std::collections::VecDeque::new();
+        for &r in &roots {
+            depth[r] = 0;
+            queue.push_back(r);
+        }
+        let mut order = Vec::with_capacity(m);
+        while let Some(c) = queue.pop_front() {
+            order.push(c);
+            for &(nb, sid) in &jt.adj[c] {
+                if depth[nb] == usize::MAX {
+                    depth[nb] = depth[c] + 1;
+                    parent[nb] = Some((c, sid));
+                    children[c].push((nb, sid));
+                    queue.push_back(nb);
+                }
+            }
+        }
+        debug_assert_eq!(order.len(), m);
+
+        let height = depth.iter().copied().max().unwrap_or(0);
+        let mut levels: Vec<Vec<usize>> = vec![Vec::new(); height + 1];
+        for c in 0..m {
+            levels[depth[c]].push(c);
+        }
+
+        // collect: messages from depth d to d-1, for d = height .. 1
+        let mut up_layers = Vec::with_capacity(height);
+        for d in (1..=height).rev() {
+            let layer: Vec<Msg> = levels[d]
+                .iter()
+                .filter_map(|&c| parent[c].map(|(p, sid)| Msg { from: c, to: p, sep: sid }))
+                .collect();
+            up_layers.push(layer);
+        }
+        // distribute: messages from depth d to d+1, for d = 0 .. height-1
+        let mut down_layers = Vec::with_capacity(height);
+        for d in 0..height {
+            let layer: Vec<Msg> = levels[d]
+                .iter()
+                .flat_map(|&c| children[c].iter().map(move |&(ch, sid)| Msg { from: c, to: ch, sep: sid }))
+                .collect();
+            down_layers.push(layer);
+        }
+
+        Schedule { roots, parent, children, depth, levels, up_layers, down_layers }
+    }
+
+    /// Tree height (number of message layers per phase).
+    pub fn height(&self) -> usize {
+        self.up_layers.len()
+    }
+
+    /// Total number of messages per phase (= #separators).
+    pub fn n_messages(&self) -> usize {
+        self.up_layers.iter().map(|l| l.len()).sum()
+    }
+}
+
+/// Center of one tree component: run BFS from an arbitrary member to find
+/// the farthest clique `u`, BFS again from `u` to find the diameter path,
+/// return its midpoint — the vertex minimizing eccentricity, i.e. the root
+/// of minimal height.
+fn tree_center(jt: &JunctionTree, members: &[usize]) -> usize {
+    let u = bfs_farthest(jt, members[0]).0;
+    let (_v, path) = bfs_farthest_with_path(jt, u);
+    path[path.len() / 2]
+}
+
+fn bfs_farthest(jt: &JunctionTree, start: usize) -> (usize, usize) {
+    let mut dist = std::collections::HashMap::new();
+    dist.insert(start, 0usize);
+    let mut queue = std::collections::VecDeque::new();
+    queue.push_back(start);
+    let mut far = (start, 0usize);
+    while let Some(c) = queue.pop_front() {
+        let d = dist[&c];
+        if d > far.1 || (d == far.1 && c < far.0) {
+            far = (c, d);
+        }
+        for &(nb, _) in &jt.adj[c] {
+            if !dist.contains_key(&nb) {
+                dist.insert(nb, d + 1);
+                queue.push_back(nb);
+            }
+        }
+    }
+    far
+}
+
+fn bfs_farthest_with_path(jt: &JunctionTree, start: usize) -> (usize, Vec<usize>) {
+    let mut prev: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+    let mut dist = std::collections::HashMap::new();
+    dist.insert(start, 0usize);
+    let mut queue = std::collections::VecDeque::new();
+    queue.push_back(start);
+    let mut far = (start, 0usize);
+    while let Some(c) = queue.pop_front() {
+        let d = dist[&c];
+        if d > far.1 || (d == far.1 && c < far.0) {
+            far = (c, d);
+        }
+        for &(nb, _) in &jt.adj[c] {
+            if !dist.contains_key(&nb) {
+                dist.insert(nb, d + 1);
+                prev.insert(nb, c);
+                queue.push_back(nb);
+            }
+        }
+    }
+    // reconstruct path start -> far.0
+    let mut path = vec![far.0];
+    let mut cur = far.0;
+    while let Some(&p) = prev.get(&cur) {
+        path.push(p);
+        cur = p;
+    }
+    path.reverse();
+    (far.0, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::{embedded, netgen};
+    use crate::jt::triangulate::TriangulationHeuristic;
+    use crate::jt::tree::JunctionTree;
+
+    fn compile(net: &crate::bn::network::Network) -> JunctionTree {
+        JunctionTree::compile(net, TriangulationHeuristic::MinFill).unwrap()
+    }
+
+    #[test]
+    fn schedule_covers_all_messages_once() {
+        let jt = compile(&embedded::asia());
+        let s = Schedule::build(&jt, RootStrategy::Center);
+        assert_eq!(s.n_messages(), jt.seps.len());
+        // every separator appears exactly once per phase
+        let mut seen = vec![0usize; jt.seps.len()];
+        for layer in &s.up_layers {
+            for m in layer {
+                seen[m.sep] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn up_layers_respect_dependencies() {
+        // a clique must send to its parent only after all its children sent
+        let jt = compile(&embedded::mixed12());
+        let s = Schedule::build(&jt, RootStrategy::Center);
+        let mut sent = vec![false; jt.n_cliques()];
+        for layer in &s.up_layers {
+            for m in layer {
+                // all children of m.from must have sent already
+                for &(ch, _) in &s.children[m.from] {
+                    assert!(sent[ch], "clique {} sent before child {}", m.from, ch);
+                }
+            }
+            for m in layer {
+                sent[m.from] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn down_layers_respect_dependencies() {
+        let jt = compile(&embedded::mixed12());
+        let s = Schedule::build(&jt, RootStrategy::Center);
+        let mut received = vec![false; jt.n_cliques()];
+        for &r in &s.roots {
+            received[r] = true;
+        }
+        for layer in &s.down_layers {
+            for m in layer {
+                assert!(received[m.from], "clique {} sends down before receiving", m.from);
+            }
+            for m in layer {
+                received[m.to] = true;
+            }
+        }
+        assert!(received.iter().all(|&r| r));
+    }
+
+    #[test]
+    fn center_root_minimizes_height() {
+        for seed in 0..10 {
+            let net = netgen::tiny_random(seed + 100, 8);
+            let jt = compile(&net);
+            let center = Schedule::build(&jt, RootStrategy::Center);
+            // center height must be <= height from any fixed root
+            for r in 0..jt.n_cliques() {
+                let fixed = Schedule::build(&jt, RootStrategy::Fixed(r));
+                assert!(
+                    center.height() <= fixed.height(),
+                    "seed {seed}: center {} > fixed({r}) {}",
+                    center.height(),
+                    fixed.height()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn depths_are_bfs_consistent() {
+        let jt = compile(&embedded::asia());
+        let s = Schedule::build(&jt, RootStrategy::First);
+        for c in 0..jt.n_cliques() {
+            match s.parent[c] {
+                None => assert_eq!(s.depth[c], 0),
+                Some((p, _)) => assert_eq!(s.depth[c], s.depth[p] + 1),
+            }
+        }
+    }
+
+    #[test]
+    fn forest_has_one_root_per_component() {
+        use crate::bn::cpt::Cpt;
+        use crate::bn::network::Network;
+        use crate::bn::variable::Variable;
+        let vars = vec![Variable::with_card("a", 2), Variable::with_card("b", 2)];
+        let cpts = vec![
+            Cpt::new(0, vec![], vec![0.5, 0.5], &[2, 2]).unwrap(),
+            Cpt::new(1, vec![], vec![0.5, 0.5], &[2, 2]).unwrap(),
+        ];
+        let net = Network::new("two", vars, cpts).unwrap();
+        let jt = compile(&net);
+        let s = Schedule::build(&jt, RootStrategy::Center);
+        assert_eq!(s.roots.len(), 2);
+        assert_eq!(s.height(), 0);
+    }
+}

@@ -1,0 +1,98 @@
+//! Per-case mutable propagation state.
+//!
+//! The compiled [`crate::jt::tree::JunctionTree`] is immutable and shared;
+//! each test case gets a [`TreeState`] holding its clique and separator
+//! tables. States are pooled and **reset** (memcpy from the prototype)
+//! rather than reallocated — per-case allocation is one of the overheads
+//! the paper's baselines suffer from, and its absence is part of the
+//! Fast-BNI hot path (see EXPERIMENTS.md §Perf).
+
+use crate::jt::tree::JunctionTree;
+
+/// Mutable potential tables for one inference case.
+#[derive(Clone, Debug)]
+pub struct TreeState {
+    /// Clique tables, aligned with `jt.cliques`.
+    pub cliques: Vec<Vec<f64>>,
+    /// Separator tables, aligned with `jt.seps`; start at all-ones.
+    pub seps: Vec<Vec<f64>>,
+    /// Accumulated log normalization: after collect, `log_z = ln P(e)`.
+    pub log_z: f64,
+}
+
+impl TreeState {
+    /// Allocate a state initialized from the prototype potentials.
+    pub fn fresh(jt: &JunctionTree) -> Self {
+        TreeState {
+            cliques: jt.prototype.clone(),
+            seps: jt.seps.iter().map(|s| vec![1.0; s.len]).collect(),
+            log_z: 0.0,
+        }
+    }
+
+    /// Reset to the prototype without reallocating.
+    pub fn reset(&mut self, jt: &JunctionTree) {
+        for (dst, src) in self.cliques.iter_mut().zip(&jt.prototype) {
+            dst.copy_from_slice(src);
+        }
+        for sep in &mut self.seps {
+            for x in sep.iter_mut() {
+                *x = 1.0;
+            }
+        }
+        self.log_z = 0.0;
+    }
+
+    /// Total number of f64 entries held (cliques + separators).
+    pub fn n_entries(&self) -> usize {
+        self.cliques.iter().map(|c| c.len()).sum::<usize>() + self.seps.iter().map(|s| s.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    #[test]
+    fn fresh_matches_prototype() {
+        let net = embedded::asia();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let st = TreeState::fresh(&jt);
+        assert_eq!(st.cliques.len(), jt.n_cliques());
+        assert_eq!(st.seps.len(), jt.seps.len());
+        for (c, p) in st.cliques.iter().zip(&jt.prototype) {
+            assert_eq!(c, p);
+        }
+        assert!(st.seps.iter().all(|s| s.iter().all(|&x| x == 1.0)));
+    }
+
+    #[test]
+    fn reset_restores_after_mutation() {
+        let net = embedded::asia();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let mut st = TreeState::fresh(&jt);
+        for c in &mut st.cliques {
+            for x in c.iter_mut() {
+                *x = 42.0;
+            }
+        }
+        st.seps[0][0] = 7.0;
+        st.log_z = 3.0;
+        st.reset(&jt);
+        for (c, p) in st.cliques.iter().zip(&jt.prototype) {
+            assert_eq!(c, p);
+        }
+        assert_eq!(st.seps[0][0], 1.0);
+        assert_eq!(st.log_z, 0.0);
+    }
+
+    #[test]
+    fn entry_count_matches_tree() {
+        let net = embedded::asia();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let st = TreeState::fresh(&jt);
+        assert_eq!(st.n_entries(), jt.total_clique_entries() + jt.total_sep_entries());
+    }
+}

@@ -1,0 +1,303 @@
+//! Triangulation of the moral graph and maximal-clique extraction.
+//!
+//! Exact minimum-fill triangulation is NP-hard; like the paper's pipeline
+//! (and every practical JT implementation) we use greedy elimination
+//! heuristics. The elimination order determines the clique-size
+//! distribution, which in turn drives every cost the paper measures.
+
+use std::collections::HashSet;
+
+use crate::jt::moralize::UGraph;
+
+/// Greedy elimination heuristic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TriangulationHeuristic {
+    /// Eliminate the vertex introducing the fewest fill-in edges
+    /// (ties: smaller weighted clique, then smaller index). The default —
+    /// matches FastBN's choice.
+    MinFill,
+    /// Eliminate the vertex of minimum degree (ties: smaller index).
+    MinDegree,
+    /// Eliminate the vertex minimizing the log-state-space of the clique
+    /// it would form ("min-weight").
+    MinWeight,
+}
+
+impl std::str::FromStr for TriangulationHeuristic {
+    type Err = crate::Error;
+    fn from_str(s: &str) -> crate::Result<Self> {
+        match s {
+            "min-fill" | "minfill" => Ok(Self::MinFill),
+            "min-degree" | "mindegree" => Ok(Self::MinDegree),
+            "min-weight" | "minweight" => Ok(Self::MinWeight),
+            other => Err(crate::Error::msg(format!("unknown heuristic {other:?}"))),
+        }
+    }
+}
+
+/// Result of triangulation: the elimination order, the filled (chordal)
+/// graph, and the elimination cliques (one per vertex, not yet maximal).
+pub struct Triangulation {
+    /// Vertices in elimination order.
+    pub order: Vec<usize>,
+    /// The chordal graph (moral + fill edges).
+    pub filled: UGraph,
+    /// `cliques[i]` = sorted `{order[i]} ∪ N(order[i])` at elimination time.
+    pub cliques: Vec<Vec<usize>>,
+}
+
+/// Triangulate `g` (consumed as a working copy) with the given heuristic.
+/// `weights[v]` is the log-cardinality of `v`, used by `MinWeight` and for
+/// tie-breaking in `MinFill`.
+pub fn triangulate(g: &UGraph, weights: &[f64], heuristic: TriangulationHeuristic) -> Triangulation {
+    let n = g.n();
+    let mut work: Vec<HashSet<usize>> = g.adj.iter().map(|l| l.iter().copied().collect()).collect();
+    let mut filled = g.clone();
+    let mut alive: Vec<bool> = vec![true; n];
+    let mut order = Vec::with_capacity(n);
+    let mut cliques = Vec::with_capacity(n);
+
+    // Score of eliminating v under the heuristic (lower is better).
+    let score = |work: &Vec<HashSet<usize>>, v: usize, heuristic: TriangulationHeuristic| -> (f64, f64) {
+        match heuristic {
+            TriangulationHeuristic::MinDegree => (work[v].len() as f64, 0.0),
+            TriangulationHeuristic::MinWeight => {
+                let w: f64 = work[v].iter().map(|&u| weights[u]).sum::<f64>() + weights[v];
+                (w, work[v].len() as f64)
+            }
+            TriangulationHeuristic::MinFill => {
+                let neigh: Vec<usize> = work[v].iter().copied().collect();
+                let mut fill = 0usize;
+                for (i, &a) in neigh.iter().enumerate() {
+                    for &b in &neigh[i + 1..] {
+                        if !work[a].contains(&b) {
+                            fill += 1;
+                        }
+                    }
+                }
+                let w: f64 = neigh.iter().map(|&u| weights[u]).sum::<f64>() + weights[v];
+                (fill as f64, w)
+            }
+        }
+    };
+
+    for _ in 0..n {
+        // pick the best alive vertex
+        let mut best: Option<(usize, (f64, f64))> = None;
+        for v in 0..n {
+            if !alive[v] {
+                continue;
+            }
+            let s = score(&work, v, heuristic);
+            let better = match &best {
+                None => true,
+                Some((bv, bs)) => s < *bs || (s == *bs && v < *bv),
+            };
+            if better {
+                best = Some((v, s));
+            }
+        }
+        let (v, _) = best.expect("there is always an alive vertex");
+
+        // record elimination clique
+        let mut clique: Vec<usize> = work[v].iter().copied().collect();
+        clique.push(v);
+        clique.sort_unstable();
+        cliques.push(clique);
+
+        // connect neighbors (fill-in)
+        let neigh: Vec<usize> = work[v].iter().copied().collect();
+        for (i, &a) in neigh.iter().enumerate() {
+            for &b in &neigh[i + 1..] {
+                if work[a].insert(b) {
+                    work[b].insert(a);
+                    filled.add_edge(a, b);
+                }
+            }
+        }
+        // remove v
+        for &u in &neigh {
+            work[u].remove(&v);
+        }
+        work[v].clear();
+        alive[v] = false;
+        order.push(v);
+    }
+
+    Triangulation { order, filled, cliques }
+}
+
+/// Filter elimination cliques down to the maximal ones (no clique contained
+/// in another). Quadratic subset filtering — runs once per network.
+pub fn maximal_cliques(elim_cliques: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    // sort by size descending so containers come first
+    let mut sorted: Vec<&Vec<usize>> = elim_cliques.iter().collect();
+    sorted.sort_by_key(|c| std::cmp::Reverse(c.len()));
+    let mut keep: Vec<Vec<usize>> = Vec::new();
+    'next: for cand in sorted {
+        for k in &keep {
+            if is_subset(cand, k) {
+                continue 'next;
+            }
+        }
+        keep.push(cand.clone());
+    }
+    keep
+}
+
+/// `a ⊆ b` for sorted slices.
+pub fn is_subset(a: &[usize], b: &[usize]) -> bool {
+    if a.len() > b.len() {
+        return false;
+    }
+    let mut it = b.iter();
+    'outer: for x in a {
+        for y in it.by_ref() {
+            if y == x {
+                continue 'outer;
+            }
+            if y > x {
+                return false;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Verify chordality of `g` given a perfect elimination order — used by
+/// tests to check the triangulation output.
+pub fn is_chordal_with_order(g: &UGraph, order: &[usize]) -> bool {
+    let n = g.n();
+    let mut pos = vec![0usize; n];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v] = i;
+    }
+    for &v in order {
+        // later neighbors of v must form a clique
+        let later: Vec<usize> = g.adj[v].iter().copied().filter(|&u| pos[u] > pos[v]).collect();
+        for (i, &a) in later.iter().enumerate() {
+            for &b in &later[i + 1..] {
+                if !g.has_edge(a, b) {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::jt::moralize::moralize;
+
+    fn log_cards(net: &crate::bn::network::Network) -> Vec<f64> {
+        net.cards().iter().map(|&c| (c as f64).ln()).collect()
+    }
+
+    #[test]
+    fn subset_check() {
+        assert!(is_subset(&[1, 3], &[1, 2, 3]));
+        assert!(is_subset(&[], &[1]));
+        assert!(!is_subset(&[1, 4], &[1, 2, 3]));
+        assert!(!is_subset(&[1, 2, 3], &[1, 2]));
+        assert!(is_subset(&[2], &[2]));
+    }
+
+    #[test]
+    fn cycle4_gets_fill_edge() {
+        // 4-cycle needs exactly one chord
+        let mut g = UGraph::new(4);
+        for (a, b) in [(0, 1), (1, 2), (2, 3), (3, 0)] {
+            g.add_edge(a, b);
+        }
+        for h in [
+            TriangulationHeuristic::MinFill,
+            TriangulationHeuristic::MinDegree,
+            TriangulationHeuristic::MinWeight,
+        ] {
+            let t = triangulate(&g, &[1.0; 4], h);
+            assert_eq!(t.filled.n_edges(), 5, "{h:?}");
+            assert!(is_chordal_with_order(&t.filled, &t.order), "{h:?}");
+        }
+    }
+
+    #[test]
+    fn chordal_graph_gets_no_fill() {
+        // a triangle + pendant is already chordal
+        let mut g = UGraph::new(4);
+        for (a, b) in [(0, 1), (1, 2), (0, 2), (2, 3)] {
+            g.add_edge(a, b);
+        }
+        let t = triangulate(&g, &[1.0; 4], TriangulationHeuristic::MinFill);
+        assert_eq!(t.filled.n_edges(), g.n_edges());
+    }
+
+    #[test]
+    fn asia_cliques_match_literature() {
+        // The Asia JT famously has 6 cliques, all of size ≤ 3.
+        let net = embedded::asia();
+        let g = moralize(&net);
+        let t = triangulate(&g, &log_cards(&net), TriangulationHeuristic::MinFill);
+        assert!(is_chordal_with_order(&t.filled, &t.order));
+        let cliques = maximal_cliques(&t.cliques);
+        assert_eq!(cliques.len(), 6);
+        assert!(cliques.iter().all(|c| c.len() <= 3));
+    }
+
+    #[test]
+    fn maximal_cliques_have_no_containment() {
+        let net = embedded::mixed12();
+        let g = moralize(&net);
+        for h in [
+            TriangulationHeuristic::MinFill,
+            TriangulationHeuristic::MinDegree,
+            TriangulationHeuristic::MinWeight,
+        ] {
+            let t = triangulate(&g, &log_cards(&net), h);
+            let cliques = maximal_cliques(&t.cliques);
+            for (i, a) in cliques.iter().enumerate() {
+                for (j, b) in cliques.iter().enumerate() {
+                    if i != j {
+                        assert!(!is_subset(a, b), "clique {a:?} ⊆ {b:?}");
+                    }
+                }
+            }
+            // every vertex appears in some clique
+            let mut seen = vec![false; net.n()];
+            for c in &cliques {
+                for &v in c {
+                    seen[v] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn every_family_is_covered_by_filled_graph_cliques() {
+        // moralization + triangulation must keep each family together
+        let net = embedded::asia();
+        let g = moralize(&net);
+        let t = triangulate(&g, &log_cards(&net), TriangulationHeuristic::MinFill);
+        let cliques = maximal_cliques(&t.cliques);
+        for v in 0..net.n() {
+            let mut fam: Vec<usize> = net.parents(v).to_vec();
+            fam.push(v);
+            fam.sort_unstable();
+            assert!(
+                cliques.iter().any(|c| is_subset(&fam, c)),
+                "family of {v} not contained in any clique"
+            );
+        }
+    }
+
+    #[test]
+    fn heuristic_parses_from_str() {
+        assert_eq!("min-fill".parse::<TriangulationHeuristic>().unwrap(), TriangulationHeuristic::MinFill);
+        assert_eq!("mindegree".parse::<TriangulationHeuristic>().unwrap(), TriangulationHeuristic::MinDegree);
+        assert!("bogus".parse::<TriangulationHeuristic>().is_err());
+    }
+}

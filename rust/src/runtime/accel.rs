@@ -1,0 +1,183 @@
+//! `SeqXlaEngine` — a sequential engine that routes large messages
+//! through the PJRT/XLA backend.
+//!
+//! Proves the three-layer composition on the request path: the Rust
+//! coordinator walks the tree; for each message whose tables exceed
+//! `threshold` entries (and fit an artifact bucket), the clique is packed
+//! into its sep-major 2-D view, the AOT `marg`/`absorb` artifacts run via
+//! PJRT, and the results are scattered back. Smaller messages use the
+//! native kernels — on CPU the PJRT dispatch overhead dominates small
+//! tables (see `benches/table_ops.rs` for the measured crossover).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::engine::{Engine, EngineConfig};
+use crate::infer::query::Posteriors;
+use crate::jt::evidence::Evidence;
+use crate::jt::ops;
+use crate::jt::propagate::Scratch;
+use crate::jt::schedule::{Msg, Schedule};
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::runtime::buckets::SepMajorView;
+use crate::runtime::ops::{TableOps2d, XlaOps};
+use crate::{Error, Result};
+
+/// Sequential engine with XLA-accelerated large-table operations.
+pub struct SeqXlaEngine {
+    jt: Arc<JunctionTree>,
+    sched: Schedule,
+    xla: XlaOps,
+    /// Minimum clique entries to route through XLA.
+    threshold: usize,
+    /// Cached sep-major views per (clique, sep) actually routed.
+    views: HashMap<(usize, usize), SepMajorView>,
+    scratch: Scratch,
+    packed: Vec<f64>,
+    /// Count of ops served by XLA vs native (for reporting).
+    pub xla_ops: u64,
+    /// Count of ops served natively.
+    pub native_ops: u64,
+}
+
+impl SeqXlaEngine {
+    /// Build from an artifact directory. `threshold` in table entries.
+    pub fn new(jt: Arc<JunctionTree>, cfg: &EngineConfig, artifact_dir: &Path, threshold: usize) -> Result<Self> {
+        let sched = Schedule::build(&jt, cfg.root_strategy);
+        let xla = XlaOps::load(artifact_dir)?;
+        let scratch = Scratch::for_tree(&jt);
+        let max_clique = jt.cliques.iter().map(|c| c.len).max().unwrap_or(1);
+        Ok(SeqXlaEngine {
+            jt,
+            sched,
+            xla,
+            threshold,
+            views: HashMap::new(),
+            scratch,
+            packed: Vec::with_capacity(max_clique),
+            xla_ops: 0,
+            native_ops: 0,
+        })
+    }
+
+    fn view(&mut self, clique: usize, sep: usize) -> &SepMajorView {
+        let jt = &self.jt;
+        self.views
+            .entry((clique, sep))
+            .or_insert_with(|| SepMajorView::build(&jt.cliques[clique], &jt.seps[sep]))
+    }
+
+    /// Whether a (clique, sep) op should go through XLA.
+    fn use_xla(&self, clique: usize, sep: usize) -> bool {
+        let c = &self.jt.cliques[clique];
+        let s = &self.jt.seps[sep];
+        let k = c.len / s.len.max(1);
+        c.len >= self.threshold && self.xla.fits(s.len, k)
+    }
+
+    fn send(&mut self, state: &mut TreeState, msg: Msg) -> Result<f64> {
+        let sep_len = self.jt.seps[msg.sep].len;
+
+        // marginalization
+        {
+            let new_sep_owned: Vec<f64>;
+            if self.use_xla(msg.from, msg.sep) {
+                let view = self.view(msg.from, msg.sep).clone();
+                let mut packed = std::mem::take(&mut self.packed);
+                packed.resize(view.perm.len(), 0.0);
+                view.pack(&state.cliques[msg.from], &mut packed);
+                let mut out = vec![0.0; view.m_len];
+                self.xla.marginalize(&packed, view.m_len, view.k_len, &mut out)?;
+                self.packed = packed;
+                self.xla_ops += 1;
+                new_sep_owned = out;
+            } else {
+                let sep_meta = &self.jt.seps[msg.sep];
+                let map = self.jt.edge_maps[msg.sep].from(sep_meta, msg.from);
+                let mut out = vec![0.0; sep_len];
+                ops::marg_with_map(&state.cliques[msg.from], map, &mut out);
+                self.native_ops += 1;
+                new_sep_owned = out;
+            }
+            self.scratch.new_sep[..sep_len].copy_from_slice(&new_sep_owned);
+        }
+
+        let mass = ops::sum(&self.scratch.new_sep[..sep_len]);
+        if mass == 0.0 {
+            return Ok(0.0);
+        }
+        ops::scale(&mut self.scratch.new_sep[..sep_len], 1.0 / mass);
+        state.log_z += mass.ln();
+
+        // extension (+ reduction)
+        if self.use_xla(msg.to, msg.sep) {
+            let view = self.view(msg.to, msg.sep).clone();
+            let mut packed = std::mem::take(&mut self.packed);
+            packed.resize(view.perm.len(), 0.0);
+            view.pack(&state.cliques[msg.to], &mut packed);
+            let old = state.seps[msg.sep].clone();
+            self.xla
+                .absorb(&mut packed, view.m_len, view.k_len, &self.scratch.new_sep[..sep_len], &old)?;
+            view.unpack(&packed, &mut state.cliques[msg.to]);
+            self.packed = packed;
+            self.xla_ops += 1;
+        } else {
+            let sep_meta = &self.jt.seps[msg.sep];
+            let map = self.jt.edge_maps[msg.sep].from(sep_meta, msg.to);
+            ops::ratio(&self.scratch.new_sep[..sep_len], &state.seps[msg.sep], &mut self.scratch.ratio[..sep_len]);
+            ops::extend_with_map(&mut state.cliques[msg.to], map, &self.scratch.ratio[..sep_len]);
+            self.native_ops += 1;
+        }
+        state.seps[msg.sep].copy_from_slice(&self.scratch.new_sep[..sep_len]);
+        Ok(mass)
+    }
+}
+
+impl Engine for SeqXlaEngine {
+    fn name(&self) -> &'static str {
+        "Fast-BNI-seq+xla"
+    }
+
+    fn infer(&mut self, state: &mut TreeState, ev: &Evidence) -> Result<Posteriors> {
+        state.reset(&self.jt);
+        ev.apply(&self.jt, state);
+        let up: Vec<Vec<Msg>> = self.sched.up_layers.clone();
+        for layer in &up {
+            for &msg in layer {
+                if self.send(state, msg)? == 0.0 {
+                    return Err(Error::InconsistentEvidence);
+                }
+            }
+        }
+        for root in self.sched.roots.clone() {
+            let data = &mut state.cliques[root];
+            let mass = ops::sum(data);
+            if mass == 0.0 {
+                return Err(Error::InconsistentEvidence);
+            }
+            ops::scale(data, 1.0 / mass);
+            state.log_z += mass.ln();
+        }
+        let z = state.log_z;
+        let down: Vec<Vec<Msg>> = self.sched.down_layers.clone();
+        for layer in &down {
+            for &msg in layer {
+                if self.send(state, msg)? == 0.0 {
+                    return Err(Error::InconsistentEvidence);
+                }
+            }
+        }
+        state.log_z = z;
+        Posteriors::compute(&self.jt, state)
+    }
+
+    fn schedule(&self) -> &Schedule {
+        &self.sched
+    }
+
+    fn tree(&self) -> &Arc<JunctionTree> {
+        &self.jt
+    }
+}

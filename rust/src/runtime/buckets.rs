@@ -1,0 +1,253 @@
+//! Shape buckets, padding, and the sep-major 2-D view of clique tables.
+//!
+//! The AOT artifacts are compiled for fixed `(M, K)` shapes (XLA is
+//! static-shape); the runtime pads each clique's 2-D view up to the
+//! smallest bucket that fits. Padding is all-zero, which both table ops
+//! treat as absent mass (zero rows marginalize to zero; absorb multiplies
+//! zeros), so results are exact after slicing back.
+//!
+//! The 2-D view itself reorders a clique table so the separator variables
+//! become the leading (row) axis: row `m` enumerates separator
+//! configurations in separator-table order, column `k` the remaining
+//! variables. This is the TPU-side answer to the paper's index mappings —
+//! gather once into the layout where the ops are dense (see DESIGN.md
+//! §Hardware-Adaptation).
+
+use std::path::Path;
+
+use crate::jt::tree::{Clique, Separator};
+use crate::{Error, Result};
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// `(M, K)` buckets that have both `marg` and `absorb` artifacts,
+    /// sorted by area then rows.
+    pub buckets: Vec<(usize, usize)>,
+    /// All `(op, dims, filename)` entries.
+    pub entries: Vec<(String, Vec<usize>, String)>,
+}
+
+impl Manifest {
+    /// Read `manifest.txt` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() < 3 {
+                return Err(Error::msg(format!("bad manifest line {line:?}")));
+            }
+            let op = parts[0].to_string();
+            let dims: Vec<usize> = parts[1..parts.len() - 1]
+                .iter()
+                .map(|d| d.parse().map_err(|_| Error::msg(format!("bad dim in {line:?}"))))
+                .collect::<Result<_>>()?;
+            entries.push((op, dims, parts[parts.len() - 1].to_string()));
+        }
+        let mut margs: Vec<(usize, usize)> = entries
+            .iter()
+            .filter(|(op, dims, _)| op == "marg" && dims.len() == 2)
+            .map(|(_, d, _)| (d[0], d[1]))
+            .collect();
+        margs.retain(|&(m, k)| {
+            entries.iter().any(|(op, d, _)| op == "absorb" && d.len() == 2 && d[0] == m && d[1] == k)
+        });
+        margs.sort_by_key(|&(m, k)| (m * k, m));
+        Ok(Manifest { buckets: margs, entries })
+    }
+
+    /// Smallest bucket covering an `(m, k)` table, if any.
+    pub fn bucket_for(&self, m: usize, k: usize) -> Option<(usize, usize)> {
+        self.buckets.iter().copied().find(|&(bm, bk)| bm >= m && bk >= k)
+    }
+
+    /// Filename for an op at a bucket.
+    pub fn file_for(&self, op: &str, bucket: (usize, usize)) -> Option<&str> {
+        self.entries
+            .iter()
+            .find(|(o, d, _)| o == op && d.len() == 2 && d[0] == bucket.0 && d[1] == bucket.1)
+            .map(|(_, _, f)| f.as_str())
+    }
+}
+
+/// The sep-major 2-D view of one (clique, separator) pair.
+///
+/// `perm[m * k_len + k]` is the flat clique index of 2-D position
+/// `(m, k)`; row `m` equals the separator-table index by construction.
+#[derive(Clone, Debug)]
+pub struct SepMajorView {
+    /// Rows = separator length.
+    pub m_len: usize,
+    /// Columns = clique length / separator length.
+    pub k_len: usize,
+    /// 2-D position → flat clique index.
+    pub perm: Vec<u32>,
+}
+
+impl SepMajorView {
+    /// Build the view for `clique` with `sep ⊆ clique`.
+    pub fn build(clique: &Clique, sep: &Separator) -> SepMajorView {
+        // axis order: sep vars (sorted, matching sep-table layout), then
+        // the rest of the clique vars (sorted)
+        let rest: Vec<usize> =
+            clique.vars.iter().copied().filter(|v| sep.vars.binary_search(v).is_err()).collect();
+        let m_len = sep.len.max(1);
+        let k_len = clique.len / m_len;
+
+        // per-axis clique strides in the (sep..., rest...) order
+        let stride_of = |v: usize| -> usize {
+            let pos = clique.vars.binary_search(&v).expect("sep var must be in clique");
+            clique.strides[pos]
+        };
+        let axis_vars: Vec<usize> = sep.vars.iter().chain(rest.iter()).copied().collect();
+        let axis_cards: Vec<usize> = axis_vars
+            .iter()
+            .map(|&v| {
+                let pos = clique.vars.binary_search(&v).unwrap();
+                clique.cards[pos]
+            })
+            .collect();
+        let axis_strides: Vec<usize> = axis_vars.iter().map(|&v| stride_of(v)).collect();
+
+        // odometer over (sep..., rest...) emitting the clique flat index
+        let mut perm = Vec::with_capacity(clique.len);
+        let mut digits = vec![0usize; axis_vars.len()];
+        let mut flat = 0usize;
+        for _ in 0..clique.len {
+            perm.push(flat as u32);
+            for i in (0..digits.len()).rev() {
+                digits[i] += 1;
+                if digits[i] < axis_cards[i] {
+                    flat += axis_strides[i];
+                    break;
+                }
+                digits[i] = 0;
+                flat -= (axis_cards[i] - 1) * axis_strides[i];
+            }
+        }
+        SepMajorView { m_len, k_len, perm }
+    }
+
+    /// Gather the clique table into the 2-D layout.
+    pub fn pack(&self, clique: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.perm.len());
+        for (o, &p) in out.iter_mut().zip(&self.perm) {
+            *o = clique[p as usize];
+        }
+    }
+
+    /// Scatter a 2-D-layout table back into the clique layout.
+    pub fn unpack(&self, packed: &[f64], clique: &mut [f64]) {
+        debug_assert_eq!(packed.len(), self.perm.len());
+        for (x, &p) in packed.iter().zip(&self.perm) {
+            clique[p as usize] = *x;
+        }
+    }
+}
+
+/// Zero-pad a row-major `(m, k)` table into an `(bm, bk)` buffer.
+pub fn pad_2d(src: &[f64], m: usize, k: usize, bm: usize, bk: usize, dst: &mut Vec<f64>) {
+    debug_assert!(bm >= m && bk >= k);
+    dst.clear();
+    dst.resize(bm * bk, 0.0);
+    for row in 0..m {
+        dst[row * bk..row * bk + k].copy_from_slice(&src[row * k..(row + 1) * k]);
+    }
+}
+
+/// Slice an `(bm, bk)` buffer back down to `(m, k)` row-major.
+pub fn unpad_2d(src: &[f64], bm: usize, bk: usize, m: usize, k: usize, dst: &mut [f64]) {
+    debug_assert!(bm >= m && bk >= k);
+    debug_assert_eq!(dst.len(), m * k);
+    let _ = bm;
+    for row in 0..m {
+        dst[row * k..(row + 1) * k].copy_from_slice(&src[row * bk..row * bk + k]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::jt::ops;
+    use crate::jt::tree::JunctionTree;
+    use crate::jt::triangulate::TriangulationHeuristic;
+    use crate::rng::Rng;
+
+    #[test]
+    fn manifest_parses_and_selects_buckets() {
+        let dir = std::path::Path::new("artifacts");
+        if !crate::runtime::artifacts_available(dir) {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let man = Manifest::load(dir).unwrap();
+        assert!(!man.buckets.is_empty());
+        let (bm, bk) = man.bucket_for(10, 10).unwrap();
+        assert!(bm >= 10 && bk >= 10);
+        // exact fit picks the exact bucket
+        let first = man.buckets[0];
+        assert_eq!(man.bucket_for(first.0, first.1).unwrap(), first);
+        assert!(man.file_for("marg", first).is_some());
+        assert!(man.file_for("absorb", first).is_some());
+        // oversize request yields None
+        assert!(man.bucket_for(1 << 20, 1 << 20).is_none());
+    }
+
+    #[test]
+    fn sep_major_view_is_a_permutation_and_rows_match_sep_indices() {
+        let net = embedded::mixed12();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let mut rng = Rng::new(3);
+        for (sid, sep) in jt.seps.iter().enumerate() {
+            for &cid in &[sep.a, sep.b] {
+                let clique = &jt.cliques[cid];
+                let view = SepMajorView::build(clique, sep);
+                assert_eq!(view.m_len * view.k_len, clique.len);
+                assert_eq!(view.m_len, sep.len);
+                // permutation property
+                let mut seen = vec![false; clique.len];
+                for &p in &view.perm {
+                    assert!(!seen[p as usize]);
+                    seen[p as usize] = true;
+                }
+                // row sums through the view == map-based marginalization
+                let data: Vec<f64> = (0..clique.len).map(|_| rng.f64()).collect();
+                let mut packed = vec![0.0; clique.len];
+                view.pack(&data, &mut packed);
+                let mut by_rows = vec![0.0; sep.len];
+                for m in 0..view.m_len {
+                    by_rows[m] = packed[m * view.k_len..(m + 1) * view.k_len].iter().sum();
+                }
+                let mut by_map = vec![0.0; sep.len];
+                ops::marg_with_map(&data, jt.edge_maps[sid].from(sep, cid), &mut by_map);
+                for j in 0..sep.len {
+                    assert!((by_rows[j] - by_map[j]).abs() < 1e-9, "sep {sid} clique {cid} row {j}");
+                }
+                // pack/unpack roundtrip
+                let mut restored = vec![0.0; clique.len];
+                view.unpack(&packed, &mut restored);
+                assert_eq!(restored, data);
+            }
+        }
+    }
+
+    #[test]
+    fn pad_unpad_roundtrip() {
+        let src: Vec<f64> = (0..6).map(|x| x as f64).collect(); // (2,3)
+        let mut padded = Vec::new();
+        pad_2d(&src, 2, 3, 4, 8, &mut padded);
+        assert_eq!(padded.len(), 32);
+        assert_eq!(padded[0..3], [0.0, 1.0, 2.0]);
+        assert_eq!(padded[8..11], [3.0, 4.0, 5.0]);
+        assert!(padded[3..8].iter().all(|&x| x == 0.0));
+        let mut out = vec![0.0; 6];
+        unpad_2d(&padded, 4, 8, 2, 3, &mut out);
+        assert_eq!(out, src);
+    }
+}

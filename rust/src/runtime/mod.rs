@@ -1,0 +1,30 @@
+//! The XLA/PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! * [`pjrt`] — thin wrapper over the `xla` crate (PJRT CPU client,
+//!   HLO-text loading, execution).
+//! * [`buckets`] — artifact manifest, shape-bucket selection, zero-padding
+//!   and the sep-major 2-D view permutation of clique tables.
+//! * [`ops`] — the `TableOps2d` backend trait with `NativeOps` (plain
+//!   loops, the default hot path) and `XlaOps` (PJRT-executed artifacts);
+//!   `benches/table_ops.rs` measures the crossover.
+//! * [`accel`] — `SeqXlaEngine`, a sequential engine that routes
+//!   sufficiently large messages through the XLA backend, proving the
+//!   three layers compose on the request path.
+//!
+//! Python runs only at build time (`make artifacts`); the binary consumes
+//! HLO text exclusively.
+
+pub mod accel;
+pub mod buckets;
+pub mod ops;
+pub mod pjrt;
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// True if the artifact directory looks built (used by tests/benches to
+/// skip XLA-dependent sections with a notice instead of failing).
+pub fn artifacts_available(dir: &std::path::Path) -> bool {
+    dir.join("manifest.txt").exists()
+}

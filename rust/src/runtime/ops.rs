@@ -1,0 +1,289 @@
+//! Table-op backends over the sep-major 2-D layout.
+//!
+//! `NativeOps` is the plain-Rust hot path (what the paper's CPU algorithm
+//! does, restated in the 2-D layout so both backends are measured on the
+//! same memory access pattern); `XlaOps` executes the AOT artifacts via
+//! PJRT with bucket padding. `benches/table_ops.rs` sweeps table sizes to
+//! find the dispatch-overhead crossover.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::runtime::buckets::{pad_2d, unpad_2d, Manifest};
+use crate::runtime::pjrt::{Executable, PjrtRuntime};
+use crate::{Error, Result};
+
+/// A backend for the two dominant table operations on `(m, k)` sep-major
+/// tables.
+pub trait TableOps2d {
+    /// Backend name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Row sums: `out[r] = Σ_c table[r, c]`; `out.len() == m`.
+    fn marginalize(&mut self, table: &[f64], m: usize, k: usize, out: &mut [f64]) -> Result<()>;
+
+    /// In-place `table[r, c] *= new[r]/old[r]` (0/0 → 0).
+    fn absorb(&mut self, table: &mut [f64], m: usize, k: usize, sep_new: &[f64], sep_old: &[f64]) -> Result<()>;
+}
+
+/// Plain-loop backend.
+#[derive(Default)]
+pub struct NativeOps;
+
+impl TableOps2d for NativeOps {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn marginalize(&mut self, table: &[f64], m: usize, k: usize, out: &mut [f64]) -> Result<()> {
+        debug_assert_eq!(table.len(), m * k);
+        debug_assert_eq!(out.len(), m);
+        for r in 0..m {
+            out[r] = table[r * k..(r + 1) * k].iter().sum();
+        }
+        Ok(())
+    }
+
+    fn absorb(&mut self, table: &mut [f64], m: usize, k: usize, sep_new: &[f64], sep_old: &[f64]) -> Result<()> {
+        debug_assert_eq!(table.len(), m * k);
+        for r in 0..m {
+            let ratio = if sep_old[r] != 0.0 { sep_new[r] / sep_old[r] } else { 0.0 };
+            for x in &mut table[r * k..(r + 1) * k] {
+                *x *= ratio;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// PJRT-backed ops over the AOT artifacts.
+pub struct XlaOps {
+    runtime: PjrtRuntime,
+    manifest: Manifest,
+    dir: PathBuf,
+    execs: HashMap<(&'static str, (usize, usize)), Executable>,
+    // reusable padding buffers
+    buf_table: Vec<f64>,
+    buf_sep_new: Vec<f64>,
+    buf_sep_old: Vec<f64>,
+}
+
+impl XlaOps {
+    /// Load the manifest and create the PJRT client. Executables compile
+    /// lazily on first use per (op, bucket).
+    pub fn load(dir: &Path) -> Result<XlaOps> {
+        let manifest = Manifest::load(dir)?;
+        if manifest.buckets.is_empty() {
+            return Err(Error::Runtime("artifact manifest has no usable buckets".into()));
+        }
+        Ok(XlaOps {
+            runtime: PjrtRuntime::cpu()?,
+            manifest,
+            dir: dir.to_path_buf(),
+            execs: HashMap::new(),
+            buf_table: Vec::new(),
+            buf_sep_new: Vec::new(),
+            buf_sep_old: Vec::new(),
+        })
+    }
+
+    /// The available buckets.
+    pub fn buckets(&self) -> &[(usize, usize)] {
+        &self.manifest.buckets
+    }
+
+    /// Largest table this backend can serve.
+    pub fn capacity(&self) -> (usize, usize) {
+        self.manifest.buckets.last().copied().unwrap_or((0, 0))
+    }
+
+    /// True if an `(m, k)` table fits some bucket.
+    pub fn fits(&self, m: usize, k: usize) -> bool {
+        self.manifest.bucket_for(m, k).is_some()
+    }
+
+    fn executable(&mut self, op: &'static str, bucket: (usize, usize)) -> Result<&Executable> {
+        if !self.execs.contains_key(&(op, bucket)) {
+            let file = self
+                .manifest
+                .file_for(op, bucket)
+                .ok_or_else(|| Error::Runtime(format!("no {op} artifact for bucket {bucket:?}")))?;
+            let exe = self.runtime.compile_hlo_text(&self.dir.join(file))?;
+            self.execs.insert((op, bucket), exe);
+        }
+        Ok(&self.execs[&(op, bucket)])
+    }
+}
+
+impl XlaOps {
+    /// Batched bucket list: `(B, M, K)` shapes with both `bmarg` and
+    /// `babsorb` artifacts.
+    pub fn batched_buckets(&self) -> Vec<(usize, usize, usize)> {
+        self.manifest
+            .entries
+            .iter()
+            .filter(|(op, d, _)| op == "bmarg" && d.len() == 3)
+            .filter(|(_, d, _)| {
+                self.manifest
+                    .entries
+                    .iter()
+                    .any(|(op2, d2, _)| op2 == "babsorb" && d2 == d)
+            })
+            .map(|(_, d, _)| (d[0], d[1], d[2]))
+            .collect()
+    }
+
+    fn batched_executable(&mut self, op: &'static str, b: usize, m: usize, k: usize) -> Result<&Executable> {
+        // batched artifacts are keyed by (op, (b * m, k)) to reuse the map
+        let key = (op, (b * (1 << 20) + m, k));
+        if !self.execs.contains_key(&key) {
+            let file = self
+                .manifest
+                .entries
+                .iter()
+                .find(|(o, d, _)| o == op && d.len() == 3 && d[0] == b && d[1] == m && d[2] == k)
+                .map(|(_, _, f)| f.clone())
+                .ok_or_else(|| Error::Runtime(format!("no {op} artifact for ({b},{m},{k})")))?;
+            let exe = self.runtime.compile_hlo_text(&self.dir.join(&file))?;
+            self.execs.insert(key, exe);
+        }
+        Ok(&self.execs[&key])
+    }
+
+    /// Batched row-sum marginalization: `tables` is `(B, M, K)` flattened;
+    /// returns `(B, M)` flattened. Amortizes one PJRT dispatch over `B`
+    /// same-bucket messages (e.g. the same edge across evidence cases).
+    pub fn marginalize_batch(&mut self, tables: &[f64], b: usize, m: usize, k: usize) -> Result<Vec<f64>> {
+        debug_assert_eq!(tables.len(), b * m * k);
+        let exe = self.batched_executable("bmarg", b, m, k)?;
+        exe.run_f64(&[(tables, &[b as i64, m as i64, k as i64])])
+    }
+
+    /// Batched absorb: `tables` `(B, M, K)`, `sep_new`/`sep_old` `(B, M)`;
+    /// returns the updated `(B, M, K)` tables.
+    pub fn absorb_batch(
+        &mut self,
+        tables: &[f64],
+        b: usize,
+        m: usize,
+        k: usize,
+        sep_new: &[f64],
+        sep_old: &[f64],
+    ) -> Result<Vec<f64>> {
+        debug_assert_eq!(tables.len(), b * m * k);
+        debug_assert_eq!(sep_new.len(), b * m);
+        debug_assert_eq!(sep_old.len(), b * m);
+        let exe = self.batched_executable("babsorb", b, m, k)?;
+        exe.run_f64(&[
+            (tables, &[b as i64, m as i64, k as i64]),
+            (sep_new, &[b as i64, m as i64]),
+            (sep_old, &[b as i64, m as i64]),
+        ])
+    }
+}
+
+impl TableOps2d for XlaOps {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn marginalize(&mut self, table: &[f64], m: usize, k: usize, out: &mut [f64]) -> Result<()> {
+        let bucket = self
+            .manifest
+            .bucket_for(m, k)
+            .ok_or_else(|| Error::Runtime(format!("no bucket for ({m}, {k})")))?;
+        let (bm, bk) = bucket;
+        let mut buf = std::mem::take(&mut self.buf_table);
+        pad_2d(table, m, k, bm, bk, &mut buf);
+        let exe = self.executable("marg", bucket)?;
+        let result = exe.run_f64(&[(&buf, &[bm as i64, bk as i64])])?;
+        self.buf_table = buf;
+        out.copy_from_slice(&result[..m]);
+        Ok(())
+    }
+
+    fn absorb(&mut self, table: &mut [f64], m: usize, k: usize, sep_new: &[f64], sep_old: &[f64]) -> Result<()> {
+        let bucket = self
+            .manifest
+            .bucket_for(m, k)
+            .ok_or_else(|| Error::Runtime(format!("no bucket for ({m}, {k})")))?;
+        let (bm, bk) = bucket;
+        let mut buf = std::mem::take(&mut self.buf_table);
+        pad_2d(table, m, k, bm, bk, &mut buf);
+        // pad separators: old=1 on padding rows avoids 0/0 work, new=0
+        // keeps padded rows at zero
+        let mut sep_new_buf = std::mem::take(&mut self.buf_sep_new);
+        sep_new_buf.clear();
+        sep_new_buf.extend_from_slice(sep_new);
+        sep_new_buf.resize(bm, 0.0);
+        let mut sep_old_buf = std::mem::take(&mut self.buf_sep_old);
+        sep_old_buf.clear();
+        sep_old_buf.extend_from_slice(sep_old);
+        sep_old_buf.resize(bm, 1.0);
+        let exe = self.executable("absorb", bucket)?;
+        let result = exe.run_f64(&[
+            (&buf, &[bm as i64, bk as i64]),
+            (&sep_new_buf, &[bm as i64]),
+            (&sep_old_buf, &[bm as i64]),
+        ])?;
+        unpad_2d(&result, bm, bk, m, k, table);
+        self.buf_table = buf;
+        self.buf_sep_new = sep_new_buf;
+        self.buf_sep_old = sep_old_buf;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn native_ops_match_directly_computed_values() {
+        let mut native = NativeOps;
+        let table = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // (2,3)
+        let mut out = vec![0.0; 2];
+        native.marginalize(&table, 2, 3, &mut out).unwrap();
+        assert_eq!(out, vec![6.0, 15.0]);
+
+        let mut t = table.clone();
+        native.absorb(&mut t, 2, 3, &[2.0, 0.0], &[1.0, 0.0]).unwrap();
+        assert_eq!(t, vec![2.0, 4.0, 6.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn xla_ops_match_native_on_random_tables() {
+        let dir = std::path::Path::new("artifacts");
+        if !crate::runtime::artifacts_available(dir) {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut xla = XlaOps::load(dir).unwrap();
+        let mut native = NativeOps;
+        let mut rng = Rng::new(11);
+        for &(m, k) in &[(3usize, 5usize), (16, 16), (17, 40), (200, 100)] {
+            if !xla.fits(m, k) {
+                continue;
+            }
+            let table: Vec<f64> = (0..m * k).map(|_| rng.f64()).collect();
+            let mut a = vec![0.0; m];
+            let mut b = vec![0.0; m];
+            native.marginalize(&table, m, k, &mut a).unwrap();
+            xla.marginalize(&table, m, k, &mut b).unwrap();
+            for j in 0..m {
+                assert!((a[j] - b[j]).abs() < 1e-9, "({m},{k}) row {j}: {} vs {}", a[j], b[j]);
+            }
+
+            let sep_new: Vec<f64> = (0..m).map(|_| rng.f64()).collect();
+            let sep_old: Vec<f64> = (0..m).map(|_| 0.1 + rng.f64()).collect();
+            let mut ta = table.clone();
+            let mut tb = table.clone();
+            native.absorb(&mut ta, m, k, &sep_new, &sep_old).unwrap();
+            xla.absorb(&mut tb, m, k, &sep_new, &sep_old).unwrap();
+            for i in 0..m * k {
+                assert!((ta[i] - tb[i]).abs() < 1e-9, "({m},{k}) entry {i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Thin PJRT wrapper: client construction, HLO-text compilation,
+//! execution with `f64` buffers.
+//!
+//! Interchange is HLO **text** — `HloModuleProto::from_text_file`
+//! reassigns instruction ids, avoiding the 64-bit-id protos of jax ≥ 0.5
+//! that xla_extension 0.5.1 rejects (see python/compile/aot.py).
+
+use std::path::Path;
+
+use crate::{Error, Result};
+
+fn wrap(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// A PJRT CPU client plus compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtRuntime { client: xla::PjRtClient::cpu().map_err(wrap)? })
+    }
+
+    /// Platform name (e.g. "cpu") for reporting.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::msg("non-utf8 artifact path"))?,
+        )
+        .map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap)?;
+        Ok(Executable { exe })
+    }
+}
+
+impl Executable {
+    /// Execute with `f64` inputs of the given shapes; returns the first
+    /// output of the 1-tuple result (aot.py lowers with
+    /// `return_tuple=True`) flattened to a `Vec<f64>`.
+    pub fn run_f64(&self, inputs: &[(&[f64], &[i64])]) -> Result<Vec<f64>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(dims).map_err(wrap)
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(wrap)?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Runtime("executable produced no output".into()))?
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let first = out.to_tuple1().map_err(wrap)?;
+        first.to_vec::<f64>().map_err(wrap)
+    }
+
+    /// Execute and return all outputs of a tuple result.
+    pub fn run_f64_multi(&self, inputs: &[(&[f64], &[i64])]) -> Result<Vec<Vec<f64>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(dims).map_err(wrap)
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(wrap)?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Runtime("executable produced no output".into()))?
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let parts = out.to_tuple().map_err(wrap)?;
+        parts.into_iter().map(|p| p.to_vec::<f64>().map_err(wrap)).collect()
+    }
+}

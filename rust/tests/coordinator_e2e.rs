@@ -1,0 +1,93 @@
+//! Integration: the batch coordinator and TCP server over a paper-suite
+//! network analog — the serving loop end to end.
+
+use std::sync::Arc;
+
+use fastbn::bn::netgen;
+use fastbn::coordinator::{BatchConfig, BatchRunner};
+use fastbn::coordinator::server::Server;
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::infer::cases::{generate, CaseSpec};
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+
+#[test]
+fn batch_over_hailfinder_analog_all_engines_agree() {
+    let net = netgen::paper_net("hailfinder-sim").unwrap();
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let cases = generate(&net, &CaseSpec { n_cases: 12, observed_fraction: 0.2, seed: 2023 });
+    let runner = BatchRunner::new(Arc::clone(&jt));
+
+    let mut reports = Vec::new();
+    for kind in EngineKind::ALL {
+        let cfg = BatchConfig {
+            engine: kind,
+            engine_cfg: EngineConfig { threads: 2, ..Default::default() },
+            replicas: 1,
+        };
+        let report = runner.run(&cases, &cfg).unwrap();
+        assert_eq!(
+            report.latency.count + report.failures.len(),
+            cases.len(),
+            "{kind}: lost cases"
+        );
+        reports.push((kind, report));
+    }
+    // identical failure sets and matching mean log-likelihood
+    let (k0, r0) = &reports[0];
+    for (kind, r) in &reports[1..] {
+        assert_eq!(r.failures.len(), r0.failures.len(), "{kind} vs {k0}");
+        assert!(
+            (r.mean_log_z - r0.mean_log_z).abs() < 1e-9,
+            "{kind}: mean_log_z {} vs {} ({k0})",
+            r.mean_log_z,
+            r0.mean_log_z
+        );
+    }
+}
+
+#[test]
+fn replica_scaling_preserves_results() {
+    let net = netgen::paper_net("hailfinder-sim").unwrap();
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let cases = generate(&net, &CaseSpec { n_cases: 16, observed_fraction: 0.2, seed: 31 });
+    let runner = BatchRunner::new(Arc::clone(&jt));
+    let mk = |replicas| BatchConfig {
+        engine: EngineKind::Hybrid,
+        engine_cfg: EngineConfig { threads: 1, ..Default::default() },
+        replicas,
+    };
+    let r1 = runner.run(&cases, &mk(1)).unwrap();
+    let r4 = runner.run(&cases, &mk(4)).unwrap();
+    assert_eq!(r1.latency.count, r4.latency.count);
+    assert!((r1.mean_log_z - r4.mean_log_z).abs() < 1e-9);
+}
+
+#[test]
+fn server_round_trip_on_generated_network() {
+    use std::io::{BufRead, BufReader, Write};
+    let net = netgen::paper_net("hailfinder-sim").unwrap();
+    let target = net.vars[0].name.clone();
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let server = Server::start(
+        jt,
+        EngineKind::Hybrid,
+        EngineConfig { threads: 2, ..Default::default() },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(format!("QUERY {target}\n").as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "{line}");
+    // probabilities in the reply must sum to ~1
+    let sum: f64 = line
+        .split_whitespace()
+        .filter_map(|tok| tok.split_once('=').and_then(|(k, v)| if k == "logZ" { None } else { v.parse::<f64>().ok() }))
+        .sum();
+    assert!((sum - 1.0).abs() < 1e-3, "posterior sums to {sum}: {line}");
+    server.shutdown();
+}

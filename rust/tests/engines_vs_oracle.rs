@@ -1,0 +1,156 @@
+//! Integration: every engine must reproduce the brute-force enumeration
+//! oracle on random small networks, across triangulation heuristics,
+//! thread counts and evidence patterns.
+
+use std::sync::Arc;
+
+use fastbn::bn::netgen;
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::infer::cases::{generate, CaseSpec};
+use fastbn::infer::exact::enumerate;
+use fastbn::jt::state::TreeState;
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+use fastbn::prop::{ensure, ensure_close, forall, Config};
+
+const TOL: f64 = 1e-9;
+
+fn check_engine_on_net(
+    net: &fastbn::bn::network::Network,
+    kind: EngineKind,
+    cfg: &EngineConfig,
+    heuristic: TriangulationHeuristic,
+    n_cases: usize,
+    case_seed: u64,
+) -> Result<(), String> {
+    let jt = Arc::new(JunctionTree::compile(net, heuristic).map_err(|e| e.to_string())?);
+    jt.verify_rip().map_err(|e| e.to_string())?;
+    let mut engine = kind.build(Arc::clone(&jt), cfg);
+    let mut state = TreeState::fresh(&jt);
+    let cases = generate(net, &CaseSpec { n_cases, observed_fraction: 0.25, seed: case_seed });
+    for (i, ev) in cases.iter().enumerate() {
+        let post = engine.infer(&mut state, ev).map_err(|e| format!("case {i}: {e}"))?;
+        let exact = enumerate(net, ev).map_err(|e| format!("oracle case {i}: {e}"))?;
+        ensure_close(post.log_z, exact.log_z, TOL, &format!("{kind} case {i} log_z"))?;
+        for v in 0..net.n() {
+            for s in 0..net.card(v) {
+                ensure_close(
+                    post.probs[v][s],
+                    exact.probs[v][s],
+                    TOL,
+                    &format!("{kind} case {i} P(v{v}={s})"),
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn all_engines_match_oracle_on_random_tiny_networks() {
+    forall(Config::cases(12).named("engines-vs-oracle"), |rng| {
+        let nodes = rng.range(3, 9);
+        let net = netgen::tiny_random(rng.next_u64(), nodes);
+        let cfg = EngineConfig { threads: rng.range(1, 4), min_chunk: rng.range(1, 64), ..Default::default() };
+        let kind = EngineKind::ALL[rng.below(EngineKind::ALL.len())];
+        check_engine_on_net(&net, kind, &cfg, TriangulationHeuristic::MinFill, 3, rng.next_u64())
+    });
+}
+
+#[test]
+fn every_engine_exhaustively_on_one_network() {
+    let net = netgen::tiny_random(0xE2E, 8);
+    for kind in EngineKind::ALL {
+        let cfg = EngineConfig { threads: 4, min_chunk: 8, ..Default::default() };
+        check_engine_on_net(&net, kind, &cfg, TriangulationHeuristic::MinFill, 5, 99).unwrap();
+    }
+}
+
+#[test]
+fn heuristics_do_not_change_results() {
+    for h in [
+        TriangulationHeuristic::MinFill,
+        TriangulationHeuristic::MinDegree,
+        TriangulationHeuristic::MinWeight,
+    ] {
+        let net = netgen::tiny_random(0x4E7, 7);
+        let cfg = EngineConfig { threads: 2, ..Default::default() };
+        check_engine_on_net(&net, EngineKind::Hybrid, &cfg, h, 4, 7).unwrap();
+    }
+}
+
+#[test]
+fn thread_counts_do_not_change_results() {
+    let net = netgen::tiny_random(0x7777, 8);
+    for threads in [1, 2, 3, 8] {
+        let cfg = EngineConfig { threads, min_chunk: 2, ..Default::default() };
+        for kind in EngineKind::PARALLEL {
+            check_engine_on_net(&net, kind, &cfg, TriangulationHeuristic::MinFill, 3, 13).unwrap();
+        }
+    }
+}
+
+#[test]
+fn embedded_networks_match_oracle_with_every_engine() {
+    for name in fastbn::bn::embedded::NAMES {
+        let net = fastbn::bn::embedded::by_name(name).unwrap();
+        for kind in EngineKind::ALL {
+            let cfg = EngineConfig { threads: 3, min_chunk: 4, ..Default::default() };
+            check_engine_on_net(&net, kind, &cfg, TriangulationHeuristic::MinFill, 3, 0xBEEF)
+                .unwrap_or_else(|e| panic!("{name}/{kind}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn posteriors_are_valid_distributions() {
+    forall(Config::cases(10).named("posterior-validity"), |rng| {
+        let net = netgen::tiny_random(rng.next_u64(), rng.range(4, 8));
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let mut engine =
+            EngineKind::Hybrid.build(Arc::clone(&jt), &EngineConfig { threads: 2, min_chunk: 4, ..Default::default() });
+        let mut state = TreeState::fresh(&jt);
+        let cases = generate(&net, &CaseSpec { n_cases: 2, observed_fraction: 0.3, seed: rng.next_u64() });
+        for ev in &cases {
+            let post = engine.infer(&mut state, ev).map_err(|e| e.to_string())?;
+            for v in 0..net.n() {
+                let sum: f64 = post.probs[v].iter().sum();
+                ensure_close(sum, 1.0, 1e-9, &format!("P(v{v}) normalization"))?;
+                ensure(post.probs[v].iter().all(|&p| (0.0..=1.0 + 1e-12).contains(&p)), || {
+                    format!("P(v{v}) outside [0,1]: {:?}", post.probs[v])
+                })?;
+            }
+            // observed variables get indicator posteriors
+            for &(v, s) in &ev.obs {
+                ensure_close(post.probs[v][s], 1.0, 1e-9, &format!("indicator v{v}"))?;
+            }
+            ensure(post.log_z <= 1e-12, || format!("ln P(e) = {} must be <= 0", post.log_z))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn evidence_monotonicity_log_z_decreases_with_more_evidence() {
+    // P(e1, e2) <= P(e1): adding evidence can only reduce probability
+    forall(Config::cases(10).named("logz-monotone"), |rng| {
+        let net = netgen::tiny_random(rng.next_u64(), 7);
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let mut engine = EngineKind::Seq.build(Arc::clone(&jt), &EngineConfig::default().with_threads(1));
+        let mut state = TreeState::fresh(&jt);
+        let full = fastbn::bn::sample::forward_sample(&net, rng);
+        // take nested prefixes of observations
+        let mut obs: Vec<(usize, usize)> = Vec::new();
+        let mut last_logz = 0.0f64;
+        for v in 0..net.n().min(4) {
+            obs.push((v, full[v]));
+            let ev = fastbn::jt::evidence::Evidence::from_ids(obs.clone());
+            let post = engine.infer(&mut state, &ev).map_err(|e| e.to_string())?;
+            ensure(post.log_z <= last_logz + 1e-9, || {
+                format!("log_z increased: {} -> {}", last_logz, post.log_z)
+            })?;
+            last_logz = post.log_z;
+        }
+        Ok(())
+    });
+}

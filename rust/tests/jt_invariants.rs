@@ -1,0 +1,215 @@
+//! Integration: structural invariants of the junction-tree compiler and
+//! the traversal schedules on randomly generated networks.
+
+use std::sync::Arc;
+
+use fastbn::bn::netgen::{self, NetSpec};
+use fastbn::jt::schedule::{RootStrategy, Schedule};
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::{is_subset, TriangulationHeuristic};
+use fastbn::prop::{ensure, forall, Config};
+
+fn random_spec(rng: &mut fastbn::rng::Rng) -> NetSpec {
+    let nodes = rng.range(2, 40);
+    NetSpec {
+        name: "inv".into(),
+        nodes,
+        arcs: rng.range(nodes / 2, nodes * 2),
+        max_parents: rng.range(1, 4),
+        card_choices: vec![(2, 0.5), (3, 0.3), (4, 0.2)],
+        locality: rng.range(2, nodes.max(3)),
+        max_table: 1 << 12,
+        alpha: 1.0,
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn rip_and_family_coverage_hold() {
+    forall(Config::cases(30).named("rip"), |rng| {
+        let net = random_spec(rng).generate();
+        let h = [
+            TriangulationHeuristic::MinFill,
+            TriangulationHeuristic::MinDegree,
+            TriangulationHeuristic::MinWeight,
+        ][rng.below(3)];
+        let jt = JunctionTree::compile(&net, h).map_err(|e| e.to_string())?;
+        jt.verify_rip().map_err(|e| e.to_string())?;
+        // every family inside its assigned clique
+        for v in 0..net.n() {
+            let mut fam: Vec<usize> = net.parents(v).to_vec();
+            fam.push(v);
+            fam.sort_unstable();
+            ensure(is_subset(&fam, &jt.cliques[jt.cpt_home[v]].vars), || {
+                format!("family of {v} not inside clique {}", jt.cpt_home[v])
+            })?;
+        }
+        // tree structure: #seps = #cliques - #components
+        let comps = {
+            let mut seen = vec![false; jt.n_cliques()];
+            let mut n = 0usize;
+            for start in 0..jt.n_cliques() {
+                if seen[start] {
+                    continue;
+                }
+                n += 1;
+                let mut stack = vec![start];
+                seen[start] = true;
+                while let Some(c) = stack.pop() {
+                    for &(nb, _) in &jt.adj[c] {
+                        if !seen[nb] {
+                            seen[nb] = true;
+                            stack.push(nb);
+                        }
+                    }
+                }
+            }
+            n
+        };
+        ensure(jt.seps.len() == jt.n_cliques() - comps, || {
+            format!("{} seps for {} cliques / {comps} components", jt.seps.len(), jt.n_cliques())
+        })
+    });
+}
+
+#[test]
+fn schedules_are_valid_layerings() {
+    forall(Config::cases(30).named("schedule"), |rng| {
+        let net = random_spec(rng).generate();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).map_err(|e| e.to_string())?;
+        let strat = [RootStrategy::Center, RootStrategy::First][rng.below(2)];
+        let s = Schedule::build(&jt, strat);
+        // every clique has a depth; parents are one level up
+        for c in 0..jt.n_cliques() {
+            match s.parent[c] {
+                None => ensure(s.depth[c] == 0, || format!("root {c} at depth {}", s.depth[c]))?,
+                Some((p, _)) => ensure(s.depth[c] == s.depth[p] + 1, || "bad depth".into())?,
+            }
+        }
+        // message count = #separators per phase
+        ensure(s.n_messages() == jt.seps.len(), || "missing messages".into())?;
+        let down_count: usize = s.down_layers.iter().map(|l| l.len()).sum();
+        ensure(down_count == jt.seps.len(), || "missing down messages".into())?;
+        // collect dependencies: children before parents
+        let mut sent = vec![false; jt.n_cliques()];
+        for layer in &s.up_layers {
+            for m in layer {
+                for &(ch, _) in &s.children[m.from] {
+                    ensure(sent[ch], || format!("{} sent before child {ch}", m.from))?;
+                }
+            }
+            for m in layer {
+                sent[m.from] = true;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn center_root_never_taller_than_first() {
+    forall(Config::cases(25).named("center-root"), |rng| {
+        let net = random_spec(rng).generate();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).map_err(|e| e.to_string())?;
+        let center = Schedule::build(&jt, RootStrategy::Center);
+        let first = Schedule::build(&jt, RootStrategy::First);
+        ensure(center.height() <= first.height(), || {
+            format!("center {} > first {}", center.height(), first.height())
+        })
+    });
+}
+
+#[test]
+fn paper_suite_compiles_with_sane_shapes() {
+    for spec in netgen::paper_suite() {
+        let net = spec.generate();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        jt.verify_rip().unwrap();
+        let stats = jt.stats();
+        assert!(stats.cliques > 10, "{}: only {} cliques", spec.name, stats.cliques);
+        assert!(
+            stats.total_clique_entries < 200_000_000,
+            "{}: {} entries won't fit the benchmark budget",
+            spec.name,
+            stats.total_clique_entries
+        );
+        let sched = Schedule::build(&jt, RootStrategy::Center);
+        assert!(sched.height() >= 2, "{}: degenerate tree", spec.name);
+    }
+}
+
+#[test]
+fn bif_roundtrip_preserves_random_networks() {
+    forall(Config::cases(20).named("bif-roundtrip"), |rng| {
+        let net = random_spec(rng).generate();
+        let text = fastbn::bn::bif::write(&net);
+        let back = fastbn::bn::bif::parse(&text).map_err(|e| e.to_string())?;
+        ensure(back.n() == net.n(), || "node count changed".into())?;
+        for v in 0..net.n() {
+            ensure(back.vars[v] == net.vars[v], || format!("variable {v} changed"))?;
+            ensure(back.cpts[v].parents == net.cpts[v].parents, || format!("parents of {v} changed"))?;
+            for (a, b) in net.cpts[v].probs.iter().zip(&back.cpts[v].probs) {
+                if (a - b).abs() > 1e-12 {
+                    return Err(format!("CPT of {v} changed: {a} vs {b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn run_maps_agree_with_entry_maps_on_compiled_trees() {
+    forall(Config::cases(15).named("run-vs-entry-maps"), |rng| {
+        let net = random_spec(rng).generate();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).map_err(|e| e.to_string())?;
+        for (sid, sep) in jt.seps.iter().enumerate() {
+            for &cid in &[sep.a, sep.b] {
+                let em = &jt.edge_maps[sid];
+                let entry = em.from(sep, cid);
+                let runs = em.runs_from(sep, cid);
+                ensure(runs.map.len() * runs.run_len == entry.len(), || {
+                    format!("sep {sid}: run map size mismatch")
+                })?;
+                for (i, &e) in entry.iter().enumerate() {
+                    if runs.map[i / runs.run_len] != e {
+                        return Err(format!("sep {sid} clique {cid} entry {i} disagrees"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn index_maps_project_consistently_with_potential_marginalization() {
+    // pushing a clique table through the cached edge map must equal the
+    // Potential::marginalize_onto result
+    forall(Config::cases(15).named("map-vs-potential"), |rng| {
+        let net = random_spec(rng).generate();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).map_err(|e| e.to_string())?;
+        if jt.seps.is_empty() {
+            return Ok(());
+        }
+        let sid = rng.below(jt.seps.len());
+        let sep = &jt.seps[sid];
+        let c = &jt.cliques[sep.a];
+        // random table over clique a
+        let data: Vec<f64> = (0..c.len).map(|_| rng.f64()).collect();
+        let pot = fastbn::jt::potential::Potential {
+            vars: c.vars.clone(),
+            cards: c.cards.clone(),
+            data: data.clone(),
+        };
+        let expect = pot.marginalize_onto(&sep.vars);
+        let mut got = vec![0.0; sep.len];
+        fastbn::jt::ops::marg_with_map(&data, &jt.edge_maps[sid].from_a, &mut got);
+        for j in 0..sep.len {
+            if (got[j] - expect.data[j]).abs() > 1e-9 {
+                return Err(format!("entry {j}: {} vs {}", got[j], expect.data[j]));
+            }
+        }
+        Ok(())
+    });
+}

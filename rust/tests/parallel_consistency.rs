@@ -1,0 +1,250 @@
+//! Integration: the four parallel engines must agree with Fast-BNI-seq on
+//! *medium-sized* generated networks (too big for the enumeration oracle),
+//! across thread counts, chunk sizes and root strategies, including under
+//! failure injection (impossible evidence mid-batch).
+
+use std::sync::Arc;
+
+use fastbn::bn::netgen::NetSpec;
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::infer::cases::{generate, CaseSpec};
+use fastbn::jt::evidence::Evidence;
+use fastbn::jt::schedule::RootStrategy;
+use fastbn::jt::state::TreeState;
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+
+fn medium_net(seed: u64) -> fastbn::bn::network::Network {
+    NetSpec {
+        name: format!("medium-{seed}"),
+        nodes: 120,
+        arcs: 170,
+        max_parents: 3,
+        card_choices: vec![(2, 0.5), (3, 0.3), (5, 0.2)],
+        locality: 12,
+        max_table: 1 << 13,
+        alpha: 1.0,
+        seed,
+    }
+    .generate()
+}
+
+#[test]
+fn parallel_engines_agree_with_seq_on_medium_network() {
+    let net = medium_net(0xAB1);
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let cases = generate(&net, &CaseSpec { n_cases: 6, observed_fraction: 0.2, seed: 5 });
+
+    let seq_cfg = EngineConfig::default().with_threads(1);
+    let mut seq = EngineKind::Seq.build(Arc::clone(&jt), &seq_cfg);
+    let mut seq_state = TreeState::fresh(&jt);
+    let reference: Vec<_> = cases.iter().map(|ev| seq.infer(&mut seq_state, ev).unwrap()).collect();
+
+    for kind in EngineKind::PARALLEL {
+        for threads in [2, 4] {
+            for min_chunk in [16, 1024] {
+                let cfg = EngineConfig { threads, min_chunk, ..Default::default() };
+                let mut eng = kind.build(Arc::clone(&jt), &cfg);
+                let mut state = TreeState::fresh(&jt);
+                for (i, ev) in cases.iter().enumerate() {
+                    let post = eng.infer(&mut state, ev).unwrap();
+                    let d = post.max_abs_diff(&reference[i]);
+                    assert!(d < 1e-9, "{kind} t={threads} chunk={min_chunk} case {i}: diff {d}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn root_strategy_changes_layers_not_answers() {
+    let net = medium_net(0xAB2);
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let cases = generate(&net, &CaseSpec { n_cases: 3, observed_fraction: 0.2, seed: 6 });
+
+    let mk = |strategy| {
+        let cfg = EngineConfig { threads: 4, root_strategy: strategy, ..Default::default() };
+        EngineKind::Hybrid.build(Arc::clone(&jt), &cfg)
+    };
+    let mut center = mk(RootStrategy::Center);
+    let mut first = mk(RootStrategy::First);
+    assert!(center.schedule().height() <= first.schedule().height());
+
+    let mut s1 = TreeState::fresh(&jt);
+    let mut s2 = TreeState::fresh(&jt);
+    for ev in &cases {
+        let a = center.infer(&mut s1, ev).unwrap();
+        let b = first.infer(&mut s2, ev).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-9);
+    }
+}
+
+#[test]
+fn failure_injection_impossible_evidence_mid_batch() {
+    // craft an impossible observation by forcing a deterministic CPT
+    use fastbn::bn::cpt::Cpt;
+    use fastbn::bn::network::Network;
+    use fastbn::bn::variable::Variable;
+
+    let vars = vec![
+        Variable::new("a", &["t", "f"]),
+        Variable::new("b", &["t", "f"]), // b == a deterministically
+        Variable::new("c", &["t", "f"]),
+    ];
+    let cards = [2, 2, 2];
+    let cpts = vec![
+        Cpt::new(0, vec![], vec![0.5, 0.5], &cards).unwrap(),
+        Cpt::new(1, vec![0], vec![1.0, 0.0, 0.0, 1.0], &cards).unwrap(),
+        Cpt::new(2, vec![1], vec![0.3, 0.7, 0.6, 0.4], &cards).unwrap(),
+    ];
+    let net = Network::new("det", vars, cpts).unwrap();
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+
+    for kind in EngineKind::ALL {
+        let mut eng = kind.build(Arc::clone(&jt), &EngineConfig { threads: 2, min_chunk: 1, ..Default::default() });
+        let mut state = TreeState::fresh(&jt);
+        // good case
+        let good = Evidence::from_pairs(&net, &[("a", "t"), ("b", "t")]).unwrap();
+        let p1 = eng.infer(&mut state, &good).unwrap();
+        // impossible case: a=t, b=f
+        let bad = Evidence::from_pairs(&net, &[("a", "t"), ("b", "f")]).unwrap();
+        assert!(eng.infer(&mut state, &bad).is_err(), "{kind} must reject impossible evidence");
+        // engine must fully recover afterwards
+        let p2 = eng.infer(&mut state, &good).unwrap();
+        assert!(p1.max_abs_diff(&p2) < 1e-12, "{kind} state corrupted after failure");
+    }
+}
+
+#[test]
+fn repeated_inference_is_deterministic_per_engine() {
+    let net = medium_net(0xAB3);
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let ev = generate(&net, &CaseSpec { n_cases: 1, observed_fraction: 0.2, seed: 9 }).remove(0);
+    // sequential engines must be bitwise deterministic
+    for kind in [EngineKind::Unb, EngineKind::Seq] {
+        let mut eng = kind.build(Arc::clone(&jt), &EngineConfig::default().with_threads(1));
+        let mut state = TreeState::fresh(&jt);
+        let a = eng.infer(&mut state, &ev).unwrap();
+        let b = eng.infer(&mut state, &ev).unwrap();
+        assert_eq!(a.log_z.to_bits(), b.log_z.to_bits(), "{kind}");
+        for v in 0..net.n() {
+            for s in 0..net.card(v) {
+                assert_eq!(a.probs[v][s].to_bits(), b.probs[v][s].to_bits(), "{kind} v{v}s{s}");
+            }
+        }
+    }
+    // parallel engines: agreement within fp-reduction tolerance
+    for kind in EngineKind::PARALLEL {
+        let mut eng = kind.build(Arc::clone(&jt), &EngineConfig { threads: 4, ..Default::default() });
+        let mut state = TreeState::fresh(&jt);
+        let a = eng.infer(&mut state, &ev).unwrap();
+        let b = eng.infer(&mut state, &ev).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-10, "{kind}");
+    }
+}
+
+#[test]
+fn engines_agree_with_likelihood_weighting_on_a_paper_analog() {
+    // statistical cross-check on a network too large for enumeration
+    let net = fastbn::bn::netgen::paper_net("hailfinder-sim").unwrap();
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let mut engine =
+        EngineKind::Hybrid.build(Arc::clone(&jt), &EngineConfig { threads: 2, ..Default::default() });
+    let mut state = TreeState::fresh(&jt);
+    let cases = generate(&net, &CaseSpec { n_cases: 2, observed_fraction: 0.15, seed: 404 });
+    for (i, ev) in cases.iter().enumerate() {
+        let post = engine.infer(&mut state, ev).unwrap();
+        let lw = fastbn::infer::approx::likelihood_weighting(&net, ev, 150_000, 505 + i as u64).unwrap();
+        if lw.effective_samples < 1_000.0 {
+            continue; // too-degenerate case for a statistical check
+        }
+        let tol = 6.0 / lw.effective_samples.sqrt() + 0.01;
+        for v in 0..net.n() {
+            for s in 0..net.card(v) {
+                let d = (post.probs[v][s] - lw.probs[v][s]).abs();
+                assert!(d < tol, "case {i} v{v}s{s}: JT {} vs LW {} (tol {tol})", post.probs[v][s], lw.probs[v][s]);
+            }
+        }
+    }
+}
+
+#[test]
+fn soft_evidence_consistent_across_engines() {
+    let net = medium_net(0xAB4);
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let weights = |v: usize, hot: f64| -> Vec<f64> {
+        (0..net.card(v)).map(|s| if s == 0 { hot } else { 1.0 }).collect()
+    };
+    let ev = Evidence::from_ids(vec![(3, 0)])
+        .with_soft(10, weights(10, 2.0))
+        .unwrap()
+        .with_soft(20, weights(20, 0.5))
+        .unwrap();
+    let mut reference: Option<fastbn::infer::query::Posteriors> = None;
+    for kind in EngineKind::ALL {
+        let mut eng = kind.build(Arc::clone(&jt), &EngineConfig { threads: 2, min_chunk: 64, ..Default::default() });
+        let mut state = TreeState::fresh(&jt);
+        let post = eng.infer(&mut state, &ev).unwrap();
+        if let Some(r) = &reference {
+            assert!(post.max_abs_diff(r) < 1e-9, "{kind}");
+        } else {
+            reference = Some(post);
+        }
+    }
+}
+
+#[test]
+fn single_clique_and_chain_topologies() {
+    use fastbn::bn::cpt::Cpt;
+    use fastbn::bn::network::Network;
+    use fastbn::bn::variable::Variable;
+
+    // fully-connected triple -> single clique, no messages at all
+    let vars = vec![
+        Variable::with_card("x", 2),
+        Variable::with_card("y", 2),
+        Variable::with_card("z", 2),
+    ];
+    let cards = [2, 2, 2];
+    let cpts = vec![
+        Cpt::new(0, vec![], vec![0.3, 0.7], &cards).unwrap(),
+        Cpt::new(1, vec![0], vec![0.2, 0.8, 0.9, 0.1], &cards).unwrap(),
+        Cpt::new(2, vec![0, 1], vec![0.1, 0.9, 0.4, 0.6, 0.8, 0.2, 0.5, 0.5], &cards).unwrap(),
+    ];
+    let net = Network::new("tri", vars, cpts).unwrap();
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    assert_eq!(jt.n_cliques(), 1);
+    let exact = fastbn::infer::exact::enumerate(&net, &Evidence::none()).unwrap();
+    for kind in EngineKind::ALL {
+        let mut eng = kind.build(Arc::clone(&jt), &EngineConfig { threads: 2, min_chunk: 1, ..Default::default() });
+        let mut state = TreeState::fresh(&jt);
+        let post = eng.infer(&mut state, &Evidence::none()).unwrap();
+        for v in 0..3 {
+            assert!((post.probs[v][0] - exact.probs[v][0]).abs() < 1e-12, "{kind}");
+        }
+    }
+
+    // long chain -> many layers, each with a single tiny message
+    let n = 40;
+    let vars: Vec<Variable> = (0..n).map(|i| Variable::with_card(format!("c{i}"), 2)).collect();
+    let cards2 = vec![2usize; n];
+    let mut cpts = vec![Cpt::new(0, vec![], vec![0.6, 0.4], &cards2).unwrap()];
+    for i in 1..n {
+        cpts.push(Cpt::new(i, vec![i - 1], vec![0.7, 0.3, 0.2, 0.8], &cards2).unwrap());
+    }
+    let chain = Network::new("chain", vars, cpts).unwrap();
+    let jt = Arc::new(JunctionTree::compile(&chain, TriangulationHeuristic::MinFill).unwrap());
+    let ev = Evidence::from_ids(vec![(0, 0), (n - 1, 1)]);
+    let mut reference = None;
+    for kind in EngineKind::ALL {
+        let mut eng = kind.build(Arc::clone(&jt), &EngineConfig { threads: 3, min_chunk: 1, ..Default::default() });
+        let mut state = TreeState::fresh(&jt);
+        let post = eng.infer(&mut state, &ev).unwrap();
+        if let Some(r) = &reference {
+            let d = post.max_abs_diff(r);
+            assert!(d < 1e-9, "{kind}: {d}");
+        } else {
+            reference = Some(post);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Integration: the PJRT runtime executes the AOT artifacts with exactly
+//! the same numerics as the native backend and the sequential engine.
+//!
+//! These tests skip (with a notice) when `artifacts/` has not been built;
+//! `make test` builds artifacts first so CI-style runs always exercise
+//! them.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use fastbn::bn::{embedded, netgen};
+use fastbn::engine::{Engine, EngineConfig, EngineKind};
+use fastbn::infer::cases::{generate, CaseSpec};
+use fastbn::jt::state::TreeState;
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+use fastbn::rng::Rng;
+use fastbn::runtime::accel::SeqXlaEngine;
+use fastbn::runtime::ops::{NativeOps, TableOps2d, XlaOps};
+use fastbn::runtime::{artifacts_available, DEFAULT_ARTIFACT_DIR};
+
+fn artifact_dir() -> Option<&'static Path> {
+    let dir = Path::new(DEFAULT_ARTIFACT_DIR);
+    if artifacts_available(dir) {
+        Some(dir)
+    } else {
+        eprintln!("skipping XLA test: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn xla_backend_matches_native_across_buckets_and_ragged_shapes() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut xla = XlaOps::load(dir).unwrap();
+    let mut native = NativeOps;
+    let mut rng = Rng::new(2024);
+    let shapes = [
+        (1usize, 1usize),
+        (2, 7),
+        (16, 16),
+        (31, 63),
+        (64, 64),
+        (100, 200),
+        (256, 256),
+        (1000, 250),
+    ];
+    for (m, k) in shapes {
+        if !xla.fits(m, k) {
+            continue;
+        }
+        let table: Vec<f64> = (0..m * k).map(|_| rng.f64()).collect();
+        let mut a = vec![0.0; m];
+        let mut b = vec![0.0; m];
+        native.marginalize(&table, m, k, &mut a).unwrap();
+        xla.marginalize(&table, m, k, &mut b).unwrap();
+        for j in 0..m {
+            assert!((a[j] - b[j]).abs() < 1e-9, "marg ({m},{k}) row {j}");
+        }
+
+        let sep_new: Vec<f64> = (0..m).map(|_| rng.f64()).collect();
+        // include zero rows to exercise 0/0
+        let sep_old: Vec<f64> =
+            (0..m).map(|_| if rng.chance(0.2) { 0.0 } else { rng.f64() + 0.05 }).collect();
+        let sep_new: Vec<f64> =
+            sep_new.iter().zip(&sep_old).map(|(&n, &o)| if o == 0.0 { 0.0 } else { n }).collect();
+        let mut ta = table.clone();
+        let mut tb = table;
+        native.absorb(&mut ta, m, k, &sep_new, &sep_old).unwrap();
+        xla.absorb(&mut tb, m, k, &sep_new, &sep_old).unwrap();
+        for i in 0..m * k {
+            assert!((ta[i] - tb[i]).abs() < 1e-9, "absorb ({m},{k}) entry {i}");
+        }
+    }
+}
+
+#[test]
+fn seq_xla_engine_matches_pure_seq_on_asia() {
+    let Some(dir) = artifact_dir() else { return };
+    let net = embedded::asia();
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let cfg = EngineConfig::default().with_threads(1);
+    // threshold 1: route EVERY message through XLA
+    let mut accel = SeqXlaEngine::new(Arc::clone(&jt), &cfg, dir, 1).unwrap();
+    let mut seq = EngineKind::Seq.build(Arc::clone(&jt), &cfg);
+    let mut s1 = TreeState::fresh(&jt);
+    let mut s2 = TreeState::fresh(&jt);
+    let cases = generate(&net, &CaseSpec { n_cases: 8, observed_fraction: 0.25, seed: 55 });
+    for (i, ev) in cases.iter().enumerate() {
+        let a = accel.infer(&mut s1, ev).unwrap();
+        let b = seq.infer(&mut s2, ev).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-9, "case {i}: {}", a.max_abs_diff(&b));
+    }
+    assert!(accel.xla_ops > 0, "XLA path never taken");
+}
+
+#[test]
+fn seq_xla_engine_matches_seq_on_paper_analog() {
+    let Some(dir) = artifact_dir() else { return };
+    let net = netgen::paper_net("hailfinder-sim").unwrap();
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let cfg = EngineConfig::default().with_threads(1);
+    // realistic threshold: only big cliques go through PJRT
+    let mut accel = SeqXlaEngine::new(Arc::clone(&jt), &cfg, dir, 512).unwrap();
+    let mut seq = EngineKind::Seq.build(Arc::clone(&jt), &cfg);
+    let mut s1 = TreeState::fresh(&jt);
+    let mut s2 = TreeState::fresh(&jt);
+    let cases = generate(&net, &CaseSpec { n_cases: 3, observed_fraction: 0.2, seed: 77 });
+    for ev in &cases {
+        let a = accel.infer(&mut s1, ev).unwrap();
+        let b = seq.infer(&mut s2, ev).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-9);
+    }
+    assert!(accel.xla_ops + accel.native_ops > 0);
+}
+
+#[test]
+fn batched_artifacts_match_per_table_ops() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut xla = XlaOps::load(dir).unwrap();
+    let buckets = xla.batched_buckets();
+    if buckets.is_empty() {
+        eprintln!("skipping: no batched artifacts in manifest");
+        return;
+    }
+    let mut native = NativeOps;
+    let mut rng = Rng::new(88);
+    for (b, m, k) in buckets {
+        let tables: Vec<f64> = (0..b * m * k).map(|_| rng.f64()).collect();
+        let sep_new: Vec<f64> = (0..b * m).map(|_| rng.f64()).collect();
+        let sep_old: Vec<f64> = (0..b * m).map(|_| rng.f64() + 0.1).collect();
+
+        let got = xla.marginalize_batch(&tables, b, m, k).unwrap();
+        assert_eq!(got.len(), b * m);
+        for i in 0..b {
+            let mut want = vec![0.0; m];
+            native.marginalize(&tables[i * m * k..(i + 1) * m * k], m, k, &mut want).unwrap();
+            for j in 0..m {
+                assert!((got[i * m + j] - want[j]).abs() < 1e-9, "bmarg case {i} row {j}");
+            }
+        }
+
+        let got = xla.absorb_batch(&tables, b, m, k, &sep_new, &sep_old).unwrap();
+        assert_eq!(got.len(), b * m * k);
+        for i in 0..b {
+            let mut want = tables[i * m * k..(i + 1) * m * k].to_vec();
+            native
+                .absorb(&mut want, m, k, &sep_new[i * m..(i + 1) * m], &sep_old[i * m..(i + 1) * m])
+                .unwrap();
+            for j in 0..m * k {
+                assert!((got[i * m * k + j] - want[j]).abs() < 1e-9, "babsorb case {i} entry {j}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_message_artifact_runs_end_to_end() {
+    let Some(dir) = artifact_dir() else { return };
+    // run the msg_256x256 fused artifact directly through the runtime
+    let man = fastbn::runtime::buckets::Manifest::load(dir).unwrap();
+    let Some(file) = man.file_for("msg", (256, 256)) else {
+        eprintln!("skipping: no fused msg artifact");
+        return;
+    };
+    let rt = fastbn::runtime::pjrt::PjrtRuntime::cpu().unwrap();
+    let exe = rt.compile_hlo_text(&dir.join(file)).unwrap();
+    let mut rng = Rng::new(5);
+    let child: Vec<f64> = (0..256 * 256).map(|_| rng.f64()).collect();
+    let parent: Vec<f64> = (0..256 * 256).map(|_| rng.f64()).collect();
+    let sep_old: Vec<f64> = (0..256).map(|_| rng.f64() + 0.1).collect();
+    let outs = exe
+        .run_f64_multi(&[
+            (&child, &[256, 256]),
+            (&parent, &[256, 256]),
+            (&sep_old, &[256]),
+        ])
+        .unwrap();
+    assert_eq!(outs.len(), 3, "expected (parent_out, sep_out, mass)");
+    assert_eq!(outs[0].len(), 256 * 256);
+    assert_eq!(outs[1].len(), 256);
+    assert_eq!(outs[2].len(), 1);
+    // verify against native composition
+    let mut native = NativeOps;
+    let mut msg = vec![0.0; 256];
+    native.marginalize(&child, 256, 256, &mut msg).unwrap();
+    let mass: f64 = msg.iter().sum();
+    assert!((outs[2][0] - mass).abs() < 1e-9 * mass.max(1.0));
+    let norm: Vec<f64> = msg.iter().map(|&x| x / mass).collect();
+    for j in 0..256 {
+        assert!((outs[1][j] - norm[j]).abs() < 1e-9);
+    }
+    let mut parent_native = parent;
+    native.absorb(&mut parent_native, 256, 256, &norm, &sep_old).unwrap();
+    for i in 0..256 * 256 {
+        assert!((outs[0][i] - parent_native[i]).abs() < 1e-9, "entry {i}");
+    }
+}
