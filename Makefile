@@ -1,0 +1,52 @@
+# Fast-BNI reproduction — build/test/bench entry points.
+#
+#   make build      release build of the fastbn crate (pure-std, offline-safe)
+#   make test       tier-1: cargo test; then the python suite (skips if no pytest)
+#   make bench      run all four bench targets (criterion-lite, harness=false)
+#   make artifacts  AOT-lower the Pallas/JAX kernels to HLO-text artifacts
+#                   (needs the python deps in python/requirements.txt)
+#   make fmt        rustfmt the workspace
+#   make lint       clippy with warnings denied
+#   make test-xla   build artifacts, then run the xla-feature test suite
+#                   (exercises PJRT only when the real xla crate replaces
+#                   the vendored stub — see rust/vendor/xla-stub)
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test bench artifacts fmt lint test-xla clean
+
+build:
+	$(CARGO) build --release
+
+# python suite: exit 5 = no tests collected (conftest skipped the suite
+# because the JAX stack is missing) — a skip, not a failure. Any other
+# nonzero exit is a real failure and fails `make test`.
+test: build
+	$(CARGO) test -q
+	@if $(PYTHON) -c "import pytest" 2>/dev/null; then \
+		$(PYTHON) -m pytest python/ -q; rc=$$?; \
+		if [ $$rc -eq 5 ]; then echo "python suite skipped (no tests collected — JAX unavailable)"; \
+		elif [ $$rc -ne 0 ]; then exit $$rc; fi; \
+	else \
+		echo "python suite skipped (pytest not installed)"; \
+	fi
+
+bench:
+	$(CARGO) bench
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+fmt:
+	$(CARGO) fmt --all
+
+lint:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+test-xla: artifacts
+	$(CARGO) test -q --features xla
+
+clean:
+	$(CARGO) clean
+	rm -rf artifacts

@@ -120,39 +120,13 @@ fn main() -> fastbn::Result<()> {
             format!("t={}", modeled[3].1),
         ]);
 
-        // --- XLA/PJRT path on the first network ---
+        // --- XLA/PJRT path on the first network (xla feature only) ---
         if !first_net_done {
             first_net_done = true;
-            let dir = std::path::Path::new(fastbn::runtime::DEFAULT_ARTIFACT_DIR);
-            if fastbn::runtime::artifacts_available(dir) {
-                use fastbn::engine::Engine;
-                let mut accel = fastbn::runtime::accel::SeqXlaEngine::new(
-                    Arc::clone(&jt),
-                    &EngineConfig::default().with_threads(1),
-                    dir,
-                    256,
-                )?;
-                let mut state = fastbn::jt::state::TreeState::fresh(&jt);
-                let mut seq_engine = EngineKind::Seq.build(Arc::clone(&jt), &EngineConfig::default().with_threads(1));
-                let mut seq_state = fastbn::jt::state::TreeState::fresh(&jt);
-                let t0 = Instant::now();
-                let mut worst = 0.0f64;
-                for ev in cases.iter().take(5) {
-                    let a = accel.infer(&mut state, ev)?;
-                    let b = seq_engine.infer(&mut seq_state, ev)?;
-                    worst = worst.max(a.max_abs_diff(&b));
-                }
-                eprintln!(
-                    "  XLA/PJRT path: 5 cases in {:?}; {} ops via XLA, {} native; max |Δ| vs seq = {:.2e}",
-                    t0.elapsed(),
-                    accel.xla_ops,
-                    accel.native_ops,
-                    worst
-                );
-                assert!(worst < 1e-9, "XLA path diverged");
-            } else {
-                eprintln!("  (artifacts/ not built; skipping the XLA layer — run `make artifacts`)");
-            }
+            #[cfg(not(feature = "xla"))]
+            eprintln!("  (xla feature disabled; skipping the XLA layer — rebuild with --features xla)");
+            #[cfg(feature = "xla")]
+            run_xla_path(&jt, &cases)?;
         }
     }
 
@@ -167,5 +141,50 @@ fn main() -> fastbn::Result<()> {
     println!("\n(*) parallel columns are modeled via the calibrated critical-path cost");
     println!("    simulator (single-core container; DESIGN.md §3). Sequential columns and");
     println!("    all correctness checks are real measured runs.");
+    Ok(())
+}
+
+/// Exercise the XLA/PJRT layer against the pure-Rust sequential engine.
+#[cfg(feature = "xla")]
+fn run_xla_path(
+    jt: &Arc<JunctionTree>,
+    cases: &[fastbn::jt::evidence::Evidence],
+) -> fastbn::Result<()> {
+    use fastbn::engine::Engine;
+    let dir = fastbn::runtime::artifact_dir();
+    if !fastbn::runtime::artifacts_available(&dir) {
+        eprintln!("  (artifacts/ not built; skipping the XLA layer — run `make artifacts`)");
+        return Ok(());
+    }
+    let mut accel = match fastbn::runtime::accel::SeqXlaEngine::new(
+        Arc::clone(jt),
+        &EngineConfig::default().with_threads(1),
+        &dir,
+        256,
+    ) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("  (XLA backend unavailable: {e}; skipping the XLA layer)");
+            return Ok(());
+        }
+    };
+    let mut state = fastbn::jt::state::TreeState::fresh(jt);
+    let mut seq_engine = EngineKind::Seq.build(Arc::clone(jt), &EngineConfig::default().with_threads(1));
+    let mut seq_state = fastbn::jt::state::TreeState::fresh(jt);
+    let t0 = Instant::now();
+    let mut worst = 0.0f64;
+    for ev in cases.iter().take(5) {
+        let a = accel.infer(&mut state, ev)?;
+        let b = seq_engine.infer(&mut seq_state, ev)?;
+        worst = worst.max(a.max_abs_diff(&b));
+    }
+    eprintln!(
+        "  XLA/PJRT path: 5 cases in {:?}; {} ops via XLA, {} native; max |Δ| vs seq = {:.2e}",
+        t0.elapsed(),
+        accel.xla_ops,
+        accel.native_ops,
+        worst
+    );
+    assert!(worst < 1e-9, "XLA path diverged");
     Ok(())
 }

@@ -5,20 +5,30 @@
 //! which PJRT dispatch overhead amortizes (on CPU the native loops win
 //! below that). Skips with a notice if `artifacts/` is not built.
 
-use std::path::Path;
-
-use fastbn::bench::{print_table, Bench};
-use fastbn::rng::Rng;
-use fastbn::runtime::ops::{NativeOps, TableOps2d, XlaOps};
-use fastbn::runtime::{artifacts_available, DEFAULT_ARTIFACT_DIR};
-
+#[cfg(not(feature = "xla"))]
 fn main() {
-    let dir = Path::new(DEFAULT_ARTIFACT_DIR);
-    if !artifacts_available(dir) {
+    println!("table_ops bench compares the XLA backend; rebuild with `--features xla` to run it");
+}
+
+#[cfg(feature = "xla")]
+fn main() {
+    use fastbn::bench::{print_table, Bench};
+    use fastbn::rng::Rng;
+    use fastbn::runtime::artifacts_available;
+    use fastbn::runtime::ops::{NativeOps, TableOps2d, XlaOps};
+
+    let dir = fastbn::runtime::artifact_dir();
+    if !artifacts_available(&dir) {
         println!("artifacts/ not built — run `make artifacts` first; skipping table_ops bench");
         return;
     }
-    let mut xla = XlaOps::load(dir).unwrap();
+    let mut xla = match XlaOps::load(&dir) {
+        Ok(x) => x,
+        Err(e) => {
+            println!("XLA backend unavailable ({e}); skipping table_ops bench");
+            return;
+        }
+    };
     let mut native = NativeOps;
     let bench = Bench::new(3, 10);
     let mut rng = Rng::new(0xBE);

@@ -61,7 +61,7 @@ impl Cpt {
 
     /// The distribution over the child for one parent configuration,
     /// `config[i]` being the state of `parents[i]`.
-    pub fn row<'a>(&'a self, config: &[usize], cards: &[usize]) -> &'a [f64] {
+    pub fn row(&self, config: &[usize], cards: &[usize]) -> &[f64] {
         debug_assert_eq!(config.len(), self.parents.len());
         let mut row = 0usize;
         for (i, &p) in self.parents.iter().enumerate() {

@@ -47,7 +47,7 @@ impl NetSpec {
     pub fn generate(&self) -> Network {
         assert!(self.nodes >= 1);
         assert!(!self.card_choices.is_empty());
-        let mut rng = Rng::new(self.seed ^ 0xFA57_B41);
+        let mut rng = Rng::new(self.seed ^ 0x0FA5_7B41);
 
         // Cardinalities.
         let weights: Vec<f64> = self.card_choices.iter().map(|&(_, w)| w).collect();

@@ -308,7 +308,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let bind = args.get("bind").unwrap_or("127.0.0.1:7979");
     let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
     let server = Server::start(jt, engine, cfg, bind)?;
-    println!("serving {} on {} with {} — protocol: QUERY <var> [| ev=state ...] / STATS / QUIT", net.name, server.addr(), engine.label());
+    println!(
+        "serving {} on {} with {} — protocol: QUERY <var> [| ev=state ...] / STATS / QUIT",
+        net.name,
+        server.addr(),
+        engine.label()
+    );
     // serve until killed
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -79,15 +79,16 @@ impl CostModel {
         let map: Vec<u32> = (0..n).map(|i| ((i >> 6) % sep_len) as u32).collect();
         let mut dst = vec![0.0f64; sep_len];
 
-        let time_per = |iters: usize, mut f: Box<dyn FnMut() + '_>| -> f64 {
-            // one warmup, then timed
+        // one warmup, then timed (a fn item so each call site gets its own
+        // borrow lifetime for the boxed closure)
+        fn time_per(iters: usize, mut f: Box<dyn FnMut() + '_>) -> f64 {
             f();
             let t0 = Instant::now();
             for _ in 0..iters {
                 f();
             }
             t0.elapsed().as_nanos() as f64 / iters as f64
-        };
+        }
 
         let marg_total = {
             let src = &src;

@@ -247,9 +247,9 @@ pub fn reduce_partials(partials: &[&[f64]], dst: &mut [f64]) {
 /// View a `&mut [f64]` as atomic u64 slots (same layout; used by the
 /// element engine during its scatter phase).
 ///
-/// Safety: `AtomicU64` has the same size/alignment as `u64`/`f64`; the
-/// borrow is exclusive, so re-typing the region for the duration of the
-/// borrow is sound.
+/// Sound because `AtomicU64` has the same size/alignment as `u64`/`f64`
+/// and the borrow is exclusive, so re-typing the region for the duration
+/// of the borrow introduces no aliasing.
 pub fn as_atomic(xs: &mut [f64]) -> &[AtomicU64] {
     unsafe { std::slice::from_raw_parts(xs.as_mut_ptr() as *const AtomicU64, xs.len()) }
 }

@@ -45,26 +45,62 @@ pub mod rng;
 pub mod runtime;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// Hand-rolled `Display`/`Error` impls keep the default build free of any
+/// external dependency (this offline environment has no crates.io access).
+#[derive(Debug)]
 pub enum Error {
-    #[error("parse error at line {line}: {msg}")]
+    /// Parse error in a BIF / Hugin source, with a 1-based line number.
     Parse { line: usize, msg: String },
-    #[error("invalid network: {0}")]
+    /// Structural validation failure (CPT shapes, cycles, duplicates).
     InvalidNetwork(String),
-    #[error("unknown variable: {0}")]
+    /// Variable name not present in the network.
     UnknownVariable(String),
-    #[error("unknown state {state:?} for variable {var:?}")]
+    /// State name not present on a variable.
     UnknownState { var: String, state: String },
-    #[error("evidence is inconsistent (P(e) = 0)")]
+    /// The entered evidence has probability zero.
     InconsistentEvidence,
-    #[error("junction tree error: {0}")]
+    /// Junction-tree compilation or invariant failure.
     JunctionTree(String),
-    #[error("runtime error: {0}")]
+    /// Accelerator-runtime (PJRT/XLA) failure.
     Runtime(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("{0}")]
+    /// Propagated I/O failure.
+    Io(std::io::Error),
+    /// Free-form error message.
     Msg(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            Error::InvalidNetwork(m) => write!(f, "invalid network: {m}"),
+            Error::UnknownVariable(v) => write!(f, "unknown variable: {v}"),
+            Error::UnknownState { var, state } => {
+                write!(f, "unknown state {state:?} for variable {var:?}")
+            }
+            Error::InconsistentEvidence => write!(f, "evidence is inconsistent (P(e) = 0)"),
+            Error::JunctionTree(m) => write!(f, "junction tree error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {

@@ -181,12 +181,12 @@ mod tests {
 
     #[test]
     fn manifest_parses_and_selects_buckets() {
-        let dir = std::path::Path::new("artifacts");
-        if !crate::runtime::artifacts_available(dir) {
+        let dir = crate::runtime::artifact_dir();
+        if !crate::runtime::artifacts_available(&dir) {
             eprintln!("skipping: artifacts not built (run `make artifacts`)");
             return;
         }
-        let man = Manifest::load(dir).unwrap();
+        let man = Manifest::load(&dir).unwrap();
         assert!(!man.buckets.is_empty());
         let (bm, bk) = man.bucket_for(10, 10).unwrap();
         assert!(bm >= 10 && bk >= 10);

@@ -14,17 +14,43 @@
 //!
 //! Python runs only at build time (`make artifacts`); the binary consumes
 //! HLO text exclusively.
+//!
+//! Everything that touches the `xla` crate (`pjrt`, `accel`, the `XlaOps`
+//! backend in [`ops`]) is gated behind the off-by-default `xla` cargo
+//! feature, so the default build is pure-std and offline-safe; `NativeOps`
+//! and the bucket/manifest machinery are always available.
 
+#[cfg(feature = "xla")]
 pub mod accel;
 pub mod buckets;
 pub mod ops;
+#[cfg(feature = "xla")]
 pub mod pjrt;
 
-/// Default artifact directory, relative to the repo root.
+/// Default artifact directory name (`make artifacts` writes it at the repo
+/// root; see [`artifact_dir`] for cwd-robust resolution).
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
 
 /// True if the artifact directory looks built (used by tests/benches to
 /// skip XLA-dependent sections with a notice instead of failing).
 pub fn artifacts_available(dir: &std::path::Path) -> bool {
     dir.join("manifest.txt").exists()
+}
+
+/// Resolve the artifact directory: `$FASTBN_ARTIFACTS` if set, else the
+/// first of `artifacts/`, `../artifacts/` that looks built. The second
+/// candidate matters because cargo runs test and bench binaries with the
+/// *package* root (`rust/`) as cwd, one level below the repo root where
+/// `make artifacts` writes.
+pub fn artifact_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("FASTBN_ARTIFACTS") {
+        return std::path::PathBuf::from(p);
+    }
+    for cand in [DEFAULT_ARTIFACT_DIR, "../artifacts"] {
+        let p = std::path::Path::new(cand);
+        if artifacts_available(p) {
+            return p.to_path_buf();
+        }
+    }
+    std::path::PathBuf::from(DEFAULT_ARTIFACT_DIR)
 }

@@ -1,0 +1,53 @@
+//! Build smoke test: the first thing a fresh checkout should pass.
+//!
+//! Compiles the embedded `asia` network, runs every default-feature
+//! [`EngineKind`] on the same query, and asserts the posteriors agree to
+//! 1e-9 — a minimal end-to-end proof that the crate builds into a working
+//! inference system before the heavier integration suites run.
+
+use std::sync::Arc;
+
+use fastbn::bn::embedded;
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::jt::evidence::Evidence;
+use fastbn::jt::state::TreeState;
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+
+#[test]
+fn asia_compiles_and_all_engines_agree() {
+    let net = embedded::asia();
+    assert_eq!(net.n(), 8, "embedded asia must parse to 8 variables");
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    jt.verify_rip().unwrap();
+
+    let ev = Evidence::from_pairs(&net, &[("smoke", "yes"), ("dysp", "yes")]).unwrap();
+    let cfg = EngineConfig { threads: 2, min_chunk: 4, ..Default::default() };
+
+    let mut reference = None;
+    for kind in EngineKind::ALL {
+        let mut engine = kind.build(Arc::clone(&jt), &cfg);
+        let mut state = TreeState::fresh(&jt);
+        let post = engine.infer(&mut state, &ev).unwrap();
+
+        // posteriors are distributions and the evidence mass is sensible
+        for v in 0..net.n() {
+            let sum: f64 = post.probs[v].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{kind}: P(v{v}) sums to {sum}");
+        }
+        assert!(post.log_z < 0.0, "{kind}: ln P(e) = {} must be negative", post.log_z);
+
+        match &reference {
+            None => reference = Some(post),
+            Some(r) => {
+                let d = post.max_abs_diff(r);
+                assert!(d < 1e-9, "{kind} disagrees with {}: max |Δ| = {d}", EngineKind::ALL[0]);
+            }
+        }
+    }
+
+    // anchor one hand-derived value: P(lung = yes | smoke = yes, dysp) > P(lung | smoke)
+    let r = reference.unwrap();
+    let lung = net.var_id("lung").unwrap();
+    assert!(r.probs[lung][0] > 0.1, "dyspnoea should raise P(lung | smoke) above the prior 0.1");
+}

@@ -1,0 +1,136 @@
+//! Offline API stub for the `xla` crate (xla-rs).
+//!
+//! This container has no crates.io access, so the real `xla` crate (which
+//! additionally needs a downloaded `xla_extension` C++ bundle) cannot be
+//! fetched. This stub mirrors the exact API surface `fastbn::runtime::pjrt`
+//! uses so that `cargo build --features xla` compiles everywhere; every
+//! entry point fails at *runtime* with [`Error::StubOnly`].
+//!
+//! To run the real PJRT path, replace this dependency with the published
+//! crate, e.g. in `rust/Cargo.toml`:
+//!
+//! ```toml
+//! [patch.crates-io]        # or edit the dependency directly
+//! xla = { git = "https://github.com/LaurentMazare/xla-rs" }
+//! ```
+//!
+//! The `fastbn` integration tests skip themselves (with a notice) when the
+//! backend fails to come up, so `cargo test --features xla` — and
+//! `make test-xla`, which builds artifacts first — stay green against this
+//! stub; only swapping in the real crate makes them exercise PJRT.
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug)]
+pub enum Error {
+    /// The only error this stub produces.
+    StubOnly,
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "xla stub: built against the offline API stub; link the real xla crate \
+             (see rust/vendor/xla-stub) to execute PJRT"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub<T>() -> Result<T, Error> {
+    Err(Error::StubOnly)
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub.
+    pub fn cpu() -> Result<Self, Error> {
+        stub()
+    }
+
+    /// Platform name of the client.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation. Always fails in the stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        stub()
+    }
+}
+
+/// Parsed HLO module proto (stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse HLO text from a file. Always fails in the stub.
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        stub()
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a proto as a computation.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// A compiled, loaded executable (stub).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute on device buffers. Always fails in the stub.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        stub()
+    }
+}
+
+/// A device buffer (stub).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal. Always fails in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        stub()
+    }
+}
+
+/// A host literal (stub).
+pub struct Literal(());
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1(_data: &[f64]) -> Literal {
+        Literal(())
+    }
+
+    /// Reshape to the given dimensions. Always fails in the stub.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        stub()
+    }
+
+    /// Extract the sole element of a 1-tuple. Always fails in the stub.
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        stub()
+    }
+
+    /// Extract all elements of a tuple. Always fails in the stub.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        stub()
+    }
+
+    /// Copy out as a typed host vector. Always fails in the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        stub()
+    }
+}
