@@ -2,7 +2,9 @@
 #
 #   make build      release build of the fastbn crate (pure-std, offline-safe)
 #   make test       tier-1: cargo test; then the python suite (skips if no pytest)
-#   make bench      run all four bench targets (criterion-lite, harness=false)
+#   make bench      run all five bench targets (criterion-lite, harness=false)
+#   make serve-smoke start a 2-network fleet, run a scripted session
+#                   through it over TCP, and assert on the replies
 #   make artifacts  AOT-lower the Pallas/JAX kernels to HLO-text artifacts
 #                   (needs the python deps in python/requirements.txt)
 #   make fmt        rustfmt the workspace
@@ -14,7 +16,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench artifacts fmt lint test-xla clean
+.PHONY: build test bench serve-smoke artifacts fmt lint test-xla clean
 
 build:
 	$(CARGO) build --release
@@ -34,6 +36,13 @@ test: build
 
 bench:
 	$(CARGO) bench
+
+# fleet serving smoke: 2 networks × 2 shards on an ephemeral port; the
+# --smoke switch drives a scripted LOAD/USE/OBSERVE/COMMIT/QUERY/STATS
+# session through the server's own socket and exits nonzero on any
+# unexpected reply.
+serve-smoke:
+	$(CARGO) run --release -- serve --nets asia,cancer --shards 2 --bind 127.0.0.1:0 --smoke
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts

@@ -1,0 +1,120 @@
+//! Bench: the **serving fleet** — shard count × network count sweep.
+//!
+//! Clients issue queries round-robin across every loaded network while the
+//! router spreads each network's load over its shard group. The sweep
+//! separates two scaling axes:
+//!
+//! 1. *Shards per network*: one network, shards ∈ {1, 2, 4} — replica
+//!    scaling for a single hot tree.
+//! 2. *Network count*: fleets hosting 1/2/4 networks at 2 shards each —
+//!    does co-hosting trees degrade per-network latency?
+//!
+//! Scale knobs: FASTBN_FLEET_QUERIES (default 200 per cell),
+//! FASTBN_FLEET_CLIENTS (default 4 concurrent client threads).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use fastbn::bench::{env_usize, fmt_duration, print_table};
+use fastbn::bn::resolve_spec;
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::fleet::{Fleet, FleetConfig};
+use fastbn::infer::cases::{generate, CaseSpec};
+use fastbn::jt::evidence::Evidence;
+
+/// Run `n_queries` through a fleet from `n_clients` threads, round-robin
+/// across the loaded nets; returns (wall seconds, total served).
+fn drive(fleet: &Arc<Fleet>, nets: &[&str], cases: &[Vec<Evidence>], n_queries: usize, n_clients: usize) -> (f64, u64) {
+    let cursor = AtomicUsize::new(0);
+    let served = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..n_clients.max(1) {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n_queries {
+                    break;
+                }
+                let net_i = i % nets.len();
+                let ev = &cases[net_i][i % cases[net_i].len()];
+                if fleet.query(nets[net_i], ev.clone()).is_ok() {
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    (t0.elapsed().as_secs_f64(), served.load(Ordering::Relaxed) as u64)
+}
+
+fn build_fleet(nets: &[&str], shards: usize) -> (Arc<Fleet>, Vec<Vec<Evidence>>) {
+    let fleet = Arc::new(Fleet::new(FleetConfig {
+        engine: EngineKind::Hybrid,
+        engine_cfg: EngineConfig::default().with_threads(2),
+        shards,
+        registry_capacity: nets.len().max(1),
+    }));
+    let mut cases = Vec::new();
+    for (i, name) in nets.iter().enumerate() {
+        fleet.load(name).unwrap();
+        let net = resolve_spec(name).unwrap();
+        cases.push(generate(&net, &CaseSpec { n_cases: 64, observed_fraction: 0.2, seed: 0xF1EE7 + i as u64 }));
+    }
+    (fleet, cases)
+}
+
+fn percentile_row(fleet: &Fleet) -> (String, String) {
+    let snaps = fleet.metrics().snapshot();
+    let p50 = snaps.iter().map(|s| s.latency.p50).max().unwrap_or_default();
+    let p99 = snaps.iter().map(|s| s.latency.p99).max().unwrap_or_default();
+    (fmt_duration(p50), fmt_duration(p99))
+}
+
+fn main() {
+    let n_queries = env_usize("FASTBN_FLEET_QUERIES", 200);
+    let n_clients = env_usize("FASTBN_FLEET_CLIENTS", 4);
+
+    // ---- 1. shard scaling on one hot network ----
+    let mut rows = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let (fleet, cases) = build_fleet(&["hailfinder-sim"], shards);
+        let (wall, served) = drive(&fleet, &["hailfinder-sim"], &cases, n_queries, n_clients);
+        let (p50, p99) = percentile_row(&fleet);
+        rows.push(vec![
+            format!("{shards}"),
+            format!("{served}"),
+            format!("{wall:.3}s"),
+            format!("{:.1}", served as f64 / wall.max(1e-9)),
+            p50,
+            p99,
+        ]);
+    }
+    print_table(
+        &format!("fleet 1: shards per net (hailfinder-sim, {n_clients} clients, {n_queries} queries)"),
+        &["shards", "served", "wall", "q/s", "p50(worst net)", "p99(worst net)"],
+        &rows,
+    );
+
+    // ---- 2. network count at fixed shards ----
+    let net_sets: [&[&str]; 3] =
+        [&["asia"], &["asia", "cancer"], &["asia", "cancer", "sprinkler", "mixed12"]];
+    let mut rows = Vec::new();
+    for nets in net_sets {
+        let (fleet, cases) = build_fleet(nets, 2);
+        let (wall, served) = drive(&fleet, nets, &cases, n_queries, n_clients);
+        let (p50, p99) = percentile_row(&fleet);
+        rows.push(vec![
+            format!("{}", nets.len()),
+            format!("{served}"),
+            format!("{wall:.3}s"),
+            format!("{:.1}", served as f64 / wall.max(1e-9)),
+            p50,
+            p99,
+        ]);
+    }
+    print_table(
+        &format!("fleet 2: co-hosted networks (2 shards each, {n_clients} clients, {n_queries} queries)"),
+        &["nets", "served", "wall", "q/s", "p50(worst net)", "p99(worst net)"],
+        &rows,
+    );
+}

@@ -21,3 +21,41 @@ pub mod variable;
 pub use cpt::Cpt;
 pub use network::Network;
 pub use variable::Variable;
+
+/// Resolve a network spec string to a loaded [`Network`].
+///
+/// A spec is an embedded name (`asia`, `cancer`, `sprinkler`, `mixed12`),
+/// a paper-suite analog (`hailfinder-sim` … `munin4-sim`), or a path to a
+/// `.bif` / Hugin `.net` file. This is the single loading entry point the
+/// CLI and the serving fleet's registry share.
+pub fn resolve_spec(spec: &str) -> crate::Result<Network> {
+    if let Some(net) = embedded::by_name(spec) {
+        return Ok(net);
+    }
+    if let Some(net) = netgen::paper_net(spec) {
+        return Ok(net);
+    }
+    let path = std::path::Path::new(spec);
+    if path.exists() {
+        // dispatch on extension: .net = Hugin, everything else = BIF
+        if path.extension().map(|e| e == "net").unwrap_or(false) {
+            return hugin::parse_file(path);
+        }
+        return bif::parse_file(path);
+    }
+    Err(crate::Error::msg(format!(
+        "unknown network {spec:?} (embedded: {}; paper suite: {}; or a .bif/.net path)",
+        embedded::NAMES.join(", "),
+        netgen::paper_names().join(", ")
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn resolve_spec_covers_embedded_paper_and_missing() {
+        assert_eq!(super::resolve_spec("asia").unwrap().name, "asia");
+        assert!(super::resolve_spec("hailfinder-sim").is_ok());
+        assert!(super::resolve_spec("no-such-net").is_err());
+    }
+}

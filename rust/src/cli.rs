@@ -7,6 +7,7 @@
 //! fastbn batch     --net <spec> [--cases 2000] [--obs 0.2] [--engine hybrid] [--threads N] [--replicas 1] [--seed S]
 //! fastbn generate  --nodes N [--arcs M] [--max-parents 3] [--seed S] [--out net.bif]
 //! fastbn serve     --net <spec> [--bind 127.0.0.1:7979] [--engine hybrid] [--threads N]
+//! fastbn serve     --nets a,b,c [--shards N] [--registry-cap K] [--bind ...] [--smoke]
 //! fastbn simulate  --net <spec> [--threads 1,2,4,8,16,32]
 //! fastbn selftest
 //! ```
@@ -24,6 +25,7 @@ use crate::coordinator::server::Server;
 use crate::coordinator::{BatchConfig, BatchRunner};
 use crate::engine::simulate::{best_over_threads, simulate_seconds, CostModel};
 use crate::engine::{EngineConfig, EngineKind};
+use crate::fleet::{Fleet, FleetConfig, FleetServer};
 use crate::infer::cases::{generate, CaseSpec};
 use crate::jt::evidence::Evidence;
 use crate::jt::state::TreeState;
@@ -31,27 +33,10 @@ use crate::jt::tree::JunctionTree;
 use crate::jt::triangulate::TriangulationHeuristic;
 use crate::{Error, Result};
 
-/// Resolve a network spec string (see module docs).
+/// Resolve a network spec string (see module docs); shared with the
+/// serving fleet's registry via [`crate::bn::resolve_spec`].
 pub fn resolve_net(spec: &str) -> Result<Network> {
-    if let Some(net) = embedded::by_name(spec) {
-        return Ok(net);
-    }
-    if let Some(net) = netgen::paper_net(spec) {
-        return Ok(net);
-    }
-    let path = std::path::Path::new(spec);
-    if path.exists() {
-        // dispatch on extension: .net = Hugin, everything else = BIF
-        if path.extension().map(|e| e == "net").unwrap_or(false) {
-            return crate::bn::hugin::parse_file(path);
-        }
-        return bif::parse_file(path);
-    }
-    Err(Error::msg(format!(
-        "unknown network {spec:?} (embedded: {}; paper suite: {}; or a .bif/.net path)",
-        embedded::NAMES.join(", "),
-        netgen::paper_names().join(", ")
-    )))
+    crate::bn::resolve_spec(spec)
 }
 
 /// Parsed `--flag value` arguments.
@@ -59,6 +44,10 @@ pub struct Args {
     flags: HashMap<String, String>,
     pub positional: Vec<String>,
 }
+
+/// Flags that are boolean switches: present or absent, never taking a
+/// value. Everything else must be followed by one.
+const SWITCHES: &[&str] = &["smoke"];
 
 impl Args {
     /// Parse from raw argv (after the subcommand).
@@ -71,10 +60,18 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     flags.insert(k.to_string(), v.to_string());
+                } else if SWITCHES.contains(&name) {
+                    flags.insert(name.to_string(), String::new());
                 } else {
-                    let v = argv.get(i + 1).ok_or_else(|| Error::msg(format!("--{name} needs a value")))?;
-                    flags.insert(name.to_string(), v.clone());
-                    i += 1;
+                    match argv.get(i + 1) {
+                        // `--evidence --engine …` is a forgotten value, not
+                        // a value that happens to start with a dash-dash
+                        Some(v) if !v.starts_with("--") => {
+                            flags.insert(name.to_string(), v.clone());
+                            i += 1;
+                        }
+                        _ => return Err(Error::msg(format!("--{name} needs a value"))),
+                    }
                 }
             } else {
                 positional.push(a.clone());
@@ -87,6 +84,11 @@ impl Args {
     /// String flag.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Boolean switch: present with no value (or any value at all).
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
     }
 
     /// Required string flag.
@@ -169,6 +171,10 @@ COMMANDS:
   generate  --nodes N                make a synthetic network (--arcs, --max-parents,
                                      --seed, --out file.bif)
   serve     --net S                  TCP inference server (--bind, --engine)
+  serve     --nets A,B,C             multi-network serving fleet (--shards N,
+                                     --registry-cap K, --smoke self-check);
+                                     verbs: LOAD USE NETS OBSERVE RETRACT
+                                     COMMIT QUERY STATS QUIT
   simulate  --net S                  modeled parallel times across --threads list
   selftest                           engine-agreement smoke check
   help                               this text
@@ -302,10 +308,51 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let net = resolve_net(args.require("net")?)?;
     let engine: EngineKind = args.get("engine").unwrap_or("hybrid").parse()?;
     let cfg = engine_config(args)?;
     let bind = args.get("bind").unwrap_or("127.0.0.1:7979");
+
+    if let Some(nets) = args.get("nets") {
+        // fleet mode: many networks, shard groups, streaming sessions
+        let specs: Vec<&str> = nets.split(',').filter(|s| !s.is_empty()).collect();
+        if specs.is_empty() {
+            return Err(Error::msg("--nets needs a comma-separated list of network specs"));
+        }
+        let fleet_cfg = FleetConfig {
+            engine,
+            engine_cfg: cfg,
+            shards: args.parse_or("shards", 2usize)?,
+            registry_capacity: args.parse_or("registry-cap", 8usize)?.max(specs.len()),
+        };
+        let shards = fleet_cfg.shards;
+        let fleet = Arc::new(Fleet::new(fleet_cfg));
+        for spec in &specs {
+            let e = fleet.load(spec)?;
+            println!(
+                "loaded {:<16} {} cliques, {} entries, compiled in {:?}",
+                e.name, e.cliques, e.entries, e.compile_time
+            );
+        }
+        let server = FleetServer::start(Arc::clone(&fleet), bind)?;
+        println!(
+            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/STATS/QUIT",
+            fleet.loaded().len(),
+            shards,
+            server.addr(),
+            engine.label()
+        );
+        if args.has("smoke") {
+            // scripted self-check: drive a session through our own TCP
+            // socket, assert on every reply, then exit (make serve-smoke)
+            return serve_smoke(&server);
+        }
+        // serve until killed
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
+    let net = resolve_net(args.require("net")?)?;
     let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
     let server = Server::start(jt, engine, cfg, bind)?;
     println!(
@@ -318,6 +365,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Drive a scripted session through a running fleet server and verify the
+/// replies — the `make serve-smoke` assertion path.
+fn serve_smoke(server: &FleetServer) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+
+    let entries = server.fleet().loaded();
+    if entries.len() < 2 {
+        return Err(Error::msg("--smoke needs at least two loaded networks (--nets a,b)"));
+    }
+    let (a, b) = (&entries[0], &entries[1]);
+    let jt_a = server.fleet().tree(&a.name).ok_or_else(|| Error::msg("smoke: first net missing"))?;
+    let jt_b = server.fleet().tree(&b.name).ok_or_else(|| Error::msg("smoke: second net missing"))?;
+    let (obs_var, obs_state) = (&jt_a.net.vars[0].name, &jt_a.net.vars[0].states[0]);
+    let target_a = &jt_a.net.vars[jt_a.net.n() - 1].name;
+    let target_b = &jt_b.net.vars[jt_b.net.n() - 1].name;
+
+    // (request, prefix the reply must start with, substring it must contain)
+    let script: Vec<(String, String, String)> = vec![
+        ("NETS".into(), format!("OK nets={}", entries.len()), format!("{}[cliques=", a.name)),
+        (format!("USE {}", a.name), format!("OK using {}", a.name), "vars=".into()),
+        (format!("OBSERVE {obs_var}={obs_state}"), "OK staged 1".into(), "pending=1".into()),
+        ("COMMIT".into(), "OK committed evidence=1".into(), "applied=1".into()),
+        (format!("QUERY {target_a}"), "OK ".into(), "logZ=".into()),
+        (format!("USE {}", b.name), format!("OK using {}", b.name), "vars=".into()),
+        (format!("QUERY {target_b}"), "OK ".into(), "logZ=".into()),
+        ("STATS".into(), "STATS ".into(), format!("| {} queries=1", b.name)),
+        ("USE not-loaded-anywhere".into(), "ERR not loaded".into(), String::new()),
+    ];
+
+    let mut stream = std::net::TcpStream::connect(server.addr())?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    for (request, prefix, contains) in &script {
+        stream.write_all(request.as_bytes())?;
+        stream.write_all(b"\n")?;
+        let mut reply = String::new();
+        reader.read_line(&mut reply)?;
+        let reply = reply.trim();
+        println!("> {request}\n< {reply}");
+        if !reply.starts_with(prefix.as_str()) {
+            return Err(Error::msg(format!("smoke failed: {request:?} replied {reply:?}, wanted prefix {prefix:?}")));
+        }
+        if !contains.is_empty() && !reply.contains(contains.as_str()) {
+            return Err(Error::msg(format!("smoke failed: {request:?} replied {reply:?}, wanted {contains:?}")));
+        }
+    }
+    stream.write_all(b"QUIT\n")?;
+    println!("serve-smoke passed ({} nets)", entries.len());
+    Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -390,6 +487,33 @@ mod tests {
         assert_eq!(a.positional, vec!["pos1"]);
         assert!(a.require("missing").is_err());
         assert!(a.parse_or::<usize>("net", 0).is_err());
+    }
+
+    #[test]
+    fn boolean_switches_parse_without_values() {
+        let argv: Vec<String> = ["--smoke", "--nets", "asia,cancer"].iter().map(|s| s.to_string()).collect();
+        let a = Args::parse(&argv).unwrap();
+        assert!(a.has("smoke"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.get("nets"), Some("asia,cancer"));
+        // a trailing switch needs no value
+        let a = Args::parse(&["--smoke".to_string()]).unwrap();
+        assert!(a.has("smoke"));
+        // non-switch flags still demand one — a following flag is not it
+        assert!(Args::parse(&["--evidence".to_string()]).is_err());
+        assert!(Args::parse(&["--evidence".to_string(), "--engine".to_string()]).is_err());
+    }
+
+    #[test]
+    fn serve_smoke_runs_a_two_net_fleet() {
+        let argv: Vec<String> = [
+            "serve", "--nets", "asia,cancer", "--shards", "2", "--engine", "seq", "--threads", "1",
+            "--bind", "127.0.0.1:0", "--smoke",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(argv), 0);
     }
 
     #[test]

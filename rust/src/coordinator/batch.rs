@@ -4,7 +4,9 @@
 //! list), so stragglers — cases whose evidence makes propagation cheaper
 //! or costlier — don't serialize the batch. Each replica owns a full
 //! engine instance (with its own thread pool of `engine_cfg.threads`) and
-//! a reusable [`TreeState`].
+//! a reusable [`TreeState`]. The serving-side analog of a replica is a
+//! [`crate::fleet`] shard: same engine-per-worker layout, but fed by a
+//! request stream instead of a case list.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};

@@ -63,6 +63,49 @@ impl std::fmt::Display for LatencySummary {
     }
 }
 
+/// Fixed-capacity ring of latency samples for long-running servers.
+///
+/// Batch runs summarize a complete sample vector; a serving fleet cannot
+/// hold every latency forever, so this keeps the most recent `cap`
+/// samples (overwriting the oldest) while counting everything ever seen.
+/// Percentiles are therefore over a sliding window, counts are lifetime.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    samples: Vec<Duration>,
+    cap: usize,
+    next: usize,
+    seen: u64,
+}
+
+impl Reservoir {
+    /// Create with room for `cap` samples (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Reservoir { samples: Vec::with_capacity(cap.min(1024)), cap, next: 0, seen: 0 }
+    }
+
+    /// Record one sample, overwriting the oldest once full.
+    pub fn record(&mut self, d: Duration) {
+        if self.samples.len() < self.cap {
+            self.samples.push(d);
+        } else {
+            self.samples[self.next] = d;
+            self.next = (self.next + 1) % self.cap;
+        }
+        self.seen += 1;
+    }
+
+    /// Lifetime number of samples recorded (including overwritten ones).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Summary over the samples currently held in the window.
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary::from_samples(&self.samples)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +144,29 @@ mod tests {
         let s = LatencySummary::from_samples(&[Duration::from_millis(5)]);
         let text = format!("{s}");
         assert!(text.contains("n=1"));
+    }
+
+    #[test]
+    fn reservoir_keeps_a_sliding_window_and_lifetime_count() {
+        let mut r = Reservoir::new(4);
+        for ms in 1..=10u64 {
+            r.record(Duration::from_millis(ms));
+        }
+        assert_eq!(r.seen(), 10);
+        let s = r.summary();
+        // window holds the most recent 4 samples: 7, 8, 9, 10 ms
+        assert_eq!(s.count, 4);
+        assert_eq!(s.min, Duration::from_millis(7));
+        assert_eq!(s.max, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn reservoir_zero_capacity_is_clamped() {
+        let mut r = Reservoir::new(0);
+        r.record(Duration::from_millis(3));
+        r.record(Duration::from_millis(5));
+        assert_eq!(r.seen(), 2);
+        assert_eq!(r.summary().count, 1);
+        assert_eq!(r.summary().max, Duration::from_millis(5));
     }
 }

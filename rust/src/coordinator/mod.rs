@@ -8,6 +8,10 @@
 //! extension benchmarked in `benches/ablation.rs`), latency/throughput
 //! [`metrics`], and a line-protocol TCP [`server`] for interactive use
 //! (`fastbn serve`).
+//!
+//! Everything here serves **one** compiled tree per process. Serving many
+//! networks (and streaming evidence sessions) from a single process is the
+//! [`crate::fleet`] layer, which builds on the same engines and metrics.
 
 pub mod batch;
 pub mod metrics;

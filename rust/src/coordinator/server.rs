@@ -31,6 +31,7 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     queries: Arc<AtomicU64>,
+    reaped: Arc<AtomicU64>,
 }
 
 impl Server {
@@ -42,33 +43,23 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let queries = Arc::new(AtomicU64::new(0));
 
+        let reaped = Arc::new(AtomicU64::new(0));
         let accept_stop = Arc::clone(&stop);
         let accept_queries = Arc::clone(&queries);
+        let accept_reaped = Arc::clone(&reaped);
         let accept_thread = std::thread::Builder::new().name("fastbn-accept".into()).spawn(move || {
-            let mut conn_threads = Vec::new();
-            while !accept_stop.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let jt = Arc::clone(&jt);
-                        let cfg = cfg.clone();
-                        let stop = Arc::clone(&accept_stop);
-                        let queries = Arc::clone(&accept_queries);
-                        conn_threads.push(std::thread::spawn(move || {
-                            let _ = handle_connection(stream, jt, engine, cfg, stop, queries);
-                        }));
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
-                }
-            }
-            for t in conn_threads {
-                let _ = t.join();
-            }
+            run_accept_loop(&listener, &accept_stop, &accept_reaped, |stream| {
+                let jt = Arc::clone(&jt);
+                let cfg = cfg.clone();
+                let stop = Arc::clone(&accept_stop);
+                let queries = Arc::clone(&accept_queries);
+                std::thread::spawn(move || {
+                    let _ = handle_connection(stream, jt, engine, cfg, stop, queries);
+                })
+            });
         })?;
 
-        Ok(Server { addr, stop, accept_thread: Some(accept_thread), queries })
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread), queries, reaped })
     }
 
     /// Bound address (useful with port 0).
@@ -79,6 +70,11 @@ impl Server {
     /// Number of queries served so far.
     pub fn queries_served(&self) -> u64 {
         self.queries.load(Ordering::Relaxed)
+    }
+
+    /// Finished connection threads joined by the accept loop so far.
+    pub fn reaped_connections(&self) -> u64 {
+        self.reaped.load(Ordering::Relaxed)
     }
 
     /// Stop accepting and wait for the accept loop to end.
@@ -99,6 +95,78 @@ impl Drop for Server {
     }
 }
 
+/// Nonblocking accept loop shared by the single-tree server and the fleet
+/// server: `spawn_conn` starts a handler thread per connection; finished
+/// handler threads are reaped (joined, counted in `reaped`) on every tick
+/// so the handle list stays proportional to *live* connections. Returns
+/// once `stop` is set (or the listener dies), after joining every handler.
+pub(crate) fn run_accept_loop(
+    listener: &TcpListener,
+    stop: &AtomicBool,
+    reaped: &AtomicU64,
+    mut spawn_conn: impl FnMut(TcpStream) -> std::thread::JoinHandle<()>,
+) {
+    let mut conn_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        for t in std::mem::take(&mut conn_threads) {
+            if t.is_finished() {
+                let _ = t.join();
+                reaped.fetch_add(1, Ordering::Relaxed);
+            } else {
+                conn_threads.push(t);
+            }
+        }
+        match listener.accept() {
+            Ok((stream, _)) => conn_threads.push(spawn_conn(stream)),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+    for t in conn_threads {
+        let _ = t.join();
+    }
+}
+
+/// Line-serving loop shared by both servers: read one request line, hand
+/// it to `respond`, write the single-line reply. `None` from `respond`
+/// ends the session (QUIT). A read timeout mid-request keeps the bytes
+/// received so far in the buffer — a slow client's half-sent line is
+/// completed by later reads, never silently dropped. Lines are
+/// accumulated as bytes (not via `read_line`) so a timeout landing
+/// mid-UTF-8-character cannot truncate what was already received.
+pub(crate) fn serve_lines(
+    stream: TcpStream,
+    stop: &AtomicBool,
+    mut respond: impl FnMut(&str) -> Option<String>,
+) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) => {
+                continue; // partial bytes stay in `buf`; the next read appends
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let response = respond(&String::from_utf8_lossy(&buf));
+        buf.clear();
+        let Some(response) = response else { return Ok(()) };
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
 fn handle_connection(
     stream: TcpStream,
     jt: Arc<JunctionTree>,
@@ -107,39 +175,48 @@ fn handle_connection(
     stop: Arc<AtomicBool>,
     queries: Arc<AtomicU64>,
 ) -> Result<()> {
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
     let mut engine = engine_kind.build(Arc::clone(&jt), &cfg);
     let mut state = TreeState::fresh(&jt);
-    let mut line = String::new();
-
-    loop {
-        if stop.load(Ordering::Relaxed) {
-            return Ok(());
+    serve_lines(stream, &stop, move |line| {
+        match respond(line, &jt, engine.as_mut(), &mut state, &queries) {
+            Reply::Line(s) => Some(s),
+            Reply::Quit => None,
         }
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // EOF
-            Ok(_) => {}
-            Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) => {
-                continue;
-            }
-            Err(e) => return Err(e.into()),
-        }
-        let response = match respond(&line, &jt, engine.as_mut(), &mut state, &queries) {
-            Reply::Line(s) => s,
-            Reply::Quit => return Ok(()),
-        };
-        writer.write_all(response.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
-    }
+    })
 }
 
 enum Reply {
     Line(String),
     Quit,
+}
+
+/// Split `QUERY` argument text into a target and `var=state` tokens;
+/// both protocols accept `target [| var=state …]`. `Err` carries the
+/// message to send after `ERR `.
+pub(crate) fn parse_query_args(rest: &str) -> std::result::Result<(&str, Vec<(&str, &str)>), String> {
+    let (target, ev_text) = match rest.split_once('|') {
+        Some((t, e)) => (t.trim(), e.trim()),
+        None => (rest, ""),
+    };
+    if target.is_empty() {
+        return Err("usage: QUERY <var> [| ev=state ...]".to_string());
+    }
+    let mut pairs = Vec::new();
+    for tok in ev_text.split_whitespace() {
+        match tok.split_once('=') {
+            Some((v, s)) => pairs.push((v, s)),
+            None => return Err(format!("bad evidence token {tok:?} (want var=state)")),
+        }
+    }
+    Ok((target, pairs))
+}
+
+/// The `OK <state>=<prob> … logZ=…` reply line both protocols share —
+/// one place owns the wire precision.
+pub(crate) fn format_ok_posterior(net: &crate::bn::network::Network, v: usize, post: &crate::infer::query::Posteriors) -> String {
+    let var = &net.vars[v];
+    let entries: Vec<String> = var.states.iter().zip(&post.probs[v]).map(|(s, p)| format!("{s}={p:.6}")).collect();
+    format!("OK {} logZ={:.6}", entries.join(" "), post.log_z)
 }
 
 fn respond(
@@ -171,20 +248,10 @@ fn respond(
             ))
         }
         "QUERY" => {
-            let (target, ev_text) = match rest.split_once('|') {
-                Some((t, e)) => (t.trim(), e.trim()),
-                None => (rest, ""),
+            let (target, pairs) = match parse_query_args(rest) {
+                Ok(parsed) => parsed,
+                Err(msg) => return Reply::Line(format!("ERR {msg}")),
             };
-            if target.is_empty() {
-                return Reply::Line("ERR usage: QUERY <var> [| ev=state ...]".into());
-            }
-            let mut pairs = Vec::new();
-            for tok in ev_text.split_whitespace() {
-                match tok.split_once('=') {
-                    Some((v, s)) => pairs.push((v, s)),
-                    None => return Reply::Line(format!("ERR bad evidence token {tok:?}")),
-                }
-            }
             let ev = match Evidence::from_pairs(&jt.net, &pairs) {
                 Ok(ev) => ev,
                 Err(e) => return Reply::Line(format!("ERR {e}")),
@@ -196,14 +263,7 @@ fn respond(
             match engine.infer(state, &ev) {
                 Ok(post) => {
                     queries.fetch_add(1, Ordering::Relaxed);
-                    let var = &jt.net.vars[v];
-                    let entries: Vec<String> = var
-                        .states
-                        .iter()
-                        .zip(&post.probs[v])
-                        .map(|(s, p)| format!("{s}={p:.6}"))
-                        .collect();
-                    Reply::Line(format!("OK {} logZ={:.6}", entries.join(" "), post.log_z))
+                    Reply::Line(format_ok_posterior(&jt.net, v, &post))
                 }
                 Err(e) => Reply::Line(format!("ERR {e}")),
             }
@@ -279,6 +339,55 @@ mod tests {
         assert!(replies[1].starts_with("ERR"));
         assert!(replies[2].starts_with("ERR"));
         assert!(replies[3].starts_with("OK yes=0.01"), "{}", replies[3]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn finished_connections_are_reaped_before_shutdown() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let server = Server::start(
+            jt,
+            EngineKind::Seq,
+            EngineConfig::default().with_threads(1),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        for _ in 0..3 {
+            let replies = ask(server.addr(), &["QUERY lung", "QUIT"]);
+            assert!(replies[0].starts_with("OK"), "{}", replies[0]);
+        }
+        // the accept loop ticks every ~5ms; finished handlers must be
+        // joined while the server is still running, not at shutdown
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while server.reaped_connections() < 3 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(server.reaped_connections() >= 3, "reaped {}", server.reaped_connections());
+        server.shutdown();
+    }
+
+    #[test]
+    fn slow_clients_do_not_lose_partial_lines() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let server = Server::start(
+            jt,
+            EngineKind::Seq,
+            EngineConfig::default().with_threads(1),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        // half a request, a pause longer than the 200ms read timeout, the rest
+        stream.write_all(b"QUERY lu").unwrap();
+        stream.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(450));
+        stream.write_all(b"ng | smoke=yes\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK yes=0.1000"), "{line}");
         server.shutdown();
     }
 }

@@ -1,0 +1,188 @@
+//! Fleet-wide metrics: per-network query counts, qps, and latency
+//! percentiles.
+//!
+//! Each network gets a lifetime query/error counter and a bounded
+//! [`Reservoir`] of recent service times (see
+//! [`crate::coordinator::metrics`]); the `STATS` protocol verb renders a
+//! snapshot as one line so any line-protocol client can scrape it.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::{LatencySummary, Reservoir};
+
+/// Samples kept per network (sliding window for percentiles).
+const WINDOW: usize = 4096;
+
+struct NetCounters {
+    queries: u64,
+    errors: u64,
+    reservoir: Reservoir,
+}
+
+/// Point-in-time view of one network's serving metrics.
+#[derive(Clone, Debug)]
+pub struct NetSnapshot {
+    /// Network name.
+    pub net: String,
+    /// Successful queries served (lifetime).
+    pub queries: u64,
+    /// Failed queries (lifetime) — bad evidence, unknown targets, etc.
+    pub errors: u64,
+    /// Successful queries per second of fleet uptime.
+    pub qps: f64,
+    /// Latency summary over the recent-sample window.
+    pub latency: LatencySummary,
+}
+
+/// Aggregates serving metrics across every network in a fleet.
+pub struct FleetMetrics {
+    started: Instant,
+    nets: Mutex<BTreeMap<String, NetCounters>>,
+}
+
+impl Default for FleetMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FleetMetrics {
+    /// Create, stamping the fleet start time (the qps denominator).
+    pub fn new() -> Self {
+        FleetMetrics { started: Instant::now(), nets: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Mint a network's counters entry (idempotent). Entry lifecycle is
+    /// owned by the fleet's load/evict path, so `STATS` lists preloaded
+    /// but not-yet-queried networks with `queries=0`.
+    pub fn ensure(&self, net: &str) {
+        self.nets
+            .lock()
+            .unwrap()
+            .entry(net.to_string())
+            .or_insert_with(|| NetCounters { queries: 0, errors: 0, reservoir: Reservoir::new(WINDOW) });
+    }
+
+    /// Record one query against `net`: its service time and outcome.
+    ///
+    /// A no-op for networks without an entry — minting here would let an
+    /// in-flight query racing an eviction resurrect a removed network's
+    /// counters, leaving `STATS` and `NETS` permanently disagreeing.
+    pub fn record(&self, net: &str, service: Duration, ok: bool) {
+        let mut nets = self.nets.lock().unwrap();
+        let Some(c) = nets.get_mut(net) else { return };
+        if ok {
+            c.queries += 1;
+            c.reservoir.record(service);
+        } else {
+            c.errors += 1;
+        }
+    }
+
+    /// Drop a network's counters — called on registry eviction so a fleet
+    /// cycling through many networks doesn't grow `STATS` (and memory)
+    /// without bound.
+    pub fn remove(&self, net: &str) {
+        self.nets.lock().unwrap().remove(net);
+    }
+
+    /// Fleet uptime.
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Per-network snapshots, sorted by name.
+    pub fn snapshot(&self) -> Vec<NetSnapshot> {
+        let uptime = self.uptime().as_secs_f64().max(1e-9);
+        let nets = self.nets.lock().unwrap();
+        nets.iter()
+            .map(|(name, c)| NetSnapshot {
+                net: name.clone(),
+                queries: c.queries,
+                errors: c.errors,
+                qps: c.queries as f64 / uptime,
+                latency: c.reservoir.summary(),
+            })
+            .collect()
+    }
+
+    /// Render the single-line `STATS` reply:
+    /// `STATS uptime_ms=… nets=N | <net> queries=… errors=… qps=… p50_us=… p99_us=… | …`
+    pub fn render(&self) -> String {
+        let snaps = self.snapshot();
+        let mut out = format!("STATS uptime_ms={} nets={}", self.uptime().as_millis(), snaps.len());
+        for s in &snaps {
+            out.push_str(&format!(
+                " | {} queries={} errors={} qps={:.2} p50_us={} p99_us={}",
+                s.net,
+                s.queries,
+                s.errors,
+                s.qps,
+                s.latency.p50.as_micros(),
+                s.latency.p99.as_micros()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_without_ensure_is_a_noop() {
+        let m = FleetMetrics::new();
+        m.record("ghost", Duration::from_micros(1), true);
+        assert!(m.snapshot().is_empty());
+        m.ensure("asia");
+        m.ensure("asia"); // idempotent
+        assert!(m.render().contains("| asia queries=0 errors=0"), "{}", m.render());
+        m.remove("asia");
+        assert!(m.snapshot().is_empty());
+    }
+
+    #[test]
+    fn records_split_by_network_and_outcome() {
+        let m = FleetMetrics::new();
+        m.ensure("asia");
+        m.ensure("cancer");
+        m.record("asia", Duration::from_micros(100), true);
+        m.record("asia", Duration::from_micros(300), true);
+        m.record("asia", Duration::from_micros(200), false);
+        m.record("cancer", Duration::from_micros(50), true);
+        let snaps = m.snapshot();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].net, "asia");
+        assert_eq!(snaps[0].queries, 2);
+        assert_eq!(snaps[0].errors, 1);
+        // failed queries don't pollute the latency window
+        assert_eq!(snaps[0].latency.count, 2);
+        assert_eq!(snaps[1].net, "cancer");
+        assert_eq!(snaps[1].queries, 1);
+        assert!(snaps[0].qps > 0.0);
+    }
+
+    #[test]
+    fn render_is_one_line_with_per_net_fields() {
+        let m = FleetMetrics::new();
+        m.ensure("asia");
+        m.record("asia", Duration::from_micros(150), true);
+        let line = m.render();
+        assert!(line.starts_with("STATS uptime_ms="), "{line}");
+        assert!(line.contains("nets=1"), "{line}");
+        assert!(line.contains("| asia queries=1 errors=0"), "{line}");
+        assert!(line.contains("p50_us=150"), "{line}");
+        assert!(line.contains("p99_us=150"), "{line}");
+        assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn empty_fleet_renders_zero_nets() {
+        let m = FleetMetrics::new();
+        assert!(m.render().contains("nets=0"));
+        assert!(m.snapshot().is_empty());
+    }
+}

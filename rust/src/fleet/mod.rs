@@ -1,0 +1,203 @@
+//! The multi-network serving fleet — many trees, many evidence streams,
+//! one process.
+//!
+//! The [`crate::coordinator`] serves one compiled tree per process; this
+//! module scales that to a *fleet*: a [`registry::Registry`] compiles and
+//! LRU-caches junction trees by name, a [`router::Router`] owns per-network
+//! shard groups of engine replicas and dispatches queries round-robin with
+//! per-shard depth accounting, [`metrics::FleetMetrics`] aggregates
+//! per-network qps and latency percentiles, and [`session::Session`] +
+//! [`server::FleetServer`] extend the line protocol with multi-network and
+//! streaming-evidence verbs:
+//!
+//! ```text
+//! LOAD <net>              compile/cache a network (idempotent)
+//! USE <net>               select the session's network (must be loaded)
+//! NETS                    list resident networks with size/compile stats
+//! OBSERVE var=state ...   stage evidence deltas
+//! RETRACT var ...         stage evidence removals
+//! COMMIT                  apply staged deltas to the session's evidence
+//! QUERY <var> [| ev ...]  posterior under committed (+ inline) evidence
+//! STATS                   fleet-wide per-network counters and latency
+//! QUIT                    end the session
+//! ```
+//!
+//! Sessions stream evidence *deltas* instead of resending full evidence
+//! per query — the shape an evidence-stream workload (e.g. a sensor feed)
+//! actually has.
+
+pub mod metrics;
+pub mod registry;
+pub mod router;
+pub mod server;
+pub mod session;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::engine::{EngineConfig, EngineKind};
+use crate::infer::query::Posteriors;
+use crate::jt::evidence::Evidence;
+use crate::jt::tree::JunctionTree;
+use crate::Result;
+
+pub use metrics::{FleetMetrics, NetSnapshot};
+pub use registry::{Registry, RegistryEntry};
+pub use router::{Router, ShardGroup};
+pub use server::FleetServer;
+pub use session::{Session, SessionReply};
+
+/// Fleet construction parameters.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Engine replicated in every shard.
+    pub engine: EngineKind,
+    /// Per-replica engine parameters (threads = intra-case parallelism).
+    pub engine_cfg: EngineConfig,
+    /// Shards (engine replicas) per network.
+    pub shards: usize,
+    /// Maximum resident compiled trees before LRU eviction.
+    pub registry_capacity: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            engine: EngineKind::Hybrid,
+            engine_cfg: EngineConfig::default(),
+            shards: 2,
+            registry_capacity: 8,
+        }
+    }
+}
+
+/// A multi-network serving fleet: registry + router + metrics.
+pub struct Fleet {
+    cfg: FleetConfig,
+    registry: Registry,
+    router: Router,
+    metrics: FleetMetrics,
+    /// Serializes load/evict/ensure so concurrent `LOAD`s cannot leave the
+    /// registry and router disagreeing about which networks are servable.
+    load_lock: std::sync::Mutex<()>,
+}
+
+impl Fleet {
+    /// Create an empty fleet.
+    pub fn new(cfg: FleetConfig) -> Self {
+        let router = Router::new(cfg.engine, cfg.engine_cfg.clone(), cfg.shards);
+        Fleet {
+            registry: Registry::new(cfg.registry_capacity),
+            router,
+            metrics: FleetMetrics::new(),
+            load_lock: std::sync::Mutex::new(()),
+            cfg,
+        }
+    }
+
+    /// The configuration in use.
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Load `spec` (idempotent) and make it servable: compile into the
+    /// registry, spin its shard group up, and tear down any shard groups
+    /// whose trees the load evicted. Returns the entry's accounting.
+    pub fn load(&self, spec: &str) -> Result<RegistryEntry> {
+        let _serialized = self.load_lock.lock().unwrap();
+        let loaded = self.registry.load(spec)?;
+        for evicted in &loaded.evicted {
+            self.router.remove(evicted);
+            self.metrics.remove(evicted);
+        }
+        self.router.ensure(&loaded.entry.name, &loaded.jt)?;
+        self.metrics.ensure(&loaded.entry.name);
+        Ok(loaded.entry)
+    }
+
+    /// The compiled tree for a loaded network (refreshes its LRU stamp).
+    pub fn tree(&self, name: &str) -> Option<Arc<JunctionTree>> {
+        self.registry.get(name)
+    }
+
+    /// Run one query against a loaded network, recording metrics.
+    pub fn query(&self, name: &str, ev: Evidence) -> Result<Posteriors> {
+        // serving traffic refreshes the LRU stamp: a hot network must not
+        // be evicted in favor of an idle one just because it loaded first
+        let _ = self.registry.get(name);
+        match self.router.query(name, ev) {
+            Ok((post, service)) => {
+                self.metrics.record(name, service, true);
+                Ok(post)
+            }
+            Err(e) => {
+                // a no-op for unknown names: record never mints entries
+                self.metrics.record(name, Duration::ZERO, false);
+                Err(e)
+            }
+        }
+    }
+
+    /// Registry accounting for every resident network, sorted by name.
+    pub fn loaded(&self) -> Vec<RegistryEntry> {
+        self.registry.entries()
+    }
+
+    /// The metrics aggregator.
+    pub fn metrics(&self) -> &FleetMetrics {
+        &self.metrics
+    }
+
+    /// The shard router (shard counts and depths, for diagnostics).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// The single-line `STATS` reply.
+    pub fn stats_line(&self) -> String {
+        self.metrics.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_fleet() -> Fleet {
+        Fleet::new(FleetConfig {
+            engine: EngineKind::Seq,
+            engine_cfg: EngineConfig::default().with_threads(1),
+            shards: 2,
+            registry_capacity: 4,
+        })
+    }
+
+    #[test]
+    fn load_query_and_stats_roundtrip() {
+        let fleet = small_fleet();
+        assert_eq!(fleet.load("asia").unwrap().name, "asia");
+        assert_eq!(fleet.load("asia").unwrap().name, "asia"); // idempotent
+        let jt = fleet.tree("asia").unwrap();
+        let ev = Evidence::from_pairs(&jt.net, &[("smoke", "yes")]).unwrap();
+        let post = fleet.query("asia", ev).unwrap();
+        assert!((post.marginal(&jt.net, "lung").unwrap()[0] - 0.1).abs() < 1e-9);
+        let stats = fleet.stats_line();
+        assert!(stats.contains("| asia queries=1"), "{stats}");
+    }
+
+    #[test]
+    fn eviction_tears_the_shard_group_down() {
+        let fleet = Fleet::new(FleetConfig { registry_capacity: 1, shards: 1, ..small_fleet().cfg });
+        fleet.load("asia").unwrap();
+        fleet.load("cancer").unwrap();
+        assert_eq!(fleet.router().names(), vec!["cancer".to_string()]);
+        assert!(fleet.query("asia", Evidence::none()).is_err());
+        assert!(fleet.query("cancer", Evidence::none()).is_ok());
+    }
+
+    #[test]
+    fn unknown_network_query_errors() {
+        let fleet = small_fleet();
+        assert!(fleet.query("asia", Evidence::none()).is_err());
+    }
+}

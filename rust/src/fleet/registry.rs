@@ -1,0 +1,262 @@
+//! Network registry: loads and compiles junction trees on demand.
+//!
+//! Every network a fleet serves is compiled exactly once and shared behind
+//! an [`Arc`]; the registry keys trees by the network's own name, accepts
+//! any spec [`crate::bn::resolve_spec`] understands (embedded, paper-suite
+//! analog, `.bif` / `.net` path), and bounds resident trees with an LRU
+//! policy so a long-lived fleet can cycle through more networks than fit
+//! in memory at once. Compile time and table size are recorded per entry —
+//! the accounting the `NETS` protocol verb and the fleet bench report.
+//!
+//! Loading is **compile-once**: re-`LOAD`ing a spec whose network name is
+//! already resident returns the cached tree, even if a file behind a path
+//! spec has changed on disk since. To pick up a changed model, load it
+//! under a new network name or restart the fleet (eviction also drops the
+//! stale tree, but relying on LRU pressure for correctness is a mistake).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::bn::resolve_spec;
+use crate::jt::tree::JunctionTree;
+use crate::jt::triangulate::TriangulationHeuristic;
+use crate::Result;
+
+/// Accounting snapshot for one resident network.
+#[derive(Clone, Debug)]
+pub struct RegistryEntry {
+    /// Network name (the registry key).
+    pub name: String,
+    /// Number of cliques in the compiled tree.
+    pub cliques: usize,
+    /// Total table entries (cliques + separators) — the memory driver.
+    pub entries: usize,
+    /// Wall time `JunctionTree::compile` took.
+    pub compile_time: Duration,
+}
+
+struct Resident {
+    jt: Arc<JunctionTree>,
+    compile_time: Duration,
+    last_used: u64,
+}
+
+struct Inner {
+    nets: BTreeMap<String, Resident>,
+    /// spec text → resident network name, so re-`LOAD`ing a path spec hits
+    /// the cache without re-reading (or re-parsing) the file.
+    aliases: BTreeMap<String, String>,
+    clock: u64,
+}
+
+/// LRU-bounded cache of compiled junction trees, keyed by network name.
+pub struct Registry {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+/// Result of a [`Registry::load`]: the entry's accounting, the shared
+/// tree, and any networks evicted to stay within capacity (the caller —
+/// the fleet — tears down their shard groups).
+pub struct Loaded {
+    /// Accounting for the loaded network (`entry.name` is the key the
+    /// network registered under — its own `net.name`).
+    pub entry: RegistryEntry,
+    /// The compiled tree.
+    pub jt: Arc<JunctionTree>,
+    /// Names evicted by this load, oldest first.
+    pub evicted: Vec<String>,
+    /// False when the load was served from cache.
+    pub freshly_compiled: bool,
+}
+
+impl Registry {
+    /// Create a registry holding at most `capacity` compiled trees
+    /// (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        let inner = Inner { nets: BTreeMap::new(), aliases: BTreeMap::new(), clock: 0 };
+        Registry { capacity: capacity.max(1), inner: Mutex::new(inner) }
+    }
+
+    fn entry_for(name: &str, jt: &JunctionTree, compile_time: Duration) -> RegistryEntry {
+        RegistryEntry {
+            name: name.to_string(),
+            cliques: jt.n_cliques(),
+            entries: jt.total_clique_entries() + jt.total_sep_entries(),
+            compile_time,
+        }
+    }
+
+    fn cache_hit(name: &str, jt: Arc<JunctionTree>, compile_time: Duration) -> Loaded {
+        let entry = Self::entry_for(name, &jt, compile_time);
+        Loaded { entry, jt, evicted: Vec::new(), freshly_compiled: false }
+    }
+
+    /// Load `spec`, compiling its junction tree unless already resident.
+    ///
+    /// The registry key is the *network's* name, so `LOAD asia` and
+    /// `LOAD path/to/asia.bif` coalesce onto one tree. Compilation happens
+    /// outside the registry lock; a concurrent duplicate load keeps the
+    /// first tree that registered.
+    pub fn load(&self, spec: &str) -> Result<Loaded> {
+        // Fast paths: the spec is a resident name, or a spec we have
+        // already resolved (a path) aliased onto a resident name — either
+        // way the file is not re-read.
+        if let Some((jt, ct)) = self.lookup(spec) {
+            return Ok(Self::cache_hit(spec, jt, ct));
+        }
+        if let Some(name) = self.inner.lock().unwrap().aliases.get(spec).cloned() {
+            if let Some((jt, ct)) = self.lookup(&name) {
+                return Ok(Self::cache_hit(&name, jt, ct));
+            }
+        }
+        let net = resolve_spec(spec)?;
+        let name = net.name.clone();
+        if name != spec {
+            self.inner.lock().unwrap().aliases.insert(spec.to_string(), name.clone());
+        }
+        if let Some((jt, ct)) = self.lookup(&name) {
+            return Ok(Self::cache_hit(&name, jt, ct));
+        }
+        let t0 = Instant::now();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
+        let compile_time = t0.elapsed();
+
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(r) = inner.nets.get(&name) {
+            // a concurrent load won the race; keep its tree
+            let (jt, ct) = (Arc::clone(&r.jt), r.compile_time);
+            return Ok(Self::cache_hit(&name, jt, ct));
+        }
+        inner.clock += 1;
+        let stamp = inner.clock;
+        inner.nets.insert(name.clone(), Resident { jt: Arc::clone(&jt), compile_time, last_used: stamp });
+        let mut evicted = Vec::new();
+        while inner.nets.len() > self.capacity {
+            let oldest = inner
+                .nets
+                .iter()
+                .filter(|(k, _)| **k != name)
+                .min_by_key(|(_, r)| r.last_used)
+                .map(|(k, _)| k.clone());
+            match oldest {
+                Some(k) => {
+                    inner.nets.remove(&k);
+                    inner.aliases.retain(|_, target| *target != k);
+                    evicted.push(k);
+                }
+                None => break,
+            }
+        }
+        let entry = Self::entry_for(&name, &jt, compile_time);
+        Ok(Loaded { entry, jt, evicted, freshly_compiled: true })
+    }
+
+    /// Resident tree + its compile time, refreshing the LRU stamp.
+    fn lookup(&self, name: &str) -> Option<(Arc<JunctionTree>, Duration)> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let stamp = inner.clock;
+        inner.nets.get_mut(name).map(|r| {
+            r.last_used = stamp;
+            (Arc::clone(&r.jt), r.compile_time)
+        })
+    }
+
+    /// Look a resident tree up by name, refreshing its LRU stamp.
+    pub fn get(&self, name: &str) -> Option<Arc<JunctionTree>> {
+        self.lookup(name).map(|(jt, _)| jt)
+    }
+
+    /// Names of resident networks, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().nets.keys().cloned().collect()
+    }
+
+    /// Accounting snapshot of every resident network, sorted by name.
+    pub fn entries(&self) -> Vec<RegistryEntry> {
+        let inner = self.inner.lock().unwrap();
+        inner.nets.iter().map(|(name, r)| Self::entry_for(name, &r.jt, r.compile_time)).collect()
+    }
+
+    /// Number of resident networks.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().nets.len()
+    }
+
+    /// True when nothing is loaded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_compiles_once_and_caches() {
+        let reg = Registry::new(4);
+        let a = reg.load("asia").unwrap();
+        assert_eq!(a.entry.name, "asia");
+        assert!(a.freshly_compiled);
+        assert!(a.entry.entries > 0);
+        let b = reg.load("asia").unwrap();
+        assert!(!b.freshly_compiled);
+        // cache hits report the original compile accounting
+        assert_eq!(b.entry.compile_time, a.entry.compile_time);
+        assert!(Arc::ptr_eq(&a.jt, &b.jt));
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn unknown_spec_errors() {
+        let reg = Registry::new(4);
+        assert!(reg.load("no-such-network").is_err());
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let reg = Registry::new(2);
+        reg.load("asia").unwrap();
+        reg.load("cancer").unwrap();
+        // touch asia so cancer becomes the LRU entry
+        assert!(reg.get("asia").is_some());
+        let l = reg.load("sprinkler").unwrap();
+        assert_eq!(l.evicted, vec!["cancer".to_string()]);
+        assert_eq!(reg.names(), vec!["asia".to_string(), "sprinkler".to_string()]);
+        // evicted networks can be reloaded (recompiled)
+        assert!(reg.load("cancer").unwrap().freshly_compiled);
+    }
+
+    #[test]
+    fn path_specs_alias_onto_the_network_name() {
+        let path = std::env::temp_dir().join(format!("fastbn-registry-{}.bif", std::process::id()));
+        std::fs::write(&path, crate::bn::bif::write(&crate::bn::embedded::asia())).unwrap();
+        let reg = Registry::new(4);
+        let spec = path.to_str().unwrap();
+        let a = reg.load(spec).unwrap();
+        assert_eq!(a.entry.name, "asia");
+        assert!(a.freshly_compiled);
+        // the second load by the same path is an alias hit — cached tree,
+        // no re-read — and loading by the bare name hits the same entry
+        let b = reg.load(spec).unwrap();
+        assert!(!b.freshly_compiled);
+        assert!(Arc::ptr_eq(&a.jt, &b.jt));
+        assert!(!reg.load("asia").unwrap().freshly_compiled);
+        assert_eq!(reg.len(), 1);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn entries_report_size_and_compile_time() {
+        let reg = Registry::new(4);
+        reg.load("asia").unwrap();
+        let e = &reg.entries()[0];
+        assert_eq!(e.name, "asia");
+        assert_eq!(e.cliques, 6);
+        assert!(e.entries > 0);
+    }
+}

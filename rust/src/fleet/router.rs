@@ -1,0 +1,282 @@
+//! Shard router: per-network engine-replica groups and query dispatch.
+//!
+//! Each loaded network owns a [`ShardGroup`] of `N` shards. A shard is a
+//! dedicated worker thread that builds its engine *inside* the thread
+//! (engines are not `Send` — see [`crate::engine::Engine`]) and reuses one
+//! [`TreeState`] across every request it serves, so the per-request cost is
+//! a state reset plus propagation, never an allocation or a tree compile.
+//!
+//! Dispatch is round-robin refined by per-shard depth accounting: the
+//! rotor picks the starting shard, then the least-loaded shard from there
+//! wins — round-robin spread under uniform load, overflow routing around a
+//! shard stuck on an expensive query under skewed load.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::engine::{EngineConfig, EngineKind};
+use crate::infer::query::Posteriors;
+use crate::jt::evidence::Evidence;
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::{Error, Result};
+
+struct Job {
+    ev: Evidence,
+    reply: mpsc::Sender<(Result<Posteriors>, Duration)>,
+}
+
+struct Shard {
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    depth: Arc<AtomicUsize>,
+}
+
+/// The engine replicas serving one network.
+pub struct ShardGroup {
+    name: String,
+    jt: Arc<JunctionTree>,
+    shards: Vec<Shard>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    rotor: AtomicUsize,
+}
+
+impl ShardGroup {
+    /// Spawn `n_shards` worker threads (clamped to ≥ 1) for `jt`.
+    ///
+    /// Spawn failure (e.g. a process thread limit) is an error, not a
+    /// panic — the fleet serializes loads under a mutex, and a panic here
+    /// would poison it and wedge `LOAD` fleet-wide. Workers already
+    /// spawned exit on their own once their senders drop.
+    pub fn new(name: &str, jt: Arc<JunctionTree>, n_shards: usize, engine: EngineKind, cfg: &EngineConfig) -> Result<Self> {
+        let n_shards = n_shards.max(1);
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut workers = Vec::with_capacity(n_shards);
+        for i in 0..n_shards {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let depth = Arc::new(AtomicUsize::new(0));
+            let worker_jt = Arc::clone(&jt);
+            let worker_cfg = cfg.clone();
+            let worker_depth = Arc::clone(&depth);
+            let handle = std::thread::Builder::new()
+                .name(format!("fleet-{name}-{i}"))
+                .spawn(move || shard_worker(worker_jt, engine, worker_cfg, rx, worker_depth))?;
+            shards.push(Shard { tx: Mutex::new(Some(tx)), depth });
+            workers.push(handle);
+        }
+        Ok(ShardGroup { name: name.to_string(), jt, shards, workers: Mutex::new(workers), rotor: AtomicUsize::new(0) })
+    }
+
+    /// Network name this group serves.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The shared tree.
+    pub fn tree(&self) -> &Arc<JunctionTree> {
+        &self.jt
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Current in-flight depth per shard (diagnostics and tests).
+    pub fn depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Run one query on this group, blocking until its shard replies.
+    ///
+    /// Returns the posteriors and the shard-side service time (queue wait
+    /// excluded from neither — the clock starts when the job is accepted).
+    pub fn dispatch(&self, ev: Evidence) -> Result<(Posteriors, Duration)> {
+        let start = self.rotor.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        let mut best = start;
+        let mut best_depth = self.shards[start].depth.load(Ordering::Relaxed);
+        for k in 1..self.shards.len() {
+            let i = (start + k) % self.shards.len();
+            let d = self.shards[i].depth.load(Ordering::Relaxed);
+            if d < best_depth {
+                best = i;
+                best_depth = d;
+            }
+        }
+        let shard = &self.shards[best];
+        let tx = match shard.tx.lock().unwrap().as_ref() {
+            Some(tx) => tx.clone(),
+            None => return Err(Error::msg(format!("network {:?} is shutting down", self.name))),
+        };
+        shard.depth.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if tx.send(Job { ev, reply: reply_tx }).is_err() {
+            shard.depth.fetch_sub(1, Ordering::Relaxed);
+            return Err(Error::msg(format!("network {:?} is shutting down", self.name)));
+        }
+        drop(tx);
+        match reply_rx.recv() {
+            Ok((outcome, service)) => outcome.map(|p| (p, service)),
+            Err(_) => Err(Error::msg(format!("shard worker for {:?} died", self.name))),
+        }
+    }
+
+    fn shutdown(&self) {
+        for shard in &self.shards {
+            *shard.tx.lock().unwrap() = None;
+        }
+        for handle in self.workers.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ShardGroup {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn shard_worker(
+    jt: Arc<JunctionTree>,
+    engine_kind: EngineKind,
+    cfg: EngineConfig,
+    rx: mpsc::Receiver<Job>,
+    depth: Arc<AtomicUsize>,
+) {
+    let mut engine = engine_kind.build(Arc::clone(&jt), &cfg);
+    let mut state = TreeState::fresh(&jt);
+    while let Ok(job) = rx.recv() {
+        let t0 = Instant::now();
+        // a panicking case must not kill the shard: without the catch, the
+        // worker dies with its depth stuck and ~1/N of the network's
+        // queries fail as "shutting down" forever
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine.infer(&mut state, &job.ev)));
+        depth.fetch_sub(1, Ordering::Relaxed);
+        match outcome {
+            // the requester may have given up; a dead reply channel is fine
+            Ok(result) => {
+                let _ = job.reply.send((result, t0.elapsed()));
+            }
+            Err(_) => {
+                // engine pool and state may be mid-mutation: rebuild both
+                let msg = "inference panicked; shard engine rebuilt";
+                let _ = job.reply.send((Err(Error::msg(msg)), t0.elapsed()));
+                engine = engine_kind.build(Arc::clone(&jt), &cfg);
+                state = TreeState::fresh(&jt);
+            }
+        }
+    }
+}
+
+/// Routes queries to per-network shard groups.
+pub struct Router {
+    engine: EngineKind,
+    engine_cfg: EngineConfig,
+    shards_per_net: usize,
+    groups: Mutex<HashMap<String, Arc<ShardGroup>>>,
+}
+
+impl Router {
+    /// Create a router that gives every network `shards_per_net` shards of
+    /// `engine` replicas.
+    pub fn new(engine: EngineKind, engine_cfg: EngineConfig, shards_per_net: usize) -> Self {
+        Router { engine, engine_cfg, shards_per_net, groups: Mutex::new(HashMap::new()) }
+    }
+
+    /// Ensure a shard group exists for `name`, spawning workers if needed.
+    pub fn ensure(&self, name: &str, jt: &Arc<JunctionTree>) -> Result<()> {
+        let mut groups = self.groups.lock().unwrap();
+        if !groups.contains_key(name) {
+            let group =
+                Arc::new(ShardGroup::new(name, Arc::clone(jt), self.shards_per_net, self.engine, &self.engine_cfg)?);
+            groups.insert(name.to_string(), group);
+        }
+        Ok(())
+    }
+
+    /// Tear a group down (workers join after draining queued jobs).
+    pub fn remove(&self, name: &str) {
+        let group = self.groups.lock().unwrap().remove(name);
+        drop(group); // join outside the lock
+    }
+
+    /// The group serving `name`, if any.
+    pub fn group(&self, name: &str) -> Option<Arc<ShardGroup>> {
+        self.groups.lock().unwrap().get(name).cloned()
+    }
+
+    /// Dispatch a query to `name`'s group.
+    pub fn query(&self, name: &str, ev: Evidence) -> Result<(Posteriors, Duration)> {
+        let group = self.group(name).ok_or_else(|| Error::msg(format!("network {name:?} is not loaded")))?;
+        group.dispatch(ev)
+    }
+
+    /// Names with live shard groups, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.groups.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    fn asia_tree() -> Arc<JunctionTree> {
+        Arc::new(JunctionTree::compile(&embedded::asia(), TriangulationHeuristic::MinFill).unwrap())
+    }
+
+    #[test]
+    fn dispatch_matches_direct_inference() {
+        let jt = asia_tree();
+        let group =
+            ShardGroup::new("asia", Arc::clone(&jt), 2, EngineKind::Seq, &EngineConfig::default().with_threads(1)).unwrap();
+        let ev = Evidence::from_pairs(&jt.net, &[("smoke", "yes")]).unwrap();
+        let (post, _service) = group.dispatch(ev.clone()).unwrap();
+
+        let mut engine = EngineKind::Seq.build(Arc::clone(&jt), &EngineConfig::default().with_threads(1));
+        let mut state = TreeState::fresh(&jt);
+        let reference = engine.infer(&mut state, &ev).unwrap();
+        assert!(post.max_abs_diff(&reference) < 1e-12);
+    }
+
+    #[test]
+    fn errors_propagate_and_workers_survive() {
+        let jt = asia_tree();
+        let group =
+            ShardGroup::new("asia", Arc::clone(&jt), 1, EngineKind::Seq, &EngineConfig::default().with_threads(1)).unwrap();
+        // impossible evidence: either=no contradicts lung=yes
+        let bad = Evidence::from_pairs(&jt.net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        assert!(group.dispatch(bad).is_err());
+        // the same worker still serves good queries afterwards
+        let ok = Evidence::from_pairs(&jt.net, &[("smoke", "no")]).unwrap();
+        let (post, _) = group.dispatch(ok).unwrap();
+        let lung = post.marginal(&jt.net, "lung").unwrap();
+        assert!((lung[0] - 0.01).abs() < 1e-9);
+        assert_eq!(group.depths(), vec![0]);
+    }
+
+    #[test]
+    fn router_spreads_queries_across_shards() {
+        let jt = asia_tree();
+        let router = Router::new(EngineKind::Seq, EngineConfig::default().with_threads(1), 3);
+        router.ensure("asia", &jt).unwrap();
+        router.ensure("asia", &jt).unwrap(); // idempotent
+        assert_eq!(router.names(), vec!["asia".to_string()]);
+        assert_eq!(router.group("asia").unwrap().n_shards(), 3);
+        for _ in 0..6 {
+            let (post, _) = router.query("asia", Evidence::none()).unwrap();
+            let lung = post.marginal(&jt.net, "lung").unwrap();
+            assert!((lung[0] - 0.055).abs() < 1e-9);
+        }
+        assert!(router.query("unloaded", Evidence::none()).is_err());
+        router.remove("asia");
+        assert!(router.query("asia", Evidence::none()).is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! Line-protocol TCP front end for a [`Fleet`] (`fastbn serve --nets …`).
+//!
+//! Connection threads are thin: they parse lines into a
+//! [`crate::fleet::session::Session`] and write replies; all inference
+//! runs on the router's shard workers, so a thousand idle connections cost
+//! a thousand parked threads, not a thousand engines. Finished connection
+//! threads are reaped (joined) in the accept loop — the handle list stays
+//! proportional to *live* connections, not connections ever accepted.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::server::{run_accept_loop, serve_lines};
+use crate::fleet::session::{Session, SessionReply};
+use crate::fleet::Fleet;
+use crate::Result;
+
+/// Server handle; dropping it stops accepting and joins every thread.
+pub struct FleetServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+    reaped: Arc<AtomicU64>,
+    fleet: Arc<Fleet>,
+}
+
+/// Decrements the live-connection gauge however the handler exits.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl FleetServer {
+    /// Start serving `fleet` on `bind` (use port 0 for an ephemeral port).
+    pub fn start(fleet: Arc<Fleet>, bind: &str) -> Result<FleetServer> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let active = Arc::new(AtomicUsize::new(0));
+        let reaped = Arc::new(AtomicU64::new(0));
+
+        let accept_stop = Arc::clone(&stop);
+        let accept_active = Arc::clone(&active);
+        let accept_reaped = Arc::clone(&reaped);
+        let accept_fleet = Arc::clone(&fleet);
+        let accept_thread = std::thread::Builder::new().name("fleet-accept".into()).spawn(move || {
+            run_accept_loop(&listener, &accept_stop, &accept_reaped, |stream| {
+                let fleet = Arc::clone(&accept_fleet);
+                let stop = Arc::clone(&accept_stop);
+                accept_active.fetch_add(1, Ordering::Relaxed);
+                let guard = ConnGuard(Arc::clone(&accept_active));
+                std::thread::spawn(move || {
+                    let _guard = guard;
+                    let _ = handle_connection(stream, fleet, stop);
+                })
+            });
+        })?;
+
+        Ok(FleetServer { addr, stop, accept_thread: Some(accept_thread), active, reaped, fleet })
+    }
+
+    /// Bound address (useful with port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// The fleet being served.
+    pub fn fleet(&self) -> &Arc<Fleet> {
+        &self.fleet
+    }
+
+    /// Live connection count.
+    pub fn active_connections(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    /// Finished connection threads joined by the accept loop so far.
+    pub fn reaped_connections(&self) -> u64 {
+        self.reaped.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and wait for every thread to end.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for FleetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn handle_connection(stream: TcpStream, fleet: Arc<Fleet>, stop: Arc<AtomicBool>) -> Result<()> {
+    let mut session = Session::new(fleet);
+    serve_lines(stream, &stop, move |line| match session.handle(line) {
+        SessionReply::Line(s) => Some(s),
+        SessionReply::Quit => None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EngineConfig, EngineKind};
+    use crate::fleet::FleetConfig;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn start() -> FleetServer {
+        let fleet = Arc::new(Fleet::new(FleetConfig {
+            engine: EngineKind::Seq,
+            engine_cfg: EngineConfig::default().with_threads(1),
+            shards: 2,
+            registry_capacity: 4,
+        }));
+        FleetServer::start(fleet, "127.0.0.1:0").unwrap()
+    }
+
+    fn ask(addr: std::net::SocketAddr, requests: &[&str]) -> Vec<String> {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut out = Vec::new();
+        for r in requests {
+            stream.write_all(r.as_bytes()).unwrap();
+            stream.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            out.push(line.trim().to_string());
+        }
+        out
+    }
+
+    #[test]
+    fn serves_the_fleet_protocol() {
+        let server = start();
+        let replies = ask(
+            server.addr(),
+            &[
+                "LOAD asia",
+                "USE asia",
+                "OBSERVE smoke=yes",
+                "COMMIT",
+                "QUERY lung",
+                "NETS",
+                "STATS",
+                "BOGUS",
+            ],
+        );
+        assert!(replies[0].starts_with("OK loaded asia"), "{}", replies[0]);
+        assert!(replies[1].starts_with("OK using asia"), "{}", replies[1]);
+        assert!(replies[2].starts_with("OK staged 1"), "{}", replies[2]);
+        assert!(replies[3].starts_with("OK committed evidence=1"), "{}", replies[3]);
+        assert!(replies[4].starts_with("OK yes=0.100000"), "{}", replies[4]);
+        assert!(replies[5].starts_with("OK nets=1 asia["), "{}", replies[5]);
+        assert!(replies[6].contains("| asia queries=1"), "{}", replies[6]);
+        assert!(replies[7].starts_with("ERR unknown verb"), "{}", replies[7]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn sessions_are_independent() {
+        let server = start();
+        // session 1 loads and commits evidence; session 2 sees the loaded
+        // net (fleet state) but not the evidence (session state)
+        let r1 = ask(server.addr(), &["LOAD asia", "USE asia", "OBSERVE smoke=yes", "COMMIT", "QUERY lung"]);
+        assert!(r1[4].starts_with("OK yes=0.100000"), "{}", r1[4]);
+        let r2 = ask(server.addr(), &["USE asia", "QUERY lung"]);
+        assert!(r2[0].starts_with("OK using asia"), "{}", r2[0]);
+        assert!(r2[1].starts_with("OK yes=0.055000"), "{}", r2[1]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn finished_connections_are_reaped() {
+        let server = start();
+        for _ in 0..3 {
+            let replies = ask(server.addr(), &["NETS", "QUIT"]);
+            assert!(replies[0].starts_with("OK nets="), "{}", replies[0]);
+        }
+        // the accept loop ticks every ~5ms; give it time to join all three
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while server.reaped_connections() < 3 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(server.reaped_connections() >= 3, "reaped {}", server.reaped_connections());
+        assert_eq!(server.active_connections(), 0);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,435 @@
+//! One client's protocol session: network selection and streamed evidence.
+//!
+//! A session is a pure state machine over protocol lines (the TCP layer in
+//! [`crate::fleet::server`] just moves bytes), so the protocol is testable
+//! without sockets. Per-session state is the selected network and an
+//! evidence set built incrementally: `OBSERVE`/`RETRACT` stage deltas,
+//! `COMMIT` applies them atomically, and every `QUERY` runs under the
+//! committed evidence — a connection following a sensor feed sends one
+//! small delta per reading instead of re-sending the full evidence vector.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::fleet::Fleet;
+use crate::jt::evidence::Evidence;
+use crate::jt::tree::JunctionTree;
+
+/// Outcome of one protocol line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionReply {
+    /// Single response line to write back.
+    Line(String),
+    /// Client asked to end the session.
+    Quit,
+}
+
+/// Staged evidence change, applied in order by `COMMIT`.
+enum Delta {
+    /// Observe `var = state`.
+    Set(usize, usize),
+    /// Retract any observation of `var`.
+    Clear(usize),
+}
+
+/// Per-connection protocol state.
+pub struct Session {
+    fleet: Arc<Fleet>,
+    current: Option<(String, Arc<JunctionTree>)>,
+    committed: BTreeMap<usize, usize>,
+    pending: Vec<Delta>,
+}
+
+impl Session {
+    /// New session against a fleet; no network selected, no evidence.
+    pub fn new(fleet: Arc<Fleet>) -> Self {
+        Session { fleet, current: None, committed: BTreeMap::new(), pending: Vec::new() }
+    }
+
+    /// Name of the selected network, if any.
+    pub fn current_net(&self) -> Option<&str> {
+        self.current.as_ref().map(|(name, _)| name.as_str())
+    }
+
+    /// The session's network, revalidated against the registry. If the
+    /// tree was evicted — or evicted and reloaded under the same name,
+    /// where variable ids need not line up — the session's cached ids are
+    /// stale and must not be used: the selection is dropped and the client
+    /// told to re-`USE`. `Err` carries the full reply line.
+    fn current_tree(&mut self) -> std::result::Result<(String, Arc<JunctionTree>), String> {
+        let Some((name, jt)) = self.current.clone() else {
+            return Err("ERR no network selected (USE <net> first)".into());
+        };
+        match self.fleet.tree(&name) {
+            Some(live) if Arc::ptr_eq(&live, &jt) => Ok((name, jt)),
+            stale => {
+                self.current = None;
+                self.committed.clear();
+                self.pending.clear();
+                if stale.is_some() {
+                    Err(format!("ERR network {name:?} was reloaded; USE it again"))
+                } else {
+                    Err(format!("ERR network {name:?} was evicted; LOAD and USE it again"))
+                }
+            }
+        }
+    }
+
+    /// Number of committed observations.
+    pub fn committed_len(&self) -> usize {
+        self.committed.len()
+    }
+
+    /// Handle one protocol line, producing one reply.
+    pub fn handle(&mut self, line: &str) -> SessionReply {
+        let line = line.trim();
+        if line.is_empty() {
+            return SessionReply::Line("ERR empty request".into());
+        }
+        let mut parts = line.splitn(2, ' ');
+        let verb = parts.next().unwrap_or("");
+        let rest = parts.next().unwrap_or("").trim();
+        let reply = match verb.to_ascii_uppercase().as_str() {
+            "QUIT" => return SessionReply::Quit,
+            "LOAD" => self.cmd_load(rest),
+            "USE" => self.cmd_use(rest),
+            "NETS" => self.cmd_nets(),
+            "OBSERVE" => self.cmd_observe(rest),
+            "RETRACT" => self.cmd_retract(rest),
+            "COMMIT" => self.cmd_commit(),
+            "QUERY" => self.cmd_query(rest),
+            "STATS" => self.fleet.stats_line(),
+            other => format!("ERR unknown verb {other:?}"),
+        };
+        SessionReply::Line(reply)
+    }
+
+    fn cmd_load(&mut self, spec: &str) -> String {
+        if spec.is_empty() {
+            return "ERR usage: LOAD <net>".into();
+        }
+        match self.fleet.load(spec) {
+            Ok(e) => format!(
+                "OK loaded {} cliques={} entries={} compile_ms={}",
+                e.name,
+                e.cliques,
+                e.entries,
+                e.compile_time.as_millis()
+            ),
+            Err(e) => format!("ERR {e}"),
+        }
+    }
+
+    fn cmd_use(&mut self, name: &str) -> String {
+        if name.is_empty() {
+            return "ERR usage: USE <net>".into();
+        }
+        match self.fleet.tree(name) {
+            Some(jt) => {
+                let vars = jt.net.n();
+                // evidence is per-network AND per-tree: ids don't transfer
+                // across networks, nor across a reload of the same name.
+                // Only a defensive re-USE of the very same tree keeps the
+                // session's evidence.
+                let same_tree = match &self.current {
+                    Some((cur, cur_jt)) => cur == name && Arc::ptr_eq(cur_jt, &jt),
+                    None => false,
+                };
+                self.current = Some((name.to_string(), jt));
+                if !same_tree {
+                    self.committed.clear();
+                    self.pending.clear();
+                }
+                format!("OK using {name} vars={vars}")
+            }
+            None => format!("ERR not loaded: {name:?} (LOAD it first)"),
+        }
+    }
+
+    fn cmd_nets(&self) -> String {
+        let entries = self.fleet.loaded();
+        let mut out = format!("OK nets={}", entries.len());
+        for e in &entries {
+            out.push_str(&format!(
+                " {}[cliques={} entries={} compile_ms={}]",
+                e.name,
+                e.cliques,
+                e.entries,
+                e.compile_time.as_millis()
+            ));
+        }
+        out
+    }
+
+    fn cmd_observe(&mut self, rest: &str) -> String {
+        let jt = match self.current_tree() {
+            Ok((_, jt)) => jt,
+            Err(reply) => return reply,
+        };
+        if rest.is_empty() {
+            return "ERR usage: OBSERVE var=state [var=state ...]".into();
+        }
+        // validate the whole line before staging anything: a line is
+        // atomic, so a typo can't half-apply
+        let mut staged = Vec::new();
+        for tok in rest.split_whitespace() {
+            let Some((var, state)) = tok.split_once('=') else {
+                return format!("ERR bad evidence token {tok:?} (want var=state)");
+            };
+            match jt.net.state_id(var, state) {
+                Ok((v, s)) => staged.push(Delta::Set(v, s)),
+                Err(e) => return format!("ERR {e}"),
+            }
+        }
+        let n = staged.len();
+        self.pending.extend(staged);
+        format!("OK staged {n} pending={}", self.pending.len())
+    }
+
+    fn cmd_retract(&mut self, rest: &str) -> String {
+        let jt = match self.current_tree() {
+            Ok((_, jt)) => jt,
+            Err(reply) => return reply,
+        };
+        if rest.is_empty() {
+            return "ERR usage: RETRACT var [var ...]".into();
+        }
+        let mut staged = Vec::new();
+        for var in rest.split_whitespace() {
+            match jt.net.var_id(var) {
+                Ok(v) => staged.push(Delta::Clear(v)),
+                Err(e) => return format!("ERR {e}"),
+            }
+        }
+        let n = staged.len();
+        self.pending.extend(staged);
+        format!("OK retracted {n} pending={}", self.pending.len())
+    }
+
+    fn cmd_commit(&mut self) -> String {
+        let applied = self.pending.len();
+        for delta in self.pending.drain(..) {
+            match delta {
+                Delta::Set(v, s) => {
+                    self.committed.insert(v, s);
+                }
+                Delta::Clear(v) => {
+                    self.committed.remove(&v);
+                }
+            }
+        }
+        format!("OK committed evidence={} applied={applied}", self.committed.len())
+    }
+
+    fn cmd_query(&mut self, rest: &str) -> String {
+        let (name, jt) = match self.current_tree() {
+            Ok(current) => current,
+            Err(reply) => return reply,
+        };
+        // same `target [| var=state …]` grammar and reply format as the
+        // single-tree server — the helpers own the wire format
+        let (target, pairs) = match crate::coordinator::server::parse_query_args(rest) {
+            Ok(parsed) => parsed,
+            Err(msg) => return format!("ERR {msg}"),
+        };
+        let v = match jt.net.var_id(target) {
+            Ok(v) => v,
+            Err(e) => return format!("ERR {e}"),
+        };
+        // committed evidence plus inline one-shot pairs (inline wins)
+        let mut obs = self.committed.clone();
+        for (var, state) in pairs {
+            match jt.net.state_id(var, state) {
+                Ok((id, s)) => {
+                    obs.insert(id, s);
+                }
+                Err(e) => return format!("ERR {e}"),
+            }
+        }
+        let ev = Evidence::from_ids(obs.into_iter().collect());
+        match self.fleet.query(&name, ev) {
+            Ok(post) => crate::coordinator::server::format_ok_posterior(&jt.net, v, &post),
+            Err(e) => format!("ERR {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EngineConfig, EngineKind};
+    use crate::fleet::FleetConfig;
+
+    fn session() -> Session {
+        let fleet = Arc::new(Fleet::new(FleetConfig {
+            engine: EngineKind::Seq,
+            engine_cfg: EngineConfig::default().with_threads(1),
+            shards: 2,
+            registry_capacity: 4,
+        }));
+        Session::new(fleet)
+    }
+
+    fn line(s: &mut Session, input: &str) -> String {
+        match s.handle(input) {
+            SessionReply::Line(l) => l,
+            SessionReply::Quit => "QUIT".into(),
+        }
+    }
+
+    #[test]
+    fn load_use_query_flow() {
+        let mut s = session();
+        let r = line(&mut s, "LOAD asia");
+        assert!(r.starts_with("OK loaded asia cliques=6"), "{r}");
+        let r = line(&mut s, "USE asia");
+        assert!(r.starts_with("OK using asia vars=8"), "{r}");
+        let r = line(&mut s, "QUERY lung | smoke=yes");
+        assert!(r.starts_with("OK yes=0.100000"), "{r}");
+        assert_eq!(s.handle("quit"), SessionReply::Quit);
+    }
+
+    #[test]
+    fn streamed_deltas_match_one_shot_evidence() {
+        let mut s = session();
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        let oneshot = line(&mut s, "QUERY lung | smoke=yes");
+
+        assert!(line(&mut s, "OBSERVE smoke=yes").starts_with("OK staged 1 pending=1"));
+        // staged but uncommitted deltas don't affect queries
+        let before = line(&mut s, "QUERY lung");
+        assert!(before.starts_with("OK yes=0.055000"), "{before}");
+        assert!(line(&mut s, "COMMIT").starts_with("OK committed evidence=1 applied=1"));
+        let streamed = line(&mut s, "QUERY lung");
+        assert_eq!(streamed, oneshot);
+
+        // retract and the prior answer comes back
+        line(&mut s, "RETRACT smoke");
+        line(&mut s, "COMMIT");
+        assert!(line(&mut s, "QUERY lung").starts_with("OK yes=0.055000"));
+        assert_eq!(s.committed_len(), 0);
+    }
+
+    #[test]
+    fn inline_evidence_overrides_committed() {
+        let mut s = session();
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        line(&mut s, "OBSERVE smoke=yes");
+        line(&mut s, "COMMIT");
+        // inline smoke=no wins over committed smoke=yes
+        let r = line(&mut s, "QUERY lung | smoke=no");
+        assert!(r.starts_with("OK yes=0.010000"), "{r}");
+    }
+
+    #[test]
+    fn error_paths() {
+        let mut s = session();
+        assert!(line(&mut s, "LOAD no-such-net").starts_with("ERR unknown network"));
+        assert!(line(&mut s, "USE asia").starts_with("ERR not loaded"));
+        assert!(line(&mut s, "QUERY lung").starts_with("ERR no network selected"));
+        assert!(line(&mut s, "OBSERVE smoke=yes").starts_with("ERR no network selected"));
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        assert!(line(&mut s, "OBSERVE Smoker=True").starts_with("ERR unknown variable"), "wrong-net var");
+        assert!(line(&mut s, "OBSERVE smoke").starts_with("ERR bad evidence token"));
+        assert!(line(&mut s, "OBSERVE smoke=bogus").starts_with("ERR unknown state"));
+        assert!(line(&mut s, "RETRACT nosuch").starts_with("ERR unknown variable"));
+        assert!(line(&mut s, "FROB x").starts_with("ERR unknown verb"));
+        assert!(line(&mut s, "").starts_with("ERR empty request"));
+        // nothing half-staged by the failed OBSERVE lines
+        assert!(line(&mut s, "COMMIT").starts_with("OK committed evidence=0 applied=0"));
+    }
+
+    #[test]
+    fn reselecting_the_same_network_keeps_evidence() {
+        let mut s = session();
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        line(&mut s, "OBSERVE smoke=yes");
+        line(&mut s, "COMMIT");
+        // a defensive re-USE of the current net must not wipe the session
+        assert!(line(&mut s, "USE asia").starts_with("OK using asia"));
+        assert_eq!(s.committed_len(), 1);
+        assert!(line(&mut s, "QUERY lung").starts_with("OK yes=0.100000"));
+    }
+
+    #[test]
+    fn use_resets_evidence_between_networks() {
+        let mut s = session();
+        line(&mut s, "LOAD asia");
+        line(&mut s, "LOAD cancer");
+        line(&mut s, "USE asia");
+        line(&mut s, "OBSERVE smoke=yes");
+        line(&mut s, "COMMIT");
+        assert_eq!(s.committed_len(), 1);
+        let r = line(&mut s, "USE cancer");
+        assert!(r.starts_with("OK using cancer vars=5"), "{r}");
+        assert_eq!(s.committed_len(), 0);
+        // cancer vars resolve now
+        assert!(line(&mut s, "OBSERVE Smoker=True").starts_with("OK staged 1"));
+        // asia vars no longer do
+        assert!(line(&mut s, "OBSERVE smoke=yes").starts_with("ERR unknown variable"));
+    }
+
+    #[test]
+    fn eviction_and_reload_invalidate_the_session() {
+        let fleet = Arc::new(Fleet::new(FleetConfig {
+            engine: EngineKind::Seq,
+            engine_cfg: EngineConfig::default().with_threads(1),
+            shards: 1,
+            registry_capacity: 1,
+        }));
+        let mut s = Session::new(fleet);
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        line(&mut s, "OBSERVE smoke=yes");
+        line(&mut s, "COMMIT");
+        // capacity 1: loading cancer evicts asia out from under the session
+        line(&mut s, "LOAD cancer");
+        let r = line(&mut s, "QUERY lung");
+        assert!(r.starts_with("ERR network \"asia\" was evicted"), "{r}");
+        // the session recovers by selecting a live network
+        assert!(line(&mut s, "USE cancer").starts_with("OK using cancer"));
+        let r = line(&mut s, "QUERY Cancer");
+        assert!(r.starts_with("OK True="), "{r}");
+
+        // reload-under-the-same-name: the cached ids may be stale, so the
+        // session must be told to re-USE rather than mix old ids onto the
+        // new tree
+        line(&mut s, "LOAD asia"); // evicts cancer, compiles a fresh asia tree
+        let r = line(&mut s, "OBSERVE Smoker=True");
+        assert!(r.starts_with("ERR network \"cancer\" was evicted"), "{r}");
+        line(&mut s, "USE asia");
+        line(&mut s, "LOAD cancer"); // evicts the session's tree...
+        line(&mut s, "LOAD asia"); // ...and reloads a new one under the name
+        let r = line(&mut s, "QUERY lung");
+        assert!(r.starts_with("ERR network \"asia\" was reloaded"), "{r}");
+        assert!(line(&mut s, "USE asia").starts_with("OK using asia"));
+        assert!(line(&mut s, "QUERY lung").starts_with("OK yes=0.055000"));
+    }
+
+    #[test]
+    fn nets_lists_resident_networks() {
+        let mut s = session();
+        assert_eq!(line(&mut s, "NETS"), "OK nets=0");
+        line(&mut s, "LOAD asia");
+        line(&mut s, "LOAD cancer");
+        let r = line(&mut s, "NETS");
+        assert!(r.starts_with("OK nets=2 asia[cliques=6"), "{r}");
+        assert!(r.contains(" cancer[cliques="), "{r}");
+    }
+
+    #[test]
+    fn stats_after_queries_reports_counts() {
+        let mut s = session();
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        line(&mut s, "QUERY lung");
+        line(&mut s, "QUERY bronc");
+        let r = line(&mut s, "STATS");
+        assert!(r.contains("| asia queries=2 errors=0"), "{r}");
+        assert!(r.contains("p50_us="), "{r}");
+    }
+}

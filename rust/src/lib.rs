@@ -11,8 +11,8 @@
 //! * **L3 (this crate)** — the coordinator: Bayesian-network model and I/O
 //!   ([`bn`]), junction-tree compilation ([`jt`]), the six propagation
 //!   engines ([`engine`]), a batch-inference coordinator ([`coordinator`]),
-//!   and a PJRT runtime that executes AOT-compiled XLA table-op kernels
-//!   ([`runtime`]).
+//!   a multi-network serving fleet ([`fleet`]), and a PJRT runtime that
+//!   executes AOT-compiled XLA table-op kernels ([`runtime`]).
 //! * **L2 (python/compile/model.py)** — JAX message-pass compute graph.
 //! * **L1 (python/compile/kernels/)** — Pallas table-op kernels, lowered
 //!   (interpret=True) into the same HLO artifacts the runtime loads.
@@ -38,6 +38,7 @@ pub mod bn;
 pub mod cli;
 pub mod coordinator;
 pub mod engine;
+pub mod fleet;
 pub mod infer;
 pub mod jt;
 pub mod prop;

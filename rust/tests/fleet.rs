@@ -1,0 +1,199 @@
+//! Integration: the multi-network serving fleet end to end — registry,
+//! shard router, streaming sessions, and fleet metrics.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use fastbn::bn::resolve_spec;
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::fleet::{Fleet, FleetConfig, FleetServer};
+use fastbn::infer::cases::{generate, CaseSpec};
+use fastbn::infer::query::Posteriors;
+use fastbn::jt::evidence::Evidence;
+use fastbn::jt::state::TreeState;
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+
+fn make_fleet(engine: EngineKind, threads: usize, shards: usize, capacity: usize) -> Arc<Fleet> {
+    Arc::new(Fleet::new(FleetConfig {
+        engine,
+        engine_cfg: EngineConfig::default().with_threads(threads),
+        shards,
+        registry_capacity: capacity,
+    }))
+}
+
+/// Single-tree Fast-BNI-seq answers — the acceptance oracle.
+fn seq_reference(jt: &Arc<JunctionTree>, cases: &[Evidence]) -> Vec<Posteriors> {
+    let mut engine = EngineKind::Seq.build(Arc::clone(jt), &EngineConfig::default().with_threads(1));
+    let mut state = TreeState::fresh(jt);
+    cases.iter().map(|ev| engine.infer(&mut state, ev).unwrap()).collect()
+}
+
+#[test]
+fn mixed_fleet_concurrent_clients_match_single_tree_seq() {
+    // one fleet hosting an embedded net and a netgen paper analog, ≥ 2
+    // shards each, queried concurrently from per-network client threads
+    let fleet = make_fleet(EngineKind::Hybrid, 2, 2, 4);
+    fleet.load("asia").unwrap();
+    fleet.load("hailfinder-sim").unwrap();
+
+    let nets = ["asia", "hailfinder-sim"];
+    let mut expected = Vec::new();
+    let mut case_sets = Vec::new();
+    for (i, name) in nets.iter().enumerate() {
+        let jt = fleet.tree(name).unwrap();
+        let cases = generate(&jt.net, &CaseSpec { n_cases: 10, observed_fraction: 0.2, seed: 900 + i as u64 });
+        expected.push(seq_reference(&jt, &cases));
+        case_sets.push(cases);
+    }
+
+    let answers: Vec<Vec<Posteriors>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = nets
+            .iter()
+            .zip(&case_sets)
+            .map(|(name, cases)| {
+                let fleet = Arc::clone(&fleet);
+                scope.spawn(move || {
+                    cases.iter().map(|ev| fleet.query(name, ev.clone()).unwrap()).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (n, (got, want)) in answers.iter().zip(&expected).enumerate() {
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let d = g.max_abs_diff(w);
+            assert!(d <= 1e-9, "{}: case {i} differs from single-tree Seq by {d:e}", nets[n]);
+        }
+    }
+
+    // STATS reports per-network query counts and latency percentiles
+    let stats = fleet.stats_line();
+    assert!(stats.contains("| asia queries=10 errors=0"), "{stats}");
+    assert!(stats.contains("| hailfinder-sim queries=10 errors=0"), "{stats}");
+    assert!(stats.contains("p50_us="), "{stats}");
+    assert!(stats.contains("p99_us="), "{stats}");
+    for snap in fleet.metrics().snapshot() {
+        assert_eq!(snap.latency.count, 10, "{}", snap.net);
+        assert!(snap.latency.p50 <= snap.latency.p99, "{}", snap.net);
+        assert!(snap.qps > 0.0, "{}", snap.net);
+    }
+}
+
+fn tcp_session(addr: std::net::SocketAddr, requests: &[String]) -> Vec<String> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = Vec::new();
+    for r in requests {
+        stream.write_all(r.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        out.push(line.trim().to_string());
+    }
+    out
+}
+
+#[test]
+fn concurrent_tcp_sessions_on_different_networks() {
+    let fleet = make_fleet(EngineKind::Seq, 1, 2, 4);
+    fleet.load("asia").unwrap();
+    fleet.load("cancer").unwrap();
+    let server = FleetServer::start(Arc::clone(&fleet), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    // session A streams evidence on asia, session B on cancer, concurrently
+    let (asia_replies, cancer_replies) = std::thread::scope(|scope| {
+        let a = scope.spawn(move || {
+            let script: Vec<String> =
+                ["USE asia", "OBSERVE smoke=yes", "COMMIT", "QUERY lung"].iter().map(|s| s.to_string()).collect();
+            tcp_session(addr, &script)
+        });
+        let b = scope.spawn(move || {
+            let script: Vec<String> = ["USE cancer", "OBSERVE Smoker=True", "COMMIT", "QUERY Cancer"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            tcp_session(addr, &script)
+        });
+        (a.join().unwrap(), b.join().unwrap())
+    });
+
+    // P(lung=yes | smoke=yes) = 0.1
+    assert!(asia_replies[3].starts_with("OK yes=0.100000"), "{}", asia_replies[3]);
+    // P(Cancer=True | Smoker=True) = 0.9*0.03 + 0.1*0.05 = 0.032
+    assert!(cancer_replies[3].starts_with("OK True=0.032000"), "{}", cancer_replies[3]);
+
+    // a third session scrapes fleet-wide stats
+    let stats = tcp_session(addr, &["STATS".to_string()]);
+    assert!(stats[0].contains("| asia queries=1"), "{}", stats[0]);
+    assert!(stats[0].contains("| cancer queries=1"), "{}", stats[0]);
+    server.shutdown();
+}
+
+#[test]
+fn protocol_error_paths_over_tcp() {
+    let fleet = make_fleet(EngineKind::Seq, 1, 2, 4);
+    let server = FleetServer::start(Arc::clone(&fleet), "127.0.0.1:0").unwrap();
+    let script: Vec<String> = [
+        "LOAD no-such-net",    // unknown spec
+        "USE asia",            // USE before LOAD
+        "QUERY lung",          // no network selected
+        "LOAD asia",
+        "LOAD cancer",
+        "USE asia",
+        "OBSERVE Smoker=True", // cancer variable on the asia session
+        "QUERY lung",          // session still healthy after the errors
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let replies = tcp_session(server.addr(), &script);
+    assert!(replies[0].starts_with("ERR unknown network"), "{}", replies[0]);
+    assert!(replies[1].starts_with("ERR not loaded"), "{}", replies[1]);
+    assert!(replies[2].starts_with("ERR no network selected"), "{}", replies[2]);
+    assert!(replies[3].starts_with("OK loaded asia"), "{}", replies[3]);
+    assert!(replies[4].starts_with("OK loaded cancer"), "{}", replies[4]);
+    assert!(replies[5].starts_with("OK using asia"), "{}", replies[5]);
+    assert!(replies[6].starts_with("ERR unknown variable"), "{}", replies[6]);
+    assert!(replies[7].starts_with("OK yes=0.055000"), "{}", replies[7]);
+    server.shutdown();
+}
+
+#[test]
+fn registry_eviction_keeps_the_fleet_consistent() {
+    let fleet = make_fleet(EngineKind::Seq, 1, 1, 2);
+    fleet.load("asia").unwrap();
+    fleet.load("cancer").unwrap();
+    assert!(fleet.query("asia", Evidence::none()).is_ok());
+    // loading a third net evicts the LRU tree (cancer) and its shards
+    fleet.load("sprinkler").unwrap();
+    let names: Vec<String> = fleet.loaded().into_iter().map(|e| e.name).collect();
+    assert_eq!(names, vec!["asia".to_string(), "sprinkler".to_string()]);
+    assert!(fleet.query("cancer", Evidence::none()).is_err());
+    assert!(fleet.query("sprinkler", Evidence::none()).is_ok());
+    // an evicted net reloads (recompiles) on demand
+    fleet.load("cancer").unwrap();
+    assert!(fleet.query("cancer", Evidence::none()).is_ok());
+}
+
+#[test]
+fn fleet_answers_match_across_engine_kinds() {
+    // the fleet must be engine-agnostic: same posteriors whichever engine
+    // the shards replicate
+    let jt = Arc::new(JunctionTree::compile(&resolve_spec("mixed12").unwrap(), TriangulationHeuristic::MinFill).unwrap());
+    let cases = generate(&jt.net, &CaseSpec { n_cases: 6, observed_fraction: 0.25, seed: 4242 });
+    let want = seq_reference(&jt, &cases);
+    for kind in [EngineKind::Seq, EngineKind::Hybrid, EngineKind::Element] {
+        let fleet = make_fleet(kind, 2, 2, 2);
+        fleet.load("mixed12").unwrap();
+        for (i, (ev, w)) in cases.iter().zip(&want).enumerate() {
+            let got = fleet.query("mixed12", ev.clone()).unwrap();
+            let d = got.max_abs_diff(w);
+            assert!(d <= 1e-9, "{kind:?} case {i}: {d:e}");
+        }
+    }
+}
