@@ -2,9 +2,11 @@
 #
 #   make build      release build of the fastbn crate (pure-std, offline-safe)
 #   make test       tier-1: cargo test; then the python suite (skips if no pytest)
-#   make bench      run all five bench targets (criterion-lite, harness=false)
+#   make bench      run all six bench targets (criterion-lite, harness=false)
 #   make serve-smoke start a 2-network fleet, run a scripted session
 #                   through it over TCP, and assert on the replies
+#   make cluster-smoke spawn 2 fleet backend processes + the consistent-hash
+#                   front tier, run a scripted session through the router
 #   make artifacts  AOT-lower the Pallas/JAX kernels to HLO-text artifacts
 #                   (needs the python deps in python/requirements.txt)
 #   make fmt        rustfmt the workspace
@@ -16,7 +18,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench serve-smoke artifacts fmt lint test-xla clean
+.PHONY: build test bench serve-smoke cluster-smoke artifacts fmt lint test-xla clean
 
 build:
 	$(CARGO) build --release
@@ -43,6 +45,14 @@ bench:
 # unexpected reply.
 serve-smoke:
 	$(CARGO) run --release -- serve --nets asia,cancer --shards 2 --bind 127.0.0.1:0 --smoke
+
+# cluster serving smoke: 2 backend fleet *processes* (spawned as children
+# announcing ephemeral ports) behind the consistent-hash front tier; the
+# --smoke switch drives a scripted LOAD/USE/OBSERVE/COMMIT/QUERY/STATS/
+# TOPO session through the router and exits nonzero on any unexpected
+# reply.
+cluster-smoke:
+	$(CARGO) run --release -- cluster --backends 2 --nets asia,cancer --bind 127.0.0.1:0 --smoke
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts

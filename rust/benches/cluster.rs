@@ -1,0 +1,106 @@
+//! Bench: the **cluster tier** — backend-count sweep through the front
+//! router.
+//!
+//! Every query crosses two TCP hops (client → front tier → owning
+//! backend), so this measures what the cluster actually adds over an
+//! in-process fleet: routing, proxying, and socket overhead, and how
+//! throughput scales as the same network set spreads over 1/2/4 backend
+//! processes. One client per network holds a sticky session (`USE` once,
+//! then inline-evidence `QUERY`s), matching the serving shape.
+//!
+//! Scale knob: FASTBN_CLUSTER_QUERIES (default 200 per cell, split
+//! evenly across the nets' clients).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use fastbn::bench::{env_usize, fmt_duration, print_table};
+use fastbn::bn::resolve_spec;
+use fastbn::cluster::harness::query_line;
+use fastbn::cluster::{ClusterClient, ClusterConfig, ClusterHarness};
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::fleet::FleetConfig;
+use fastbn::infer::cases::{generate, CaseSpec};
+
+const NETS: [&str; 4] = ["asia", "cancer", "sprinkler", "mixed12"];
+
+fn harness(n_backends: usize) -> ClusterHarness {
+    let backend_cfg = FleetConfig {
+        engine: EngineKind::Hybrid,
+        engine_cfg: EngineConfig::default().with_threads(2),
+        shards: 2,
+        registry_capacity: NETS.len(),
+    };
+    let harness = ClusterHarness::start(n_backends, backend_cfg, ClusterConfig::default()).unwrap();
+    let mut client = harness.client().unwrap();
+    for net in NETS {
+        let reply = client.request(&format!("LOAD {net}")).unwrap();
+        assert!(reply.starts_with("OK loaded"), "{reply}");
+    }
+    harness
+}
+
+/// One sticky client per net, `per_net` queries each; returns
+/// (wall seconds, served).
+fn drive(harness: &ClusterHarness, cases: &[(String, Vec<String>)], per_net: usize) -> (f64, u64) {
+    let served = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for (net, lines) in cases {
+            let served = &served;
+            let front = harness.front_addr();
+            scope.spawn(move || {
+                let mut client = ClusterClient::connect(front).unwrap();
+                assert!(client.request(&format!("USE {net}")).unwrap().starts_with("OK using"));
+                for i in 0..per_net {
+                    if client.request(&lines[i % lines.len()]).unwrap().starts_with("OK") {
+                        served.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    (t0.elapsed().as_secs_f64(), served.load(Ordering::Relaxed))
+}
+
+fn main() {
+    let n_queries = env_usize("FASTBN_CLUSTER_QUERIES", 200);
+    let per_net = (n_queries / NETS.len()).max(1);
+
+    // pre-render the protocol lines once; the bench then measures
+    // serving, not formatting
+    let cases: Vec<(String, Vec<String>)> = NETS
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let net = resolve_spec(name).unwrap();
+            let target = net.vars[net.n() - 1].name.clone();
+            let evs = generate(&net, &CaseSpec { n_cases: 32, observed_fraction: 0.2, seed: 0xC105 + i as u64 });
+            (name.to_string(), evs.iter().map(|ev| query_line(&net, &target, ev)).collect())
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+    let mut last_topo = String::new();
+    for n_backends in [1usize, 2, 4] {
+        let h = harness(n_backends);
+        let (wall, served) = drive(&h, &cases, per_net);
+        let total = (per_net * NETS.len()) as u64;
+        rows.push(vec![
+            format!("{n_backends}"),
+            format!("{}", NETS.len()),
+            format!("{served}/{total}"),
+            format!("{wall:.3}s"),
+            format!("{:.1}", served as f64 / wall.max(1e-9)),
+            fmt_duration(std::time::Duration::from_secs_f64(wall / served.max(1) as f64)),
+        ]);
+        last_topo = h.client().unwrap().request("TOPO").unwrap();
+    }
+    print_table(
+        &format!("cluster: backend-count sweep ({} nets, {per_net} queries/net, sticky sessions)", NETS.len()),
+        &["backends", "nets", "served", "wall", "q/s", "mean/query"],
+        &rows,
+    );
+    // ownership spread at the widest topology, for the record
+    println!("\n{last_topo}");
+}

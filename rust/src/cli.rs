@@ -8,6 +8,7 @@
 //! fastbn generate  --nodes N [--arcs M] [--max-parents 3] [--seed S] [--out net.bif]
 //! fastbn serve     --net <spec> [--bind 127.0.0.1:7979] [--engine hybrid] [--threads N]
 //! fastbn serve     --nets a,b,c [--shards N] [--registry-cap K] [--bind ...] [--smoke]
+//! fastbn cluster   --backends N [--nets a,b,c] [--shards S] [--replicas V] [--bind ...] [--smoke]
 //! fastbn simulate  --net <spec> [--threads 1,2,4,8,16,32]
 //! fastbn selftest
 //! ```
@@ -21,6 +22,7 @@ use std::sync::Arc;
 
 use crate::bn::network::Network;
 use crate::bn::{bif, embedded, netgen};
+use crate::cluster::{Cluster, ClusterConfig, ClusterServer};
 use crate::coordinator::server::Server;
 use crate::coordinator::{BatchConfig, BatchRunner};
 use crate::engine::simulate::{best_over_threads, simulate_seconds, CostModel};
@@ -47,7 +49,7 @@ pub struct Args {
 
 /// Flags that are boolean switches: present or absent, never taking a
 /// value. Everything else must be followed by one.
-const SWITCHES: &[&str] = &["smoke"];
+const SWITCHES: &[&str] = &["smoke", "fleet", "parent-watch"];
 
 impl Args {
     /// Parse from raw argv (after the subcommand).
@@ -146,6 +148,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "batch" => cmd_batch(&args),
         "generate" => cmd_generate(&args),
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         "simulate" => cmd_simulate(&args),
         "selftest" => cmd_selftest(),
         "help" | "--help" | "-h" => {
@@ -174,7 +177,12 @@ COMMANDS:
   serve     --nets A,B,C             multi-network serving fleet (--shards N,
                                      --registry-cap K, --smoke self-check);
                                      verbs: LOAD USE NETS OBSERVE RETRACT
-                                     COMMIT QUERY STATS QUIT
+                                     COMMIT QUERY STATS PING EVICT QUIT
+  cluster   --backends N             cross-process cluster tier: N fleet backend
+                                     child processes + a consistent-hash front
+                                     router (--nets preload, --shards, --replicas
+                                     ring points, --smoke scripted session);
+                                     adds verbs: PING TOPO
   simulate  --net S                  modeled parallel times across --threads list
   selftest                           engine-agreement smoke check
   help                               this text
@@ -311,11 +319,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine: EngineKind = args.get("engine").unwrap_or("hybrid").parse()?;
     let cfg = engine_config(args)?;
     let bind = args.get("bind").unwrap_or("127.0.0.1:7979");
+    if args.has("parent-watch") {
+        spawn_parent_watch();
+    }
 
-    if let Some(nets) = args.get("nets") {
-        // fleet mode: many networks, shard groups, streaming sessions
-        let specs: Vec<&str> = nets.split(',').filter(|s| !s.is_empty()).collect();
-        if specs.is_empty() {
+    if args.get("nets").is_some() || args.has("fleet") {
+        // fleet mode: many networks, shard groups, streaming sessions.
+        // --fleet allows an *empty* fleet — the shape of a cluster
+        // backend, which receives its networks via LOAD hand-offs.
+        let specs: Vec<&str> = args.get("nets").unwrap_or("").split(',').filter(|s| !s.is_empty()).collect();
+        if specs.is_empty() && !args.has("fleet") {
             return Err(Error::msg("--nets needs a comma-separated list of network specs"));
         }
         let fleet_cfg = FleetConfig {
@@ -334,8 +347,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
         let server = FleetServer::start(Arc::clone(&fleet), bind)?;
+        // machine-readable start announcement: `fastbn cluster` parses
+        // this from child stdout to learn each backend's ephemeral port
+        println!("FLEET READY addr={}", server.addr());
         println!(
-            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/STATS/QUIT",
+            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/STATS/PING/EVICT/QUIT",
             fleet.loaded().len(),
             shards,
             server.addr(),
@@ -370,8 +386,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// Drive a scripted session through a running fleet server and verify the
 /// replies — the `make serve-smoke` assertion path.
 fn serve_smoke(server: &FleetServer) -> Result<()> {
-    use std::io::{BufRead, BufReader, Write};
-
     let entries = server.fleet().loaded();
     if entries.len() < 2 {
         return Err(Error::msg("--smoke needs at least two loaded networks (--nets a,b)"));
@@ -395,10 +409,20 @@ fn serve_smoke(server: &FleetServer) -> Result<()> {
         ("STATS".into(), "STATS ".into(), format!("| {} queries=1", b.name)),
         ("USE not-loaded-anywhere".into(), "ERR not loaded".into(), String::new()),
     ];
+    run_script(server.addr(), &script)?;
+    println!("serve-smoke passed ({} nets)", entries.len());
+    Ok(())
+}
 
-    let mut stream = std::net::TcpStream::connect(server.addr())?;
+/// Drive a scripted line-protocol session against `addr`, checking each
+/// reply's prefix and (optionally) a required substring — the assertion
+/// loop shared by the serve and cluster smokes.
+fn run_script(addr: std::net::SocketAddr, script: &[(String, String, String)]) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+
+    let mut stream = std::net::TcpStream::connect(addr)?;
     let mut reader = BufReader::new(stream.try_clone()?);
-    for (request, prefix, contains) in &script {
+    for (request, prefix, contains) in script {
         stream.write_all(request.as_bytes())?;
         stream.write_all(b"\n")?;
         let mut reply = String::new();
@@ -413,7 +437,173 @@ fn serve_smoke(server: &FleetServer) -> Result<()> {
         }
     }
     stream.write_all(b"QUIT\n")?;
-    println!("serve-smoke passed ({} nets)", entries.len());
+    Ok(())
+}
+
+/// Exit when our stdin reaches EOF — i.e. when the parent that spawned
+/// us with a piped stdin dies or drops the pipe. Cluster backends run
+/// with this watch so a killed front tier never strands orphans.
+fn spawn_parent_watch() {
+    std::thread::spawn(|| {
+        use std::io::Read;
+        let mut sink = [0u8; 64];
+        let mut stdin = std::io::stdin();
+        loop {
+            match stdin.read(&mut sink) {
+                Ok(0) | Err(_) => std::process::exit(0),
+                Ok(_) => {}
+            }
+        }
+    });
+}
+
+/// Children killed (and reaped) however `cmd_cluster` exits.
+#[derive(Default)]
+struct ChildGuard {
+    children: Vec<std::process::Child>,
+}
+
+impl ChildGuard {
+    fn kill_all(&mut self) {
+        for child in &mut self.children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        self.children.clear();
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        self.kill_all();
+    }
+}
+
+/// Read child stdout lines until the `FLEET READY addr=…` announcement.
+fn read_ready_addr(reader: &mut impl std::io::BufRead, i: usize) -> Result<std::net::SocketAddr> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(Error::msg(format!("backend {i} exited before announcing an address")));
+        }
+        if let Some(addr) = line.trim().strip_prefix("FLEET READY addr=") {
+            return addr.parse().map_err(|_| Error::msg(format!("backend {i} announced a bad address {addr:?}")));
+        }
+    }
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let n_backends: usize = args.parse_or("backends", 2usize)?;
+    if n_backends == 0 {
+        return Err(Error::msg("--backends must be ≥ 1"));
+    }
+    let engine_text = args.get("engine").unwrap_or("hybrid");
+    let _validated: EngineKind = engine_text.parse()?; // fail before spawning anything
+    let bind = args.get("bind").unwrap_or("127.0.0.1:7878");
+    let smoke = args.has("smoke");
+    let specs: Vec<String> = match args.get("nets") {
+        Some(text) => text.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect(),
+        None if smoke => vec!["asia".into(), "cancer".into()],
+        None => Vec::new(),
+    };
+    if smoke && specs.len() < 2 {
+        return Err(Error::msg("--smoke needs at least two networks (--nets a,b)"));
+    }
+
+    // each backend is a real child process: `fastbn serve --fleet` on an
+    // ephemeral port, announced over stdout, watching our stdin so it
+    // dies with us
+    let exe = std::env::current_exe()?;
+    let shards = args.parse_or("shards", 2usize)?.to_string();
+    let threads = args.parse_or("threads", 0usize)?.to_string();
+    let registry_cap = args.parse_or("registry-cap", 8usize)?.to_string();
+    let mut children = ChildGuard::default();
+    let mut addrs = Vec::new();
+    for i in 0..n_backends {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.args(["serve", "--fleet", "--bind", "127.0.0.1:0", "--parent-watch"])
+            .args(["--engine", engine_text])
+            .args(["--shards", &shards])
+            .args(["--threads", &threads])
+            .args(["--registry-cap", &registry_cap])
+            .stdin(std::process::Stdio::piped())
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::inherit());
+        let mut child = cmd.spawn()?;
+        let stdout = child.stdout.take().ok_or_else(|| Error::msg("backend stdout was not captured"))?;
+        children.children.push(child);
+        let mut reader = std::io::BufReader::new(stdout);
+        addrs.push(read_ready_addr(&mut reader, i)?);
+        // keep draining the child's stdout so it can never block on a
+        // full pipe once it starts logging
+        std::thread::spawn(move || {
+            use std::io::BufRead;
+            let mut sink = String::new();
+            while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+                sink.clear();
+            }
+        });
+    }
+
+    let cluster_cfg = ClusterConfig { replicas: args.parse_or("replicas", 64usize)?, ..Default::default() };
+    let cluster = Cluster::start(cluster_cfg)?;
+    for addr in &addrs {
+        let id = cluster.join(*addr)?;
+        println!("backend {id} ready at {addr}");
+    }
+    for spec in &specs {
+        let reply = cluster.load(spec);
+        println!("{reply}");
+        if !reply.starts_with("OK") {
+            return Err(Error::msg(reply));
+        }
+    }
+    let server = ClusterServer::start(Arc::clone(&cluster), bind)?;
+    println!(
+        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/STATS/PING/TOPO/QUIT",
+        server.addr(),
+        specs.len()
+    );
+    if smoke {
+        let outcome = cluster_smoke(&server, &specs, n_backends);
+        server.shutdown();
+        cluster.shutdown();
+        children.kill_all();
+        return outcome;
+    }
+    // serve until killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Drive a scripted session through a running cluster front tier and
+/// verify the replies — the `make cluster-smoke` assertion path.
+fn cluster_smoke(server: &ClusterServer, specs: &[String], n_backends: usize) -> Result<()> {
+    let net_a = resolve_net(&specs[0])?;
+    let net_b = resolve_net(&specs[1])?;
+    let (obs_var, obs_state) = (&net_a.vars[0].name, &net_a.vars[0].states[0]);
+    let target_a = &net_a.vars[net_a.n() - 1].name;
+    let target_b = &net_b.vars[net_b.n() - 1].name;
+
+    // (request, prefix the reply must start with, substring it must contain)
+    let script: Vec<(String, String, String)> = vec![
+        ("PING".into(), "OK pong".into(), format!("alive={n_backends}")),
+        (format!("LOAD {}", specs[0]), format!("OK loaded {}", net_a.name), "backend=".into()),
+        ("TOPO".into(), format!("OK backends={n_backends}"), "alive=true".into()),
+        (format!("USE {}", net_a.name), format!("OK using {}", net_a.name), "vars=".into()),
+        (format!("OBSERVE {obs_var}={obs_state}"), "OK staged 1".into(), "pending=1".into()),
+        ("COMMIT".into(), "OK committed evidence=1".into(), "applied=1".into()),
+        (format!("QUERY {target_a}"), "OK ".into(), "logZ=".into()),
+        (format!("USE {}", net_b.name), format!("OK using {}", net_b.name), "vars=".into()),
+        (format!("QUERY {target_b}"), "OK ".into(), "logZ=".into()),
+        ("NETS".into(), "OK nets=".into(), format!("{}[", net_a.name)),
+        ("STATS".into(), "STATS cluster".into(), format!("backends={n_backends}")),
+        ("USE not-loaded-anywhere".into(), "ERR not loaded".into(), String::new()),
+    ];
+    run_script(server.addr(), &script)?;
+    println!("cluster-smoke passed ({n_backends} backends, {} nets)", specs.len());
     Ok(())
 }
 
@@ -496,6 +686,9 @@ mod tests {
         assert!(a.has("smoke"));
         assert!(!a.has("quiet"));
         assert_eq!(a.get("nets"), Some("asia,cancer"));
+        // the cluster-backend switches are switches too
+        let a = Args::parse(&["--fleet".to_string(), "--parent-watch".to_string()]).unwrap();
+        assert!(a.has("fleet") && a.has("parent-watch"));
         // a trailing switch needs no value
         let a = Args::parse(&["--smoke".to_string()]).unwrap();
         assert!(a.has("smoke"));
@@ -514,6 +707,19 @@ mod tests {
         .map(|s| s.to_string())
         .collect();
         assert_eq!(run(argv), 0);
+    }
+
+    #[test]
+    fn cluster_rejects_bad_arguments_before_spawning() {
+        // all of these must fail during validation — no child processes
+        // (under `cargo test` current_exe is the test binary, so actually
+        // spawning here would be wrong twice over)
+        assert_ne!(run(vec!["cluster".into(), "--backends".into(), "0".into()]), 0);
+        assert_ne!(run(vec!["cluster".into(), "--backends".into(), "two".into()]), 0);
+        assert_ne!(run(vec!["cluster".into(), "--engine".into(), "warp-drive".into()]), 0);
+        let argv: Vec<String> =
+            ["cluster", "--smoke", "--nets", "asia"].iter().map(|s| s.to_string()).collect();
+        assert_ne!(run(argv), 0); // --smoke needs two nets
     }
 
     #[test]

@@ -1,0 +1,96 @@
+//! Line-protocol client for one backend fleet process.
+//!
+//! The front tier speaks to backends over the same TCP line protocol the
+//! fleet serves to everyone else — there is no private RPC surface, so
+//! anything the router does (LOAD, EVICT, PING, STATS) an operator can
+//! replay by hand with `nc`. Every socket carries connect/read/write
+//! timeouts: a dead or wedged backend turns into a bounded `Err`, never a
+//! hang, which is what lets the fault-injection tests assert "clean
+//! protocol error" with a deadline.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// One request/reply TCP connection to a backend.
+///
+/// Sticky sessions (a client's `USE`/`OBSERVE`/`COMMIT` state lives in the
+/// *backend's* session) hold one of these open per selected backend;
+/// control-plane verbs open short-lived ones.
+pub struct BackendConn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl BackendConn {
+    /// Connect with a bounded connect timeout; reads and writes on the
+    /// resulting connection are bounded by `io_timeout`.
+    pub fn connect(addr: SocketAddr, connect_timeout: Duration, io_timeout: Duration) -> std::io::Result<Self> {
+        let stream = TcpStream::connect_timeout(&addr, connect_timeout)?;
+        stream.set_read_timeout(Some(io_timeout))?;
+        stream.set_write_timeout(Some(io_timeout))?;
+        let _ = stream.set_nodelay(true); // latency over batching; best effort
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(BackendConn { stream, reader })
+    }
+
+    /// Send one request line, read one reply line.
+    ///
+    /// Any error — timeout included — poisons the connection as far as the
+    /// caller is concerned: a timed-out read may leave a half-consumed
+    /// reply in the buffer, so callers drop the conn and reconnect rather
+    /// than retry on it.
+    pub fn request(&mut self, line: &str) -> std::io::Result<String> {
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply)?;
+        if n == 0 {
+            return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "backend closed the connection"));
+        }
+        Ok(reply.trim_end().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EngineConfig, EngineKind};
+    use crate::fleet::{Fleet, FleetConfig, FleetServer};
+    use std::sync::Arc;
+
+    fn backend() -> FleetServer {
+        let fleet = Arc::new(Fleet::new(FleetConfig {
+            engine: EngineKind::Seq,
+            engine_cfg: EngineConfig::default().with_threads(1),
+            shards: 1,
+            registry_capacity: 4,
+        }));
+        FleetServer::start(fleet, "127.0.0.1:0").unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips_one_line() {
+        let server = backend();
+        let mut conn =
+            BackendConn::connect(server.addr(), Duration::from_secs(1), Duration::from_secs(2)).unwrap();
+        assert!(conn.request("PING").unwrap().starts_with("OK pong"));
+        assert!(conn.request("LOAD asia").unwrap().starts_with("OK loaded asia"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn dead_backend_is_a_bounded_error_not_a_hang() {
+        let server = backend();
+        let addr = server.addr();
+        let mut conn = BackendConn::connect(addr, Duration::from_secs(1), Duration::from_secs(2)).unwrap();
+        server.shutdown();
+        let t0 = std::time::Instant::now();
+        // the listener is gone: the in-flight conn errors (EOF/reset) and a
+        // fresh connect is refused — both within the configured timeouts
+        assert!(conn.request("PING").is_err());
+        assert!(BackendConn::connect(addr, Duration::from_secs(1), Duration::from_secs(2)).is_err());
+        assert!(t0.elapsed() < Duration::from_secs(8), "not bounded: {:?}", t0.elapsed());
+    }
+}

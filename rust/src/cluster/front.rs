@@ -1,0 +1,922 @@
+//! The front-tier router: membership, ownership, failover, and proxying.
+//!
+//! One [`Cluster`] owns three pieces of state behind a short-hold lock —
+//! the consistent-hash ring (alive backends only), the backend table
+//! (addresses + health), and the directory (network → spec + owner) — and
+//! a `control` mutex that serializes every *transition* (join, leave,
+//! death, revival, load) so a hand-off can never interleave with another:
+//! all the network I/O a transition performs happens under `control` but
+//! never under the state lock, so sessions keep routing while a
+//! rebalance is in flight.
+//!
+//! Failure handling is two-track. A background prober `PING`s every
+//! backend (exponential backoff once dead); a session that trips over a
+//! dead connection reports it, the report is *verified* with one probe
+//! (transient hiccups must not evict a healthy backend), and a confirmed
+//! death triggers synchronous failover — by the time the session's error
+//! reply reaches the client, the network usually has a new owner and a
+//! plain `USE` resumes service.
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+use crate::cluster::backend::BackendConn;
+use crate::cluster::ring::Ring;
+use crate::cluster::ClusterConfig;
+use crate::coordinator::metrics::LatencySummary;
+use crate::fleet::SessionReply;
+use crate::{Error, Result};
+
+/// Health + ownership snapshot for one backend (diagnostics, `TOPO`).
+#[derive(Clone, Debug)]
+pub struct BackendStatus {
+    /// Stable id (`b0`, `b1`, … in join order).
+    pub id: String,
+    /// Line-protocol address.
+    pub addr: SocketAddr,
+    /// False once the prober (or a verified session report) declared it dead.
+    pub alive: bool,
+    /// Networks the directory currently assigns to it.
+    pub owned_nets: usize,
+}
+
+/// Outcome of resolving a network name to its owning backend.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Lookup {
+    /// Owned by a live backend.
+    Owned {
+        /// Owning backend id.
+        id: String,
+        /// Its address.
+        addr: SocketAddr,
+    },
+    /// Known network, but no live backend currently hosts it.
+    Orphaned,
+    /// Never loaded through this cluster.
+    Unknown,
+}
+
+/// Is a session's pinned (network, backend) pair still the owner?
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Confirm {
+    /// Yes — forward.
+    Current,
+    /// Ownership moved (rebalance or failover) or the net is orphaned.
+    Moved,
+    /// The network left the directory entirely.
+    Unloaded,
+}
+
+struct BackendEntry {
+    addr: SocketAddr,
+    alive: bool,
+    consecutive_failures: u32,
+    backoff: Duration,
+    next_probe: Instant,
+}
+
+struct NetEntry {
+    spec: String,
+    owner: Option<String>,
+}
+
+struct State {
+    ring: Ring,
+    backends: BTreeMap<String, BackendEntry>,
+    directory: BTreeMap<String, NetEntry>,
+    next_backend_seq: usize,
+}
+
+/// The cluster front tier. See the module docs for the locking story.
+pub struct Cluster {
+    cfg: ClusterConfig,
+    state: Mutex<State>,
+    /// Serializes control-plane transitions (join/leave/death/load).
+    control: Mutex<()>,
+    stop: Arc<AtomicBool>,
+    prober: Mutex<Option<std::thread::JoinHandle<()>>>,
+    started: Instant,
+}
+
+enum ProbeAction {
+    None,
+    Died,
+    Revived,
+}
+
+impl Cluster {
+    /// Create the front tier and start its health prober.
+    pub fn start(cfg: ClusterConfig) -> Result<Arc<Cluster>> {
+        let cluster = Arc::new(Cluster {
+            state: Mutex::new(State {
+                ring: Ring::new(cfg.replicas),
+                backends: BTreeMap::new(),
+                directory: BTreeMap::new(),
+                next_backend_seq: 0,
+            }),
+            control: Mutex::new(()),
+            stop: Arc::new(AtomicBool::new(false)),
+            prober: Mutex::new(None),
+            started: Instant::now(),
+            cfg,
+        });
+        let weak: Weak<Cluster> = Arc::downgrade(&cluster);
+        let stop = Arc::clone(&cluster.stop);
+        let step = cluster.cfg.probe_interval.min(Duration::from_millis(50)).max(Duration::from_millis(5));
+        let handle = std::thread::Builder::new().name("cluster-probe".into()).spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(step);
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                // Weak: the prober never keeps the cluster alive, so a
+                // dropped Cluster ends the thread on its next wake
+                let Some(cluster) = weak.upgrade() else { break };
+                cluster.probe_tick();
+            }
+        })?;
+        *cluster.prober.lock().unwrap() = Some(handle);
+        Ok(cluster)
+    }
+
+    /// The configuration in use.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Stop the prober (idempotent; also run on drop).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let handle = self.prober.lock().unwrap().take();
+        if let Some(handle) = handle {
+            // drop can run *on the prober*: mid-tick it holds the last Arc
+            // upgrade, and joining yourself deadlocks — the stop flag is
+            // set, so just let the thread run off its loop end
+            if handle.thread().id() != std::thread::current().id() {
+                let _ = handle.join();
+            }
+        }
+    }
+
+    // ---- membership -----------------------------------------------------
+
+    /// Add a backend: verify it answers `PING`, put it on the ring, and
+    /// rebalance — networks whose ring owner becomes the joiner are
+    /// `LOAD`ed there and `EVICT`ed from their previous owner. Returns the
+    /// assigned id (`b0`, `b1`, … in join order). An address that
+    /// previously died rejoins under its old id.
+    pub fn join(&self, addr: SocketAddr) -> Result<String> {
+        let _ctl = self.control.lock().unwrap();
+        if !self.ping_addr(addr) {
+            return Err(Error::msg(format!("backend at {addr} did not answer PING")));
+        }
+        let id = {
+            let mut st = self.state.lock().unwrap();
+            let existing = st.backends.iter().find(|(_, b)| b.addr == addr).map(|(id, b)| (id.clone(), b.alive));
+            match existing {
+                Some((id, true)) => return Err(Error::msg(format!("backend {id} at {addr} already joined"))),
+                Some((id, false)) => {
+                    Self::set_alive(&mut st, &id);
+                    id
+                }
+                None => {
+                    let id = format!("b{}", st.next_backend_seq);
+                    st.next_backend_seq += 1;
+                    let entry = BackendEntry {
+                        addr,
+                        alive: true,
+                        consecutive_failures: 0,
+                        backoff: self.cfg.probe_interval,
+                        next_probe: Instant::now() + self.cfg.probe_interval,
+                    };
+                    st.backends.insert(id.clone(), entry);
+                    st.ring.add(&id);
+                    id
+                }
+            }
+        };
+        self.rebalance(true);
+        Ok(id)
+    }
+
+    /// Gracefully remove a backend: take it off the ring, hand its
+    /// networks to the new ring owners (`LOAD` there, `EVICT` here), then
+    /// forget it. If any hand-off `LOAD` fails the backend is kept —
+    /// alive but off-ring, still serving what it owns — and an error says
+    /// so; retrying `leave` retries the hand-off.
+    pub fn leave(&self, id: &str) -> Result<()> {
+        let _ctl = self.control.lock().unwrap();
+        {
+            let mut st = self.state.lock().unwrap();
+            if !st.backends.contains_key(id) {
+                return Err(Error::msg(format!("no such backend {id:?}")));
+            }
+            // off the ring but still addressable, so the hand-off can
+            // EVICT its residents before the entry disappears
+            st.ring.remove(id);
+        }
+        self.rebalance(true);
+        let remaining = {
+            let st = self.state.lock().unwrap();
+            st.directory.values().filter(|e| e.owner.as_deref() == Some(id)).count()
+        };
+        if remaining > 0 {
+            return Err(Error::msg(format!(
+                "backend {id} still owns {remaining} network(s) whose hand-off failed; kept off-ring, retry leave"
+            )));
+        }
+        self.state.lock().unwrap().backends.remove(id);
+        Ok(())
+    }
+
+    /// Declare a backend dead *now*: off the ring, failover its networks
+    /// to survivors (no `EVICT` — nobody is listening), keep probing it
+    /// with backoff so a revival rejoins automatically. Normally driven by
+    /// the prober or a verified session report, public for operators.
+    pub fn mark_dead(&self, id: &str) {
+        let _ctl = self.control.lock().unwrap();
+        {
+            let mut st = self.state.lock().unwrap();
+            let Some(b) = st.backends.get_mut(id) else { return };
+            if !b.alive {
+                return;
+            }
+            b.alive = false;
+            b.consecutive_failures = 0;
+            b.backoff = self.cfg.probe_interval;
+            b.next_probe = Instant::now() + b.backoff;
+            st.ring.remove(id);
+        }
+        self.rebalance(false);
+    }
+
+    fn set_alive(st: &mut State, id: &str) {
+        if let Some(b) = st.backends.get_mut(id) {
+            b.alive = true;
+            b.consecutive_failures = 0;
+            b.next_probe = Instant::now();
+        }
+        st.ring.add(id);
+    }
+
+    fn revive(&self, id: &str) {
+        let _ctl = self.control.lock().unwrap();
+        {
+            let mut st = self.state.lock().unwrap();
+            let Some(b) = st.backends.get(id) else { return };
+            if b.alive {
+                return;
+            }
+            Self::set_alive(&mut st, id);
+        }
+        // a revived process may hold residents it no longer owns; that is
+        // only wasted backend memory — routing follows the directory
+        self.rebalance(true);
+    }
+
+    /// A session hit a connection error on `id`. Verify with one probe —
+    /// a transient hiccup must not evict a healthy backend — and only a
+    /// confirmed failure triggers death + failover (synchronously, so the
+    /// caller's error reply already reflects the reroute).
+    pub fn report_failure(&self, id: &str) {
+        let addr = {
+            let st = self.state.lock().unwrap();
+            st.backends.get(id).filter(|b| b.alive).map(|b| b.addr)
+        };
+        let Some(addr) = addr else { return };
+        if self.ping_addr(addr) {
+            return;
+        }
+        self.mark_dead(id);
+    }
+
+    // ---- ownership ------------------------------------------------------
+
+    /// Load `spec` onto its ring owner and record it in the directory.
+    /// Returns the full protocol reply line (`OK loaded … backend=<id>`
+    /// or `ERR …`) — the session passes it straight through.
+    pub fn load(&self, spec: &str) -> String {
+        // resolve locally first: routing needs the *network's* name (a
+        // path spec and its net name must land on the same owner), and a
+        // bad spec should fail here, not on a backend
+        let name = match crate::bn::resolve_spec(spec) {
+            Ok(net) => net.name,
+            Err(e) => return format!("ERR {e}"),
+        };
+        let ctl = self.control.lock().unwrap();
+        let Some((id, addr)) = self.place(&name) else {
+            return format!("ERR no live backends to host {name:?}");
+        };
+        match self.remote_line(addr, &format!("LOAD {spec}")) {
+            Ok(reply) if reply.starts_with("OK") => {
+                let prev = {
+                    let mut st = self.state.lock().unwrap();
+                    st.directory
+                        .insert(name.clone(), NetEntry { spec: spec.to_string(), owner: Some(id.clone()) })
+                        .and_then(|e| e.owner)
+                };
+                // a re-LOAD that lands on a new owner (ring changed while
+                // the net was orphaned, say) evicts the stale resident
+                self.evict_stale(&name, prev.as_deref(), &id);
+                format!("{reply} backend={id}")
+            }
+            Ok(reply) => reply,
+            Err(e) => {
+                drop(ctl); // report_failure takes `control` via mark_dead
+                self.report_failure(&id);
+                format!("ERR backend {id} unreachable during LOAD: {e}")
+            }
+        }
+    }
+
+    /// Resolve a network to its owning backend.
+    pub fn lookup(&self, net: &str) -> Lookup {
+        let st = self.state.lock().unwrap();
+        let Some(entry) = st.directory.get(net) else { return Lookup::Unknown };
+        let owned = entry.owner.as_ref().and_then(|id| {
+            st.backends.get(id).filter(|b| b.alive).map(|b| (id.clone(), b.addr))
+        });
+        match owned {
+            Some((id, addr)) => Lookup::Owned { id, addr },
+            None => Lookup::Orphaned,
+        }
+    }
+
+    /// Directory owner of `net` (`None` if unknown or orphaned).
+    pub fn owner(&self, net: &str) -> Option<String> {
+        self.state.lock().unwrap().directory.get(net).and_then(|e| e.owner.clone())
+    }
+
+    /// The spec `net` was loaded from.
+    pub fn spec_of(&self, net: &str) -> Option<String> {
+        self.state.lock().unwrap().directory.get(net).map(|e| e.spec.clone())
+    }
+
+    /// Is (net, backend) still the live routing assignment?
+    pub fn confirm(&self, net: &str, backend: &str) -> Confirm {
+        let st = self.state.lock().unwrap();
+        match st.directory.get(net) {
+            None => Confirm::Unloaded,
+            Some(e) if e.owner.as_deref() == Some(backend) => Confirm::Current,
+            Some(_) => Confirm::Moved,
+        }
+    }
+
+    /// Per-backend status, sorted by id.
+    pub fn backends(&self) -> Vec<BackendStatus> {
+        let st = self.state.lock().unwrap();
+        st.backends
+            .iter()
+            .map(|(id, b)| BackendStatus {
+                id: id.clone(),
+                addr: b.addr,
+                alive: b.alive,
+                owned_nets: st.directory.values().filter(|e| e.owner.as_deref() == Some(id.as_str())).count(),
+            })
+            .collect()
+    }
+
+    /// Directory view: network → owning backend id, sorted by name.
+    pub fn directory(&self) -> Vec<(String, Option<String>)> {
+        let st = self.state.lock().unwrap();
+        st.directory.iter().map(|(n, e)| (n.clone(), e.owner.clone())).collect()
+    }
+
+    fn alive_counts(&self) -> (usize, usize, usize) {
+        let st = self.state.lock().unwrap();
+        (st.backends.len(), st.backends.values().filter(|b| b.alive).count(), st.directory.len())
+    }
+
+    /// Ring owner of `name` among live backends, with its address.
+    fn place(&self, name: &str) -> Option<(String, SocketAddr)> {
+        let st = self.state.lock().unwrap();
+        let id = st.ring.owner(name)?;
+        let addr = st.backends.get(&id).map(|b| b.addr)?;
+        Some((id, addr))
+    }
+
+    fn addr_if_alive(&self, id: &str) -> Option<SocketAddr> {
+        let st = self.state.lock().unwrap();
+        st.backends.get(id).filter(|b| b.alive).map(|b| b.addr)
+    }
+
+    /// Post-hand-off cleanup: `EVICT` `name` from a previous owner that
+    /// is not the new one and is still alive (a dead one has nothing to
+    /// free; a revival's stale residents are routed around anyway).
+    fn evict_stale(&self, name: &str, prev: Option<&str>, new_owner: &str) {
+        let Some(prev_id) = prev.filter(|p| *p != new_owner) else { return };
+        if let Some(addr) = self.addr_if_alive(prev_id) {
+            let _ = self.remote_line(addr, &format!("EVICT {name}"));
+        }
+    }
+
+    /// Re-home every network whose directory owner disagrees with the
+    /// ring: `LOAD` on the desired owner, then (when `evict_old` — join
+    /// and graceful leave, where the previous owner is still listening)
+    /// `EVICT` on the previous one. Orphans re-home too. A failed
+    /// hand-off `LOAD` keeps a still-alive previous owner routing (it
+    /// still holds the tree) rather than orphaning a working network;
+    /// the next rebalance retries the move. Caller holds `control`;
+    /// state is locked only around reads/commits, never I/O.
+    fn rebalance(&self, evict_old: bool) {
+        let nets: Vec<(String, String, Option<String>)> = {
+            let st = self.state.lock().unwrap();
+            st.directory.iter().map(|(n, e)| (n.clone(), e.spec.clone(), e.owner.clone())).collect()
+        };
+        for (name, spec, prev) in nets {
+            let Some((id, addr)) = self.place(&name) else {
+                let mut st = self.state.lock().unwrap();
+                if let Some(e) = st.directory.get_mut(&name) {
+                    e.owner = None;
+                }
+                continue;
+            };
+            if prev.as_deref() == Some(id.as_str()) {
+                continue;
+            }
+            let ok = matches!(self.remote_line(addr, &format!("LOAD {spec}")), Ok(r) if r.starts_with("OK"));
+            {
+                let mut st = self.state.lock().unwrap();
+                let prev_alive =
+                    prev.as_ref().map(|p| st.backends.get(p).map(|b| b.alive).unwrap_or(false)).unwrap_or(false);
+                if let Some(e) = st.directory.get_mut(&name) {
+                    e.owner = if ok {
+                        Some(id.clone())
+                    } else if prev_alive {
+                        prev.clone()
+                    } else {
+                        None
+                    };
+                }
+            }
+            if ok && evict_old {
+                self.evict_stale(&name, prev.as_deref(), &id);
+            }
+        }
+    }
+
+    // ---- probing --------------------------------------------------------
+
+    fn probe_tick(&self) {
+        let now = Instant::now();
+        let due: Vec<(String, SocketAddr)> = {
+            let st = self.state.lock().unwrap();
+            st.backends.iter().filter(|(_, b)| now >= b.next_probe).map(|(id, b)| (id.clone(), b.addr)).collect()
+        };
+        for (id, addr) in due {
+            let ok = self.ping_addr(addr);
+            self.apply_probe(&id, ok);
+        }
+    }
+
+    fn apply_probe(&self, id: &str, ok: bool) {
+        let action = {
+            let mut st = self.state.lock().unwrap();
+            let Some(b) = st.backends.get_mut(id) else { return };
+            let now = Instant::now();
+            if b.alive {
+                if ok {
+                    b.consecutive_failures = 0;
+                    b.next_probe = now + self.cfg.probe_interval;
+                    ProbeAction::None
+                } else {
+                    b.consecutive_failures += 1;
+                    if b.consecutive_failures >= self.cfg.fail_threshold {
+                        ProbeAction::Died
+                    } else {
+                        b.next_probe = now; // recheck on the next tick
+                        ProbeAction::None
+                    }
+                }
+            } else if ok {
+                ProbeAction::Revived
+            } else {
+                b.backoff = (b.backoff * 2).min(self.cfg.probe_backoff_max);
+                b.next_probe = now + b.backoff;
+                ProbeAction::None
+            }
+        };
+        match action {
+            ProbeAction::Died => self.mark_dead(id),
+            ProbeAction::Revived => self.revive(id),
+            ProbeAction::None => {}
+        }
+    }
+
+    fn ping_addr(&self, addr: SocketAddr) -> bool {
+        let connect = self.cfg.connect_timeout.min(self.cfg.probe_timeout);
+        match BackendConn::connect(addr, connect, self.cfg.probe_timeout) {
+            Ok(mut conn) => matches!(conn.request("PING"), Ok(r) if r.starts_with("OK")),
+            Err(_) => false,
+        }
+    }
+
+    // ---- protocol surfaces ---------------------------------------------
+
+    /// Open a data-plane connection to a backend.
+    pub fn connect(&self, addr: SocketAddr) -> std::io::Result<BackendConn> {
+        BackendConn::connect(addr, self.cfg.connect_timeout, self.cfg.io_timeout)
+    }
+
+    fn remote_line(&self, addr: SocketAddr, line: &str) -> std::io::Result<String> {
+        self.connect(addr)?.request(line)
+    }
+
+    /// `PING` reply: front-tier liveness + topology counts.
+    pub fn ping_line(&self) -> String {
+        let (backends, alive, nets) = self.alive_counts();
+        format!("OK pong backends={backends} alive={alive} nets={nets}")
+    }
+
+    /// `TOPO` reply: per-backend address, health, and ownership.
+    pub fn topo_line(&self) -> String {
+        let statuses = self.backends();
+        let mut out = format!("OK backends={}", statuses.len());
+        for s in &statuses {
+            out.push_str(&format!(" {}[addr={} alive={} nets={}]", s.id, s.addr, s.alive, s.owned_nets));
+        }
+        out
+    }
+
+    /// Cluster-wide `NETS`: every alive backend's residents, filtered to
+    /// directory-owned networks and annotated `@backend`.
+    pub fn nets_line(&self) -> String {
+        let owners: BTreeMap<String, String> = {
+            let st = self.state.lock().unwrap();
+            st.directory.iter().filter_map(|(n, e)| e.owner.clone().map(|o| (n.clone(), o))).collect()
+        };
+        let targets: Vec<(String, SocketAddr)> = {
+            let st = self.state.lock().unwrap();
+            st.backends.iter().filter(|(_, b)| b.alive).map(|(id, b)| (id.clone(), b.addr)).collect()
+        };
+        let mut blocks: BTreeMap<String, String> = BTreeMap::new();
+        for (id, addr) in &targets {
+            let Ok(reply) = self.remote_line(*addr, "NETS") else { continue };
+            for raw in reply.split(']') {
+                let Some((head, attrs)) = raw.split_once('[') else { continue };
+                let Some(name) = head.split_whitespace().last() else { continue };
+                if owners.get(name) == Some(id) {
+                    blocks.insert(name.to_string(), format!("{name}[{attrs}]@{id}"));
+                }
+            }
+        }
+        let mut out = format!("OK nets={}", blocks.len());
+        for block in blocks.values() {
+            out.push(' ');
+            out.push_str(block);
+        }
+        out
+    }
+
+    /// Cluster-wide `STATS`: per-network lines gathered from the owning
+    /// backends plus aggregate totals (latency percentiles merged
+    /// count-weighted via [`LatencySummary::merge`] — approximate, since
+    /// each backend reports its own window).
+    pub fn stats_line(&self) -> String {
+        let targets: Vec<(String, SocketAddr)> = {
+            let st = self.state.lock().unwrap();
+            st.backends.iter().filter(|(_, b)| b.alive).map(|(id, b)| (id.clone(), b.addr)).collect()
+        };
+        let owners: BTreeMap<String, Option<String>> = self.directory().into_iter().collect();
+        // net name → (backend id, parsed per-net segment)
+        let mut per_net: BTreeMap<String, (String, NetStat)> = BTreeMap::new();
+        for (id, addr) in &targets {
+            let Ok(reply) = self.remote_line(*addr, "STATS") else { continue };
+            for stat in parse_backend_stats(&reply) {
+                if owners.get(&stat.net).map(|o| o.as_deref() == Some(id.as_str())).unwrap_or(false) {
+                    per_net.insert(stat.net.clone(), (id.clone(), stat));
+                }
+            }
+        }
+        let (backends, alive, nets) = self.alive_counts();
+        let parts: Vec<LatencySummary> = per_net.values().map(|(_, s)| s.as_summary()).collect();
+        let merged = LatencySummary::merge(&parts);
+        let queries: u64 = per_net.values().map(|(_, s)| s.queries).sum();
+        let errors: u64 = per_net.values().map(|(_, s)| s.errors).sum();
+        let mut out = format!(
+            "STATS cluster uptime_ms={} backends={backends} alive={alive} nets={nets} queries={queries} errors={errors} p50_us={} p99_us={}",
+            self.started.elapsed().as_millis(),
+            merged.p50.as_micros(),
+            merged.p99.as_micros()
+        );
+        for (net, (id, s)) in &per_net {
+            out.push_str(&format!(
+                " | {net} backend={id} queries={} errors={} qps={:.2} p50_us={} p99_us={}",
+                s.queries, s.errors, s.qps, s.p50_us, s.p99_us
+            ));
+        }
+        for (net, owner) in &owners {
+            if owner.is_none() {
+                out.push_str(&format!(" | {net} backend=none orphaned=true"));
+            }
+        }
+        out
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One per-network segment parsed from a backend `STATS` line.
+struct NetStat {
+    net: String,
+    queries: u64,
+    errors: u64,
+    qps: f64,
+    p50_us: u64,
+    p99_us: u64,
+}
+
+impl NetStat {
+    /// Synthetic summary for cross-backend merging. Only count/p50/p99
+    /// survive the wire, so the other fields are filled from those —
+    /// good enough for a cluster-total headline, documented approximate.
+    fn as_summary(&self) -> LatencySummary {
+        let (p50, p99) = (Duration::from_micros(self.p50_us), Duration::from_micros(self.p99_us));
+        LatencySummary {
+            count: self.queries as usize,
+            total: p50 * (self.queries.min(u64::from(u32::MAX)) as u32),
+            mean: p50,
+            min: p50,
+            max: p99,
+            p50,
+            p95: p99,
+            p99,
+        }
+    }
+}
+
+/// Parse a fleet `STATS` reply (`STATS uptime_ms=… nets=N | <net>
+/// queries=… errors=… qps=… p50_us=… p99_us=… | …`) into per-net stats.
+/// Unknown fields are ignored so the formats can evolve independently.
+fn parse_backend_stats(reply: &str) -> Vec<NetStat> {
+    let mut out = Vec::new();
+    for segment in reply.split(" | ").skip(1) {
+        let mut tokens = segment.split_whitespace();
+        let Some(net) = tokens.next() else { continue };
+        let mut stat = NetStat { net: net.to_string(), queries: 0, errors: 0, qps: 0.0, p50_us: 0, p99_us: 0 };
+        for token in tokens {
+            let Some((key, value)) = token.split_once('=') else { continue };
+            match key {
+                "queries" => stat.queries = value.parse().unwrap_or(0),
+                "errors" => stat.errors = value.parse().unwrap_or(0),
+                "qps" => stat.qps = value.parse().unwrap_or(0.0),
+                "p50_us" => stat.p50_us = value.parse().unwrap_or(0),
+                "p99_us" => stat.p99_us = value.parse().unwrap_or(0),
+                _ => {}
+            }
+        }
+        out.push(stat);
+    }
+    out
+}
+
+// ---- the per-connection proxy session ----------------------------------
+
+struct Active {
+    net: String,
+    backend: String,
+    conn: BackendConn,
+}
+
+/// One client's front-tier session: routes control verbs to the cluster
+/// and pins data-plane verbs to the owning backend's connection (where
+/// the backend-side session holds the streamed-evidence state).
+pub struct ClusterSession {
+    cluster: Arc<Cluster>,
+    active: Option<Active>,
+}
+
+impl ClusterSession {
+    /// New session; nothing selected.
+    pub fn new(cluster: Arc<Cluster>) -> Self {
+        ClusterSession { cluster, active: None }
+    }
+
+    /// Network the session is pinned to, if any.
+    pub fn current_net(&self) -> Option<&str> {
+        self.active.as_ref().map(|a| a.net.as_str())
+    }
+
+    /// Handle one protocol line, producing one reply.
+    pub fn handle(&mut self, line: &str) -> SessionReply {
+        let line = line.trim();
+        if line.is_empty() {
+            return SessionReply::Line("ERR empty request".into());
+        }
+        let mut parts = line.splitn(2, ' ');
+        let verb = parts.next().unwrap_or("");
+        let rest = parts.next().unwrap_or("").trim();
+        let reply = match verb.to_ascii_uppercase().as_str() {
+            "QUIT" => return SessionReply::Quit,
+            "LOAD" => {
+                if rest.is_empty() {
+                    "ERR usage: LOAD <net>".into()
+                } else {
+                    self.cluster.load(rest)
+                }
+            }
+            "USE" => self.cmd_use(rest),
+            "NETS" => self.cluster.nets_line(),
+            "STATS" => self.cluster.stats_line(),
+            "PING" => self.cluster.ping_line(),
+            "TOPO" => self.cluster.topo_line(),
+            "OBSERVE" | "RETRACT" | "COMMIT" | "QUERY" => self.forward(line),
+            other => format!("ERR unknown verb {other:?}"),
+        };
+        SessionReply::Line(reply)
+    }
+
+    fn cmd_use(&mut self, name: &str) -> String {
+        if name.is_empty() {
+            return "ERR usage: USE <net>".into();
+        }
+        let (id, addr) = match self.cluster.lookup(name) {
+            Lookup::Owned { id, addr } => (id, addr),
+            Lookup::Orphaned => return format!("ERR network {name:?} has no live backend; retry once rerouted"),
+            Lookup::Unknown => return format!("ERR not loaded: {name:?} (LOAD it first)"),
+        };
+        // reuse the sticky conn only when staying on the same backend (its
+        // session's USE applies the evidence-reset semantics); resuming a
+        // *stale* session on another backend could leak old evidence
+        let same_backend = self.active.as_ref().map(|a| a.backend == id).unwrap_or(false);
+        if same_backend {
+            let mut active = self.active.take().expect("checked above");
+            return match self.forward_use(&mut active.conn, name) {
+                Ok(reply) => {
+                    if reply.starts_with("OK") {
+                        active.net = name.to_string();
+                    }
+                    // an ERR reply left the backend session untouched, so
+                    // the existing pin (and its evidence) survives — the
+                    // single-fleet failed-USE semantics
+                    self.active = Some(active);
+                    reply
+                }
+                Err(e) => {
+                    // the conn died and the old pin's state died with it
+                    self.cluster.report_failure(&id);
+                    format!("ERR backend {id} unreachable: {e}; retry USE once rerouted")
+                }
+            };
+        }
+        // different backend: build the new pin first and replace the old
+        // one only on success — a failed USE keeps the current selection
+        let mut conn = match self.cluster.connect(addr) {
+            Ok(conn) => conn,
+            Err(e) => {
+                self.cluster.report_failure(&id);
+                return format!("ERR backend {id} ({addr}) unreachable: {e}; retry USE once rerouted");
+            }
+        };
+        match self.forward_use(&mut conn, name) {
+            Ok(reply) => {
+                if reply.starts_with("OK") {
+                    self.active = Some(Active { net: name.to_string(), backend: id, conn });
+                }
+                reply
+            }
+            Err(e) => {
+                self.cluster.report_failure(&id);
+                format!("ERR backend {id} unreachable: {e}; retry USE once rerouted")
+            }
+        }
+    }
+
+    /// Forward `USE`, self-healing directory/backend drift: a backend
+    /// that answers "not loaded" for a network the directory assigns to
+    /// it (say it restarted empty behind its old address) gets a `LOAD`
+    /// of the recorded spec and one retry.
+    fn forward_use(&self, conn: &mut BackendConn, name: &str) -> std::io::Result<String> {
+        let reply = conn.request(&format!("USE {name}"))?;
+        if reply.starts_with("ERR not loaded") {
+            if let Some(spec) = self.cluster.spec_of(name) {
+                let load = conn.request(&format!("LOAD {spec}"))?;
+                if load.starts_with("OK") {
+                    return conn.request(&format!("USE {name}"));
+                }
+                return Ok(load);
+            }
+        }
+        Ok(reply)
+    }
+
+    /// Forward a data-plane verb over the pinned connection, after
+    /// re-checking that the pin still matches the directory — a moved or
+    /// unloaded network is a clean error, never a silent reroute that
+    /// would drop (or misapply) the backend session's evidence.
+    fn forward(&mut self, line: &str) -> String {
+        let Some(active) = self.active.as_mut() else {
+            return "ERR no network selected (USE <net> first)".into();
+        };
+        match self.cluster.confirm(&active.net, &active.backend) {
+            Confirm::Current => {}
+            Confirm::Moved => {
+                let net = active.net.clone();
+                self.active = None;
+                return format!("ERR network {net:?} moved to another backend (rebalance or failover); USE it again");
+            }
+            Confirm::Unloaded => {
+                let net = active.net.clone();
+                self.active = None;
+                return format!("ERR network {net:?} is no longer loaded anywhere; LOAD and USE it again");
+            }
+        }
+        match active.conn.request(line) {
+            Ok(reply) => reply,
+            Err(e) => {
+                let (net, id) = (active.net.clone(), active.backend.clone());
+                self.active = None;
+                // verified report: failover runs before we reply, so the
+                // client's very next USE normally lands on the new owner
+                self.cluster.report_failure(&id);
+                format!("ERR backend {id} for network {net:?} is unreachable ({e}); USE the network again once rerouted")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_cluster() -> Arc<Cluster> {
+        Cluster::start(ClusterConfig {
+            probe_interval: Duration::from_millis(50),
+            probe_timeout: Duration::from_millis(200),
+            connect_timeout: Duration::from_millis(200),
+            io_timeout: Duration::from_secs(1),
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_cluster_refuses_work_cleanly() {
+        let cluster = empty_cluster();
+        assert!(cluster.load("asia").starts_with("ERR no live backends"), "{}", cluster.load("asia"));
+        assert!(cluster.load("no-such-net").starts_with("ERR unknown network"));
+        assert_eq!(cluster.lookup("asia"), Lookup::Unknown);
+        assert_eq!(cluster.owner("asia"), None);
+        assert!(cluster.ping_line().contains("backends=0 alive=0 nets=0"));
+        assert!(cluster.stats_line().starts_with("STATS cluster"), "{}", cluster.stats_line());
+        assert_eq!(cluster.nets_line(), "OK nets=0");
+        assert_eq!(cluster.topo_line(), "OK backends=0");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn join_requires_a_live_backend() {
+        let cluster = empty_cluster();
+        // bind-then-drop: the port is real but nothing listens on it
+        let dead = {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            listener.local_addr().unwrap()
+        };
+        assert!(cluster.join(dead).is_err());
+        assert!(cluster.backends().is_empty());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn session_errors_without_a_selection() {
+        let cluster = empty_cluster();
+        let mut session = ClusterSession::new(Arc::clone(&cluster));
+        let line = |s: &mut ClusterSession, input: &str| match s.handle(input) {
+            SessionReply::Line(l) => l,
+            SessionReply::Quit => "QUIT".into(),
+        };
+        assert!(line(&mut session, "QUERY lung").starts_with("ERR no network selected"));
+        assert!(line(&mut session, "OBSERVE a=b").starts_with("ERR no network selected"));
+        assert!(line(&mut session, "USE asia").starts_with("ERR not loaded"));
+        assert!(line(&mut session, "USE").starts_with("ERR usage: USE"));
+        assert!(line(&mut session, "LOAD").starts_with("ERR usage: LOAD"));
+        assert!(line(&mut session, "FROB x").starts_with("ERR unknown verb"));
+        assert!(line(&mut session, "").starts_with("ERR empty request"));
+        assert!(line(&mut session, "PING").starts_with("OK pong"));
+        assert_eq!(session.current_net(), None);
+        assert_eq!(session.handle("quit"), SessionReply::Quit);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn backend_stats_lines_parse() {
+        let parsed = parse_backend_stats(
+            "STATS uptime_ms=12 nets=2 | asia queries=5 errors=1 qps=2.50 p50_us=120 p99_us=900 | cancer queries=0 errors=0 qps=0.00 p50_us=0 p99_us=0",
+        );
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].net, "asia");
+        assert_eq!(parsed[0].queries, 5);
+        assert_eq!(parsed[0].errors, 1);
+        assert_eq!(parsed[0].p99_us, 900);
+        assert_eq!(parsed[1].net, "cancer");
+        assert_eq!(parsed[1].queries, 0);
+        assert!(parse_backend_stats("STATS uptime_ms=1 nets=0").is_empty());
+    }
+}

@@ -1,0 +1,254 @@
+//! In-process cluster topology for tests, benches, and fault injection.
+//!
+//! [`ClusterHarness`] stands a whole cluster up inside one process — N
+//! backend [`FleetServer`]s on ephemeral ports, a front-tier
+//! [`ClusterServer`] routing to them — while every hop still crosses a
+//! real TCP socket, so the protocol surface under test is exactly what
+//! separate processes would exercise, without per-test process spawning.
+//! The one capability real processes can't offer a test: deterministic
+//! murder. [`ClusterHarness::kill_backend`] shuts a backend's server
+//! down in place (listener closed, connections dropped within the
+//! server's read-timeout tick), which is how the fault-injection suite
+//! in `rust/tests/cluster.rs` creates a mid-session backend death the
+//! front tier must detect, reroute around, and report cleanly.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::backend::BackendConn;
+use crate::cluster::front::Cluster;
+use crate::cluster::server::ClusterServer;
+use crate::cluster::ClusterConfig;
+use crate::fleet::{Fleet, FleetConfig, FleetServer};
+use crate::jt::evidence::Evidence;
+use crate::{Error, Result};
+
+struct BackendSlot {
+    id: String,
+    fleet: Arc<Fleet>,
+    server: FleetServer,
+}
+
+/// A self-contained cluster: backends + front tier, all on ephemeral
+/// ports. Dropping it tears everything down (front first, then prober,
+/// then backends, so nothing routes at a half-dead topology).
+pub struct ClusterHarness {
+    backend_cfg: FleetConfig,
+    backends: Vec<Option<BackendSlot>>,
+    cluster: Arc<Cluster>,
+    front: Option<ClusterServer>,
+}
+
+impl ClusterHarness {
+    /// Spawn `n_backends` fleet servers and a front tier over them.
+    /// `backend_cfg` is reused for late [`Self::add_backend`] joins.
+    pub fn start(n_backends: usize, backend_cfg: FleetConfig, cluster_cfg: ClusterConfig) -> Result<ClusterHarness> {
+        let cluster = Cluster::start(cluster_cfg)?;
+        let mut harness = ClusterHarness { backend_cfg, backends: Vec::new(), cluster, front: None };
+        for _ in 0..n_backends {
+            harness.add_backend()?;
+        }
+        harness.front = Some(ClusterServer::start(Arc::clone(&harness.cluster), "127.0.0.1:0")?);
+        Ok(harness)
+    }
+
+    /// Spawn one more backend and join it — the membership-change lever
+    /// (ownership of ~K/N networks hands off to the joiner). Returns the
+    /// assigned backend id.
+    pub fn add_backend(&mut self) -> Result<String> {
+        let fleet = Arc::new(Fleet::new(self.backend_cfg.clone()));
+        let server = FleetServer::start(Arc::clone(&fleet), "127.0.0.1:0")?;
+        let id = self.cluster.join(server.addr())?;
+        self.backends.push(Some(BackendSlot { id: id.clone(), fleet, server }));
+        Ok(id)
+    }
+
+    /// Kill a backend in place: its listener closes and its connections
+    /// drop. The cluster is *not* told — discovery (session report or
+    /// prober) is the behavior under test. Returns false for an unknown
+    /// or already-killed id.
+    pub fn kill_backend(&mut self, id: &str) -> bool {
+        for slot in self.backends.iter_mut() {
+            if slot.as_ref().map(|s| s.id == id).unwrap_or(false) {
+                let s = slot.take().expect("checked above");
+                s.server.shutdown();
+                drop(s.fleet);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// The front-tier router state (ownership, health, directory).
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    /// Address clients connect to.
+    pub fn front_addr(&self) -> SocketAddr {
+        self.front.as_ref().expect("front tier runs for the harness lifetime").addr()
+    }
+
+    /// Direct handle to a live backend's in-process fleet — the
+    /// full-precision oracle surface (wire replies round to 6 decimals;
+    /// consistency tests at 1e-9 need the actual `Posteriors`).
+    pub fn backend_fleet(&self, id: &str) -> Option<Arc<Fleet>> {
+        self.backends
+            .iter()
+            .flatten()
+            .find(|s| s.id == id)
+            .map(|s| Arc::clone(&s.fleet))
+    }
+
+    /// Ids of backends the harness still has running.
+    pub fn live_backend_ids(&self) -> Vec<String> {
+        self.backends.iter().flatten().map(|s| s.id.clone()).collect()
+    }
+
+    /// A TCP client session against the front tier, with bounded
+    /// timeouts so a routing bug is a test failure, not a hang.
+    pub fn client(&self) -> Result<ClusterClient> {
+        ClusterClient::connect(self.front_addr())
+    }
+}
+
+impl Drop for ClusterHarness {
+    fn drop(&mut self) {
+        if let Some(front) = self.front.take() {
+            front.shutdown();
+        }
+        self.cluster.shutdown();
+        for slot in self.backends.iter_mut() {
+            if let Some(s) = slot.take() {
+                s.server.shutdown();
+            }
+        }
+    }
+}
+
+/// Line-protocol client for driving a front tier (or any fleet server)
+/// from tests and benches.
+pub struct ClusterClient {
+    conn: BackendConn,
+}
+
+impl ClusterClient {
+    /// Connect with test-friendly bounds (1s connect, 10s per reply).
+    pub fn connect(addr: SocketAddr) -> Result<ClusterClient> {
+        let conn = BackendConn::connect(addr, Duration::from_secs(1), Duration::from_secs(10))
+            .map_err(Error::Io)?;
+        Ok(ClusterClient { conn })
+    }
+
+    /// One request line → one reply line.
+    pub fn request(&mut self, line: &str) -> Result<String> {
+        self.conn.request(line).map_err(Error::Io)
+    }
+}
+
+/// Render a `QUERY` protocol line for `target` under `ev` — the inline
+/// `var=state` grammar both the fleet and cluster servers accept.
+/// Shared by the consistency tests and the cluster bench.
+pub fn query_line(net: &crate::bn::network::Network, target: &str, ev: &Evidence) -> String {
+    let mut line = format!("QUERY {target}");
+    let mut first = true;
+    for v in 0..net.n() {
+        if let Some(s) = ev.get(v) {
+            line.push_str(if first { " |" } else { "" });
+            first = false;
+            line.push_str(&format!(" {}={}", net.vars[v].name, net.vars[v].states[s]));
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EngineConfig, EngineKind};
+
+    fn harness(n: usize) -> ClusterHarness {
+        ClusterHarness::start(
+            n,
+            FleetConfig {
+                engine: EngineKind::Seq,
+                engine_cfg: EngineConfig::default().with_threads(1),
+                shards: 1,
+                registry_capacity: 8,
+            },
+            ClusterConfig {
+                connect_timeout: Duration::from_millis(500),
+                io_timeout: Duration::from_secs(5),
+                probe_timeout: Duration::from_millis(500),
+                probe_interval: Duration::from_millis(100),
+                probe_backoff_max: Duration::from_secs(1),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn one_backend_roundtrip_through_the_front_tier() {
+        let h = harness(1);
+        let mut c = h.client().unwrap();
+        let r = c.request("LOAD asia").unwrap();
+        assert!(r.starts_with("OK loaded asia"), "{r}");
+        assert!(r.contains("backend=b0"), "{r}");
+        assert!(c.request("USE asia").unwrap().starts_with("OK using asia"));
+        assert!(c.request("QUERY lung | smoke=yes").unwrap().starts_with("OK yes=0.100000"));
+        assert_eq!(h.cluster().owner("asia"), Some("b0".to_string()));
+        let topo = c.request("TOPO").unwrap();
+        assert!(topo.contains("b0[addr="), "{topo}");
+        assert!(topo.contains("nets=1"), "{topo}");
+    }
+
+    #[test]
+    fn streamed_evidence_lives_on_the_backend_session() {
+        let h = harness(2);
+        let mut c = h.client().unwrap();
+        c.request("LOAD asia").unwrap();
+        assert!(c.request("USE asia").unwrap().starts_with("OK using asia"));
+        assert!(c.request("OBSERVE smoke=yes").unwrap().starts_with("OK staged 1"));
+        assert!(c.request("COMMIT").unwrap().starts_with("OK committed evidence=1"));
+        assert!(c.request("QUERY lung").unwrap().starts_with("OK yes=0.100000"));
+        // a second front session shares the net but not the evidence
+        let mut c2 = h.client().unwrap();
+        assert!(c2.request("USE asia").unwrap().starts_with("OK using asia"));
+        assert!(c2.request("QUERY lung").unwrap().starts_with("OK yes=0.055000"));
+    }
+
+    #[test]
+    fn graceful_leave_hands_networks_off_and_forgets_the_backend() {
+        let h = harness(2);
+        let mut c = h.client().unwrap();
+        assert!(c.request("LOAD asia").unwrap().starts_with("OK loaded asia"));
+        assert!(c.request("LOAD cancer").unwrap().starts_with("OK loaded cancer"));
+        let leaver = h.cluster().owner("asia").unwrap();
+        let stayer = h.live_backend_ids().into_iter().find(|id| *id != leaver).unwrap();
+
+        h.cluster().leave(&leaver).unwrap();
+        // both nets now live on the stayer, with the hand-off completed:
+        // resident there, evicted from the leaver's (still running) fleet
+        for net in ["asia", "cancer"] {
+            assert_eq!(h.cluster().owner(net).as_deref(), Some(stayer.as_str()), "{net}");
+            assert!(h.backend_fleet(&stayer).unwrap().tree(net).is_some(), "{net} not on {stayer}");
+        }
+        assert!(h.backend_fleet(&leaver).unwrap().tree("asia").is_none(), "asia still resident on {leaver}");
+        // the leaver is forgotten entirely
+        assert_eq!(h.cluster().backends().len(), 1);
+        assert!(h.cluster().leave(&leaver).is_err(), "double leave must error");
+        // and service continues through the front tier
+        assert!(c.request("USE asia").unwrap().starts_with("OK using asia"));
+        assert!(c.request("QUERY lung | smoke=yes").unwrap().starts_with("OK yes=0.100000"));
+    }
+
+    #[test]
+    fn query_line_renders_inline_evidence() {
+        let net = crate::bn::embedded::asia();
+        let ev = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+        assert_eq!(query_line(&net, "lung", &ev), "QUERY lung | smoke=yes");
+        assert_eq!(query_line(&net, "lung", &Evidence::none()), "QUERY lung");
+    }
+}

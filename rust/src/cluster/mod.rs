@@ -1,0 +1,87 @@
+//! The cross-process cluster tier — many fleet *processes*, one front
+//! router.
+//!
+//! [`crate::fleet`] scales one process to many networks; this module
+//! scales past the process boundary: a front-tier [`front::Cluster`] owns
+//! a deterministic consistent-hash [`ring::Ring`] mapping network names
+//! to N backend fleet processes, proxies the existing line protocol to
+//! the owning backend over TCP ([`backend::BackendConn`]), and manages
+//! membership — a join or graceful leave re-homes networks (`LOAD` on the
+//! new owner, `EVICT` on the old), a health prober with exponential
+//! backoff marks dead backends and reroutes their networks to survivors,
+//! and cluster-wide `STATS` aggregates every backend's snapshot.
+//!
+//! ```text
+//!            clients (same line protocol as a single fleet)
+//!                │
+//!        ┌───────▼────────┐   consistent-hash ring: net name → backend
+//!        │  ClusterServer │   directory: net → {spec, owner}
+//!        │   (front tier) │   prober: PING w/ backoff, failover
+//!        └──┬─────────┬───┘
+//!     TCP   │         │   TCP (LOAD/USE/QUERY/…/EVICT/PING)
+//!    ┌──────▼───┐ ┌───▼──────┐
+//!    │ fleet b0 │ │ fleet b1 │  … backend processes (fastbn serve --fleet)
+//!    └──────────┘ └──────────┘
+//! ```
+//!
+//! Front-tier verbs beyond the fleet protocol: `PING` (front liveness +
+//! topology counts) and `TOPO` (per-backend health and ownership).
+//! Sessions are *sticky*: `USE` pins the session to the owning backend's
+//! connection so streamed `OBSERVE`/`COMMIT` state lives where the tree
+//! lives; when ownership moves (rebalance or failover) the next verb gets
+//! a clean `ERR … USE it again` instead of silently rerouting — stale
+//! evidence must never be misapplied to a freshly compiled tree.
+//!
+//! [`harness::ClusterHarness`] spins a whole topology up in-process (real
+//! TCP, ephemeral ports) and can kill backends mid-session — the
+//! fault-injection surface `rust/tests/cluster.rs` drives.
+
+pub mod backend;
+pub mod front;
+pub mod harness;
+pub mod ring;
+pub mod server;
+
+use std::time::Duration;
+
+pub use backend::BackendConn;
+pub use front::{BackendStatus, Cluster, ClusterSession, Confirm, Lookup};
+pub use harness::{ClusterClient, ClusterHarness};
+pub use ring::Ring;
+pub use server::ClusterServer;
+
+/// Front-tier construction parameters.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Virtual points per backend on the consistent-hash ring.
+    pub replicas: usize,
+    /// TCP connect bound for every backend socket.
+    pub connect_timeout: Duration,
+    /// Read/write bound on data-plane and control-plane requests
+    /// (covers a backend-side `LOAD` compile).
+    pub io_timeout: Duration,
+    /// Read bound on health probes — short, so a wedged backend stalls
+    /// the prober for at most this long.
+    pub probe_timeout: Duration,
+    /// Health-probe cadence for live backends.
+    pub probe_interval: Duration,
+    /// Probe backoff cap for dead backends (doubles from
+    /// `probe_interval` up to this).
+    pub probe_backoff_max: Duration,
+    /// Consecutive failed probes before a live backend is marked dead.
+    pub fail_threshold: u32,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 64,
+            connect_timeout: Duration::from_secs(1),
+            io_timeout: Duration::from_secs(10),
+            probe_timeout: Duration::from_secs(1),
+            probe_interval: Duration::from_secs(1),
+            probe_backoff_max: Duration::from_secs(8),
+            fail_threshold: 2,
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Deterministic consistent-hash ring: network name → backend id.
+//!
+//! Placement must be reproducible across processes, hosts, and runs — a
+//! restarted front tier has to re-derive the same ownership map the old
+//! one advertised, and two front tiers (a future multi-router deployment)
+//! must agree without talking. So the hash is fixed rather than seeded:
+//! FNV-1a (64-bit) over the key bytes, then a murmur3-style avalanche
+//! finalizer. Plain FNV clusters badly on short, similar strings (all of
+//! `net-000 … net-199` can land on one member); the finalizer spreads the
+//! high bits the `BTreeSet` ordering routes on.
+//!
+//! Each member contributes `replicas` virtual points so load splits
+//! evenly and membership change moves only the keys adjacent to the
+//! joining/leaving member's points — the minimal-movement property the
+//! unit tests pin down with concrete margins.
+
+use std::collections::BTreeSet;
+
+/// Fixed 64-bit hash: FNV-1a over the bytes, then a murmur3 `fmix64`
+/// avalanche. Deterministic across processes and runs by construction
+/// (no per-process seeding à la `RandomState`).
+pub fn hash64(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    h ^= h >> 33;
+    h
+}
+
+/// Consistent-hash ring over backend ids.
+///
+/// A key is owned by the member whose virtual point is the first at or
+/// clockwise after the key's hash (wrapping). Points are `(hash, id)`
+/// pairs, so a (vanishingly unlikely) point collision between two members
+/// resolves by id order — ownership never depends on insertion order.
+pub struct Ring {
+    replicas: usize,
+    points: BTreeSet<(u64, String)>,
+    members: BTreeSet<String>,
+}
+
+impl Ring {
+    /// Empty ring; each member will contribute `replicas` points
+    /// (clamped to ≥ 1).
+    pub fn new(replicas: usize) -> Self {
+        Ring { replicas: replicas.max(1), points: BTreeSet::new(), members: BTreeSet::new() }
+    }
+
+    /// Add a member (idempotent).
+    pub fn add(&mut self, id: &str) {
+        if !self.members.insert(id.to_string()) {
+            return;
+        }
+        for k in 0..self.replicas {
+            self.points.insert((hash64(&format!("{id}#{k}")), id.to_string()));
+        }
+    }
+
+    /// Remove a member (idempotent).
+    pub fn remove(&mut self, id: &str) {
+        if !self.members.remove(id) {
+            return;
+        }
+        for k in 0..self.replicas {
+            self.points.remove(&(hash64(&format!("{id}#{k}")), id.to_string()));
+        }
+    }
+
+    /// The member owning `key`, or `None` on an empty ring.
+    pub fn owner(&self, key: &str) -> Option<String> {
+        let h = hash64(key);
+        self.points
+            .range((h, String::new())..)
+            .next()
+            .or_else(|| self.points.iter().next())
+            .map(|(_, id)| id.clone())
+    }
+
+    /// Current members, sorted.
+    pub fn members(&self) -> Vec<String> {
+        self.members.iter().cloned().collect()
+    }
+
+    /// Whether `id` is a member.
+    pub fn contains(&self, id: &str) -> bool {
+        self.members.contains(id)
+    }
+
+    /// Number of members.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// True with no members.
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("net-{i:03}")).collect()
+    }
+
+    fn ring_of(ids: &[&str]) -> Ring {
+        let mut r = Ring::new(64);
+        for id in ids {
+            r.add(id);
+        }
+        r
+    }
+
+    #[test]
+    fn hash_is_pinned_across_runs_and_processes() {
+        // literal expected values: any accidental seeding (RandomState,
+        // time, pid) or a drive-by change to the mixing constants fails
+        // here, not in a cross-host ownership disagreement
+        assert_eq!(hash64("asia"), 0x9c73_0338_2b18_cc74);
+        assert_eq!(hash64("b0#0"), 0x795f_e381_668b_9d96);
+        assert_eq!(hash64("asia"), hash64("asia"));
+        assert_ne!(hash64("b0"), hash64("b1"));
+    }
+
+    #[test]
+    fn ownership_is_insertion_order_independent() {
+        let ab = ring_of(&["b0", "b1", "b2"]);
+        let ba = ring_of(&["b2", "b0", "b1"]);
+        for k in keys(100) {
+            assert_eq!(ab.owner(&k), ba.owner(&k), "{k}");
+        }
+    }
+
+    #[test]
+    fn add_is_minimal_movement_with_a_concrete_margin() {
+        const K: usize = 200;
+        let before = ring_of(&["b0", "b1", "b2"]);
+        let after = ring_of(&["b0", "b1", "b2", "b3"]);
+        let mut moved = 0usize;
+        for k in keys(K) {
+            let (was, is) = (before.owner(&k).unwrap(), after.owner(&k).unwrap());
+            if was != is {
+                // movement only ever targets the new member — keys never
+                // shuffle between survivors (the exact ring property)
+                assert_eq!(is, "b3", "{k} moved {was} -> {is}");
+                moved += 1;
+            }
+        }
+        // expected movement is K/N = 50 of 200 keys; at 64 points per
+        // member the concentration is good enough for a 1.75x margin
+        // (the fixed hash makes this exact: 38 keys move)
+        assert!(moved >= 1, "a K/N-sized join moved nothing");
+        assert!(moved <= K / 4 * 7 / 4, "moved {moved} of {K}, want ≤ {}", K / 4 * 7 / 4);
+    }
+
+    #[test]
+    fn remove_moves_exactly_the_removed_members_keys() {
+        let before = ring_of(&["b0", "b1", "b2"]);
+        let after = ring_of(&["b0", "b2"]);
+        for k in keys(200) {
+            let was = before.owner(&k).unwrap();
+            let is = after.owner(&k).unwrap();
+            if was == "b1" {
+                assert_ne!(is, "b1");
+            } else {
+                assert_eq!(was, is, "{k} moved {was} -> {is} though b1 never owned it");
+            }
+        }
+    }
+
+    #[test]
+    fn load_is_roughly_balanced() {
+        let ring = ring_of(&["b0", "b1", "b2", "b3"]);
+        let mut counts = std::collections::BTreeMap::new();
+        for k in keys(200) {
+            *counts.entry(ring.owner(&k).unwrap()).or_insert(0usize) += 1;
+        }
+        // fixed hash → fixed split (56/59/47/38 at 64 replicas); assert a
+        // loose band so the margin survives replica-count tuning
+        for (id, n) in &counts {
+            assert!((10..=100).contains(n), "{id} owns {n} of 200");
+        }
+        assert_eq!(counts.len(), 4);
+    }
+
+    #[test]
+    fn membership_edge_cases() {
+        let mut r = Ring::new(0); // clamps to 1 replica
+        assert!(r.is_empty());
+        assert_eq!(r.owner("asia"), None);
+        r.add("b0");
+        r.add("b0"); // idempotent
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.owner("anything"), Some("b0".to_string()));
+        r.remove("b1"); // not a member: no-op
+        r.remove("b0");
+        assert!(r.is_empty());
+        assert_eq!(r.owner("asia"), None);
+        assert_eq!(ring_of(&["b0", "b1"]).members(), vec!["b0".to_string(), "b1".to_string()]);
+        assert!(ring_of(&["b0"]).contains("b0"));
+    }
+}

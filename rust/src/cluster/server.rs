@@ -1,0 +1,60 @@
+//! TCP front end for a [`Cluster`] (`fastbn cluster …`).
+//!
+//! The accept loop, per-connection threads, reaping, and shutdown are the
+//! shared [`LineServer`] scaffolding — identical behavior to the fleet
+//! server (slow clients, gauges, drop semantics); each connection drives
+//! a [`ClusterSession`] that proxies to backends instead of an
+//! in-process fleet.
+
+use std::sync::Arc;
+
+use crate::cluster::front::{Cluster, ClusterSession};
+use crate::coordinator::server::LineServer;
+use crate::fleet::SessionReply;
+use crate::Result;
+
+/// Server handle; dropping it stops accepting and joins every thread.
+pub struct ClusterServer {
+    inner: LineServer,
+    cluster: Arc<Cluster>,
+}
+
+impl ClusterServer {
+    /// Start serving `cluster` on `bind` (port 0 for an ephemeral port).
+    pub fn start(cluster: Arc<Cluster>, bind: &str) -> Result<ClusterServer> {
+        let session_cluster = Arc::clone(&cluster);
+        let inner = LineServer::start(bind, "cluster-accept", move || {
+            let mut session = ClusterSession::new(Arc::clone(&session_cluster));
+            Box::new(move |line: &str| match session.handle(line) {
+                SessionReply::Line(reply) => Some(reply),
+                SessionReply::Quit => None,
+            })
+        })?;
+        Ok(ClusterServer { inner, cluster })
+    }
+
+    /// Bound address (useful with port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.inner.addr()
+    }
+
+    /// The cluster being served.
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    /// Live connection count.
+    pub fn active_connections(&self) -> usize {
+        self.inner.active_connections()
+    }
+
+    /// Finished connection threads joined by the accept loop so far.
+    pub fn reaped_connections(&self) -> u64 {
+        self.inner.reaped_connections()
+    }
+
+    /// Stop accepting and wait for every connection thread to end.
+    pub fn shutdown(mut self) {
+        self.inner.stop_and_join();
+    }
+}

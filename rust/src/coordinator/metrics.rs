@@ -43,6 +43,35 @@ impl LatencySummary {
         }
     }
 
+    /// Count-weighted aggregate of summaries from independent sources —
+    /// how the cluster front tier folds per-backend `STATS` snapshots
+    /// into one headline. Counts, totals, min, and max combine exactly;
+    /// the percentiles are count-weighted means of the parts'
+    /// percentiles, an *approximation* (exact percentile merging needs
+    /// the raw samples, which never cross the wire). Zero-count parts
+    /// contribute nothing; an all-empty input merges to the zero summary.
+    pub fn merge(parts: &[LatencySummary]) -> LatencySummary {
+        let count: usize = parts.iter().map(|p| p.count).sum();
+        if count == 0 {
+            return LatencySummary::from_samples(&[]);
+        }
+        let weighted = |pick: fn(&LatencySummary) -> Duration| -> Duration {
+            let nanos: u128 = parts.iter().map(|p| pick(p).as_nanos() * p.count as u128).sum();
+            nanos_to_duration(nanos / count as u128)
+        };
+        let total = parts.iter().map(|p| p.total).sum::<Duration>();
+        LatencySummary {
+            count,
+            total,
+            mean: nanos_to_duration(total.as_nanos() / count as u128),
+            min: parts.iter().filter(|p| p.count > 0).map(|p| p.min).min().unwrap_or(Duration::ZERO),
+            max: parts.iter().filter(|p| p.count > 0).map(|p| p.max).max().unwrap_or(Duration::ZERO),
+            p50: weighted(|p| p.p50),
+            p95: weighted(|p| p.p95),
+            p99: weighted(|p| p.p99),
+        }
+    }
+
     /// Cases per second given the *wall* duration of the whole batch
     /// (which differs from `total` when replicas run concurrently).
     pub fn throughput(&self, wall: Duration) -> f64 {
@@ -51,6 +80,12 @@ impl LatencySummary {
         }
         self.count as f64 / wall.as_secs_f64()
     }
+}
+
+/// Saturating u128-nanoseconds → `Duration` (merge arithmetic works in
+/// nanos to avoid `Duration` mul/div overflow on large counts).
+fn nanos_to_duration(nanos: u128) -> Duration {
+    Duration::from_nanos(u64::try_from(nanos).unwrap_or(u64::MAX))
 }
 
 impl std::fmt::Display for LatencySummary {
@@ -144,6 +179,26 @@ mod tests {
         let s = LatencySummary::from_samples(&[Duration::from_millis(5)]);
         let text = format!("{s}");
         assert!(text.contains("n=1"));
+    }
+
+    #[test]
+    fn merge_is_count_weighted() {
+        let a = LatencySummary::from_samples(&[Duration::from_millis(10); 30]);
+        let b = LatencySummary::from_samples(&[Duration::from_millis(40); 10]);
+        let m = LatencySummary::merge(&[a.clone(), b.clone()]);
+        assert_eq!(m.count, 40);
+        assert_eq!(m.min, Duration::from_millis(10));
+        assert_eq!(m.max, Duration::from_millis(40));
+        // (10ms·30 + 40ms·10) / 40 = 17.5ms, exact for constant parts
+        assert_eq!(m.p50, Duration::from_micros(17_500));
+        assert_eq!(m.p99, Duration::from_micros(17_500));
+        assert_eq!(m.mean, Duration::from_micros(17_500));
+        assert_eq!(m.total, Duration::from_millis(700));
+        // empty parts are inert; merging one summary is the identity
+        assert_eq!(LatencySummary::merge(&[a.clone(), LatencySummary::from_samples(&[])]), a);
+        assert_eq!(LatencySummary::merge(&[b.clone()]), b);
+        assert_eq!(LatencySummary::merge(&[]).count, 0);
+        assert_eq!(LatencySummary::merge(&[]).p99, Duration::ZERO);
     }
 
     #[test]

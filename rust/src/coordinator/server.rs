@@ -16,7 +16,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::engine::{EngineConfig, EngineKind};
@@ -27,44 +27,35 @@ use crate::Result;
 
 /// Server handle; dropping it stops accepting new connections.
 pub struct Server {
-    addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    inner: LineServer,
     queries: Arc<AtomicU64>,
-    reaped: Arc<AtomicU64>,
 }
 
 impl Server {
     /// Start serving on `bind` (use port 0 for an ephemeral port).
+    ///
+    /// Each connection builds its engine and tree state *inside* its
+    /// connection thread (engines are not `Send`); the accept loop,
+    /// reaping, and shutdown are the shared [`LineServer`] scaffolding.
     pub fn start(jt: Arc<JunctionTree>, engine: EngineKind, cfg: EngineConfig, bind: &str) -> Result<Server> {
-        let listener = TcpListener::bind(bind)?;
-        let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
         let queries = Arc::new(AtomicU64::new(0));
-
-        let reaped = Arc::new(AtomicU64::new(0));
-        let accept_stop = Arc::clone(&stop);
-        let accept_queries = Arc::clone(&queries);
-        let accept_reaped = Arc::clone(&reaped);
-        let accept_thread = std::thread::Builder::new().name("fastbn-accept".into()).spawn(move || {
-            run_accept_loop(&listener, &accept_stop, &accept_reaped, |stream| {
-                let jt = Arc::clone(&jt);
-                let cfg = cfg.clone();
-                let stop = Arc::clone(&accept_stop);
-                let queries = Arc::clone(&accept_queries);
-                std::thread::spawn(move || {
-                    let _ = handle_connection(stream, jt, engine, cfg, stop, queries);
-                })
-            });
+        let factory_queries = Arc::clone(&queries);
+        let inner = LineServer::start(bind, "fastbn-accept", move || {
+            let jt = Arc::clone(&jt);
+            let queries = Arc::clone(&factory_queries);
+            let mut engine = engine.build(Arc::clone(&jt), &cfg);
+            let mut state = TreeState::fresh(&jt);
+            Box::new(move |line: &str| match respond(line, &jt, engine.as_mut(), &mut state, &queries) {
+                Reply::Line(reply) => Some(reply),
+                Reply::Quit => None,
+            })
         })?;
-
-        Ok(Server { addr, stop, accept_thread: Some(accept_thread), queries, reaped })
+        Ok(Server { inner, queries })
     }
 
     /// Bound address (useful with port 0).
     pub fn addr(&self) -> std::net::SocketAddr {
-        self.addr
+        self.inner.addr()
     }
 
     /// Number of queries served so far.
@@ -74,20 +65,89 @@ impl Server {
 
     /// Finished connection threads joined by the accept loop so far.
     pub fn reaped_connections(&self) -> u64 {
-        self.reaped.load(Ordering::Relaxed)
+        self.inner.reaped_connections()
     }
 
     /// Stop accepting and wait for the accept loop to end.
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
+        self.inner.stop_and_join();
     }
 }
 
-impl Drop for Server {
+/// Scaffolding shared by the session servers (fleet, cluster): a bound
+/// listener, the nonblocking accept loop on its own thread, one handler
+/// thread per connection running [`serve_lines`] over a responder that
+/// `make_responder` builds *inside* the connection thread (so responders
+/// need not be `Send`), plus live/reaped connection gauges. The public
+/// server types wrap this and add their domain handle (fleet, cluster).
+pub(crate) struct LineServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+    reaped: Arc<AtomicU64>,
+}
+
+/// Decrements the live-connection gauge however the handler exits.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
     fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl LineServer {
+    /// Bind `bind` and serve until dropped. Each accepted connection gets
+    /// its own responder (`None` from the responder ends that session).
+    pub(crate) fn start<F>(bind: &str, thread_name: &str, make_responder: F) -> crate::Result<LineServer>
+    where
+        F: Fn() -> Box<dyn FnMut(&str) -> Option<String>> + Clone + Send + 'static,
+    {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let active = Arc::new(AtomicUsize::new(0));
+        let reaped = Arc::new(AtomicU64::new(0));
+
+        let accept_stop = Arc::clone(&stop);
+        let accept_active = Arc::clone(&active);
+        let accept_reaped = Arc::clone(&reaped);
+        let accept_thread = std::thread::Builder::new().name(thread_name.to_string()).spawn(move || {
+            run_accept_loop(&listener, &accept_stop, &accept_reaped, |stream| {
+                let make_responder = make_responder.clone();
+                let stop = Arc::clone(&accept_stop);
+                accept_active.fetch_add(1, Ordering::Relaxed);
+                let guard = ConnGuard(Arc::clone(&accept_active));
+                std::thread::spawn(move || {
+                    let _guard = guard;
+                    let mut respond = make_responder();
+                    let _ = serve_lines(stream, &stop, |line| respond(line));
+                })
+            });
+        })?;
+
+        Ok(LineServer { addr, stop, accept_thread: Some(accept_thread), active, reaped })
+    }
+
+    /// Bound address (useful with port 0).
+    pub(crate) fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Live connection count.
+    pub(crate) fn active_connections(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    /// Finished connection threads joined by the accept loop so far.
+    pub(crate) fn reaped_connections(&self) -> u64 {
+        self.reaped.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and wait for every thread to end (idempotent).
+    pub(crate) fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
@@ -95,11 +155,18 @@ impl Drop for Server {
     }
 }
 
-/// Nonblocking accept loop shared by the single-tree server and the fleet
-/// server: `spawn_conn` starts a handler thread per connection; finished
-/// handler threads are reaped (joined, counted in `reaped`) on every tick
-/// so the handle list stays proportional to *live* connections. Returns
-/// once `stop` is set (or the listener dies), after joining every handler.
+impl Drop for LineServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Nonblocking accept loop shared by the single-tree server and
+/// [`LineServer`]: `spawn_conn` starts a handler thread per connection;
+/// finished handler threads are reaped (joined, counted in `reaped`) on
+/// every tick so the handle list stays proportional to *live*
+/// connections. Returns once `stop` is set (or the listener dies), after
+/// joining every handler.
 pub(crate) fn run_accept_loop(
     listener: &TcpListener,
     stop: &AtomicBool,
@@ -165,24 +232,6 @@ pub(crate) fn serve_lines(
         writer.write_all(b"\n")?;
         writer.flush()?;
     }
-}
-
-fn handle_connection(
-    stream: TcpStream,
-    jt: Arc<JunctionTree>,
-    engine_kind: EngineKind,
-    cfg: EngineConfig,
-    stop: Arc<AtomicBool>,
-    queries: Arc<AtomicU64>,
-) -> Result<()> {
-    let mut engine = engine_kind.build(Arc::clone(&jt), &cfg);
-    let mut state = TreeState::fresh(&jt);
-    serve_lines(stream, &stop, move |line| {
-        match respond(line, &jt, engine.as_mut(), &mut state, &queries) {
-            Reply::Line(s) => Some(s),
-            Reply::Quit => None,
-        }
-    })
 }
 
 enum Reply {

@@ -19,6 +19,8 @@
 //! COMMIT                  apply staged deltas to the session's evidence
 //! QUERY <var> [| ev ...]  posterior under committed (+ inline) evidence
 //! STATS                   fleet-wide per-network counters and latency
+//! PING                    liveness probe (the cluster tier's health check)
+//! EVICT <net>             drop a network (cluster registry hand-off)
 //! QUIT                    end the session
 //! ```
 //!
@@ -120,6 +122,22 @@ impl Fleet {
         self.registry.get(name)
     }
 
+    /// Drop a network: registry entry, shard group, and metrics, under
+    /// the same serialization as [`Fleet::load`]. Returns whether it was
+    /// resident. This is the cluster hand-off path (`EVICT <net>`): when
+    /// ownership moves to another backend process, the old owner frees
+    /// the tree; sessions still pinned to it get the usual clean
+    /// "evicted" error on their next verb.
+    pub fn evict(&self, name: &str) -> bool {
+        let _serialized = self.load_lock.lock().unwrap();
+        let existed = self.registry.remove(name);
+        if existed {
+            self.router.remove(name);
+            self.metrics.remove(name);
+        }
+        existed
+    }
+
     /// Run one query against a loaded network, recording metrics.
     pub fn query(&self, name: &str, ev: Evidence) -> Result<Posteriors> {
         // serving traffic refreshes the LRU stamp: a hot network must not
@@ -199,5 +217,21 @@ mod tests {
     fn unknown_network_query_errors() {
         let fleet = small_fleet();
         assert!(fleet.query("asia", Evidence::none()).is_err());
+    }
+
+    #[test]
+    fn evict_frees_registry_router_and_metrics_together() {
+        let fleet = small_fleet();
+        fleet.load("asia").unwrap();
+        fleet.query("asia", Evidence::none()).unwrap();
+        assert!(fleet.evict("asia"));
+        assert!(fleet.tree("asia").is_none());
+        assert!(fleet.router().names().is_empty());
+        assert!(fleet.stats_line().contains("nets=0"), "{}", fleet.stats_line());
+        assert!(fleet.query("asia", Evidence::none()).is_err());
+        assert!(!fleet.evict("asia")); // idempotent
+        // an evicted network loads back cleanly
+        fleet.load("asia").unwrap();
+        assert!(fleet.query("asia", Evidence::none()).is_ok());
     }
 }

@@ -169,6 +169,19 @@ impl Registry {
         self.lookup(name).map(|(jt, _)| jt)
     }
 
+    /// Drop a resident network (and any path aliases onto it). Returns
+    /// whether it was resident. The cluster tier's `EVICT` hand-off verb
+    /// lands here: after ownership moves to another backend process, the
+    /// old owner frees the tree instead of serving a stale copy.
+    pub fn remove(&self, name: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let existed = inner.nets.remove(name).is_some();
+        if existed {
+            inner.aliases.retain(|_, target| *target != name);
+        }
+        existed
+    }
+
     /// Names of resident networks, sorted.
     pub fn names(&self) -> Vec<String> {
         self.inner.lock().unwrap().nets.keys().cloned().collect()
@@ -247,6 +260,21 @@ mod tests {
         assert!(Arc::ptr_eq(&a.jt, &b.jt));
         assert!(!reg.load("asia").unwrap().freshly_compiled);
         assert_eq!(reg.len(), 1);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn remove_drops_the_tree_and_its_aliases() {
+        let path = std::env::temp_dir().join(format!("fastbn-registry-rm-{}.bif", std::process::id()));
+        std::fs::write(&path, crate::bn::bif::write(&crate::bn::embedded::asia())).unwrap();
+        let reg = Registry::new(4);
+        let spec = path.to_str().unwrap();
+        reg.load(spec).unwrap();
+        assert!(reg.remove("asia"));
+        assert!(reg.get("asia").is_none());
+        assert!(!reg.remove("asia")); // idempotent: already gone
+        // the alias died with the entry: reloading by path recompiles
+        assert!(reg.load(spec).unwrap().freshly_compiled);
         let _ = std::fs::remove_file(path);
     }
 

@@ -3,71 +3,41 @@
 //! Connection threads are thin: they parse lines into a
 //! [`crate::fleet::session::Session`] and write replies; all inference
 //! runs on the router's shard workers, so a thousand idle connections cost
-//! a thousand parked threads, not a thousand engines. Finished connection
-//! threads are reaped (joined) in the accept loop — the handle list stays
-//! proportional to *live* connections, not connections ever accepted.
+//! a thousand parked threads, not a thousand engines. The accept loop,
+//! per-connection threads, reaping, and shutdown live in the shared
+//! [`crate::coordinator::server::LineServer`] scaffolding (the cluster
+//! front tier serves through the same one).
 
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::coordinator::server::{run_accept_loop, serve_lines};
+use crate::coordinator::server::LineServer;
 use crate::fleet::session::{Session, SessionReply};
 use crate::fleet::Fleet;
 use crate::Result;
 
 /// Server handle; dropping it stops accepting and joins every thread.
 pub struct FleetServer {
-    addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
-    active: Arc<AtomicUsize>,
-    reaped: Arc<AtomicU64>,
+    inner: LineServer,
     fleet: Arc<Fleet>,
-}
-
-/// Decrements the live-connection gauge however the handler exits.
-struct ConnGuard(Arc<AtomicUsize>);
-
-impl Drop for ConnGuard {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::Relaxed);
-    }
 }
 
 impl FleetServer {
     /// Start serving `fleet` on `bind` (use port 0 for an ephemeral port).
     pub fn start(fleet: Arc<Fleet>, bind: &str) -> Result<FleetServer> {
-        let listener = TcpListener::bind(bind)?;
-        let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let active = Arc::new(AtomicUsize::new(0));
-        let reaped = Arc::new(AtomicU64::new(0));
-
-        let accept_stop = Arc::clone(&stop);
-        let accept_active = Arc::clone(&active);
-        let accept_reaped = Arc::clone(&reaped);
-        let accept_fleet = Arc::clone(&fleet);
-        let accept_thread = std::thread::Builder::new().name("fleet-accept".into()).spawn(move || {
-            run_accept_loop(&listener, &accept_stop, &accept_reaped, |stream| {
-                let fleet = Arc::clone(&accept_fleet);
-                let stop = Arc::clone(&accept_stop);
-                accept_active.fetch_add(1, Ordering::Relaxed);
-                let guard = ConnGuard(Arc::clone(&accept_active));
-                std::thread::spawn(move || {
-                    let _guard = guard;
-                    let _ = handle_connection(stream, fleet, stop);
-                })
-            });
+        let session_fleet = Arc::clone(&fleet);
+        let inner = LineServer::start(bind, "fleet-accept", move || {
+            let mut session = Session::new(Arc::clone(&session_fleet));
+            Box::new(move |line: &str| match session.handle(line) {
+                SessionReply::Line(reply) => Some(reply),
+                SessionReply::Quit => None,
+            })
         })?;
-
-        Ok(FleetServer { addr, stop, accept_thread: Some(accept_thread), active, reaped, fleet })
+        Ok(FleetServer { inner, fleet })
     }
 
     /// Bound address (useful with port 0).
     pub fn addr(&self) -> std::net::SocketAddr {
-        self.addr
+        self.inner.addr()
     }
 
     /// The fleet being served.
@@ -77,39 +47,18 @@ impl FleetServer {
 
     /// Live connection count.
     pub fn active_connections(&self) -> usize {
-        self.active.load(Ordering::Relaxed)
+        self.inner.active_connections()
     }
 
     /// Finished connection threads joined by the accept loop so far.
     pub fn reaped_connections(&self) -> u64 {
-        self.reaped.load(Ordering::Relaxed)
+        self.inner.reaped_connections()
     }
 
     /// Stop accepting and wait for every thread to end.
     pub fn shutdown(mut self) {
-        self.stop_and_join();
+        self.inner.stop_and_join();
     }
-
-    fn stop_and_join(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
-    }
-}
-
-impl Drop for FleetServer {
-    fn drop(&mut self) {
-        self.stop_and_join();
-    }
-}
-
-fn handle_connection(stream: TcpStream, fleet: Arc<Fleet>, stop: Arc<AtomicBool>) -> Result<()> {
-    let mut session = Session::new(fleet);
-    serve_lines(stream, &stop, move |line| match session.handle(line) {
-        SessionReply::Line(s) => Some(s),
-        SessionReply::Quit => None,
-    })
 }
 
 #[cfg(test)]
@@ -118,6 +67,7 @@ mod tests {
     use crate::engine::{EngineConfig, EngineKind};
     use crate::fleet::FleetConfig;
     use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
 
     fn start() -> FleetServer {
         let fleet = Arc::new(Fleet::new(FleetConfig {

@@ -99,6 +99,8 @@ impl Session {
             "COMMIT" => self.cmd_commit(),
             "QUERY" => self.cmd_query(rest),
             "STATS" => self.fleet.stats_line(),
+            "PING" => format!("OK pong nets={}", self.fleet.loaded().len()),
+            "EVICT" => self.cmd_evict(rest),
             other => format!("ERR unknown verb {other:?}"),
         };
         SessionReply::Line(reply)
@@ -143,6 +145,20 @@ impl Session {
                 format!("OK using {name} vars={vars}")
             }
             None => format!("ERR not loaded: {name:?} (LOAD it first)"),
+        }
+    }
+
+    /// Cluster hand-off: the front tier evicts a network from its old
+    /// owner after re-homing it. Any session pinned to the evicted tree
+    /// (this one included) gets the standard "evicted" error next verb.
+    fn cmd_evict(&mut self, name: &str) -> String {
+        if name.is_empty() {
+            return "ERR usage: EVICT <net>".into();
+        }
+        if self.fleet.evict(name) {
+            format!("OK evicted {name}")
+        } else {
+            format!("ERR not loaded: {name:?}")
         }
     }
 
@@ -407,6 +423,34 @@ mod tests {
         let r = line(&mut s, "QUERY lung");
         assert!(r.starts_with("ERR network \"asia\" was reloaded"), "{r}");
         assert!(line(&mut s, "USE asia").starts_with("OK using asia"));
+        assert!(line(&mut s, "QUERY lung").starts_with("OK yes=0.055000"));
+    }
+
+    #[test]
+    fn ping_answers_with_resident_count() {
+        let mut s = session();
+        assert_eq!(line(&mut s, "PING"), "OK pong nets=0");
+        line(&mut s, "LOAD asia");
+        assert_eq!(line(&mut s, "ping"), "OK pong nets=1");
+    }
+
+    #[test]
+    fn evict_is_a_clean_handoff_for_pinned_sessions() {
+        let mut s = session();
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        line(&mut s, "OBSERVE smoke=yes");
+        line(&mut s, "COMMIT");
+        assert!(line(&mut s, "EVICT").starts_with("ERR usage: EVICT"));
+        assert!(line(&mut s, "EVICT nosuch").starts_with("ERR not loaded"));
+        assert_eq!(line(&mut s, "EVICT asia"), "OK evicted asia");
+        // the pinned session learns on its next verb — no stale evidence
+        // can be applied to a later reload under the same name
+        let r = line(&mut s, "QUERY lung");
+        assert!(r.starts_with("ERR network \"asia\" was evicted"), "{r}");
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        assert_eq!(s.committed_len(), 0);
         assert!(line(&mut s, "QUERY lung").starts_with("OK yes=0.055000"));
     }
 

@@ -11,8 +11,9 @@
 //! * **L3 (this crate)** — the coordinator: Bayesian-network model and I/O
 //!   ([`bn`]), junction-tree compilation ([`jt`]), the six propagation
 //!   engines ([`engine`]), a batch-inference coordinator ([`coordinator`]),
-//!   a multi-network serving fleet ([`fleet`]), and a PJRT runtime that
-//!   executes AOT-compiled XLA table-op kernels ([`runtime`]).
+//!   a multi-network serving fleet ([`fleet`]), a cross-process cluster
+//!   tier routing networks over fleet processes ([`cluster`]), and a PJRT
+//!   runtime that executes AOT-compiled XLA table-op kernels ([`runtime`]).
 //! * **L2 (python/compile/model.py)** — JAX message-pass compute graph.
 //! * **L1 (python/compile/kernels/)** — Pallas table-op kernels, lowered
 //!   (interpret=True) into the same HLO artifacts the runtime loads.
@@ -36,6 +37,7 @@
 pub mod bench;
 pub mod bn;
 pub mod cli;
+pub mod cluster;
 pub mod coordinator;
 pub mod engine;
 pub mod fleet;

@@ -1,0 +1,290 @@
+//! Integration: the cross-process cluster tier — consistency against a
+//! single-process fleet (including across a membership change) and
+//! fault injection (a backend killed mid-session).
+//!
+//! Everything runs through [`ClusterHarness`]: real TCP between front
+//! tier and backends, ephemeral ports, bounded timeouts everywhere, so a
+//! routing bug fails an assertion instead of hanging the suite.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fastbn::bn::{bif, netgen};
+use fastbn::cluster::harness::query_line;
+use fastbn::cluster::{ClusterClient, ClusterConfig, ClusterHarness};
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::fleet::{Fleet, FleetConfig, FleetServer};
+use fastbn::infer::cases::{generate, CaseSpec};
+use fastbn::jt::evidence::Evidence;
+
+fn backend_cfg() -> FleetConfig {
+    FleetConfig {
+        engine: EngineKind::Seq,
+        engine_cfg: EngineConfig::default().with_threads(1),
+        shards: 2,
+        registry_capacity: 8,
+    }
+}
+
+/// Short probe/backoff intervals so failure detection fits test budgets;
+/// every timeout stays finite so nothing can hang the suite.
+fn fast_cluster_cfg() -> ClusterConfig {
+    ClusterConfig {
+        replicas: 64,
+        connect_timeout: Duration::from_millis(500),
+        io_timeout: Duration::from_secs(5),
+        probe_timeout: Duration::from_millis(500),
+        probe_interval: Duration::from_millis(100),
+        probe_backoff_max: Duration::from_secs(1),
+        fail_threshold: 2,
+    }
+}
+
+/// Write a small synthetic network to a temp `.bif` so the cluster hosts
+/// a *generated* net alongside the embedded ones. The name `gen2` is
+/// load-bearing: under the deterministic ring (64 replicas, ids
+/// `b0`/`b1`/`b2`) it is owned by `b1` at two backends and hands off to
+/// `b2` when the third joins — the movement the join test asserts.
+fn write_gen_net(name: &str) -> std::path::PathBuf {
+    let spec = netgen::NetSpec {
+        name: name.to_string(),
+        nodes: 12,
+        arcs: 18,
+        max_parents: 3,
+        card_choices: vec![(2, 0.6), (3, 0.4)],
+        locality: 6,
+        max_table: 1 << 10,
+        alpha: 1.0,
+        seed: 77,
+    };
+    let path = std::env::temp_dir().join(format!("fastbn-cluster-{}-{name}.bif", std::process::id()));
+    std::fs::write(&path, bif::write(&spec.generate())).unwrap();
+    path
+}
+
+/// Both consistency layers at once.
+///
+/// Full precision: a cluster answer is computed by the owning backend's
+/// in-process fleet, so compare its `Posteriors` against the
+/// single-process reference fleet at ≤ 1e-9. Wire: concurrent per-net
+/// clients through the front tier must reproduce the single-process
+/// `FleetServer`'s reply lines byte for byte (same engine, same
+/// deterministic propagation, same formatter).
+fn check_consistency(harness: &ClusterHarness, reference: &Arc<Fleet>, names: &[&str], cases: &[Vec<Evidence>]) {
+    for (name, case_set) in names.iter().zip(cases) {
+        let owner = harness.cluster().owner(name).unwrap_or_else(|| panic!("{name} has no owner"));
+        let backend = harness.backend_fleet(&owner).unwrap_or_else(|| panic!("{owner} is not running"));
+        for (i, ev) in case_set.iter().enumerate() {
+            let got = backend.query(name, ev.clone()).unwrap();
+            let want = reference.query(name, ev.clone()).unwrap();
+            let d = got.max_abs_diff(&want);
+            assert!(d <= 1e-9, "{name} case {i}: cluster differs from single-process fleet by {d:e}");
+        }
+    }
+
+    let ref_server = FleetServer::start(Arc::clone(reference), "127.0.0.1:0").unwrap();
+    let mut expected: Vec<Vec<String>> = Vec::new();
+    for (name, case_set) in names.iter().zip(cases) {
+        let jt = reference.tree(name).unwrap();
+        let target = jt.net.vars[jt.net.n() - 1].name.clone();
+        let mut client = ClusterClient::connect(ref_server.addr()).unwrap();
+        assert!(client.request(&format!("USE {name}")).unwrap().starts_with("OK using"));
+        expected.push(case_set.iter().map(|ev| client.request(&query_line(&jt.net, &target, ev)).unwrap()).collect());
+    }
+    let got: Vec<Vec<String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = names
+            .iter()
+            .zip(cases)
+            .map(|(name, case_set)| {
+                let front = harness.front_addr();
+                let jt = reference.tree(name).unwrap();
+                scope.spawn(move || {
+                    let mut client = ClusterClient::connect(front).unwrap();
+                    let r = client.request(&format!("USE {name}")).unwrap();
+                    assert!(r.starts_with("OK using"), "{r}");
+                    let target = jt.net.vars[jt.net.n() - 1].name.clone();
+                    case_set
+                        .iter()
+                        .map(|ev| client.request(&query_line(&jt.net, &target, ev)).unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for ((name, g), w) in names.iter().zip(&got).zip(&expected) {
+        assert_eq!(g, w, "{name}: front-tier wire replies diverged from the single-process server");
+    }
+    ref_server.shutdown();
+}
+
+#[test]
+fn cluster_matches_single_process_fleet_across_a_join() {
+    let gen_path = write_gen_net("gen2");
+    let specs: Vec<String> =
+        vec!["asia".into(), "cancer".into(), "mixed12".into(), gen_path.to_str().unwrap().into()];
+    let names = ["asia", "cancer", "mixed12", "gen2"];
+
+    let reference = Arc::new(Fleet::new(backend_cfg()));
+    for spec in &specs {
+        reference.load(spec).unwrap();
+    }
+
+    let mut harness = ClusterHarness::start(2, backend_cfg(), fast_cluster_cfg()).unwrap();
+    {
+        let mut c = harness.client().unwrap();
+        for spec in &specs {
+            let r = c.request(&format!("LOAD {spec}")).unwrap();
+            assert!(r.starts_with("OK loaded"), "{r}");
+        }
+        let stats = c.request("STATS").unwrap();
+        assert!(stats.contains("backends=2 alive=2 nets=4"), "{stats}");
+    }
+
+    let mut cases: Vec<Vec<Evidence>> = Vec::new();
+    for (i, name) in names.iter().enumerate() {
+        let jt = reference.tree(name).unwrap();
+        cases.push(generate(&jt.net, &CaseSpec { n_cases: 6, observed_fraction: 0.25, seed: 1000 + i as u64 }));
+    }
+
+    check_consistency(&harness, &reference, &names, &cases);
+
+    // a session pinned before the membership change, to a net that will
+    // move — it must get a clean "moved" error, never silently-rerouted
+    // answers carrying another backend session's state
+    let mut pinned = harness.client().unwrap();
+    assert!(pinned.request("USE gen2").unwrap().starts_with("OK using gen2"));
+
+    let owners_before: Vec<Option<String>> = names.iter().map(|n| harness.cluster().owner(n)).collect();
+    assert_eq!(harness.add_backend().unwrap(), "b2");
+
+    let mut moved = Vec::new();
+    for (name, before) in names.iter().zip(&owners_before) {
+        let after = harness.cluster().owner(name);
+        assert!(after.is_some(), "{name} lost its owner across the join");
+        if &after != before {
+            // minimal movement: a join moves ownership only *to* the joiner
+            assert_eq!(after.as_deref(), Some("b2"), "{name} moved between survivors");
+            // and the hand-off ran: resident on the new owner, evicted
+            // from the old one
+            assert!(harness.backend_fleet("b2").unwrap().tree(name).is_some(), "{name} not resident on b2");
+            let old = harness.backend_fleet(before.as_deref().unwrap()).unwrap();
+            assert!(old.tree(name).is_none(), "{name} still resident on {before:?} after hand-off");
+            moved.push(*name);
+        }
+    }
+    // deterministic ring: gen2 is the known mover at this topology
+    assert!(moved.contains(&"gen2"), "join rebalanced nothing (owners before: {owners_before:?})");
+
+    let r = pinned.request("QUERY x0").unwrap();
+    assert!(r.starts_with("ERR network \"gen2\" moved"), "{r}");
+    assert!(pinned.request("USE gen2").unwrap().starts_with("OK using gen2"));
+
+    check_consistency(&harness, &reference, &names, &cases);
+    drop(harness);
+    let _ = std::fs::remove_file(gen_path);
+}
+
+#[test]
+fn killed_backend_reroutes_and_sessions_get_clean_errors() {
+    let mut harness = ClusterHarness::start(2, backend_cfg(), fast_cluster_cfg()).unwrap();
+    let mut c = harness.client().unwrap();
+    assert!(c.request("LOAD asia").unwrap().starts_with("OK loaded asia"));
+    assert!(c.request("LOAD cancer").unwrap().starts_with("OK loaded cancer"));
+
+    let victim = harness.cluster().owner("asia").unwrap();
+    let survivor = harness.live_backend_ids().into_iter().find(|id| *id != victim).unwrap();
+
+    // a streaming session pinned to the doomed backend
+    assert!(c.request("USE asia").unwrap().starts_with("OK using asia"));
+    assert!(c.request("OBSERVE smoke=yes").unwrap().starts_with("OK staged 1"));
+    assert!(c.request("COMMIT").unwrap().starts_with("OK committed evidence=1"));
+    assert!(c.request("QUERY lung").unwrap().starts_with("OK yes=0.100000"));
+
+    assert!(harness.kill_backend(&victim));
+
+    // the very next verb: a clean, *bounded* protocol error — whichever
+    // race wins (session trips on the dead conn, or the prober already
+    // declared death and the pin reads as moved)
+    let t0 = Instant::now();
+    let r = c.request("QUERY lung").unwrap();
+    assert!(r.starts_with("ERR"), "{r}");
+    assert!(r.contains("unreachable") || r.contains("moved"), "{r}");
+    assert!(t0.elapsed() < Duration::from_secs(10), "error reply took {:?}", t0.elapsed());
+
+    // failover re-homes asia onto the survivor
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while harness.cluster().owner("asia").as_deref() != Some(survivor.as_str()) {
+        assert!(Instant::now() < deadline, "asia never rerouted; owner={:?}", harness.cluster().owner("asia"));
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // the session recovers with a plain USE…
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let r = c.request("USE asia").unwrap();
+        if r.starts_with("OK using asia") {
+            break;
+        }
+        assert!(r.starts_with("ERR"), "{r}");
+        assert!(Instant::now() < deadline, "USE never recovered: {r}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // …and the dead backend's committed evidence died with it: the fresh
+    // tree answers the prior, not a stale-evidence posterior
+    assert!(c.request("QUERY lung").unwrap().starts_with("OK yes=0.055000"), "stale evidence was misapplied");
+    assert!(c.request("QUERY lung | smoke=yes").unwrap().starts_with("OK yes=0.100000"));
+
+    // health surfaces agree — one backend dead, one alive
+    let ping = c.request("PING").unwrap();
+    assert!(ping.contains("backends=2 alive=1"), "{ping}");
+    let stats = c.request("STATS").unwrap();
+    assert!(stats.contains("alive=1"), "{stats}");
+    let topo = c.request("TOPO").unwrap();
+    assert!(topo.contains(&format!("{victim}[addr=")) && topo.contains("alive=false"), "{topo}");
+
+    // cancer is reachable from a fresh session wherever it lives now
+    let mut c2 = harness.client().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let r = c2.request("USE cancer").unwrap();
+        if r.starts_with("OK using cancer") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "cancer never recovered: {r}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(c2.request("QUERY Cancer | Smoker=True").unwrap().starts_with("OK True=0.032000"));
+}
+
+#[test]
+fn cluster_cli_smoke_runs_end_to_end() {
+    // the real multi-process path: `fastbn cluster` spawns backend child
+    // processes, joins them, and drives the scripted session
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_fastbn"))
+        .args([
+            "cluster", "--backends", "2", "--nets", "asia,cancer", "--engine", "seq", "--threads", "1",
+            "--shards", "1", "--bind", "127.0.0.1:0", "--smoke",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        match child.try_wait().unwrap() {
+            Some(_) => break,
+            None if Instant::now() >= deadline => {
+                let _ = child.kill();
+                let _ = child.wait();
+                panic!("`fastbn cluster --smoke` did not finish within 120s");
+            }
+            None => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    let output = child.wait_with_output().unwrap();
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(output.status.success(), "exit={:?}\nstdout:\n{stdout}\nstderr:\n{stderr}", output.status);
+    assert!(stdout.contains("cluster-smoke passed (2 backends"), "stdout:\n{stdout}");
+}
