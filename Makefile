@@ -2,9 +2,11 @@
 #
 #   make build      release build of the fastbn crate (pure-std, offline-safe)
 #   make test       tier-1: cargo test; then the python suite (skips if no pytest)
-#   make bench      run all six bench targets (criterion-lite, harness=false)
+#   make bench      run all seven bench targets (criterion-lite, harness=false)
 #   make serve-smoke start a 2-network fleet, run a scripted session
 #                   through it over TCP, and assert on the replies
+#   make batch-smoke drive the BATCH verb (N evidence lines in, N posterior
+#                   lines out, one fused sweep) through a live fleet socket
 #   make cluster-smoke spawn 2 fleet backend processes + the consistent-hash
 #                   front tier, run a scripted session through the router
 #   make artifacts  AOT-lower the Pallas/JAX kernels to HLO-text artifacts
@@ -18,7 +20,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench serve-smoke cluster-smoke artifacts fmt lint test-xla clean
+.PHONY: build test bench serve-smoke batch-smoke cluster-smoke artifacts fmt lint test-xla clean
 
 build:
 	$(CARGO) build --release
@@ -45,6 +47,13 @@ bench:
 # unexpected reply.
 serve-smoke:
 	$(CARGO) run --release -- serve --nets asia,cancer --shards 2 --bind 127.0.0.1:0 --smoke
+
+# BATCH-verb smoke: a batched-engine fleet on an ephemeral port; the
+# --batch-smoke switch drives BATCH/CASE through the server's own socket
+# (N evidence lines in, N posterior lines out, one shard dispatch) and
+# asserts the replies are byte-identical to the equivalent QUERYs.
+batch-smoke:
+	$(CARGO) run --release -- serve --nets asia,cancer --engine batched --batch 4 --shards 1 --bind 127.0.0.1:0 --batch-smoke
 
 # cluster serving smoke: 2 backend fleet *processes* (spawned as children
 # announcing ephemeral ports) behind the consistent-hash front tier; the

@@ -61,7 +61,12 @@ fn main() -> fastbn::Result<()> {
         for kind in [EngineKind::Unb, EngineKind::Seq] {
             let report = runner.run(
                 &cases,
-                &BatchConfig { engine: kind, engine_cfg: EngineConfig::default().with_threads(1), replicas: 1 },
+                &BatchConfig {
+                    engine: kind,
+                    engine_cfg: EngineConfig::default().with_threads(1),
+                    replicas: 1,
+                    fused_batch: 0,
+                },
             )?;
             eprintln!(
                 "  {:<13} {:>10} total | mean ln P(e) {:.4} | {} failures",
@@ -86,7 +91,12 @@ fn main() -> fastbn::Result<()> {
         for kind in EngineKind::PARALLEL {
             let report = runner.run(
                 &cases,
-                &BatchConfig { engine: kind, engine_cfg: EngineConfig::default().with_threads(2), replicas: 1 },
+                &BatchConfig {
+                    engine: kind,
+                    engine_cfg: EngineConfig::default().with_threads(2),
+                    replicas: 1,
+                    fused_batch: 0,
+                },
             )?;
             assert!(
                 (report.mean_log_z - seq.mean_log_z).abs() < 1e-9,

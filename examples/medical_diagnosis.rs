@@ -38,6 +38,7 @@ fn main() -> fastbn::Result<()> {
                 engine,
                 engine_cfg: EngineConfig::default(),
                 replicas: 1,
+                fused_batch: 0,
             },
         )?;
         println!(

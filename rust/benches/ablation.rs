@@ -8,7 +8,11 @@
 //! 2. *Index-mapping strategy* (the "bottleneck simplification"): cached
 //!    per-edge maps vs odometer vs per-entry div/mod — real measured, the
 //!    heart of the Fast-BNI-seq vs UnBBayes gap.
-//! 3. *Flattening chunk size*: hybrid min_chunk sweep (modeled at t=16).
+//! 3. *Flattening chunk size*: hybrid min_chunk sweep (modeled at t=16),
+//!    now with **measured pool-region entries per sweep** — the B2 finish
+//!    folds into single-chunk B1 tasks, so small min_chunk values pay a
+//!    fourth region per layer that the default avoids; this is the data
+//!    the `min_chunk` default can be revisited with (ROADMAP perf item).
 //! 4. *Case-level replicas* (extension beyond the paper): real measured
 //!    throughput at replicas ∈ {1, 2, 4} on this host.
 //!
@@ -19,8 +23,9 @@ use std::sync::Arc;
 use fastbn::bench::{env_usize, print_table, Bench};
 use fastbn::bn::netgen;
 use fastbn::coordinator::{BatchConfig, BatchRunner};
+use fastbn::engine::hybrid::HybridEngine;
 use fastbn::engine::simulate::{simulate_seconds, CostModel};
-use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::engine::{Engine, EngineConfig, EngineKind};
 use fastbn::infer::cases::{generate, CaseSpec};
 use fastbn::jt::propagate::MapMode;
 use fastbn::jt::schedule::{RootStrategy, Schedule};
@@ -91,7 +96,8 @@ fn main() {
         &rows,
     );
 
-    // ---- 3. hybrid chunk-size sweep (modeled t=16) ----
+    // ---- 3. hybrid chunk-size sweep (modeled t=16) + measured region
+    //         entries per sweep (exact — counted by the engine itself)
     let mut rows = Vec::new();
     for name in ["pigs-sim", "munin4-sim"] {
         let net = netgen::paper_net(name).unwrap();
@@ -100,12 +106,16 @@ fn main() {
         for min_chunk in [64usize, 512, 2048, 8192, 65536] {
             let cfg = EngineConfig { min_chunk, ..Default::default() };
             let s = simulate_seconds(EngineKind::Hybrid, &jt, 16, &cfg, &model);
-            row.push(format!("{:.3}ms", s * 1e3));
+            // pool regions actually entered by one sweep at this chunking
+            let mut engine = HybridEngine::new(Arc::clone(&jt), &cfg.clone().with_threads(2));
+            let mut state = TreeState::fresh(&jt);
+            let _ = engine.infer(&mut state, &fastbn::jt::evidence::Evidence::none());
+            row.push(format!("{:.3}ms/{}r", s * 1e3, engine.pool_regions()));
         }
         rows.push(row);
     }
     print_table(
-        "ablation 3: hybrid flattening chunk size (modeled per-case, t=16)",
+        "ablation 3: hybrid chunk size (modeled per-case t=16 / measured pool regions per sweep)",
         &["BN", "chunk=64", "512", "2048", "8192", "65536"],
         &rows,
     );
@@ -121,6 +131,7 @@ fn main() {
             engine: EngineKind::Seq,
             engine_cfg: EngineConfig::default().with_threads(1),
             replicas,
+            fused_batch: 0,
         };
         let report = runner.run(&cases, &cfg).unwrap();
         rows.push(vec![

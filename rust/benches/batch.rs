@@ -1,0 +1,102 @@
+//! Bench: **case-major batched propagation** — the B-sweep.
+//!
+//! The batched engine amortizes every cached index-map lookup (and every
+//! pool-region entry) across B evidence cases per sweep. This bench
+//! measures per-case time at B ∈ {1, 4, 16, 64} on multi-clique networks
+//! (acceptance: per-case time strictly decreasing from B=1 to B≥16), with
+//! the sequential and hybrid engines as per-case baselines, and verifies a
+//! sample of the batched answers against Fast-BNI-seq at ≤1e-9 so a
+//! mis-measured kernel can't silently "win".
+//!
+//! Scale knobs: FASTBN_CASES (default 64 — the case-list length; keep it a
+//! multiple of 64 so every B divides it), FASTBN_THREADS (default 0 = all
+//! cores).
+
+use std::sync::Arc;
+
+use fastbn::bench::{env_usize, print_table, Bench};
+use fastbn::bn::netgen;
+use fastbn::engine::batched::BatchedHybridEngine;
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::infer::cases::{generate, CaseSpec};
+use fastbn::jt::state::TreeState;
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+
+const B_SWEEP: [usize; 4] = [1, 4, 16, 64];
+
+fn main() {
+    let n_cases = env_usize("FASTBN_CASES", 64).max(B_SWEEP[B_SWEEP.len() - 1]);
+    let threads = env_usize("FASTBN_THREADS", 0);
+    let bench = Bench::new(1, 3);
+
+    let mut rows = Vec::new();
+    for name in ["hailfinder-sim", "pigs-sim", "munin2-sim"] {
+        let net = netgen::paper_net(name).unwrap();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cases = generate(&net, &CaseSpec { n_cases, observed_fraction: 0.2, seed: 0xBA7C });
+        let mut row = vec![name.to_string(), format!("{}", jt.n_cliques())];
+
+        // per-case baselines: seq (1 thread) and hybrid (threads)
+        {
+            let cfg = EngineConfig { threads: 1, ..Default::default() };
+            let mut seq = EngineKind::Seq.build(Arc::clone(&jt), &cfg);
+            let mut state = TreeState::fresh(&jt);
+            let stat = bench.run(|| {
+                for ev in &cases {
+                    let _ = seq.infer(&mut state, ev);
+                }
+            });
+            row.push(format!("{:.1}µs", stat.mean.as_secs_f64() * 1e6 / cases.len() as f64));
+        }
+        {
+            let cfg = EngineConfig { threads, ..Default::default() };
+            let mut hyb = EngineKind::Hybrid.build(Arc::clone(&jt), &cfg);
+            let mut state = TreeState::fresh(&jt);
+            let stat = bench.run(|| {
+                for ev in &cases {
+                    let _ = hyb.infer(&mut state, ev);
+                }
+            });
+            row.push(format!("{:.1}µs", stat.mean.as_secs_f64() * 1e6 / cases.len() as f64));
+        }
+
+        // the B-sweep: per-case µs at each lane count
+        let mut b1_per_case = 0.0f64;
+        for b in B_SWEEP {
+            let cfg = EngineConfig { threads, ..Default::default() }.with_batch(b);
+            let mut eng = BatchedHybridEngine::new(Arc::clone(&jt), &cfg);
+            let stat = bench.run(|| {
+                let _ = eng.infer_cases(&cases);
+            });
+            let per_case = stat.mean.as_secs_f64() * 1e6 / cases.len() as f64;
+            if b == 1 {
+                b1_per_case = per_case;
+            }
+            row.push(format!("{per_case:.1}µs"));
+            if b == B_SWEEP[B_SWEEP.len() - 1] {
+                row.push(format!("{:.2}x", b1_per_case / per_case));
+            }
+        }
+        rows.push(row);
+
+        // correctness guard: a sample of batched answers vs seq at 1e-9
+        let cfg = EngineConfig { threads, ..Default::default() }.with_batch(16);
+        let mut eng = BatchedHybridEngine::new(Arc::clone(&jt), &cfg);
+        let sample = &cases[..cases.len().min(16)];
+        let got = eng.infer_cases(sample);
+        let mut seq = EngineKind::Seq.build(Arc::clone(&jt), &EngineConfig { threads: 1, ..Default::default() });
+        let mut state = TreeState::fresh(&jt);
+        for (i, (g, ev)) in got.iter().zip(sample).enumerate() {
+            let want = seq.infer(&mut state, ev).unwrap();
+            let d = g.as_ref().unwrap().max_abs_diff(&want);
+            assert!(d <= 1e-9, "{name} case {i}: batched differs from seq by {d:e}");
+        }
+    }
+    print_table(
+        &format!("batch: per-case time vs lanes B ({n_cases} cases, threads={threads})"),
+        &["BN", "cliques", "seq", "hybrid", "B=1", "B=4", "B=16", "B=64", "B1/B64"],
+        &rows,
+    );
+    println!("\nacceptance: per-case time should decrease monotonically from B=1 to B>=16");
+}

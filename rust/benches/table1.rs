@@ -52,6 +52,7 @@ fn main() {
                 engine: kind,
                 engine_cfg: EngineConfig::default().with_threads(1),
                 replicas: 1,
+                fused_batch: 0,
             };
             let stat = bench.run(|| {
                 runner.run(&cases, &cfg).unwrap();

@@ -4,10 +4,11 @@
 //! fastbn nets
 //! fastbn info      --net <spec> [--heuristic min-fill]
 //! fastbn query     --net <spec> --target <var> [--evidence a=x,b=y] [--engine hybrid] [--threads N]
-//! fastbn batch     --net <spec> [--cases 2000] [--obs 0.2] [--engine hybrid] [--threads N] [--replicas 1] [--seed S]
+//! fastbn batch     --net <spec> [--cases 2000] [--obs 0.2] [--engine hybrid] [--threads N] [--replicas 1]
+//!                  [--batch B] [--seed S]
 //! fastbn generate  --nodes N [--arcs M] [--max-parents 3] [--seed S] [--out net.bif]
 //! fastbn serve     --net <spec> [--bind 127.0.0.1:7979] [--engine hybrid] [--threads N]
-//! fastbn serve     --nets a,b,c [--shards N] [--registry-cap K] [--bind ...] [--smoke]
+//! fastbn serve     --nets a,b,c [--shards N] [--registry-cap K] [--batch B] [--bind ...] [--smoke] [--batch-smoke]
 //! fastbn cluster   --backends N [--nets a,b,c] [--shards S] [--replicas V] [--bind ...] [--smoke]
 //! fastbn simulate  --net <spec> [--threads 1,2,4,8,16,32]
 //! fastbn selftest
@@ -49,7 +50,7 @@ pub struct Args {
 
 /// Flags that are boolean switches: present or absent, never taking a
 /// value. Everything else must be followed by one.
-const SWITCHES: &[&str] = &["smoke", "fleet", "parent-watch"];
+const SWITCHES: &[&str] = &["smoke", "fleet", "parent-watch", "batch-smoke"];
 
 impl Args {
     /// Parse from raw argv (after the subcommand).
@@ -110,6 +111,7 @@ impl Args {
 fn engine_config(args: &Args) -> Result<EngineConfig> {
     Ok(EngineConfig {
         threads: args.parse_or("threads", 0usize)?,
+        batch: args.parse_or("batch", 1usize)?.max(1),
         ..Default::default()
     })
 }
@@ -170,14 +172,18 @@ COMMANDS:
   query     --net S --target V       posterior of V given --evidence a=x,b=y
   mpe       --net S                  most probable explanation given --evidence
   batch     --net S                  run an evidence-case batch (--cases, --obs,
-                                     --engine, --threads, --replicas, --seed)
+                                     --engine, --threads, --replicas, --seed;
+                                     --batch B fuses B cases per sweep — pair
+                                     with --engine batched)
   generate  --nodes N                make a synthetic network (--arcs, --max-parents,
                                      --seed, --out file.bif)
   serve     --net S                  TCP inference server (--bind, --engine)
   serve     --nets A,B,C             multi-network serving fleet (--shards N,
-                                     --registry-cap K, --smoke self-check);
-                                     verbs: LOAD USE NETS OBSERVE RETRACT
-                                     COMMIT QUERY STATS PING EVICT QUIT
+                                     --registry-cap K, --batch B lanes/shard
+                                     with --engine batched, --smoke and
+                                     --batch-smoke self-checks); verbs: LOAD
+                                     USE NETS OBSERVE RETRACT COMMIT QUERY
+                                     BATCH CASE STATS PING EVICT QUIT
   cluster   --backends N             cross-process cluster tier: N fleet backend
                                      child processes + a consistent-hash front
                                      router (--nets preload, --shards, --replicas
@@ -188,6 +194,7 @@ COMMANDS:
   help                               this text
 
 ENGINES: unb | seq | direct | primitive | element | hybrid (default)
+         batched (case-major multi-case sweeps; lanes set by --batch B)
 ";
 
 fn cmd_nets() -> Result<()> {
@@ -271,6 +278,9 @@ fn cmd_batch(args: &Args) -> Result<()> {
         engine,
         engine_cfg: engine_config(args)?,
         replicas: args.parse_or("replicas", 1usize)?,
+        // `--batch B` fuses B cases per infer_batch chunk; with
+        // `--engine batched` each chunk is one sweep
+        fused_batch: args.parse_or("batch", 0usize)?,
     };
     let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
     println!("{} | {}", net.stats(), jt.stats());
@@ -351,7 +361,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // this from child stdout to learn each backend's ephemeral port
         println!("FLEET READY addr={}", server.addr());
         println!(
-            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/STATS/PING/EVICT/QUIT",
+            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/PING/EVICT/QUIT",
             fleet.loaded().len(),
             shards,
             server.addr(),
@@ -361,6 +371,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // scripted self-check: drive a session through our own TCP
             // socket, assert on every reply, then exit (make serve-smoke)
             return serve_smoke(&server);
+        }
+        if args.has("batch-smoke") {
+            // scripted BATCH-verb self-check over a live socket: N
+            // evidence lines in, N posterior lines out (make batch-smoke)
+            return batch_smoke(&server);
         }
         // serve until killed
         loop {
@@ -411,6 +426,61 @@ fn serve_smoke(server: &FleetServer) -> Result<()> {
     ];
     run_script(server.addr(), &script)?;
     println!("serve-smoke passed ({} nets)", entries.len());
+    Ok(())
+}
+
+/// Drive the `BATCH` verb through a live fleet socket and verify that the
+/// batched replies are byte-identical to the equivalent `QUERY` replies —
+/// the `make batch-smoke` assertion path.
+fn batch_smoke(server: &FleetServer) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+
+    let entries = server.fleet().loaded();
+    let first = entries.first().ok_or_else(|| Error::msg("--batch-smoke needs a loaded network (--nets a)"))?;
+    let jt = server.fleet().tree(&first.name).ok_or_else(|| Error::msg("batch-smoke: net missing"))?;
+    let (obs_var, obs_state) = (&jt.net.vars[0].name, &jt.net.vars[0].states[0]);
+    let target = &jt.net.vars[jt.net.n() - 1].name;
+
+    let mut stream = std::net::TcpStream::connect(server.addr())?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut ask = |req: &str, expect_lines: usize| -> Result<Vec<String>> {
+        stream.write_all(req.as_bytes())?;
+        stream.write_all(b"\n")?;
+        let mut replies = Vec::with_capacity(expect_lines);
+        for _ in 0..expect_lines {
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let line = line.trim().to_string();
+            println!("> {req}\n< {line}");
+            replies.push(line);
+        }
+        Ok(replies)
+    };
+    let check = |reply: &str, prefix: &str| -> Result<()> {
+        if reply.starts_with(prefix) {
+            Ok(())
+        } else {
+            Err(Error::msg(format!("batch-smoke failed: reply {reply:?}, wanted prefix {prefix:?}")))
+        }
+    };
+
+    check(&ask(&format!("USE {}", first.name), 1)?[0], "OK using")?;
+    // references via QUERY, then the same three cases via one BATCH
+    let want_obs = ask(&format!("QUERY {target} | {obs_var}={obs_state}"), 1)?.remove(0);
+    let want_prior = ask(&format!("QUERY {target}"), 1)?.remove(0);
+    check(&want_obs, "OK ")?;
+    check(&want_prior, "OK ")?;
+    check(&ask(&format!("BATCH 3 {target}"), 1)?[0], "OK batch expect=3")?;
+    check(&ask(&format!("CASE {obs_var}={obs_state}"), 1)?[0], "OK case 1/3")?;
+    check(&ask("CASE", 1)?[0], "OK case 2/3")?;
+    let results = ask(&format!("CASE {obs_var}={obs_state}"), 3)?;
+    if results[0] != want_obs || results[1] != want_prior || results[2] != want_obs {
+        return Err(Error::msg(format!(
+            "batch-smoke failed: BATCH results {results:?} do not match QUERY replies [{want_obs:?}, {want_prior:?}]"
+        )));
+    }
+    stream.write_all(b"QUIT\n")?;
+    println!("batch-smoke passed ({} cases, engine {})", 3, server.fleet().config().engine.label());
     Ok(())
 }
 
@@ -561,7 +631,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     let server = ClusterServer::start(Arc::clone(&cluster), bind)?;
     println!(
-        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/STATS/PING/TOPO/QUIT",
+        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/PING/TOPO/QUIT",
         server.addr(),
         specs.len()
     );
@@ -702,6 +772,29 @@ mod tests {
         let argv: Vec<String> = [
             "serve", "--nets", "asia,cancer", "--shards", "2", "--engine", "seq", "--threads", "1",
             "--bind", "127.0.0.1:0", "--smoke",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(argv), 0);
+    }
+
+    #[test]
+    fn batch_smoke_drives_the_batch_verb_through_a_socket() {
+        let argv: Vec<String> = [
+            "serve", "--nets", "asia", "--shards", "1", "--engine", "batched", "--batch", "4",
+            "--threads", "2", "--bind", "127.0.0.1:0", "--batch-smoke",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(argv), 0);
+    }
+
+    #[test]
+    fn batch_command_runs_fused_with_the_batched_engine() {
+        let argv: Vec<String> = [
+            "batch", "--net", "asia", "--cases", "10", "--engine", "batched", "--batch", "4", "--threads", "2",
         ]
         .iter()
         .map(|s| s.to_string())

@@ -41,15 +41,31 @@ impl BackendConn {
     /// reply in the buffer, so callers drop the conn and reconnect rather
     /// than retry on it.
     pub fn request(&mut self, line: &str) -> std::io::Result<String> {
+        let mut lines = self.request_lines(line, 1)?;
+        Ok(lines.pop().expect("request_lines(_, 1) returns one line"))
+    }
+
+    /// Send one request line, read exactly `n` reply lines — the `BATCH`
+    /// passthrough: the final `CASE` line of an n-case batch comes back as
+    /// n result lines. Timeout/EOF poisons the conn exactly like
+    /// [`BackendConn::request`].
+    pub fn request_lines(&mut self, line: &str, n: usize) -> std::io::Result<Vec<String>> {
         self.stream.write_all(line.as_bytes())?;
         self.stream.write_all(b"\n")?;
         self.stream.flush()?;
-        let mut reply = String::new();
-        let n = self.reader.read_line(&mut reply)?;
-        if n == 0 {
-            return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "backend closed the connection"));
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut reply = String::new();
+            let got = self.reader.read_line(&mut reply)?;
+            if got == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "backend closed the connection",
+                ));
+            }
+            out.push(reply.trim_end().to_string());
         }
-        Ok(reply.trim_end().to_string())
+        Ok(out)
     }
 }
 

@@ -688,15 +688,26 @@ struct Active {
 /// One client's front-tier session: routes control verbs to the cluster
 /// and pins data-plane verbs to the owning backend's connection (where
 /// the backend-side session holds the streamed-evidence state).
+///
+/// `BATCH` passthrough: the front mirrors the backend's batch counting —
+/// it remembers `n` from a successful `BATCH <n> <target>` forward, lets
+/// the first `n-1` `CASE` lines round-trip one-for-one, and reads **n**
+/// reply lines for the final `CASE` (the backend answers the whole batch
+/// at once). Verbs the front answers locally (NETS/STATS/PING/TOPO/LOAD)
+/// never reach the pinned conn, so they leave both sides' batch state
+/// untouched; any *forwarded* non-CASE verb aborts the batch on both
+/// sides at once (the backend on seeing the verb, the front here).
 pub struct ClusterSession {
     cluster: Arc<Cluster>,
     active: Option<Active>,
+    /// (cases remaining, total) of an in-progress forwarded batch.
+    batch: Option<(usize, usize)>,
 }
 
 impl ClusterSession {
     /// New session; nothing selected.
     pub fn new(cluster: Arc<Cluster>) -> Self {
-        ClusterSession { cluster, active: None }
+        ClusterSession { cluster, active: None, batch: None }
     }
 
     /// Network the session is pinned to, if any.
@@ -713,7 +724,8 @@ impl ClusterSession {
         let mut parts = line.splitn(2, ' ');
         let verb = parts.next().unwrap_or("");
         let rest = parts.next().unwrap_or("").trim();
-        let reply = match verb.to_ascii_uppercase().as_str() {
+        let verb = verb.to_ascii_uppercase();
+        let reply = match verb.as_str() {
             "QUIT" => return SessionReply::Quit,
             "LOAD" => {
                 if rest.is_empty() {
@@ -727,10 +739,63 @@ impl ClusterSession {
             "STATS" => self.cluster.stats_line(),
             "PING" => self.cluster.ping_line(),
             "TOPO" => self.cluster.topo_line(),
-            "OBSERVE" | "RETRACT" | "COMMIT" | "QUERY" => self.forward(line),
+            // a forwarded data verb reaches the pinned backend session (or
+            // tears the pin down), and either way its batch collection is
+            // over — mirror that here. Verbs the front answers locally
+            // (LOAD/NETS/STATS/PING/TOPO, unknown) never touch the conn
+            // and must leave the mirrored count alone.
+            "OBSERVE" | "RETRACT" | "COMMIT" | "QUERY" => {
+                self.batch = None;
+                self.forward(line)
+            }
+            "BATCH" => self.cmd_batch(line, rest),
+            "CASE" => self.cmd_case(line),
             other => format!("ERR unknown verb {other:?}"),
         };
         SessionReply::Line(reply)
+    }
+
+    /// Forward `BATCH <n> <target>`; on an `OK` reply start mirroring the
+    /// backend's case countdown so the final `CASE` reads n lines.
+    fn cmd_batch(&mut self, line: &str, rest: &str) -> String {
+        // whatever happens next, the previous collection is over on both
+        // sides: the backend aborts it on seeing the BATCH verb, and a
+        // failed forward tears the pin (and its session) down
+        self.batch = None;
+        let n: Option<usize> = rest.split_whitespace().next().and_then(|t| t.parse().ok());
+        let reply = self.forward(line);
+        if reply.starts_with("OK") {
+            // the backend accepted, so the count parsed there too
+            if let Some(n) = n {
+                self.batch = Some((n, n));
+            }
+        }
+        reply
+    }
+
+    /// Forward one `CASE` line. Mid-batch cases round-trip one-for-one;
+    /// the final one comes back as the batch's n result lines.
+    fn cmd_case(&mut self, line: &str) -> String {
+        match self.batch {
+            None => self.forward(line), // backend answers "no batch in progress"
+            Some((remaining, total)) if remaining > 1 => {
+                let reply = self.forward(line);
+                // the backend acks every staged case; an ERR mid-batch
+                // means it aborted its collection (tree evicted, conn
+                // rerouted) — mirror that. A transport error also drops
+                // the pin, and the batch with it.
+                if self.active.is_some() && !reply.starts_with("ERR") {
+                    self.batch = Some((remaining - 1, total));
+                } else {
+                    self.batch = None;
+                }
+                reply
+            }
+            Some((_, total)) => {
+                self.batch = None;
+                self.forward_multi(line, total)
+            }
+        }
     }
 
     fn cmd_use(&mut self, name: &str) -> String {
@@ -747,6 +812,9 @@ impl ClusterSession {
         // *stale* session on another backend could leak old evidence
         let same_backend = self.active.as_ref().map(|a| a.backend == id).unwrap_or(false);
         if same_backend {
+            // the pinned backend session sees the USE (or the conn dies);
+            // either way its batch collection is over — mirror that
+            self.batch = None;
             let mut active = self.active.take().expect("checked above");
             return match self.forward_use(&mut active.conn, name) {
                 Ok(reply) => {
@@ -768,6 +836,8 @@ impl ClusterSession {
         }
         // different backend: build the new pin first and replace the old
         // one only on success — a failed USE keeps the current selection
+        // (and, with it, any open batch on the still-pinned conn: the old
+        // backend session never saw this verb)
         let mut conn = match self.cluster.connect(addr) {
             Ok(conn) => conn,
             Err(e) => {
@@ -778,6 +848,9 @@ impl ClusterSession {
         match self.forward_use(&mut conn, name) {
             Ok(reply) => {
                 if reply.starts_with("OK") {
+                    // replacing the pin drops the old conn, and the old
+                    // backend session (incl. any open batch) dies with it
+                    self.batch = None;
                     self.active = Some(Active { net: name.to_string(), backend: id, conn });
                 }
                 reply
@@ -812,6 +885,13 @@ impl ClusterSession {
     /// unloaded network is a clean error, never a silent reroute that
     /// would drop (or misapply) the backend session's evidence.
     fn forward(&mut self, line: &str) -> String {
+        self.forward_multi(line, 1)
+    }
+
+    /// Forward expecting `n` reply lines (the final `CASE` of an n-case
+    /// batch; every other verb has `n == 1`). The lines come back joined —
+    /// the line server writes them out as n wire lines.
+    fn forward_multi(&mut self, line: &str, n: usize) -> String {
         let Some(active) = self.active.as_mut() else {
             return "ERR no network selected (USE <net> first)".into();
         };
@@ -819,20 +899,25 @@ impl ClusterSession {
             Confirm::Current => {}
             Confirm::Moved => {
                 let net = active.net.clone();
+                // dropping the pin closes the conn; the backend session
+                // (and any open batch) dies with it
                 self.active = None;
+                self.batch = None;
                 return format!("ERR network {net:?} moved to another backend (rebalance or failover); USE it again");
             }
             Confirm::Unloaded => {
                 let net = active.net.clone();
                 self.active = None;
+                self.batch = None;
                 return format!("ERR network {net:?} is no longer loaded anywhere; LOAD and USE it again");
             }
         }
-        match active.conn.request(line) {
-            Ok(reply) => reply,
+        match active.conn.request_lines(line, n) {
+            Ok(lines) => lines.join("\n"),
             Err(e) => {
                 let (net, id) = (active.net.clone(), active.backend.clone());
                 self.active = None;
+                self.batch = None;
                 // verified report: failover runs before we reply, so the
                 // client's very next USE normally lands on the new owner
                 self.cluster.report_failure(&id);

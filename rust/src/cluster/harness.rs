@@ -145,6 +145,12 @@ impl ClusterClient {
     pub fn request(&mut self, line: &str) -> Result<String> {
         self.conn.request(line).map_err(Error::Io)
     }
+
+    /// One request line → `n` reply lines (the final `CASE` of an n-case
+    /// `BATCH` comes back as n result lines).
+    pub fn request_lines(&mut self, line: &str, n: usize) -> Result<Vec<String>> {
+        self.conn.request_lines(line, n).map_err(Error::Io)
+    }
 }
 
 /// Render a `QUERY` protocol line for `target` under `ev` — the inline

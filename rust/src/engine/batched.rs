@@ -1,0 +1,517 @@
+//! **Fast-BNI-batch** — case-major batched hybrid propagation.
+//!
+//! Fast-BNI's winning move is amortizing overhead across work items: one
+//! parallel region per layer instead of one per table op, index maps
+//! computed once instead of per entry. This engine applies the same move
+//! one level up, across **evidence cases**: `B` cases propagate through
+//! the tree in one sweep, stored lane-interleaved (entry `i` of case `b`
+//! at `i*B + b` — see [`crate::jt::state::BatchState`]), so every cached
+//! `map[i]` lookup, every run bound, and every pool-region entry is paid
+//! once per *entry* and amortized `B`× across cases, with the per-lane
+//! inner loop unit-stride and auto-vectorizable (`ops::marg_runs_cases_range`
+//! & co.). This is the throughput direction Fast-PGM pushes the FastBN
+//! line toward (PAPERS.md), and it is exactly the shape of the
+//! `coordinator::batch` and fleet-serving workloads.
+//!
+//! The engine reuses the hybrid engine's precomputed
+//! [`crate::engine::hybrid::LayerPlan`]s (same flattening, same B2 fold
+//! into single-chunk B1 tasks) and the same [`Pool`]; only the kernels are
+//! lane-expanded, separator scaling and `log_z` are tracked **per case**,
+//! and an inconsistent-evidence case kills its lane, never the batch.
+//!
+//! `infer_batch` slices arbitrary case lists into chunks of `B` lanes; a
+//! final partial chunk leaves its trailing lanes at the prior. Note the
+//! kernels always sweep all `B` lanes, so a partial chunk (or a lone
+//! `infer`) still pays the full-`B` per-entry work — size `B` to the
+//! traffic (see the README's fused-vs-replicas guidance); an
+//! occupied-lane bound on the inner loops is a ROADMAP follow-up
+//! alongside adaptive lane counts.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::engine::hybrid::LayerPlan;
+use crate::engine::pool::Pool;
+use crate::engine::share::{PerWorker, SharedTables};
+use crate::engine::{Engine, EngineConfig};
+use crate::infer::query::Posteriors;
+use crate::jt::evidence::Evidence;
+use crate::jt::ops;
+use crate::jt::schedule::{Msg, Schedule};
+use crate::jt::state::{BatchState, TreeState};
+use crate::jt::tree::JunctionTree;
+use crate::{Error, Result};
+
+/// Per-worker region-A scratch: lane-expanded partial separator buffer
+/// with lazy zero stamps (the lane analog of the hybrid engine's
+/// `Partial`). Kept separate from [`LaneFinish`] so a fused B1 tail
+/// holding worker `w`'s finish scratch exclusively never overlaps the
+/// reduce loops reading `w`'s partial buffer from other tasks.
+struct LanePartial {
+    buf: Vec<f64>,
+    stamps: Vec<u64>,
+}
+
+/// Per-worker separator-finish scratch: per-lane `ln`-mass accumulators
+/// plus mass/factor buffers. Touched only inside [`finish_lanes`] (one
+/// task per message owns it via its worker id) and the post-region fold.
+struct LaneFinish {
+    log_z: Vec<f64>,
+    masses: Vec<f64>,
+    factors: Vec<f64>,
+}
+
+/// Finish one message after its separator lanes have been reduced into
+/// `ratio_buf[off*lanes .. (off+len)*lanes]`: per-lane mass (0 ⇒ that
+/// lane's evidence is inconsistent — flag it, keep the sweep going),
+/// per-lane scale with `ln`-mass accumulation, store the new separator,
+/// and turn the buffer window into the update ratio in place (elementwise
+/// over lanes, so the single-case `0/0 → 0` rule applies per lane).
+///
+/// # Safety
+/// The caller must hold the message's lane window of `ratio_buf`, its
+/// separator table, and `scratch` exclusively.
+unsafe fn finish_lanes(
+    jt: &JunctionTree,
+    m: Msg,
+    off: usize,
+    lanes: usize,
+    ratio_buf: &[AtomicU64],
+    shared: &SharedTables,
+    scratch: &mut LaneFinish,
+    failed: &[AtomicBool],
+) {
+    let len = jt.seps[m.sep].len;
+    let slice = std::slice::from_raw_parts_mut(ratio_buf.as_ptr().add(off * lanes) as *mut f64, len * lanes);
+    let masses = &mut scratch.masses;
+    for x in masses.iter_mut() {
+        *x = 0.0;
+    }
+    ops::sum_cases(slice, lanes, masses);
+    let factors = &mut scratch.factors;
+    for b in 0..lanes {
+        if masses[b] == 0.0 {
+            // dead lane: flag it and propagate zeros (0/0 → 0 keeps every
+            // downstream table of this lane at zero, other lanes untouched)
+            failed[b].store(true, Ordering::Relaxed);
+            factors[b] = 1.0;
+        } else {
+            factors[b] = 1.0 / masses[b];
+            scratch.log_z[b] += masses[b].ln();
+        }
+    }
+    ops::scale_cases(slice, factors);
+    let sep_tab = shared.sep_mut(m.sep);
+    for j in 0..len * lanes {
+        let new = slice[j];
+        let old = sep_tab[j];
+        sep_tab[j] = new;
+        slice[j] = if old != 0.0 { new / old } else { 0.0 };
+    }
+}
+
+/// The case-major batched hybrid engine (see module docs).
+pub struct BatchedHybridEngine {
+    jt: Arc<JunctionTree>,
+    sched: Schedule,
+    pool: Pool,
+    threads: usize,
+    lanes: usize,
+    up_plans: Vec<LayerPlan>,
+    down_plans: Vec<LayerPlan>,
+    partials: PerWorker<LanePartial>,
+    finish: PerWorker<LaneFinish>,
+    /// Layer-wide lane-expanded ratio buffer.
+    ratio: Vec<f64>,
+    /// Owned lane state — reset (one memcpy) per sweep.
+    state: BatchState,
+    /// Per-lane inconsistent-evidence flags for the current sweep.
+    failed: Vec<AtomicBool>,
+    /// Current stamp generation (bumped per layer execution).
+    generation: u64,
+}
+
+impl BatchedHybridEngine {
+    /// Build for a tree with `cfg.batch` lanes per sweep.
+    pub fn new(jt: Arc<JunctionTree>, cfg: &EngineConfig) -> Self {
+        let sched = Schedule::build(&jt, cfg.root_strategy);
+        let threads = cfg.resolved_threads();
+        let lanes = cfg.batch.max(1);
+        let pool = Pool::new(threads);
+        let up_plans: Vec<LayerPlan> =
+            sched.up_layers.iter().map(|l| LayerPlan::build(&jt, l, cfg.min_chunk, cfg.max_chunks)).collect();
+        let down_plans: Vec<LayerPlan> =
+            sched.down_layers.iter().map(|l| LayerPlan::build(&jt, l, cfg.min_chunk, cfg.max_chunks)).collect();
+        let max_sep_total = up_plans.iter().chain(&down_plans).map(|p| p.sep_total).max().unwrap_or(0);
+        let max_msgs = up_plans.iter().chain(&down_plans).map(|p| p.msgs.len()).max().unwrap_or(0);
+        let partials = PerWorker::new(threads, |_| LanePartial {
+            buf: vec![0.0; max_sep_total * lanes],
+            stamps: vec![0; max_msgs],
+        });
+        let finish = PerWorker::new(threads, |_| LaneFinish {
+            log_z: vec![0.0; lanes],
+            masses: vec![0.0; lanes],
+            factors: vec![0.0; lanes],
+        });
+        let ratio = vec![0.0; max_sep_total * lanes];
+        let state = BatchState::fresh(&jt, lanes);
+        let failed = (0..lanes).map(|_| AtomicBool::new(false)).collect();
+        BatchedHybridEngine {
+            jt,
+            sched,
+            pool,
+            threads,
+            lanes,
+            up_plans,
+            down_plans,
+            partials,
+            finish,
+            ratio,
+            state,
+            failed,
+            generation: 0,
+        }
+    }
+
+    /// Lanes per sweep.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Run every case, `lanes` per sweep, returning per-case results in
+    /// order. An inconsistent case yields `Err` for its slot only.
+    pub fn infer_cases(&mut self, cases: &[Evidence]) -> Vec<Result<Posteriors>> {
+        let mut out = Vec::with_capacity(cases.len());
+        for chunk in cases.chunks(self.lanes) {
+            self.sweep(chunk, &mut out);
+        }
+        out
+    }
+
+    /// One full sweep over ≤ `lanes` cases (trailing lanes idle at the
+    /// prior for a partial chunk).
+    fn sweep(&mut self, chunk: &[Evidence], out: &mut Vec<Result<Posteriors>>) {
+        debug_assert!(chunk.len() <= self.lanes);
+        let lanes = self.lanes;
+        self.state.reset();
+        for f in &self.failed {
+            f.store(false, Ordering::Relaxed);
+        }
+        for (b, ev) in chunk.iter().enumerate() {
+            ev.apply_lane(&self.jt, self.state.data_mut(), lanes, b);
+        }
+
+        // collect
+        for li in 0..self.up_plans.len() {
+            self.run_layer(true, li);
+        }
+        // per-lane root normalization
+        let mut masses = vec![0.0; lanes];
+        let mut factors = vec![1.0; lanes];
+        for root in self.sched.roots.clone() {
+            for m in masses.iter_mut() {
+                *m = 0.0;
+            }
+            ops::sum_cases(self.state.clique(root), lanes, &mut masses);
+            for b in 0..lanes {
+                if masses[b] == 0.0 {
+                    self.failed[b].store(true, Ordering::Relaxed);
+                    factors[b] = 1.0;
+                } else {
+                    factors[b] = 1.0 / masses[b];
+                    self.state.log_z[b] += masses[b].ln();
+                }
+            }
+            ops::scale_cases(self.state.clique_mut(root), &factors);
+        }
+
+        // distribute (downward scale factors must not change ln P(e))
+        let z_snapshot = self.state.log_z.clone();
+        for li in 0..self.down_plans.len() {
+            self.run_layer(false, li);
+        }
+        self.state.log_z.copy_from_slice(&z_snapshot);
+
+        for b in 0..chunk.len() {
+            if self.failed[b].load(Ordering::Relaxed) {
+                out.push(Err(Error::InconsistentEvidence));
+            } else {
+                out.push(Posteriors::compute_lane(&self.jt, self.state.data(), lanes, b, self.state.log_z[b]));
+            }
+        }
+    }
+
+    /// Run one layer: regions A, B (B2 folded where separators fit one
+    /// chunk), C — identical task structure to the hybrid engine, with
+    /// lane-expanded kernels.
+    fn run_layer(&mut self, up: bool, li: usize) {
+        let plan = if up { &self.up_plans[li] } else { &self.down_plans[li] };
+        if plan.msgs.is_empty() {
+            return;
+        }
+        let jt = &self.jt;
+        let lanes = self.lanes;
+        let sep_total = plan.sep_total;
+
+        // region A: flat lane-expanded marginalization into per-worker
+        // partials (lazy-zeroed via generation stamps)
+        self.generation += 1;
+        let generation = self.generation;
+        {
+            let shared = SharedTables::for_batch(&mut self.state);
+            let partials = &self.partials;
+            self.pool.parallel(plan.marg_tasks.len(), &|w, t| {
+                let (mi, ref range) = plan.marg_tasks[t];
+                let m = plan.msgs[mi];
+                let sep_meta = &jt.seps[m.sep];
+                let rm = jt.edge_maps[m.sep].runs_from(sep_meta, m.from);
+                // SAFETY: sources are read-only in region A; worker w owns
+                // its partial slot.
+                let src = unsafe { shared.clique(m.from) };
+                let partial = unsafe { partials.get(w) };
+                let off = plan.sep_off[mi];
+                let slice = &mut partial.buf[off * lanes..(off + sep_meta.len) * lanes];
+                if partial.stamps[mi] != generation {
+                    partial.stamps[mi] = generation;
+                    ops::zero(slice);
+                }
+                ops::marg_runs_cases_range(src, rm, lanes, range.clone(), slice);
+            });
+        }
+
+        // region B1 (+ folded finish): reduce partials per separator-entry
+        // chunk; a single-chunk separator finishes in the task tail
+        let failed = &self.failed;
+        {
+            let shared = SharedTables::for_batch(&mut self.state);
+            let partials = &self.partials;
+            let finish = &self.finish;
+            let ratio_buf = ops::as_atomic(&mut self.ratio[..sep_total * lanes]);
+            let n_workers = self.threads;
+            self.pool.parallel(plan.reduce_tasks.len(), &|w, t| {
+                let (mi, ref range) = plan.reduce_tasks[t];
+                let off = plan.sep_off[mi];
+                let lo = (off + range.start) * lanes;
+                let len = range.len() * lanes;
+                // SAFETY: tasks of one message cover disjoint entry
+                // sub-ranges; tasks of different messages are disjoint.
+                let slice =
+                    unsafe { std::slice::from_raw_parts_mut(ratio_buf.as_ptr().add(lo) as *mut f64, len) };
+                for x in slice.iter_mut() {
+                    *x = 0.0;
+                }
+                for wk in 0..n_workers {
+                    // SAFETY: region A is complete; partial reads race-free.
+                    let partial = unsafe { partials.get(wk) };
+                    if partial.stamps[mi] != generation {
+                        continue;
+                    }
+                    let p = &partial.buf[lo..lo + len];
+                    for (d, &x) in slice.iter_mut().zip(p) {
+                        *d += x;
+                    }
+                }
+                if plan.fused[mi] {
+                    // SAFETY: this task owns the message's whole lane
+                    // window and separator; worker w owns its finish slot
+                    // (no other task touches the finish scratch).
+                    let scratch = unsafe { finish.get(w) };
+                    unsafe {
+                        finish_lanes(jt, plan.msgs[mi], off, lanes, ratio_buf, &shared, scratch, failed)
+                    };
+                }
+            });
+        }
+
+        // region B2: finish for multi-chunk separators only
+        if !plan.b2_msgs.is_empty() {
+            let shared = SharedTables::for_batch(&mut self.state);
+            let finish = &self.finish;
+            let ratio_buf = ops::as_atomic(&mut self.ratio[..sep_total * lanes]);
+            self.pool.parallel(plan.b2_msgs.len(), &|w, t| {
+                let mi = plan.b2_msgs[t];
+                // SAFETY: message mi owns its lane window and separator;
+                // worker w owns its finish slot.
+                let scratch = unsafe { finish.get(w) };
+                unsafe {
+                    finish_lanes(jt, plan.msgs[mi], plan.sep_off[mi], lanes, ratio_buf, &shared, scratch, failed)
+                };
+            });
+        }
+        // fold per-worker per-lane ln-masses into the state
+        for fin in self.finish.iter_mut() {
+            for b in 0..lanes {
+                self.state.log_z[b] += fin.log_z[b];
+                fin.log_z[b] = 0.0;
+            }
+        }
+
+        // region C: flat lane-expanded extension grouped by receiver
+        {
+            let shared = SharedTables::for_batch(&mut self.state);
+            let ratio = &self.ratio;
+            self.pool.parallel(plan.ext_tasks.len(), &|_w, t| {
+                let (gi, ref range) = plan.ext_tasks[t];
+                let (to, ref mis) = plan.groups[gi];
+                // SAFETY: groups have distinct receivers; entry ranges of
+                // one receiver are disjoint.
+                let dst = unsafe { shared.clique_mut(to) };
+                for &mi in mis {
+                    let m = plan.msgs[mi];
+                    let sep_meta = &jt.seps[m.sep];
+                    let rm = jt.edge_maps[m.sep].runs_from(sep_meta, m.to);
+                    let off = plan.sep_off[mi];
+                    let r = &ratio[off * lanes..(off + sep_meta.len) * lanes];
+                    ops::extend_runs_cases_range(dst, rm, lanes, range.clone(), r);
+                }
+            });
+        }
+    }
+}
+
+impl Engine for BatchedHybridEngine {
+    fn name(&self) -> &'static str {
+        "Fast-BNI-batch"
+    }
+
+    /// Single-case inference runs a full sweep with one occupied lane.
+    /// `state` is unused — the engine owns its lane arena — but accepted
+    /// so the engine is a drop-in `Engine` anywhere (shards, coordinator,
+    /// CLI).
+    fn infer(&mut self, _state: &mut TreeState, ev: &Evidence) -> Result<Posteriors> {
+        self.infer_cases(std::slice::from_ref(ev)).pop().expect("one case in, one result out")
+    }
+
+    fn infer_batch(&mut self, _state: &mut TreeState, cases: &[Evidence]) -> Vec<Result<Posteriors>> {
+        self.infer_cases(cases)
+    }
+
+    fn schedule(&self) -> &Schedule {
+        &self.sched
+    }
+
+    fn tree(&self) -> &Arc<JunctionTree> {
+        &self.jt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::{embedded, netgen};
+    use crate::engine::seq::SeqEngine;
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    fn seq_results(jt: &Arc<JunctionTree>, cases: &[Evidence]) -> Vec<Result<Posteriors>> {
+        let mut seq = SeqEngine::new(Arc::clone(jt), &EngineConfig::default().with_threads(1));
+        let mut state = TreeState::fresh(jt);
+        cases.iter().map(|ev| seq.infer(&mut state, ev)).collect()
+    }
+
+    fn assert_agree(jt: &Arc<JunctionTree>, cases: &[Evidence], lanes: usize, threads: usize) {
+        let cfg = EngineConfig { threads, min_chunk: 4, batch: lanes, ..Default::default() };
+        let mut batched = BatchedHybridEngine::new(Arc::clone(jt), &cfg);
+        assert_eq!(batched.lanes(), lanes);
+        let got = batched.infer_cases(cases);
+        let want = seq_results(jt, cases);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            match (g, w) {
+                (Ok(a), Ok(b)) => {
+                    assert!(a.max_abs_diff(b) < 1e-9, "case {i}: diff {}", a.max_abs_diff(b));
+                }
+                (Err(Error::InconsistentEvidence), Err(Error::InconsistentEvidence)) => {}
+                other => panic!("case {i}: batched/seq outcome mismatch: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_seq_across_lane_counts_including_partial_chunks() {
+        let net = embedded::mixed12();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cases = crate::infer::cases::generate(
+            &net,
+            &crate::infer::cases::CaseSpec { n_cases: 11, observed_fraction: 0.25, seed: 51 },
+        );
+        // 11 cases: exercises full sweeps, partial tails, and B=1
+        for lanes in [1usize, 3, 4, 16] {
+            assert_agree(&jt, &cases, lanes, 4);
+        }
+    }
+
+    #[test]
+    fn agrees_with_seq_on_a_larger_generated_network() {
+        let net = netgen::NetSpec {
+            name: "batch-test".into(),
+            nodes: 60,
+            arcs: 85,
+            max_parents: 3,
+            card_choices: vec![(2, 0.6), (3, 0.25), (4, 0.15)],
+            locality: 10,
+            max_table: 1 << 10,
+            alpha: 1.0,
+            seed: 99,
+        }
+        .generate();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cases = crate::infer::cases::generate(
+            &net,
+            &crate::infer::cases::CaseSpec { n_cases: 9, observed_fraction: 0.2, seed: 53 },
+        );
+        assert_agree(&jt, &cases, 4, 8);
+    }
+
+    #[test]
+    fn inconsistent_case_kills_its_lane_only() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let good = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+        let bad = Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        let cases = vec![good.clone(), bad, good.clone()];
+        let cfg = EngineConfig { threads: 2, batch: 3, ..Default::default() };
+        let mut batched = BatchedHybridEngine::new(Arc::clone(&jt), &cfg);
+        let out = batched.infer_cases(&cases);
+        assert!(out[0].is_ok() && out[2].is_ok());
+        assert!(matches!(out[1], Err(Error::InconsistentEvidence)));
+        let p = out[0].as_ref().unwrap();
+        assert!((p.marginal(&net, "lung").unwrap()[0] - 0.1).abs() < 1e-9);
+        assert!((p.evidence_probability() - 0.5).abs() < 1e-9);
+        // the engine stays clean for the next batch
+        let again = batched.infer_cases(&[good]);
+        assert!((again[0].as_ref().unwrap().evidence_probability() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matches_exact_enumeration_through_the_engine_trait() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let ev = Evidence::from_pairs(&net, &[("dysp", "yes")]).unwrap();
+        let exact = crate::infer::exact::enumerate(&net, &ev).unwrap();
+        let cfg = EngineConfig { threads: 2, batch: 4, ..Default::default() };
+        let mut engine: Box<dyn Engine> = Box::new(BatchedHybridEngine::new(Arc::clone(&jt), &cfg));
+        let mut state = TreeState::fresh(&jt);
+        let post = engine.infer(&mut state, &ev).unwrap();
+        assert!(post.max_abs_diff(&exact) < 1e-9);
+        // and via the trait's batch entry point
+        let outs = engine.infer_batch(&mut state, &[ev.clone(), Evidence::none()]);
+        assert!(outs[0].as_ref().unwrap().max_abs_diff(&exact) < 1e-9);
+        assert!(outs[1].as_ref().unwrap().log_z.abs() < 1e-9);
+    }
+
+    #[test]
+    fn soft_evidence_propagates_per_lane() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let smoke = net.var_id("smoke").unwrap();
+        let soft = Evidence::none().with_soft(smoke, vec![4.0, 1.0]).unwrap();
+        let cases = vec![soft, Evidence::none()];
+        let cfg = EngineConfig { threads: 2, batch: 2, ..Default::default() };
+        let mut batched = BatchedHybridEngine::new(Arc::clone(&jt), &cfg);
+        let out = batched.infer_cases(&cases);
+        let a = out[0].as_ref().unwrap();
+        assert!((a.probs[smoke][0] - 0.8).abs() < 1e-9);
+        let b = out[1].as_ref().unwrap();
+        assert!((b.probs[smoke][0] - 0.5).abs() < 1e-9);
+    }
+}

@@ -130,7 +130,7 @@ impl Engine for DirectEngine {
         }
         self.collect_logz(state);
         for &root in &self.sched.roots {
-            let data = &mut state.cliques[root];
+            let data = state.clique_mut(root);
             let mass = ops::sum(data);
             if mass == 0.0 {
                 return Err(Error::InconsistentEvidence);

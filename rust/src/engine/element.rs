@@ -65,7 +65,7 @@ impl ElementEngine {
         let chunks = chunk_ranges(src_len, self.min_chunk, self.max_chunks.max(self.threads));
         {
             let slots = ops::as_atomic(&mut self.new_sep[..sep_len]);
-            let src = &state.cliques[msg.from];
+            let src = state.clique(msg.from);
             let chunks_ref = &chunks;
             self.pool.parallel(chunks_ref.len(), &|_w, t| {
                 ops::atomic_marg_range(src, from_map, chunks_ref[t].clone(), slots);
@@ -81,7 +81,7 @@ impl ElementEngine {
             }
             ops::scale(new_sep, 1.0 / mass);
             state.log_z += mass.ln();
-            let old = &mut state.seps[msg.sep];
+            let old = state.sep_mut(msg.sep);
             ops::ratio(new_sep, old, &mut self.ratio[..sep_len]);
             old.copy_from_slice(new_sep);
         }
@@ -120,7 +120,7 @@ impl Engine for ElementEngine {
             }
         }
         for root in self.sched.roots.clone() {
-            let data = &mut state.cliques[root];
+            let data = state.clique_mut(root);
             let mass = ops::sum(data);
             if mass == 0.0 {
                 return Err(Error::InconsistentEvidence);

@@ -6,8 +6,9 @@
 //! parallel tasks. The tasks are then distributed to the parallel threads
 //! to perform concurrently."*
 //!
-//! Per traversal layer the engine enters exactly four parallel regions,
-//! independent of how many messages the layer contains:
+//! Per traversal layer the engine enters at most four parallel regions —
+//! three in the common all-fused case (see B2 below) — independent of how
+//! many messages the layer contains:
 //!
 //! * **A — flat marginalization**: every message's source-clique entries
 //!   are chunked and pooled together; a chunk scatters into its worker's
@@ -19,7 +20,14 @@
 //!   pooled; each chunk sums the (touched) worker partials, so one huge
 //!   separator cannot serialize the layer.
 //! * **B2 — separator finish**: per message, mass + scale (accumulating
-//!   `ln P(e)`), update ratio, store the new separator.
+//!   `ln P(e)`), update ratio, store the new separator. When a message's
+//!   whole separator fits in a single B1 chunk (the common case — most
+//!   separators are far smaller than `min_chunk`), the finish is **folded
+//!   into the tail of that B1 task** and the message skips region B2
+//!   entirely; a layer whose every separator is single-chunk enters the
+//!   pool only three times. [`HybridEngine::pool_regions`] counts actual
+//!   region entries so `benches/ablation.rs` can report entries per sweep
+//!   against `min_chunk`.
 //! * **C — flat extension**: receiving cliques' entries are chunked and
 //!   pooled; a chunk multiplies in the ratios of *all* messages aimed at
 //!   its clique in this layer (grouping by receiver keeps writes
@@ -27,10 +35,11 @@
 //!
 //! All plans (chunk lists, buffer offsets, receiver groups) depend only on
 //! the tree, so they are precomputed at construction and shared by every
-//! test case.
+//! test case — and reused verbatim by the case-major
+//! [`crate::engine::batched::BatchedHybridEngine`].
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::engine::pool::{chunk_ranges, Pool};
@@ -44,29 +53,38 @@ use crate::jt::state::TreeState;
 use crate::jt::tree::JunctionTree;
 use crate::{Error, Result};
 
-/// Precomputed flat plan for one traversal layer.
-struct LayerPlan {
+/// Precomputed flat plan for one traversal layer. Shared with the
+/// case-major batched engine (`engine::batched`), which runs the same
+/// tasks with lane-expanded kernels.
+pub(crate) struct LayerPlan {
     /// Messages of this layer.
-    msgs: Vec<Msg>,
+    pub(crate) msgs: Vec<Msg>,
     /// Offset of each message's separator in the layer's ratio/partial
     /// buffers.
-    sep_off: Vec<usize>,
+    pub(crate) sep_off: Vec<usize>,
     /// Total separator entries of the layer.
-    sep_total: usize,
+    pub(crate) sep_total: usize,
     /// Region-A tasks: (message index, source-clique entry range).
-    marg_tasks: Vec<(usize, Range<usize>)>,
+    pub(crate) marg_tasks: Vec<(usize, Range<usize>)>,
     /// Region-B1 tasks: (message index, separator entry range) — the
     /// partial reduction is itself flattened, so one huge separator does
     /// not serialize the layer (§Perf item 3 in EXPERIMENTS.md).
-    reduce_tasks: Vec<(usize, Range<usize>)>,
+    pub(crate) reduce_tasks: Vec<(usize, Range<usize>)>,
+    /// Per message: whether its separator is covered by a single B1 chunk,
+    /// letting that task also run the B2 finish (mass/scale/ratio/store)
+    /// in its tail — one fewer pool entry per layer when all fuse.
+    pub(crate) fused: Vec<bool>,
+    /// Messages whose separator spans several B1 chunks and therefore
+    /// still needs the separate B2 region.
+    pub(crate) b2_msgs: Vec<usize>,
     /// Receiver groups: (receiving clique, message indices into it).
-    groups: Vec<(usize, Vec<usize>)>,
+    pub(crate) groups: Vec<(usize, Vec<usize>)>,
     /// Region-C tasks: (group index, receiver-clique entry range).
-    ext_tasks: Vec<(usize, Range<usize>)>,
+    pub(crate) ext_tasks: Vec<(usize, Range<usize>)>,
 }
 
 impl LayerPlan {
-    fn build(jt: &JunctionTree, layer: &[Msg], min_chunk: usize, max_chunks: usize) -> Self {
+    pub(crate) fn build(jt: &JunctionTree, layer: &[Msg], min_chunk: usize, max_chunks: usize) -> Self {
         let msgs = layer.to_vec();
         let mut sep_off = Vec::with_capacity(msgs.len());
         let mut sep_total = 0usize;
@@ -81,10 +99,19 @@ impl LayerPlan {
                 marg_tasks.push((mi, r));
             }
         }
-        // region B1: flatten all separator entries
+        // region B1: flatten all separator entries; a single-chunk
+        // separator marks its message fused (B2 folded into that task)
         let mut reduce_tasks = Vec::new();
+        let mut fused = Vec::with_capacity(msgs.len());
+        let mut b2_msgs = Vec::new();
         for (mi, m) in msgs.iter().enumerate() {
-            for r in chunk_ranges(jt.seps[m.sep].len, min_chunk.min(1 << 12), max_chunks) {
+            let ranges = chunk_ranges(jt.seps[m.sep].len, min_chunk.min(1 << 12), max_chunks);
+            let single = ranges.len() == 1;
+            fused.push(single);
+            if !single {
+                b2_msgs.push(mi);
+            }
+            for r in ranges {
                 reduce_tasks.push((mi, r));
             }
         }
@@ -101,7 +128,7 @@ impl LayerPlan {
                 ext_tasks.push((gi, r));
             }
         }
-        LayerPlan { msgs, sep_off, sep_total, marg_tasks, reduce_tasks, groups, ext_tasks }
+        LayerPlan { msgs, sep_off, sep_total, marg_tasks, reduce_tasks, fused, b2_msgs, groups, ext_tasks }
     }
 }
 
@@ -111,9 +138,47 @@ impl LayerPlan {
 /// reduces only stamped (actually touched) workers — so partial-buffer
 /// traffic scales with the work done, not with `threads × sep_total`
 /// (§Perf item 2 in EXPERIMENTS.md).
-struct Partial {
-    buf: Vec<f64>,
-    stamps: Vec<u64>,
+pub(crate) struct Partial {
+    pub(crate) buf: Vec<f64>,
+    pub(crate) stamps: Vec<u64>,
+}
+
+/// Finish one message after its separator values have been reduced into
+/// `ratio_buf[off .. off+len]`: compute the mass (0 ⇒ inconsistent
+/// evidence), scale to unit mass accumulating `ln`-mass into worker `w`'s
+/// slot, store the new separator, and turn the buffer slice into the
+/// update ratio in place. Shared by the fused B1 tail and region B2.
+///
+/// # Safety
+/// The caller must hold `ratio_buf[off .. off+len]`, the message's
+/// separator table, and worker `w`'s log-z slot exclusively.
+pub(crate) unsafe fn finish_message(
+    jt: &JunctionTree,
+    m: Msg,
+    off: usize,
+    ratio_buf: &[AtomicU64],
+    shared: &SharedTables,
+    log_z: &PerWorker<f64>,
+    w: usize,
+    failed: &AtomicBool,
+) {
+    let len = jt.seps[m.sep].len;
+    let ratio_slice = std::slice::from_raw_parts_mut(ratio_buf.as_ptr().add(off) as *mut f64, len);
+    let mass = ops::sum(ratio_slice);
+    if mass == 0.0 {
+        failed.store(true, Ordering::Relaxed);
+        return;
+    }
+    ops::scale(ratio_slice, 1.0 / mass);
+    *log_z.get(w) += mass.ln();
+    // store new separator, convert slice to ratio in place
+    let sep_tab = shared.sep_mut(m.sep);
+    for j in 0..len {
+        let new = ratio_slice[j];
+        let old = sep_tab[j];
+        sep_tab[j] = new;
+        ratio_slice[j] = if old != 0.0 { new / old } else { 0.0 };
+    }
 }
 
 /// The hybrid Fast-BNI-par engine (see module docs).
@@ -132,6 +197,9 @@ pub struct HybridEngine {
     log_z: PerWorker<f64>,
     /// Current stamp generation (bumped per layer execution).
     generation: u64,
+    /// Pool regions actually entered (monotone; see
+    /// [`HybridEngine::pool_regions`]).
+    regions: u64,
 }
 
 impl HybridEngine {
@@ -152,7 +220,27 @@ impl HybridEngine {
             PerWorker::new(threads, |_| Partial { buf: vec![0.0; max_sep_total], stamps: vec![0; max_msgs] });
         let ratio = vec![0.0; max_sep_total];
         let log_z = PerWorker::new(threads, |_| 0.0);
-        HybridEngine { jt, sched, pool, threads, up_plans, down_plans, partials, ratio, log_z, generation: 0 }
+        HybridEngine {
+            jt,
+            sched,
+            pool,
+            threads,
+            up_plans,
+            down_plans,
+            partials,
+            ratio,
+            log_z,
+            generation: 0,
+            regions: 0,
+        }
+    }
+
+    /// Total parallel regions entered so far (monotone across cases).
+    /// `benches/ablation.rs` reads the per-sweep delta: with the B2 finish
+    /// folded into single-chunk B1 tasks, a layer costs 3 entries instead
+    /// of 4 whenever every separator fits one chunk.
+    pub fn pool_regions(&self) -> u64 {
+        self.regions
     }
 
     /// Run one layer: regions A, B, C.
@@ -168,6 +256,7 @@ impl HybridEngine {
         // Slices are zeroed lazily on first touch per (worker, message)
         // via generation stamps — no O(threads × sep_total) memset.
         self.generation += 1;
+        self.regions += 1;
         let generation = self.generation;
         {
             let shared = SharedTables::new(state);
@@ -192,12 +281,18 @@ impl HybridEngine {
         }
 
         // region B1: flat partial reduction — separator entry chunks, so a
-        // single huge separator never serializes the layer
+        // single huge separator never serializes the layer. A task whose
+        // chunk covers its message's whole separator (plan.fused) also runs
+        // the B2 finish in its tail, so that message skips region B2.
+        let failed = AtomicBool::new(false);
+        self.regions += 1;
         {
+            let shared = SharedTables::new(state);
             let partials = &self.partials;
+            let log_z = &self.log_z;
             let ratio_buf = ops::as_atomic(&mut self.ratio[..sep_total]);
             let n_workers = self.threads;
-            self.pool.parallel(plan.reduce_tasks.len(), &|_w, t| {
+            self.pool.parallel(plan.reduce_tasks.len(), &|w, t| {
                 let (mi, ref range) = plan.reduce_tasks[t];
                 let off = plan.sep_off[mi];
                 // SAFETY: tasks of one message cover disjoint sub-ranges of
@@ -223,43 +318,28 @@ impl HybridEngine {
                         *d += x;
                     }
                 }
+                if plan.fused[mi] {
+                    // SAFETY: this task owns the message's whole
+                    // [off, off+len) range and its separator exclusively.
+                    unsafe { finish_message(jt, plan.msgs[mi], off, ratio_buf, &shared, log_z, w, &failed) };
+                }
             });
         }
 
-        // region B2: per-message finish (mass, scale, ratio, store)
-        let failed = AtomicBool::new(false);
-        {
+        // region B2: finish for multi-chunk separators only (skipped —
+        // no pool entry — when every message of the layer fused into B1)
+        if !plan.b2_msgs.is_empty() {
+            self.regions += 1;
             let shared = SharedTables::new(state);
             let log_z = &self.log_z;
             let ratio_buf = ops::as_atomic(&mut self.ratio[..sep_total]);
-            self.pool.parallel(plan.msgs.len(), &|w, mi| {
-                let m = plan.msgs[mi];
-                let sep_meta = &jt.seps[m.sep];
-                let off = plan.sep_off[mi];
-                let len = sep_meta.len;
+            self.pool.parallel(plan.b2_msgs.len(), &|w, t| {
+                let mi = plan.b2_msgs[t];
                 // SAFETY: message mi owns [off, off+len) of the ratio
                 // buffer and its separator table exclusively.
-                let ratio_slice = unsafe {
-                    std::slice::from_raw_parts_mut(ratio_buf.as_ptr().add(off) as *mut f64, len)
-                };
-                let mass = ops::sum(ratio_slice);
-                if mass == 0.0 {
-                    failed.store(true, Ordering::Relaxed);
-                    return;
-                }
-                ops::scale(ratio_slice, 1.0 / mass);
-                // SAFETY: worker w owns its log_z slot.
                 unsafe {
-                    *log_z.get(w) += mass.ln();
-                }
-                // store new separator, convert slice to ratio in place
-                let sep_tab = unsafe { shared.sep_mut(m.sep) };
-                for j in 0..len {
-                    let new = ratio_slice[j];
-                    let old = sep_tab[j];
-                    sep_tab[j] = new;
-                    ratio_slice[j] = if old != 0.0 { new / old } else { 0.0 };
-                }
+                    finish_message(jt, plan.msgs[mi], plan.sep_off[mi], ratio_buf, &shared, log_z, w, &failed)
+                };
             });
         }
         for w in self.log_z.iter_mut() {
@@ -271,6 +351,7 @@ impl HybridEngine {
         }
 
         // region C: flat extension grouped by receiver
+        self.regions += 1;
         {
             let shared = SharedTables::new(state);
             let ratio = &self.ratio;
@@ -305,7 +386,7 @@ impl Engine for HybridEngine {
             self.run_layer(state, true, li)?;
         }
         for root in self.sched.roots.clone() {
-            let data = &mut state.cliques[root];
+            let data = state.clique_mut(root);
             let mass = ops::sum(data);
             if mass == 0.0 {
                 return Err(Error::InconsistentEvidence);
@@ -419,6 +500,51 @@ mod tests {
             let b = seq.infer(&mut s2, ev).unwrap();
             assert!(a.max_abs_diff(&b) < 1e-9, "case {i}: diff {}", a.max_abs_diff(&b));
         }
+    }
+
+    #[test]
+    fn b2_fold_covers_every_message_exactly_once() {
+        let net = embedded::mixed12();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        for min_chunk in [1usize, 4, 1 << 11] {
+            let cfg = EngineConfig { threads: 4, min_chunk, ..Default::default() };
+            let e = HybridEngine::new(Arc::clone(&jt), &cfg);
+            for plan in e.up_plans.iter().chain(&e.down_plans) {
+                assert_eq!(plan.fused.len(), plan.msgs.len());
+                for (mi, &fused) in plan.fused.iter().enumerate() {
+                    let n_chunks = plan.reduce_tasks.iter().filter(|(tmi, _)| *tmi == mi).count();
+                    // fused ⇔ exactly one B1 chunk; unfused messages appear
+                    // in b2_msgs exactly once
+                    assert_eq!(fused, n_chunks == 1, "mi={mi} min_chunk={min_chunk}");
+                    let in_b2 = plan.b2_msgs.iter().filter(|&&x| x == mi).count();
+                    assert_eq!(in_b2, usize::from(!fused));
+                }
+            }
+        }
+        // with the default (large) min_chunk every mixed12 separator fits
+        // one chunk, so the whole layer fuses: 3 regions per layer
+        let cfg = EngineConfig { threads: 4, ..Default::default() };
+        let e = HybridEngine::new(Arc::clone(&jt), &cfg);
+        assert!(e.up_plans.iter().chain(&e.down_plans).all(|p| p.b2_msgs.is_empty()));
+    }
+
+    #[test]
+    fn pool_region_counter_counts_entered_regions() {
+        let net = embedded::mixed12();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cfg = EngineConfig { threads: 2, ..Default::default() };
+        let mut e = HybridEngine::new(Arc::clone(&jt), &cfg);
+        let mut state = TreeState::fresh(&jt);
+        assert_eq!(e.pool_regions(), 0);
+        e.infer(&mut state, &Evidence::none()).unwrap();
+        let per_sweep = e.pool_regions();
+        // all-fused layers: exactly 3 regions per non-empty layer
+        let layers: u64 =
+            (e.up_plans.iter().chain(&e.down_plans)).filter(|p| !p.msgs.is_empty()).count() as u64;
+        assert_eq!(per_sweep, 3 * layers);
+        // the counter is monotone per sweep
+        e.infer(&mut state, &Evidence::none()).unwrap();
+        assert_eq!(e.pool_regions(), 2 * per_sweep);
     }
 
     #[test]

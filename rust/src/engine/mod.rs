@@ -13,6 +13,7 @@
 //! differences isolate the parallelization strategy, mirroring the
 //! paper's comparison.
 
+pub mod batched;
 pub mod direct;
 pub mod element;
 pub mod hybrid;
@@ -48,6 +49,18 @@ pub trait Engine {
     /// built for.
     fn infer(&mut self, state: &mut TreeState, ev: &Evidence) -> Result<Posteriors>;
 
+    /// Run many cases, returning one result per case in order. A failing
+    /// case (inconsistent evidence) yields `Err` for its slot only.
+    ///
+    /// Default: a plain loop over [`Engine::infer`] reusing `state`. The
+    /// batched engine overrides this with fused multi-case sweeps
+    /// ([`batched::BatchedHybridEngine`]); callers that batch (the fleet's
+    /// `BATCH` verb, the coordinator's fused mode) always go through this
+    /// entry point so any engine slots in.
+    fn infer_batch(&mut self, state: &mut TreeState, cases: &[Evidence]) -> Vec<Result<Posteriors>> {
+        cases.iter().map(|ev| self.infer(state, ev)).collect()
+    }
+
     /// The traversal schedule in use (for layer-count reporting).
     fn schedule(&self) -> &Schedule;
 
@@ -69,6 +82,9 @@ pub struct EngineConfig {
     pub min_chunk: usize,
     /// Maximum chunks a single table is split into.
     pub max_chunks: usize,
+    /// Cases per sweep (lanes) for the batched engine; other engines
+    /// ignore it. 1 = unbatched.
+    pub batch: usize,
 }
 
 impl Default for EngineConfig {
@@ -79,6 +95,7 @@ impl Default for EngineConfig {
             map_mode: MapMode::Cached,
             min_chunk: 1 << 11,
             max_chunks: 256,
+            batch: 1,
         }
     }
 }
@@ -98,6 +115,12 @@ impl EngineConfig {
         self.threads = t;
         self
     }
+
+    /// Copy with a specific lane count (cases per batched sweep).
+    pub fn with_batch(mut self, b: usize) -> Self {
+        self.batch = b;
+        self
+    }
 }
 
 /// The engine selector (Table 1 columns).
@@ -115,6 +138,10 @@ pub enum EngineKind {
     Element,
     /// Fast-BNI-par hybrid parallelism (the paper's contribution).
     Hybrid,
+    /// Case-major batched hybrid: `EngineConfig::batch` cases per sweep
+    /// (an extension beyond the poster — the Fast-PGM throughput
+    /// direction; not a Table-1 column, so not in [`EngineKind::ALL`]).
+    Batched,
 }
 
 impl EngineKind {
@@ -142,6 +169,7 @@ impl EngineKind {
             EngineKind::Primitive => Box::new(primitive::PrimitiveEngine::new(jt, cfg)),
             EngineKind::Element => Box::new(element::ElementEngine::new(jt, cfg)),
             EngineKind::Hybrid => Box::new(hybrid::HybridEngine::new(jt, cfg)),
+            EngineKind::Batched => Box::new(batched::BatchedHybridEngine::new(jt, cfg)),
         }
     }
 
@@ -154,6 +182,7 @@ impl EngineKind {
             EngineKind::Primitive => "Prim.",
             EngineKind::Element => "Elem.",
             EngineKind::Hybrid => "Fast-BNI-par",
+            EngineKind::Batched => "Fast-BNI-batch",
         }
     }
 }
@@ -168,6 +197,7 @@ impl std::str::FromStr for EngineKind {
             "primitive" | "prim" => Ok(EngineKind::Primitive),
             "element" | "elem" => Ok(EngineKind::Element),
             "hybrid" | "par" | "fast-bni-par" => Ok(EngineKind::Hybrid),
+            "batched" | "batch" | "fast-bni-batch" => Ok(EngineKind::Batched),
             other => Err(crate::Error::msg(format!("unknown engine {other:?}"))),
         }
     }
@@ -189,9 +219,40 @@ mod tests {
     fn kind_parsing_and_labels() {
         assert_eq!("hybrid".parse::<EngineKind>().unwrap(), EngineKind::Hybrid);
         assert_eq!("Prim".parse::<EngineKind>().unwrap(), EngineKind::Primitive);
+        assert_eq!("batched".parse::<EngineKind>().unwrap(), EngineKind::Batched);
         assert!("warp".parse::<EngineKind>().is_err());
         assert_eq!(EngineKind::Hybrid.label(), "Fast-BNI-par");
+        assert_eq!(EngineKind::Batched.label(), "Fast-BNI-batch");
         assert_eq!(format!("{}", EngineKind::Unb), "UnBBayes");
+        // Batched is an extension, not a Table-1 column
+        assert!(!EngineKind::ALL.contains(&EngineKind::Batched));
+    }
+
+    #[test]
+    fn default_infer_batch_loops_infer_and_isolates_failures() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let mut engine = EngineKind::Seq.build(Arc::clone(&jt), &EngineConfig::default().with_threads(1));
+        let mut state = TreeState::fresh(&jt);
+        let good = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+        let bad = Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        let outs = engine.infer_batch(&mut state, &[good.clone(), bad, good]);
+        assert!(outs[0].is_ok() && outs[2].is_ok());
+        assert!(outs[1].is_err());
+        assert!((outs[0].as_ref().unwrap().evidence_probability() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batched_kind_builds_through_the_selector() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cfg = EngineConfig { threads: 2, ..Default::default() }.with_batch(4);
+        let mut engine = EngineKind::Batched.build(Arc::clone(&jt), &cfg);
+        assert_eq!(engine.name(), "Fast-BNI-batch");
+        let mut state = TreeState::fresh(&jt);
+        let ev = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+        let post = engine.infer(&mut state, &ev).unwrap();
+        assert!((post.marginal(&net, "lung").unwrap()[0] - 0.1).abs() < 1e-9);
     }
 
     #[test]

@@ -75,7 +75,7 @@ impl PrimitiveEngine {
         let src_len = jt.cliques[msg.from].len;
         let chunks = chunk_ranges(src_len, self.min_chunk, self.max_chunks.max(self.threads));
         {
-            let src = &state.cliques[msg.from];
+            let src = state.clique(msg.from);
             let partials = &self.partials;
             let chunks_ref = &chunks;
             self.pool.parallel(chunks_ref.len(), &|w, t| {
@@ -100,7 +100,7 @@ impl PrimitiveEngine {
             }
             ops::scale(new_sep, 1.0 / mass);
             state.log_z += mass.ln();
-            let old = &mut state.seps[msg.sep];
+            let old = state.sep_mut(msg.sep);
             ops::ratio(new_sep, old, &mut self.ratio[..sep_len]);
             old.copy_from_slice(new_sep);
         }
@@ -139,7 +139,7 @@ impl Engine for PrimitiveEngine {
             }
         }
         for root in self.sched.roots.clone() {
-            let data = &mut state.cliques[root];
+            let data = state.clique_mut(root);
             let mass = ops::sum(data);
             if mass == 0.0 {
                 return Err(Error::InconsistentEvidence);

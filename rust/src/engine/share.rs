@@ -2,25 +2,34 @@
 //!
 //! The engines' schedules guarantee structural disjointness (each task
 //! writes a distinct clique / separator / chunk range), but the borrow
-//! checker cannot see through a `Vec<Vec<f64>>` indexed from multiple
+//! checker cannot see through a shared flat arena indexed from multiple
 //! worker threads. These two small wrappers concentrate the `unsafe` in
 //! one audited place:
 //!
 //! * [`SharedTables`] — hands out raw clique/separator slices of a
-//!   [`TreeState`] across threads; callers must touch disjoint regions.
+//!   [`TreeState`] (or, lane-expanded, of a [`BatchState`]) across
+//!   threads; callers must touch disjoint regions. Since the arena
+//!   refactor all tables live in **one allocation**, so "disjoint" means
+//!   disjoint index ranges of that allocation — which the layout
+//!   guarantees for distinct tables, and chunk plans guarantee within a
+//!   table.
 //! * [`PerWorker`] — one scratch slot per pool worker; the pool guarantees
 //!   a worker id runs one task at a time, so access is race-free.
 
 use std::cell::UnsafeCell;
+use std::sync::Arc;
 
-use crate::jt::state::TreeState;
+use crate::jt::state::{ArenaLayout, BatchState, TreeState};
 
-/// Raw shared view of a `TreeState` for one parallel region.
+/// Raw shared view of a state arena for one parallel region.
+///
+/// `lanes == 1` for a [`TreeState`]; a [`BatchState`] view returns
+/// lane-expanded slices (`len * lanes` values per table, entry `i` of lane
+/// `b` at `i * lanes + b`).
 pub struct SharedTables {
-    cliques: *mut Vec<f64>,
-    n_cliques: usize,
-    seps: *mut Vec<f64>,
-    n_seps: usize,
+    data: *mut f64,
+    lanes: usize,
+    layout: Arc<ArenaLayout>,
 }
 
 // SAFETY: access contracts are delegated to the unsafe methods below.
@@ -28,15 +37,31 @@ unsafe impl Send for SharedTables {}
 unsafe impl Sync for SharedTables {}
 
 impl SharedTables {
-    /// Wrap a state for the duration of one parallel region. The `&mut`
-    /// receipt guarantees exclusivity at the region boundary.
+    /// Wrap a single-case state for the duration of one parallel region.
+    /// The `&mut` receipt guarantees exclusivity at the region boundary.
     pub fn new(state: &mut TreeState) -> Self {
-        SharedTables {
-            cliques: state.cliques.as_mut_ptr(),
-            n_cliques: state.cliques.len(),
-            seps: state.seps.as_mut_ptr(),
-            n_seps: state.seps.len(),
-        }
+        let layout = Arc::clone(state.layout());
+        SharedTables { data: state.data_mut().as_mut_ptr(), lanes: 1, layout }
+    }
+
+    /// Wrap a batch state (lane-expanded slices) for one parallel region.
+    pub fn for_batch(state: &mut BatchState) -> Self {
+        let layout = Arc::clone(state.layout());
+        let lanes = state.lanes();
+        SharedTables { data: state.data_mut().as_mut_ptr(), lanes, layout }
+    }
+
+    /// Lanes per entry in the slices this view hands out.
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// # Safety
+    /// Caller must uphold the per-method aliasing contracts.
+    #[inline]
+    unsafe fn range_mut(&self, r: std::ops::Range<usize>) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(self.data.add(r.start * self.lanes), (r.end - r.start) * self.lanes)
     }
 
     /// Read-only view of clique `c`.
@@ -45,8 +70,7 @@ impl SharedTables {
     /// No concurrent task may hold a mutable view of the same clique.
     #[inline]
     pub unsafe fn clique(&self, c: usize) -> &[f64] {
-        debug_assert!(c < self.n_cliques);
-        &*self.cliques.add(c)
+        &*self.range_mut(self.layout.clique_range(c))
     }
 
     /// Mutable view of clique `c`.
@@ -57,8 +81,7 @@ impl SharedTables {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn clique_mut(&self, c: usize) -> &mut [f64] {
-        debug_assert!(c < self.n_cliques);
-        &mut *self.cliques.add(c)
+        self.range_mut(self.layout.clique_range(c))
     }
 
     /// Mutable view of separator `s`.
@@ -68,8 +91,7 @@ impl SharedTables {
     #[inline]
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn sep_mut(&self, s: usize) -> &mut [f64] {
-        debug_assert!(s < self.n_seps);
-        &mut *self.seps.add(s)
+        self.range_mut(self.layout.sep_range(s))
     }
 }
 
@@ -142,7 +164,7 @@ mod tests {
         let net = embedded::asia();
         let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
         let mut state = TreeState::fresh(&jt);
-        let n = state.cliques.len();
+        let n = jt.n_cliques();
         let pool = Pool::new(4);
         {
             let shared = SharedTables::new(&mut state);
@@ -154,8 +176,31 @@ mod tests {
                 }
             });
         }
-        for (c, data) in state.cliques.iter().enumerate() {
-            assert!(data.iter().all(|&x| x == c as f64));
+        for c in 0..n {
+            assert!(state.clique(c).iter().all(|&x| x == c as f64));
         }
+    }
+
+    #[test]
+    fn batch_view_hands_out_lane_expanded_slices() {
+        use crate::bn::embedded;
+        use crate::jt::tree::JunctionTree;
+        use crate::jt::triangulate::TriangulationHeuristic;
+
+        let net = embedded::asia();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let mut bs = BatchState::fresh(&jt, 4);
+        {
+            let shared = SharedTables::for_batch(&mut bs);
+            assert_eq!(shared.lanes(), 4);
+            // single-threaded exclusive use satisfies the contracts
+            unsafe {
+                assert_eq!(shared.clique(0).len(), jt.cliques[0].len * 4);
+                shared.clique_mut(0)[1] = 9.0; // entry 0, lane 1
+                shared.sep_mut(0)[0] = 3.0; // entry 0, lane 0
+            }
+        }
+        assert_eq!(bs.clique(0)[1], 9.0);
+        assert_eq!(bs.sep(0)[0], 3.0);
     }
 }

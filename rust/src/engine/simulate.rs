@@ -378,7 +378,11 @@ pub fn simulate_case(
             }
             total
         }
-        EngineKind::Hybrid => {
+        // The batched engine runs the same plans with lane-expanded
+        // kernels; per-case modeled time is the hybrid cost (the model
+        // does not capture the cross-case map-lookup amortization —
+        // benches/batch.rs measures that for real).
+        EngineKind::Hybrid | EngineKind::Batched => {
             let mut total = 0.0;
             for layer in layers.iter() {
                 if layer.is_empty() {
@@ -402,20 +406,30 @@ pub fn simulate_case(
                 }
                 total += makespan(&a_tasks, threads) + model.region_ns;
                 // region B1: flat partial reduction (sep-entry chunks × the
-                // workers that actually touched the message)
+                // workers that actually touched the message); a message
+                // whose separator fits one chunk runs the B2 finish in
+                // that task's tail (the fold — see engine/hybrid.rs)
                 let mut b1_tasks = Vec::new();
+                let mut b2_tasks: Vec<f64> = Vec::new();
                 for (m, &tw) in layer.iter().zip(&touched) {
-                    for r in chunk_ranges(jt.seps[m.sep].len, cfg.min_chunk.min(1 << 12), cfg.max_chunks) {
-                        b1_tasks.push(r.len() as f64 * tw as f64 * model.sep_ns + model.task_ns);
+                    let sep = jt.seps[m.sep].len as f64;
+                    let finish = sep * 2.0 * model.sep_ns;
+                    let ranges = chunk_ranges(jt.seps[m.sep].len, cfg.min_chunk.min(1 << 12), cfg.max_chunks);
+                    let fused = ranges.len() == 1;
+                    for r in ranges {
+                        let tail = if fused { finish } else { 0.0 };
+                        b1_tasks.push(r.len() as f64 * tw as f64 * model.sep_ns + model.task_ns + tail);
+                    }
+                    if !fused {
+                        b2_tasks.push(finish + model.task_ns);
                     }
                 }
                 total += makespan(&b1_tasks, threads) + model.region_ns;
-                // region B2: per-message finish (mass + scale + ratio+store)
-                let b2_tasks: Vec<f64> = layer
-                    .iter()
-                    .map(|m| jt.seps[m.sep].len as f64 * 2.0 * model.sep_ns + model.task_ns)
-                    .collect();
-                total += makespan(&b2_tasks, threads) + model.region_ns;
+                // region B2 only for multi-chunk separators — with default
+                // chunking it is usually skipped, and so is its region cost
+                if !b2_tasks.is_empty() {
+                    total += makespan(&b2_tasks, threads) + model.region_ns;
+                }
                 // region C: flat run-kernel extend chunks grouped by receiver
                 let mut by_to: std::collections::BTreeMap<usize, Vec<&Msg>> = Default::default();
                 for m in layer.iter() {

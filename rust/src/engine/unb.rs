@@ -49,7 +49,7 @@ impl UnbEngine {
         let from_strides = strides(&from.cards);
         let from_proj = projection_strides(&from.vars, &sep_meta.vars, &sep_meta.cards);
         let mut new_sep = vec![0.0f64; sep_meta.len];
-        ops::marg_divmod(&state.cliques[msg.from], &from.cards, &from_strides, &from_proj, &mut new_sep);
+        ops::marg_divmod(state.clique(msg.from), &from.cards, &from_strides, &from_proj, &mut new_sep);
 
         let mass = ops::sum(&new_sep);
         if mass == 0.0 {
@@ -59,13 +59,13 @@ impl UnbEngine {
         state.log_z += mass.ln();
 
         let mut ratio = vec![0.0f64; sep_meta.len];
-        ops::ratio(&new_sep, &state.seps[msg.sep], &mut ratio);
-        state.seps[msg.sep].copy_from_slice(&new_sep);
+        ops::ratio(&new_sep, state.sep(msg.sep), &mut ratio);
+        state.sep_mut(msg.sep).copy_from_slice(&new_sep);
 
         let to = &jt.cliques[msg.to];
         let to_strides = strides(&to.cards);
         let to_proj = projection_strides(&to.vars, &sep_meta.vars, &sep_meta.cards);
-        ops::extend_divmod(&mut state.cliques[msg.to], &to.cards, &to_strides, &to_proj, &ratio);
+        ops::extend_divmod(state.clique_mut(msg.to), &to.cards, &to_strides, &to_proj, &ratio);
         mass
     }
 }
@@ -86,7 +86,7 @@ impl Engine for UnbEngine {
             }
         }
         for &root in &self.sched.roots {
-            let data = &mut state.cliques[root];
+            let data = state.clique_mut(root);
             let mass = ops::sum(data);
             if mass == 0.0 {
                 return Err(Error::InconsistentEvidence);

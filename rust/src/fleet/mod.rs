@@ -18,6 +18,13 @@
 //! RETRACT var ...         stage evidence removals
 //! COMMIT                  apply staged deltas to the session's evidence
 //! QUERY <var> [| ev ...]  posterior under committed (+ inline) evidence
+//! BATCH <n> <var>         open an n-case batch for <var>'s posterior
+//! CASE [ev=state ...]     one batch case (committed evidence + inline,
+//!                         inline wins); the n-th CASE dispatches all n
+//!                         cases in ONE shard dispatch (one fused sweep
+//!                         with the batched engine) and returns n reply
+//!                         lines — n evidence lines in, n posterior
+//!                         lines out. Any other verb aborts the batch.
 //! STATS                   fleet-wide per-network counters and latency
 //! PING                    liveness probe (the cluster tier's health check)
 //! EVICT <net>             drop a network (cluster registry hand-off)
@@ -26,7 +33,9 @@
 //!
 //! Sessions stream evidence *deltas* instead of resending full evidence
 //! per query — the shape an evidence-stream workload (e.g. a sensor feed)
-//! actually has.
+//! actually has. `BATCH` is the complementary throughput shape: a scoring
+//! client (label a file of cases against one target) ships N cases and
+//! gets N posteriors with one round of propagation amortization.
 
 pub mod metrics;
 pub mod registry;
@@ -151,6 +160,37 @@ impl Fleet {
             Err(e) => {
                 // a no-op for unknown names: record never mints entries
                 self.metrics.record(name, Duration::ZERO, false);
+                Err(e)
+            }
+        }
+    }
+
+    /// Run a multi-case batch against a loaded network in **one shard
+    /// dispatch** (the `BATCH` verb path). Per-case outcomes come back in
+    /// order; metrics record each case with its share of the shard-side
+    /// service time. The outer `Err` is transport-level only (network not
+    /// loaded, shard worker gone).
+    pub fn query_batch(&self, name: &str, cases: Vec<Evidence>) -> Result<Vec<Result<Posteriors>>> {
+        if cases.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = cases.len() as u32;
+        let _ = self.registry.get(name); // refresh the LRU stamp, as in query()
+        match self.router.query_batch(name, cases) {
+            Ok((results, service)) => {
+                let per_case = service / n;
+                for r in &results {
+                    self.metrics.record(name, per_case, r.is_ok());
+                }
+                Ok(results)
+            }
+            Err(e) => {
+                // a transport-level failure failed every case in the batch;
+                // record them all so STATS error counts match what the
+                // client saw (n ERR lines)
+                for _ in 0..n {
+                    self.metrics.record(name, Duration::ZERO, false);
+                }
                 Err(e)
             }
         }

@@ -24,8 +24,11 @@ use crate::jt::tree::JunctionTree;
 use crate::{Error, Result};
 
 struct Job {
-    ev: Evidence,
-    reply: mpsc::Sender<(Result<Posteriors>, Duration)>,
+    /// One or more evidence cases; a multi-case job runs through the
+    /// engine's `infer_batch` in **one shard dispatch** (the `BATCH` verb
+    /// path — a single sweep with the batched engine).
+    cases: Vec<Evidence>,
+    reply: mpsc::Sender<(Vec<Result<Posteriors>>, Duration)>,
 }
 
 struct Shard {
@@ -93,6 +96,19 @@ impl ShardGroup {
     /// Returns the posteriors and the shard-side service time (queue wait
     /// excluded from neither — the clock starts when the job is accepted).
     pub fn dispatch(&self, ev: Evidence) -> Result<(Posteriors, Duration)> {
+        let (mut results, service) = self.dispatch_batch(vec![ev])?;
+        results.pop().expect("one case in, one result out").map(|p| (p, service))
+    }
+
+    /// Run a multi-case batch as **one** shard dispatch: the shard worker
+    /// feeds all cases to `Engine::infer_batch` (one fused sweep per
+    /// engine-side chunk with the batched engine). Per-case failures come
+    /// back in their slots; the outer `Err` is reserved for transport
+    /// (shutdown, dead worker).
+    pub fn dispatch_batch(&self, cases: Vec<Evidence>) -> Result<(Vec<Result<Posteriors>>, Duration)> {
+        if cases.is_empty() {
+            return Ok((Vec::new(), Duration::ZERO));
+        }
         let start = self.rotor.fetch_add(1, Ordering::Relaxed) % self.shards.len();
         let mut best = start;
         let mut best_depth = self.shards[start].depth.load(Ordering::Relaxed);
@@ -111,13 +127,13 @@ impl ShardGroup {
         };
         shard.depth.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
-        if tx.send(Job { ev, reply: reply_tx }).is_err() {
+        if tx.send(Job { cases, reply: reply_tx }).is_err() {
             shard.depth.fetch_sub(1, Ordering::Relaxed);
             return Err(Error::msg(format!("network {:?} is shutting down", self.name)));
         }
         drop(tx);
         match reply_rx.recv() {
-            Ok((outcome, service)) => outcome.map(|p| (p, service)),
+            Ok((outcomes, service)) => Ok((outcomes, service)),
             Err(_) => Err(Error::msg(format!("shard worker for {:?} died", self.name))),
         }
     }
@@ -152,18 +168,20 @@ fn shard_worker(
         // a panicking case must not kill the shard: without the catch, the
         // worker dies with its depth stuck and ~1/N of the network's
         // queries fail as "shutting down" forever
-        let outcome =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine.infer(&mut state, &job.ev)));
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.infer_batch(&mut state, &job.cases)
+        }));
         depth.fetch_sub(1, Ordering::Relaxed);
         match outcome {
             // the requester may have given up; a dead reply channel is fine
-            Ok(result) => {
-                let _ = job.reply.send((result, t0.elapsed()));
+            Ok(results) => {
+                let _ = job.reply.send((results, t0.elapsed()));
             }
             Err(_) => {
                 // engine pool and state may be mid-mutation: rebuild both
                 let msg = "inference panicked; shard engine rebuilt";
-                let _ = job.reply.send((Err(Error::msg(msg)), t0.elapsed()));
+                let results = job.cases.iter().map(|_| Err(Error::msg(msg))).collect();
+                let _ = job.reply.send((results, t0.elapsed()));
                 engine = engine_kind.build(Arc::clone(&jt), &cfg);
                 state = TreeState::fresh(&jt);
             }
@@ -214,6 +232,12 @@ impl Router {
         group.dispatch(ev)
     }
 
+    /// Dispatch a multi-case batch to `name`'s group (one shard dispatch).
+    pub fn query_batch(&self, name: &str, cases: Vec<Evidence>) -> Result<(Vec<Result<Posteriors>>, Duration)> {
+        let group = self.group(name).ok_or_else(|| Error::msg(format!("network {name:?} is not loaded")))?;
+        group.dispatch_batch(cases)
+    }
+
     /// Names with live shard groups, sorted.
     pub fn names(&self) -> Vec<String> {
         let mut names: Vec<String> = self.groups.lock().unwrap().keys().cloned().collect();
@@ -260,6 +284,37 @@ mod tests {
         let lung = post.marginal(&jt.net, "lung").unwrap();
         assert!((lung[0] - 0.01).abs() < 1e-9);
         assert_eq!(group.depths(), vec![0]);
+    }
+
+    #[test]
+    fn batch_dispatch_is_one_job_with_per_case_results() {
+        let jt = asia_tree();
+        let group = ShardGroup::new(
+            "asia",
+            Arc::clone(&jt),
+            2,
+            EngineKind::Batched,
+            &EngineConfig::default().with_threads(1).with_batch(3),
+        )
+        .unwrap();
+        let good = Evidence::from_pairs(&jt.net, &[("smoke", "yes")]).unwrap();
+        let bad = Evidence::from_pairs(&jt.net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        let (results, _service) =
+            group.dispatch_batch(vec![good.clone(), bad, Evidence::none(), good.clone()]).unwrap();
+        assert_eq!(results.len(), 4);
+        assert!(results[1].is_err());
+        let mut engine = EngineKind::Seq.build(Arc::clone(&jt), &EngineConfig::default().with_threads(1));
+        let mut state = TreeState::fresh(&jt);
+        let none = Evidence::none();
+        for (i, ev) in [(0usize, &good), (2, &none), (3, &good)] {
+            let reference = engine.infer(&mut state, ev).unwrap();
+            assert!(results[i].as_ref().unwrap().max_abs_diff(&reference) < 1e-9, "case {i}");
+        }
+        // empty batch short-circuits without touching a shard
+        let (empty, service) = group.dispatch_batch(Vec::new()).unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(service, Duration::ZERO);
+        assert_eq!(group.depths(), vec![0, 0]);
     }
 
     #[test]

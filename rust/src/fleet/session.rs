@@ -32,18 +32,43 @@ enum Delta {
     Clear(usize),
 }
 
+/// Upper bound on `BATCH <n>` so a typo cannot park a connection
+/// collecting forever (and bound the dispatch allocation).
+pub const MAX_BATCH_CASES: usize = 1024;
+
+/// An in-progress `BATCH` collection: the tree pinned at `BATCH` time,
+/// target variable, expected case count, and the cases staged so far.
+///
+/// The collection is **self-contained**: `CASE` lines resolve against the
+/// pinned tree (not the session's possibly-evicted selection), so once a
+/// batch is open every `CASE` is acked and the final reply is always
+/// exactly n lines — the wire contract the cluster front's line counting
+/// relies on. If the tree was evicted or reloaded under the batch, the
+/// final dispatch is refused and all n lines carry the error. A slot
+/// whose `CASE` line failed to parse is kept as `Err` — it still consumes
+/// its position (so client, cluster front, and backend all count the
+/// same) and comes back as an `ERR` result line.
+struct BatchCollect {
+    net: String,
+    jt: Arc<JunctionTree>,
+    target: usize,
+    expect: usize,
+    cases: Vec<std::result::Result<Evidence, String>>,
+}
+
 /// Per-connection protocol state.
 pub struct Session {
     fleet: Arc<Fleet>,
     current: Option<(String, Arc<JunctionTree>)>,
     committed: BTreeMap<usize, usize>,
     pending: Vec<Delta>,
+    batch: Option<BatchCollect>,
 }
 
 impl Session {
     /// New session against a fleet; no network selected, no evidence.
     pub fn new(fleet: Arc<Fleet>) -> Self {
-        Session { fleet, current: None, committed: BTreeMap::new(), pending: Vec::new() }
+        Session { fleet, current: None, committed: BTreeMap::new(), pending: Vec::new(), batch: None }
     }
 
     /// Name of the selected network, if any.
@@ -89,7 +114,14 @@ impl Session {
         let mut parts = line.splitn(2, ' ');
         let verb = parts.next().unwrap_or("");
         let rest = parts.next().unwrap_or("").trim();
-        let reply = match verb.to_ascii_uppercase().as_str() {
+        let verb = verb.to_ascii_uppercase();
+        // any verb other than CASE aborts an in-progress batch collection
+        // (QUIT included — the session ends anyway). The cluster front
+        // mirrors this rule for its forwarded-verb accounting.
+        if self.batch.is_some() && verb != "CASE" {
+            self.batch = None;
+        }
+        let reply = match verb.as_str() {
             "QUIT" => return SessionReply::Quit,
             "LOAD" => self.cmd_load(rest),
             "USE" => self.cmd_use(rest),
@@ -98,6 +130,8 @@ impl Session {
             "RETRACT" => self.cmd_retract(rest),
             "COMMIT" => self.cmd_commit(),
             "QUERY" => self.cmd_query(rest),
+            "BATCH" => self.cmd_batch(rest),
+            "CASE" => self.cmd_case(rest),
             "STATS" => self.fleet.stats_line(),
             "PING" => format!("OK pong nets={}", self.fleet.loaded().len()),
             "EVICT" => self.cmd_evict(rest),
@@ -235,6 +269,106 @@ impl Session {
             }
         }
         format!("OK committed evidence={} applied={applied}", self.committed.len())
+    }
+
+    /// `BATCH <n> <target-var>`: open an n-case collection. The next `n`
+    /// `CASE` lines stage one evidence case each; the n-th dispatches all
+    /// of them as **one** shard job (one fused sweep with the batched
+    /// engine) and its reply carries the n result lines — N evidence
+    /// lines in, N posterior lines out.
+    fn cmd_batch(&mut self, rest: &str) -> String {
+        let (name, jt) = match self.current_tree() {
+            Ok(current) => current,
+            Err(reply) => return reply,
+        };
+        let mut parts = rest.split_whitespace();
+        let (Some(n_text), Some(target), None) = (parts.next(), parts.next(), parts.next()) else {
+            return "ERR usage: BATCH <n> <target-var>".into();
+        };
+        let n = match n_text.parse::<usize>() {
+            Ok(n) if (1..=MAX_BATCH_CASES).contains(&n) => n,
+            _ => return format!("ERR batch size must be 1..={MAX_BATCH_CASES} (got {n_text:?})"),
+        };
+        let v = match jt.net.var_id(target) {
+            Ok(v) => v,
+            Err(e) => return format!("ERR {e}"),
+        };
+        self.batch = Some(BatchCollect { net: name, jt, target: v, expect: n, cases: Vec::with_capacity(n) });
+        format!("OK batch expect={n} target={target}")
+    }
+
+    /// One case of an open batch: committed evidence plus inline
+    /// `var=state` tokens (inline wins), exactly like `QUERY`'s inline
+    /// grammar without the target. A malformed line consumes its slot and
+    /// becomes an `ERR` result — counts stay aligned on every tier.
+    fn cmd_case(&mut self, rest: &str) -> String {
+        let Some(collect) = self.batch.as_mut() else {
+            return "ERR no batch in progress (BATCH <n> <target-var> first)".into();
+        };
+        // resolve against the tree pinned at BATCH time — never the
+        // session's (possibly evicted) selection — so the ack/result line
+        // count is unconditional once a batch is open
+        let parsed: std::result::Result<Evidence, String> = {
+            let mut obs = self.committed.clone();
+            let mut err = None;
+            for tok in rest.split_whitespace() {
+                let Some((var, state)) = tok.split_once('=') else {
+                    err = Some(format!("bad evidence token {tok:?} (want var=state)"));
+                    break;
+                };
+                match collect.jt.net.state_id(var, state) {
+                    Ok((id, s)) => {
+                        obs.insert(id, s);
+                    }
+                    Err(e) => {
+                        err = Some(e.to_string());
+                        break;
+                    }
+                }
+            }
+            match err {
+                None => Ok(Evidence::from_ids(obs.into_iter().collect())),
+                Some(msg) => Err(msg),
+            }
+        };
+        collect.cases.push(parsed);
+        let staged = collect.cases.len();
+        if staged < collect.expect {
+            return format!("OK case {staged}/{}", collect.expect);
+        }
+        // final case: one dispatch, n reply lines (joined — the line
+        // server writes them as n wire lines). The pinned tree must still
+        // be the registry's live tree: running old variable ids against a
+        // reloaded tree would misapply evidence, so a stale pin turns
+        // into n clean error lines instead.
+        let collect = self.batch.take().expect("checked above");
+        let live = self.fleet.tree(&collect.net);
+        let stale = match &live {
+            Some(live) => !Arc::ptr_eq(live, &collect.jt),
+            None => true,
+        };
+        if stale {
+            let msg = format!("ERR network {:?} was evicted or reloaded during the batch; USE it again", collect.net);
+            return vec![msg; collect.expect].join("\n");
+        }
+        let evs: Vec<Evidence> =
+            collect.cases.iter().map(|c| c.clone().unwrap_or_else(|_| Evidence::none())).collect();
+        let lines: Vec<String> = match self.fleet.query_batch(&collect.net, evs) {
+            Ok(results) => collect
+                .cases
+                .iter()
+                .zip(results)
+                .map(|(parsed, outcome)| match (parsed, outcome) {
+                    (Err(msg), _) => format!("ERR {msg}"),
+                    (Ok(_), Ok(post)) => {
+                        crate::coordinator::server::format_ok_posterior(&collect.jt.net, collect.target, &post)
+                    }
+                    (Ok(_), Err(e)) => format!("ERR {e}"),
+                })
+                .collect(),
+            Err(e) => (0..collect.expect).map(|_| format!("ERR {e}")).collect(),
+        };
+        lines.join("\n")
     }
 
     fn cmd_query(&mut self, rest: &str) -> String {
@@ -424,6 +558,111 @@ mod tests {
         assert!(r.starts_with("ERR network \"asia\" was reloaded"), "{r}");
         assert!(line(&mut s, "USE asia").starts_with("OK using asia"));
         assert!(line(&mut s, "QUERY lung").starts_with("OK yes=0.055000"));
+    }
+
+    #[test]
+    fn batch_verb_collects_n_cases_and_returns_n_lines() {
+        let mut s = session();
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        let want_smoke_yes = line(&mut s, "QUERY lung | smoke=yes");
+        let want_smoke_no = line(&mut s, "QUERY lung | smoke=no");
+        let want_prior = line(&mut s, "QUERY lung");
+
+        assert_eq!(line(&mut s, "BATCH 3 lung"), "OK batch expect=3 target=lung");
+        assert_eq!(line(&mut s, "CASE smoke=yes"), "OK case 1/3");
+        assert_eq!(line(&mut s, "CASE smoke=no"), "OK case 2/3");
+        let reply = line(&mut s, "CASE");
+        let lines: Vec<&str> = reply.lines().collect();
+        assert_eq!(lines, vec![want_smoke_yes.as_str(), want_smoke_no.as_str(), want_prior.as_str()]);
+        // the batch is closed: a stray CASE errors
+        assert!(line(&mut s, "CASE").starts_with("ERR no batch in progress"));
+    }
+
+    #[test]
+    fn batch_merges_committed_evidence_and_inline_wins() {
+        let mut s = session();
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        line(&mut s, "OBSERVE smoke=yes");
+        line(&mut s, "COMMIT");
+        let want_yes = line(&mut s, "QUERY lung");
+        let want_no = line(&mut s, "QUERY lung | smoke=no");
+        line(&mut s, "BATCH 2 lung");
+        line(&mut s, "CASE");
+        let reply = line(&mut s, "CASE smoke=no");
+        let lines: Vec<&str> = reply.lines().collect();
+        assert_eq!(lines, vec![want_yes.as_str(), want_no.as_str()]);
+    }
+
+    #[test]
+    fn batch_bad_slots_and_impossible_cases_fail_alone() {
+        let mut s = session();
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        line(&mut s, "BATCH 3 lung");
+        // a malformed case consumes its slot
+        assert_eq!(line(&mut s, "CASE smoke"), "OK case 1/3");
+        assert_eq!(line(&mut s, "CASE either=no lung=yes"), "OK case 2/3");
+        let reply = line(&mut s, "CASE smoke=yes");
+        let lines: Vec<&str> = reply.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("ERR bad evidence token"), "{}", lines[0]);
+        assert!(lines[1].starts_with("ERR evidence is inconsistent"), "{}", lines[1]);
+        assert!(lines[2].starts_with("OK yes=0.100000"), "{}", lines[2]);
+    }
+
+    #[test]
+    fn batch_evicted_mid_collection_still_returns_n_lines() {
+        // the batch pins its tree, so CASE lines keep acking even after
+        // another session evicts the net; the final dispatch refuses the
+        // stale pin with exactly n error lines — the wire contract the
+        // cluster front's line counting depends on
+        let fleet = Arc::new(Fleet::new(FleetConfig {
+            engine: EngineKind::Seq,
+            engine_cfg: EngineConfig::default().with_threads(1),
+            shards: 1,
+            registry_capacity: 1,
+        }));
+        let mut a = Session::new(Arc::clone(&fleet));
+        let mut b = Session::new(fleet);
+        line(&mut a, "LOAD asia");
+        line(&mut a, "USE asia");
+        assert!(line(&mut a, "BATCH 3 lung").starts_with("OK batch expect=3"));
+        assert_eq!(line(&mut a, "CASE smoke=yes"), "OK case 1/3");
+        // capacity 1: session B's LOAD evicts asia out from under the batch
+        assert!(line(&mut b, "LOAD cancer").starts_with("OK loaded cancer"));
+        // the collection keeps counting against the pinned tree...
+        assert_eq!(line(&mut a, "CASE smoke=no"), "OK case 2/3");
+        // ...and the final dispatch yields n clean error lines
+        let reply = line(&mut a, "CASE");
+        let lines: Vec<&str> = reply.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for l in &lines {
+            assert!(l.starts_with("ERR network \"asia\" was evicted or reloaded"), "{l}");
+        }
+        // the session recovers on the net that displaced its tree
+        assert!(line(&mut a, "USE cancer").starts_with("OK using cancer"));
+        assert!(line(&mut a, "QUERY Cancer").starts_with("OK True="));
+    }
+
+    #[test]
+    fn batch_error_paths_and_abort_semantics() {
+        let mut s = session();
+        assert!(line(&mut s, "BATCH 2 lung").starts_with("ERR no network selected"));
+        assert!(line(&mut s, "CASE").starts_with("ERR no batch in progress"));
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        assert!(line(&mut s, "BATCH").starts_with("ERR usage: BATCH"));
+        assert!(line(&mut s, "BATCH 2").starts_with("ERR usage: BATCH"));
+        assert!(line(&mut s, "BATCH 0 lung").starts_with("ERR batch size"));
+        assert!(line(&mut s, "BATCH 9999 lung").starts_with("ERR batch size"));
+        assert!(line(&mut s, "BATCH 2 nosuch").starts_with("ERR unknown variable"));
+        // a non-CASE verb aborts an open batch
+        line(&mut s, "BATCH 2 lung");
+        line(&mut s, "CASE smoke=yes");
+        assert!(line(&mut s, "QUERY lung").starts_with("OK yes=0.055000"));
+        assert!(line(&mut s, "CASE smoke=no").starts_with("ERR no batch in progress"));
     }
 
     #[test]

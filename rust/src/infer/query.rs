@@ -22,22 +22,38 @@ pub struct Posteriors {
 impl Posteriors {
     /// Extract posteriors from a calibrated state.
     pub fn compute(jt: &JunctionTree, state: &TreeState) -> Result<Posteriors> {
+        Self::compute_lane(jt, state.data(), 1, 0, state.log_z)
+    }
+
+    /// Extract the posteriors of lane `lane` from a calibrated
+    /// lane-expanded arena (`data[i*lanes + b]` — see
+    /// [`crate::jt::state::BatchState`]). `compute` is the `lanes = 1`
+    /// case.
+    pub fn compute_lane(
+        jt: &JunctionTree,
+        data: &[f64],
+        lanes: usize,
+        lane: usize,
+        log_z: f64,
+    ) -> Result<Posteriors> {
         let n = jt.net.n();
         let mut probs = Vec::with_capacity(n);
         for v in 0..n {
             let slot = &jt.var_slot[v];
-            let data = &state.cliques[slot.clique];
+            let r = jt.layout.clique_range(slot.clique);
+            let tab = &data[r.start * lanes..r.end * lanes];
+            let len = r.end - r.start;
             let mut marg = vec![0.0; slot.card];
             let stride = slot.stride;
             let card = slot.card;
             let block = stride * card;
             let mut base = 0usize;
-            while base < data.len() {
+            while base < len {
                 for s in 0..card {
                     let lo = base + s * stride;
                     let mut acc = 0.0;
-                    for &x in &data[lo..lo + stride] {
-                        acc += x;
+                    for i in lo..lo + stride {
+                        acc += tab[i * lanes + lane];
                     }
                     marg[s] += acc;
                 }
@@ -52,7 +68,7 @@ impl Posteriors {
             }
             probs.push(marg);
         }
-        Ok(Posteriors { probs, log_z: state.log_z })
+        Ok(Posteriors { probs, log_z })
     }
 
     /// Posterior of a variable by name.

@@ -79,20 +79,30 @@ impl Evidence {
     /// multiply likelihood weights for soft ones — each in the variable's
     /// home clique.
     pub fn apply(&self, jt: &JunctionTree, state: &mut TreeState) {
+        self.apply_lane(jt, state.data_mut(), 1, 0);
+    }
+
+    /// Enter the findings into lane `lane` of a lane-expanded arena
+    /// (`data[i*lanes + b]` holds entry `i` of case `b` — see
+    /// [`crate::jt::state::BatchState`]). `apply` is the `lanes = 1` case.
+    pub fn apply_lane(&self, jt: &JunctionTree, data: &mut [f64], lanes: usize, lane: usize) {
+        debug_assert!(lane < lanes);
         for &(v, obs_state) in &self.obs {
             let slot = &jt.var_slot[v];
-            let data = &mut state.cliques[slot.clique];
+            let r = jt.layout.clique_range(slot.clique);
+            let tab = &mut data[r.start * lanes..r.end * lanes];
+            let len = r.end - r.start;
             let stride = slot.stride;
             let card = slot.card;
             let block = stride * card;
             // entries where digit(v) != obs_state -> 0
             let mut base = 0usize;
-            while base < data.len() {
+            while base < len {
                 for s in 0..card {
                     if s != obs_state {
                         let lo = base + s * stride;
-                        for x in &mut data[lo..lo + stride] {
-                            *x = 0.0;
+                        for i in lo..lo + stride {
+                            tab[i * lanes + lane] = 0.0;
                         }
                     }
                 }
@@ -102,16 +112,18 @@ impl Evidence {
         for (v, weights) in &self.soft {
             let slot = &jt.var_slot[*v];
             debug_assert_eq!(weights.len(), slot.card);
-            let data = &mut state.cliques[slot.clique];
+            let r = jt.layout.clique_range(slot.clique);
+            let tab = &mut data[r.start * lanes..r.end * lanes];
+            let len = r.end - r.start;
             let stride = slot.stride;
             let block = stride * slot.card;
             let mut base = 0usize;
-            while base < data.len() {
+            while base < len {
                 for (s, &w) in weights.iter().enumerate() {
                     if w != 1.0 {
                         let lo = base + s * stride;
-                        for x in &mut data[lo..lo + stride] {
-                            *x *= w;
+                        for i in lo..lo + stride {
+                            tab[i * lanes + lane] *= w;
                         }
                     }
                 }
@@ -176,19 +188,40 @@ mod tests {
         ev.apply(&jt, &mut st);
 
         let slot = &jt.var_slot[smoke];
-        let data = &st.cliques[slot.clique];
+        let data = st.clique(slot.clique);
         for (i, &x) in data.iter().enumerate() {
             let digit = (i / slot.stride) % slot.card;
             if digit != 0 {
                 assert_eq!(x, 0.0, "entry {i} should be zeroed");
             } else {
-                assert_eq!(x, jt.prototype[slot.clique][i], "entry {i} should be untouched");
+                assert_eq!(x, jt.proto_clique(slot.clique)[i], "entry {i} should be untouched");
             }
         }
         // other cliques untouched
-        for (c, data) in st.cliques.iter().enumerate() {
+        for c in 0..jt.n_cliques() {
             if c != slot.clique {
-                assert_eq!(data, &jt.prototype[c]);
+                assert_eq!(st.clique(c), jt.proto_clique(c));
+            }
+        }
+    }
+
+    #[test]
+    fn apply_lane_touches_only_its_lane() {
+        let net = embedded::asia();
+        let jt = crate::jt::tree::JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let mut bs = crate::jt::state::BatchState::fresh(&jt, 3);
+        let smoke = net.var_id("smoke").unwrap();
+        let ev = Evidence::from_ids(vec![(smoke, 0)]);
+        let lanes = bs.lanes();
+        ev.apply_lane(&jt, bs.data_mut(), lanes, 1);
+        let slot = &jt.var_slot[smoke];
+        // lane 1 mirrors the single-case apply; lanes 0 and 2 untouched
+        let mut st = crate::jt::state::TreeState::fresh(&jt);
+        ev.apply(&jt, &mut st);
+        assert_eq!(bs.lane_of_clique(slot.clique, 1), st.clique(slot.clique));
+        for lane in [0usize, 2] {
+            for c in 0..jt.n_cliques() {
+                assert_eq!(bs.lane_of_clique(c, lane), jt.proto_clique(c), "lane {lane} clique {c}");
             }
         }
     }
@@ -223,11 +256,11 @@ mod tests {
         let ev = Evidence::none().with_soft(smoke, vec![3.0, 0.5]).unwrap();
         ev.apply(&jt, &mut st);
         let slot = &jt.var_slot[smoke];
-        let data = &st.cliques[slot.clique];
+        let data = st.clique(slot.clique);
         for (i, &x) in data.iter().enumerate() {
             let digit = (i / slot.stride) % slot.card;
             let w = if digit == 0 { 3.0 } else { 0.5 };
-            assert!((x - jt.prototype[slot.clique][i] * w).abs() < 1e-12, "entry {i}");
+            assert!((x - jt.proto_clique(slot.clique)[i] * w).abs() < 1e-12, "entry {i}");
         }
     }
 

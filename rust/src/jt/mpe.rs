@@ -61,7 +61,7 @@ pub fn most_probable_explanation(
                 *x = 0.0;
             }
             let maps = &jt.edge_maps[msg.sep];
-            max_with_map(&state.cliques[msg.from], maps.from(sep_meta, msg.from), new_sep);
+            max_with_map(state.clique(msg.from), maps.from(sep_meta, msg.from), new_sep);
             // scale by the max for numerical stability
             let peak = new_sep.iter().cloned().fold(0.0f64, f64::max);
             if peak == 0.0 {
@@ -72,9 +72,9 @@ pub fn most_probable_explanation(
             }
             log_scale += peak.ln();
             let ratio = &mut ratio_buf[..sep_meta.len];
-            crate::jt::ops::ratio(new_sep, &state.seps[msg.sep], ratio);
-            state.seps[msg.sep].copy_from_slice(new_sep);
-            crate::jt::ops::extend_with_map(&mut state.cliques[msg.to], maps.from(sep_meta, msg.to), ratio);
+            crate::jt::ops::ratio(new_sep, state.sep(msg.sep), ratio);
+            state.sep_mut(msg.sep).copy_from_slice(new_sep);
+            crate::jt::ops::extend_with_map(state.clique_mut(msg.to), maps.from(sep_meta, msg.to), ratio);
         }
     }
 
@@ -97,7 +97,7 @@ pub fn most_probable_explanation(
 
     for &c in &order {
         let clique = &jt.cliques[c];
-        let data = &state.cliques[c];
+        let data = state.clique(c);
         // restricted argmax: entries whose digits agree with already-fixed vars
         let mut best_idx = usize::MAX;
         let mut best_val = -1.0f64;

@@ -197,6 +197,126 @@ pub fn extend_runs_range(dst: &mut [f64], rm: &RunMap, entries: std::ops::Range<
     }
 }
 
+// --------------------------------------------------------- case-major --
+// Batched kernels over lane-expanded tables (see `state::BatchState`):
+// entry `i` holds its `lanes` per-case values contiguously at
+// `i*lanes ..< (i+1)*lanes`. The outer loop walks table entries exactly
+// like the single-case kernels, so each cached map/run lookup is amortized
+// `lanes`× — the same hoisting move the paper applies to index mappings,
+// applied across evidence cases — and the inner per-lane loop is
+// unit-stride and auto-vectorizable.
+
+/// Case-major marginalization: `dst[map[i]*L + b] += src[i*L + b]` for
+/// every entry `i` and lane `b`. `dst` must be pre-zeroed.
+#[inline]
+pub fn marg_with_map_cases(src: &[f64], map: &[u32], lanes: usize, dst: &mut [f64]) {
+    debug_assert_eq!(src.len(), map.len() * lanes);
+    for (i, &m) in map.iter().enumerate() {
+        let d = &mut dst[m as usize * lanes..(m as usize + 1) * lanes];
+        let s = &src[i * lanes..(i + 1) * lanes];
+        for (dv, &sv) in d.iter_mut().zip(s) {
+            *dv += sv;
+        }
+    }
+}
+
+/// Case-major extension: `dst[i*L + b] *= ratio[map[i]*L + b]`.
+#[inline]
+pub fn ext_with_map_cases(dst: &mut [f64], map: &[u32], lanes: usize, ratio: &[f64]) {
+    debug_assert_eq!(dst.len(), map.len() * lanes);
+    for (i, &m) in map.iter().enumerate() {
+        let r = &ratio[m as usize * lanes..(m as usize + 1) * lanes];
+        let d = &mut dst[i * lanes..(i + 1) * lanes];
+        for (dv, &rv) in d.iter_mut().zip(r) {
+            *dv *= rv;
+        }
+    }
+}
+
+/// Case-major run-based marginalization over an **entry** range (entry
+/// indices are in table-entry units, as in [`marg_runs_range`]; the lane
+/// expansion is internal).
+pub fn marg_runs_cases_range(
+    src: &[f64],
+    rm: &RunMap,
+    lanes: usize,
+    entries: std::ops::Range<usize>,
+    dst: &mut [f64],
+) {
+    let l = rm.run_len;
+    let (start, end) = (entries.start, entries.end);
+    if start >= end {
+        return;
+    }
+    let first_run = start / l;
+    let last_run = (end - 1) / l;
+    for r in first_run..=last_run {
+        let lo = (r * l).max(start);
+        let hi = ((r + 1) * l).min(end);
+        let m = rm.map[r] as usize;
+        let d = &mut dst[m * lanes..(m + 1) * lanes];
+        for i in lo..hi {
+            let s = &src[i * lanes..(i + 1) * lanes];
+            for (dv, &sv) in d.iter_mut().zip(s) {
+                *dv += sv;
+            }
+        }
+    }
+}
+
+/// Case-major run-based extension over an **entry** range.
+pub fn extend_runs_cases_range(
+    dst: &mut [f64],
+    rm: &RunMap,
+    lanes: usize,
+    entries: std::ops::Range<usize>,
+    ratio: &[f64],
+) {
+    let l = rm.run_len;
+    let (start, end) = (entries.start, entries.end);
+    if start >= end {
+        return;
+    }
+    let first_run = start / l;
+    let last_run = (end - 1) / l;
+    for r in first_run..=last_run {
+        let lo = (r * l).max(start);
+        let hi = ((r + 1) * l).min(end);
+        let m = rm.map[r] as usize;
+        let f = &ratio[m * lanes..(m + 1) * lanes];
+        for i in lo..hi {
+            let d = &mut dst[i * lanes..(i + 1) * lanes];
+            for (dv, &fv) in d.iter_mut().zip(f) {
+                *dv *= fv;
+            }
+        }
+    }
+}
+
+/// Per-lane sums of a lane-expanded table: `acc[b] += Σ_i xs[i*L + b]`.
+#[inline]
+pub fn sum_cases(xs: &[f64], lanes: usize, acc: &mut [f64]) {
+    debug_assert_eq!(acc.len(), lanes);
+    debug_assert_eq!(xs.len() % lanes, 0);
+    for row in xs.chunks_exact(lanes) {
+        for (a, &x) in acc.iter_mut().zip(row) {
+            *a += x;
+        }
+    }
+}
+
+/// Per-lane scaling of a lane-expanded table: `xs[i*L + b] *= factors[b]`.
+#[inline]
+pub fn scale_cases(xs: &mut [f64], factors: &[f64]) {
+    let lanes = factors.len();
+    debug_assert_eq!(xs.len() % lanes, 0);
+    for row in xs.chunks_exact_mut(lanes) {
+        for (x, &f) in row.iter_mut().zip(factors) {
+            *x *= f;
+        }
+    }
+}
+
 /// Separator update ratio: `out[j] = new[j] / old[j]`, with the standard
 /// junction-tree convention `0 / 0 = 0` (entries killed by evidence stay
 /// dead).
@@ -401,6 +521,90 @@ mod tests {
         assert_eq!(dst, [0.0, 0.0]);
         let mut t = src;
         extend_runs_range(&mut t, &rm, 0..0, &[2.0, 2.0]);
+        assert_eq!(t, src);
+    }
+
+    #[test]
+    fn case_kernels_match_per_lane_single_case_kernels() {
+        use crate::jt::mapping::build_run_map;
+        let src_vars = [0usize, 1, 2];
+        let src_cards = [2usize, 3, 4];
+        let dst_vars = [1usize];
+        let dst_cards = [3usize];
+        let map = build_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+        let rm = build_run_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+        let lanes = 5usize;
+        let mut rng = Rng::new(23);
+        // per-lane source tables + their lane-interleaved expansion
+        let lanes_src: Vec<Vec<f64>> = (0..lanes).map(|_| (0..24).map(|_| rng.f64()).collect()).collect();
+        let mut batched_src = vec![0.0; 24 * lanes];
+        for (b, s) in lanes_src.iter().enumerate() {
+            for (i, &x) in s.iter().enumerate() {
+                batched_src[i * lanes + b] = x;
+            }
+        }
+
+        // marg: map-based and run-range-based agree with per-lane marg
+        let mut want = vec![vec![0.0; 3]; lanes];
+        for (b, s) in lanes_src.iter().enumerate() {
+            marg_with_map(s, &map, &mut want[b]);
+        }
+        let mut got = vec![0.0; 3 * lanes];
+        marg_with_map_cases(&batched_src, &map, lanes, &mut got);
+        let mut got_runs = vec![0.0; 3 * lanes];
+        marg_runs_cases_range(&batched_src, &rm, lanes, 0..7, &mut got_runs);
+        marg_runs_cases_range(&batched_src, &rm, lanes, 7..24, &mut got_runs);
+        for j in 0..3 {
+            for b in 0..lanes {
+                assert!((got[j * lanes + b] - want[b][j]).abs() < 1e-12, "map entry {j} lane {b}");
+                assert!((got_runs[j * lanes + b] - want[b][j]).abs() < 1e-12, "runs entry {j} lane {b}");
+            }
+        }
+
+        // per-lane sums and scaling
+        let mut sums = vec![0.0; lanes];
+        sum_cases(&got, lanes, &mut sums);
+        for (b, s) in sums.iter().enumerate() {
+            let direct: f64 = lanes_src[b].iter().sum();
+            assert!((s - direct).abs() < 1e-12, "lane {b} mass");
+        }
+        let factors: Vec<f64> = (0..lanes).map(|b| 1.0 / sums[b]).collect();
+        let mut scaled = got.clone();
+        scale_cases(&mut scaled, &factors);
+        let mut resum = vec![0.0; lanes];
+        sum_cases(&scaled, lanes, &mut resum);
+        assert!(resum.iter().all(|&s| (s - 1.0).abs() < 1e-12));
+
+        // ext: lane-expanded ratio applied per entry matches per-lane extend
+        let ratio_lanes: Vec<f64> = (0..3 * lanes).map(|k| 0.25 + k as f64 * 0.1).collect();
+        let mut want_ext = lanes_src.clone();
+        for (b, tab) in want_ext.iter_mut().enumerate() {
+            let lane_ratio: Vec<f64> = (0..3).map(|j| ratio_lanes[j * lanes + b]).collect();
+            extend_with_map(tab, &map, &lane_ratio);
+        }
+        let mut got_ext = batched_src.clone();
+        ext_with_map_cases(&mut got_ext, &map, lanes, &ratio_lanes);
+        let mut got_ext_runs = batched_src.clone();
+        extend_runs_cases_range(&mut got_ext_runs, &rm, lanes, 0..11, &ratio_lanes);
+        extend_runs_cases_range(&mut got_ext_runs, &rm, lanes, 11..24, &ratio_lanes);
+        for i in 0..24 {
+            for b in 0..lanes {
+                assert!((got_ext[i * lanes + b] - want_ext[b][i]).abs() < 1e-12);
+                assert!((got_ext_runs[i * lanes + b] - want_ext[b][i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn case_kernels_empty_ranges_are_noops() {
+        use crate::jt::mapping::RunMap;
+        let rm = RunMap { map: vec![0, 1], run_len: 3 };
+        let src = [1.0; 12];
+        let mut dst = [0.0; 4];
+        marg_runs_cases_range(&src, &rm, 2, 3..3, &mut dst);
+        assert_eq!(dst, [0.0; 4]);
+        let mut t = src;
+        extend_runs_cases_range(&mut t, &rm, 2, 0..0, &[2.0; 4]);
         assert_eq!(t, src);
     }
 

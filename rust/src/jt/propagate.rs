@@ -45,9 +45,13 @@ pub struct Scratch {
 }
 
 impl Scratch {
-    /// Scratch sized for a tree.
+    /// Scratch sized for a tree. A separator-free tree (single-clique or
+    /// fully disconnected network) legitimately gets zero-length buffers:
+    /// no message is ever sent, so the buffers are never sliced — the
+    /// regression tests in `tests/parallel_consistency.rs` pin that path
+    /// through every engine.
     pub fn for_tree(jt: &JunctionTree) -> Self {
-        let cap = jt.seps.iter().map(|s| s.len).max().unwrap_or(1);
+        let cap = jt.seps.iter().map(|s| s.len).max().unwrap_or(0);
         Scratch { new_sep: vec![0.0; cap], ratio: vec![0.0; cap] }
     }
 }
@@ -68,7 +72,7 @@ pub fn send_message(
 
     // 1. marginalization: clique_from -> new_sep
     {
-        let src = &state.cliques[msg.from];
+        let src = state.clique(msg.from);
         match mode {
             MapMode::Cached => {
                 let rm = jt.edge_maps[msg.sep].runs_from(sep_meta, msg.from);
@@ -99,14 +103,14 @@ pub fn send_message(
     // 3. reduction: ratio = new / old; store new into the separator
     let ratio = &mut scratch.ratio[..sep_len];
     {
-        let old_sep = &mut state.seps[msg.sep];
+        let old_sep = state.sep_mut(msg.sep);
         ops::ratio(new_sep, old_sep, ratio);
         old_sep.copy_from_slice(new_sep);
     }
 
     // 4. extension: clique_to *= ratio[map]
     {
-        let dst = &mut state.cliques[msg.to];
+        let dst = state.clique_mut(msg.to);
         match mode {
             MapMode::Cached => {
                 let rm = jt.edge_maps[msg.sep].runs_from(sep_meta, msg.to);
@@ -145,7 +149,7 @@ pub fn collect(
         }
     }
     for &root in &sched.roots {
-        let data = &mut state.cliques[root];
+        let data = state.clique_mut(root);
         let mass = ops::sum(data);
         if mass == 0.0 {
             return Err(Error::InconsistentEvidence);
@@ -238,8 +242,8 @@ mod tests {
         for (sid, sep) in jt.seps.iter().enumerate() {
             let mut from_a = vec![0.0; sep.len];
             let mut from_b = vec![0.0; sep.len];
-            ops::marg_with_map(&state.cliques[sep.a], &jt.edge_maps[sid].from_a, &mut from_a);
-            ops::marg_with_map(&state.cliques[sep.b], &jt.edge_maps[sid].from_b, &mut from_b);
+            ops::marg_with_map(state.clique(sep.a), &jt.edge_maps[sid].from_a, &mut from_a);
+            ops::marg_with_map(state.clique(sep.b), &jt.edge_maps[sid].from_b, &mut from_b);
             let sa = ops::sum(&from_a);
             let sb = ops::sum(&from_b);
             for j in 0..sep.len {
@@ -266,10 +270,8 @@ mod tests {
         }
         for other in &results[1..] {
             assert!((results[0].log_z - other.log_z).abs() < 1e-9);
-            for (a, b) in results[0].cliques.iter().zip(&other.cliques) {
-                for (x, y) in a.iter().zip(b) {
-                    assert!((x - y).abs() < 1e-9);
-                }
+            for (x, y) in results[0].data().iter().zip(other.data()) {
+                assert!((x - y).abs() < 1e-9);
             }
         }
     }

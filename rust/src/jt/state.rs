@@ -1,51 +1,273 @@
-//! Per-case mutable propagation state.
+//! Per-case mutable propagation state, arena-backed.
 //!
 //! The compiled [`crate::jt::tree::JunctionTree`] is immutable and shared;
 //! each test case gets a [`TreeState`] holding its clique and separator
-//! tables. States are pooled and **reset** (memcpy from the prototype)
-//! rather than reallocated — per-case allocation is one of the overheads
-//! the paper's baselines suffer from, and its absence is part of the
-//! Fast-BNI hot path (see EXPERIMENTS.md §Perf).
+//! tables. Since PR 4 the tables live in **one contiguous arena** (a
+//! single flat `Vec<f64>`) addressed through an [`ArenaLayout`] computed
+//! at tree-compile time, instead of a `Vec<Vec<f64>>` per table.
+//!
+//! ## Arena layout invariants
+//!
+//! * The arena is laid out **cliques first, then separators**, each table
+//!   occupying the contiguous half-open range its layout entry records:
+//!   `clique_range(c) = clique_off[c] .. clique_off[c] + cliques[c].len`,
+//!   then `sep_range(s)` analogously after the last clique. Ranges are
+//!   disjoint, ordered, and tile `0..total` exactly — property-tested in
+//!   `tests/jt_invariants.rs`.
+//! * Offsets depend only on the compiled tree, so every `TreeState` (and
+//!   every lane of a [`BatchState`]) of one tree shares one layout
+//!   (`Arc`), and raw kernels can address sub-slices of one allocation.
+//! * The tree's flat prototype (`JunctionTree::arena_proto`) uses the same
+//!   layout with clique ranges holding the CPT products and separator
+//!   ranges holding all-ones, so **reset is a single `copy_from_slice`**
+//!   and replica/clone spawn is one memcpy — per-case allocation is one of
+//!   the overheads the paper's baselines suffer from (EXPERIMENTS.md
+//!   §Perf).
+//! * A [`BatchState`] stores `lanes` cases **case-major per entry**: arena
+//!   entry `i` of case `b` lives at `i * lanes + b`, so the `lanes` values
+//!   of one table entry are contiguous. Batched kernels
+//!   (`ops::marg_runs_cases` & co.) amortize each index-map lookup across
+//!   all lanes and keep the inner loop unit-stride.
+
+use std::ops::Range;
+use std::sync::Arc;
 
 use crate::jt::tree::JunctionTree;
 
-/// Mutable potential tables for one inference case.
+/// (offset, len) table for every clique and separator in one flat arena.
+///
+/// Built once per compiled tree ([`ArenaLayout::build`]); shared by every
+/// state via `Arc`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArenaLayout {
+    /// Arena offset of each clique table.
+    pub clique_off: Vec<usize>,
+    /// Length of each clique table.
+    pub clique_len: Vec<usize>,
+    /// Arena offset of each separator table (all after the cliques).
+    pub sep_off: Vec<usize>,
+    /// Length of each separator table.
+    pub sep_len: Vec<usize>,
+    /// Total arena entries (= Σ clique lens + Σ sep lens).
+    pub total: usize,
+}
+
+impl ArenaLayout {
+    /// Lay out tables contiguously: cliques in index order, then seps.
+    pub fn build(clique_lens: &[usize], sep_lens: &[usize]) -> Self {
+        let mut clique_off = Vec::with_capacity(clique_lens.len());
+        let mut off = 0usize;
+        for &len in clique_lens {
+            clique_off.push(off);
+            off += len;
+        }
+        let mut sep_off = Vec::with_capacity(sep_lens.len());
+        for &len in sep_lens {
+            sep_off.push(off);
+            off += len;
+        }
+        ArenaLayout {
+            clique_off,
+            clique_len: clique_lens.to_vec(),
+            sep_off,
+            sep_len: sep_lens.to_vec(),
+            total: off,
+        }
+    }
+
+    /// Arena range of clique `c`.
+    #[inline]
+    pub fn clique_range(&self, c: usize) -> Range<usize> {
+        let off = self.clique_off[c];
+        off..off + self.clique_len[c]
+    }
+
+    /// Arena range of separator `s`.
+    #[inline]
+    pub fn sep_range(&self, s: usize) -> Range<usize> {
+        let off = self.sep_off[s];
+        off..off + self.sep_len[s]
+    }
+
+    /// Number of cliques.
+    pub fn n_cliques(&self) -> usize {
+        self.clique_off.len()
+    }
+
+    /// Number of separators.
+    pub fn n_seps(&self) -> usize {
+        self.sep_off.len()
+    }
+}
+
+/// Mutable potential tables for one inference case: one flat arena plus
+/// the accumulated log normalization.
 #[derive(Clone, Debug)]
 pub struct TreeState {
-    /// Clique tables, aligned with `jt.cliques`.
-    pub cliques: Vec<Vec<f64>>,
-    /// Separator tables, aligned with `jt.seps`; start at all-ones.
-    pub seps: Vec<Vec<f64>>,
+    layout: Arc<ArenaLayout>,
+    data: Vec<f64>,
     /// Accumulated log normalization: after collect, `log_z = ln P(e)`.
     pub log_z: f64,
 }
 
 impl TreeState {
-    /// Allocate a state initialized from the prototype potentials.
+    /// Allocate a state initialized from the prototype potentials (one
+    /// memcpy of the tree's flat prototype).
     pub fn fresh(jt: &JunctionTree) -> Self {
-        TreeState {
-            cliques: jt.prototype.clone(),
-            seps: jt.seps.iter().map(|s| vec![1.0; s.len]).collect(),
-            log_z: 0.0,
-        }
+        TreeState { layout: Arc::clone(&jt.layout), data: jt.arena_proto.clone(), log_z: 0.0 }
     }
 
-    /// Reset to the prototype without reallocating.
+    /// Reset to the prototype without reallocating — a single
+    /// `copy_from_slice` over the whole arena.
     pub fn reset(&mut self, jt: &JunctionTree) {
-        for (dst, src) in self.cliques.iter_mut().zip(&jt.prototype) {
-            dst.copy_from_slice(src);
-        }
-        for sep in &mut self.seps {
-            for x in sep.iter_mut() {
-                *x = 1.0;
-            }
-        }
+        debug_assert_eq!(self.data.len(), jt.arena_proto.len());
+        self.data.copy_from_slice(&jt.arena_proto);
         self.log_z = 0.0;
+    }
+
+    /// The layout shared with the tree.
+    #[inline]
+    pub fn layout(&self) -> &Arc<ArenaLayout> {
+        &self.layout
+    }
+
+    /// The whole arena.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// The whole arena, mutable.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Clique `c`'s table.
+    #[inline]
+    pub fn clique(&self, c: usize) -> &[f64] {
+        &self.data[self.layout.clique_range(c)]
+    }
+
+    /// Clique `c`'s table, mutable.
+    #[inline]
+    pub fn clique_mut(&mut self, c: usize) -> &mut [f64] {
+        let r = self.layout.clique_range(c);
+        &mut self.data[r]
+    }
+
+    /// Separator `s`'s table.
+    #[inline]
+    pub fn sep(&self, s: usize) -> &[f64] {
+        &self.data[self.layout.sep_range(s)]
+    }
+
+    /// Separator `s`'s table, mutable.
+    #[inline]
+    pub fn sep_mut(&mut self, s: usize) -> &mut [f64] {
+        let r = self.layout.sep_range(s);
+        &mut self.data[r]
     }
 
     /// Total number of f64 entries held (cliques + separators).
     pub fn n_entries(&self) -> usize {
-        self.cliques.iter().map(|c| c.len()).sum::<usize>() + self.seps.iter().map(|s| s.len()).sum::<usize>()
+        self.data.len()
+    }
+}
+
+/// Mutable state for `lanes` cases propagated in one sweep.
+///
+/// Entry `i` of the arena holds its `lanes` per-case values contiguously
+/// at `i * lanes ..< (i + 1) * lanes` (see the module docs). The broadcast
+/// prototype is kept alongside the data so [`BatchState::reset`] is one
+/// `copy_from_slice`, exactly like the single-case path.
+#[derive(Clone, Debug)]
+pub struct BatchState {
+    layout: Arc<ArenaLayout>,
+    lanes: usize,
+    data: Vec<f64>,
+    /// Lane-broadcast prototype (`proto[i*lanes + b] = arena_proto[i]`).
+    proto: Vec<f64>,
+    /// Per-lane accumulated log normalization.
+    pub log_z: Vec<f64>,
+}
+
+impl BatchState {
+    /// Allocate a batch state with `lanes` cases, all at the prototype.
+    pub fn fresh(jt: &JunctionTree, lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        let mut proto = Vec::with_capacity(jt.arena_proto.len() * lanes);
+        for &x in &jt.arena_proto {
+            for _ in 0..lanes {
+                proto.push(x);
+            }
+        }
+        BatchState {
+            layout: Arc::clone(&jt.layout),
+            lanes,
+            data: proto.clone(),
+            proto,
+            log_z: vec![0.0; lanes],
+        }
+    }
+
+    /// Number of lanes (cases per sweep).
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// The layout shared with the tree.
+    #[inline]
+    pub fn layout(&self) -> &Arc<ArenaLayout> {
+        &self.layout
+    }
+
+    /// Reset every lane to the prototype: one `copy_from_slice`.
+    pub fn reset(&mut self) {
+        self.data.copy_from_slice(&self.proto);
+        for z in &mut self.log_z {
+            *z = 0.0;
+        }
+    }
+
+    /// The whole lane-expanded arena.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// The whole lane-expanded arena, mutable.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Clique `c`'s lane-expanded table (`len * lanes` values).
+    #[inline]
+    pub fn clique(&self, c: usize) -> &[f64] {
+        let r = self.layout.clique_range(c);
+        &self.data[r.start * self.lanes..r.end * self.lanes]
+    }
+
+    /// Clique `c`'s lane-expanded table, mutable.
+    #[inline]
+    pub fn clique_mut(&mut self, c: usize) -> &mut [f64] {
+        let r = self.layout.clique_range(c);
+        &mut self.data[r.start * self.lanes..r.end * self.lanes]
+    }
+
+    /// Separator `s`'s lane-expanded table.
+    #[inline]
+    pub fn sep(&self, s: usize) -> &[f64] {
+        let r = self.layout.sep_range(s);
+        &self.data[r.start * self.lanes..r.end * self.lanes]
+    }
+
+    /// One lane of clique `c`, gathered into a fresh Vec (test/debug aid;
+    /// the hot path never gathers).
+    pub fn lane_of_clique(&self, c: usize, lane: usize) -> Vec<f64> {
+        self.clique(c).iter().skip(lane).step_by(self.lanes).copied().collect()
     }
 }
 
@@ -55,44 +277,101 @@ mod tests {
     use crate::bn::embedded;
     use crate::jt::triangulate::TriangulationHeuristic;
 
+    fn asia_tree() -> JunctionTree {
+        JunctionTree::compile(&embedded::asia(), TriangulationHeuristic::MinFill).unwrap()
+    }
+
+    #[test]
+    fn layout_tiles_the_arena_exactly() {
+        let jt = asia_tree();
+        let l = &jt.layout;
+        let mut expect = 0usize;
+        for c in 0..l.n_cliques() {
+            assert_eq!(l.clique_range(c).start, expect);
+            expect = l.clique_range(c).end;
+        }
+        for s in 0..l.n_seps() {
+            assert_eq!(l.sep_range(s).start, expect);
+            expect = l.sep_range(s).end;
+        }
+        assert_eq!(expect, l.total);
+        assert_eq!(l.total, jt.total_clique_entries() + jt.total_sep_entries());
+    }
+
     #[test]
     fn fresh_matches_prototype() {
-        let net = embedded::asia();
-        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let jt = asia_tree();
         let st = TreeState::fresh(&jt);
-        assert_eq!(st.cliques.len(), jt.n_cliques());
-        assert_eq!(st.seps.len(), jt.seps.len());
-        for (c, p) in st.cliques.iter().zip(&jt.prototype) {
-            assert_eq!(c, p);
+        assert_eq!(st.layout().n_cliques(), jt.n_cliques());
+        assert_eq!(st.layout().n_seps(), jt.seps.len());
+        for c in 0..jt.n_cliques() {
+            assert_eq!(st.clique(c), jt.proto_clique(c));
         }
-        assert!(st.seps.iter().all(|s| s.iter().all(|&x| x == 1.0)));
+        for s in 0..jt.seps.len() {
+            assert!(st.sep(s).iter().all(|&x| x == 1.0));
+        }
     }
 
     #[test]
     fn reset_restores_after_mutation() {
-        let net = embedded::asia();
-        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let jt = asia_tree();
         let mut st = TreeState::fresh(&jt);
-        for c in &mut st.cliques {
-            for x in c.iter_mut() {
-                *x = 42.0;
-            }
+        for x in st.data_mut() {
+            *x = 42.0;
         }
-        st.seps[0][0] = 7.0;
         st.log_z = 3.0;
         st.reset(&jt);
-        for (c, p) in st.cliques.iter().zip(&jt.prototype) {
-            assert_eq!(c, p);
+        for c in 0..jt.n_cliques() {
+            assert_eq!(st.clique(c), jt.proto_clique(c));
         }
-        assert_eq!(st.seps[0][0], 1.0);
+        assert_eq!(st.sep(0)[0], 1.0);
         assert_eq!(st.log_z, 0.0);
     }
 
     #[test]
     fn entry_count_matches_tree() {
-        let net = embedded::asia();
-        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let jt = asia_tree();
         let st = TreeState::fresh(&jt);
         assert_eq!(st.n_entries(), jt.total_clique_entries() + jt.total_sep_entries());
+    }
+
+    #[test]
+    fn mutable_accessors_write_through_to_the_arena() {
+        let jt = asia_tree();
+        let mut st = TreeState::fresh(&jt);
+        st.clique_mut(2)[0] = 7.5;
+        st.sep_mut(1)[0] = 2.5;
+        let cr = st.layout().clique_range(2);
+        let sr = st.layout().sep_range(1);
+        assert_eq!(st.data()[cr.start], 7.5);
+        assert_eq!(st.data()[sr.start], 2.5);
+    }
+
+    #[test]
+    fn batch_state_lanes_are_independent_and_reset_clean() {
+        let jt = asia_tree();
+        let mut bs = BatchState::fresh(&jt, 3);
+        assert_eq!(bs.lanes(), 3);
+        assert_eq!(bs.data().len(), jt.layout.total * 3);
+        // every lane starts at the prototype
+        for c in 0..jt.n_cliques() {
+            for lane in 0..3 {
+                assert_eq!(bs.lane_of_clique(c, lane), jt.proto_clique(c));
+            }
+        }
+        // scribble over lane 1 only, then reset: no stale lane survives
+        let lanes = bs.lanes();
+        for chunk in bs.data_mut().chunks_mut(lanes) {
+            chunk[1] = -9.0;
+        }
+        bs.log_z[1] = 5.0;
+        assert_ne!(bs.lane_of_clique(0, 1), jt.proto_clique(0));
+        bs.reset();
+        for lane in 0..3 {
+            for c in 0..jt.n_cliques() {
+                assert_eq!(bs.lane_of_clique(c, lane), jt.proto_clique(c));
+            }
+        }
+        assert_eq!(bs.log_z, vec![0.0; 3]);
     }
 }

@@ -6,10 +6,13 @@
 //! is immutable and shared by every engine and every test case; all
 //! per-case mutable data lives in [`crate::jt::state::TreeState`].
 
+use std::sync::Arc;
+
 use crate::bn::network::Network;
 use crate::jt::mapping::{build_map, strides};
 use crate::jt::moralize::moralize;
 use crate::jt::potential::Potential;
+use crate::jt::state::ArenaLayout;
 use crate::jt::triangulate::{is_subset, maximal_cliques, triangulate, TriangulationHeuristic};
 use crate::{Error, Result};
 
@@ -112,8 +115,14 @@ pub struct JunctionTree {
     pub var_slot: Vec<VarSlot>,
     /// Clique each CPT was multiplied into.
     pub cpt_home: Vec<usize>,
-    /// Initial clique potentials (CPT products), cloned per test case.
-    pub prototype: Vec<Vec<f64>>,
+    /// Arena layout: (offset, len) per clique/separator table in one flat
+    /// allocation (see [`crate::jt::state`] for the invariants). Shared by
+    /// every [`crate::jt::state::TreeState`] of this tree via `Arc`.
+    pub layout: Arc<ArenaLayout>,
+    /// Flat prototype arena: clique ranges hold the CPT products,
+    /// separator ranges hold all-ones. `TreeState::fresh`/`reset` are one
+    /// memcpy of this.
+    pub arena_proto: Vec<f64>,
     /// Per-edge index maps.
     pub edge_maps: Vec<EdgeMaps>,
     /// Heuristic used (recorded for reporting).
@@ -220,8 +229,11 @@ impl JunctionTree {
             var_slot.push(VarSlot { clique: home, stride: c.strides[pos], card: c.cards[pos] });
         }
 
-        // 6. CPT assignment + prototype potentials
-        let mut prototype: Vec<Vec<f64>> = cliques.iter().map(|c| vec![1.0; c.len]).collect();
+        // 6. arena layout + CPT assignment into the flat prototype
+        let clique_lens: Vec<usize> = cliques.iter().map(|c| c.len).collect();
+        let sep_lens: Vec<usize> = seps.iter().map(|s| s.len).collect();
+        let layout = Arc::new(ArenaLayout::build(&clique_lens, &sep_lens));
+        let mut arena_proto = vec![1.0f64; layout.total];
         let mut cpt_home = Vec::with_capacity(net.n());
         for v in 0..net.n() {
             let mut fam: Vec<usize> = net.parents(v).to_vec();
@@ -235,7 +247,7 @@ impl JunctionTree {
             let pot = Potential::from_cpt(net, v);
             let c = &cliques[home];
             let map = build_map(&c.vars, &c.cards, &pot.vars, &pot.cards);
-            let data = &mut prototype[home];
+            let data = &mut arena_proto[layout.clique_range(home)];
             for (i, x) in data.iter_mut().enumerate() {
                 *x *= pot.data[map[i] as usize];
             }
@@ -263,10 +275,17 @@ impl JunctionTree {
             adj,
             var_slot,
             cpt_home,
-            prototype,
+            layout,
+            arena_proto,
             edge_maps,
             heuristic,
         })
+    }
+
+    /// Prototype potentials of clique `c` (a slice of the flat arena).
+    #[inline]
+    pub fn proto_clique(&self, c: usize) -> &[f64] {
+        &self.arena_proto[self.layout.clique_range(c)]
     }
 
     /// Number of cliques.
@@ -404,9 +423,14 @@ mod tests {
         // every clique table must be non-negative and non-trivial.
         let net = embedded::asia();
         let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
-        for data in &jt.prototype {
+        for c in 0..jt.n_cliques() {
+            let data = jt.proto_clique(c);
             assert!(data.iter().all(|&x| x >= 0.0));
             assert!(data.iter().sum::<f64>() > 0.0);
+        }
+        // separator ranges of the prototype arena are all-ones
+        for s in 0..jt.seps.len() {
+            assert!(jt.arena_proto[jt.layout.sep_range(s)].iter().all(|&x| x == 1.0));
         }
     }
 

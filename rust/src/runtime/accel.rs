@@ -87,7 +87,7 @@ impl SeqXlaEngine {
                 let view = self.view(msg.from, msg.sep).clone();
                 let mut packed = std::mem::take(&mut self.packed);
                 packed.resize(view.perm.len(), 0.0);
-                view.pack(&state.cliques[msg.from], &mut packed);
+                view.pack(state.clique(msg.from), &mut packed);
                 let mut out = vec![0.0; view.m_len];
                 self.xla.marginalize(&packed, view.m_len, view.k_len, &mut out)?;
                 self.packed = packed;
@@ -97,7 +97,7 @@ impl SeqXlaEngine {
                 let sep_meta = &self.jt.seps[msg.sep];
                 let map = self.jt.edge_maps[msg.sep].from(sep_meta, msg.from);
                 let mut out = vec![0.0; sep_len];
-                ops::marg_with_map(&state.cliques[msg.from], map, &mut out);
+                ops::marg_with_map(state.clique(msg.from), map, &mut out);
                 self.native_ops += 1;
                 new_sep_owned = out;
             }
@@ -116,21 +116,21 @@ impl SeqXlaEngine {
             let view = self.view(msg.to, msg.sep).clone();
             let mut packed = std::mem::take(&mut self.packed);
             packed.resize(view.perm.len(), 0.0);
-            view.pack(&state.cliques[msg.to], &mut packed);
-            let old = state.seps[msg.sep].clone();
+            view.pack(state.clique(msg.to), &mut packed);
+            let old = state.sep(msg.sep).to_vec();
             self.xla
                 .absorb(&mut packed, view.m_len, view.k_len, &self.scratch.new_sep[..sep_len], &old)?;
-            view.unpack(&packed, &mut state.cliques[msg.to]);
+            view.unpack(&packed, state.clique_mut(msg.to));
             self.packed = packed;
             self.xla_ops += 1;
         } else {
             let sep_meta = &self.jt.seps[msg.sep];
             let map = self.jt.edge_maps[msg.sep].from(sep_meta, msg.to);
-            ops::ratio(&self.scratch.new_sep[..sep_len], &state.seps[msg.sep], &mut self.scratch.ratio[..sep_len]);
-            ops::extend_with_map(&mut state.cliques[msg.to], map, &self.scratch.ratio[..sep_len]);
+            ops::ratio(&self.scratch.new_sep[..sep_len], state.sep(msg.sep), &mut self.scratch.ratio[..sep_len]);
+            ops::extend_with_map(state.clique_mut(msg.to), map, &self.scratch.ratio[..sep_len]);
             self.native_ops += 1;
         }
-        state.seps[msg.sep].copy_from_slice(&self.scratch.new_sep[..sep_len]);
+        state.sep_mut(msg.sep).copy_from_slice(&self.scratch.new_sep[..sep_len]);
         Ok(mass)
     }
 }
@@ -152,7 +152,7 @@ impl Engine for SeqXlaEngine {
             }
         }
         for root in self.sched.roots.clone() {
-            let data = &mut state.cliques[root];
+            let data = state.clique_mut(root);
             let mass = ops::sum(data);
             if mass == 0.0 {
                 return Err(Error::InconsistentEvidence);

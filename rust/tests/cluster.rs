@@ -288,3 +288,54 @@ fn cluster_cli_smoke_runs_end_to_end() {
     assert!(output.status.success(), "exit={:?}\nstdout:\n{stdout}\nstderr:\n{stderr}", output.status);
     assert!(stdout.contains("cluster-smoke passed (2 backends"), "stdout:\n{stdout}");
 }
+
+#[test]
+fn batch_verb_passes_through_the_front_tier() {
+    // a batched-engine backend behind the router: the BATCH/CASE dance
+    // must round-trip the front tier with the same replies the backend's
+    // own socket would produce — including the n-line final reply
+    let harness = ClusterHarness::start(
+        2,
+        FleetConfig {
+            engine: EngineKind::Batched,
+            engine_cfg: EngineConfig::default().with_threads(1).with_batch(3),
+            shards: 1,
+            registry_capacity: 8,
+        },
+        fast_cluster_cfg(),
+    )
+    .unwrap();
+    let mut c = harness.client().unwrap();
+    assert!(c.request("LOAD asia").unwrap().starts_with("OK loaded asia"));
+    assert!(c.request("USE asia").unwrap().starts_with("OK using asia"));
+    let want_yes = c.request("QUERY lung | smoke=yes").unwrap();
+    let want_prior = c.request("QUERY lung").unwrap();
+
+    assert_eq!(c.request("BATCH 3 lung").unwrap(), "OK batch expect=3 target=lung");
+    assert_eq!(c.request("CASE smoke=yes").unwrap(), "OK case 1/3");
+    assert_eq!(c.request("CASE").unwrap(), "OK case 2/3");
+    let results = c.request_lines("CASE smoke=yes", 3).unwrap();
+    assert_eq!(results, vec![want_yes.clone(), want_prior, want_yes]);
+
+    // the session (front and backend) is clean afterwards: plain verbs
+    // keep working and a stray CASE is rejected, not miscounted
+    assert!(c.request("CASE").unwrap().starts_with("ERR no batch in progress"));
+    assert!(c.request("QUERY lung | smoke=yes").unwrap().starts_with("OK yes=0.100000"));
+
+    // a verb the front answers locally — including a USE it rejects
+    // without touching the pinned conn — must NOT desync the countdown:
+    // the backend never saw a verb, so the batch stays open on both tiers
+    assert!(c.request("BATCH 2 lung").unwrap().starts_with("OK batch expect=2"));
+    assert_eq!(c.request("CASE smoke=yes").unwrap(), "OK case 1/2");
+    assert!(c.request("NETS").unwrap().starts_with("OK nets="));
+    assert!(c.request("USE not-loaded-anywhere").unwrap().starts_with("ERR not loaded"));
+    let tail = c.request_lines("CASE", 2).unwrap();
+    assert!(tail[0].starts_with("OK yes=0.100000"), "{}", tail[0]);
+    assert!(tail[1].starts_with("OK yes=0.055000"), "{}", tail[1]);
+
+    // a forwarded non-CASE verb aborts an open batch on both tiers
+    assert!(c.request("BATCH 2 lung").unwrap().starts_with("OK batch expect=2"));
+    assert_eq!(c.request("CASE smoke=yes").unwrap(), "OK case 1/2");
+    assert!(c.request("QUERY lung").unwrap().starts_with("OK yes=0.055000"));
+    assert!(c.request("CASE").unwrap().starts_with("ERR no batch in progress"));
+}

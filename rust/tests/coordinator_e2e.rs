@@ -24,6 +24,7 @@ fn batch_over_hailfinder_analog_all_engines_agree() {
             engine: kind,
             engine_cfg: EngineConfig { threads: 2, ..Default::default() },
             replicas: 1,
+            fused_batch: 0,
         };
         let report = runner.run(&cases, &cfg).unwrap();
         assert_eq!(
@@ -56,6 +57,7 @@ fn replica_scaling_preserves_results() {
         engine: EngineKind::Hybrid,
         engine_cfg: EngineConfig { threads: 1, ..Default::default() },
         replicas,
+        fused_batch: 0,
     };
     let r1 = runner.run(&cases, &mk(1)).unwrap();
     let r4 = runner.run(&cases, &mk(4)).unwrap();

@@ -197,3 +197,131 @@ fn fleet_answers_match_across_engine_kinds() {
         }
     }
 }
+
+#[test]
+fn batched_fleet_concurrent_clients_match_single_tree_seq() {
+    // acceptance: BatchedHybridEngine posteriors match SeqEngine to ≤1e-9
+    // for every case in the batch, on an embedded and a generated net,
+    // under concurrent clients driving whole batches (one shard dispatch
+    // per batch — the BATCH verb's API surface, at full precision)
+    // 4 lanes per shard engine; batches of 10 exercise partial tails
+    let fleet = Arc::new(Fleet::new(FleetConfig {
+        engine: EngineKind::Batched,
+        engine_cfg: EngineConfig::default().with_threads(2).with_batch(4),
+        shards: 2,
+        registry_capacity: 4,
+    }));
+    fleet.load("asia").unwrap();
+    fleet.load("hailfinder-sim").unwrap();
+
+    let nets = ["asia", "hailfinder-sim"];
+    let mut expected = Vec::new();
+    let mut case_sets = Vec::new();
+    for (i, name) in nets.iter().enumerate() {
+        let jt = fleet.tree(name).unwrap();
+        let cases = generate(&jt.net, &CaseSpec { n_cases: 10, observed_fraction: 0.2, seed: 1700 + i as u64 });
+        expected.push(seq_reference(&jt, &cases));
+        case_sets.push(cases);
+    }
+
+    let answers: Vec<Vec<Posteriors>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = nets
+            .iter()
+            .zip(&case_sets)
+            .map(|(name, cases)| {
+                let fleet = Arc::clone(&fleet);
+                scope.spawn(move || {
+                    fleet
+                        .query_batch(name, cases.clone())
+                        .unwrap()
+                        .into_iter()
+                        .map(|r| r.unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (n, (got, want)) in answers.iter().zip(&expected).enumerate() {
+        assert_eq!(got.len(), want.len(), "{}", nets[n]);
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let d = g.max_abs_diff(w);
+            assert!(d <= 1e-9, "{}: batched case {i} differs from single-tree Seq by {d:e}", nets[n]);
+        }
+    }
+    // every case recorded in the per-network metrics
+    let stats = fleet.stats_line();
+    assert!(stats.contains("| asia queries=10 errors=0"), "{stats}");
+    assert!(stats.contains("| hailfinder-sim queries=10 errors=0"), "{stats}");
+}
+
+/// Drive one BATCH collection over a live socket: returns the per-case
+/// acks plus the final n result lines.
+fn tcp_batch(
+    addr: std::net::SocketAddr,
+    net: &str,
+    target: &str,
+    case_lines: &[String],
+) -> Vec<String> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut ask = |req: &str, lines: usize| -> Vec<String> {
+        stream.write_all(req.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        (0..lines)
+            .map(|_| {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                line.trim().to_string()
+            })
+            .collect()
+    };
+    assert!(ask(&format!("USE {net}"), 1)[0].starts_with("OK using"), "USE failed");
+    let n = case_lines.len();
+    assert!(ask(&format!("BATCH {n} {target}"), 1)[0].starts_with("OK batch"), "BATCH failed");
+    for (i, case) in case_lines.iter().enumerate().take(n - 1) {
+        let ack = ask(&format!("CASE {case}"), 1);
+        assert_eq!(ack[0], format!("OK case {}/{n}", i + 1));
+    }
+    ask(&format!("CASE {}", case_lines[n - 1]), n)
+}
+
+#[test]
+fn batch_verb_over_tcp_matches_query_replies_under_concurrent_clients() {
+    let fleet = Arc::new(Fleet::new(FleetConfig {
+        engine: EngineKind::Batched,
+        engine_cfg: EngineConfig::default().with_threads(1).with_batch(3),
+        shards: 2,
+        registry_capacity: 4,
+    }));
+    fleet.load("asia").unwrap();
+    fleet.load("cancer").unwrap();
+    let server = FleetServer::start(Arc::clone(&fleet), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    // per-net reference replies via plain QUERY (same wire formatter)
+    let asia_queries: Vec<String> =
+        ["QUERY lung | smoke=yes", "QUERY lung", "QUERY lung | smoke=no"].iter().map(|s| s.to_string()).collect();
+    let asia_want = {
+        let mut script = vec!["USE asia".to_string()];
+        script.extend(asia_queries.clone());
+        tcp_session(addr, &script)[1..].to_vec()
+    };
+    let cancer_want = {
+        let script: Vec<String> =
+            ["USE cancer", "QUERY Cancer | Smoker=True", "QUERY Cancer"].iter().map(|s| s.to_string()).collect();
+        tcp_session(addr, &script)[1..].to_vec()
+    };
+
+    let asia_cases: Vec<String> = ["smoke=yes", "", "smoke=no"].iter().map(|s| s.to_string()).collect();
+    let cancer_cases: Vec<String> = ["Smoker=True", ""].iter().map(|s| s.to_string()).collect();
+    let (asia_got, cancer_got) = std::thread::scope(|scope| {
+        let a = scope.spawn(|| tcp_batch(addr, "asia", "lung", &asia_cases));
+        let b = scope.spawn(|| tcp_batch(addr, "cancer", "Cancer", &cancer_cases));
+        (a.join().unwrap(), b.join().unwrap())
+    });
+    assert_eq!(asia_got, asia_want, "asia BATCH replies must match QUERY byte for byte");
+    assert_eq!(cancer_got, cancer_want, "cancer BATCH replies must match QUERY byte for byte");
+    server.shutdown();
+}

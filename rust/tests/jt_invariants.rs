@@ -213,3 +213,91 @@ fn index_maps_project_consistently_with_potential_marginalization() {
         Ok(())
     });
 }
+
+/// ISSUE 4 satellite: the arena layout must round-trip the old
+/// per-table construction. For random nets: layout ranges tile the arena
+/// exactly (cliques then seps, disjoint, total covered); every clique
+/// slice of the prototype arena equals an independently rebuilt CPT
+/// product; every separator slice is all-ones; and a multi-lane
+/// `BatchState` reset leaves no stale lane behind.
+#[test]
+fn arena_layout_roundtrips_per_table_construction() {
+    use fastbn::jt::mapping::build_map;
+    use fastbn::jt::potential::Potential;
+    use fastbn::jt::state::{BatchState, TreeState};
+
+    forall(Config::cases(25).named("arena"), |rng| {
+        let net = random_spec(rng).generate();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).map_err(|e| e.to_string())?;
+
+        // ranges tile 0..total in order: cliques first, then separators
+        let l = &jt.layout;
+        let mut cursor = 0usize;
+        for c in 0..jt.n_cliques() {
+            let r = l.clique_range(c);
+            ensure(r.start == cursor, || format!("clique {c} starts at {} not {cursor}", r.start))?;
+            ensure(r.len() == jt.cliques[c].len, || format!("clique {c} length mismatch"))?;
+            cursor = r.end;
+        }
+        for s in 0..jt.seps.len() {
+            let r = l.sep_range(s);
+            ensure(r.start == cursor, || format!("sep {s} starts at {} not {cursor}", r.start))?;
+            ensure(r.len() == jt.seps[s].len, || format!("sep {s} length mismatch"))?;
+            cursor = r.end;
+        }
+        ensure(cursor == l.total, || format!("arena total {} != end {cursor}", l.total))?;
+        ensure(jt.arena_proto.len() == l.total, || "prototype arena length mismatch".to_string())?;
+
+        // rebuild each clique's prototype the old per-table way: the
+        // product of the CPTs homed on it, expanded through build_map
+        let mut rebuilt: Vec<Vec<f64>> = jt.cliques.iter().map(|c| vec![1.0; c.len]).collect();
+        for v in 0..net.n() {
+            let home = jt.cpt_home[v];
+            let pot = Potential::from_cpt(&net, v);
+            let c = &jt.cliques[home];
+            let map = build_map(&c.vars, &c.cards, &pot.vars, &pot.cards);
+            for (i, x) in rebuilt[home].iter_mut().enumerate() {
+                *x *= pot.data[map[i] as usize];
+            }
+        }
+        for c in 0..jt.n_cliques() {
+            let arena_slice = jt.proto_clique(c);
+            for (i, (&a, &b)) in arena_slice.iter().zip(&rebuilt[c]).enumerate() {
+                ensure((a - b).abs() < 1e-12, || format!("clique {c} entry {i}: arena {a} vs rebuilt {b}"))?;
+            }
+        }
+        for s in 0..jt.seps.len() {
+            ensure(jt.arena_proto[l.sep_range(s)].iter().all(|&x| x == 1.0), || {
+                format!("sep {s} prototype is not all-ones")
+            })?;
+        }
+
+        // single-case state: fresh == proto, reset clears a scribble
+        let mut st = TreeState::fresh(&jt);
+        ensure(st.data() == &jt.arena_proto[..], || "fresh state != prototype arena".to_string())?;
+        for x in st.data_mut() {
+            *x = -1.0;
+        }
+        st.reset(&jt);
+        ensure(st.data() == &jt.arena_proto[..], || "reset did not restore the prototype".to_string())?;
+
+        // batch state: scribble one lane, reset, verify no stale lane
+        let lanes = 1 + (rng.below(4));
+        let mut bs = BatchState::fresh(&jt, lanes);
+        let dirty = rng.below(lanes);
+        let n_lanes = bs.lanes();
+        for chunk in bs.data_mut().chunks_mut(n_lanes) {
+            chunk[dirty] = f64::NAN;
+        }
+        bs.reset();
+        for lane in 0..n_lanes {
+            for c in 0..jt.n_cliques() {
+                let got = bs.lane_of_clique(c, lane);
+                ensure(got == jt.proto_clique(c), || {
+                    format!("lane {lane} clique {c} stale after reset")
+                })?;
+            }
+        }
+        Ok(())
+    });
+}

@@ -248,3 +248,58 @@ fn single_clique_and_chain_topologies() {
         }
     }
 }
+
+/// Regression (ISSUE 4 satellite): a tree with **zero separators** —
+/// single-clique and fully-disconnected networks — must be a working path
+/// through every engine, batched included. `Scratch::for_tree` sizes its
+/// buffers from `max sep len` (now 0 for such trees); no message is ever
+/// sent, so collect/distribute reduce to root normalization only.
+#[test]
+fn zero_separator_trees_work_through_every_engine() {
+    use fastbn::bn::cpt::Cpt;
+    use fastbn::bn::network::Network;
+    use fastbn::bn::variable::Variable;
+    use fastbn::engine::batched::BatchedHybridEngine;
+
+    // one-variable net: 1 clique, 0 separators
+    let single = Network::new(
+        "single",
+        vec![Variable::with_card("a", 3)],
+        vec![Cpt::new(0, vec![], vec![0.2, 0.3, 0.5], &[3]).unwrap()],
+    )
+    .unwrap();
+    // two isolated variables: a 2-clique forest, still 0 separators
+    let forest = Network::new(
+        "forest",
+        vec![Variable::with_card("a", 2), Variable::with_card("b", 3)],
+        vec![
+            Cpt::new(0, vec![], vec![0.4, 0.6], &[2, 3]).unwrap(),
+            Cpt::new(1, vec![], vec![0.2, 0.3, 0.5], &[2, 3]).unwrap(),
+        ],
+    )
+    .unwrap();
+
+    for net in [&single, &forest] {
+        let jt = Arc::new(JunctionTree::compile(net, TriangulationHeuristic::MinFill).unwrap());
+        assert_eq!(jt.seps.len(), 0, "{}", net.name);
+        let exact = fastbn::infer::exact::enumerate(net, &Evidence::none()).unwrap();
+        let ev_a = Evidence::from_ids(vec![(0, 1)]);
+        let exact_a = fastbn::infer::exact::enumerate(net, &ev_a).unwrap();
+        for kind in EngineKind::ALL {
+            let cfg = EngineConfig { threads: 2, min_chunk: 1, ..Default::default() };
+            let mut eng = kind.build(Arc::clone(&jt), &cfg);
+            let mut state = TreeState::fresh(&jt);
+            let prior = eng.infer(&mut state, &Evidence::none()).unwrap();
+            assert!(prior.max_abs_diff(&exact) < 1e-9, "{kind} {} prior", net.name);
+            let cond = eng.infer(&mut state, &ev_a).unwrap();
+            assert!(cond.max_abs_diff(&exact_a) < 1e-9, "{kind} {} evidence", net.name);
+        }
+        // the batched engine, with a multi-lane batch mixing the cases
+        let cfg = EngineConfig { threads: 2, min_chunk: 1, ..Default::default() }.with_batch(3);
+        let mut batched = BatchedHybridEngine::new(Arc::clone(&jt), &cfg);
+        let outs = batched.infer_cases(&[Evidence::none(), ev_a.clone(), Evidence::none()]);
+        assert!(outs[0].as_ref().unwrap().max_abs_diff(&exact) < 1e-9, "{} batched prior", net.name);
+        assert!(outs[1].as_ref().unwrap().max_abs_diff(&exact_a) < 1e-9, "{} batched evidence", net.name);
+        assert!(outs[2].as_ref().unwrap().max_abs_diff(&exact) < 1e-9, "{} batched tail lane", net.name);
+    }
+}
