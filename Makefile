@@ -2,13 +2,16 @@
 #
 #   make build      release build of the fastbn crate (pure-std, offline-safe)
 #   make test       tier-1: cargo test; then the python suite (skips if no pytest)
-#   make bench      run all seven bench targets (criterion-lite, harness=false)
+#   make bench      run all eight bench targets (criterion-lite, harness=false)
 #   make serve-smoke start a 2-network fleet, run a scripted session
 #                   through it over TCP, and assert on the replies
 #   make batch-smoke drive the BATCH verb (N evidence lines in, N posterior
 #                   lines out, one fused sweep) through a live fleet socket
 #   make cluster-smoke spawn 2 fleet backend processes + the consistent-hash
 #                   front tier, run a scripted session through the router
+#   make learn-smoke sample->learn->serve->QUERY round trip over a live
+#                   fleet socket (LEARN verb), learned twice to assert the
+#                   deterministic-relearn contract
 #   make artifacts  AOT-lower the Pallas/JAX kernels to HLO-text artifacts
 #                   (needs the python deps in python/requirements.txt)
 #   make fmt        rustfmt the workspace
@@ -20,7 +23,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench serve-smoke batch-smoke cluster-smoke artifacts fmt lint test-xla clean
+.PHONY: build test bench serve-smoke batch-smoke cluster-smoke learn-smoke artifacts fmt lint test-xla clean
 
 build:
 	$(CARGO) build --release
@@ -62,6 +65,14 @@ batch-smoke:
 # reply.
 cluster-smoke:
 	$(CARGO) run --release -- cluster --backends 2 --nets asia,cancer --bind 127.0.0.1:0 --smoke
+
+# learning smoke: an empty fleet on an ephemeral port; the --learn-smoke
+# switch drives LEARN/USE/QUERY through the server's own socket (sample
+# from asia, learn structure + parameters, serve the learned net), learns
+# the identical spec twice, and asserts the two nets answer QUERY
+# byte-identically.
+learn-smoke:
+	$(CARGO) run --release -- serve --fleet --shards 1 --bind 127.0.0.1:0 --learn-smoke
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts

@@ -1,0 +1,89 @@
+//! Bench: **pool-parallel structure learning** — the thread-scaling sweep.
+//!
+//! PC-stable's levels are embarrassingly parallel batches of CI tests
+//! (all tests of a level are independent once adjacency is frozen), so
+//! skeleton discovery should scale with the worker pool the same way the
+//! inference engines do. This bench learns from forward samples of
+//! mid-size networks at t ∈ {1, 2, 4, 8} threads, reporting wall time,
+//! CI-test counts, and tests/second — plus a determinism guard: every
+//! thread count must produce the identical skeleton and CPDAG (the
+//! contract the fleet's LEARN verb and the cluster hand-off rely on).
+//!
+//! Scale knobs: FASTBN_SAMPLES (default 20000 rows), FASTBN_LEARN_MAX_T
+//! (default 8 — the top of the thread sweep).
+
+use fastbn::bench::{env_usize, print_table, Bench};
+use fastbn::bn::{embedded, netgen};
+use fastbn::learn::{learn, Dataset, LearnConfig};
+
+fn main() {
+    let samples = env_usize("FASTBN_SAMPLES", 20_000);
+    let max_t = env_usize("FASTBN_LEARN_MAX_T", 8).max(1);
+    let threads: Vec<usize> = [1usize, 2, 4, 8].into_iter().filter(|&t| t <= max_t).collect();
+    let bench = Bench::new(1, 3);
+
+    let nets = vec![
+        embedded::asia(),
+        embedded::mixed12(),
+        netgen::NetSpec {
+            name: "learn-30".into(),
+            nodes: 30,
+            arcs: 40,
+            max_parents: 2,
+            card_choices: vec![(2, 0.7), (3, 0.3)],
+            locality: 6,
+            max_table: 1 << 10,
+            alpha: 1.0,
+            seed: 0x5EED,
+        }
+        .generate(),
+    ];
+
+    let mut rows = Vec::new();
+    for net in &nets {
+        let data = Dataset::from_network(net, samples, 0xBE9C);
+        let mut row = vec![net.name.clone(), format!("{}x{}", data.n_rows(), data.n_vars())];
+        let mut base = None;
+        let mut t1_secs = 0.0f64;
+        for &t in &threads {
+            let cfg = LearnConfig::default().with_threads(t);
+            // determinism guard across the sweep (and the data the table reports)
+            let report = learn(&data, &net.name, &cfg).expect("learn");
+            match &base {
+                None => {
+                    row.insert(2, format!("{}", report.ci_tests()));
+                    row.insert(3, format!("{}", report.skeleton.len()));
+                    base = Some((report.skeleton.clone(), report.compelled.clone()));
+                }
+                Some((skel, compelled)) => {
+                    assert_eq!(&report.skeleton, skel, "{}: skeleton changed at t={t}", net.name);
+                    assert_eq!(&report.compelled, compelled, "{}: CPDAG changed at t={t}", net.name);
+                }
+            }
+            let stat = bench.run(|| {
+                let _ = learn(&data, &net.name, &cfg).expect("learn");
+            });
+            let secs = stat.mean.as_secs_f64();
+            if t == 1 {
+                t1_secs = secs;
+            }
+            let tests_per_s = report.ci_tests() as f64 / secs;
+            row.push(format!("{:.0}ms ({:.0}/s)", secs * 1e3, tests_per_s));
+            if t == *threads.last().unwrap() {
+                row.push(format!("{:.2}x", t1_secs / secs));
+            }
+        }
+        rows.push(row);
+    }
+
+    let mut headers: Vec<String> = vec!["BN".into(), "rows".into(), "tests".into(), "edges".into()];
+    headers.extend(threads.iter().map(|t| format!("t={t}")));
+    headers.push("t1/tmax".into());
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    print_table(
+        &format!("learn: PC-stable thread scaling ({samples} samples, alpha 0.01)"),
+        &header_refs,
+        &rows,
+    );
+    println!("\nacceptance: identical skeleton/CPDAG at every thread count; wall time drops with t");
+}

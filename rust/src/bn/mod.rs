@@ -25,10 +25,16 @@ pub use variable::Variable;
 /// Resolve a network spec string to a loaded [`Network`].
 ///
 /// A spec is an embedded name (`asia`, `cancer`, `sprinkler`, `mixed12`),
-/// a paper-suite analog (`hailfinder-sim` … `munin4-sim`), or a path to a
-/// `.bif` / Hugin `.net` file. This is the single loading entry point the
+/// a paper-suite analog (`hailfinder-sim` … `munin4-sim`), a path to a
+/// `.bif` / Hugin `.net` file, or a `learn:` spec
+/// (`learn:<name>:<samples>:<seed>:<base-spec>`) that samples from the
+/// base network and learns a structure + parameters deterministically
+/// (see [`crate::learn`]). This is the single loading entry point the
 /// CLI and the serving fleet's registry share.
 pub fn resolve_spec(spec: &str) -> crate::Result<Network> {
+    if crate::learn::is_learn_spec(spec) {
+        return crate::learn::resolve_learn_spec(spec);
+    }
     if let Some(net) = embedded::by_name(spec) {
         return Ok(net);
     }
@@ -57,5 +63,14 @@ mod tests {
         assert_eq!(super::resolve_spec("asia").unwrap().name, "asia");
         assert!(super::resolve_spec("hailfinder-sim").is_ok());
         assert!(super::resolve_spec("no-such-net").is_err());
+    }
+
+    #[test]
+    fn resolve_spec_handles_learn_specs() {
+        let net = super::resolve_spec("learn:tiny:2000:3:sprinkler").unwrap();
+        assert_eq!(net.name, "tiny");
+        assert_eq!(net.n(), 4);
+        assert!(super::resolve_spec("learn:bad").is_err());
+        assert!(super::resolve_spec("learn:x:100:1:no-such-base").is_err());
     }
 }

@@ -8,24 +8,68 @@
 use crate::bn::network::Network;
 use crate::rng::Rng;
 
+/// One ancestral pass: draw every variable in `order` into `assignment`,
+/// reusing `config` as the parent-configuration scratch. The single
+/// definition both samplers share — their RNG streams are identical by
+/// construction, not by test pin alone.
+fn draw_row(
+    net: &Network,
+    order: &[usize],
+    cards: &[usize],
+    rng: &mut Rng,
+    assignment: &mut [usize],
+    config: &mut Vec<usize>,
+) {
+    for &v in order {
+        let cpt = &net.cpts[v];
+        config.clear();
+        config.extend(cpt.parents.iter().map(|&p| assignment[p]));
+        assignment[v] = rng.categorical(cpt.row(config, cards));
+    }
+}
+
 /// Draw one complete assignment (state index per variable) via ancestral
 /// sampling in topological order.
 pub fn forward_sample(net: &Network, rng: &mut Rng) -> Vec<usize> {
     let order = net.topo_order().expect("validated networks are acyclic");
     let cards = net.cards();
     let mut assignment = vec![usize::MAX; net.n()];
-    for &v in &order {
-        let cpt = &net.cpts[v];
-        let config: Vec<usize> = cpt.parents.iter().map(|&p| assignment[p]).collect();
-        let row = cpt.row(&config, &cards);
-        assignment[v] = rng.categorical(row);
-    }
+    let mut config = Vec::new();
+    draw_row(net, &order, &cards, rng, &mut assignment, &mut config);
     assignment
 }
 
 /// Draw `n` samples.
 pub fn forward_samples(net: &Network, rng: &mut Rng, n: usize) -> Vec<Vec<usize>> {
     (0..n).map(|_| forward_sample(net, rng)).collect()
+}
+
+/// Draw `n` samples straight into **column-major** storage
+/// (`cols[v][r]` = row `r`'s state of variable `v`) — the layout
+/// [`crate::learn::Dataset`] wants, produced without materializing the
+/// row-major `Vec<Vec<usize>>` intermediate first (at learning-scale
+/// sample counts that copy dominates generation). The topological order,
+/// cardinalities, and scratch row are hoisted out of the loop, so the
+/// per-row cost is the categorical draws alone.
+///
+/// Draws the **same stream** as [`forward_samples`]: one categorical draw
+/// per variable in topological order per row, so the two samplers are
+/// interchangeable experiment-for-experiment.
+pub fn forward_samples_columns(net: &Network, rng: &mut Rng, n: usize) -> Vec<Vec<u32>> {
+    let order = net.topo_order().expect("validated networks are acyclic");
+    let cards = net.cards();
+    let mut cols: Vec<Vec<u32>> = (0..net.n()).map(|_| Vec::with_capacity(n)).collect();
+    // one scratch row: parents must be drawn before children, so a row is
+    // assembled variable-by-variable and then scattered to the columns
+    let mut assignment = vec![usize::MAX; net.n()];
+    let mut config = Vec::new();
+    for _ in 0..n {
+        draw_row(net, &order, &cards, rng, &mut assignment, &mut config);
+        for (v, col) in cols.iter_mut().enumerate() {
+            col.push(assignment[v] as u32);
+        }
+    }
+    cols
 }
 
 /// Monte-Carlo estimate of a marginal P(v = s) — a slow cross-check used in
@@ -56,6 +100,24 @@ mod tests {
                 assert!(st < net.card(v));
             }
         }
+    }
+
+    #[test]
+    fn column_major_sampler_draws_the_same_stream() {
+        let net = embedded::asia();
+        let mut rng_rows = Rng::new(77);
+        let rows = forward_samples(&net, &mut rng_rows, 64);
+        let mut rng_cols = Rng::new(77);
+        let cols = forward_samples_columns(&net, &mut rng_cols, 64);
+        assert_eq!(cols.len(), net.n());
+        for (v, col) in cols.iter().enumerate() {
+            assert_eq!(col.len(), 64);
+            for (r, &s) in col.iter().enumerate() {
+                assert_eq!(s as usize, rows[r][v], "row {r} var {v}");
+            }
+        }
+        // and the generators are left in identical states
+        assert_eq!(rng_rows.next_u64(), rng_cols.next_u64());
     }
 
     #[test]

@@ -7,6 +7,9 @@
 //! fastbn batch     --net <spec> [--cases 2000] [--obs 0.2] [--engine hybrid] [--threads N] [--replicas 1]
 //!                  [--batch B] [--seed S]
 //! fastbn generate  --nodes N [--arcs M] [--max-parents 3] [--seed S] [--out net.bif]
+//! fastbn learn     --net <spec> [--samples 50000] [--seed S] [--threads T] [--alpha 0.01]
+//!                  [--laplace 1.0] [--max-cond L] [--name NAME] [--out net.bif]
+//!                  [--save-data d.csv] | --data d.csv [--name NAME] [--out net.bif]
 //! fastbn serve     --net <spec> [--bind 127.0.0.1:7979] [--engine hybrid] [--threads N]
 //! fastbn serve     --nets a,b,c [--shards N] [--registry-cap K] [--batch B] [--bind ...] [--smoke] [--batch-smoke]
 //! fastbn cluster   --backends N [--nets a,b,c] [--shards S] [--replicas V] [--bind ...] [--smoke]
@@ -50,7 +53,7 @@ pub struct Args {
 
 /// Flags that are boolean switches: present or absent, never taking a
 /// value. Everything else must be followed by one.
-const SWITCHES: &[&str] = &["smoke", "fleet", "parent-watch", "batch-smoke"];
+const SWITCHES: &[&str] = &["smoke", "fleet", "parent-watch", "batch-smoke", "learn-smoke"];
 
 impl Args {
     /// Parse from raw argv (after the subcommand).
@@ -149,6 +152,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "mpe" => cmd_mpe(&args),
         "batch" => cmd_batch(&args),
         "generate" => cmd_generate(&args),
+        "learn" => cmd_learn(&args),
         "serve" => cmd_serve(&args),
         "cluster" => cmd_cluster(&args),
         "simulate" => cmd_simulate(&args),
@@ -177,13 +181,20 @@ COMMANDS:
                                      with --engine batched)
   generate  --nodes N                make a synthetic network (--arcs, --max-parents,
                                      --seed, --out file.bif)
+  learn     --net S                  sample --samples rows from S and learn structure
+                                     (PC-stable, pool-parallel CI tests) + parameters
+                                     (Laplace MLE) back; closes the sample->learn->
+                                     serve loop (--seed, --threads, --alpha, --laplace,
+                                     --max-cond, --name, --out file.bif, --save-data
+                                     d.csv); or learn from a CSV via --data d.csv
   serve     --net S                  TCP inference server (--bind, --engine)
   serve     --nets A,B,C             multi-network serving fleet (--shards N,
                                      --registry-cap K, --batch B lanes/shard
                                      with --engine batched, --smoke and
-                                     --batch-smoke self-checks); verbs: LOAD
-                                     USE NETS OBSERVE RETRACT COMMIT QUERY
-                                     BATCH CASE STATS PING EVICT QUIT
+                                     --batch-smoke and --learn-smoke self-
+                                     checks); verbs: LOAD LEARN USE NETS
+                                     OBSERVE RETRACT COMMIT QUERY BATCH CASE
+                                     STATS PING EVICT QUIT
   cluster   --backends N             cross-process cluster tier: N fleet backend
                                      child processes + a consistent-hash front
                                      router (--nets preload, --shards, --replicas
@@ -325,6 +336,123 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fastbn learn`: the closed loop as a command — sample from a known
+/// network (or read a CSV), learn structure + parameters, report recovery
+/// quality against the generating network when there is one, and
+/// optionally write the learned net as BIF.
+fn cmd_learn(args: &Args) -> Result<()> {
+    let cfg = crate::learn::LearnConfig {
+        alpha: args.parse_or("alpha", 0.01f64)?,
+        laplace: args.parse_or("laplace", 1.0f64)?,
+        max_cond: args.parse_or("max-cond", crate::learn::LearnConfig::default().max_cond)?,
+        threads: args.parse_or("threads", 0usize)?,
+    };
+    let seed = args.parse_or("seed", 0xA51Au64)?;
+    let samples = args.parse_or("samples", 50_000usize)?;
+
+    // data source: a generating network (closed loop) or a CSV file
+    let (data, truth): (crate::learn::Dataset, Option<Network>) = match args.get("data") {
+        Some(path) => (crate::learn::Dataset::load(path)?, None),
+        None => {
+            let net = resolve_net(args.require("net")?)?;
+            let t0 = std::time::Instant::now();
+            let data = crate::learn::Dataset::from_network(&net, samples, seed);
+            println!(
+                "sampled {} rows x {} vars from {} in {:?} (seed {seed})",
+                data.n_rows(),
+                data.n_vars(),
+                net.name,
+                t0.elapsed()
+            );
+            (data, Some(net))
+        }
+    };
+    if let Some(path) = args.get("save-data") {
+        data.save(path)?;
+        println!("wrote dataset to {path}");
+    }
+
+    let default_name = match &truth {
+        Some(net) => format!("{}-learned", net.name),
+        None => "learned".to_string(),
+    };
+    let name = args.get("name").unwrap_or(&default_name);
+    let report = crate::learn::learn(&data, name, &cfg)?;
+    println!(
+        "learned {} in {:?}: {} CI tests over {} levels (alpha {}, threads {})",
+        report.net.name,
+        report.elapsed,
+        report.ci_tests(),
+        report.levels.len(),
+        cfg.alpha,
+        cfg.threads
+    );
+    for (l, stats) in report.levels.iter().enumerate() {
+        println!("  level {l}: {} edges, {} tests, {} removed", stats.edges, stats.tests, stats.removed);
+    }
+    let fmt_edge = |&(x, y): &(usize, usize)| format!("{}-{}", data.names()[x], data.names()[y]);
+    println!(
+        "skeleton ({} edges): {}",
+        report.skeleton.len(),
+        report.skeleton.iter().map(fmt_edge).collect::<Vec<_>>().join(" ")
+    );
+    println!("cpdag: {} compelled, {} reversible", report.compelled.len(), report.reversible.len());
+    println!("network: {}", report.net.stats());
+
+    if let Some(truth) = &truth {
+        // skeleton recovery vs the generating net (ids align: the dataset
+        // columns come from the same network)
+        let mut want: Vec<(usize, usize)> = (0..truth.n())
+            .flat_map(|v| truth.parents(v).iter().map(move |&p| (p.min(v), p.max(v))))
+            .collect();
+        want.sort_unstable();
+        want.dedup();
+        let got: std::collections::BTreeSet<_> = report.skeleton.iter().copied().collect();
+        let want_set: std::collections::BTreeSet<_> = want.iter().copied().collect();
+        let missing: Vec<String> = want_set.difference(&got).map(|e| fmt_edge(e)).collect();
+        let extra: Vec<String> = got.difference(&want_set).map(|e| fmt_edge(e)).collect();
+        println!(
+            "skeleton vs {}: {}/{} true edges, {} missing [{}], {} extra [{}]",
+            truth.name,
+            want.len() - missing.len(),
+            want.len(),
+            missing.len(),
+            missing.join(" "),
+            extra.len(),
+            extra.join(" ")
+        );
+        // posterior agreement: compile both and compare single-variable
+        // priors in total variation — the closed-loop quality headline
+        let jt_t = Arc::new(JunctionTree::compile(truth, TriangulationHeuristic::MinFill)?);
+        let jt_l = Arc::new(JunctionTree::compile(&report.net, TriangulationHeuristic::MinFill)?);
+        let cfg1 = EngineConfig::default().with_threads(1);
+        let mut eng_t = EngineKind::Seq.build(Arc::clone(&jt_t), &cfg1);
+        let mut eng_l = EngineKind::Seq.build(Arc::clone(&jt_l), &cfg1);
+        let post_t = eng_t.infer(&mut TreeState::fresh(&jt_t), &Evidence::none())?;
+        let post_l = eng_l.infer(&mut TreeState::fresh(&jt_l), &Evidence::none())?;
+        let mut worst = (0usize, 0.0f64);
+        for v in 0..truth.n() {
+            let lv = report.net.var_id(&truth.vars[v].name)?;
+            let tv = 0.5
+                * post_t.probs[v]
+                    .iter()
+                    .zip(&post_l.probs[lv])
+                    .map(|(a, b)| (a - b).abs())
+                    .sum::<f64>();
+            if tv > worst.1 {
+                worst = (v, tv);
+            }
+        }
+        println!("worst single-variable TV vs {}: {:.5} ({})", truth.name, worst.1, truth.vars[worst.0].name);
+    }
+
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, bif::write(&report.net))?;
+        println!("wrote {} ({})", path, report.net.stats());
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let engine: EngineKind = args.get("engine").unwrap_or("hybrid").parse()?;
     let cfg = engine_config(args)?;
@@ -361,7 +489,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // this from child stdout to learn each backend's ephemeral port
         println!("FLEET READY addr={}", server.addr());
         println!(
-            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/PING/EVICT/QUIT",
+            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/PING/EVICT/QUIT",
             fleet.loaded().len(),
             shards,
             server.addr(),
@@ -376,6 +504,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // scripted BATCH-verb self-check over a live socket: N
             // evidence lines in, N posterior lines out (make batch-smoke)
             return batch_smoke(&server);
+        }
+        if args.has("learn-smoke") {
+            // scripted sample→learn→serve→QUERY round trip over a live
+            // socket, learned twice to assert determinism (make learn-smoke)
+            return learn_smoke(&server);
         }
         // serve until killed
         loop {
@@ -429,58 +562,110 @@ fn serve_smoke(server: &FleetServer) -> Result<()> {
     Ok(())
 }
 
+/// One-connection line-protocol driver shared by the socket smokes:
+/// logs every exchange and reads a fixed number of reply lines per
+/// request (the `BATCH` final `CASE` answers with n lines).
+struct SmokeClient {
+    label: &'static str,
+    stream: std::net::TcpStream,
+    reader: std::io::BufReader<std::net::TcpStream>,
+}
+
+impl SmokeClient {
+    fn connect(label: &'static str, addr: std::net::SocketAddr) -> Result<SmokeClient> {
+        let stream = std::net::TcpStream::connect(addr)?;
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        Ok(SmokeClient { label, stream, reader })
+    }
+
+    /// Send one request, read `expect_lines` reply lines.
+    fn ask_lines(&mut self, req: &str, expect_lines: usize) -> Result<Vec<String>> {
+        use std::io::{BufRead, Write};
+        self.stream.write_all(req.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut replies = Vec::with_capacity(expect_lines);
+        for _ in 0..expect_lines {
+            let mut line = String::new();
+            self.reader.read_line(&mut line)?;
+            let line = line.trim().to_string();
+            println!("> {req}\n< {line}");
+            replies.push(line);
+        }
+        Ok(replies)
+    }
+
+    /// Send one request, read one reply line.
+    fn ask(&mut self, req: &str) -> Result<String> {
+        Ok(self.ask_lines(req, 1)?.remove(0))
+    }
+
+    /// `ask` + assert the reply's prefix; returns the full reply.
+    fn expect(&mut self, req: &str, prefix: &str) -> Result<String> {
+        let reply = self.ask(req)?;
+        if reply.starts_with(prefix) {
+            Ok(reply)
+        } else {
+            Err(Error::msg(format!("{} failed: reply {reply:?}, wanted prefix {prefix:?}", self.label)))
+        }
+    }
+
+    fn quit(mut self) -> Result<()> {
+        use std::io::Write;
+        self.stream.write_all(b"QUIT\n")?;
+        Ok(())
+    }
+}
+
 /// Drive the `BATCH` verb through a live fleet socket and verify that the
 /// batched replies are byte-identical to the equivalent `QUERY` replies —
 /// the `make batch-smoke` assertion path.
 fn batch_smoke(server: &FleetServer) -> Result<()> {
-    use std::io::{BufRead, BufReader, Write};
-
     let entries = server.fleet().loaded();
     let first = entries.first().ok_or_else(|| Error::msg("--batch-smoke needs a loaded network (--nets a)"))?;
     let jt = server.fleet().tree(&first.name).ok_or_else(|| Error::msg("batch-smoke: net missing"))?;
     let (obs_var, obs_state) = (&jt.net.vars[0].name, &jt.net.vars[0].states[0]);
     let target = &jt.net.vars[jt.net.n() - 1].name;
 
-    let mut stream = std::net::TcpStream::connect(server.addr())?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut ask = |req: &str, expect_lines: usize| -> Result<Vec<String>> {
-        stream.write_all(req.as_bytes())?;
-        stream.write_all(b"\n")?;
-        let mut replies = Vec::with_capacity(expect_lines);
-        for _ in 0..expect_lines {
-            let mut line = String::new();
-            reader.read_line(&mut line)?;
-            let line = line.trim().to_string();
-            println!("> {req}\n< {line}");
-            replies.push(line);
-        }
-        Ok(replies)
-    };
-    let check = |reply: &str, prefix: &str| -> Result<()> {
-        if reply.starts_with(prefix) {
-            Ok(())
-        } else {
-            Err(Error::msg(format!("batch-smoke failed: reply {reply:?}, wanted prefix {prefix:?}")))
-        }
-    };
-
-    check(&ask(&format!("USE {}", first.name), 1)?[0], "OK using")?;
+    let mut client = SmokeClient::connect("batch-smoke", server.addr())?;
+    client.expect(&format!("USE {}", first.name), "OK using")?;
     // references via QUERY, then the same three cases via one BATCH
-    let want_obs = ask(&format!("QUERY {target} | {obs_var}={obs_state}"), 1)?.remove(0);
-    let want_prior = ask(&format!("QUERY {target}"), 1)?.remove(0);
-    check(&want_obs, "OK ")?;
-    check(&want_prior, "OK ")?;
-    check(&ask(&format!("BATCH 3 {target}"), 1)?[0], "OK batch expect=3")?;
-    check(&ask(&format!("CASE {obs_var}={obs_state}"), 1)?[0], "OK case 1/3")?;
-    check(&ask("CASE", 1)?[0], "OK case 2/3")?;
-    let results = ask(&format!("CASE {obs_var}={obs_state}"), 3)?;
+    let want_obs = client.expect(&format!("QUERY {target} | {obs_var}={obs_state}"), "OK ")?;
+    let want_prior = client.expect(&format!("QUERY {target}"), "OK ")?;
+    client.expect(&format!("BATCH 3 {target}"), "OK batch expect=3")?;
+    client.expect(&format!("CASE {obs_var}={obs_state}"), "OK case 1/3")?;
+    client.expect("CASE", "OK case 2/3")?;
+    let results = client.ask_lines(&format!("CASE {obs_var}={obs_state}"), 3)?;
     if results[0] != want_obs || results[1] != want_prior || results[2] != want_obs {
         return Err(Error::msg(format!(
             "batch-smoke failed: BATCH results {results:?} do not match QUERY replies [{want_obs:?}, {want_prior:?}]"
         )));
     }
-    stream.write_all(b"QUIT\n")?;
+    client.quit()?;
     println!("batch-smoke passed ({} cases, engine {})", 3, server.fleet().config().engine.label());
+    Ok(())
+}
+
+/// Drive the `LEARN` verb through a live fleet socket: sample→learn→
+/// serve→QUERY in one round trip, then learn the identical spec under a
+/// second name and assert the two nets answer **byte-identically** — the
+/// determinism the cluster tier's hand-off re-learning relies on. The
+/// `make learn-smoke` assertion path.
+fn learn_smoke(server: &FleetServer) -> Result<()> {
+    let mut client = SmokeClient::connect("learn-smoke", server.addr())?;
+    client.expect("LEARN smoke-a asia 20000 7", "OK learned smoke-a")?;
+    client.expect("USE smoke-a", "OK using smoke-a vars=8")?;
+    let first = client.expect("QUERY dysp | smoke=yes", "OK ")?;
+    // the same learn spec under a different name: must serve byte-identically
+    client.expect("LEARN smoke-b asia 20000 7", "OK learned smoke-b")?;
+    client.expect("USE smoke-b", "OK using smoke-b vars=8")?;
+    let second = client.expect("QUERY dysp | smoke=yes", "OK ")?;
+    if first != second {
+        return Err(Error::msg(format!(
+            "learn-smoke failed: re-learned net answered {second:?}, first learned net answered {first:?}"
+        )));
+    }
+    client.quit()?;
+    println!("learn-smoke passed (sample → learn → serve → QUERY, deterministic re-learn)");
     Ok(())
 }
 
@@ -488,17 +673,9 @@ fn batch_smoke(server: &FleetServer) -> Result<()> {
 /// reply's prefix and (optionally) a required substring — the assertion
 /// loop shared by the serve and cluster smokes.
 fn run_script(addr: std::net::SocketAddr, script: &[(String, String, String)]) -> Result<()> {
-    use std::io::{BufRead, BufReader, Write};
-
-    let mut stream = std::net::TcpStream::connect(addr)?;
-    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut client = SmokeClient::connect("smoke", addr)?;
     for (request, prefix, contains) in script {
-        stream.write_all(request.as_bytes())?;
-        stream.write_all(b"\n")?;
-        let mut reply = String::new();
-        reader.read_line(&mut reply)?;
-        let reply = reply.trim();
-        println!("> {request}\n< {reply}");
+        let reply = client.ask(request)?;
         if !reply.starts_with(prefix.as_str()) {
             return Err(Error::msg(format!("smoke failed: {request:?} replied {reply:?}, wanted prefix {prefix:?}")));
         }
@@ -506,8 +683,7 @@ fn run_script(addr: std::net::SocketAddr, script: &[(String, String, String)]) -
             return Err(Error::msg(format!("smoke failed: {request:?} replied {reply:?}, wanted {contains:?}")));
         }
     }
-    stream.write_all(b"QUIT\n")?;
-    Ok(())
+    client.quit()
 }
 
 /// Exit when our stdin reaches EOF — i.e. when the parent that spawned
@@ -631,7 +807,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     let server = ClusterServer::start(Arc::clone(&cluster), bind)?;
     println!(
-        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/PING/TOPO/QUIT",
+        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/PING/TOPO/QUIT",
         server.addr(),
         specs.len()
     );
@@ -873,6 +1049,51 @@ mod tests {
             .iter()
             .map(|s| s.to_string())
             .collect();
+        assert_eq!(run(argv), 0);
+    }
+
+    #[test]
+    fn learn_command_closes_the_loop() {
+        let out = std::env::temp_dir().join(format!("fastbn-learn-{}.bif", std::process::id()));
+        let csv = std::env::temp_dir().join(format!("fastbn-learn-{}.csv", std::process::id()));
+        let argv: Vec<String> = [
+            "learn", "--net", "cancer", "--samples", "4000", "--seed", "9", "--threads", "2",
+            "--out", out.to_str().unwrap(), "--save-data", csv.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(argv), 0);
+        // the written BIF is a loadable spec...
+        let net = resolve_net(out.to_str().unwrap()).unwrap();
+        assert_eq!(net.n(), 5);
+        // ...and the saved CSV feeds the --data path
+        let argv: Vec<String> = ["learn", "--data", csv.to_str().unwrap(), "--name", "from-csv"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(run(argv), 0);
+        let _ = std::fs::remove_file(out);
+        let _ = std::fs::remove_file(csv);
+    }
+
+    #[test]
+    fn learn_command_rejects_bad_arguments() {
+        assert_ne!(run(vec!["learn".into()]), 0); // no --net and no --data
+        let argv: Vec<String> =
+            ["learn", "--net", "no-such-net", "--samples", "10"].iter().map(|s| s.to_string()).collect();
+        assert_ne!(run(argv), 0);
+    }
+
+    #[test]
+    fn learn_smoke_drives_the_verb_through_a_socket() {
+        let argv: Vec<String> = [
+            "serve", "--fleet", "--shards", "1", "--engine", "seq", "--threads", "1",
+            "--bind", "127.0.0.1:0", "--learn-smoke",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
         assert_eq!(run(argv), 0);
     }
 

@@ -299,35 +299,91 @@ impl Cluster {
     /// Returns the full protocol reply line (`OK loaded … backend=<id>`
     /// or `ERR …`) — the session passes it straight through.
     pub fn load(&self, spec: &str) -> String {
-        // resolve locally first: routing needs the *network's* name (a
-        // path spec and its net name must land on the same owner), and a
-        // bad spec should fail here, not on a backend
-        let name = match crate::bn::resolve_spec(spec) {
-            Ok(net) => net.name,
-            Err(e) => return format!("ERR {e}"),
+        // resolve the *name* locally first: routing needs the network's
+        // name (a path spec and its net name must land on the same
+        // owner), and a bad spec should fail here, not on a backend. A
+        // `learn:` spec carries its name in the spec itself, so the
+        // (expensive, backend-side) learning never runs on the front.
+        let name = if crate::learn::is_learn_spec(spec) {
+            match crate::learn::LearnSpec::parse(spec) {
+                Ok(parsed) => parsed.name,
+                Err(e) => return format!("ERR {e}"),
+            }
+        } else {
+            match crate::bn::resolve_spec(spec) {
+                Ok(net) => net.name,
+                Err(e) => return format!("ERR {e}"),
+            }
         };
-        let ctl = self.control.lock().unwrap();
-        let Some((id, addr)) = self.place(&name) else {
+        self.register_on_owner(&name, spec, &format!("LOAD {spec}"), "LOAD")
+    }
+
+    /// `LEARN` passthrough: route the verb to the ring owner of `name`
+    /// (which runs the sample→learn pipeline and registers the result)
+    /// and record the equivalent deterministic `learn:` spec in the
+    /// directory — a later hand-off re-`LOAD`s that spec on the new
+    /// owner, re-learning the **bit-identical** network there.
+    pub fn learn(&self, name: &str, learn_spec: &str, line: &str) -> String {
+        self.register_on_owner(name, learn_spec, line, "LEARN")
+    }
+
+    /// Shared LOAD/LEARN routing: send `line` to `name`'s ring owner,
+    /// record `spec` in the directory on success, evict a stale previous
+    /// owner, and annotate the reply with `backend=<id>`.
+    ///
+    /// Ordinary specs run under the `control` mutex like every transition
+    /// (the RPC is one tree compile, bounded by `io_timeout`). A
+    /// **learn** spec's RPC runs the whole sampling + PC + MLE pipeline
+    /// on the backend under `learn_timeout` — minutes, not seconds — so
+    /// it executes *outside* `control` and only the directory commit
+    /// re-takes the lock: a slow learn must not stall failover, probing,
+    /// and every other session's LOAD behind the control mutex. The
+    /// commit records the backend that actually ran the learn if it is
+    /// still alive (ring drift is fine — sessions follow the directory,
+    /// and the next rebalance re-homes the net); an executor that *died*
+    /// between finishing and the commit is re-homed immediately instead
+    /// of being recorded as a dead owner nobody would ever re-route.
+    fn register_on_owner(&self, name: &str, spec: &str, line: &str, verb: &str) -> String {
+        let ctl = if crate::learn::is_learn_spec(spec) { None } else { Some(self.control.lock().unwrap()) };
+        let Some((id, addr)) = self.place(name) else {
             return format!("ERR no live backends to host {name:?}");
         };
-        match self.remote_line(addr, &format!("LOAD {spec}")) {
+        match self.remote_line_bounded(addr, line, self.control_timeout(spec)) {
             Ok(reply) if reply.starts_with("OK") => {
+                let _ctl = ctl.unwrap_or_else(|| self.control.lock().unwrap());
+                // only reachable on the lockless learn path: the executor
+                // may have been declared dead while it was learning
+                let executor_alive = {
+                    let st = self.state.lock().unwrap();
+                    st.backends.get(&id).map(|b| b.alive).unwrap_or(false)
+                };
+                let owner = executor_alive.then(|| id.clone());
                 let prev = {
                     let mut st = self.state.lock().unwrap();
                     st.directory
-                        .insert(name.clone(), NetEntry { spec: spec.to_string(), owner: Some(id.clone()) })
+                        .insert(name.to_string(), NetEntry { spec: spec.to_string(), owner })
                         .and_then(|e| e.owner)
                 };
-                // a re-LOAD that lands on a new owner (ring changed while
-                // the net was orphaned, say) evicts the stale resident
-                self.evict_stale(&name, prev.as_deref(), &id);
-                format!("{reply} backend={id}")
+                if executor_alive {
+                    // a re-LOAD that lands on a new owner (ring changed
+                    // while the net was orphaned, say) evicts the stale
+                    // resident
+                    self.evict_stale(name, prev.as_deref(), &id);
+                    return format!("{reply} backend={id}");
+                }
+                // control is held, so re-home right now — a learn spec
+                // re-learns deterministically on the new owner
+                self.rebalance(false);
+                match self.owner(name) {
+                    Some(new_owner) => format!("{reply} backend={new_owner}"),
+                    None => format!("ERR backend {id} was lost after {verb}; {name:?} has no live backend to re-home onto"),
+                }
             }
             Ok(reply) => reply,
             Err(e) => {
                 drop(ctl); // report_failure takes `control` via mark_dead
                 self.report_failure(&id);
-                format!("ERR backend {id} unreachable during LOAD: {e}")
+                format!("ERR backend {id} unreachable during {verb}: {e}")
             }
         }
     }
@@ -437,7 +493,23 @@ impl Cluster {
             if prev.as_deref() == Some(id.as_str()) {
                 continue;
             }
-            let ok = matches!(self.remote_line(addr, &format!("LOAD {spec}")), Ok(r) if r.starts_with("OK"));
+            // hand-off re-learning of a learn: spec gets the learn budget
+            let timeout = self.control_timeout(&spec);
+            let reply = self.remote_line_bounded(addr, &format!("LOAD {spec}"), timeout);
+            let mut ok = matches!(&reply, Ok(r) if r.starts_with("OK"));
+            if !ok && crate::learn::is_learn_spec(&spec) {
+                if let Ok(r) = &reply {
+                    if r.contains("already resident") {
+                        // the target holds a stale resident of different
+                        // provenance under this name (a revival that kept
+                        // residents it no longer owns): evict it there and
+                        // retry once — the directory's spec is the truth
+                        let _ = self.remote_line(addr, &format!("EVICT {name}"));
+                        let retry = self.remote_line_bounded(addr, &format!("LOAD {spec}"), timeout);
+                        ok = matches!(retry, Ok(r) if r.starts_with("OK"));
+                    }
+                }
+            }
             {
                 let mut st = self.state.lock().unwrap();
                 let prev_alive =
@@ -523,6 +595,23 @@ impl Cluster {
 
     fn remote_line(&self, addr: SocketAddr, line: &str) -> std::io::Result<String> {
         self.connect(addr)?.request(line)
+    }
+
+    /// `remote_line` with an explicit read bound (learn-spec control
+    /// lines outlive the ordinary `io_timeout` by design).
+    fn remote_line_bounded(&self, addr: SocketAddr, line: &str, read_timeout: Duration) -> std::io::Result<String> {
+        BackendConn::connect(addr, self.cfg.connect_timeout, read_timeout)?.request(line)
+    }
+
+    /// Read bound for a control-plane line that registers `spec`: a
+    /// `learn:` spec runs the whole sampling + PC + MLE pipeline on the
+    /// backend, so it gets `learn_timeout` instead of `io_timeout`.
+    fn control_timeout(&self, spec: &str) -> Duration {
+        if crate::learn::is_learn_spec(spec) {
+            self.cfg.io_timeout.max(self.cfg.learn_timeout)
+        } else {
+            self.cfg.io_timeout
+        }
     }
 
     /// `PING` reply: front-tier liveness + topology counts.
@@ -734,6 +823,7 @@ impl ClusterSession {
                     self.cluster.load(rest)
                 }
             }
+            "LEARN" => self.cmd_learn(rest),
             "USE" => self.cmd_use(rest),
             "NETS" => self.cluster.nets_line(),
             "STATS" => self.cluster.stats_line(),
@@ -796,6 +886,21 @@ impl ClusterSession {
                 self.forward_multi(line, total)
             }
         }
+    }
+
+    /// `LEARN <name> <spec> <samples> <seed>`: validated on the front,
+    /// executed on the ring owner of `<name>` via a control-plane
+    /// connection (like `LOAD` — the session's pinned data conn, and any
+    /// open batch on it, is untouched).
+    fn cmd_learn(&mut self, rest: &str) -> String {
+        // same grammar as the backend session (one definition, on
+        // LearnSpec) — a malformed verb never costs a backend round trip
+        let parsed = match crate::learn::LearnSpec::from_verb_args(rest) {
+            Ok(parsed) => parsed,
+            Err(e) => return format!("ERR {e}"),
+        };
+        let line = format!("LEARN {} {} {} {}", parsed.name, parsed.base, parsed.samples, parsed.seed);
+        self.cluster.learn(&parsed.name, &parsed.to_spec(), &line)
     }
 
     fn cmd_use(&mut self, name: &str) -> String {
@@ -987,6 +1092,26 @@ mod tests {
         assert!(line(&mut session, "PING").starts_with("OK pong"));
         assert_eq!(session.current_net(), None);
         assert_eq!(session.handle("quit"), SessionReply::Quit);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn learn_verb_validates_before_routing() {
+        let cluster = empty_cluster();
+        let mut session = ClusterSession::new(Arc::clone(&cluster));
+        let line = |s: &mut ClusterSession, input: &str| match s.handle(input) {
+            SessionReply::Line(l) => l,
+            SessionReply::Quit => "QUIT".into(),
+        };
+        assert!(line(&mut session, "LEARN").starts_with("ERR usage: LEARN"));
+        assert!(line(&mut session, "LEARN x asia 10").starts_with("ERR usage: LEARN"));
+        assert!(line(&mut session, "LEARN x asia ten 1").starts_with("ERR bad sample count"));
+        assert!(line(&mut session, "LEARN x asia 0 1").starts_with("ERR learn spec sample count"));
+        // well-formed but nowhere to run: refused at placement, and the
+        // (expensive) learning never happened on the front tier
+        assert!(line(&mut session, "LEARN x asia 100 1").starts_with("ERR no live backends"));
+        // LOAD of a learn: spec also fails fast on parse errors
+        assert!(cluster.load("learn:bad").starts_with("ERR learn spec"));
         cluster.shutdown();
     }
 

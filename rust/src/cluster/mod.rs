@@ -18,7 +18,7 @@
 //!        │  ClusterServer │   directory: net → {spec, owner}
 //!        │   (front tier) │   prober: PING w/ backoff, failover
 //!        └──┬─────────┬───┘
-//!     TCP   │         │   TCP (LOAD/USE/QUERY/…/EVICT/PING)
+//!     TCP   │         │   TCP (LOAD/LEARN/USE/QUERY/…/EVICT/PING)
 //!    ┌──────▼───┐ ┌───▼──────┐
 //!    │ fleet b0 │ │ fleet b1 │  … backend processes (fastbn serve --fleet)
 //!    └──────────┘ └──────────┘
@@ -60,6 +60,17 @@ pub struct ClusterConfig {
     /// Read/write bound on data-plane and control-plane requests
     /// (covers a backend-side `LOAD` compile).
     pub io_timeout: Duration,
+    /// Read bound on control-plane requests that run the **learning
+    /// pipeline** on a backend (`LEARN`, and hand-off re-`LOAD`s of
+    /// `learn:` specs). Learning a large sample count takes orders of
+    /// magnitude longer than a tree compile, so it gets its own budget —
+    /// size it to the biggest learn the deployment allows. Client
+    /// `LEARN`s run outside the control mutex, but hand-off
+    /// **re-learning inside a rebalance** is a serialized transition
+    /// like any other: while it runs, further membership changes queue
+    /// behind it for up to this long per learned net (async hand-off
+    /// re-learning is a ROADMAP follow-up).
+    pub learn_timeout: Duration,
     /// Read bound on health probes — short, so a wedged backend stalls
     /// the prober for at most this long.
     pub probe_timeout: Duration,
@@ -78,6 +89,7 @@ impl Default for ClusterConfig {
             replicas: 64,
             connect_timeout: Duration::from_secs(1),
             io_timeout: Duration::from_secs(10),
+            learn_timeout: Duration::from_secs(300),
             probe_timeout: Duration::from_secs(1),
             probe_interval: Duration::from_secs(1),
             probe_backoff_max: Duration::from_secs(8),

@@ -19,13 +19,13 @@
 //! lane-expanded, separator scaling and `log_z` are tracked **per case**,
 //! and an inconsistent-evidence case kills its lane, never the batch.
 //!
-//! `infer_batch` slices arbitrary case lists into chunks of `B` lanes; a
-//! final partial chunk leaves its trailing lanes at the prior. Note the
-//! kernels always sweep all `B` lanes, so a partial chunk (or a lone
-//! `infer`) still pays the full-`B` per-entry work — size `B` to the
-//! traffic (see the README's fused-vs-replicas guidance); an
-//! occupied-lane bound on the inner loops is a ROADMAP follow-up
-//! alongside adaptive lane counts.
+//! `infer_batch` slices arbitrary case lists into chunks of `B` lanes.
+//! Every kernel call is bounded by the chunk's **occupancy**: the inner
+//! per-lane loops stop at the number of cases actually present while the
+//! stride stays `B`, so a partial final chunk (or a lone `infer` through
+//! this engine, occupancy 1) pays per-entry work proportional to its
+//! cases, not the configured lane count. Idle trailing lanes are simply
+//! never touched after the arena reset.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -66,7 +66,9 @@ struct LaneFinish {
 /// lane's evidence is inconsistent — flag it, keep the sweep going),
 /// per-lane scale with `ln`-mass accumulation, store the new separator,
 /// and turn the buffer window into the update ratio in place (elementwise
-/// over lanes, so the single-case `0/0 → 0` rule applies per lane).
+/// over lanes, so the single-case `0/0 → 0` rule applies per lane). All
+/// loops stop at the sweep's occupancy `occ`; lanes `occ..lanes` of the
+/// buffer and the separator stay untouched.
 ///
 /// # Safety
 /// The caller must hold the message's lane window of `ratio_buf`, its
@@ -76,6 +78,7 @@ unsafe fn finish_lanes(
     m: Msg,
     off: usize,
     lanes: usize,
+    occ: usize,
     ratio_buf: &[AtomicU64],
     shared: &SharedTables,
     scratch: &mut LaneFinish,
@@ -83,30 +86,43 @@ unsafe fn finish_lanes(
 ) {
     let len = jt.seps[m.sep].len;
     let slice = std::slice::from_raw_parts_mut(ratio_buf.as_ptr().add(off * lanes) as *mut f64, len * lanes);
-    let masses = &mut scratch.masses;
+    let masses = &mut scratch.masses[..occ];
     for x in masses.iter_mut() {
         *x = 0.0;
     }
     ops::sum_cases(slice, lanes, masses);
-    let factors = &mut scratch.factors;
-    for b in 0..lanes {
+    let factors = &mut scratch.factors[..occ];
+    for (b, factor) in factors.iter_mut().enumerate() {
         if masses[b] == 0.0 {
             // dead lane: flag it and propagate zeros (0/0 → 0 keeps every
             // downstream table of this lane at zero, other lanes untouched)
             failed[b].store(true, Ordering::Relaxed);
-            factors[b] = 1.0;
+            *factor = 1.0;
         } else {
-            factors[b] = 1.0 / masses[b];
+            *factor = 1.0 / masses[b];
             scratch.log_z[b] += masses[b].ln();
         }
     }
-    ops::scale_cases(slice, factors);
+    ops::scale_cases(slice, lanes, factors);
     let sep_tab = shared.sep_mut(m.sep);
-    for j in 0..len * lanes {
-        let new = slice[j];
-        let old = sep_tab[j];
-        sep_tab[j] = new;
-        slice[j] = if old != 0.0 { new / old } else { 0.0 };
+    if occ == lanes {
+        // full occupancy (the steady-state hot path): one contiguous pass
+        for j in 0..len * lanes {
+            let new = slice[j];
+            let old = sep_tab[j];
+            sep_tab[j] = new;
+            slice[j] = if old != 0.0 { new / old } else { 0.0 };
+        }
+    } else {
+        for j in 0..len {
+            for b in 0..occ {
+                let idx = j * lanes + b;
+                let new = slice[idx];
+                let old = sep_tab[idx];
+                sep_tab[idx] = new;
+                slice[idx] = if old != 0.0 { new / old } else { 0.0 };
+            }
+        }
     }
 }
 
@@ -188,11 +204,13 @@ impl BatchedHybridEngine {
         out
     }
 
-    /// One full sweep over ≤ `lanes` cases (trailing lanes idle at the
-    /// prior for a partial chunk).
+    /// One full sweep over ≤ `lanes` cases. For a partial chunk every
+    /// kernel is bounded by the occupancy `chunk.len()` — trailing lanes
+    /// stay at the freshly-reset prior and are never touched or read.
     fn sweep(&mut self, chunk: &[Evidence], out: &mut Vec<Result<Posteriors>>) {
-        debug_assert!(chunk.len() <= self.lanes);
+        debug_assert!(chunk.len() <= self.lanes && !chunk.is_empty());
         let lanes = self.lanes;
+        let occ = chunk.len();
         self.state.reset();
         for f in &self.failed {
             f.store(false, Ordering::Relaxed);
@@ -203,17 +221,17 @@ impl BatchedHybridEngine {
 
         // collect
         for li in 0..self.up_plans.len() {
-            self.run_layer(true, li);
+            self.run_layer(true, li, occ);
         }
-        // per-lane root normalization
-        let mut masses = vec![0.0; lanes];
-        let mut factors = vec![1.0; lanes];
+        // per-lane root normalization (occupied lanes only)
+        let mut masses = vec![0.0; occ];
+        let mut factors = vec![1.0; occ];
         for root in self.sched.roots.clone() {
             for m in masses.iter_mut() {
                 *m = 0.0;
             }
             ops::sum_cases(self.state.clique(root), lanes, &mut masses);
-            for b in 0..lanes {
+            for b in 0..occ {
                 if masses[b] == 0.0 {
                     self.failed[b].store(true, Ordering::Relaxed);
                     factors[b] = 1.0;
@@ -222,13 +240,13 @@ impl BatchedHybridEngine {
                     self.state.log_z[b] += masses[b].ln();
                 }
             }
-            ops::scale_cases(self.state.clique_mut(root), &factors);
+            ops::scale_cases(self.state.clique_mut(root), lanes, &factors);
         }
 
         // distribute (downward scale factors must not change ln P(e))
         let z_snapshot = self.state.log_z.clone();
         for li in 0..self.down_plans.len() {
-            self.run_layer(false, li);
+            self.run_layer(false, li, occ);
         }
         self.state.log_z.copy_from_slice(&z_snapshot);
 
@@ -243,8 +261,8 @@ impl BatchedHybridEngine {
 
     /// Run one layer: regions A, B (B2 folded where separators fit one
     /// chunk), C — identical task structure to the hybrid engine, with
-    /// lane-expanded kernels.
-    fn run_layer(&mut self, up: bool, li: usize) {
+    /// lane-expanded kernels bounded to the sweep's occupancy `occ`.
+    fn run_layer(&mut self, up: bool, li: usize, occ: usize) {
         let plan = if up { &self.up_plans[li] } else { &self.down_plans[li] };
         if plan.msgs.is_empty() {
             return;
@@ -273,9 +291,11 @@ impl BatchedHybridEngine {
                 let slice = &mut partial.buf[off * lanes..(off + sep_meta.len) * lanes];
                 if partial.stamps[mi] != generation {
                     partial.stamps[mi] = generation;
+                    // full-width zero: one contiguous pass; the reduce
+                    // below reads only the occupied lanes anyway
                     ops::zero(slice);
                 }
-                ops::marg_runs_cases_range(src, rm, lanes, range.clone(), slice);
+                ops::marg_runs_cases_range(src, rm, lanes, occ, range.clone(), slice);
             });
         }
 
@@ -297,8 +317,19 @@ impl BatchedHybridEngine {
                 // sub-ranges; tasks of different messages are disjoint.
                 let slice =
                     unsafe { std::slice::from_raw_parts_mut(ratio_buf.as_ptr().add(lo) as *mut f64, len) };
-                for x in slice.iter_mut() {
-                    *x = 0.0;
+                // occupied lanes only: zero, then accumulate each worker's
+                // partial (stride stays `lanes`, inner loops stop at occ;
+                // full occupancy keeps the single contiguous pass)
+                if occ == lanes {
+                    for x in slice.iter_mut() {
+                        *x = 0.0;
+                    }
+                } else {
+                    for e in 0..range.len() {
+                        for x in &mut slice[e * lanes..e * lanes + occ] {
+                            *x = 0.0;
+                        }
+                    }
                 }
                 for wk in 0..n_workers {
                     // SAFETY: region A is complete; partial reads race-free.
@@ -307,8 +338,18 @@ impl BatchedHybridEngine {
                         continue;
                     }
                     let p = &partial.buf[lo..lo + len];
-                    for (d, &x) in slice.iter_mut().zip(p) {
-                        *d += x;
+                    if occ == lanes {
+                        for (d, &x) in slice.iter_mut().zip(p) {
+                            *d += x;
+                        }
+                    } else {
+                        for e in 0..range.len() {
+                            let d = &mut slice[e * lanes..e * lanes + occ];
+                            let s = &p[e * lanes..e * lanes + occ];
+                            for (dv, &sv) in d.iter_mut().zip(s) {
+                                *dv += sv;
+                            }
+                        }
                     }
                 }
                 if plan.fused[mi] {
@@ -317,7 +358,7 @@ impl BatchedHybridEngine {
                     // (no other task touches the finish scratch).
                     let scratch = unsafe { finish.get(w) };
                     unsafe {
-                        finish_lanes(jt, plan.msgs[mi], off, lanes, ratio_buf, &shared, scratch, failed)
+                        finish_lanes(jt, plan.msgs[mi], off, lanes, occ, ratio_buf, &shared, scratch, failed)
                     };
                 }
             });
@@ -334,13 +375,13 @@ impl BatchedHybridEngine {
                 // worker w owns its finish slot.
                 let scratch = unsafe { finish.get(w) };
                 unsafe {
-                    finish_lanes(jt, plan.msgs[mi], plan.sep_off[mi], lanes, ratio_buf, &shared, scratch, failed)
+                    finish_lanes(jt, plan.msgs[mi], plan.sep_off[mi], lanes, occ, ratio_buf, &shared, scratch, failed)
                 };
             });
         }
         // fold per-worker per-lane ln-masses into the state
         for fin in self.finish.iter_mut() {
-            for b in 0..lanes {
+            for b in 0..occ {
                 self.state.log_z[b] += fin.log_z[b];
                 fin.log_z[b] = 0.0;
             }
@@ -362,7 +403,7 @@ impl BatchedHybridEngine {
                     let rm = jt.edge_maps[m.sep].runs_from(sep_meta, m.to);
                     let off = plan.sep_off[mi];
                     let r = &ratio[off * lanes..(off + sep_meta.len) * lanes];
-                    ops::extend_runs_cases_range(dst, rm, lanes, range.clone(), r);
+                    ops::extend_runs_cases_range(dst, rm, lanes, occ, range.clone(), r);
                 }
             });
         }
@@ -497,6 +538,33 @@ mod tests {
         let outs = engine.infer_batch(&mut state, &[ev.clone(), Evidence::none()]);
         assert!(outs[0].as_ref().unwrap().max_abs_diff(&exact) < 1e-9);
         assert!(outs[1].as_ref().unwrap().log_z.abs() < 1e-9);
+    }
+
+    #[test]
+    fn occupancy_grows_cleanly_across_sweeps() {
+        // a partial sweep leaves lanes occ..B untouched (stale); the next
+        // sweep at higher occupancy must re-zero exactly what it uses —
+        // partial → full → lone-infer ordering exercises every transition
+        let net = embedded::mixed12();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cases = crate::infer::cases::generate(
+            &net,
+            &crate::infer::cases::CaseSpec { n_cases: 4, observed_fraction: 0.3, seed: 57 },
+        );
+        let cfg = EngineConfig { threads: 2, min_chunk: 4, batch: 4, ..Default::default() };
+        let mut batched = BatchedHybridEngine::new(Arc::clone(&jt), &cfg);
+        let partial = batched.infer_cases(&cases[..2]); // occ = 2
+        let full = batched.infer_cases(&cases); // occ = 4
+        let mut state = TreeState::fresh(&jt);
+        let lone = batched.infer(&mut state, &cases[3]).unwrap(); // occ = 1
+        let want = seq_results(&jt, &cases);
+        for (i, (g, w)) in partial.iter().zip(&want[..2]).enumerate() {
+            assert!(g.as_ref().unwrap().max_abs_diff(w.as_ref().unwrap()) < 1e-9, "partial case {i}");
+        }
+        for (i, (g, w)) in full.iter().zip(&want).enumerate() {
+            assert!(g.as_ref().unwrap().max_abs_diff(w.as_ref().unwrap()) < 1e-9, "full case {i}");
+        }
+        assert!(lone.max_abs_diff(want[3].as_ref().unwrap()) < 1e-9, "lone infer");
     }
 
     #[test]

@@ -12,6 +12,15 @@
 //!
 //! ```text
 //! LOAD <net>              compile/cache a network (idempotent)
+//! LEARN <name> <spec> <n> <seed>
+//!                         sample n rows from <spec>, learn structure +
+//!                         parameters (crate::learn), register as <name>
+//!                         — the learned net is immediately servable.
+//!                         Deterministic: any backend re-running the verb
+//!                         produces the bit-identical network. Repeating
+//!                         the exact spec is an idempotent cache hit; the
+//!                         same name with different provenance is refused
+//!                         (EVICT it first).
 //! USE <net>               select the session's network (must be loaded)
 //! NETS                    list resident networks with size/compile stats
 //! OBSERVE var=state ...   stage evidence deltas
@@ -114,9 +123,36 @@ impl Fleet {
     /// Load `spec` (idempotent) and make it servable: compile into the
     /// registry, spin its shard group up, and tear down any shard groups
     /// whose trees the load evicted. Returns the entry's accounting.
+    ///
+    /// A `learn:` spec that actually needs its pipeline run is resolved
+    /// **before** the load lock is taken: learning can take minutes, and
+    /// holding the lock across it would wedge every concurrent `LOAD` on
+    /// this process behind one `LEARN` (timing their front-tier RPCs
+    /// out). The registry re-runs its cache fast paths and provenance
+    /// guard under the lock, so a racing duplicate converges on one tree
+    /// and a racing different-provenance load still gets refused.
     pub fn load(&self, spec: &str) -> Result<RegistryEntry> {
-        let _serialized = self.load_lock.lock().unwrap();
-        let loaded = self.registry.load(spec)?;
+        let is_learn = crate::learn::is_learn_spec(spec);
+        let mut prelearned = None;
+        let (serialized, loaded) = loop {
+            if is_learn && prelearned.is_none() && self.learn_spec_needs_pipeline(spec)? {
+                prelearned = Some(crate::bn::resolve_spec(spec)?);
+            }
+            let serialized = self.load_lock.lock().unwrap();
+            if is_learn && prelearned.is_none() && self.learn_spec_needs_pipeline(spec)? {
+                // the cache hit / refusal that justified skipping the
+                // pipeline evaporated while we raced to the lock (a
+                // concurrent EVICT): release and learn unlocked
+                drop(serialized);
+                continue;
+            }
+            let loaded = match prelearned.take() {
+                Some(net) => self.registry.install(spec, net)?,
+                None => self.registry.load(spec)?,
+            };
+            break (serialized, loaded);
+        };
+        let _serialized = serialized;
         for evicted in &loaded.evicted {
             self.router.remove(evicted);
             self.metrics.remove(evicted);
@@ -124,6 +160,15 @@ impl Fleet {
         self.router.ensure(&loaded.entry.name, &loaded.jt)?;
         self.metrics.ensure(&loaded.entry.name);
         Ok(loaded.entry)
+    }
+
+    /// Would loading this `learn:` spec actually run the learning
+    /// pipeline? False when the exact spec is an alias/cache hit or the
+    /// name is resident from other provenance (registry refuses without
+    /// resolving).
+    fn learn_spec_needs_pipeline(&self, spec: &str) -> Result<bool> {
+        let name = crate::learn::LearnSpec::parse(spec)?.name;
+        Ok(self.registry.resident_name_for(spec).is_none() && self.registry.get(&name).is_none())
     }
 
     /// The compiled tree for a loaded network (refreshes its LRU stamp).

@@ -13,11 +13,21 @@
 //! spec has changed on disk since. To pick up a changed model, load it
 //! under a new network name or restart the fleet (eviction also drops the
 //! stale tree, but relying on LRU pressure for correctness is a mistake).
+//! `learn:` specs are the one exception with teeth: their provenance is
+//! part of the spec, so a learn spec hitting a resident name of different
+//! provenance is **refused** rather than cache-hit (see
+//! [`Registry::load`]). The converse — an ordinary file spec resolving to
+//! a name held by a learned net — keeps plain compile-once semantics:
+//! the cached (learned) tree is served, and, as with any two specs
+//! sharing a name, whoever records specs per name (the cluster
+//! directory) records the latest one. Name collisions across unrelated
+//! specs are an operator error compile-once cannot detect.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::bn::network::Network;
 use crate::bn::resolve_spec;
 use crate::jt::tree::JunctionTree;
 use crate::jt::triangulate::TriangulationHeuristic;
@@ -100,6 +110,32 @@ impl Registry {
     /// outside the registry lock; a concurrent duplicate load keeps the
     /// first tree that registered.
     pub fn load(&self, spec: &str) -> Result<Loaded> {
+        self.load_with(spec, || resolve_spec(spec))
+    }
+
+    /// [`Registry::load`] with the network pre-resolved by the caller —
+    /// the fleet uses this to run minutes-long resolves (learning)
+    /// *outside* its load lock and hand the finished network in. All
+    /// cache fast paths, the learn-spec provenance guard, and eviction
+    /// semantics are identical; a racing duplicate keeps the first tree.
+    pub fn install(&self, spec: &str, net: Network) -> Result<Loaded> {
+        self.load_with(spec, move || Ok(net))
+    }
+
+    /// The resident network name `spec` would hit **without any work**:
+    /// `spec` itself if resident, or its recorded alias target. `None`
+    /// means a load of `spec` would actually resolve (and maybe
+    /// compile). Lets the fleet decide, before taking its load lock,
+    /// whether a learn spec actually needs its pipeline run.
+    pub fn resident_name_for(&self, spec: &str) -> Option<String> {
+        let inner = self.inner.lock().unwrap();
+        if inner.nets.contains_key(spec) {
+            return Some(spec.to_string());
+        }
+        inner.aliases.get(spec).filter(|n| inner.nets.contains_key(*n)).cloned()
+    }
+
+    fn load_with(&self, spec: &str, resolve: impl FnOnce() -> Result<Network>) -> Result<Loaded> {
         // Fast paths: the spec is a resident name, or a spec we have
         // already resolved (a path) aliased onto a resident name — either
         // way the file is not re-read.
@@ -111,7 +147,25 @@ impl Registry {
                 return Ok(Self::cache_hit(&name, jt, ct));
             }
         }
-        let net = resolve_spec(spec)?;
+        // A `learn:` spec carries its provenance (samples/seed/base) in
+        // the spec itself, so compile-once must NOT serve a resident of
+        // *different* provenance under it: resolving would run the whole
+        // learning pipeline only to discard the result, alias this spec
+        // onto a net it did not produce, and (through the cluster front)
+        // let the hand-off directory diverge from the served network.
+        // Exact-spec repeats were already answered by the alias fast path
+        // above; anything else hitting a resident name is refused. The
+        // fleet serializes load/evict, so this check cannot race a
+        // same-name load behind `Fleet::load`.
+        if crate::learn::is_learn_spec(spec) {
+            let name = crate::learn::LearnSpec::parse(spec)?.name;
+            if self.inner.lock().unwrap().nets.contains_key(&name) {
+                return Err(crate::Error::msg(format!(
+                    "network {name:?} is already resident from a different spec; EVICT {name} to relearn"
+                )));
+            }
+        }
+        let net = resolve()?;
         let name = net.name.clone();
         if name != spec {
             self.inner.lock().unwrap().aliases.insert(spec.to_string(), name.clone());
@@ -276,6 +330,28 @@ mod tests {
         // the alias died with the entry: reloading by path recompiles
         assert!(reg.load(spec).unwrap().freshly_compiled);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn learn_specs_refuse_resident_names_of_different_provenance() {
+        let reg = Registry::new(4);
+        let a = reg.load("learn:l1:500:7:sprinkler").unwrap();
+        assert_eq!(a.entry.name, "l1");
+        assert!(a.freshly_compiled);
+        // exact repeat: alias fast path, cached tree, no re-learn
+        let b = reg.load("learn:l1:500:7:sprinkler").unwrap();
+        assert!(!b.freshly_compiled);
+        assert!(Arc::ptr_eq(&a.jt, &b.jt));
+        // same name, different provenance: refused (never aliased, never
+        // learned-and-discarded) — the served net and any recorded spec
+        // cannot diverge
+        let err = reg.load("learn:l1:500:8:sprinkler").unwrap_err();
+        assert!(err.to_string().contains("already resident"), "{err}");
+        assert!(Arc::ptr_eq(&reg.get("l1").unwrap(), &a.jt));
+        // and the refused spec gained no alias: evicting frees the name
+        // for a genuine relearn under the new spec
+        assert!(reg.remove("l1"));
+        assert!(reg.load("learn:l1:500:8:sprinkler").unwrap().freshly_compiled);
     }
 
     #[test]

@@ -124,6 +124,7 @@ impl Session {
         let reply = match verb.as_str() {
             "QUIT" => return SessionReply::Quit,
             "LOAD" => self.cmd_load(rest),
+            "LEARN" => self.cmd_learn(rest),
             "USE" => self.cmd_use(rest),
             "NETS" => self.cmd_nets(),
             "OBSERVE" => self.cmd_observe(rest),
@@ -148,6 +149,41 @@ impl Session {
             Ok(e) => format!(
                 "OK loaded {} cliques={} entries={} compile_ms={}",
                 e.name,
+                e.cliques,
+                e.entries,
+                e.compile_time.as_millis()
+            ),
+            Err(e) => format!("ERR {e}"),
+        }
+    }
+
+    /// `LEARN <name> <spec> <samples> <seed>`: sample from `<spec>`,
+    /// learn structure + parameters (see [`crate::learn`]), and register
+    /// the result as `<name>` — immediately servable via `USE <name>`.
+    /// Sugar over loading the deterministic
+    /// `learn:<name>:<samples>:<seed>:<spec>` spec, so re-learning the
+    /// same verb anywhere (another backend, after an eviction) yields the
+    /// bit-identical network.
+    fn cmd_learn(&mut self, rest: &str) -> String {
+        // the verb grammar lives on LearnSpec so the cluster front parses
+        // identically; validation runs before any expensive resolve
+        let parsed = match crate::learn::LearnSpec::from_verb_args(rest) {
+            Ok(parsed) => parsed,
+            Err(e) => return format!("ERR {e}"),
+        };
+        // compile-once with honest semantics (enforced by the registry):
+        // repeating the exact spec is an idempotent cache hit, but a
+        // resident name of DIFFERENT provenance comes back as a clean
+        // refusal — silently serving the old net while the reply (and,
+        // via the cluster front, the hand-off directory) claims the new
+        // samples/seed would let failover re-learning change answers.
+        match self.fleet.load(&parsed.to_spec()) {
+            Ok(e) => format!(
+                "OK learned {} from={} samples={} seed={} cliques={} entries={} compile_ms={}",
+                e.name,
+                parsed.base,
+                parsed.samples,
+                parsed.seed,
                 e.cliques,
                 e.entries,
                 e.compile_time.as_millis()
@@ -663,6 +699,39 @@ mod tests {
         line(&mut s, "CASE smoke=yes");
         assert!(line(&mut s, "QUERY lung").starts_with("OK yes=0.055000"));
         assert!(line(&mut s, "CASE smoke=no").starts_with("ERR no batch in progress"));
+    }
+
+    #[test]
+    fn learn_verb_registers_a_servable_net() {
+        let mut s = session();
+        let r = line(&mut s, "LEARN asia-l asia 3000 7");
+        assert!(r.starts_with("OK learned asia-l from=asia samples=3000 seed=7"), "{r}");
+        assert!(line(&mut s, "USE asia-l").starts_with("OK using asia-l vars=8"));
+        let q = line(&mut s, "QUERY smoke");
+        assert!(q.starts_with("OK yes=0."), "{q}");
+        // the learned net shows up beside ordinary loads
+        assert!(line(&mut s, "NETS").contains("asia-l[cliques="));
+        // re-LEARNing the exact same spec is an idempotent cache hit...
+        assert!(line(&mut s, "LEARN asia-l asia 3000 7").starts_with("OK learned asia-l"));
+        // ...but the same name with different provenance is refused (the
+        // old net must not be served under a reply claiming the new seed)
+        let r = line(&mut s, "LEARN asia-l asia 3000 8");
+        assert!(r.starts_with("ERR network \"asia-l\" is already resident"), "{r}");
+        // evicting frees the name for an actual relearn
+        assert_eq!(line(&mut s, "EVICT asia-l"), "OK evicted asia-l");
+        assert!(line(&mut s, "LEARN asia-l asia 3000 8").starts_with("OK learned asia-l"));
+    }
+
+    #[test]
+    fn learn_verb_error_paths() {
+        let mut s = session();
+        assert!(line(&mut s, "LEARN").starts_with("ERR usage: LEARN"));
+        assert!(line(&mut s, "LEARN x asia 10").starts_with("ERR usage: LEARN"));
+        assert!(line(&mut s, "LEARN x asia 10 1 extra").starts_with("ERR usage: LEARN"));
+        assert!(line(&mut s, "LEARN x asia 0 1").starts_with("ERR learn spec sample count"));
+        assert!(line(&mut s, "LEARN x asia ten 1").starts_with("ERR bad sample count"));
+        assert!(line(&mut s, "LEARN x asia 10 z").starts_with("ERR bad seed"));
+        assert!(line(&mut s, "LEARN x no-such-net 100 1").starts_with("ERR unknown network"));
     }
 
     #[test]

@@ -205,28 +205,38 @@ pub fn extend_runs_range(dst: &mut [f64], rm: &RunMap, entries: std::ops::Range<
 // `lanes`× — the same hoisting move the paper applies to index mappings,
 // applied across evidence cases — and the inner per-lane loop is
 // unit-stride and auto-vectorizable.
+//
+// Every kernel takes an **occupancy** `occ <= lanes`: the inner loops
+// stop at `occ` while the stride stays `lanes`, so a partial final chunk
+// (or a lone `infer` through the batched engine, `occ = 1`) pays
+// per-entry work proportional to the cases actually present instead of
+// the full lane count. Lanes `occ..lanes` are never read or written.
 
 /// Case-major marginalization: `dst[map[i]*L + b] += src[i*L + b]` for
-/// every entry `i` and lane `b`. `dst` must be pre-zeroed.
+/// every entry `i` and occupied lane `b < occ`. `dst` must be pre-zeroed
+/// (in its occupied lanes).
 #[inline]
-pub fn marg_with_map_cases(src: &[f64], map: &[u32], lanes: usize, dst: &mut [f64]) {
+pub fn marg_with_map_cases(src: &[f64], map: &[u32], lanes: usize, occ: usize, dst: &mut [f64]) {
     debug_assert_eq!(src.len(), map.len() * lanes);
+    debug_assert!(occ <= lanes && occ > 0);
     for (i, &m) in map.iter().enumerate() {
-        let d = &mut dst[m as usize * lanes..(m as usize + 1) * lanes];
-        let s = &src[i * lanes..(i + 1) * lanes];
+        let d = &mut dst[m as usize * lanes..m as usize * lanes + occ];
+        let s = &src[i * lanes..i * lanes + occ];
         for (dv, &sv) in d.iter_mut().zip(s) {
             *dv += sv;
         }
     }
 }
 
-/// Case-major extension: `dst[i*L + b] *= ratio[map[i]*L + b]`.
+/// Case-major extension: `dst[i*L + b] *= ratio[map[i]*L + b]` for
+/// occupied lanes `b < occ`.
 #[inline]
-pub fn ext_with_map_cases(dst: &mut [f64], map: &[u32], lanes: usize, ratio: &[f64]) {
+pub fn ext_with_map_cases(dst: &mut [f64], map: &[u32], lanes: usize, occ: usize, ratio: &[f64]) {
     debug_assert_eq!(dst.len(), map.len() * lanes);
+    debug_assert!(occ <= lanes && occ > 0);
     for (i, &m) in map.iter().enumerate() {
-        let r = &ratio[m as usize * lanes..(m as usize + 1) * lanes];
-        let d = &mut dst[i * lanes..(i + 1) * lanes];
+        let r = &ratio[m as usize * lanes..m as usize * lanes + occ];
+        let d = &mut dst[i * lanes..i * lanes + occ];
         for (dv, &rv) in d.iter_mut().zip(r) {
             *dv *= rv;
         }
@@ -235,14 +245,16 @@ pub fn ext_with_map_cases(dst: &mut [f64], map: &[u32], lanes: usize, ratio: &[f
 
 /// Case-major run-based marginalization over an **entry** range (entry
 /// indices are in table-entry units, as in [`marg_runs_range`]; the lane
-/// expansion is internal).
+/// expansion is internal), bounded to the occupied lanes.
 pub fn marg_runs_cases_range(
     src: &[f64],
     rm: &RunMap,
     lanes: usize,
+    occ: usize,
     entries: std::ops::Range<usize>,
     dst: &mut [f64],
 ) {
+    debug_assert!(occ <= lanes && occ > 0);
     let l = rm.run_len;
     let (start, end) = (entries.start, entries.end);
     if start >= end {
@@ -254,9 +266,9 @@ pub fn marg_runs_cases_range(
         let lo = (r * l).max(start);
         let hi = ((r + 1) * l).min(end);
         let m = rm.map[r] as usize;
-        let d = &mut dst[m * lanes..(m + 1) * lanes];
+        let d = &mut dst[m * lanes..m * lanes + occ];
         for i in lo..hi {
-            let s = &src[i * lanes..(i + 1) * lanes];
+            let s = &src[i * lanes..i * lanes + occ];
             for (dv, &sv) in d.iter_mut().zip(s) {
                 *dv += sv;
             }
@@ -264,14 +276,17 @@ pub fn marg_runs_cases_range(
     }
 }
 
-/// Case-major run-based extension over an **entry** range.
+/// Case-major run-based extension over an **entry** range, bounded to the
+/// occupied lanes.
 pub fn extend_runs_cases_range(
     dst: &mut [f64],
     rm: &RunMap,
     lanes: usize,
+    occ: usize,
     entries: std::ops::Range<usize>,
     ratio: &[f64],
 ) {
+    debug_assert!(occ <= lanes && occ > 0);
     let l = rm.run_len;
     let (start, end) = (entries.start, entries.end);
     if start >= end {
@@ -283,9 +298,9 @@ pub fn extend_runs_cases_range(
         let lo = (r * l).max(start);
         let hi = ((r + 1) * l).min(end);
         let m = rm.map[r] as usize;
-        let f = &ratio[m * lanes..(m + 1) * lanes];
+        let f = &ratio[m * lanes..m * lanes + occ];
         for i in lo..hi {
-            let d = &mut dst[i * lanes..(i + 1) * lanes];
+            let d = &mut dst[i * lanes..i * lanes + occ];
             for (dv, &fv) in d.iter_mut().zip(f) {
                 *dv *= fv;
             }
@@ -294,9 +309,11 @@ pub fn extend_runs_cases_range(
 }
 
 /// Per-lane sums of a lane-expanded table: `acc[b] += Σ_i xs[i*L + b]`.
+/// Occupancy is `acc.len()` — pass a sub-slice to sum only the occupied
+/// lanes of a wider table.
 #[inline]
 pub fn sum_cases(xs: &[f64], lanes: usize, acc: &mut [f64]) {
-    debug_assert_eq!(acc.len(), lanes);
+    debug_assert!(acc.len() <= lanes && !acc.is_empty());
     debug_assert_eq!(xs.len() % lanes, 0);
     for row in xs.chunks_exact(lanes) {
         for (a, &x) in acc.iter_mut().zip(row) {
@@ -306,9 +323,11 @@ pub fn sum_cases(xs: &[f64], lanes: usize, acc: &mut [f64]) {
 }
 
 /// Per-lane scaling of a lane-expanded table: `xs[i*L + b] *= factors[b]`.
+/// Occupancy is `factors.len()` — lanes `factors.len()..lanes` are left
+/// untouched.
 #[inline]
-pub fn scale_cases(xs: &mut [f64], factors: &[f64]) {
-    let lanes = factors.len();
+pub fn scale_cases(xs: &mut [f64], lanes: usize, factors: &[f64]) {
+    debug_assert!(factors.len() <= lanes && !factors.is_empty());
     debug_assert_eq!(xs.len() % lanes, 0);
     for row in xs.chunks_exact_mut(lanes) {
         for (x, &f) in row.iter_mut().zip(factors) {
@@ -550,10 +569,10 @@ mod tests {
             marg_with_map(s, &map, &mut want[b]);
         }
         let mut got = vec![0.0; 3 * lanes];
-        marg_with_map_cases(&batched_src, &map, lanes, &mut got);
+        marg_with_map_cases(&batched_src, &map, lanes, lanes, &mut got);
         let mut got_runs = vec![0.0; 3 * lanes];
-        marg_runs_cases_range(&batched_src, &rm, lanes, 0..7, &mut got_runs);
-        marg_runs_cases_range(&batched_src, &rm, lanes, 7..24, &mut got_runs);
+        marg_runs_cases_range(&batched_src, &rm, lanes, lanes, 0..7, &mut got_runs);
+        marg_runs_cases_range(&batched_src, &rm, lanes, lanes, 7..24, &mut got_runs);
         for j in 0..3 {
             for b in 0..lanes {
                 assert!((got[j * lanes + b] - want[b][j]).abs() < 1e-12, "map entry {j} lane {b}");
@@ -570,7 +589,7 @@ mod tests {
         }
         let factors: Vec<f64> = (0..lanes).map(|b| 1.0 / sums[b]).collect();
         let mut scaled = got.clone();
-        scale_cases(&mut scaled, &factors);
+        scale_cases(&mut scaled, lanes, &factors);
         let mut resum = vec![0.0; lanes];
         sum_cases(&scaled, lanes, &mut resum);
         assert!(resum.iter().all(|&s| (s - 1.0).abs() < 1e-12));
@@ -583,10 +602,10 @@ mod tests {
             extend_with_map(tab, &map, &lane_ratio);
         }
         let mut got_ext = batched_src.clone();
-        ext_with_map_cases(&mut got_ext, &map, lanes, &ratio_lanes);
+        ext_with_map_cases(&mut got_ext, &map, lanes, lanes, &ratio_lanes);
         let mut got_ext_runs = batched_src.clone();
-        extend_runs_cases_range(&mut got_ext_runs, &rm, lanes, 0..11, &ratio_lanes);
-        extend_runs_cases_range(&mut got_ext_runs, &rm, lanes, 11..24, &ratio_lanes);
+        extend_runs_cases_range(&mut got_ext_runs, &rm, lanes, lanes, 0..11, &ratio_lanes);
+        extend_runs_cases_range(&mut got_ext_runs, &rm, lanes, lanes, 11..24, &ratio_lanes);
         for i in 0..24 {
             for b in 0..lanes {
                 assert!((got_ext[i * lanes + b] - want_ext[b][i]).abs() < 1e-12);
@@ -601,11 +620,93 @@ mod tests {
         let rm = RunMap { map: vec![0, 1], run_len: 3 };
         let src = [1.0; 12];
         let mut dst = [0.0; 4];
-        marg_runs_cases_range(&src, &rm, 2, 3..3, &mut dst);
+        marg_runs_cases_range(&src, &rm, 2, 2, 3..3, &mut dst);
         assert_eq!(dst, [0.0; 4]);
         let mut t = src;
-        extend_runs_cases_range(&mut t, &rm, 2, 0..0, &[2.0; 4]);
+        extend_runs_cases_range(&mut t, &rm, 2, 2, 0..0, &[2.0; 4]);
         assert_eq!(t, src);
+    }
+
+    #[test]
+    fn occupancy_bound_touches_only_occupied_lanes() {
+        use crate::jt::mapping::build_run_map;
+        let src_vars = [0usize, 1, 2];
+        let src_cards = [2usize, 3, 4];
+        let dst_vars = [1usize];
+        let dst_cards = [3usize];
+        let map = build_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+        let rm = build_run_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+        let (lanes, occ) = (4usize, 2usize);
+        let mut rng = Rng::new(31);
+        let src: Vec<f64> = (0..24 * lanes).map(|_| rng.f64()).collect();
+
+        // marg at occ < lanes: occupied lanes agree with a full-width run,
+        // trailing lanes keep their sentinel
+        let mut full = vec![0.0; 3 * lanes];
+        marg_with_map_cases(&src, &map, lanes, lanes, &mut full);
+        let mut part = vec![-7.0; 3 * lanes];
+        for j in 0..3 {
+            for b in 0..occ {
+                part[j * lanes + b] = 0.0;
+            }
+        }
+        marg_with_map_cases(&src, &map, lanes, occ, &mut part);
+        let mut part_runs = part.clone();
+        for j in 0..3 {
+            for b in 0..occ {
+                part_runs[j * lanes + b] = 0.0;
+            }
+        }
+        marg_runs_cases_range(&src, &rm, lanes, occ, 0..9, &mut part_runs);
+        marg_runs_cases_range(&src, &rm, lanes, occ, 9..24, &mut part_runs);
+        for j in 0..3 {
+            for b in 0..lanes {
+                let idx = j * lanes + b;
+                if b < occ {
+                    assert!((part[idx] - full[idx]).abs() < 1e-12, "map entry {j} lane {b}");
+                    assert!((part_runs[idx] - full[idx]).abs() < 1e-12, "runs entry {j} lane {b}");
+                } else {
+                    assert_eq!(part[idx], -7.0, "map stale lane touched at {j}/{b}");
+                    assert_eq!(part_runs[idx], -7.0, "runs stale lane touched at {j}/{b}");
+                }
+            }
+        }
+
+        // ext at occ < lanes: trailing lanes pass through untouched
+        let ratio: Vec<f64> = (0..3 * lanes).map(|k| 0.5 + k as f64 * 0.25).collect();
+        let mut want = src.clone();
+        ext_with_map_cases(&mut want, &map, lanes, lanes, &ratio);
+        let mut got = src.clone();
+        ext_with_map_cases(&mut got, &map, lanes, occ, &ratio);
+        let mut got_runs = src.clone();
+        extend_runs_cases_range(&mut got_runs, &rm, lanes, occ, 0..5, &ratio);
+        extend_runs_cases_range(&mut got_runs, &rm, lanes, occ, 5..24, &ratio);
+        for i in 0..24 {
+            for b in 0..lanes {
+                let idx = i * lanes + b;
+                let expect = if b < occ { want[idx] } else { src[idx] };
+                assert!((got[idx] - expect).abs() < 1e-12, "ext entry {i} lane {b}");
+                assert!((got_runs[idx] - expect).abs() < 1e-12, "ext runs entry {i} lane {b}");
+            }
+        }
+
+        // sum/scale occupancy comes from the accumulator/factor length
+        let mut acc = vec![0.0; occ];
+        sum_cases(&src, lanes, &mut acc);
+        for (b, a) in acc.iter().enumerate() {
+            let direct: f64 = (0..24).map(|i| src[i * lanes + b]).sum();
+            assert!((a - direct).abs() < 1e-12, "sum lane {b}");
+        }
+        let doubles = vec![2.0; occ];
+        let mut scaled = src.clone();
+        scale_cases(&mut scaled, lanes, &doubles);
+        for i in 0..24 {
+            for b in 0..lanes {
+                let idx = i * lanes + b;
+                let expect = if b < occ { src[idx] * 2.0 } else { src[idx] };
+                assert!((scaled[idx] - expect).abs() < 1e-12, "scale entry {i} lane {b}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Conditional-independence testing: the G² (likelihood-ratio) test.
+//!
+//! One test asks whether `X ⊥ Y | Z` in the data. The contingency table
+//! over `(Z-configuration, X, Y)` is assembled in **one pass** over the
+//! rows (the column-major [`crate::learn::Dataset`] makes that pass touch
+//! only the tested columns), then
+//!
+//! ```text
+//! G² = 2 Σ_{z,x,y} n_xyz · ln( n_xyz · n_z / (n_xz · n_yz) )
+//! ```
+//!
+//! is referred to a chi-squared upper tail. Degrees of freedom are
+//! **adaptive** (the bnlearn/Tetrad convention): each non-empty
+//! Z-stratum contributes `(rx−1)(ry−1)` where `rx`/`ry` count the X/Y
+//! values actually observed in that stratum. This matters beyond small-
+//! sample hygiene: a variable that is a *deterministic* function of the
+//! conditioning set (asia's `either` given `{lung, tub}`) shows zero
+//! variance in every stratum, and the classical fixed dof would turn that
+//! structural zero into "independent", deleting true edges. An adaptive
+//! dof of **zero** instead marks the test *uninformative* — it cannot
+//! support independence, and the edge survives to be tested elsewhere.
+//!
+//! Scratch buffers (contingency table, margin vectors) live in
+//! [`CiScratch`] so the PC driver can keep one per worker and run an
+//! entire level of tests with no steady-state allocation beyond the
+//! per-test conditioning-column list.
+
+use crate::learn::data::Dataset;
+
+/// Reusable per-worker scratch: the contingency table plus the
+/// per-stratum X/Y margin buffers, so the hot parallel CI loop's only
+/// steady-state allocation is the tiny per-test `zcols` slice list.
+#[derive(Default)]
+pub struct CiScratch {
+    counts: Vec<u32>,
+    n_x: Vec<u32>,
+    n_y: Vec<u32>,
+}
+
+/// Outcome of one G² test.
+#[derive(Clone, Copy, Debug)]
+pub struct CiOutcome {
+    /// `p > alpha` with informative (non-zero) degrees of freedom.
+    pub independent: bool,
+    /// Upper-tail p-value (0.0 when the test was uninformative).
+    pub p: f64,
+    /// The G² statistic.
+    pub g2: f64,
+    /// Adaptive degrees of freedom (0 ⇒ uninformative).
+    pub dof: usize,
+}
+
+/// Run `X ⊥ Y | Z` on the dataset at significance `alpha`.
+pub fn g_squared(data: &Dataset, x: usize, y: usize, zs: &[usize], alpha: f64, scratch: &mut CiScratch) -> CiOutcome {
+    let cx = data.card(x);
+    let cy = data.card(y);
+    let nz: usize = zs.iter().map(|&z| data.card(z)).product();
+    let table = nz * cx * cy;
+    if scratch.counts.len() < table {
+        scratch.counts.resize(table, 0);
+    }
+    let counts = &mut scratch.counts[..table];
+    counts.fill(0);
+
+    // one pass: row -> (z-config, x, y) cell
+    let col_x = data.col(x);
+    let col_y = data.col(y);
+    let zcols: Vec<(&[u32], usize)> = zs.iter().map(|&z| (data.col(z), data.card(z))).collect();
+    for r in 0..data.n_rows() {
+        let mut zi = 0usize;
+        for (zc, card) in &zcols {
+            zi = zi * card + zc[r] as usize;
+        }
+        counts[(zi * cx + col_x[r] as usize) * cy + col_y[r] as usize] += 1;
+    }
+
+    // per-stratum margins, statistic, and adaptive dof
+    let mut g2 = 0.0f64;
+    let mut dof = 0usize;
+    if scratch.n_x.len() < cx {
+        scratch.n_x.resize(cx, 0);
+    }
+    if scratch.n_y.len() < cy {
+        scratch.n_y.resize(cy, 0);
+    }
+    let n_x = &mut scratch.n_x[..cx];
+    let n_y = &mut scratch.n_y[..cy];
+    for zi in 0..nz {
+        let cell = &counts[zi * cx * cy..(zi + 1) * cx * cy];
+        let n_z: u64 = cell.iter().map(|&c| c as u64).sum();
+        if n_z == 0 {
+            continue;
+        }
+        for (a, nx) in n_x.iter_mut().enumerate() {
+            *nx = cell[a * cy..(a + 1) * cy].iter().sum();
+        }
+        for (b, ny) in n_y.iter_mut().enumerate() {
+            *ny = (0..cx).map(|a| cell[a * cy + b]).sum();
+        }
+        let rx = n_x.iter().filter(|&&v| v > 0).count();
+        let ry = n_y.iter().filter(|&&v| v > 0).count();
+        dof += rx.saturating_sub(1) * ry.saturating_sub(1);
+        for a in 0..cx {
+            for b in 0..cy {
+                let o = cell[a * cy + b];
+                if o > 0 {
+                    g2 += o as f64 * (o as f64 * n_z as f64 / (n_x[a] as f64 * n_y[b] as f64)).ln();
+                }
+            }
+        }
+    }
+    g2 *= 2.0;
+    if dof == 0 {
+        // uninformative: zero effective variation, cannot claim independence
+        return CiOutcome { independent: false, p: 0.0, g2, dof };
+    }
+    let p = chi2_sf(g2, dof);
+    CiOutcome { independent: p > alpha, p, g2, dof }
+}
+
+/// Chi-squared survival function `P(X ≥ x)` with `dof` degrees of
+/// freedom: the regularized upper incomplete gamma `Q(dof/2, x/2)`.
+pub fn chi2_sf(x: f64, dof: usize) -> f64 {
+    gammq(dof as f64 / 2.0, x / 2.0)
+}
+
+/// `ln Γ(x)` via the Lanczos approximation (Numerical Recipes g=5, n=6 —
+/// |ε| < 2e-10 for x > 0, far below what a p-value threshold needs).
+fn gammln(x: f64) -> f64 {
+    const COF: [f64; 6] = [
+        76.18009172947146,
+        -86.50532032941677,
+        24.01409824083091,
+        -1.231739572450155,
+        0.1208650973866179e-2,
+        -0.5395239384953e-5,
+    ];
+    let mut y = x;
+    let mut tmp = x + 5.5;
+    tmp -= (x + 0.5) * tmp.ln();
+    let mut ser = 1.000000000190015;
+    for c in COF {
+        y += 1.0;
+        ser += c / y;
+    }
+    -tmp + (2.5066282746310005 * ser / x).ln()
+}
+
+/// Regularized upper incomplete gamma `Q(a, x)`: series representation of
+/// `P` below `x < a+1`, Lentz continued fraction for `Q` above.
+fn gammq(a: f64, x: f64) -> f64 {
+    if a <= 0.0 || x <= 0.0 {
+        return 1.0;
+    }
+    if x < a + 1.0 {
+        // series for P(a, x); Q = 1 - P
+        let mut ap = a;
+        let mut sum = 1.0 / a;
+        let mut delta = sum;
+        for _ in 0..500 {
+            ap += 1.0;
+            delta *= x / ap;
+            sum += delta;
+            if delta.abs() < sum.abs() * 1e-14 {
+                break;
+            }
+        }
+        1.0 - sum * (-x + a * x.ln() - gammln(a)).exp()
+    } else {
+        // modified Lentz continued fraction for Q(a, x)
+        const TINY: f64 = 1e-300;
+        let mut b = x + 1.0 - a;
+        let mut c = 1.0 / TINY;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..500 {
+            let an = -(i as f64) * (i as f64 - a);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < TINY {
+                d = TINY;
+            }
+            c = b + an / c;
+            if c.abs() < TINY {
+                c = TINY;
+            }
+            d = 1.0 / d;
+            let delta = d * c;
+            h *= delta;
+            if (delta - 1.0).abs() < 1e-14 {
+                break;
+            }
+        }
+        (-x + a * x.ln() - gammln(a)).exp() * h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+
+    #[test]
+    fn chi2_tail_matches_reference_values() {
+        // classic table values: P(X² ≥ 3.841 | 1 dof) = 0.05,
+        // P(X² ≥ 6.635 | 1 dof) = 0.01, P(X² ≥ 5.991 | 2 dof) = 0.05
+        assert!((chi2_sf(3.841, 1) - 0.05).abs() < 5e-4);
+        assert!((chi2_sf(6.635, 1) - 0.01).abs() < 5e-4);
+        assert!((chi2_sf(5.991, 2) - 0.05).abs() < 5e-4);
+        // extremes
+        assert!((chi2_sf(0.0, 3) - 1.0).abs() < 1e-12);
+        assert!(chi2_sf(1000.0, 1) < 1e-12);
+        // both gammq branches (series x < a+1, continued fraction x > a+1)
+        assert!((chi2_sf(1.0, 10) - 0.9998).abs() < 1e-3);
+        assert!(chi2_sf(40.0, 10) < 2e-5);
+    }
+
+    #[test]
+    fn detects_dependence_and_independence_on_asia_samples() {
+        let net = embedded::asia();
+        let data = crate::learn::Dataset::from_network(&net, 20_000, 7);
+        let v = |n: &str| net.var_id(n).unwrap();
+        let mut scratch = CiScratch::default();
+        // smoke -> lung: marginally dependent
+        let dep = g_squared(&data, v("smoke"), v("lung"), &[], 0.01, &mut scratch);
+        assert!(!dep.independent, "smoke/lung p={}", dep.p);
+        // asia vs smoke: disconnected components, marginally independent
+        let ind = g_squared(&data, v("asia"), v("smoke"), &[], 0.01, &mut scratch);
+        assert!(ind.independent, "asia/smoke p={}", ind.p);
+        // xray ⟂ dysp | either (d-separation through the collider's child)
+        let sep = g_squared(&data, v("xray"), v("dysp"), &[v("either")], 0.01, &mut scratch);
+        assert!(sep.independent, "xray/dysp|either p={}", sep.p);
+    }
+
+    #[test]
+    fn deterministic_conditioning_is_uninformative_not_independent() {
+        // either is a deterministic OR of (lung, tub): conditioned on both
+        // parents it has zero variance in every stratum, so the classical
+        // test would call either ⟂ xray | {lung, tub} and delete a true
+        // edge. Adaptive dof flags the test uninformative instead.
+        let net = embedded::asia();
+        let data = crate::learn::Dataset::from_network(&net, 20_000, 7);
+        let v = |n: &str| net.var_id(n).unwrap();
+        let mut scratch = CiScratch::default();
+        let out = g_squared(&data, v("either"), v("xray"), &[v("lung"), v("tub")], 0.01, &mut scratch);
+        assert_eq!(out.dof, 0, "deterministic stratum must yield zero adaptive dof");
+        assert!(!out.independent);
+    }
+
+    #[test]
+    fn scratch_is_reusable_across_table_sizes() {
+        let net = embedded::asia();
+        let data = crate::learn::Dataset::from_network(&net, 2_000, 3);
+        let mut scratch = CiScratch::default();
+        let a = g_squared(&data, 0, 1, &[2, 3], 0.05, &mut scratch);
+        let b = g_squared(&data, 0, 1, &[], 0.05, &mut scratch);
+        let mut fresh = CiScratch::default();
+        let b2 = g_squared(&data, 0, 1, &[], 0.05, &mut fresh);
+        assert_eq!(b.g2.to_bits(), b2.g2.to_bits(), "stale counts must not leak between tests");
+        assert_eq!(b.dof, b2.dof);
+        let _ = a;
+    }
+}

@@ -1,0 +1,407 @@
+//! Column-major datasets of discrete samples.
+//!
+//! Structure learning is column access patterns all the way down: every
+//! conditional-independence test walks a handful of *columns* (the tested
+//! pair plus the conditioning set) across all rows, and CPT fitting walks
+//! one family's columns. A [`Dataset`] therefore stores samples
+//! **column-major** — `col(v)[r]` is row `r`'s state of variable `v` —
+//! so a test touches only the columns it reads, each a contiguous run.
+//!
+//! Datasets come from two places: CSV files ([`Dataset::from_csv`] /
+//! [`Dataset::to_csv`], state names on the wire) and the crate's own
+//! forward sampler ([`Dataset::from_network`], which fills the columns
+//! directly via [`crate::bn::sample::forward_samples_columns`] — no
+//! row-major intermediate).
+
+use crate::bn::network::Network;
+use crate::rng::Rng;
+use crate::{Error, Result};
+
+/// A column-major table of discrete samples with named state spaces.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Dataset {
+    names: Vec<String>,
+    states: Vec<Vec<String>>,
+    cols: Vec<Vec<u32>>,
+    n_rows: usize,
+}
+
+impl Dataset {
+    /// Assemble from parallel columns, validating shapes and ranges.
+    pub fn from_columns(names: Vec<String>, states: Vec<Vec<String>>, cols: Vec<Vec<u32>>) -> Result<Dataset> {
+        if names.len() != states.len() || names.len() != cols.len() {
+            return Err(Error::msg(format!(
+                "dataset shape mismatch: {} names, {} state spaces, {} columns",
+                names.len(),
+                states.len(),
+                cols.len()
+            )));
+        }
+        // fail here, not minutes later when Network::new rejects the
+        // learned result
+        let mut seen = std::collections::BTreeSet::new();
+        for name in &names {
+            if !seen.insert(name.as_str()) {
+                return Err(Error::msg(format!("dataset has duplicate variable name {name:?}")));
+            }
+        }
+        let n_rows = cols.first().map(|c| c.len()).unwrap_or(0);
+        for (v, col) in cols.iter().enumerate() {
+            if col.len() != n_rows {
+                return Err(Error::msg(format!(
+                    "dataset column {:?} has {} rows, expected {n_rows}",
+                    names[v],
+                    col.len()
+                )));
+            }
+            let card = states[v].len() as u32;
+            if card == 0 {
+                return Err(Error::msg(format!("dataset variable {:?} has no states", names[v])));
+            }
+            if let Some(&bad) = col.iter().find(|&&s| s >= card) {
+                return Err(Error::msg(format!(
+                    "dataset column {:?} holds state {bad}, cardinality is {card}",
+                    names[v]
+                )));
+            }
+        }
+        Ok(Dataset { names, states, cols, n_rows })
+    }
+
+    /// Draw `n` forward samples from `net` (seeded), filling the columns
+    /// directly — the generation path the closed sample→learn→serve loop
+    /// uses.
+    pub fn from_network(net: &Network, n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let cols = crate::bn::sample::forward_samples_columns(net, &mut rng, n);
+        Dataset {
+            names: net.vars.iter().map(|v| v.name.clone()).collect(),
+            states: net.vars.iter().map(|v| v.states.clone()).collect(),
+            cols,
+            n_rows: n,
+        }
+    }
+
+    /// Number of variables (columns).
+    #[inline]
+    pub fn n_vars(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Number of samples (rows).
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Cardinality of variable `v`.
+    #[inline]
+    pub fn card(&self, v: usize) -> usize {
+        self.states[v].len()
+    }
+
+    /// All cardinalities.
+    pub fn cards(&self) -> Vec<usize> {
+        self.states.iter().map(|s| s.len()).collect()
+    }
+
+    /// Variable names, in column order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// State names of variable `v`.
+    pub fn states(&self, v: usize) -> &[String] {
+        &self.states[v]
+    }
+
+    /// The column of variable `v` (state index per row).
+    #[inline]
+    pub fn col(&self, v: usize) -> &[u32] {
+        &self.cols[v]
+    }
+
+    /// Stream the CSV form into `sink` one line at a time (constant
+    /// memory — at learning-scale sample counts the full text can run to
+    /// hundreds of megabytes).
+    fn write_csv(&self, sink: &mut impl std::io::Write) -> Result<()> {
+        let mut line = String::new();
+        for (v, name) in self.names.iter().enumerate() {
+            if v > 0 {
+                line.push(',');
+            }
+            push_csv_field(&mut line, name);
+        }
+        line.push('\n');
+        sink.write_all(line.as_bytes())?;
+        for r in 0..self.n_rows {
+            line.clear();
+            for v in 0..self.n_vars() {
+                if v > 0 {
+                    line.push(',');
+                }
+                push_csv_field(&mut line, &self.states[v][self.cols[v][r] as usize]);
+            }
+            line.push('\n');
+            sink.write_all(line.as_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Render as CSV: a header of variable names, then one row of state
+    /// *names* per sample (names, not indices, so files are portable
+    /// across state orderings). Names containing commas, quotes,
+    /// newlines, or surrounding whitespace are RFC-4180-quoted so
+    /// interval-style state names like `(1,5-2,5]` round-trip. For big
+    /// datasets prefer [`Dataset::save`], which streams.
+    pub fn to_csv(&self) -> String {
+        let mut out = Vec::new();
+        self.write_csv(&mut out).expect("writing CSV to memory cannot fail");
+        String::from_utf8(out).expect("CSV text is UTF-8")
+    }
+
+    /// Parse CSV produced by [`Dataset::to_csv`] (or any header + state-name
+    /// grid; quoted fields per RFC 4180, unquoted fields trimmed). State
+    /// spaces are inferred per column in first-appearance order, so the
+    /// *set* of states round-trips while the order may differ from the
+    /// generating network's.
+    pub fn from_csv(text: &str) -> Result<Dataset> {
+        let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+        let Some((lineno, header)) = lines.next() else {
+            return Err(Error::msg("empty CSV: no header line"));
+        };
+        let names = split_csv_line(header, lineno + 1)?;
+        if names.iter().any(|n| n.is_empty()) {
+            return Err(Error::msg("CSV header has an empty variable name"));
+        }
+        let n_vars = names.len();
+        let mut states: Vec<Vec<String>> = vec![Vec::new(); n_vars];
+        let mut cols: Vec<Vec<u32>> = vec![Vec::new(); n_vars];
+        for (lineno, line) in lines {
+            let fields = split_csv_line(line, lineno + 1)?;
+            if fields.len() != n_vars {
+                return Err(Error::Parse {
+                    line: lineno + 1,
+                    msg: format!("row has {} fields, expected {n_vars}", fields.len()),
+                });
+            }
+            for (v, field) in fields.iter().enumerate() {
+                let s = match states[v].iter().position(|s| s == field) {
+                    Some(s) => s,
+                    None => {
+                        states[v].push(field.to_string());
+                        states[v].len() - 1
+                    }
+                };
+                cols[v].push(s as u32);
+            }
+        }
+        if cols[0].is_empty() {
+            return Err(Error::msg("CSV has a header but no data rows"));
+        }
+        Dataset::from_columns(names, states, cols)
+    }
+
+    /// Write as CSV to a file, streaming row by row.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        use std::io::Write;
+        let mut writer = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_csv(&mut writer)?;
+        writer.flush()?;
+        Ok(())
+    }
+
+    /// Load a CSV file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Dataset> {
+        Self::from_csv(&std::fs::read_to_string(path)?)
+    }
+}
+
+/// Append one CSV field, RFC-4180-quoting it when it contains a comma,
+/// quote, newline, or surrounding whitespace (which the reader would
+/// otherwise trim away).
+fn push_csv_field(out: &mut String, field: &str) {
+    let needs_quoting =
+        field.contains(',') || field.contains('"') || field.contains('\n') || field != field.trim();
+    if needs_quoting {
+        out.push('"');
+        out.push_str(&field.replace('"', "\"\""));
+        out.push('"');
+    } else {
+        out.push_str(field);
+    }
+}
+
+/// Split one CSV line into fields: a field wrapped in double quotes may
+/// contain commas and doubled quotes and round-trips verbatim; unquoted
+/// fields are trimmed (forgiving hand-written input).
+fn split_csv_line(line: &str, lineno: usize) -> Result<Vec<String>> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut fields = Vec::new();
+    let mut i = 0usize;
+    loop {
+        let start = i;
+        // peek past leading whitespace to detect a quoted field
+        let mut j = i;
+        while j < chars.len() && chars[j] != ',' && chars[j].is_whitespace() {
+            j += 1;
+        }
+        if j < chars.len() && chars[j] == '"' {
+            i = j + 1;
+            let mut field = String::new();
+            loop {
+                match chars.get(i) {
+                    None => {
+                        return Err(Error::Parse { line: lineno, msg: "unterminated quoted CSV field".into() })
+                    }
+                    Some('"') if chars.get(i + 1) == Some(&'"') => {
+                        field.push('"');
+                        i += 2;
+                    }
+                    Some('"') => {
+                        i += 1;
+                        break;
+                    }
+                    Some(&c) => {
+                        field.push(c);
+                        i += 1;
+                    }
+                }
+            }
+            // only whitespace may follow the closing quote
+            while i < chars.len() && chars[i] != ',' {
+                if !chars[i].is_whitespace() {
+                    return Err(Error::Parse {
+                        line: lineno,
+                        msg: "unexpected characters after a quoted CSV field".into(),
+                    });
+                }
+                i += 1;
+            }
+            fields.push(field);
+        } else {
+            while i < chars.len() && chars[i] != ',' {
+                i += 1;
+            }
+            let raw: String = chars[start..i].iter().collect();
+            fields.push(raw.trim().to_string());
+        }
+        if i >= chars.len() {
+            break;
+        }
+        i += 1; // the comma
+        if i >= chars.len() {
+            // trailing comma: one final empty field, as plain split gives
+            fields.push(String::new());
+            break;
+        }
+    }
+    Ok(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+
+    #[test]
+    fn from_network_matches_row_major_sampler() {
+        let net = embedded::asia();
+        let data = Dataset::from_network(&net, 50, 11);
+        assert_eq!(data.n_vars(), 8);
+        assert_eq!(data.n_rows(), 50);
+        // same seed, same stream: the row-major sampler must agree cell
+        // for cell (the column-major fill is a layout change, not a
+        // different experiment)
+        let mut rng = Rng::new(11);
+        let rows = crate::bn::sample::forward_samples(&net, &mut rng, 50);
+        for (r, row) in rows.iter().enumerate() {
+            for v in 0..net.n() {
+                assert_eq!(data.col(v)[r] as usize, row[v], "row {r} var {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip_preserves_cells() {
+        let net = embedded::asia();
+        let data = Dataset::from_network(&net, 40, 3);
+        let text = data.to_csv();
+        let back = Dataset::from_csv(&text).unwrap();
+        assert_eq!(back.n_rows(), 40);
+        assert_eq!(back.names(), data.names());
+        // state *names* per cell agree even if index order was re-derived
+        for v in 0..data.n_vars() {
+            for r in 0..data.n_rows() {
+                assert_eq!(
+                    back.states(v)[back.col(v)[r] as usize],
+                    data.states(v)[data.col(v)[r] as usize],
+                    "cell ({r},{v})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn csv_error_paths() {
+        assert!(Dataset::from_csv("").is_err());
+        assert!(Dataset::from_csv("a,b\n").is_err());
+        assert!(Dataset::from_csv("a,b\nyes\n").is_err());
+        assert!(Dataset::from_csv("a,\nyes,no\n").is_err());
+        // duplicate header names die here, not after a full PC run
+        assert!(Dataset::from_csv("a,a\nyes,no\n").is_err());
+    }
+
+    #[test]
+    fn csv_quotes_awkward_state_names() {
+        // interval-style names with commas, embedded quotes, and padded
+        // whitespace must survive the save-data -> --data round trip
+        let names = vec!["v".to_string(), "w".to_string()];
+        let states = vec![
+            vec!["(1,5-2,5]".to_string(), "x\"y".to_string(), " padded ".to_string()],
+            vec!["plain".to_string(), "also plain".to_string()],
+        ];
+        let cols = vec![vec![0, 1, 2, 0], vec![1, 0, 1, 0]];
+        let d = Dataset::from_columns(names, states, cols).unwrap();
+        let text = d.to_csv();
+        let back = Dataset::from_csv(&text).unwrap();
+        assert_eq!(back.names(), d.names());
+        for v in 0..d.n_vars() {
+            for r in 0..d.n_rows() {
+                assert_eq!(
+                    back.states(v)[back.col(v)[r] as usize],
+                    d.states(v)[d.col(v)[r] as usize],
+                    "cell ({r},{v}) in {text:?}"
+                );
+            }
+        }
+        // malformed quoting is a parse error, not silent data corruption
+        assert!(Dataset::from_csv("a\n\"unterminated\n").is_err());
+        assert!(Dataset::from_csv("a\n\"x\" trailing\n").is_err());
+    }
+
+    #[test]
+    fn from_columns_validates() {
+        let names = vec!["a".to_string(), "b".to_string()];
+        let states = vec![vec!["t".to_string(), "f".to_string()]; 2];
+        assert!(Dataset::from_columns(names.clone(), states.clone(), vec![vec![0, 1], vec![1, 0]]).is_ok());
+        assert!(Dataset::from_columns(names.clone(), states.clone(), vec![vec![0, 1]]).is_err());
+        assert!(Dataset::from_columns(names.clone(), states.clone(), vec![vec![0], vec![1, 0]]).is_err());
+        assert!(Dataset::from_columns(names, states, vec![vec![0, 2], vec![1, 0]]).is_err());
+        let dup = vec!["a".to_string(), "a".to_string()];
+        let states = vec![vec!["t".to_string(), "f".to_string()]; 2];
+        assert!(Dataset::from_columns(dup, states, vec![vec![0], vec![1]]).is_err());
+    }
+
+    #[test]
+    fn save_and_load_files() {
+        let net = embedded::cancer();
+        let data = Dataset::from_network(&net, 25, 5);
+        let path = std::env::temp_dir().join(format!("fastbn-data-{}.csv", std::process::id()));
+        data.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.n_rows(), 25);
+        assert_eq!(back.names(), data.names());
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,266 @@
+//! Edge orientation: v-structures + Meek rules → CPDAG → consistent DAG.
+//!
+//! From the skeleton and sepsets, unshielded colliders are oriented first
+//! (`x → z ← y` whenever `x — z — y`, `x`/`y` nonadjacent, and `z` is not
+//! in their separating set), then Meek's rules R1–R3 propagate compelled
+//! directions to a fixpoint. The result is a **CPDAG**: compelled edges
+//! directed, reversible edges undirected — every DAG in the Markov
+//! equivalence class agrees on the directed part.
+//!
+//! Parameter fitting needs one concrete member of the class, so
+//! [`extend_to_dag`] runs the Dor–Tarsi consistent-extension algorithm:
+//! repeatedly find a node that is a directed sink whose undirected
+//! neighbors are adjacent to all its other neighbors, orient its
+//! undirected edges inward, and retire it. This never creates a new
+//! v-structure, so the extension stays in the learned equivalence class.
+//!
+//! Everything here iterates over `BTreeSet`s in sorted order — the
+//! orientation is a pure function of (skeleton, sepsets), independent of
+//! thread count or hash-map iteration luck.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::{Error, Result};
+
+/// A partially directed acyclic graph: the learned equivalence class.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Cpdag {
+    /// Variable count.
+    pub n: usize,
+    /// Compelled edges `(from, to)`.
+    pub directed: BTreeSet<(usize, usize)>,
+    /// Reversible edges `(x, y)`, `x < y`.
+    pub undirected: BTreeSet<(usize, usize)>,
+}
+
+impl Cpdag {
+    fn is_adjacent(&self, a: usize, b: usize) -> bool {
+        self.undirected.contains(&(a.min(b), a.max(b))) || self.directed.contains(&(a, b)) || self.directed.contains(&(b, a))
+    }
+}
+
+/// Build the CPDAG from skeleton `edges` (pairs `x < y`) and the sepsets
+/// recorded during skeleton discovery.
+pub fn cpdag(n: usize, edges: &[(usize, usize)], sepsets: &BTreeMap<(usize, usize), Vec<usize>>) -> Cpdag {
+    let mut g = Cpdag { n, directed: BTreeSet::new(), undirected: edges.iter().copied().collect() };
+    let mut adj: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n];
+    for &(x, y) in edges {
+        adj[x].insert(y);
+        adj[y].insert(x);
+    }
+
+    // v-structures: unshielded triples x - z - y with z outside sepset(x,y)
+    for z in 0..n {
+        let nbrs: Vec<usize> = adj[z].iter().copied().collect();
+        for i in 0..nbrs.len() {
+            for j in (i + 1)..nbrs.len() {
+                let (x, y) = (nbrs[i], nbrs[j]);
+                if adj[x].contains(&y) {
+                    continue; // shielded
+                }
+                let in_sepset =
+                    sepsets.get(&(x.min(y), x.max(y))).map(|s| s.contains(&z)).unwrap_or(false);
+                if !in_sepset {
+                    for (a, b) in [(x, z), (y, z)] {
+                        let e = (a.min(b), a.max(b));
+                        if g.undirected.contains(&e) && !g.directed.contains(&(b, a)) {
+                            g.undirected.remove(&e);
+                            g.directed.insert((a, b));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Meek rules R1-R3 to a fixpoint (restart after every orientation so
+    // the scan order stays canonical)
+    loop {
+        let mut oriented: Option<((usize, usize), (usize, usize))> = None;
+        'scan: for &(a, b) in &g.undirected {
+            for (u, v) in [(a, b), (b, a)] {
+                // R1: z -> u, u - v, z/v nonadjacent  =>  u -> v
+                let r1 = (0..n)
+                    .any(|z| z != u && z != v && g.directed.contains(&(z, u)) && !g.is_adjacent(z, v));
+                // R2: u -> z -> v with u - v  =>  u -> v (avoid the cycle)
+                let r2 = (0..n).any(|z| g.directed.contains(&(u, z)) && g.directed.contains(&(z, v)));
+                // R3: u - z1 -> v and u - z2 -> v, z1/z2 nonadjacent  =>  u -> v
+                let zs: Vec<usize> = (0..n)
+                    .filter(|&z| g.undirected.contains(&(u.min(z), u.max(z))) && g.directed.contains(&(z, v)))
+                    .collect();
+                let r3 = zs
+                    .iter()
+                    .enumerate()
+                    .any(|(i, &z1)| zs[i + 1..].iter().any(|&z2| !g.is_adjacent(z1, z2)));
+                if r1 || r2 || r3 {
+                    oriented = Some(((a, b), (u, v)));
+                    break 'scan;
+                }
+            }
+        }
+        match oriented {
+            Some((e, (u, v))) => {
+                g.undirected.remove(&e);
+                g.directed.insert((u, v));
+            }
+            None => break,
+        }
+    }
+    g
+}
+
+/// Extend the CPDAG to a consistent DAG (Dor & Tarsi), returning the
+/// sorted parent list per variable. Falls back to a low-id → high-id
+/// orientation of whatever undirected edges remain (then verifies
+/// acyclicity) if no extension order exists — which a CPDAG produced by
+/// [`cpdag`] never hits, but arbitrary hand-built inputs can.
+pub fn extend_to_dag(n: usize, g: &Cpdag) -> Result<Vec<Vec<usize>>> {
+    let mut directed = g.directed.clone();
+    let mut und = g.undirected.clone();
+    let mut nodes: BTreeSet<usize> = (0..n).collect();
+    let mut result: BTreeSet<(usize, usize)> = g.directed.clone();
+
+    let neighbors = |x: usize, directed: &BTreeSet<(usize, usize)>, und: &BTreeSet<(usize, usize)>| {
+        let mut out = BTreeSet::new();
+        for &(a, b) in directed.iter().chain(und.iter()) {
+            if a == x {
+                out.insert(b);
+            } else if b == x {
+                out.insert(a);
+            }
+        }
+        out
+    };
+
+    while !nodes.is_empty() {
+        let mut found = None;
+        for &x in &nodes {
+            if directed.iter().any(|&(a, _)| a == x) {
+                continue; // has an outgoing compelled edge: not a sink yet
+            }
+            let und_nbrs: Vec<usize> =
+                und.iter().filter(|&&(a, b)| a == x || b == x).map(|&(a, b)| if a == x { b } else { a }).collect();
+            let all_nbrs = neighbors(x, &directed, &und);
+            let ok = und_nbrs.iter().all(|&y| {
+                all_nbrs.iter().all(|&z| {
+                    z == y
+                        || neighbors(z, &directed, &und).contains(&y)
+                        || neighbors(y, &directed, &und).contains(&z)
+                })
+            });
+            if ok {
+                found = Some(x);
+                break;
+            }
+        }
+        let Some(x) = found else {
+            // no valid sink: orient the leftovers by id and verify
+            for &(a, b) in &und {
+                result.insert((a, b));
+            }
+            return parents_if_acyclic(n, &result);
+        };
+        for &(a, b) in und.clone().iter() {
+            if a == x || b == x {
+                let other = if a == x { b } else { a };
+                und.remove(&(a, b));
+                result.insert((other, x));
+            }
+        }
+        directed.retain(|&(a, b)| a != x && b != x);
+        nodes.remove(&x);
+    }
+    parents_if_acyclic(n, &result)
+}
+
+/// Turn an edge set into per-variable parent lists, erroring on cycles.
+fn parents_if_acyclic(n: usize, edges: &BTreeSet<(usize, usize)>) -> Result<Vec<Vec<usize>>> {
+    let mut parents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for &(p, c) in edges {
+        parents[c].push(p);
+    }
+    // Kahn's algorithm over the candidate DAG
+    let mut indeg: Vec<usize> = parents.iter().map(|p| p.len()).collect();
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for &(p, c) in edges {
+        children[p].push(c);
+    }
+    let mut stack: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut seen = 0usize;
+    while let Some(v) = stack.pop() {
+        seen += 1;
+        for &c in &children[v] {
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                stack.push(c);
+            }
+        }
+    }
+    if seen != n {
+        return Err(Error::msg("CPDAG extension produced a cycle (inconsistent orientation input)"));
+    }
+    Ok(parents)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sepsets(entries: &[((usize, usize), &[usize])]) -> BTreeMap<(usize, usize), Vec<usize>> {
+        entries.iter().map(|&(k, v)| (k, v.to_vec())).collect()
+    }
+
+    #[test]
+    fn collider_is_oriented_chain_is_not() {
+        // skeleton x - z - y; sepset(x,y) = {} => collider x -> z <- y
+        let g = cpdag(3, &[(0, 2), (1, 2)], &sepsets(&[((0, 1), &[])]));
+        assert!(g.directed.contains(&(0, 2)) && g.directed.contains(&(1, 2)));
+        assert!(g.undirected.is_empty());
+        // same skeleton, sepset(x,y) = {z} => no collider, both reversible
+        let g = cpdag(3, &[(0, 2), (1, 2)], &sepsets(&[((0, 1), &[2])]));
+        assert!(g.directed.is_empty());
+        assert_eq!(g.undirected.len(), 2);
+    }
+
+    #[test]
+    fn meek_r1_propagates_past_a_collider() {
+        // 0 -> 2 <- 1 (collider), 2 - 3: R1 forces 2 -> 3 (else a new
+        // v-structure 0 -> 2 <- 3 would appear)
+        let g = cpdag(4, &[(0, 2), (1, 2), (2, 3)], &sepsets(&[((0, 1), &[])]));
+        assert!(g.directed.contains(&(2, 3)), "{g:?}");
+        assert!(g.undirected.is_empty());
+    }
+
+    #[test]
+    fn extension_recovers_a_full_dag() {
+        // cancer-shaped CPDAG: Pollution -> Cancer <- Smoker compelled,
+        // Cancer -> Xray / Cancer -> Dyspnoea compelled by R1
+        let g = cpdag(
+            5,
+            &[(0, 2), (1, 2), (2, 3), (2, 4)],
+            &sepsets(&[((0, 1), &[]), ((0, 3), &[2]), ((0, 4), &[2]), ((1, 3), &[2]), ((1, 4), &[2]), ((3, 4), &[2])]),
+        );
+        let parents = extend_to_dag(5, &g).unwrap();
+        assert_eq!(parents, vec![vec![], vec![], vec![0, 1], vec![2], vec![2]]);
+    }
+
+    #[test]
+    fn extension_never_creates_a_new_collider() {
+        // skeleton 0 - 2 - 1 with sepset {2}: both edges reversible; a
+        // valid extension must NOT orient 0 -> 2 <- 1
+        let g = cpdag(3, &[(0, 2), (1, 2)], &sepsets(&[((0, 1), &[2])]));
+        let parents = extend_to_dag(3, &g).unwrap();
+        let collider_at_2 = parents[2].len() == 2;
+        assert!(!collider_at_2, "extension created a new v-structure: {parents:?}");
+    }
+
+    #[test]
+    fn cyclic_compelled_input_is_rejected() {
+        let g = Cpdag {
+            n: 3,
+            directed: [(0, 1), (1, 2), (2, 0)].into_iter().collect(),
+            undirected: BTreeSet::new(),
+        };
+        assert!(extend_to_dag(3, &g).is_err());
+    }
+}

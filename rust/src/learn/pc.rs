@@ -1,0 +1,278 @@
+//! PC-stable skeleton discovery with level-wise pool parallelism.
+//!
+//! The companion paper to the inference poster ("Fast Parallel Bayesian
+//! Network Structure Learning") parallelizes PC-stable by observing that
+//! all CI tests of one *level* (conditioning-set size) are independent:
+//! PC-stable freezes the adjacency sets at the start of each level, so no
+//! test's outcome can influence another's inputs within the level. This
+//! driver exploits exactly that: each level's edge batch is **one region**
+//! of the existing [`Pool`] — tasks (one per surviving edge) are claimed
+//! by `fetch_add` dynamic self-scheduling, contingency scratch is
+//! per-worker ([`PerWorker`]), and every task writes only its own result
+//! slot. Results therefore do not depend on the thread count or the
+//! claim order in any way: the learned skeleton, sepsets, and statistics
+//! are bit-identical from `threads = 1` to `threads = N`.
+//!
+//! Per edge `x — y`, candidate separating sets of size `level` are drawn
+//! from the frozen `adj(x) \ {y}` first, then `adj(y) \ {x}` (subsets of
+//! the first side are skipped as duplicates), each side enumerated in
+//! lexicographic order — the first accepting set is recorded as the
+//! sepset, making sepsets deterministic too. Removals apply at the end
+//! of the level (the "stable" in PC-stable).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+use crate::engine::pool::Pool;
+use crate::engine::share::PerWorker;
+use crate::learn::ci::{g_squared, CiScratch};
+use crate::learn::data::Dataset;
+
+/// Per-level accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LevelStats {
+    /// Edges alive at the start of the level (= pool tasks dispatched).
+    pub edges: usize,
+    /// CI tests executed during the level.
+    pub tests: usize,
+    /// Edges removed at the end of the level.
+    pub removed: usize,
+}
+
+/// Output of skeleton discovery.
+#[derive(Clone, Debug)]
+pub struct SkeletonResult {
+    /// Sorted adjacency lists of the learned skeleton.
+    pub adj: Vec<Vec<usize>>,
+    /// Sorted undirected edges `(x, y)`, `x < y`.
+    pub edges: Vec<(usize, usize)>,
+    /// Separating set recorded for every removed pair (keyed `(x, y)`,
+    /// `x < y`) — the v-structure oracle for orientation.
+    pub sepsets: BTreeMap<(usize, usize), Vec<usize>>,
+    /// Per-level accounting, index = conditioning-set size.
+    pub levels: Vec<LevelStats>,
+}
+
+impl SkeletonResult {
+    /// Total CI tests across all levels.
+    pub fn ci_tests(&self) -> usize {
+        self.levels.iter().map(|l| l.tests).sum()
+    }
+}
+
+/// Lexicographic `k`-combinations of `items`; `f` returns `true` to stop
+/// early (separating set found). Returns whether enumeration was stopped.
+fn for_each_combination(items: &[usize], k: usize, f: &mut dyn FnMut(&[usize]) -> bool) -> bool {
+    if k > items.len() {
+        return false;
+    }
+    if k == 0 {
+        return f(&[]);
+    }
+    let n = items.len();
+    let mut idx: Vec<usize> = (0..k).collect();
+    let mut buf = vec![0usize; k];
+    loop {
+        for (j, &i) in idx.iter().enumerate() {
+            buf[j] = items[i];
+        }
+        if f(&buf) {
+            return true;
+        }
+        // advance to the next combination: bump the rightmost index that
+        // still has room, reset everything after it
+        let mut j = k;
+        while j > 0 && idx[j - 1] == n - k + (j - 1) {
+            j -= 1;
+        }
+        if j == 0 {
+            return false;
+        }
+        idx[j - 1] += 1;
+        for l in j..k {
+            idx[l] = idx[l - 1] + 1;
+        }
+    }
+}
+
+/// Discover the skeleton of `data` via PC-stable at significance `alpha`,
+/// conditioning sets capped at `max_cond`, CI batches dispatched through
+/// `pool`.
+pub fn skeleton(data: &Dataset, alpha: f64, max_cond: usize, pool: &Pool) -> SkeletonResult {
+    let n = data.n_vars();
+    let mut adj: Vec<BTreeSet<usize>> = (0..n).map(|v| (0..n).filter(|&u| u != v).collect()).collect();
+    let mut sepsets: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    let mut levels = Vec::new();
+
+    let scratches = PerWorker::new(pool.threads(), |_| CiScratch::default());
+    let mut counters = PerWorker::new(pool.threads(), |_| 0usize);
+
+    let mut level = 0usize;
+    loop {
+        // PC-stable: adjacency frozen for the whole level
+        let frozen: Vec<Vec<usize>> = adj.iter().map(|s| s.iter().copied().collect()).collect();
+        let edges: Vec<(usize, usize)> =
+            (0..n).flat_map(|x| adj[x].iter().copied().filter(move |&y| y > x).map(move |y| (x, y))).collect();
+
+        // one pool region per level: every edge is an independent task,
+        // claimed dynamically; slot t is written by task t alone
+        let slots: Vec<Mutex<Option<Vec<usize>>>> = edges.iter().map(|_| Mutex::new(None)).collect();
+        {
+            let (frozen, edges, slots) = (&frozen, &edges, &slots);
+            let (scratches, counters) = (&scratches, &counters);
+            pool.parallel(edges.len(), &|w, t| {
+                let (x, y) = edges[t];
+                // SAFETY: the pool runs one task per worker id at a time.
+                let scratch = unsafe { scratches.get(w) };
+                let tests = unsafe { counters.get(w) };
+                let nx: Vec<usize> = frozen[x].iter().copied().filter(|&v| v != y).collect();
+                let ny: Vec<usize> = frozen[y].iter().copied().filter(|&v| v != x).collect();
+                let mut found: Option<Vec<usize>> = None;
+                {
+                    let mut try_set = |s: &[usize]| -> bool {
+                        *tests += 1;
+                        if g_squared(data, x, y, s, alpha, scratch).independent {
+                            found = Some(s.to_vec());
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    if !for_each_combination(&nx, level, &mut try_set) {
+                        // y's side, skipping subsets already drawn from x's
+                        for_each_combination(&ny, level, &mut |s: &[usize]| {
+                            if s.iter().all(|v| nx.binary_search(v).is_ok()) {
+                                return false;
+                            }
+                            try_set(s)
+                        });
+                    }
+                }
+                if let Some(sep) = found {
+                    *slots[t].lock().unwrap() = Some(sep);
+                }
+            });
+        }
+
+        // the "stable" half: removals apply only after the whole level ran
+        let mut removed = 0usize;
+        for (t, &(x, y)) in edges.iter().enumerate() {
+            if let Some(sep) = slots[t].lock().unwrap().take() {
+                adj[x].remove(&y);
+                adj[y].remove(&x);
+                sepsets.insert((x, y), sep);
+                removed += 1;
+            }
+        }
+        let tests: usize = counters
+            .iter_mut()
+            .map(|c| {
+                let v = *c;
+                *c = 0;
+                v
+            })
+            .sum();
+        levels.push(LevelStats { edges: edges.len(), tests, removed });
+
+        // escalate only if some surviving edge can actually be tested at
+        // the next conditioning-set size — checked against the
+        // post-removal adjacency, so no zero-test phantom level runs
+        let next = level + 1;
+        let more = (0..n).any(|x| {
+            adj[x].iter().any(|&y| {
+                y > x && (adj[x].len().saturating_sub(1) >= next || adj[y].len().saturating_sub(1) >= next)
+            })
+        });
+        if !more || next > n.min(max_cond) {
+            break;
+        }
+        level = next;
+    }
+
+    let adj_sorted: Vec<Vec<usize>> = adj.iter().map(|s| s.iter().copied().collect()).collect();
+    let edges: Vec<(usize, usize)> =
+        (0..n).flat_map(|x| adj[x].iter().copied().filter(move |&y| y > x).map(move |y| (x, y))).collect();
+    SkeletonResult { adj: adj_sorted, edges, sepsets, levels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::embedded;
+    use crate::learn::Dataset;
+
+    fn true_edges(net: &crate::bn::network::Network) -> Vec<(usize, usize)> {
+        let mut edges: Vec<(usize, usize)> = (0..net.n())
+            .flat_map(|v| net.parents(v).iter().map(move |&p| (p.min(v), p.max(v))))
+            .collect();
+        edges.sort_unstable();
+        edges.dedup();
+        edges
+    }
+
+    #[test]
+    fn combinations_enumerate_in_lexicographic_order() {
+        let items = [2usize, 5, 7, 9];
+        let mut seen = Vec::new();
+        for_each_combination(&items, 2, &mut |s: &[usize]| {
+            seen.push(s.to_vec());
+            false
+        });
+        assert_eq!(
+            seen,
+            vec![vec![2, 5], vec![2, 7], vec![2, 9], vec![5, 7], vec![5, 9], vec![7, 9]]
+        );
+        // k = 0: exactly one empty set; k > len: nothing
+        let mut count = 0;
+        for_each_combination(&items, 0, &mut |s: &[usize]| {
+            assert!(s.is_empty());
+            count += 1;
+            false
+        });
+        assert_eq!(count, 1);
+        for_each_combination(&items, 5, &mut |_s: &[usize]| panic!("must not run"));
+        // early stop propagates
+        assert!(for_each_combination(&items, 1, &mut |s: &[usize]| s[0] == 5));
+    }
+
+    #[test]
+    fn recovers_the_cancer_skeleton() {
+        let net = embedded::cancer();
+        let data = Dataset::from_network(&net, 50_000, 0xA51A);
+        let pool = Pool::new(2);
+        let skel = skeleton(&data, 0.01, usize::MAX, &pool);
+        assert_eq!(skel.edges, true_edges(&net));
+        assert!(skel.ci_tests() > 0);
+        assert!(skel.levels.len() >= 2);
+        // every removed pair carries a sepset
+        for x in 0..net.n() {
+            for y in (x + 1)..net.n() {
+                let has_edge = skel.edges.contains(&(x, y));
+                assert_eq!(skel.sepsets.contains_key(&(x, y)), !has_edge, "pair ({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_result() {
+        let net = embedded::sprinkler();
+        let data = Dataset::from_network(&net, 20_000, 9);
+        let base = skeleton(&data, 0.01, usize::MAX, &Pool::new(1));
+        for threads in [2usize, 4, 8] {
+            let other = skeleton(&data, 0.01, usize::MAX, &Pool::new(threads));
+            assert_eq!(other.edges, base.edges, "threads={threads}");
+            assert_eq!(other.sepsets, base.sepsets, "threads={threads}");
+            assert_eq!(other.levels, base.levels, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn max_cond_caps_the_level() {
+        let net = embedded::asia();
+        let data = Dataset::from_network(&net, 5_000, 1);
+        let pool = Pool::new(1);
+        let capped = skeleton(&data, 0.01, 1, &pool);
+        // levels 0 and 1 ran; the cap stopped the escalation
+        assert!(capped.levels.len() <= 2, "{:?}", capped.levels);
+    }
+}

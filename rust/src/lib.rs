@@ -10,10 +10,12 @@
 //!
 //! * **L3 (this crate)** — the coordinator: Bayesian-network model and I/O
 //!   ([`bn`]), junction-tree compilation ([`jt`]), the six propagation
-//!   engines ([`engine`]), a batch-inference coordinator ([`coordinator`]),
-//!   a multi-network serving fleet ([`fleet`]), a cross-process cluster
-//!   tier routing networks over fleet processes ([`cluster`]), and a PJRT
-//!   runtime that executes AOT-compiled XLA table-op kernels ([`runtime`]).
+//!   engines ([`engine`]), pool-parallel structure + parameter learning
+//!   from data ([`learn`]), a batch-inference coordinator
+//!   ([`coordinator`]), a multi-network serving fleet ([`fleet`]), a
+//!   cross-process cluster tier routing networks over fleet processes
+//!   ([`cluster`]), and a PJRT runtime that executes AOT-compiled XLA
+//!   table-op kernels ([`runtime`]).
 //! * **L2 (python/compile/model.py)** — JAX message-pass compute graph.
 //! * **L1 (python/compile/kernels/)** — Pallas table-op kernels, lowered
 //!   (interpret=True) into the same HLO artifacts the runtime loads.
@@ -43,6 +45,7 @@ pub mod engine;
 pub mod fleet;
 pub mod infer;
 pub mod jt;
+pub mod learn;
 pub mod prop;
 pub mod rng;
 pub mod runtime;

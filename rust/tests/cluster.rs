@@ -37,6 +37,7 @@ fn fast_cluster_cfg() -> ClusterConfig {
         probe_interval: Duration::from_millis(100),
         probe_backoff_max: Duration::from_secs(1),
         fail_threshold: 2,
+        ..Default::default()
     }
 }
 

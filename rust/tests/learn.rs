@@ -1,0 +1,241 @@
+//! Closed-loop learning suite: the sample→learn→serve oracle, thread-count
+//! determinism, and the fleet/cluster serving integration.
+//!
+//! The oracle (ISSUE 5 acceptance): learning from ≥50k forward samples of
+//! the embedded `asia` recovers the true skeleton exactly, and posteriors
+//! from the learned net's junction tree match the generating net within
+//! 0.02 total variation on every single-variable query. The constants
+//! (seed `0xA51A`, alpha 0.01) were validated against an offline
+//! bit-exact reference implementation of the same pipeline.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastbn::bn::embedded;
+use fastbn::bn::network::Network;
+use fastbn::cluster::harness::ClusterHarness;
+use fastbn::cluster::ClusterConfig;
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::fleet::{Fleet, FleetConfig, Session, SessionReply};
+use fastbn::infer::query::Posteriors;
+use fastbn::jt::evidence::Evidence;
+use fastbn::jt::state::TreeState;
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+use fastbn::learn::{learn, Dataset, LearnConfig, LearnReport};
+
+/// Undirected edges of a network's true DAG, sorted.
+fn true_skeleton(net: &Network) -> Vec<(usize, usize)> {
+    let mut edges: Vec<(usize, usize)> =
+        (0..net.n()).flat_map(|v| net.parents(v).iter().map(move |&p| (p.min(v), p.max(v)))).collect();
+    edges.sort_unstable();
+    edges.dedup();
+    edges
+}
+
+/// Posteriors under `ev` via a single-threaded Seq engine (the oracle
+/// engine the byte-level wire comparisons also use).
+fn posteriors(net: &Network, ev: &Evidence) -> Posteriors {
+    let jt = Arc::new(JunctionTree::compile(net, TriangulationHeuristic::MinFill).unwrap());
+    let mut engine = EngineKind::Seq.build(Arc::clone(&jt), &EngineConfig::default().with_threads(1));
+    let mut state = TreeState::fresh(&jt);
+    engine.infer(&mut state, ev).unwrap()
+}
+
+/// The `OK <state>=<prob> … logZ=…` line the servers emit for `target` —
+/// reconstructed here to assert wire replies byte-for-byte against
+/// in-process learning.
+fn expected_reply(net: &Network, target: &str, post: &Posteriors) -> String {
+    let v = net.var_id(target).unwrap();
+    let entries: Vec<String> =
+        net.vars[v].states.iter().zip(&post.probs[v]).map(|(s, p)| format!("{s}={p:.6}")).collect();
+    format!("OK {} logZ={:.6}", entries.join(" "), post.log_z)
+}
+
+/// Everything about a report that must be invariant: structure, CPT bits,
+/// and per-level accounting.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    skeleton: Vec<(usize, usize)>,
+    compelled: Vec<(usize, usize)>,
+    reversible: Vec<(usize, usize)>,
+    parents: Vec<Vec<usize>>,
+    cpt_bits: Vec<Vec<u64>>,
+    levels: Vec<fastbn::learn::LevelStats>,
+}
+
+fn fingerprint(report: &LearnReport) -> Fingerprint {
+    Fingerprint {
+        skeleton: report.skeleton.clone(),
+        compelled: report.compelled.clone(),
+        reversible: report.reversible.clone(),
+        parents: report.net.cpts.iter().map(|c| c.parents.clone()).collect(),
+        cpt_bits: report.net.cpts.iter().map(|c| c.probs.iter().map(|p| p.to_bits()).collect()).collect(),
+        levels: report.levels.clone(),
+    }
+}
+
+#[test]
+fn oracle_recovers_asia_exactly_and_posteriors_agree() {
+    let net = embedded::asia();
+    let data = Dataset::from_network(&net, 50_000, 0xA51A);
+    let report = learn(&data, "asia-learned", &LearnConfig::default().with_threads(2)).unwrap();
+
+    // exact skeleton recovery (8 edges, including both edges of the
+    // deterministic `either` node — the adaptive-dof G² keeps them)
+    assert_eq!(report.skeleton, true_skeleton(&net), "learned skeleton differs from asia's");
+
+    // every single-variable posterior within 0.02 total variation
+    let truth = posteriors(&net, &Evidence::none());
+    let learned = posteriors(&report.net, &Evidence::none());
+    for v in 0..net.n() {
+        let lv = report.net.var_id(&net.vars[v].name).unwrap();
+        let tv: f64 =
+            0.5 * truth.probs[v].iter().zip(&learned.probs[lv]).map(|(a, b)| (a - b).abs()).sum::<f64>();
+        assert!(tv <= 0.02, "P({}) drifted: TV = {tv:.5}", net.vars[v].name);
+    }
+
+    // the learned net is a first-class citizen: it compiles, serves, and
+    // answers a conditional query close to the truth
+    let ev_t = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+    let ev_l = Evidence::from_pairs(&report.net, &[("smoke", "yes")]).unwrap();
+    let t = posteriors(&net, &ev_t);
+    let l = posteriors(&report.net, &ev_l);
+    let v = net.var_id("lung").unwrap();
+    let lv = report.net.var_id("lung").unwrap();
+    let tv: f64 = 0.5 * t.probs[v].iter().zip(&l.probs[lv]).map(|(a, b)| (a - b).abs()).sum::<f64>();
+    assert!(tv <= 0.05, "P(lung | smoke=yes) drifted: TV = {tv:.5}");
+}
+
+#[test]
+fn learning_is_deterministic_across_threads_and_runs() {
+    let net = embedded::asia();
+    let data = Dataset::from_network(&net, 20_000, 7);
+    let base = learn(&data, "asia-det", &LearnConfig::default().with_threads(1)).unwrap();
+    // thread count must not change skeleton, CPDAG, CPTs, or accounting
+    for threads in [2usize, 8] {
+        let other = learn(&data, "asia-det", &LearnConfig::default().with_threads(threads)).unwrap();
+        assert_eq!(fingerprint(&other), fingerprint(&base), "threads={threads}");
+    }
+    // and a repeated run with the same inputs is bit-identical too
+    let again = learn(&data, "asia-det", &LearnConfig::default().with_threads(8)).unwrap();
+    assert_eq!(fingerprint(&again), fingerprint(&base), "repeat run");
+    // regenerating the dataset from the same seed changes nothing either
+    let data2 = Dataset::from_network(&net, 20_000, 7);
+    assert_eq!(data2, data);
+}
+
+#[test]
+fn fleet_learn_verb_matches_in_process_learning_byte_for_byte() {
+    let fleet = Arc::new(Fleet::new(FleetConfig {
+        engine: EngineKind::Seq,
+        engine_cfg: EngineConfig::default().with_threads(1),
+        shards: 1,
+        registry_capacity: 4,
+    }));
+    let mut session = Session::new(fleet);
+    let line = |s: &mut Session, input: &str| match s.handle(input) {
+        SessionReply::Line(l) => l,
+        SessionReply::Quit => panic!("unexpected quit"),
+    };
+    let r = line(&mut session, "LEARN asia-l asia 5000 9");
+    assert!(r.starts_with("OK learned asia-l"), "{r}");
+    assert!(line(&mut session, "USE asia-l").starts_with("OK using asia-l vars=8"));
+    let wire = line(&mut session, "QUERY dysp | smoke=yes");
+
+    // the same spec learned in-process must produce the same bytes on the
+    // wire: same structure, same CPT bits, same formatted posterior
+    let in_process = fastbn::bn::resolve_spec("learn:asia-l:5000:9:asia").unwrap();
+    let ev = Evidence::from_pairs(&in_process, &[("smoke", "yes")]).unwrap();
+    let post = posteriors(&in_process, &ev);
+    assert_eq!(wire, expected_reply(&in_process, "dysp", &post));
+}
+
+#[test]
+fn cluster_learn_passthrough_and_deterministic_handoff() {
+    let h = ClusterHarness::start(
+        2,
+        FleetConfig {
+            engine: EngineKind::Seq,
+            engine_cfg: EngineConfig::default().with_threads(1),
+            shards: 1,
+            registry_capacity: 8,
+        },
+        ClusterConfig {
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_secs(30),
+            probe_timeout: Duration::from_millis(500),
+            probe_interval: Duration::from_millis(100),
+            probe_backoff_max: Duration::from_secs(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut c = h.client().unwrap();
+
+    // LEARN through the front tier lands on the ring owner and is served
+    let r = c.request("LEARN c5 cancer 5000 9").unwrap();
+    assert!(r.starts_with("OK learned c5"), "{r}");
+    assert!(r.contains("backend=b"), "{r}");
+    let owner = h.cluster().owner("c5").expect("learned net must be in the directory");
+    assert!(c.request("USE c5").unwrap().starts_with("OK using c5 vars=5"));
+    let first = c.request("QUERY Xray | Smoker=True").unwrap();
+
+    // byte-identical to the same net learned in-process
+    let in_process = fastbn::bn::resolve_spec("learn:c5:5000:9:cancer").unwrap();
+    let ev = Evidence::from_pairs(&in_process, &[("Smoker", "True")]).unwrap();
+    assert_eq!(first, expected_reply(&in_process, "Xray", &posteriors(&in_process, &ev)));
+
+    // the learned net shows up in the cluster-wide NETS view
+    let nets = c.request("NETS").unwrap();
+    assert!(nets.contains("c5[cliques="), "{nets}");
+
+    // a LEARN with different provenance under the resident name is
+    // refused by the backend, so the front must NOT overwrite the
+    // directory spec — hand-offs keep re-learning the ORIGINAL net
+    let r = c.request("LEARN c5 cancer 5000 10").unwrap();
+    assert!(r.starts_with("ERR network \"c5\" is already resident"), "{r}");
+    assert_eq!(h.cluster().spec_of("c5").as_deref(), Some("learn:c5:5000:9:cancer"));
+
+    // hand-off: the owner leaves, the survivor RE-LEARNS from the
+    // recorded learn: spec — and, because learning is deterministic,
+    // serves the bit-identical network
+    h.cluster().leave(&owner).unwrap();
+    let survivor = h.cluster().owner("c5").expect("hand-off must re-home the learned net");
+    assert_ne!(survivor, owner);
+    let r = c.request("USE c5").unwrap();
+    assert!(r.starts_with("OK using c5") || r.starts_with("ERR"), "{r}");
+    if r.starts_with("ERR") {
+        // the session's pin died with the old owner; one retry re-pins
+        assert!(c.request("USE c5").unwrap().starts_with("OK using c5"), "retry USE failed");
+    }
+    let second = c.request("QUERY Xray | Smoker=True").unwrap();
+    assert_eq!(second, first, "re-learned net on the survivor must answer byte-identically");
+}
+
+#[test]
+fn csv_roundtrip_learns_the_same_network() {
+    // a dataset that leaves the process as CSV and comes back learns the
+    // same structure (state order is re-derived but names are stable)
+    let net = embedded::cancer();
+    let data = Dataset::from_network(&net, 8_000, 21);
+    let direct = learn(&data, "c-direct", &LearnConfig::default().with_threads(2)).unwrap();
+    let back = Dataset::from_csv(&data.to_csv()).unwrap();
+    let via_csv = learn(&back, "c-csv", &LearnConfig::default().with_threads(2)).unwrap();
+    assert_eq!(via_csv.skeleton, direct.skeleton);
+    assert_eq!(via_csv.compelled, direct.compelled);
+    // marginals agree regardless of state re-ordering
+    let a = posteriors(&direct.net, &Evidence::none());
+    let b = posteriors(&via_csv.net, &Evidence::none());
+    for v in 0..net.n() {
+        let name = &net.vars[v].name;
+        let (da, db) = (direct.net.var_id(name).unwrap(), via_csv.net.var_id(name).unwrap());
+        for (si, sname) in direct.net.vars[da].states.iter().enumerate() {
+            let sj = via_csv.net.vars[db].state_index(sname).unwrap();
+            assert!(
+                (a.probs[da][si] - b.probs[db][sj]).abs() < 1e-9,
+                "P({name}={sname}) differs across the CSV round trip"
+            );
+        }
+    }
+}
