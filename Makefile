@@ -2,7 +2,9 @@
 #
 #   make build      release build of the fastbn crate (pure-std, offline-safe)
 #   make test       tier-1: cargo test; then the python suite (skips if no pytest)
-#   make bench      run all eight bench targets (criterion-lite, harness=false)
+#   make bench      run all nine bench targets (criterion-lite, harness=false)
+#   make bench-json refresh BENCH_approx.json, the approx-tier perf-trajectory
+#                   artifact (sample-count × thread sweep vs the exact engine)
 #   make serve-smoke start a 2-network fleet, run a scripted session
 #                   through it over TCP, and assert on the replies
 #   make batch-smoke drive the BATCH verb (N evidence lines in, N posterior
@@ -12,6 +14,10 @@
 #   make learn-smoke sample->learn->serve->QUERY round trip over a live
 #                   fleet socket (LEARN verb), learned twice to assert the
 #                   deterministic-relearn contract
+#   make approx-smoke LOAD an intractable net into a live fleet with a finite
+#                   --max-exact-cost and assert it is served by the approximate
+#                   tier (tier=approx + ci95 half-widths in the replies) while
+#                   a tractable net stays exact
 #   make artifacts  AOT-lower the Pallas/JAX kernels to HLO-text artifacts
 #                   (needs the python deps in python/requirements.txt)
 #   make fmt        rustfmt the workspace
@@ -23,7 +29,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench serve-smoke batch-smoke cluster-smoke learn-smoke artifacts fmt lint test-xla clean
+.PHONY: build test bench bench-json serve-smoke batch-smoke cluster-smoke learn-smoke approx-smoke artifacts fmt lint test-xla clean
 
 build:
 	$(CARGO) build --release
@@ -43,6 +49,12 @@ test: build
 
 bench:
 	$(CARGO) bench
+
+# perf-trajectory artifact: the approx bench writes its sweep (cost +
+# accuracy vs the exact engine) as stable-schema JSON. CI regenerates and
+# uploads this on every push; the committed copy is the schema baseline.
+bench-json:
+	FASTBN_BENCH_JSON=$(CURDIR)/BENCH_approx.json $(CARGO) bench --bench approx
 
 # fleet serving smoke: 2 networks × 2 shards on an ephemeral port; the
 # --smoke switch drives a scripted LOAD/USE/OBSERVE/COMMIT/QUERY/STATS
@@ -73,6 +85,15 @@ cluster-smoke:
 # byte-identically.
 learn-smoke:
 	$(CARGO) run --release -- serve --fleet --shards 1 --bind 127.0.0.1:0 --learn-smoke
+
+# approximate-tier smoke: an empty fleet with a finite exact-cost budget;
+# the --approx-smoke switch LOADs intractable-sim (whose estimated
+# junction-tree cost blows the budget) plus asia through the server's own
+# socket and asserts the intractable net answers QUERY from the approx
+# tier — deterministically, with ci95/ess in the reply — while asia keeps
+# the exact tier in LOAD/NETS/STATS.
+approx-smoke:
+	$(CARGO) run --release -- serve --fleet --shards 1 --samples 20000 --max-exact-cost 1e6 --bind 127.0.0.1:0 --approx-smoke
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts

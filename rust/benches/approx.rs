@@ -1,0 +1,151 @@
+//! Bench: **approximate tier** — likelihood-weighting cost and accuracy
+//! versus the exact hybrid engine, swept over sample counts × threads on
+//! a small net (asia) and a paper-suite analog (hailfinder-sim).
+//!
+//! When `FASTBN_BENCH_JSON` names a path (`make bench-json` →
+//! `BENCH_approx.json`) the sweep is also written as JSON with a stable
+//! schema; the CI perf-trajectory job uploads it as an artifact on every
+//! push, so regressions in the sampling tier show up as a trend across
+//! commits rather than a surprise.
+//!
+//! Scale knobs: FASTBN_APPROX_SAMPLES (comma list, default
+//! 10000,40000,100000) and FASTBN_APPROX_THREADS (comma list, default
+//! 1,2,4).
+
+use std::sync::Arc;
+
+use fastbn::bench::{print_table, Bench};
+use fastbn::bn::network::Network;
+use fastbn::bn::{embedded, netgen};
+use fastbn::engine::approx::ApproxEngine;
+use fastbn::engine::{Engine, EngineConfig, EngineKind};
+use fastbn::jt::evidence::Evidence;
+use fastbn::jt::state::TreeState;
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+
+fn env_list(name: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(name)
+        .ok()
+        .map(|v| v.split(',').filter_map(|t| t.trim().parse().ok()).collect::<Vec<usize>>())
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+struct SweepPoint {
+    samples: usize,
+    threads: usize,
+    mean_ms: f64,
+    max_abs_err: f64,
+    ci95: f64,
+    ess: f64,
+}
+
+struct NetReport {
+    net: String,
+    exact_ms: f64,
+    points: Vec<SweepPoint>,
+}
+
+fn bench_net(net: Network, sample_counts: &[usize], threads: &[usize], runner: &Bench) -> NetReport {
+    let net = Arc::new(net);
+    let ev = Evidence::none();
+
+    // exact baseline: the hybrid engine's posterior is the ground truth
+    // the sweep's max|Δ| column is measured against
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let cfg1 = EngineConfig::default().with_threads(1);
+    let mut exact_engine = EngineKind::Hybrid.build(Arc::clone(&jt), &cfg1);
+    let mut exact_state = TreeState::fresh(&jt);
+    let exact = exact_engine.infer(&mut exact_state, &ev).unwrap();
+    let exact_ms = runner
+        .run(|| {
+            let _ = exact_engine.infer(&mut exact_state, &ev).unwrap();
+        })
+        .mean_ms();
+
+    let mut points = Vec::new();
+    let mut rows = Vec::new();
+    for &n in sample_counts {
+        for &t in threads {
+            let acfg = EngineConfig::default().with_threads(t).with_samples(n);
+            let mut engine = ApproxEngine::from_net(Arc::clone(&net), &acfg);
+            let mut state = TreeState::detached();
+            let post = engine.infer(&mut state, &ev).unwrap();
+            let stat = runner.run(|| {
+                let _ = engine.infer(&mut state, &ev).unwrap();
+            });
+            let info = post.approx.as_ref().expect("approximate posteriors carry their info");
+            let mut err = 0.0f64;
+            for v in 0..net.n() {
+                for s in 0..net.card(v) {
+                    err = err.max((post.probs[v][s] - exact.probs[v][s]).abs());
+                }
+            }
+            rows.push(vec![
+                format!("{n}"),
+                format!("{t}"),
+                format!("{:.3}", stat.mean_ms()),
+                format!("{err:.5}"),
+                format!("{:.5}", info.max_half_width()),
+                format!("{:.0}", info.effective_samples),
+            ]);
+            points.push(SweepPoint {
+                samples: n,
+                threads: t,
+                mean_ms: stat.mean_ms(),
+                max_abs_err: err,
+                ci95: info.max_half_width(),
+                ess: info.effective_samples,
+            });
+        }
+    }
+    rows.push(vec!["exact".into(), "1".into(), format!("{exact_ms:.3}"), "0.00000".into(), "-".into(), "-".into()]);
+    print_table(
+        &format!("likelihood weighting vs exact — {} ({} vars)", net.name, net.n()),
+        &["samples", "threads", "mean_ms", "max|err|", "ci95", "ess"],
+        &rows,
+    );
+    NetReport { net: net.name.clone(), exact_ms, points }
+}
+
+/// Render the perf-trajectory artifact. The schema is a contract: the CI
+/// job diffs this shape against the committed `BENCH_approx.json`, so
+/// additions must keep every existing key.
+fn render_json(reports: &[NetReport]) -> String {
+    let mut out = String::from("{\n  \"bench\": \"approx\",\n  \"schema_version\": 1,\n  \"nets\": [\n");
+    for (i, r) in reports.iter().enumerate() {
+        out.push_str(&format!("    {{\"net\": \"{}\", \"exact_ms\": {:.4}, \"sweep\": [\n", r.net, r.exact_ms));
+        for (j, p) in r.points.iter().enumerate() {
+            out.push_str(&format!(
+                "      {{\"samples\": {}, \"threads\": {}, \"mean_ms\": {:.4}, \"max_abs_err\": {:.6}, \"ci95\": {:.6}, \"ess\": {:.0}}}{}\n",
+                p.samples,
+                p.threads,
+                p.mean_ms,
+                p.max_abs_err,
+                p.ci95,
+                p.ess,
+                if j + 1 < r.points.len() { "," } else { "" }
+            ));
+        }
+        out.push_str(&format!("    ]}}{}\n", if i + 1 < reports.len() { "," } else { "" }));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let sample_counts = env_list("FASTBN_APPROX_SAMPLES", &[10_000, 40_000, 100_000]);
+    let threads = env_list("FASTBN_APPROX_THREADS", &[1, 2, 4]);
+    let runner = Bench::default();
+
+    let reports = vec![
+        bench_net(embedded::asia(), &sample_counts, &threads, &runner),
+        bench_net(netgen::paper_net("hailfinder-sim").unwrap(), &sample_counts, &threads, &runner),
+    ];
+
+    if let Ok(path) = std::env::var("FASTBN_BENCH_JSON") {
+        std::fs::write(&path, render_json(&reports)).expect("write bench JSON");
+        println!("\nwrote {path}");
+    }
+}

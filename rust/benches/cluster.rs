@@ -30,6 +30,7 @@ fn harness(n_backends: usize) -> ClusterHarness {
         engine_cfg: EngineConfig::default().with_threads(2),
         shards: 2,
         registry_capacity: NETS.len(),
+        max_exact_cost: f64::INFINITY,
     };
     let harness = ClusterHarness::start(n_backends, backend_cfg, ClusterConfig::default()).unwrap();
     let mut client = harness.client().unwrap();

@@ -53,6 +53,7 @@ fn build_fleet(nets: &[&str], shards: usize) -> (Arc<Fleet>, Vec<Vec<Evidence>>)
         engine_cfg: EngineConfig::default().with_threads(2),
         shards,
         registry_capacity: nets.len().max(1),
+        max_exact_cost: f64::INFINITY,
     }));
     let mut cases = Vec::new();
     for (i, name) in nets.iter().enumerate() {

@@ -41,6 +41,10 @@ pub fn resolve_spec(spec: &str) -> crate::Result<Network> {
     if let Some(net) = netgen::paper_net(spec) {
         return Ok(net);
     }
+    if spec == "intractable-sim" {
+        // the approximate-tier fixture: cheap to sample, hopeless to compile
+        return Ok(netgen::intractable_spec().generate());
+    }
     let path = std::path::Path::new(spec);
     if path.exists() {
         // dispatch on extension: .net = Hugin, everything else = BIF
@@ -62,6 +66,7 @@ mod tests {
     fn resolve_spec_covers_embedded_paper_and_missing() {
         assert_eq!(super::resolve_spec("asia").unwrap().name, "asia");
         assert!(super::resolve_spec("hailfinder-sim").is_ok());
+        assert_eq!(super::resolve_spec("intractable-sim").unwrap().name, "intractable-sim");
         assert!(super::resolve_spec("no-such-net").is_err());
     }
 

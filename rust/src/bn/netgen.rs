@@ -201,6 +201,28 @@ pub fn paper_names() -> Vec<String> {
     paper_suite().into_iter().map(|s| s.name).collect()
 }
 
+/// A deliberately **intractable** network (`intractable-sim`): binary
+/// variables with a full parent window and dense arcs, so every family
+/// table stays tiny (≤ `max_table` entries — forward sampling is cheap)
+/// while the moralized graph's treewidth explodes and the junction-tree
+/// state space blows past anything compilable. This is the fixture the
+/// approximate-tier fallback tests and `make approx-smoke` load: exact
+/// compile would allocate gigabytes, cost estimation + likelihood
+/// weighting serve it in milliseconds.
+pub fn intractable_spec() -> NetSpec {
+    NetSpec {
+        name: "intractable-sim".into(),
+        nodes: 48,
+        arcs: 288,
+        max_parents: 8,
+        card_choices: vec![(2, 1.0)],
+        locality: 48,
+        max_table: 1 << 9,
+        alpha: 1.0,
+        seed: 0xDE45E,
+    }
+}
+
 /// A small random network for property tests: `nodes` ≤ ~10, random arcs,
 /// cards 2–3 — small enough for brute-force enumeration.
 pub fn tiny_random(seed: u64, nodes: usize) -> Network {
@@ -300,6 +322,22 @@ mod tests {
             let fam: usize = net.parents(v).iter().map(|&p| net.card(p)).product::<usize>() * net.card(v);
             assert!(fam <= cap, "family of {v} has {fam} entries");
         }
+    }
+
+    #[test]
+    fn intractable_spec_is_cheap_to_sample_but_expensive_to_compile() {
+        let net = intractable_spec().generate();
+        net.validate().unwrap();
+        assert_eq!(net.name, "intractable-sim");
+        // every family table is small: forward sampling stays cheap
+        for v in 0..net.n() {
+            let fam: usize = net.parents(v).iter().map(|&p| net.card(p)).product::<usize>() * net.card(v);
+            assert!(fam <= 1 << 9, "family of {v} has {fam} entries");
+        }
+        // …but the junction-tree state space is astronomically large
+        let cost =
+            crate::jt::tree::estimate_cost(&net, crate::jt::triangulate::TriangulationHeuristic::MinFill);
+        assert!(cost > 1e9, "estimated cost {cost} is not intractable");
     }
 
     #[test]

@@ -28,6 +28,42 @@ fn draw_row(
     }
 }
 
+/// One likelihood-weighting pass: walk `order` like [`forward_sample`],
+/// but **clamp** every variable with an observation in `obs` (dense,
+/// indexed by variable id) to its observed state and multiply the
+/// returned weight by the CPT probability of that state given the drawn
+/// parents. Unobserved variables are sampled exactly as in `draw_row`.
+/// Returns the sample's importance weight `P(e_clamped | parents)`; a
+/// zero weight short-circuits the walk (the sample contributes nothing).
+pub fn draw_weighted_row(
+    net: &Network,
+    order: &[usize],
+    cards: &[usize],
+    obs: &[Option<usize>],
+    rng: &mut Rng,
+    assignment: &mut [usize],
+    config: &mut Vec<usize>,
+) -> f64 {
+    let mut weight = 1.0f64;
+    for &v in order {
+        let cpt = &net.cpts[v];
+        config.clear();
+        config.extend(cpt.parents.iter().map(|&p| assignment[p]));
+        let row = cpt.row(config, cards);
+        match obs[v] {
+            Some(s) => {
+                assignment[v] = s;
+                weight *= row[s];
+                if weight == 0.0 {
+                    return 0.0;
+                }
+            }
+            None => assignment[v] = rng.categorical(row),
+        }
+    }
+    weight
+}
+
 /// Draw one complete assignment (state index per variable) via ancestral
 /// sampling in topological order.
 pub fn forward_sample(net: &Network, rng: &mut Rng) -> Vec<usize> {
@@ -118,6 +154,43 @@ mod tests {
         }
         // and the generators are left in identical states
         assert_eq!(rng_rows.next_u64(), rng_cols.next_u64());
+    }
+
+    #[test]
+    fn weighted_row_without_observations_matches_forward_sample() {
+        let net = embedded::asia();
+        let order = net.topo_order().unwrap();
+        let cards = net.cards();
+        let obs = vec![None; net.n()];
+        let mut rng_a = Rng::new(5);
+        let mut rng_b = Rng::new(5);
+        let mut row = vec![usize::MAX; net.n()];
+        let mut config = Vec::new();
+        for _ in 0..32 {
+            let w = draw_weighted_row(&net, &order, &cards, &obs, &mut rng_b, &mut row, &mut config);
+            assert_eq!(w, 1.0);
+            assert_eq!(row, forward_sample(&net, &mut rng_a));
+        }
+    }
+
+    #[test]
+    fn weighted_row_clamps_observations_and_weights_them() {
+        // clamp the root "smoke": the weight is exactly P(smoke=yes) = 0.5
+        // on every draw, and the assignment always carries the clamp
+        let net = embedded::asia();
+        let order = net.topo_order().unwrap();
+        let cards = net.cards();
+        let smoke = net.var_id("smoke").unwrap();
+        let mut obs = vec![None; net.n()];
+        obs[smoke] = Some(0);
+        let mut rng = Rng::new(9);
+        let mut row = vec![usize::MAX; net.n()];
+        let mut config = Vec::new();
+        for _ in 0..32 {
+            let w = draw_weighted_row(&net, &order, &cards, &obs, &mut rng, &mut row, &mut config);
+            assert!((w - 0.5).abs() < 1e-12, "weight {w}");
+            assert_eq!(row[smoke], 0);
+        }
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //!                  [--save-data d.csv] | --data d.csv [--name NAME] [--out net.bif]
 //! fastbn serve     --net <spec> [--bind 127.0.0.1:7979] [--engine hybrid] [--threads N]
 //! fastbn serve     --nets a,b,c [--shards N] [--registry-cap K] [--batch B] [--bind ...] [--smoke] [--batch-smoke]
+//!                  [--max-exact-cost C] [--samples N] [--approx-smoke]
 //! fastbn cluster   --backends N [--nets a,b,c] [--shards S] [--replicas V] [--bind ...] [--smoke]
+//!                  [--max-exact-cost C] [--samples N]
 //! fastbn simulate  --net <spec> [--threads 1,2,4,8,16,32]
 //! fastbn selftest
 //! ```
@@ -29,8 +31,9 @@ use crate::bn::{bif, embedded, netgen};
 use crate::cluster::{Cluster, ClusterConfig, ClusterServer};
 use crate::coordinator::server::Server;
 use crate::coordinator::{BatchConfig, BatchRunner};
+use crate::engine::approx::ApproxEngine;
 use crate::engine::simulate::{best_over_threads, simulate_seconds, CostModel};
-use crate::engine::{EngineConfig, EngineKind};
+use crate::engine::{Engine, EngineConfig, EngineKind};
 use crate::fleet::{Fleet, FleetConfig, FleetServer};
 use crate::infer::cases::{generate, CaseSpec};
 use crate::jt::evidence::Evidence;
@@ -53,7 +56,7 @@ pub struct Args {
 
 /// Flags that are boolean switches: present or absent, never taking a
 /// value. Everything else must be followed by one.
-const SWITCHES: &[&str] = &["smoke", "fleet", "parent-watch", "batch-smoke", "learn-smoke"];
+const SWITCHES: &[&str] = &["smoke", "fleet", "parent-watch", "batch-smoke", "learn-smoke", "approx-smoke"];
 
 impl Args {
     /// Parse from raw argv (after the subcommand).
@@ -112,10 +115,14 @@ impl Args {
 }
 
 fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let d = EngineConfig::default();
     Ok(EngineConfig {
         threads: args.parse_or("threads", 0usize)?,
         batch: args.parse_or("batch", 1usize)?.max(1),
-        ..Default::default()
+        samples: args.parse_or("samples", d.samples)?,
+        target_half_width: args.parse_or("target-half-width", d.target_half_width)?,
+        seed: args.parse_or("seed", d.seed)?,
+        ..d
     })
 }
 
@@ -191,21 +198,28 @@ COMMANDS:
   serve     --nets A,B,C             multi-network serving fleet (--shards N,
                                      --registry-cap K, --batch B lanes/shard
                                      with --engine batched, --smoke and
-                                     --batch-smoke and --learn-smoke self-
-                                     checks); verbs: LOAD LEARN USE NETS
-                                     OBSERVE RETRACT COMMIT QUERY BATCH CASE
-                                     STATS PING EVICT QUIT
+                                     --batch-smoke / --learn-smoke /
+                                     --approx-smoke self-checks;
+                                     --max-exact-cost C serves networks whose
+                                     estimated junction-tree cost exceeds C
+                                     from the approximate tier, --samples
+                                     per approx query); verbs: LOAD LEARN USE
+                                     NETS OBSERVE RETRACT COMMIT QUERY BATCH
+                                     CASE STATS PING EVICT QUIT
   cluster   --backends N             cross-process cluster tier: N fleet backend
                                      child processes + a consistent-hash front
                                      router (--nets preload, --shards, --replicas
-                                     ring points, --smoke scripted session);
-                                     adds verbs: PING TOPO
+                                     ring points, --smoke scripted session;
+                                     --max-exact-cost / --samples forwarded to
+                                     every backend); adds verbs: PING TOPO
   simulate  --net S                  modeled parallel times across --threads list
   selftest                           engine-agreement smoke check
   help                               this text
 
 ENGINES: unb | seq | direct | primitive | element | hybrid (default)
          batched (case-major multi-case sweeps; lanes set by --batch B)
+         approx (parallel likelihood weighting — no junction tree; --samples N,
+         --target-half-width W, --seed S; posteriors report 95% CI half-widths)
 ";
 
 fn cmd_nets() -> Result<()> {
@@ -240,14 +254,19 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_query(args: &Args) -> Result<()> {
-    let net = resolve_net(args.require("net")?)?;
+    let net = Arc::new(resolve_net(args.require("net")?)?);
     let target = args.require("target")?;
     let engine_kind: EngineKind = args.get("engine").unwrap_or("hybrid").parse()?;
     let cfg = engine_config(args)?;
     let ev = parse_evidence(&net, args.get("evidence"))?;
-    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
-    let mut engine = engine_kind.build(Arc::clone(&jt), &cfg);
-    let mut state = TreeState::fresh(&jt);
+    // `--engine approx` samples the network directly — no junction tree is
+    // ever compiled, so this path serves networks exact compilation can't
+    let (mut engine, mut state): (Box<dyn Engine>, TreeState) = if engine_kind == EngineKind::Approx {
+        (Box::new(ApproxEngine::from_net(Arc::clone(&net), &cfg)), TreeState::detached())
+    } else {
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
+        (engine_kind.build(Arc::clone(&jt), &cfg), TreeState::fresh(&jt))
+    };
     let t0 = std::time::Instant::now();
     let post = engine.infer(&mut state, &ev)?;
     let elapsed = t0.elapsed();
@@ -257,6 +276,14 @@ fn cmd_query(args: &Args) -> Result<()> {
         println!("  {s:<16} {p:.6}");
     }
     println!("ln P(e) = {:.6}", post.log_z);
+    if let Some(info) = &post.approx {
+        println!(
+            "approx: samples={} ess={:.0} max 95% half-width={:.6}",
+            info.n_samples,
+            info.effective_samples,
+            info.max_half_width()
+        );
+    }
     Ok(())
 }
 
@@ -474,14 +501,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             engine_cfg: cfg,
             shards: args.parse_or("shards", 2usize)?,
             registry_capacity: args.parse_or("registry-cap", 8usize)?.max(specs.len()),
+            max_exact_cost: args.parse_or("max-exact-cost", f64::INFINITY)?,
         };
         let shards = fleet_cfg.shards;
         let fleet = Arc::new(Fleet::new(fleet_cfg));
         for spec in &specs {
             let e = fleet.load(spec)?;
             println!(
-                "loaded {:<16} {} cliques, {} entries, compiled in {:?}",
-                e.name, e.cliques, e.entries, e.compile_time
+                "loaded {:<16} {} cliques, {} entries, compiled in {:?}, tier {}",
+                e.name, e.cliques, e.entries, e.compile_time, e.tier
             );
         }
         let server = FleetServer::start(Arc::clone(&fleet), bind)?;
@@ -509,6 +537,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // scripted sample→learn→serve→QUERY round trip over a live
             // socket, learned twice to assert determinism (make learn-smoke)
             return learn_smoke(&server);
+        }
+        if args.has("approx-smoke") {
+            // scripted cost-fallback self-check over a live socket: an
+            // intractable LOAD answers from the approximate tier with CI
+            // half-widths, a tractable one stays exact (make approx-smoke)
+            return approx_smoke(&server);
         }
         // serve until killed
         loop {
@@ -669,6 +703,57 @@ fn learn_smoke(server: &FleetServer) -> Result<()> {
     Ok(())
 }
 
+/// Drive the cost-based engine fallback through a live fleet socket: an
+/// intractable network must be served by the approximate tier (the reply
+/// carrying its tier and CI half-width), while a tractable one keeps the
+/// exact tier — the `make approx-smoke` assertion path.
+fn approx_smoke(server: &FleetServer) -> Result<()> {
+    if !server.fleet().config().max_exact_cost.is_finite() {
+        return Err(Error::msg("--approx-smoke needs a finite --max-exact-cost so the fallback can trigger"));
+    }
+    let hard = resolve_net("intractable-sim")?;
+    let target = &hard.vars[hard.n() - 1].name;
+
+    let mut client = SmokeClient::connect("approx-smoke", server.addr())?;
+    let loaded = client.expect("LOAD intractable-sim", "OK loaded intractable-sim")?;
+    if !loaded.contains("tier=approx") || !loaded.contains("cost=") {
+        return Err(Error::msg(format!(
+            "approx-smoke failed: LOAD reply {loaded:?} did not fall back (wanted tier=approx cost=…)"
+        )));
+    }
+    client.expect("LOAD asia", "OK loaded asia")?;
+    client.expect("USE intractable-sim", "OK using intractable-sim")?;
+    let reply = client.expect(&format!("QUERY {target}"), "OK ")?;
+    if !reply.contains(" tier=approx ci95=") || !reply.contains(" ess=") {
+        return Err(Error::msg(format!(
+            "approx-smoke failed: approx QUERY reply {reply:?} lacks tier=approx ci95=…/ess=…"
+        )));
+    }
+    // determinism over the wire: the same query answers byte-identically
+    let again = client.expect(&format!("QUERY {target}"), "OK ")?;
+    if again != reply {
+        return Err(Error::msg(format!(
+            "approx-smoke failed: repeated approx QUERY was not deterministic ({reply:?} vs {again:?})"
+        )));
+    }
+    client.expect("USE asia", "OK using asia")?;
+    let exact = client.expect("QUERY dysp | smoke=yes", "OK ")?;
+    if exact.contains("tier=approx") {
+        return Err(Error::msg(format!("approx-smoke failed: tractable net answered approx: {exact:?}")));
+    }
+    let nets = client.expect("NETS", "OK nets=")?;
+    if !nets.contains("tier=approx") || !nets.contains("tier=exact") {
+        return Err(Error::msg(format!("approx-smoke failed: NETS reply {nets:?} lacks both tiers")));
+    }
+    let stats = client.expect("STATS", "STATS ")?;
+    if !stats.contains("tier=approx") {
+        return Err(Error::msg(format!("approx-smoke failed: STATS reply {stats:?} lacks tier=approx")));
+    }
+    client.quit()?;
+    println!("approx-smoke passed (intractable-sim → approx tier with ci95, asia → exact tier)");
+    Ok(())
+}
+
 /// Drive a scripted line-protocol session against `addr`, checking each
 /// reply's prefix and (optionally) a required substring — the assertion
 /// loop shared by the serve and cluster smokes.
@@ -764,6 +849,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let shards = args.parse_or("shards", 2usize)?.to_string();
     let threads = args.parse_or("threads", 0usize)?.to_string();
     let registry_cap = args.parse_or("registry-cap", 8usize)?.to_string();
+    // forwarded so every backend applies the same exact-vs-approx policy
+    // (`f64` round-trips "inf" through Display/FromStr)
+    let max_exact_cost = args.parse_or("max-exact-cost", f64::INFINITY)?.to_string();
+    let samples = args.parse_or("samples", EngineConfig::default().samples)?.to_string();
     let mut children = ChildGuard::default();
     let mut addrs = Vec::new();
     for i in 0..n_backends {
@@ -773,6 +862,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             .args(["--shards", &shards])
             .args(["--threads", &threads])
             .args(["--registry-cap", &registry_cap])
+            .args(["--max-exact-cost", &max_exact_cost])
+            .args(["--samples", &samples])
             .stdin(std::process::Stdio::piped())
             .stdout(std::process::Stdio::piped())
             .stderr(std::process::Stdio::inherit());
@@ -1082,6 +1173,44 @@ mod tests {
         assert_ne!(run(vec!["learn".into()]), 0); // no --net and no --data
         let argv: Vec<String> =
             ["learn", "--net", "no-such-net", "--samples", "10"].iter().map(|s| s.to_string()).collect();
+        assert_ne!(run(argv), 0);
+    }
+
+    #[test]
+    fn query_command_runs_with_the_approx_engine() {
+        let argv: Vec<String> = [
+            "query", "--net", "asia", "--target", "lung", "--evidence", "smoke=yes", "--engine", "approx",
+            "--samples", "5000", "--threads", "2", "--seed", "7",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(argv), 0);
+    }
+
+    #[test]
+    fn approx_smoke_drives_the_fallback_through_a_socket() {
+        let argv: Vec<String> = [
+            "serve", "--fleet", "--shards", "1", "--engine", "seq", "--threads", "2", "--samples", "20000",
+            "--max-exact-cost", "1e6", "--bind", "127.0.0.1:0", "--approx-smoke",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(argv), 0);
+    }
+
+    #[test]
+    fn approx_smoke_requires_a_finite_cost_threshold() {
+        // without --max-exact-cost the fallback can never trigger — the
+        // smoke must refuse to run rather than compile intractable-sim
+        let argv: Vec<String> = [
+            "serve", "--fleet", "--shards", "1", "--engine", "seq", "--threads", "1",
+            "--bind", "127.0.0.1:0", "--approx-smoke",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
         assert_ne!(run(argv), 0);
     }
 

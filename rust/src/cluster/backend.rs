@@ -82,6 +82,7 @@ mod tests {
             engine_cfg: EngineConfig::default().with_threads(1),
             shards: 1,
             registry_capacity: 4,
+            max_exact_cost: f64::INFINITY,
         }));
         FleetServer::start(fleet, "127.0.0.1:0").unwrap()
     }

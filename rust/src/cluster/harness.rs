@@ -182,6 +182,7 @@ mod tests {
                 engine_cfg: EngineConfig::default().with_threads(1),
                 shards: 1,
                 registry_capacity: 8,
+                max_exact_cost: f64::INFINITY,
             },
             ClusterConfig {
                 connect_timeout: Duration::from_millis(500),

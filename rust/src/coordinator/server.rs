@@ -261,11 +261,18 @@ pub(crate) fn parse_query_args(rest: &str) -> std::result::Result<(&str, Vec<(&s
 }
 
 /// The `OK <state>=<prob> … logZ=…` reply line both protocols share —
-/// one place owns the wire precision.
+/// one place owns the wire precision. Approximate-tier posteriors append
+/// their accuracy contract: `tier=approx ci95=<worst half-width>
+/// ess=<effective samples>` — clients can tell *which tier answered* and
+/// how tight the estimate is from the reply alone.
 pub(crate) fn format_ok_posterior(net: &crate::bn::network::Network, v: usize, post: &crate::infer::query::Posteriors) -> String {
     let var = &net.vars[v];
     let entries: Vec<String> = var.states.iter().zip(&post.probs[v]).map(|(s, p)| format!("{s}={p:.6}")).collect();
-    format!("OK {} logZ={:.6}", entries.join(" "), post.log_z)
+    let mut line = format!("OK {} logZ={:.6}", entries.join(" "), post.log_z);
+    if let Some(info) = &post.approx {
+        line.push_str(&format!(" tier=approx ci95={:.6} ess={:.0}", info.max_half_width(), info.effective_samples));
+    }
+    line
 }
 
 fn respond(

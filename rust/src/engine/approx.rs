@@ -1,0 +1,356 @@
+//! The approximate tier: pool-parallel likelihood weighting.
+//!
+//! Every other engine in this module is exact junction-tree propagation,
+//! so treewidth is a hard ceiling — one dense network can mint a clique
+//! table that exhausts memory before the first query runs.
+//! [`ApproxEngine`] removes that ceiling: it samples the network forward
+//! ([`crate::bn::sample::draw_weighted_row`]) with observed variables
+//! clamped and importance-weighted, needing only the CPTs — the
+//! junction tree is never compiled.
+//!
+//! ## Determinism contract
+//!
+//! Samples are drawn in fixed-size chunks ([`CHUNK`] samples each, a
+//! constant independent of the thread count). Chunk `i` runs on its own
+//! RNG sub-stream derived by mixing the configured seed with `i` through
+//! SplitMix64, and each chunk's accumulators land in a dedicated slot.
+//! After the parallel region the slots are merged **sequentially in
+//! chunk-index order**, so the floating-point addition order — and
+//! therefore every output bit — is identical at any thread count. This is
+//! the same per-worker-sub-stream discipline the PC-stable learner uses.
+//!
+//! ## Accuracy contract
+//!
+//! Returned [`Posteriors`] carry [`ApproxInfo`]: the sample count and the
+//! effective sample size `(Σw)²/Σw²`, from which a 95% CI half-width is
+//! reported for every probability. `EngineConfig::samples` sets the base
+//! sample count; `EngineConfig::target_half_width`, when positive, keeps
+//! adding deterministic chunk rounds (up to [`BUDGET_ROUNDS`] × the base
+//! count) until the worst-case half-width drops below the target.
+
+use std::sync::{Arc, Mutex};
+
+use crate::bn::network::Network;
+use crate::bn::sample::draw_weighted_row;
+use crate::engine::pool::Pool;
+use crate::engine::{Engine, EngineConfig};
+use crate::infer::query::{ApproxInfo, Posteriors};
+use crate::jt::evidence::Evidence;
+use crate::jt::schedule::Schedule;
+use crate::jt::state::TreeState;
+use crate::jt::tree::JunctionTree;
+use crate::rng::{splitmix64, Rng};
+use crate::{Error, Result};
+
+/// Samples per chunk — fixed so the chunk decomposition (and with it the
+/// summation order) never depends on the thread count.
+pub const CHUNK: usize = 1 << 12;
+
+/// Hard budget when chasing `target_half_width`: at most this many times
+/// the configured base sample count is ever drawn for one case.
+pub const BUDGET_ROUNDS: usize = 32;
+
+/// Per-chunk accumulator: flat per-state weighted counts plus the weight
+/// moments the ESS needs.
+struct ChunkAcc {
+    acc: Vec<f64>,
+    w_sum: f64,
+    w_sq: f64,
+}
+
+/// Likelihood-weighting engine over [`Pool`]. See the module docs for the
+/// determinism and accuracy contracts.
+pub struct ApproxEngine {
+    net: Arc<Network>,
+    /// Kept only when the engine was built from an already-compiled tree
+    /// (`EngineKind::Approx.build`); the fallback path has none.
+    jt: Option<Arc<JunctionTree>>,
+    pool: Pool,
+    samples: usize,
+    target_half_width: f64,
+    seed: u64,
+    order: Vec<usize>,
+    cards: Vec<usize>,
+    /// Flat offset of variable `v`'s states in a chunk accumulator.
+    offsets: Vec<usize>,
+    /// Total states = Σ cards.
+    total_states: usize,
+}
+
+impl ApproxEngine {
+    /// Build from a network alone — the cost-based fallback path: no
+    /// junction tree is ever compiled.
+    pub fn from_net(net: Arc<Network>, cfg: &EngineConfig) -> Self {
+        let order = net.topo_order().expect("validated networks are acyclic");
+        let cards = net.cards();
+        let mut offsets = Vec::with_capacity(cards.len());
+        let mut total_states = 0usize;
+        for &c in &cards {
+            offsets.push(total_states);
+            total_states += c;
+        }
+        ApproxEngine {
+            jt: None,
+            pool: Pool::new(cfg.resolved_threads()),
+            samples: cfg.samples.max(1),
+            target_half_width: cfg.target_half_width,
+            seed: cfg.seed,
+            order,
+            cards,
+            offsets,
+            total_states,
+            net,
+        }
+    }
+
+    /// Build from a compiled tree (`EngineKind::Approx` through the
+    /// selector) — sampling still only reads the CPTs, but the tree is
+    /// retained so [`Engine::tree`] can report it.
+    pub fn from_tree(jt: Arc<JunctionTree>, cfg: &EngineConfig) -> Self {
+        let mut engine = Self::from_net(Arc::new(jt.net.clone()), cfg);
+        engine.jt = Some(jt);
+        engine
+    }
+
+    /// The network being sampled.
+    pub fn net(&self) -> &Arc<Network> {
+        &self.net
+    }
+
+    /// One deterministic chunk: `n` weighted samples on chunk `index`'s
+    /// private sub-stream.
+    fn run_chunk(&self, index: u64, n: usize, obs: &[Option<usize>], ev: &Evidence) -> ChunkAcc {
+        let mut mix = self.seed ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(splitmix64(&mut mix));
+        let mut acc = ChunkAcc { acc: vec![0.0; self.total_states], w_sum: 0.0, w_sq: 0.0 };
+        let mut assignment = vec![0usize; self.net.n()];
+        let mut config = Vec::new();
+        for _ in 0..n {
+            let mut weight =
+                draw_weighted_row(&self.net, &self.order, &self.cards, obs, &mut rng, &mut assignment, &mut config);
+            if weight == 0.0 {
+                continue;
+            }
+            for (v, lik) in &ev.soft {
+                weight *= lik[assignment[*v]];
+            }
+            if weight > 0.0 {
+                acc.w_sum += weight;
+                acc.w_sq += weight * weight;
+                for (v, &s) in assignment.iter().enumerate() {
+                    acc.acc[self.offsets[v] + s] += weight;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Run one round of `n_chunks` chunks starting at `first_chunk` in
+    /// parallel and fold them into `total` in chunk-index order.
+    fn run_round(&self, first_chunk: u64, n_chunks: usize, obs: &[Option<usize>], ev: &Evidence, total: &mut ChunkAcc) {
+        let slots: Vec<Mutex<Option<ChunkAcc>>> = (0..n_chunks).map(|_| Mutex::new(None)).collect();
+        self.pool.parallel(n_chunks, &|_w, t| {
+            let acc = self.run_chunk(first_chunk + t as u64, CHUNK, obs, ev);
+            *slots[t].lock().unwrap() = Some(acc);
+        });
+        // sequential merge in chunk order: the addition order is fixed, so
+        // the result is bit-identical at any thread count
+        for slot in slots {
+            let acc = slot.into_inner().unwrap().expect("every chunk ran");
+            total.w_sum += acc.w_sum;
+            total.w_sq += acc.w_sq;
+            for (t, x) in total.acc.iter_mut().zip(&acc.acc) {
+                *t += x;
+            }
+        }
+    }
+}
+
+impl Engine for ApproxEngine {
+    fn name(&self) -> &'static str {
+        "Approx-LW"
+    }
+
+    fn infer(&mut self, _state: &mut TreeState, ev: &Evidence) -> Result<Posteriors> {
+        // dense observation vector: draw_weighted_row clamps these
+        let mut obs: Vec<Option<usize>> = vec![None; self.net.n()];
+        for &(v, s) in &ev.obs {
+            if v >= self.net.n() || s >= self.cards[v] {
+                return Err(Error::UnknownVariable(format!("evidence variable {v} out of range")));
+            }
+            obs[v] = Some(s);
+        }
+        for (v, lik) in &ev.soft {
+            if *v >= self.net.n() || lik.len() != self.cards[*v] {
+                return Err(Error::UnknownVariable(format!("soft evidence variable {v} out of range")));
+            }
+        }
+
+        let n_chunks = self.samples.div_ceil(CHUNK);
+        let mut total = ChunkAcc { acc: vec![0.0; self.total_states], w_sum: 0.0, w_sq: 0.0 };
+        let mut drawn = 0usize;
+        let mut next_chunk = 0u64;
+        let budget = self.samples.saturating_mul(BUDGET_ROUNDS);
+        loop {
+            self.run_round(next_chunk, n_chunks, &obs, ev, &mut total);
+            next_chunk += n_chunks as u64;
+            drawn += n_chunks * CHUNK;
+            if self.target_half_width <= 0.0 || drawn >= budget {
+                break;
+            }
+            let ess = if total.w_sq > 0.0 { total.w_sum * total.w_sum / total.w_sq } else { 0.0 };
+            let info = ApproxInfo { n_samples: drawn, effective_samples: ess };
+            if ess > 0.0 && info.max_half_width() <= self.target_half_width {
+                break;
+            }
+        }
+
+        if total.w_sum <= 0.0 {
+            return Err(Error::InconsistentEvidence);
+        }
+        let mut probs = Vec::with_capacity(self.net.n());
+        for (v, &card) in self.cards.iter().enumerate() {
+            let off = self.offsets[v];
+            probs.push(total.acc[off..off + card].iter().map(|&x| x / total.w_sum).collect());
+        }
+        Ok(Posteriors {
+            probs,
+            log_z: (total.w_sum / drawn as f64).ln(),
+            approx: Some(ApproxInfo {
+                n_samples: drawn,
+                effective_samples: total.w_sum * total.w_sum / total.w_sq,
+            }),
+        })
+    }
+
+    fn schedule(&self) -> Option<&Schedule> {
+        None
+    }
+
+    fn tree(&self) -> Option<&Arc<JunctionTree>> {
+        self.jt.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bn::{embedded, netgen};
+    use crate::engine::EngineKind;
+    use crate::jt::triangulate::TriangulationHeuristic;
+
+    fn approx(net: &Network, threads: usize, samples: usize) -> ApproxEngine {
+        let cfg = EngineConfig::default().with_threads(threads).with_samples(samples);
+        ApproxEngine::from_net(Arc::new(net.clone()), &cfg)
+    }
+
+    #[test]
+    fn posteriors_are_bit_identical_across_thread_counts() {
+        let net = embedded::asia();
+        let ev = Evidence::from_pairs(&net, &[("dysp", "yes")]).unwrap();
+        let mut state = TreeState::detached();
+        let mut reference: Option<Posteriors> = None;
+        for threads in [1usize, 2, 4, 7] {
+            let mut engine = approx(&net, threads, 20_000);
+            let post = engine.infer(&mut state, &ev).unwrap();
+            match &reference {
+                None => reference = Some(post),
+                Some(r) => {
+                    assert_eq!(r.probs, post.probs, "threads={threads}");
+                    assert_eq!(r.log_z.to_bits(), post.log_z.to_bits(), "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_exact_within_reported_half_width() {
+        let net = embedded::asia();
+        let ev = Evidence::from_pairs(&net, &[("dysp", "yes")]).unwrap();
+        let exact = crate::infer::exact::enumerate(&net, &ev).unwrap();
+        let mut engine = approx(&net, 4, 100_000);
+        let post = engine.infer(&mut TreeState::detached(), &ev).unwrap();
+        let info = post.approx.as_ref().expect("approximate posteriors carry ApproxInfo");
+        assert!(info.effective_samples > 1_000.0);
+        for v in 0..net.n() {
+            for s in 0..net.card(v) {
+                let (got, want) = (post.probs[v][s], exact.probs[v][s]);
+                // 3× the 95% half-width: a deterministic bound a correct
+                // sampler effectively never exceeds
+                assert!(
+                    (got - want).abs() <= 3.0 * info.half_width(want).max(1e-3),
+                    "v{v}s{s}: {got} vs {want} (hw {})",
+                    info.half_width(want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn soft_evidence_shifts_the_posterior() {
+        let net = embedded::asia();
+        let smoke = net.var_id("smoke").unwrap();
+        let ev = Evidence::none().with_soft(smoke, vec![4.0, 1.0]).unwrap();
+        let mut engine = approx(&net, 2, 100_000);
+        let post = engine.infer(&mut TreeState::detached(), &ev).unwrap();
+        assert!((post.probs[smoke][0] - 0.8).abs() < 0.02, "got {}", post.probs[smoke][0]);
+    }
+
+    #[test]
+    fn inconsistent_evidence_is_a_clean_error() {
+        let net = embedded::asia();
+        let ev = Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        let mut engine = approx(&net, 2, 8_192);
+        let got = engine.infer(&mut TreeState::detached(), &ev);
+        assert!(matches!(got, Err(Error::InconsistentEvidence)), "{got:?}");
+    }
+
+    #[test]
+    fn target_half_width_draws_more_samples() {
+        let net = embedded::asia();
+        let ev = Evidence::none();
+        let mut fixed = approx(&net, 2, CHUNK);
+        let base = fixed.infer(&mut TreeState::detached(), &ev).unwrap();
+        let cfg = EngineConfig::default().with_threads(2).with_samples(CHUNK);
+        let mut adaptive = ApproxEngine::from_net(Arc::new(net.clone()), &EngineConfig {
+            target_half_width: 0.002,
+            ..cfg
+        });
+        let post = adaptive.infer(&mut TreeState::detached(), &ev).unwrap();
+        let info = post.approx.as_ref().unwrap();
+        let base_info = base.approx.as_ref().unwrap();
+        assert!(info.n_samples > base_info.n_samples, "{} vs {}", info.n_samples, base_info.n_samples);
+        assert!(info.max_half_width() <= 0.002, "{}", info.max_half_width());
+    }
+
+    #[test]
+    fn builds_through_the_selector_with_a_tree() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cfg = EngineConfig::default().with_threads(2).with_samples(50_000);
+        let mut engine = EngineKind::Approx.build(Arc::clone(&jt), &cfg);
+        assert_eq!(engine.name(), "Approx-LW");
+        assert!(engine.schedule().is_none());
+        assert!(engine.tree().is_some());
+        let ev = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+        let post = engine.infer(&mut TreeState::detached(), &ev).unwrap();
+        assert!((post.marginal(&net, "lung").unwrap()[0] - 0.1).abs() < 0.02);
+        assert!((post.evidence_probability() - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn serves_an_intractable_network() {
+        // the whole point of the tier: a network no exact engine could
+        // compile answers queries with a finite, reported accuracy
+        let net = netgen::intractable_spec().generate();
+        let mut engine = approx(&net, 4, 20_000);
+        let post = engine.infer(&mut TreeState::detached(), &Evidence::none()).unwrap();
+        assert_eq!(post.probs.len(), net.n());
+        for marg in &post.probs {
+            let total: f64 = marg.iter().sum();
+            assert!((total - 1.0).abs() < 1e-9);
+        }
+        let info = post.approx.as_ref().unwrap();
+        assert!(info.effective_samples > 10_000.0, "prior sampling has weight 1: ESS ≈ n");
+    }
+}

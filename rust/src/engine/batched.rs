@@ -427,12 +427,12 @@ impl Engine for BatchedHybridEngine {
         self.infer_cases(cases)
     }
 
-    fn schedule(&self) -> &Schedule {
-        &self.sched
+    fn schedule(&self) -> Option<&Schedule> {
+        Some(&self.sched)
     }
 
-    fn tree(&self) -> &Arc<JunctionTree> {
-        &self.jt
+    fn tree(&self) -> Option<&Arc<JunctionTree>> {
+        Some(&self.jt)
     }
 }
 

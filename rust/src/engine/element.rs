@@ -141,12 +141,12 @@ impl Engine for ElementEngine {
         Posteriors::compute(&self.jt, state)
     }
 
-    fn schedule(&self) -> &Schedule {
-        &self.sched
+    fn schedule(&self) -> Option<&Schedule> {
+        Some(&self.sched)
     }
 
-    fn tree(&self) -> &Arc<JunctionTree> {
-        &self.jt
+    fn tree(&self) -> Option<&Arc<JunctionTree>> {
+        Some(&self.jt)
     }
 }
 

@@ -402,12 +402,12 @@ impl Engine for HybridEngine {
         Posteriors::compute(&self.jt, state)
     }
 
-    fn schedule(&self) -> &Schedule {
-        &self.sched
+    fn schedule(&self) -> Option<&Schedule> {
+        Some(&self.sched)
     }
 
-    fn tree(&self) -> &Arc<JunctionTree> {
-        &self.jt
+    fn tree(&self) -> Option<&Arc<JunctionTree>> {
+        Some(&self.jt)
     }
 }
 

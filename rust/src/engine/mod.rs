@@ -13,6 +13,7 @@
 //! differences isolate the parallelization strategy, mirroring the
 //! paper's comparison.
 
+pub mod approx;
 pub mod batched;
 pub mod direct;
 pub mod element;
@@ -61,11 +62,14 @@ pub trait Engine {
         cases.iter().map(|ev| self.infer(state, ev)).collect()
     }
 
-    /// The traversal schedule in use (for layer-count reporting).
-    fn schedule(&self) -> &Schedule;
+    /// The traversal schedule in use (for layer-count reporting). `None`
+    /// for the sampling tier, which has no message-passing schedule.
+    fn schedule(&self) -> Option<&Schedule>;
 
-    /// The tree this engine runs on.
-    fn tree(&self) -> &Arc<JunctionTree>;
+    /// The compiled tree this engine runs on. `None` for the sampling
+    /// tier when it was built straight from a network (the cost-based
+    /// fallback path never compiles a tree).
+    fn tree(&self) -> Option<&Arc<JunctionTree>>;
 }
 
 /// Engine-construction parameters.
@@ -85,6 +89,17 @@ pub struct EngineConfig {
     /// Cases per sweep (lanes) for the batched engine; other engines
     /// ignore it. 1 = unbatched.
     pub batch: usize,
+    /// Likelihood-weighting samples per case for the approximate engine
+    /// ([`approx::ApproxEngine`]); exact engines ignore it.
+    pub samples: usize,
+    /// Target 95% CI half-width for the approximate engine: when > 0,
+    /// sampling continues past `samples` (in deterministic chunk rounds,
+    /// up to a fixed budget multiple) until the worst-case reported
+    /// half-width drops below this. 0 = fixed sample count.
+    pub target_half_width: f64,
+    /// Base seed for the approximate engine's per-chunk sub-streams.
+    /// The same seed yields bit-identical posteriors at any thread count.
+    pub seed: u64,
 }
 
 impl Default for EngineConfig {
@@ -96,6 +111,9 @@ impl Default for EngineConfig {
             min_chunk: 1 << 11,
             max_chunks: 256,
             batch: 1,
+            samples: 100_000,
+            target_half_width: 0.0,
+            seed: 0x5EED_CAFE,
         }
     }
 }
@@ -121,6 +139,18 @@ impl EngineConfig {
         self.batch = b;
         self
     }
+
+    /// Copy with a specific likelihood-weighting sample count.
+    pub fn with_samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Copy with a specific approximate-engine base seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
 }
 
 /// The engine selector (Table 1 columns).
@@ -142,6 +172,11 @@ pub enum EngineKind {
     /// (an extension beyond the poster — the Fast-PGM throughput
     /// direction; not a Table-1 column, so not in [`EngineKind::ALL`]).
     Batched,
+    /// Pool-parallel likelihood weighting ([`approx::ApproxEngine`]) —
+    /// the approximate tier for networks whose junction-tree cost makes
+    /// exact compilation infeasible. Not a Table-1 column, so not in
+    /// [`EngineKind::ALL`].
+    Approx,
 }
 
 impl EngineKind {
@@ -170,6 +205,7 @@ impl EngineKind {
             EngineKind::Element => Box::new(element::ElementEngine::new(jt, cfg)),
             EngineKind::Hybrid => Box::new(hybrid::HybridEngine::new(jt, cfg)),
             EngineKind::Batched => Box::new(batched::BatchedHybridEngine::new(jt, cfg)),
+            EngineKind::Approx => Box::new(approx::ApproxEngine::from_tree(jt, cfg)),
         }
     }
 
@@ -183,6 +219,7 @@ impl EngineKind {
             EngineKind::Element => "Elem.",
             EngineKind::Hybrid => "Fast-BNI-par",
             EngineKind::Batched => "Fast-BNI-batch",
+            EngineKind::Approx => "Approx-LW",
         }
     }
 }
@@ -198,6 +235,7 @@ impl std::str::FromStr for EngineKind {
             "element" | "elem" => Ok(EngineKind::Element),
             "hybrid" | "par" | "fast-bni-par" => Ok(EngineKind::Hybrid),
             "batched" | "batch" | "fast-bni-batch" => Ok(EngineKind::Batched),
+            "approx" | "lw" | "sampling" | "approx-lw" => Ok(EngineKind::Approx),
             other => Err(crate::Error::msg(format!("unknown engine {other:?}"))),
         }
     }
@@ -220,12 +258,16 @@ mod tests {
         assert_eq!("hybrid".parse::<EngineKind>().unwrap(), EngineKind::Hybrid);
         assert_eq!("Prim".parse::<EngineKind>().unwrap(), EngineKind::Primitive);
         assert_eq!("batched".parse::<EngineKind>().unwrap(), EngineKind::Batched);
+        assert_eq!("approx".parse::<EngineKind>().unwrap(), EngineKind::Approx);
+        assert_eq!("lw".parse::<EngineKind>().unwrap(), EngineKind::Approx);
         assert!("warp".parse::<EngineKind>().is_err());
         assert_eq!(EngineKind::Hybrid.label(), "Fast-BNI-par");
         assert_eq!(EngineKind::Batched.label(), "Fast-BNI-batch");
+        assert_eq!(EngineKind::Approx.label(), "Approx-LW");
         assert_eq!(format!("{}", EngineKind::Unb), "UnBBayes");
-        // Batched is an extension, not a Table-1 column
+        // Batched and Approx are extensions, not Table-1 columns
         assert!(!EngineKind::ALL.contains(&EngineKind::Batched));
+        assert!(!EngineKind::ALL.contains(&EngineKind::Approx));
     }
 
     #[test]

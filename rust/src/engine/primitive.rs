@@ -160,12 +160,12 @@ impl Engine for PrimitiveEngine {
         Posteriors::compute(&self.jt, state)
     }
 
-    fn schedule(&self) -> &Schedule {
-        &self.sched
+    fn schedule(&self) -> Option<&Schedule> {
+        Some(&self.sched)
     }
 
-    fn tree(&self) -> &Arc<JunctionTree> {
-        &self.jt
+    fn tree(&self) -> Option<&Arc<JunctionTree>> {
+        Some(&self.jt)
     }
 }
 

@@ -45,12 +45,12 @@ impl Engine for SeqEngine {
         Posteriors::compute(&self.jt, state)
     }
 
-    fn schedule(&self) -> &Schedule {
-        &self.sched
+    fn schedule(&self) -> Option<&Schedule> {
+        Some(&self.sched)
     }
 
-    fn tree(&self) -> &Arc<JunctionTree> {
-        &self.jt
+    fn tree(&self) -> Option<&Arc<JunctionTree>> {
+        Some(&self.jt)
     }
 }
 

@@ -11,11 +11,13 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::{LatencySummary, Reservoir};
+use crate::fleet::registry::Tier;
 
 /// Samples kept per network (sliding window for percentiles).
 const WINDOW: usize = 4096;
 
 struct NetCounters {
+    tier: Tier,
     queries: u64,
     errors: u64,
     reservoir: Reservoir,
@@ -26,6 +28,8 @@ struct NetCounters {
 pub struct NetSnapshot {
     /// Network name.
     pub net: String,
+    /// Which engine family answers this network's queries.
+    pub tier: Tier,
     /// Successful queries served (lifetime).
     pub queries: u64,
     /// Failed queries (lifetime) — bad evidence, unknown targets, etc.
@@ -56,13 +60,16 @@ impl FleetMetrics {
 
     /// Mint a network's counters entry (idempotent). Entry lifecycle is
     /// owned by the fleet's load/evict path, so `STATS` lists preloaded
-    /// but not-yet-queried networks with `queries=0`.
-    pub fn ensure(&self, net: &str) {
+    /// but not-yet-queried networks with `queries=0`. The tier is stamped
+    /// so `STATS` says which engine family answered (a re-`ensure` after a
+    /// reload refreshes it).
+    pub fn ensure(&self, net: &str, tier: Tier) {
         self.nets
             .lock()
             .unwrap()
             .entry(net.to_string())
-            .or_insert_with(|| NetCounters { queries: 0, errors: 0, reservoir: Reservoir::new(WINDOW) });
+            .and_modify(|c| c.tier = tier)
+            .or_insert_with(|| NetCounters { tier, queries: 0, errors: 0, reservoir: Reservoir::new(WINDOW) });
     }
 
     /// Record one query against `net`: its service time and outcome.
@@ -100,6 +107,7 @@ impl FleetMetrics {
         nets.iter()
             .map(|(name, c)| NetSnapshot {
                 net: name.clone(),
+                tier: c.tier,
                 queries: c.queries,
                 errors: c.errors,
                 qps: c.queries as f64 / uptime,
@@ -109,19 +117,20 @@ impl FleetMetrics {
     }
 
     /// Render the single-line `STATS` reply:
-    /// `STATS uptime_ms=… nets=N | <net> queries=… errors=… qps=… p50_us=… p99_us=… | …`
+    /// `STATS uptime_ms=… nets=N | <net> queries=… errors=… qps=… p50_us=… p99_us=… tier=… | …`
     pub fn render(&self) -> String {
         let snaps = self.snapshot();
         let mut out = format!("STATS uptime_ms={} nets={}", self.uptime().as_millis(), snaps.len());
         for s in &snaps {
             out.push_str(&format!(
-                " | {} queries={} errors={} qps={:.2} p50_us={} p99_us={}",
+                " | {} queries={} errors={} qps={:.2} p50_us={} p99_us={} tier={}",
                 s.net,
                 s.queries,
                 s.errors,
                 s.qps,
                 s.latency.p50.as_micros(),
-                s.latency.p99.as_micros()
+                s.latency.p99.as_micros(),
+                s.tier
             ));
         }
         out
@@ -137,8 +146,8 @@ mod tests {
         let m = FleetMetrics::new();
         m.record("ghost", Duration::from_micros(1), true);
         assert!(m.snapshot().is_empty());
-        m.ensure("asia");
-        m.ensure("asia"); // idempotent
+        m.ensure("asia", Tier::Exact);
+        m.ensure("asia", Tier::Exact); // idempotent
         assert!(m.render().contains("| asia queries=0 errors=0"), "{}", m.render());
         m.remove("asia");
         assert!(m.snapshot().is_empty());
@@ -147,8 +156,8 @@ mod tests {
     #[test]
     fn records_split_by_network_and_outcome() {
         let m = FleetMetrics::new();
-        m.ensure("asia");
-        m.ensure("cancer");
+        m.ensure("asia", Tier::Exact);
+        m.ensure("cancer", Tier::Approx);
         m.record("asia", Duration::from_micros(100), true);
         m.record("asia", Duration::from_micros(300), true);
         m.record("asia", Duration::from_micros(200), false);
@@ -158,17 +167,19 @@ mod tests {
         assert_eq!(snaps[0].net, "asia");
         assert_eq!(snaps[0].queries, 2);
         assert_eq!(snaps[0].errors, 1);
+        assert_eq!(snaps[0].tier, Tier::Exact);
         // failed queries don't pollute the latency window
         assert_eq!(snaps[0].latency.count, 2);
         assert_eq!(snaps[1].net, "cancer");
         assert_eq!(snaps[1].queries, 1);
+        assert_eq!(snaps[1].tier, Tier::Approx);
         assert!(snaps[0].qps > 0.0);
     }
 
     #[test]
     fn render_is_one_line_with_per_net_fields() {
         let m = FleetMetrics::new();
-        m.ensure("asia");
+        m.ensure("asia", Tier::Approx);
         m.record("asia", Duration::from_micros(150), true);
         let line = m.render();
         assert!(line.starts_with("STATS uptime_ms="), "{line}");
@@ -176,6 +187,7 @@ mod tests {
         assert!(line.contains("| asia queries=1 errors=0"), "{line}");
         assert!(line.contains("p50_us=150"), "{line}");
         assert!(line.contains("p99_us=150"), "{line}");
+        assert!(line.contains("tier=approx"), "{line}");
         assert!(!line.contains('\n'));
     }
 

@@ -62,7 +62,7 @@ use crate::jt::tree::JunctionTree;
 use crate::Result;
 
 pub use metrics::{FleetMetrics, NetSnapshot};
-pub use registry::{Registry, RegistryEntry};
+pub use registry::{Compiled, Registry, RegistryEntry, Tier};
 pub use router::{Router, ShardGroup};
 pub use server::FleetServer;
 pub use session::{Session, SessionReply};
@@ -78,6 +78,14 @@ pub struct FleetConfig {
     pub shards: usize,
     /// Maximum resident compiled trees before LRU eviction.
     pub registry_capacity: usize,
+    /// Tier threshold: loads whose *estimated* junction-tree cost (total
+    /// clique state space) exceeds this fall back to the approximate
+    /// likelihood-weighting tier instead of compiling. `INFINITY` (the
+    /// default) keeps every load exact and skips estimation; `<= 0`
+    /// forces every load approximate. Selecting
+    /// [`EngineKind::Approx`] as the fleet engine has the same effect as
+    /// `0.0` — an approximate fleet never compiles a tree.
+    pub max_exact_cost: f64,
 }
 
 impl Default for FleetConfig {
@@ -87,6 +95,7 @@ impl Default for FleetConfig {
             engine_cfg: EngineConfig::default(),
             shards: 2,
             registry_capacity: 8,
+            max_exact_cost: f64::INFINITY,
         }
     }
 }
@@ -106,8 +115,11 @@ impl Fleet {
     /// Create an empty fleet.
     pub fn new(cfg: FleetConfig) -> Self {
         let router = Router::new(cfg.engine, cfg.engine_cfg.clone(), cfg.shards);
+        // an approximate fleet never compiles: EngineKind::Approx pins the
+        // threshold to 0 so every load lands on the sampling tier
+        let max_exact_cost = if cfg.engine == EngineKind::Approx { 0.0 } else { cfg.max_exact_cost };
         Fleet {
-            registry: Registry::new(cfg.registry_capacity),
+            registry: Registry::with_max_exact_cost(cfg.registry_capacity, max_exact_cost),
             router,
             metrics: FleetMetrics::new(),
             load_lock: std::sync::Mutex::new(()),
@@ -157,8 +169,8 @@ impl Fleet {
             self.router.remove(evicted);
             self.metrics.remove(evicted);
         }
-        self.router.ensure(&loaded.entry.name, &loaded.jt)?;
-        self.metrics.ensure(&loaded.entry.name);
+        self.router.ensure(&loaded.entry.name, &loaded.model)?;
+        self.metrics.ensure(&loaded.entry.name, loaded.entry.tier);
         Ok(loaded.entry)
     }
 
@@ -172,7 +184,15 @@ impl Fleet {
     }
 
     /// The compiled tree for a loaded network (refreshes its LRU stamp).
+    /// `None` for approximate-tier residents — callers that can serve
+    /// either tier want [`Fleet::model`].
     pub fn tree(&self, name: &str) -> Option<Arc<JunctionTree>> {
+        self.registry.get(name).and_then(|m| m.jt().cloned())
+    }
+
+    /// The servable model for a loaded network — either tier (refreshes
+    /// its LRU stamp).
+    pub fn model(&self, name: &str) -> Option<Compiled> {
         self.registry.get(name)
     }
 
@@ -272,6 +292,7 @@ mod tests {
             engine_cfg: EngineConfig::default().with_threads(1),
             shards: 2,
             registry_capacity: 4,
+            max_exact_cost: f64::INFINITY,
         })
     }
 
@@ -302,6 +323,35 @@ mod tests {
     fn unknown_network_query_errors() {
         let fleet = small_fleet();
         assert!(fleet.query("asia", Evidence::none()).is_err());
+    }
+
+    #[test]
+    fn cost_threshold_falls_back_to_the_approximate_tier() {
+        let fleet = Fleet::new(FleetConfig {
+            engine_cfg: EngineConfig::default().with_threads(1).with_samples(20_000),
+            shards: 1,
+            max_exact_cost: 1e6,
+            ..small_fleet().cfg
+        });
+        // tractable: stays exact
+        let asia = fleet.load("asia").unwrap();
+        assert_eq!(asia.tier, Tier::Exact);
+        assert!(fleet.tree("asia").is_some());
+        // intractable: served anyway, on the sampling tier
+        let entry = fleet.load("intractable-sim").unwrap();
+        assert_eq!(entry.tier, Tier::Approx);
+        assert!(entry.cost.unwrap() > 1e6);
+        assert!(fleet.tree("intractable-sim").is_none(), "no tree on the approximate tier");
+        let model = fleet.model("intractable-sim").unwrap();
+        assert!(model.is_approx());
+        let net = model.net();
+        let ev = Evidence::from_pairs(net, &[(net.vars[0].name.as_str(), net.vars[0].states[0].as_str())]).unwrap();
+        let post = fleet.query("intractable-sim", ev).unwrap();
+        let info = post.approx.expect("approximate posteriors carry their contract");
+        assert!(info.effective_samples > 0.0);
+        assert!(post.probs.iter().all(|p| (p.iter().sum::<f64>() - 1.0).abs() < 1e-9));
+        // the exact resident still answers exactly
+        assert!(fleet.query("asia", Evidence::none()).unwrap().approx.is_none());
     }
 
     #[test]

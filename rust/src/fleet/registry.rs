@@ -8,6 +8,19 @@
 //! in memory at once. Compile time and table size are recorded per entry —
 //! the accounting the `NETS` protocol verb and the fleet bench report.
 //!
+//! **Tier pick.** When a finite `max_exact_cost` is configured, loading
+//! first *estimates* the junction-tree cost (sum over maximal cliques of
+//! the product of member cardinalities — see
+//! [`crate::jt::tree::estimate_cost`]) without materializing any tables.
+//! At or under the threshold the network compiles exactly as before; past
+//! it the registry keeps the raw [`Network`] and the fleet serves it with
+//! the approximate likelihood-weighting engine instead — so a fleet can
+//! `LOAD` *any* network without an exponential-size compile taking the
+//! process down. The default threshold is `f64::INFINITY`: estimation is
+//! skipped entirely and every load compiles exactly (the pre-tier
+//! behavior). A threshold `<= 0` forces every network onto the
+//! approximate tier.
+//!
 //! Loading is **compile-once**: re-`LOAD`ing a spec whose network name is
 //! already resident returns the cached tree, even if a file behind a path
 //! spec has changed on disk since. To pick up a changed model, load it
@@ -33,21 +46,114 @@ use crate::jt::tree::JunctionTree;
 use crate::jt::triangulate::TriangulationHeuristic;
 use crate::Result;
 
+/// Which engine family answers queries for a resident network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Compiled junction tree; posteriors are exact.
+    Exact,
+    /// Parallel likelihood weighting over the raw network; posteriors are
+    /// estimates carrying CI half-widths (see
+    /// [`crate::infer::query::ApproxInfo`]).
+    Approx,
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Tier::Exact => "exact",
+            Tier::Approx => "approx",
+        })
+    }
+}
+
+/// A servable model: either a compiled junction tree (exact tier) or the
+/// raw network plus its estimated compile cost (approximate tier).
+#[derive(Clone)]
+pub enum Compiled {
+    /// Exact tier: the compiled tree.
+    Exact(Arc<JunctionTree>),
+    /// Approximate tier: compilation was refused because `cost` (the
+    /// estimated total clique state space) exceeded the registry's
+    /// `max_exact_cost`.
+    Approx {
+        /// The raw network, sampled directly by the approximate engine.
+        net: Arc<Network>,
+        /// Estimated exact-compile cost that triggered the fallback.
+        cost: f64,
+    },
+}
+
+impl Compiled {
+    /// The underlying network (both tiers have one).
+    pub fn net(&self) -> &Network {
+        match self {
+            Compiled::Exact(jt) => &jt.net,
+            Compiled::Approx { net, .. } => net,
+        }
+    }
+
+    /// The compiled tree — `None` on the approximate tier.
+    pub fn jt(&self) -> Option<&Arc<JunctionTree>> {
+        match self {
+            Compiled::Exact(jt) => Some(jt),
+            Compiled::Approx { .. } => None,
+        }
+    }
+
+    /// Which tier this model serves on.
+    pub fn tier(&self) -> Tier {
+        match self {
+            Compiled::Exact(_) => Tier::Exact,
+            Compiled::Approx { .. } => Tier::Approx,
+        }
+    }
+
+    /// True on the approximate tier.
+    pub fn is_approx(&self) -> bool {
+        matches!(self, Compiled::Approx { .. })
+    }
+
+    /// Estimated exact-compile cost — `Some` only on the approximate tier
+    /// (the exact tier skips estimation unless a threshold forced it, and
+    /// its real size is in the entry's `entries`).
+    pub fn cost(&self) -> Option<f64> {
+        match self {
+            Compiled::Exact(_) => None,
+            Compiled::Approx { cost, .. } => Some(*cost),
+        }
+    }
+
+    /// Identity comparison (same shared tree / network allocation) — the
+    /// pin-revalidation primitive sessions use in place of `Arc::ptr_eq`.
+    pub fn same(&self, other: &Compiled) -> bool {
+        match (self, other) {
+            (Compiled::Exact(a), Compiled::Exact(b)) => Arc::ptr_eq(a, b),
+            (Compiled::Approx { net: a, .. }, Compiled::Approx { net: b, .. }) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+}
+
 /// Accounting snapshot for one resident network.
 #[derive(Clone, Debug)]
 pub struct RegistryEntry {
     /// Network name (the registry key).
     pub name: String,
-    /// Number of cliques in the compiled tree.
+    /// Number of cliques in the compiled tree (0 on the approximate tier).
     pub cliques: usize,
     /// Total table entries (cliques + separators) — the memory driver.
+    /// 0 on the approximate tier: nothing is materialized.
     pub entries: usize,
-    /// Wall time `JunctionTree::compile` took.
+    /// Wall time the load spent compiling (tier pick included).
     pub compile_time: Duration,
+    /// Which engine family serves this network.
+    pub tier: Tier,
+    /// Estimated exact-compile cost — `Some` only on the approximate tier.
+    pub cost: Option<f64>,
 }
 
 struct Resident {
-    jt: Arc<JunctionTree>,
+    model: Compiled,
     compile_time: Duration,
     last_used: u64,
 }
@@ -63,18 +169,19 @@ struct Inner {
 /// LRU-bounded cache of compiled junction trees, keyed by network name.
 pub struct Registry {
     capacity: usize,
+    max_exact_cost: f64,
     inner: Mutex<Inner>,
 }
 
 /// Result of a [`Registry::load`]: the entry's accounting, the shared
-/// tree, and any networks evicted to stay within capacity (the caller —
+/// model, and any networks evicted to stay within capacity (the caller —
 /// the fleet — tears down their shard groups).
 pub struct Loaded {
     /// Accounting for the loaded network (`entry.name` is the key the
     /// network registered under — its own `net.name`).
     pub entry: RegistryEntry,
-    /// The compiled tree.
-    pub jt: Arc<JunctionTree>,
+    /// The servable model (compiled tree or approximate-tier network).
+    pub model: Compiled,
     /// Names evicted by this load, oldest first.
     pub evicted: Vec<String>,
     /// False when the load was served from cache.
@@ -83,24 +190,50 @@ pub struct Loaded {
 
 impl Registry {
     /// Create a registry holding at most `capacity` compiled trees
-    /// (clamped to ≥ 1).
+    /// (clamped to ≥ 1), always compiling exactly (no cost threshold).
     pub fn new(capacity: usize) -> Self {
-        let inner = Inner { nets: BTreeMap::new(), aliases: BTreeMap::new(), clock: 0 };
-        Registry { capacity: capacity.max(1), inner: Mutex::new(inner) }
+        Self::with_max_exact_cost(capacity, f64::INFINITY)
     }
 
-    fn entry_for(name: &str, jt: &JunctionTree, compile_time: Duration) -> RegistryEntry {
+    /// [`Registry::new`] with a tier threshold: loads whose estimated
+    /// exact-compile cost exceeds `max_exact_cost` are kept as raw
+    /// networks for the approximate tier. `INFINITY` skips estimation
+    /// entirely; a threshold `<= 0` forces every load approximate.
+    pub fn with_max_exact_cost(capacity: usize, max_exact_cost: f64) -> Self {
+        let inner = Inner { nets: BTreeMap::new(), aliases: BTreeMap::new(), clock: 0 };
+        Registry { capacity: capacity.max(1), max_exact_cost, inner: Mutex::new(inner) }
+    }
+
+    fn entry_for(name: &str, model: &Compiled, compile_time: Duration) -> RegistryEntry {
+        let (cliques, entries) = match model.jt() {
+            Some(jt) => (jt.n_cliques(), jt.total_clique_entries() + jt.total_sep_entries()),
+            None => (0, 0),
+        };
         RegistryEntry {
             name: name.to_string(),
-            cliques: jt.n_cliques(),
-            entries: jt.total_clique_entries() + jt.total_sep_entries(),
+            cliques,
+            entries,
             compile_time,
+            tier: model.tier(),
+            cost: model.cost(),
         }
     }
 
-    fn cache_hit(name: &str, jt: Arc<JunctionTree>, compile_time: Duration) -> Loaded {
-        let entry = Self::entry_for(name, &jt, compile_time);
-        Loaded { entry, jt, evicted: Vec::new(), freshly_compiled: false }
+    fn cache_hit(name: &str, model: Compiled, compile_time: Duration) -> Loaded {
+        let entry = Self::entry_for(name, &model, compile_time);
+        Loaded { entry, model, evicted: Vec::new(), freshly_compiled: false }
+    }
+
+    /// The tier pick: estimate (when a threshold is set) and either
+    /// compile exactly or keep the raw network for the approximate tier.
+    fn compile_model(&self, net: Network) -> Result<Compiled> {
+        if self.max_exact_cost.is_finite() || self.max_exact_cost <= 0.0 {
+            let cost = crate::jt::tree::estimate_cost(&net, TriangulationHeuristic::MinFill);
+            if cost > self.max_exact_cost {
+                return Ok(Compiled::Approx { net: Arc::new(net), cost });
+            }
+        }
+        Ok(Compiled::Exact(Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?)))
     }
 
     /// Load `spec`, compiling its junction tree unless already resident.
@@ -139,12 +272,12 @@ impl Registry {
         // Fast paths: the spec is a resident name, or a spec we have
         // already resolved (a path) aliased onto a resident name — either
         // way the file is not re-read.
-        if let Some((jt, ct)) = self.lookup(spec) {
-            return Ok(Self::cache_hit(spec, jt, ct));
+        if let Some((model, ct)) = self.lookup(spec) {
+            return Ok(Self::cache_hit(spec, model, ct));
         }
         if let Some(name) = self.inner.lock().unwrap().aliases.get(spec).cloned() {
-            if let Some((jt, ct)) = self.lookup(&name) {
-                return Ok(Self::cache_hit(&name, jt, ct));
+            if let Some((model, ct)) = self.lookup(&name) {
+                return Ok(Self::cache_hit(&name, model, ct));
             }
         }
         // A `learn:` spec carries its provenance (samples/seed/base) in
@@ -170,22 +303,22 @@ impl Registry {
         if name != spec {
             self.inner.lock().unwrap().aliases.insert(spec.to_string(), name.clone());
         }
-        if let Some((jt, ct)) = self.lookup(&name) {
-            return Ok(Self::cache_hit(&name, jt, ct));
+        if let Some((model, ct)) = self.lookup(&name) {
+            return Ok(Self::cache_hit(&name, model, ct));
         }
         let t0 = Instant::now();
-        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
+        let model = self.compile_model(net)?;
         let compile_time = t0.elapsed();
 
         let mut inner = self.inner.lock().unwrap();
         if let Some(r) = inner.nets.get(&name) {
-            // a concurrent load won the race; keep its tree
-            let (jt, ct) = (Arc::clone(&r.jt), r.compile_time);
-            return Ok(Self::cache_hit(&name, jt, ct));
+            // a concurrent load won the race; keep its model
+            let (model, ct) = (r.model.clone(), r.compile_time);
+            return Ok(Self::cache_hit(&name, model, ct));
         }
         inner.clock += 1;
         let stamp = inner.clock;
-        inner.nets.insert(name.clone(), Resident { jt: Arc::clone(&jt), compile_time, last_used: stamp });
+        inner.nets.insert(name.clone(), Resident { model: model.clone(), compile_time, last_used: stamp });
         let mut evicted = Vec::new();
         while inner.nets.len() > self.capacity {
             let oldest = inner
@@ -203,24 +336,24 @@ impl Registry {
                 None => break,
             }
         }
-        let entry = Self::entry_for(&name, &jt, compile_time);
-        Ok(Loaded { entry, jt, evicted, freshly_compiled: true })
+        let entry = Self::entry_for(&name, &model, compile_time);
+        Ok(Loaded { entry, model, evicted, freshly_compiled: true })
     }
 
-    /// Resident tree + its compile time, refreshing the LRU stamp.
-    fn lookup(&self, name: &str) -> Option<(Arc<JunctionTree>, Duration)> {
+    /// Resident model + its compile time, refreshing the LRU stamp.
+    fn lookup(&self, name: &str) -> Option<(Compiled, Duration)> {
         let mut inner = self.inner.lock().unwrap();
         inner.clock += 1;
         let stamp = inner.clock;
         inner.nets.get_mut(name).map(|r| {
             r.last_used = stamp;
-            (Arc::clone(&r.jt), r.compile_time)
+            (r.model.clone(), r.compile_time)
         })
     }
 
-    /// Look a resident tree up by name, refreshing its LRU stamp.
-    pub fn get(&self, name: &str) -> Option<Arc<JunctionTree>> {
-        self.lookup(name).map(|(jt, _)| jt)
+    /// Look a resident model up by name, refreshing its LRU stamp.
+    pub fn get(&self, name: &str) -> Option<Compiled> {
+        self.lookup(name).map(|(model, _)| model)
     }
 
     /// Drop a resident network (and any path aliases onto it). Returns
@@ -244,7 +377,7 @@ impl Registry {
     /// Accounting snapshot of every resident network, sorted by name.
     pub fn entries(&self) -> Vec<RegistryEntry> {
         let inner = self.inner.lock().unwrap();
-        inner.nets.iter().map(|(name, r)| Self::entry_for(name, &r.jt, r.compile_time)).collect()
+        inner.nets.iter().map(|(name, r)| Self::entry_for(name, &r.model, r.compile_time)).collect()
     }
 
     /// Number of resident networks.
@@ -269,12 +402,42 @@ mod tests {
         assert_eq!(a.entry.name, "asia");
         assert!(a.freshly_compiled);
         assert!(a.entry.entries > 0);
+        assert_eq!(a.entry.tier, Tier::Exact);
+        assert!(a.entry.cost.is_none());
+        assert!(a.model.jt().is_some());
         let b = reg.load("asia").unwrap();
         assert!(!b.freshly_compiled);
         // cache hits report the original compile accounting
         assert_eq!(b.entry.compile_time, a.entry.compile_time);
-        assert!(Arc::ptr_eq(&a.jt, &b.jt));
+        assert!(a.model.same(&b.model));
         assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn cost_threshold_routes_loads_by_tier() {
+        // asia's exact cost is tiny, so a generous threshold keeps it exact
+        let reg = Registry::with_max_exact_cost(4, 1e6);
+        let a = reg.load("asia").unwrap();
+        assert_eq!(a.entry.tier, Tier::Exact);
+        assert!(a.entry.cliques > 0);
+        // the intractable fixture blows past any sane threshold and falls
+        // back to the approximate tier: raw net kept, nothing materialized
+        let i = reg.load("intractable-sim").unwrap();
+        assert_eq!(i.entry.tier, Tier::Approx);
+        assert!(i.model.is_approx());
+        assert_eq!((i.entry.cliques, i.entry.entries), (0, 0));
+        assert!(i.entry.cost.unwrap() > 1e6, "{:?}", i.entry.cost);
+        assert_eq!(i.model.net().name, "intractable-sim");
+        // cache hits keep the tier decision
+        let again = reg.load("intractable-sim").unwrap();
+        assert!(!again.freshly_compiled);
+        assert_eq!(again.entry.tier, Tier::Approx);
+        assert!(again.model.same(&i.model));
+        // threshold <= 0 forces even trivial nets approximate
+        let always = Registry::with_max_exact_cost(4, 0.0);
+        let a = always.load("asia").unwrap();
+        assert_eq!(a.entry.tier, Tier::Approx);
+        assert!(a.entry.cost.unwrap() > 0.0);
     }
 
     #[test]
@@ -311,7 +474,7 @@ mod tests {
         // no re-read — and loading by the bare name hits the same entry
         let b = reg.load(spec).unwrap();
         assert!(!b.freshly_compiled);
-        assert!(Arc::ptr_eq(&a.jt, &b.jt));
+        assert!(a.model.same(&b.model));
         assert!(!reg.load("asia").unwrap().freshly_compiled);
         assert_eq!(reg.len(), 1);
         let _ = std::fs::remove_file(path);
@@ -341,13 +504,13 @@ mod tests {
         // exact repeat: alias fast path, cached tree, no re-learn
         let b = reg.load("learn:l1:500:7:sprinkler").unwrap();
         assert!(!b.freshly_compiled);
-        assert!(Arc::ptr_eq(&a.jt, &b.jt));
+        assert!(a.model.same(&b.model));
         // same name, different provenance: refused (never aliased, never
         // learned-and-discarded) — the served net and any recorded spec
         // cannot diverge
         let err = reg.load("learn:l1:500:8:sprinkler").unwrap_err();
         assert!(err.to_string().contains("already resident"), "{err}");
-        assert!(Arc::ptr_eq(&reg.get("l1").unwrap(), &a.jt));
+        assert!(reg.get("l1").unwrap().same(&a.model));
         // and the refused spec gained no alias: evicting frees the name
         // for a genuine relearn under the new spec
         assert!(reg.remove("l1"));

@@ -5,6 +5,9 @@
 //! (engines are not `Send` — see [`crate::engine::Engine`]) and reuses one
 //! [`TreeState`] across every request it serves, so the per-request cost is
 //! a state reset plus propagation, never an allocation or a tree compile.
+//! An approximate-tier model (see [`Compiled`]) gets an
+//! [`ApproxEngine`] replica per shard instead — same dispatch, same wire
+//! surface, no junction tree anywhere in the path.
 //!
 //! Dispatch is round-robin refined by per-shard depth accounting: the
 //! rotor picks the starting shard, then the least-loaded shard from there
@@ -16,11 +19,12 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::engine::{EngineConfig, EngineKind};
+use crate::engine::approx::ApproxEngine;
+use crate::engine::{Engine, EngineConfig, EngineKind};
+use crate::fleet::registry::Compiled;
 use crate::infer::query::Posteriors;
 use crate::jt::evidence::Evidence;
 use crate::jt::state::TreeState;
-use crate::jt::tree::JunctionTree;
 use crate::{Error, Result};
 
 struct Job {
@@ -39,36 +43,36 @@ struct Shard {
 /// The engine replicas serving one network.
 pub struct ShardGroup {
     name: String,
-    jt: Arc<JunctionTree>,
+    model: Compiled,
     shards: Vec<Shard>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     rotor: AtomicUsize,
 }
 
 impl ShardGroup {
-    /// Spawn `n_shards` worker threads (clamped to ≥ 1) for `jt`.
+    /// Spawn `n_shards` worker threads (clamped to ≥ 1) for `model`.
     ///
     /// Spawn failure (e.g. a process thread limit) is an error, not a
     /// panic — the fleet serializes loads under a mutex, and a panic here
     /// would poison it and wedge `LOAD` fleet-wide. Workers already
     /// spawned exit on their own once their senders drop.
-    pub fn new(name: &str, jt: Arc<JunctionTree>, n_shards: usize, engine: EngineKind, cfg: &EngineConfig) -> Result<Self> {
+    pub fn new(name: &str, model: Compiled, n_shards: usize, engine: EngineKind, cfg: &EngineConfig) -> Result<Self> {
         let n_shards = n_shards.max(1);
         let mut shards = Vec::with_capacity(n_shards);
         let mut workers = Vec::with_capacity(n_shards);
         for i in 0..n_shards {
             let (tx, rx) = mpsc::channel::<Job>();
             let depth = Arc::new(AtomicUsize::new(0));
-            let worker_jt = Arc::clone(&jt);
+            let worker_model = model.clone();
             let worker_cfg = cfg.clone();
             let worker_depth = Arc::clone(&depth);
             let handle = std::thread::Builder::new()
                 .name(format!("fleet-{name}-{i}"))
-                .spawn(move || shard_worker(worker_jt, engine, worker_cfg, rx, worker_depth))?;
+                .spawn(move || shard_worker(worker_model, engine, worker_cfg, rx, worker_depth))?;
             shards.push(Shard { tx: Mutex::new(Some(tx)), depth });
             workers.push(handle);
         }
-        Ok(ShardGroup { name: name.to_string(), jt, shards, workers: Mutex::new(workers), rotor: AtomicUsize::new(0) })
+        Ok(ShardGroup { name: name.to_string(), model, shards, workers: Mutex::new(workers), rotor: AtomicUsize::new(0) })
     }
 
     /// Network name this group serves.
@@ -76,9 +80,9 @@ impl ShardGroup {
         &self.name
     }
 
-    /// The shared tree.
-    pub fn tree(&self) -> &Arc<JunctionTree> {
-        &self.jt
+    /// The shared model (tree or approximate-tier network).
+    pub fn model(&self) -> &Compiled {
+        &self.model
     }
 
     /// Number of shards.
@@ -154,15 +158,26 @@ impl Drop for ShardGroup {
     }
 }
 
+/// A shard replica for `model`: the configured engine over the compiled
+/// tree on the exact tier, a likelihood-weighting [`ApproxEngine`] (plus a
+/// detached state — there is no arena to reset) on the approximate tier.
+fn build_replica(model: &Compiled, engine_kind: EngineKind, cfg: &EngineConfig) -> (Box<dyn Engine>, TreeState) {
+    match model {
+        Compiled::Exact(jt) => (engine_kind.build(Arc::clone(jt), cfg), TreeState::fresh(jt)),
+        Compiled::Approx { net, .. } => {
+            (Box::new(ApproxEngine::from_net(Arc::clone(net), cfg)), TreeState::detached())
+        }
+    }
+}
+
 fn shard_worker(
-    jt: Arc<JunctionTree>,
+    model: Compiled,
     engine_kind: EngineKind,
     cfg: EngineConfig,
     rx: mpsc::Receiver<Job>,
     depth: Arc<AtomicUsize>,
 ) {
-    let mut engine = engine_kind.build(Arc::clone(&jt), &cfg);
-    let mut state = TreeState::fresh(&jt);
+    let (mut engine, mut state) = build_replica(&model, engine_kind, &cfg);
     while let Ok(job) = rx.recv() {
         let t0 = Instant::now();
         // a panicking case must not kill the shard: without the catch, the
@@ -182,8 +197,7 @@ fn shard_worker(
                 let msg = "inference panicked; shard engine rebuilt";
                 let results = job.cases.iter().map(|_| Err(Error::msg(msg))).collect();
                 let _ = job.reply.send((results, t0.elapsed()));
-                engine = engine_kind.build(Arc::clone(&jt), &cfg);
-                state = TreeState::fresh(&jt);
+                (engine, state) = build_replica(&model, engine_kind, &cfg);
             }
         }
     }
@@ -205,11 +219,11 @@ impl Router {
     }
 
     /// Ensure a shard group exists for `name`, spawning workers if needed.
-    pub fn ensure(&self, name: &str, jt: &Arc<JunctionTree>) -> Result<()> {
+    pub fn ensure(&self, name: &str, model: &Compiled) -> Result<()> {
         let mut groups = self.groups.lock().unwrap();
         if !groups.contains_key(name) {
             let group =
-                Arc::new(ShardGroup::new(name, Arc::clone(jt), self.shards_per_net, self.engine, &self.engine_cfg)?);
+                Arc::new(ShardGroup::new(name, model.clone(), self.shards_per_net, self.engine, &self.engine_cfg)?);
             groups.insert(name.to_string(), group);
         }
         Ok(())
@@ -250,17 +264,28 @@ impl Router {
 mod tests {
     use super::*;
     use crate::bn::embedded;
+    use crate::jt::tree::JunctionTree;
     use crate::jt::triangulate::TriangulationHeuristic;
 
     fn asia_tree() -> Arc<JunctionTree> {
         Arc::new(JunctionTree::compile(&embedded::asia(), TriangulationHeuristic::MinFill).unwrap())
     }
 
+    fn asia_model() -> Compiled {
+        Compiled::Exact(asia_tree())
+    }
+
     #[test]
     fn dispatch_matches_direct_inference() {
         let jt = asia_tree();
-        let group =
-            ShardGroup::new("asia", Arc::clone(&jt), 2, EngineKind::Seq, &EngineConfig::default().with_threads(1)).unwrap();
+        let group = ShardGroup::new(
+            "asia",
+            Compiled::Exact(Arc::clone(&jt)),
+            2,
+            EngineKind::Seq,
+            &EngineConfig::default().with_threads(1),
+        )
+        .unwrap();
         let ev = Evidence::from_pairs(&jt.net, &[("smoke", "yes")]).unwrap();
         let (post, _service) = group.dispatch(ev.clone()).unwrap();
 
@@ -273,8 +298,14 @@ mod tests {
     #[test]
     fn errors_propagate_and_workers_survive() {
         let jt = asia_tree();
-        let group =
-            ShardGroup::new("asia", Arc::clone(&jt), 1, EngineKind::Seq, &EngineConfig::default().with_threads(1)).unwrap();
+        let group = ShardGroup::new(
+            "asia",
+            Compiled::Exact(Arc::clone(&jt)),
+            1,
+            EngineKind::Seq,
+            &EngineConfig::default().with_threads(1),
+        )
+        .unwrap();
         // impossible evidence: either=no contradicts lung=yes
         let bad = Evidence::from_pairs(&jt.net, &[("either", "no"), ("lung", "yes")]).unwrap();
         assert!(group.dispatch(bad).is_err());
@@ -291,7 +322,7 @@ mod tests {
         let jt = asia_tree();
         let group = ShardGroup::new(
             "asia",
-            Arc::clone(&jt),
+            Compiled::Exact(Arc::clone(&jt)),
             2,
             EngineKind::Batched,
             &EngineConfig::default().with_threads(1).with_batch(3),
@@ -319,19 +350,46 @@ mod tests {
 
     #[test]
     fn router_spreads_queries_across_shards() {
-        let jt = asia_tree();
+        let model = asia_model();
+        let net = model.net().clone();
         let router = Router::new(EngineKind::Seq, EngineConfig::default().with_threads(1), 3);
-        router.ensure("asia", &jt).unwrap();
-        router.ensure("asia", &jt).unwrap(); // idempotent
+        router.ensure("asia", &model).unwrap();
+        router.ensure("asia", &model).unwrap(); // idempotent
         assert_eq!(router.names(), vec!["asia".to_string()]);
         assert_eq!(router.group("asia").unwrap().n_shards(), 3);
         for _ in 0..6 {
             let (post, _) = router.query("asia", Evidence::none()).unwrap();
-            let lung = post.marginal(&jt.net, "lung").unwrap();
+            let lung = post.marginal(&net, "lung").unwrap();
             assert!((lung[0] - 0.055).abs() < 1e-9);
         }
         assert!(router.query("unloaded", Evidence::none()).is_err());
         router.remove("asia");
         assert!(router.query("asia", Evidence::none()).is_err());
+    }
+
+    #[test]
+    fn approx_model_shards_serve_estimates() {
+        // an approximate-tier model runs LW replicas behind the same
+        // dispatch surface; answers are deterministic across shards
+        // because every replica shares the seed and chunk layout
+        let net = Arc::new(embedded::asia());
+        let model = Compiled::Approx { net: Arc::clone(&net), cost: 1e12 };
+        let group = ShardGroup::new(
+            "asia",
+            model,
+            2,
+            EngineKind::Hybrid, // ignored on the approximate tier
+            &EngineConfig::default().with_threads(1).with_samples(20_000),
+        )
+        .unwrap();
+        let ev = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+        let (a, _) = group.dispatch(ev.clone()).unwrap();
+        let (b, _) = group.dispatch(ev).unwrap();
+        let info = a.approx.as_ref().expect("approximate posteriors carry their contract");
+        assert!(info.n_samples >= 20_000);
+        let lung = a.marginal(&net, "lung").unwrap()[0];
+        assert!((lung - 0.1).abs() < 3.0 * info.half_width(0.1).max(1e-3), "{lung}");
+        // same seed, same chunks: shard identity cannot change the answer
+        assert_eq!(a.probs, b.probs);
     }
 }

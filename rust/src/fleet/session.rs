@@ -11,9 +11,9 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use crate::fleet::registry::Compiled;
 use crate::fleet::Fleet;
 use crate::jt::evidence::Evidence;
-use crate::jt::tree::JunctionTree;
 
 /// Outcome of one protocol line.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -36,21 +36,21 @@ enum Delta {
 /// collecting forever (and bound the dispatch allocation).
 pub const MAX_BATCH_CASES: usize = 1024;
 
-/// An in-progress `BATCH` collection: the tree pinned at `BATCH` time,
+/// An in-progress `BATCH` collection: the model pinned at `BATCH` time,
 /// target variable, expected case count, and the cases staged so far.
 ///
 /// The collection is **self-contained**: `CASE` lines resolve against the
-/// pinned tree (not the session's possibly-evicted selection), so once a
+/// pinned model (not the session's possibly-evicted selection), so once a
 /// batch is open every `CASE` is acked and the final reply is always
 /// exactly n lines — the wire contract the cluster front's line counting
-/// relies on. If the tree was evicted or reloaded under the batch, the
+/// relies on. If the model was evicted or reloaded under the batch, the
 /// final dispatch is refused and all n lines carry the error. A slot
 /// whose `CASE` line failed to parse is kept as `Err` — it still consumes
 /// its position (so client, cluster front, and backend all count the
 /// same) and comes back as an `ERR` result line.
 struct BatchCollect {
     net: String,
-    jt: Arc<JunctionTree>,
+    model: Compiled,
     target: usize,
     expect: usize,
     cases: Vec<std::result::Result<Evidence, String>>,
@@ -59,7 +59,7 @@ struct BatchCollect {
 /// Per-connection protocol state.
 pub struct Session {
     fleet: Arc<Fleet>,
-    current: Option<(String, Arc<JunctionTree>)>,
+    current: Option<(String, Compiled)>,
     committed: BTreeMap<usize, usize>,
     pending: Vec<Delta>,
     batch: Option<BatchCollect>,
@@ -77,16 +77,16 @@ impl Session {
     }
 
     /// The session's network, revalidated against the registry. If the
-    /// tree was evicted — or evicted and reloaded under the same name,
+    /// model was evicted — or evicted and reloaded under the same name,
     /// where variable ids need not line up — the session's cached ids are
     /// stale and must not be used: the selection is dropped and the client
     /// told to re-`USE`. `Err` carries the full reply line.
-    fn current_tree(&mut self) -> std::result::Result<(String, Arc<JunctionTree>), String> {
-        let Some((name, jt)) = self.current.clone() else {
+    fn current_model(&mut self) -> std::result::Result<(String, Compiled), String> {
+        let Some((name, model)) = self.current.clone() else {
             return Err("ERR no network selected (USE <net> first)".into());
         };
-        match self.fleet.tree(&name) {
-            Some(live) if Arc::ptr_eq(&live, &jt) => Ok((name, jt)),
+        match self.fleet.model(&name) {
+            Some(live) if live.same(&model) => Ok((name, model)),
             stale => {
                 self.current = None;
                 self.committed.clear();
@@ -146,13 +146,20 @@ impl Session {
             return "ERR usage: LOAD <net>".into();
         }
         match self.fleet.load(spec) {
-            Ok(e) => format!(
-                "OK loaded {} cliques={} entries={} compile_ms={}",
-                e.name,
-                e.cliques,
-                e.entries,
-                e.compile_time.as_millis()
-            ),
+            Ok(e) => {
+                let mut reply = format!(
+                    "OK loaded {} cliques={} entries={} compile_ms={} tier={}",
+                    e.name,
+                    e.cliques,
+                    e.entries,
+                    e.compile_time.as_millis(),
+                    e.tier
+                );
+                if let Some(cost) = e.cost {
+                    reply.push_str(&format!(" cost={cost:.3e}"));
+                }
+                reply
+            }
             Err(e) => format!("ERR {e}"),
         }
     }
@@ -196,19 +203,19 @@ impl Session {
         if name.is_empty() {
             return "ERR usage: USE <net>".into();
         }
-        match self.fleet.tree(name) {
-            Some(jt) => {
-                let vars = jt.net.n();
-                // evidence is per-network AND per-tree: ids don't transfer
+        match self.fleet.model(name) {
+            Some(model) => {
+                let vars = model.net().n();
+                // evidence is per-network AND per-model: ids don't transfer
                 // across networks, nor across a reload of the same name.
-                // Only a defensive re-USE of the very same tree keeps the
+                // Only a defensive re-USE of the very same model keeps the
                 // session's evidence.
-                let same_tree = match &self.current {
-                    Some((cur, cur_jt)) => cur == name && Arc::ptr_eq(cur_jt, &jt),
+                let same_model = match &self.current {
+                    Some((cur, cur_model)) => cur == name && cur_model.same(&model),
                     None => false,
                 };
-                self.current = Some((name.to_string(), jt));
-                if !same_tree {
+                self.current = Some((name.to_string(), model));
+                if !same_model {
                     self.committed.clear();
                     self.pending.clear();
                 }
@@ -237,19 +244,20 @@ impl Session {
         let mut out = format!("OK nets={}", entries.len());
         for e in &entries {
             out.push_str(&format!(
-                " {}[cliques={} entries={} compile_ms={}]",
+                " {}[cliques={} entries={} compile_ms={} tier={}]",
                 e.name,
                 e.cliques,
                 e.entries,
-                e.compile_time.as_millis()
+                e.compile_time.as_millis(),
+                e.tier
             ));
         }
         out
     }
 
     fn cmd_observe(&mut self, rest: &str) -> String {
-        let jt = match self.current_tree() {
-            Ok((_, jt)) => jt,
+        let model = match self.current_model() {
+            Ok((_, model)) => model,
             Err(reply) => return reply,
         };
         if rest.is_empty() {
@@ -262,7 +270,7 @@ impl Session {
             let Some((var, state)) = tok.split_once('=') else {
                 return format!("ERR bad evidence token {tok:?} (want var=state)");
             };
-            match jt.net.state_id(var, state) {
+            match model.net().state_id(var, state) {
                 Ok((v, s)) => staged.push(Delta::Set(v, s)),
                 Err(e) => return format!("ERR {e}"),
             }
@@ -273,8 +281,8 @@ impl Session {
     }
 
     fn cmd_retract(&mut self, rest: &str) -> String {
-        let jt = match self.current_tree() {
-            Ok((_, jt)) => jt,
+        let model = match self.current_model() {
+            Ok((_, model)) => model,
             Err(reply) => return reply,
         };
         if rest.is_empty() {
@@ -282,7 +290,7 @@ impl Session {
         }
         let mut staged = Vec::new();
         for var in rest.split_whitespace() {
-            match jt.net.var_id(var) {
+            match model.net().var_id(var) {
                 Ok(v) => staged.push(Delta::Clear(v)),
                 Err(e) => return format!("ERR {e}"),
             }
@@ -313,7 +321,7 @@ impl Session {
     /// engine) and its reply carries the n result lines — N evidence
     /// lines in, N posterior lines out.
     fn cmd_batch(&mut self, rest: &str) -> String {
-        let (name, jt) = match self.current_tree() {
+        let (name, model) = match self.current_model() {
             Ok(current) => current,
             Err(reply) => return reply,
         };
@@ -325,11 +333,11 @@ impl Session {
             Ok(n) if (1..=MAX_BATCH_CASES).contains(&n) => n,
             _ => return format!("ERR batch size must be 1..={MAX_BATCH_CASES} (got {n_text:?})"),
         };
-        let v = match jt.net.var_id(target) {
+        let v = match model.net().var_id(target) {
             Ok(v) => v,
             Err(e) => return format!("ERR {e}"),
         };
-        self.batch = Some(BatchCollect { net: name, jt, target: v, expect: n, cases: Vec::with_capacity(n) });
+        self.batch = Some(BatchCollect { net: name, model, target: v, expect: n, cases: Vec::with_capacity(n) });
         format!("OK batch expect={n} target={target}")
     }
 
@@ -341,7 +349,7 @@ impl Session {
         let Some(collect) = self.batch.as_mut() else {
             return "ERR no batch in progress (BATCH <n> <target-var> first)".into();
         };
-        // resolve against the tree pinned at BATCH time — never the
+        // resolve against the model pinned at BATCH time — never the
         // session's (possibly evicted) selection — so the ack/result line
         // count is unconditional once a batch is open
         let parsed: std::result::Result<Evidence, String> = {
@@ -352,7 +360,7 @@ impl Session {
                     err = Some(format!("bad evidence token {tok:?} (want var=state)"));
                     break;
                 };
-                match collect.jt.net.state_id(var, state) {
+                match collect.model.net().state_id(var, state) {
                     Ok((id, s)) => {
                         obs.insert(id, s);
                     }
@@ -373,14 +381,14 @@ impl Session {
             return format!("OK case {staged}/{}", collect.expect);
         }
         // final case: one dispatch, n reply lines (joined — the line
-        // server writes them as n wire lines). The pinned tree must still
-        // be the registry's live tree: running old variable ids against a
-        // reloaded tree would misapply evidence, so a stale pin turns
+        // server writes them as n wire lines). The pinned model must still
+        // be the registry's live model: running old variable ids against a
+        // reloaded model would misapply evidence, so a stale pin turns
         // into n clean error lines instead.
         let collect = self.batch.take().expect("checked above");
-        let live = self.fleet.tree(&collect.net);
+        let live = self.fleet.model(&collect.net);
         let stale = match &live {
-            Some(live) => !Arc::ptr_eq(live, &collect.jt),
+            Some(live) => !live.same(&collect.model),
             None => true,
         };
         if stale {
@@ -397,7 +405,7 @@ impl Session {
                 .map(|(parsed, outcome)| match (parsed, outcome) {
                     (Err(msg), _) => format!("ERR {msg}"),
                     (Ok(_), Ok(post)) => {
-                        crate::coordinator::server::format_ok_posterior(&collect.jt.net, collect.target, &post)
+                        crate::coordinator::server::format_ok_posterior(collect.model.net(), collect.target, &post)
                     }
                     (Ok(_), Err(e)) => format!("ERR {e}"),
                 })
@@ -408,7 +416,7 @@ impl Session {
     }
 
     fn cmd_query(&mut self, rest: &str) -> String {
-        let (name, jt) = match self.current_tree() {
+        let (name, model) = match self.current_model() {
             Ok(current) => current,
             Err(reply) => return reply,
         };
@@ -418,14 +426,14 @@ impl Session {
             Ok(parsed) => parsed,
             Err(msg) => return format!("ERR {msg}"),
         };
-        let v = match jt.net.var_id(target) {
+        let v = match model.net().var_id(target) {
             Ok(v) => v,
             Err(e) => return format!("ERR {e}"),
         };
         // committed evidence plus inline one-shot pairs (inline wins)
         let mut obs = self.committed.clone();
         for (var, state) in pairs {
-            match jt.net.state_id(var, state) {
+            match model.net().state_id(var, state) {
                 Ok((id, s)) => {
                     obs.insert(id, s);
                 }
@@ -434,7 +442,7 @@ impl Session {
         }
         let ev = Evidence::from_ids(obs.into_iter().collect());
         match self.fleet.query(&name, ev) {
-            Ok(post) => crate::coordinator::server::format_ok_posterior(&jt.net, v, &post),
+            Ok(post) => crate::coordinator::server::format_ok_posterior(model.net(), v, &post),
             Err(e) => format!("ERR {e}"),
         }
     }
@@ -452,6 +460,7 @@ mod tests {
             engine_cfg: EngineConfig::default().with_threads(1),
             shards: 2,
             registry_capacity: 4,
+            max_exact_cost: f64::INFINITY,
         }));
         Session::new(fleet)
     }
@@ -566,6 +575,7 @@ mod tests {
             engine_cfg: EngineConfig::default().with_threads(1),
             shards: 1,
             registry_capacity: 1,
+            max_exact_cost: f64::INFINITY,
         }));
         let mut s = Session::new(fleet);
         line(&mut s, "LOAD asia");
@@ -659,6 +669,7 @@ mod tests {
             engine_cfg: EngineConfig::default().with_threads(1),
             shards: 1,
             registry_capacity: 1,
+            max_exact_cost: f64::INFINITY,
         }));
         let mut a = Session::new(Arc::clone(&fleet));
         let mut b = Session::new(fleet);

@@ -17,6 +17,38 @@ pub struct Posteriors {
     pub probs: Vec<Vec<f64>>,
     /// Log evidence probability `ln P(e)`.
     pub log_z: f64,
+    /// Accuracy contract of the approximate tier: `Some` when these
+    /// posteriors were *estimated* by sampling (and every entry carries a
+    /// CI half-width through [`ApproxInfo::half_width`]), `None` for
+    /// exact engines.
+    pub approx: Option<ApproxInfo>,
+}
+
+/// Sampling metadata attached to approximate posteriors — the explicit
+/// accuracy contract: callers can recover a 95% CI half-width for any
+/// reported probability from the effective sample size.
+#[derive(Clone, Debug)]
+pub struct ApproxInfo {
+    /// Likelihood-weighting samples drawn.
+    pub n_samples: usize,
+    /// Effective sample size `(Σw)² / Σw²` of the importance weights.
+    pub effective_samples: f64,
+}
+
+impl ApproxInfo {
+    /// 95% CI half-width for a reported probability `p`, using the
+    /// normal approximation with the effective (not raw) sample size.
+    pub fn half_width(&self, p: f64) -> f64 {
+        if self.effective_samples <= 0.0 {
+            return 1.0;
+        }
+        1.96 * (p.clamp(0.0, 1.0) * (1.0 - p.clamp(0.0, 1.0)) / self.effective_samples).sqrt()
+    }
+
+    /// Worst-case 95% CI half-width over all probabilities (at p = 0.5).
+    pub fn max_half_width(&self) -> f64 {
+        self.half_width(0.5)
+    }
 }
 
 impl Posteriors {
@@ -68,7 +100,7 @@ impl Posteriors {
             }
             probs.push(marg);
         }
-        Ok(Posteriors { probs, log_z })
+        Ok(Posteriors { probs, log_z, approx: None })
     }
 
     /// Posterior of a variable by name.
@@ -175,6 +207,19 @@ mod tests {
         let s_wet = wet.marginal(&net, "sprinkler").unwrap()[0];
         let s_wet_rain = wet_rain.marginal(&net, "sprinkler").unwrap()[0];
         assert!(s_wet_rain < s_wet, "explaining away: {s_wet_rain} < {s_wet}");
+    }
+
+    #[test]
+    fn approx_info_reports_half_widths() {
+        let info = ApproxInfo { n_samples: 1000, effective_samples: 400.0 };
+        assert!((info.max_half_width() - 1.96 * (0.25f64 / 400.0).sqrt()).abs() < 1e-12);
+        assert_eq!(info.half_width(0.0), 0.0);
+        assert!(info.half_width(0.5) > info.half_width(0.1));
+        // degenerate ESS reports the vacuous bound, never NaN
+        let degenerate = ApproxInfo { n_samples: 10, effective_samples: 0.0 };
+        assert_eq!(degenerate.half_width(0.5), 1.0);
+        // exact posteriors carry no sampling contract
+        assert!(posterior(&embedded::asia(), &[]).approx.is_none());
     }
 
     #[test]

@@ -117,6 +117,15 @@ impl TreeState {
         TreeState { layout: Arc::clone(&jt.layout), data: jt.arena_proto.clone(), log_z: 0.0 }
     }
 
+    /// A zero-size placeholder state for engines that never touch clique
+    /// tables (the sampling tier has no compiled tree, but the `Engine`
+    /// trait still threads a `&mut TreeState` through `infer`). Holds an
+    /// empty layout and arena; any table access would panic, which is the
+    /// correct failure mode for code that wrongly assumes an exact tree.
+    pub fn detached() -> Self {
+        TreeState { layout: Arc::new(ArenaLayout::build(&[], &[])), data: Vec::new(), log_z: 0.0 }
+    }
+
     /// Reset to the prototype without reallocating — a single
     /// `copy_from_slice` over the whole arena.
     pub fn reset(&mut self, jt: &JunctionTree) {

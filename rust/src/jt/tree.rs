@@ -375,6 +375,25 @@ impl std::fmt::Display for TreeStats {
     }
 }
 
+/// Estimate the junction-tree cost of `net` without materializing any
+/// clique table: run the graph-only pipeline prefix (moralize →
+/// triangulate → maximal cliques) and return the summed clique
+/// state-space sizes `Σ_C Π_{v∈C} card(v)` in `f64` — deliberately
+/// overflow-free, so a treewidth blow-up reports a huge number instead
+/// of exhausting memory on `compile`'s flat arena. The fleet registry
+/// compares this against its `max_exact_cost` threshold to pick the
+/// exact or approximate serving tier.
+pub fn estimate_cost(net: &Network, heuristic: TriangulationHeuristic) -> f64 {
+    let all_cards = net.cards();
+    let weights: Vec<f64> = all_cards.iter().map(|&c| (c as f64).ln()).collect();
+    let moral = moralize(net);
+    let tri = triangulate(&moral, &weights, heuristic);
+    maximal_cliques(&tri.cliques)
+        .iter()
+        .map(|vars| vars.iter().map(|&v| all_cards[v] as f64).product::<f64>())
+        .sum()
+}
+
 /// Intersection of two sorted vertex lists.
 pub fn intersect_sorted(a: &[usize], b: &[usize]) -> Vec<usize> {
     let mut out = Vec::new();
@@ -513,6 +532,17 @@ mod tests {
         assert_eq!(jt.n_cliques(), 2);
         assert_eq!(jt.seps.len(), 0);
         jt.verify_rip().unwrap();
+    }
+
+    #[test]
+    fn estimate_cost_matches_compiled_clique_entries() {
+        // the estimator runs only the graph prefix of the pipeline, so on a
+        // compilable network it must agree exactly with the compiled tree
+        for net in [embedded::asia(), embedded::mixed12()] {
+            let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+            let cost = estimate_cost(&net, TriangulationHeuristic::MinFill);
+            assert_eq!(cost, jt.total_clique_entries() as f64, "{}", net.name);
+        }
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Integration: the approximate tier end to end — deterministic parallel
+//! likelihood weighting, the accuracy contract against exact inference,
+//! and the cost-based fallback through the fleet and cluster wire
+//! protocols.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fastbn::bn::network::Network;
+use fastbn::bn::resolve_spec;
+use fastbn::cluster::{ClusterConfig, ClusterHarness};
+use fastbn::engine::approx::ApproxEngine;
+use fastbn::engine::{Engine, EngineConfig, EngineKind};
+use fastbn::fleet::{Fleet, FleetConfig, FleetServer, Tier};
+use fastbn::infer::query::Posteriors;
+use fastbn::jt::evidence::Evidence;
+use fastbn::jt::state::TreeState;
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+
+fn lw(net: &Arc<Network>, ev: &Evidence, threads: usize, samples: usize, seed: u64) -> Posteriors {
+    let cfg = EngineConfig::default().with_threads(threads).with_samples(samples).with_seed(seed);
+    let mut engine = ApproxEngine::from_net(Arc::clone(net), &cfg);
+    engine.infer(&mut TreeState::detached(), ev).unwrap()
+}
+
+/// Exact bit pattern of every probability — `==` on f64 would also pass
+/// for -0.0 vs 0.0, and the determinism contract is *byte*-identical.
+fn bits(post: &Posteriors) -> Vec<Vec<u64>> {
+    post.probs.iter().map(|row| row.iter().map(|p| p.to_bits()).collect()).collect()
+}
+
+#[test]
+fn posteriors_are_bit_identical_across_thread_counts() {
+    for spec in ["asia", "hailfinder-sim"] {
+        let net = Arc::new(resolve_spec(spec).unwrap());
+        let ev = match spec {
+            "asia" => Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap(),
+            _ => Evidence::none(),
+        };
+        let reference = lw(&net, &ev, 1, 50_000, 7);
+        for threads in [2usize, 3, 8] {
+            let got = lw(&net, &ev, threads, 50_000, 7);
+            assert_eq!(bits(&reference), bits(&got), "{spec}: {threads} threads diverged from 1 thread");
+            assert_eq!(reference.log_z.to_bits(), got.log_z.to_bits(), "{spec}: logZ diverged at t={threads}");
+        }
+        // a different seed must actually change the estimate (the seed is
+        // plumbed through, not ignored)
+        let reseeded = lw(&net, &ev, 2, 50_000, 8);
+        assert_ne!(bits(&reference), bits(&reseeded), "{spec}: seed had no effect");
+    }
+}
+
+#[test]
+fn lw_matches_exact_inference_within_the_reported_half_width() {
+    let net = Arc::new(resolve_spec("asia").unwrap());
+    let ev = Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap();
+    let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+    let mut exact_engine = EngineKind::Seq.build(Arc::clone(&jt), &EngineConfig::default().with_threads(1));
+    let exact = exact_engine.infer(&mut TreeState::fresh(&jt), &ev).unwrap();
+
+    let post = lw(&net, &ev, 4, 100_000, 0x5EED);
+    let info = post.approx.as_ref().expect("approximate posteriors must carry ApproxInfo");
+    assert!(info.n_samples >= 100_000, "ran {} samples", info.n_samples);
+    assert!(info.effective_samples > 0.0);
+    for v in 0..net.n() {
+        for s in 0..net.card(v) {
+            let (a, e) = (post.probs[v][s], exact.probs[v][s]);
+            assert!(a.is_finite() && (0.0..=1.0).contains(&a), "probs[{v}][{s}] = {a}");
+            // 3× the reported 95% half-width at the exact probability —
+            // far outside it the estimator (not luck) is broken
+            let tol = (3.0 * info.half_width(e)).max(1e-4);
+            assert!((a - e).abs() <= tol, "probs[{v}][{s}]: |{a} - {e}| > {tol}");
+        }
+    }
+    // the spot value the fleet tests also pin: P(lung=yes | smoke=yes) = 0.1
+    let lung = net.var_id("lung").unwrap();
+    assert!((post.probs[lung][0] - 0.1).abs() < 5e-3 || (post.probs[lung][1] - 0.1).abs() < 5e-3);
+}
+
+#[test]
+fn inconsistent_evidence_is_a_clean_error() {
+    // asia's `either` is a deterministic OR of tub and lung, so this
+    // combination has probability exactly zero — every sample weight is 0
+    let net = Arc::new(resolve_spec("asia").unwrap());
+    let ev = Evidence::from_pairs(&net, &[("tub", "no"), ("lung", "no"), ("either", "yes")]).unwrap();
+    let cfg = EngineConfig::default().with_threads(2).with_samples(5_000);
+    let mut engine = ApproxEngine::from_net(Arc::clone(&net), &cfg);
+    let err = engine.infer(&mut TreeState::detached(), &ev).unwrap_err();
+    let text = err.to_string();
+    assert!(!text.contains("NaN"), "error must be a diagnosis, not a NaN artifact: {text}");
+    assert!(text.contains("evidence"), "error should name the evidence as the cause: {text}");
+}
+
+fn fallback_fleet(samples: usize) -> Arc<Fleet> {
+    Arc::new(Fleet::new(FleetConfig {
+        engine: EngineKind::Hybrid,
+        engine_cfg: EngineConfig::default().with_threads(2).with_samples(samples),
+        shards: 2,
+        registry_capacity: 4,
+        max_exact_cost: 1e6,
+    }))
+}
+
+#[test]
+fn fleet_serves_an_intractable_network_from_the_approx_tier() {
+    let fleet = fallback_fleet(20_000);
+    let hard = fleet.load("intractable-sim").unwrap();
+    assert_eq!(hard.tier, Tier::Approx);
+    assert!(hard.cost.unwrap() > 1e6, "estimated cost {:?} should blow the budget", hard.cost);
+    let easy = fleet.load("asia").unwrap();
+    assert_eq!(easy.tier, Tier::Exact);
+    assert!(easy.cost.is_none());
+
+    // no junction tree exists for the approx resident, yet queries work
+    assert!(fleet.tree("intractable-sim").is_none());
+    assert!(fleet.model("intractable-sim").unwrap().is_approx());
+    let post = fleet.query("intractable-sim", Evidence::none()).unwrap();
+    let info = post.approx.as_ref().expect("approx tier must report its info");
+    assert!(info.effective_samples > 0.0);
+    for row in &post.probs {
+        let sum: f64 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "unnormalized posterior row: {sum}");
+    }
+    // the tractable resident still answers exactly, with no approx info
+    let exact = fleet.query("asia", Evidence::none()).unwrap();
+    assert!(exact.approx.is_none());
+}
+
+fn tcp_session(addr: std::net::SocketAddr, requests: &[String]) -> Vec<String> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = Vec::new();
+    for r in requests {
+        stream.write_all(r.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        out.push(line.trim().to_string());
+    }
+    out
+}
+
+#[test]
+fn fallback_load_and_query_round_trip_over_the_fleet_wire() {
+    let fleet = fallback_fleet(20_000);
+    let server = FleetServer::start(Arc::clone(&fleet), "127.0.0.1:0").unwrap();
+    let hard = resolve_spec("intractable-sim").unwrap();
+    let target = hard.vars[hard.n() - 1].name.clone();
+
+    let script: Vec<String> = [
+        "LOAD intractable-sim".to_string(),
+        "LOAD asia".to_string(),
+        "NETS".to_string(),
+        "USE intractable-sim".to_string(),
+        format!("QUERY {target}"),
+        format!("QUERY {target}"),
+        "USE asia".to_string(),
+        "QUERY lung | smoke=yes".to_string(),
+        "STATS".to_string(),
+    ]
+    .to_vec();
+    let r = tcp_session(server.addr(), &script);
+
+    assert!(r[0].starts_with("OK loaded intractable-sim"), "{}", r[0]);
+    assert!(r[0].contains("tier=approx") && r[0].contains("cost="), "LOAD must say which tier answered: {}", r[0]);
+    assert!(r[1].starts_with("OK loaded asia") && r[1].contains("tier=exact"), "{}", r[1]);
+    assert!(r[2].contains("tier=approx") && r[2].contains("tier=exact"), "NETS must list both tiers: {}", r[2]);
+    assert!(r[4].starts_with("OK ") && r[4].contains(" tier=approx ci95="), "{}", r[4]);
+    assert!(r[4].contains(" ess="), "{}", r[4]);
+    assert_eq!(r[4], r[5], "repeated approx QUERY must be byte-identical");
+    // the exact tier's replies are unchanged: value pinned, no approx suffix
+    assert!(r[7].starts_with("OK yes=0.100000"), "{}", r[7]);
+    assert!(!r[7].contains("tier=approx"), "{}", r[7]);
+    assert!(r[8].starts_with("STATS ") && r[8].contains("tier=approx") && r[8].contains("tier=exact"), "{}", r[8]);
+    server.shutdown();
+}
+
+#[test]
+fn cluster_front_tier_passes_the_fallback_through() {
+    let backend_cfg = FleetConfig {
+        engine: EngineKind::Seq,
+        engine_cfg: EngineConfig::default().with_threads(1).with_samples(20_000),
+        shards: 1,
+        registry_capacity: 8,
+        max_exact_cost: 1e6,
+    };
+    let cluster_cfg = ClusterConfig {
+        replicas: 64,
+        connect_timeout: Duration::from_millis(500),
+        io_timeout: Duration::from_secs(10),
+        probe_timeout: Duration::from_millis(500),
+        probe_interval: Duration::from_millis(100),
+        probe_backoff_max: Duration::from_secs(1),
+        fail_threshold: 2,
+        ..Default::default()
+    };
+    let harness = ClusterHarness::start(2, backend_cfg, cluster_cfg).unwrap();
+    let hard = resolve_spec("intractable-sim").unwrap();
+    let target = hard.vars[hard.n() - 1].name.clone();
+
+    let mut client = harness.client().unwrap();
+    let loaded = client.request("LOAD intractable-sim").unwrap();
+    assert!(loaded.starts_with("OK loaded intractable-sim"), "{loaded}");
+    assert!(loaded.contains("tier=approx"), "front tier must forward the tier: {loaded}");
+    assert!(loaded.contains("backend="), "{loaded}");
+    assert!(client.request("LOAD asia").unwrap().contains("tier=exact"));
+
+    client.request("USE intractable-sim").unwrap();
+    let first = client.request(&format!("QUERY {target}")).unwrap();
+    assert!(first.starts_with("OK ") && first.contains(" tier=approx ci95="), "{first}");
+    let second = client.request(&format!("QUERY {target}")).unwrap();
+    assert_eq!(first, second, "approx answers through the router must stay deterministic");
+
+    client.request("USE asia").unwrap();
+    let exact = client.request("QUERY lung | smoke=yes").unwrap();
+    assert!(exact.starts_with("OK yes=0.100000"), "{exact}");
+    assert!(!exact.contains("tier=approx"), "{exact}");
+
+    let nets = client.request("NETS").unwrap();
+    assert!(nets.contains("tier=approx") && nets.contains("tier=exact"), "{nets}");
+}

@@ -23,6 +23,7 @@ fn backend_cfg() -> FleetConfig {
         engine_cfg: EngineConfig::default().with_threads(1),
         shards: 2,
         registry_capacity: 8,
+        max_exact_cost: f64::INFINITY,
     }
 }
 
@@ -302,6 +303,7 @@ fn batch_verb_passes_through_the_front_tier() {
             engine_cfg: EngineConfig::default().with_threads(1).with_batch(3),
             shards: 1,
             registry_capacity: 8,
+            max_exact_cost: f64::INFINITY,
         },
         fast_cluster_cfg(),
     )

@@ -21,6 +21,7 @@ fn make_fleet(engine: EngineKind, threads: usize, shards: usize, capacity: usize
         engine_cfg: EngineConfig::default().with_threads(threads),
         shards,
         registry_capacity: capacity,
+        max_exact_cost: f64::INFINITY,
     }))
 }
 
@@ -210,6 +211,7 @@ fn batched_fleet_concurrent_clients_match_single_tree_seq() {
         engine_cfg: EngineConfig::default().with_threads(2).with_batch(4),
         shards: 2,
         registry_capacity: 4,
+        max_exact_cost: f64::INFINITY,
     }));
     fleet.load("asia").unwrap();
     fleet.load("hailfinder-sim").unwrap();
@@ -294,6 +296,7 @@ fn batch_verb_over_tcp_matches_query_replies_under_concurrent_clients() {
         engine_cfg: EngineConfig::default().with_threads(1).with_batch(3),
         shards: 2,
         registry_capacity: 4,
+        max_exact_cost: f64::INFINITY,
     }));
     fleet.load("asia").unwrap();
     fleet.load("cancer").unwrap();

@@ -132,6 +132,7 @@ fn fleet_learn_verb_matches_in_process_learning_byte_for_byte() {
         engine_cfg: EngineConfig::default().with_threads(1),
         shards: 1,
         registry_capacity: 4,
+        max_exact_cost: f64::INFINITY,
     }));
     let mut session = Session::new(fleet);
     let line = |s: &mut Session, input: &str| match s.handle(input) {
@@ -160,6 +161,7 @@ fn cluster_learn_passthrough_and_deterministic_handoff() {
             engine_cfg: EngineConfig::default().with_threads(1),
             shards: 1,
             registry_capacity: 8,
+            max_exact_cost: f64::INFINITY,
         },
         ClusterConfig {
             connect_timeout: Duration::from_millis(500),

@@ -68,7 +68,7 @@ fn root_strategy_changes_layers_not_answers() {
     };
     let mut center = mk(RootStrategy::Center);
     let mut first = mk(RootStrategy::First);
-    assert!(center.schedule().height() <= first.schedule().height());
+    assert!(center.schedule().unwrap().height() <= first.schedule().unwrap().height());
 
     let mut s1 = TreeState::fresh(&jt);
     let mut s2 = TreeState::fresh(&jt);
