@@ -18,6 +18,11 @@
 #                   --max-exact-cost and assert it is served by the approximate
 #                   tier (tier=approx + ci95 half-widths in the replies) while
 #                   a tractable net stays exact
+#   make metrics-smoke drive the observability surface end to end: QUERYs
+#                   into a live fleet then METRICS/TRACE over the same
+#                   socket (counters and histogram counts must match the
+#                   queries), then a 2-backend cluster whose front-tier
+#                   METRICS must merge every backend's scrape
 #   make artifacts  AOT-lower the Pallas/JAX kernels to HLO-text artifacts
 #                   (needs the python deps in python/requirements.txt)
 #   make fmt        rustfmt the workspace
@@ -29,7 +34,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-json serve-smoke batch-smoke cluster-smoke learn-smoke approx-smoke artifacts fmt lint test-xla clean
+.PHONY: build test bench bench-json serve-smoke batch-smoke cluster-smoke learn-smoke approx-smoke metrics-smoke artifacts fmt lint test-xla clean
 
 build:
 	$(CARGO) build --release
@@ -94,6 +99,16 @@ learn-smoke:
 # the exact tier in LOAD/NETS/STATS.
 approx-smoke:
 	$(CARGO) run --release -- serve --fleet --shards 1 --samples 20000 --max-exact-cost 1e6 --bind 127.0.0.1:0 --approx-smoke
+
+# observability smoke, both tiers. Fleet: --metrics-smoke drives QUERYs
+# then METRICS/TRACE through the server's own socket and asserts the
+# per-net counter and latency-histogram count equal the query count and
+# that TRACE replays the last span tree. Cluster: the front tier's
+# METRICS must scrape both backend processes and merge their expositions
+# (per-backend labels + summed aggregates).
+metrics-smoke:
+	$(CARGO) run --release -- serve --fleet --shards 1 --slow-query-ms 1000 --bind 127.0.0.1:0 --metrics-smoke
+	$(CARGO) run --release -- cluster --backends 2 --shards 1 --bind 127.0.0.1:0 --metrics-smoke
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts

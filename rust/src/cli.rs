@@ -12,9 +12,10 @@
 //!                  [--save-data d.csv] | --data d.csv [--name NAME] [--out net.bif]
 //! fastbn serve     --net <spec> [--bind 127.0.0.1:7979] [--engine hybrid] [--threads N]
 //! fastbn serve     --nets a,b,c [--shards N] [--registry-cap K] [--batch B] [--bind ...] [--smoke] [--batch-smoke]
-//!                  [--max-exact-cost C] [--samples N] [--approx-smoke]
+//!                  [--max-exact-cost C] [--samples N] [--approx-smoke] [--metrics-smoke]
+//!                  [--slow-query-ms T] [--metrics-interval SECS]
 //! fastbn cluster   --backends N [--nets a,b,c] [--shards S] [--replicas V] [--bind ...] [--smoke]
-//!                  [--max-exact-cost C] [--samples N]
+//!                  [--max-exact-cost C] [--samples N] [--metrics-smoke]
 //! fastbn simulate  --net <spec> [--threads 1,2,4,8,16,32]
 //! fastbn selftest
 //! ```
@@ -56,7 +57,8 @@ pub struct Args {
 
 /// Flags that are boolean switches: present or absent, never taking a
 /// value. Everything else must be followed by one.
-const SWITCHES: &[&str] = &["smoke", "fleet", "parent-watch", "batch-smoke", "learn-smoke", "approx-smoke"];
+const SWITCHES: &[&str] =
+    &["smoke", "fleet", "parent-watch", "batch-smoke", "learn-smoke", "approx-smoke", "metrics-smoke"];
 
 impl Args {
     /// Parse from raw argv (after the subcommand).
@@ -199,19 +201,24 @@ COMMANDS:
                                      --registry-cap K, --batch B lanes/shard
                                      with --engine batched, --smoke and
                                      --batch-smoke / --learn-smoke /
-                                     --approx-smoke self-checks;
-                                     --max-exact-cost C serves networks whose
-                                     estimated junction-tree cost exceeds C
-                                     from the approximate tier, --samples
-                                     per approx query); verbs: LOAD LEARN USE
-                                     NETS OBSERVE RETRACT COMMIT QUERY BATCH
-                                     CASE STATS PING EVICT QUIT
+                                     --approx-smoke / --metrics-smoke
+                                     self-checks; --max-exact-cost C serves
+                                     networks whose estimated junction-tree
+                                     cost exceeds C from the approximate tier,
+                                     --samples per approx query;
+                                     --slow-query-ms T logs queries slower
+                                     than T, --metrics-interval SECS dumps
+                                     the metrics exposition to stderr);
+                                     verbs: LOAD LEARN USE NETS OBSERVE
+                                     RETRACT COMMIT QUERY BATCH CASE STATS
+                                     METRICS TRACE PING EVICT QUIT
   cluster   --backends N             cross-process cluster tier: N fleet backend
                                      child processes + a consistent-hash front
                                      router (--nets preload, --shards, --replicas
-                                     ring points, --smoke scripted session;
-                                     --max-exact-cost / --samples forwarded to
-                                     every backend); adds verbs: PING TOPO
+                                     ring points, --smoke / --metrics-smoke
+                                     scripted sessions; --max-exact-cost /
+                                     --samples forwarded to every backend);
+                                     adds verbs: PING TOPO METRICS
   simulate  --net S                  modeled parallel times across --threads list
   selftest                           engine-agreement smoke check
   help                               this text
@@ -512,12 +519,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 e.name, e.cliques, e.entries, e.compile_time, e.tier
             );
         }
+        // observability knobs: queries slower than --slow-query-ms land in
+        // the slow-query trace log; --metrics-interval dumps the full
+        // exposition to stderr periodically (stdout stays protocol-clean
+        // for the cluster's FLEET READY handshake)
+        let slow_ms = args.parse_or("slow-query-ms", 0u64)?;
+        if slow_ms > 0 {
+            crate::obs::trace::set_slow_query_us(slow_ms.saturating_mul(1000));
+        }
+        let metrics_interval = args.parse_or("metrics-interval", 0u64)?;
+        if metrics_interval > 0 {
+            let dump_fleet = Arc::clone(&fleet);
+            std::thread::spawn(move || loop {
+                std::thread::sleep(std::time::Duration::from_secs(metrics_interval));
+                eprintln!("--- metrics ---\n{}", dump_fleet.metrics_exposition());
+            });
+        }
         let server = FleetServer::start(Arc::clone(&fleet), bind)?;
         // machine-readable start announcement: `fastbn cluster` parses
         // this from child stdout to learn each backend's ephemeral port
         println!("FLEET READY addr={}", server.addr());
         println!(
-            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/PING/EVICT/QUIT",
+            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/METRICS/TRACE/PING/EVICT/QUIT",
             fleet.loaded().len(),
             shards,
             server.addr(),
@@ -543,6 +566,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // intractable LOAD answers from the approximate tier with CI
             // half-widths, a tractable one stays exact (make approx-smoke)
             return approx_smoke(&server);
+        }
+        if args.has("metrics-smoke") {
+            // scripted observability self-check over a live socket:
+            // interleaved QUERYs must show up in the METRICS exposition
+            // with matching per-net counts, and TRACE must replay the
+            // last query's span tree (make metrics-smoke)
+            return metrics_smoke(&server);
         }
         // serve until killed
         loop {
@@ -631,6 +661,28 @@ impl SmokeClient {
     /// Send one request, read one reply line.
     fn ask(&mut self, req: &str) -> Result<String> {
         Ok(self.ask_lines(req, 1)?.remove(0))
+    }
+
+    /// Send one request, read a counted reply block: a header carrying
+    /// `lines=<n>` (the `METRICS` reply shape) followed by n body lines.
+    fn ask_block(&mut self, req: &str) -> Result<(String, Vec<String>)> {
+        use std::io::BufRead;
+        let header = self.ask(req)?;
+        let n: usize = header
+            .split_whitespace()
+            .find_map(|tok| tok.strip_prefix("lines="))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        let mut body = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(Error::msg(format!("{} failed: server closed mid-block after {req:?}", self.label)));
+            }
+            body.push(line.trim_end().to_string());
+        }
+        println!("< … {n} exposition lines");
+        Ok((header, body))
     }
 
     /// `ask` + assert the reply's prefix; returns the full reply.
@@ -754,6 +806,77 @@ fn approx_smoke(server: &FleetServer) -> Result<()> {
     Ok(())
 }
 
+/// Drive the observability surface through a live fleet socket: three
+/// QUERYs must show up in the `METRICS` exposition with a per-net counter
+/// and histogram count of exactly three, and `TRACE` must toggle and
+/// replay the last query's span tree — the `make metrics-smoke` assertion
+/// path.
+fn metrics_smoke(server: &FleetServer) -> Result<()> {
+    let mut client = SmokeClient::connect("metrics-smoke", server.addr())?;
+    client.expect("LOAD asia", "OK loaded asia")?;
+    client.expect("USE asia", "OK using asia")?;
+    client.expect("TRACE on", "OK trace on")?;
+    for _ in 0..3 {
+        client.expect("QUERY dysp | smoke=yes", "OK ")?;
+    }
+    let (header, body) = client.ask_block("METRICS")?;
+    if !header.starts_with("OK metrics lines=") {
+        return Err(Error::msg(format!("metrics-smoke failed: METRICS header {header:?}")));
+    }
+    let text = body.join("\n");
+    let checks: &[(&str, u64)] = &[
+        ("fastbn_queries_total{net=\"asia\"}", 3),
+        ("fastbn_query_latency_us_count{net=\"asia\"}", 3),
+        ("fastbn_query_latency_us_bucket{net=\"asia\",le=\"+Inf\"}", 3),
+    ];
+    for (key, want) in checks {
+        let got = crate::obs::scrape::value(&text, key);
+        if got != Some(*want) {
+            return Err(Error::msg(format!("metrics-smoke failed: {key} = {got:?}, wanted {want}")));
+        }
+    }
+    client.expect("TRACE last", "OK trace total_us=")?;
+    client.expect("TRACE off", "OK trace off")?;
+    client.quit()?;
+    println!("metrics-smoke passed (3 queries counted, latency histogram complete, trace replayed)");
+    Ok(())
+}
+
+/// Drive the cluster-wide scrape through a live front-tier socket: the
+/// merged `METRICS` block must list every backend's labeled series and an
+/// aggregate query counter matching the interleaved QUERYs — the cluster
+/// half of `make metrics-smoke`.
+fn cluster_metrics_smoke(server: &ClusterServer, specs: &[String], n_backends: usize) -> Result<()> {
+    let net = resolve_net(&specs[0])?;
+    let target = &net.vars[net.n() - 1].name;
+
+    let mut client = SmokeClient::connect("cluster-metrics-smoke", server.addr())?;
+    client.expect(&format!("USE {}", net.name), &format!("OK using {}", net.name))?;
+    client.expect(&format!("QUERY {target}"), "OK ")?;
+    let (header, body) = client.ask_block("METRICS")?;
+    let want_header = format!("OK metrics backends={n_backends} lines=");
+    if !header.starts_with(&want_header) {
+        return Err(Error::msg(format!(
+            "cluster-metrics-smoke failed: METRICS header {header:?}, wanted prefix {want_header:?}"
+        )));
+    }
+    let text = body.join("\n");
+    for i in 0..n_backends {
+        let label = format!("backend=\"b{i}\"");
+        if !text.contains(&label) {
+            return Err(Error::msg(format!("cluster-metrics-smoke failed: no series labeled {label} in scrape")));
+        }
+    }
+    let key = format!("fastbn_queries_total{{net=\"{}\"}}", net.name);
+    let got = crate::obs::scrape::value(&text, &key);
+    if got != Some(1) {
+        return Err(Error::msg(format!("cluster-metrics-smoke failed: aggregate {key} = {got:?}, wanted 1")));
+    }
+    client.quit()?;
+    println!("cluster-metrics-smoke passed ({n_backends} backends scraped and merged)");
+    Ok(())
+}
+
 /// Drive a scripted line-protocol session against `addr`, checking each
 /// reply's prefix and (optionally) a required substring — the assertion
 /// loop shared by the serve and cluster smokes.
@@ -833,9 +956,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let _validated: EngineKind = engine_text.parse()?; // fail before spawning anything
     let bind = args.get("bind").unwrap_or("127.0.0.1:7878");
     let smoke = args.has("smoke");
+    let metrics_smoke = args.has("metrics-smoke");
     let specs: Vec<String> = match args.get("nets") {
         Some(text) => text.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect(),
-        None if smoke => vec!["asia".into(), "cancer".into()],
+        None if smoke || metrics_smoke => vec!["asia".into(), "cancer".into()],
         None => Vec::new(),
     };
     if smoke && specs.len() < 2 {
@@ -898,12 +1022,19 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     let server = ClusterServer::start(Arc::clone(&cluster), bind)?;
     println!(
-        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/PING/TOPO/QUIT",
+        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/METRICS/PING/TOPO/QUIT",
         server.addr(),
         specs.len()
     );
     if smoke {
         let outcome = cluster_smoke(&server, &specs, n_backends);
+        server.shutdown();
+        cluster.shutdown();
+        children.kill_all();
+        return outcome;
+    }
+    if metrics_smoke {
+        let outcome = cluster_metrics_smoke(&server, &specs, n_backends);
         server.shutdown();
         cluster.shutdown();
         children.kill_all();
@@ -1212,6 +1343,24 @@ mod tests {
         .map(|s| s.to_string())
         .collect();
         assert_ne!(run(argv), 0);
+    }
+
+    #[test]
+    fn metrics_smoke_drives_the_verbs_through_a_socket() {
+        // the smoke flips the process-wide trace toggle over the wire;
+        // serialize with the other toggle-flipping tests and reset after
+        let _serialized = crate::obs::trace::TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let argv: Vec<String> = [
+            "serve", "--fleet", "--shards", "1", "--engine", "seq", "--threads", "1",
+            "--slow-query-ms", "1000", "--bind", "127.0.0.1:0", "--metrics-smoke",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let outcome = run(argv);
+        crate::obs::trace::set_enabled(false);
+        crate::obs::trace::set_slow_query_us(0);
+        assert_eq!(outcome, 0);
     }
 
     #[test]

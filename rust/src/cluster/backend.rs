@@ -67,6 +67,34 @@ impl BackendConn {
         }
         Ok(out)
     }
+
+    /// Send one request line, read a counted reply block: a header line
+    /// carrying `lines=<n>` (the `METRICS` reply shape) followed by
+    /// exactly n body lines. A header without `lines=` — an `ERR`, or an
+    /// old backend — is returned with an empty body rather than guessed
+    /// at. Timeout/EOF poisons the conn exactly like
+    /// [`BackendConn::request`].
+    pub fn request_block(&mut self, line: &str) -> std::io::Result<(String, Vec<String>)> {
+        let header = self.request(line)?;
+        let n: usize = header
+            .split_whitespace()
+            .find_map(|tok| tok.strip_prefix("lines="))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        let mut body = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut reply = String::new();
+            let got = self.reader.read_line(&mut reply)?;
+            if got == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "backend closed the connection mid-block",
+                ));
+            }
+            body.push(reply.trim_end().to_string());
+        }
+        Ok((header, body))
+    }
 }
 
 #[cfg(test)]
@@ -94,6 +122,25 @@ mod tests {
             BackendConn::connect(server.addr(), Duration::from_secs(1), Duration::from_secs(2)).unwrap();
         assert!(conn.request("PING").unwrap().starts_with("OK pong"));
         assert!(conn.request("LOAD asia").unwrap().starts_with("OK loaded asia"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn request_block_reads_a_counted_reply() {
+        let server = backend();
+        let mut conn =
+            BackendConn::connect(server.addr(), Duration::from_secs(1), Duration::from_secs(2)).unwrap();
+        conn.request("LOAD asia").unwrap();
+        conn.request("USE asia").unwrap();
+        assert!(conn.request("QUERY lung").unwrap().starts_with("OK yes="));
+        let (header, body) = conn.request_block("METRICS").unwrap();
+        assert!(header.starts_with("OK metrics lines="), "{header}");
+        assert!(body.iter().any(|l| l == "fastbn_queries_total{net=\"asia\"} 1"), "{body:?}");
+        // a non-counted reply has an empty body and the conn stays usable
+        let (header, body) = conn.request_block("PING").unwrap();
+        assert!(header.starts_with("OK pong"), "{header}");
+        assert!(body.is_empty());
+        assert!(conn.request("PING").unwrap().starts_with("OK pong"));
         server.shutdown();
     }
 

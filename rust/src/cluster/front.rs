@@ -597,6 +597,12 @@ impl Cluster {
         self.connect(addr)?.request(line)
     }
 
+    /// One counted-block request/reply (the `METRICS` shape) on a
+    /// short-lived control connection.
+    fn remote_block(&self, addr: SocketAddr, line: &str) -> std::io::Result<(String, Vec<String>)> {
+        self.connect(addr)?.request_block(line)
+    }
+
     /// `remote_line` with an explicit read bound (learn-spec control
     /// lines outlive the ordinary `io_timeout` by design).
     fn remote_line_bounded(&self, addr: SocketAddr, line: &str, read_timeout: Duration) -> std::io::Result<String> {
@@ -661,9 +667,13 @@ impl Cluster {
     }
 
     /// Cluster-wide `STATS`: per-network lines gathered from the owning
-    /// backends plus aggregate totals (latency percentiles merged
-    /// count-weighted via [`LatencySummary::merge`] — approximate, since
-    /// each backend reports its own window).
+    /// backends plus aggregate totals. Headline percentiles prefer the
+    /// bucket-wise merge of every backend's latency histograms (scraped
+    /// via `METRICS` — exact up to bucket resolution, since log2 bucket
+    /// counts add losslessly across backends); only when no backend
+    /// exposes histograms do they fall back to the count-weighted
+    /// [`LatencySummary::merge`], which is biased under skewed
+    /// per-backend distributions.
     pub fn stats_line(&self) -> String {
         let targets: Vec<(String, SocketAddr)> = {
             let st = self.state.lock().unwrap();
@@ -672,6 +682,7 @@ impl Cluster {
         let owners: BTreeMap<String, Option<String>> = self.directory().into_iter().collect();
         // net name → (backend id, parsed per-net segment)
         let mut per_net: BTreeMap<String, (String, NetStat)> = BTreeMap::new();
+        let mut scrapes: Vec<crate::obs::scrape::Scrape> = Vec::new();
         for (id, addr) in &targets {
             let Ok(reply) = self.remote_line(*addr, "STATS") else { continue };
             for stat in parse_backend_stats(&reply) {
@@ -679,17 +690,31 @@ impl Cluster {
                     per_net.insert(stat.net.clone(), (id.clone(), stat));
                 }
             }
+            if let Ok((header, body)) = self.remote_block(*addr, "METRICS") {
+                if header.starts_with("OK metrics") {
+                    scrapes.push(crate::obs::scrape::Scrape::parse(&body.join("\n")));
+                }
+            }
         }
         let (backends, alive, nets) = self.alive_counts();
-        let parts: Vec<LatencySummary> = per_net.values().map(|(_, s)| s.as_summary()).collect();
-        let merged = LatencySummary::merge(&parts);
+        let scrape_refs: Vec<&crate::obs::scrape::Scrape> = scrapes.iter().collect();
+        let (p50_us, p99_us) = match crate::obs::scrape::merged_percentiles(
+            &scrape_refs,
+            "fastbn_query_latency_us",
+            &[0.5, 0.99],
+        ) {
+            Some(ps) => (ps[0], ps[1]),
+            None => {
+                let parts: Vec<LatencySummary> = per_net.values().map(|(_, s)| s.as_summary()).collect();
+                let merged = LatencySummary::merge(&parts);
+                (merged.p50.as_micros() as u64, merged.p99.as_micros() as u64)
+            }
+        };
         let queries: u64 = per_net.values().map(|(_, s)| s.queries).sum();
         let errors: u64 = per_net.values().map(|(_, s)| s.errors).sum();
         let mut out = format!(
-            "STATS cluster uptime_ms={} backends={backends} alive={alive} nets={nets} queries={queries} errors={errors} p50_us={} p99_us={}",
+            "STATS cluster uptime_ms={} backends={backends} alive={alive} nets={nets} queries={queries} errors={errors} p50_us={p50_us} p99_us={p99_us}",
             self.started.elapsed().as_millis(),
-            merged.p50.as_micros(),
-            merged.p99.as_micros()
         );
         for (net, (id, s)) in &per_net {
             out.push_str(&format!(
@@ -703,6 +728,32 @@ impl Cluster {
             }
         }
         out
+    }
+
+    /// Cluster-wide `METRICS`: scrape every alive backend's exposition
+    /// and merge — counters and histogram buckets summed into aggregate
+    /// series, plus every backend's series re-labeled `backend="id"` so
+    /// outliers stay attributable. Same counted-block reply shape as the
+    /// backend verb: `OK metrics backends=<scraped> lines=<n>` then n
+    /// lines. Backends that fail to answer are simply absent from the
+    /// scrape (and from `backends=`).
+    pub fn metrics_line(&self) -> String {
+        let targets: Vec<(String, SocketAddr)> = {
+            let st = self.state.lock().unwrap();
+            st.backends.iter().filter(|(_, b)| b.alive).map(|(id, b)| (id.clone(), b.addr)).collect()
+        };
+        let mut parts: Vec<(String, String)> = Vec::new();
+        for (id, addr) in &targets {
+            let Ok((header, body)) = self.remote_block(*addr, "METRICS") else { continue };
+            if header.starts_with("OK metrics") {
+                parts.push((id.clone(), body.join("\n")));
+            }
+        }
+        let merged = crate::obs::scrape::merge_exposition(&parts);
+        if merged.is_empty() {
+            return format!("OK metrics backends={} lines=0", parts.len());
+        }
+        format!("OK metrics backends={} lines={}\n{merged}", parts.len(), merged.lines().count())
     }
 }
 
@@ -827,14 +878,16 @@ impl ClusterSession {
             "USE" => self.cmd_use(rest),
             "NETS" => self.cluster.nets_line(),
             "STATS" => self.cluster.stats_line(),
+            "METRICS" => self.cluster.metrics_line(),
             "PING" => self.cluster.ping_line(),
             "TOPO" => self.cluster.topo_line(),
             // a forwarded data verb reaches the pinned backend session (or
             // tears the pin down), and either way its batch collection is
             // over — mirror that here. Verbs the front answers locally
-            // (LOAD/NETS/STATS/PING/TOPO, unknown) never touch the conn
-            // and must leave the mirrored count alone.
-            "OBSERVE" | "RETRACT" | "COMMIT" | "QUERY" => {
+            // (LOAD/NETS/STATS/METRICS/PING/TOPO, unknown) never touch the
+            // conn and must leave the mirrored count alone. TRACE forwards:
+            // the ring lives where the engines run, on the backend.
+            "OBSERVE" | "RETRACT" | "COMMIT" | "QUERY" | "TRACE" => {
                 self.batch = None;
                 self.forward(line)
             }

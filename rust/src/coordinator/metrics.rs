@@ -43,13 +43,19 @@ impl LatencySummary {
         }
     }
 
-    /// Count-weighted aggregate of summaries from independent sources —
-    /// how the cluster front tier folds per-backend `STATS` snapshots
-    /// into one headline. Counts, totals, min, and max combine exactly;
-    /// the percentiles are count-weighted means of the parts'
-    /// percentiles, an *approximation* (exact percentile merging needs
-    /// the raw samples, which never cross the wire). Zero-count parts
-    /// contribute nothing; an all-empty input merges to the zero summary.
+    /// Count-weighted aggregate of summaries from independent sources.
+    /// Counts, totals, min, and max combine exactly; the percentiles are
+    /// count-weighted means of the parts' percentiles, which is **not** a
+    /// percentile of the pooled samples and is biased whenever the parts'
+    /// distributions differ (one slow backend among fast ones drags every
+    /// merged percentile up proportionally to its count, instead of
+    /// landing in the tail where it belongs). The cluster front therefore
+    /// prefers merging the backends' latency *histograms* bucket-wise
+    /// (see `obs::scrape::merged_percentiles` — bucket counts add
+    /// losslessly, so pooled percentiles are exact up to bucket width)
+    /// and uses this only as the fallback when no backend exposes
+    /// histograms. Zero-count parts contribute nothing; an all-empty
+    /// input merges to the zero summary.
     pub fn merge(parts: &[LatencySummary]) -> LatencySummary {
         let count: usize = parts.iter().map(|p| p.count).sum();
         if count == 0 {

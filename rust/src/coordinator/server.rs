@@ -146,6 +146,18 @@ impl LineServer {
         self.reaped.load(Ordering::Relaxed)
     }
 
+    /// The live-connection gauge itself — wrapping servers register it
+    /// with an observability registry (gauges pull at render time, so
+    /// they need the handle, not a snapshot).
+    pub(crate) fn active_handle(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.active)
+    }
+
+    /// The reaped-connection counter (see [`LineServer::active_handle`]).
+    pub(crate) fn reaped_handle(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.reaped)
+    }
+
     /// Stop accepting and wait for every thread to end (idempotent).
     pub(crate) fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Relaxed);

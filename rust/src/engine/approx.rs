@@ -190,19 +190,33 @@ impl Engine for ApproxEngine {
         let mut total = ChunkAcc { acc: vec![0.0; self.total_states], w_sum: 0.0, w_sq: 0.0 };
         let mut drawn = 0usize;
         let mut next_chunk = 0u64;
+        let mut rounds = 0u64;
         let budget = self.samples.saturating_mul(BUDGET_ROUNDS);
+        // Telemetry below only reads the clock and bumps counters; the
+        // sampling path (RNG streams, merge order) is untouched, so
+        // posteriors stay bit-identical with observability on or off.
+        let root_span = crate::obs::trace::span("approx.infer");
         loop {
+            let round_span = crate::obs::trace::span("approx.round");
             self.run_round(next_chunk, n_chunks, &obs, ev, &mut total);
             next_chunk += n_chunks as u64;
             drawn += n_chunks * CHUNK;
+            rounds += 1;
+            let ess = if total.w_sq > 0.0 { total.w_sum * total.w_sum / total.w_sq } else { 0.0 };
+            round_span.note(&format!("drawn={drawn} ess={ess:.0}"));
+            drop(round_span);
             if self.target_half_width <= 0.0 || drawn >= budget {
                 break;
             }
-            let ess = if total.w_sq > 0.0 { total.w_sum * total.w_sum / total.w_sq } else { 0.0 };
             let info = ApproxInfo { n_samples: drawn, effective_samples: ess };
             if ess > 0.0 && info.max_half_width() <= self.target_half_width {
                 break;
             }
+        }
+        crate::obs::global().counter("fastbn_approx_rounds_total").add(rounds);
+        {
+            let ess = if total.w_sq > 0.0 { total.w_sum * total.w_sum / total.w_sq } else { 0.0 };
+            root_span.note(&format!("rounds={rounds} drawn={drawn} ess={ess:.0}"));
         }
 
         if total.w_sum <= 0.0 {

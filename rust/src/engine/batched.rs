@@ -40,6 +40,7 @@ use crate::jt::ops;
 use crate::jt::schedule::{Msg, Schedule};
 use crate::jt::state::{BatchState, TreeState};
 use crate::jt::tree::JunctionTree;
+use crate::obs::{self, trace};
 use crate::{Error, Result};
 
 /// Per-worker region-A scratch: lane-expanded partial separator buffer
@@ -211,6 +212,11 @@ impl BatchedHybridEngine {
         debug_assert!(chunk.len() <= self.lanes && !chunk.is_empty());
         let lanes = self.lanes;
         let occ = chunk.len();
+        // Telemetry only (clock reads + counter bumps): posteriors are
+        // byte-identical with observability on or off.
+        let sweep_span = trace::span("batched.sweep");
+        sweep_span.note(&format!("occ={occ}/{lanes}"));
+        obs::global().histogram("fastbn_batched_lane_occupancy").record_value(occ as u64);
         self.state.reset();
         for f in &self.failed {
             f.store(false, Ordering::Relaxed);

@@ -51,6 +51,7 @@ use crate::jt::ops;
 use crate::jt::schedule::{Msg, Schedule};
 use crate::jt::state::TreeState;
 use crate::jt::tree::JunctionTree;
+use crate::obs::{self, trace};
 use crate::{Error, Result};
 
 /// Precomputed flat plan for one traversal layer. Shared with the
@@ -380,10 +381,18 @@ impl Engine for HybridEngine {
     }
 
     fn infer(&mut self, state: &mut TreeState, ev: &Evidence) -> Result<Posteriors> {
+        // Telemetry below reads the clock and bumps counters only — the
+        // numeric path is untouched, so posteriors stay byte-identical.
+        let root_span = trace::span("hybrid.infer");
+        let regions0 = self.regions;
         state.reset(&self.jt);
         ev.apply(&self.jt, state);
-        for li in 0..self.up_plans.len() {
-            self.run_layer(state, true, li)?;
+        {
+            let up_span = trace::span("hybrid.up");
+            for li in 0..self.up_plans.len() {
+                self.run_layer(state, true, li)?;
+            }
+            up_span.note(&format!("layers={}", self.up_plans.len()));
         }
         for root in self.sched.roots.clone() {
             let data = state.clique_mut(root);
@@ -395,10 +404,18 @@ impl Engine for HybridEngine {
             state.log_z += mass.ln();
         }
         let z = state.log_z;
-        for li in 0..self.down_plans.len() {
-            self.run_layer(state, false, li)?;
+        {
+            let down_span = trace::span("hybrid.down");
+            for li in 0..self.down_plans.len() {
+                self.run_layer(state, false, li)?;
+            }
+            down_span.note(&format!("layers={}", self.down_plans.len()));
         }
         state.log_z = z;
+        let sweep_regions = self.regions - regions0;
+        root_span.note(&format!("regions={sweep_regions}"));
+        obs::global().counter("fastbn_hybrid_sweeps_total").inc();
+        obs::global().counter("fastbn_pool_regions_total").add(sweep_regions);
         Posteriors::compute(&self.jt, state)
     }
 

@@ -16,11 +16,24 @@ use crate::fleet::registry::Tier;
 /// Samples kept per network (sliding window for percentiles).
 const WINDOW: usize = 4096;
 
+/// An approx query is flagged degenerate when `ESS/n` drops below this —
+/// the classic likelihood-weighting failure mode on deep-tail evidence
+/// (a handful of samples carry nearly all the weight).
+pub const DEGENERATE_ESS_FRACTION: f64 = 0.1;
+
 struct NetCounters {
     tier: Tier,
     queries: u64,
     errors: u64,
     reservoir: Reservoir,
+    /// Running sum of per-query relative weight variance (`n/ESS − 1`) —
+    /// approx-tier health; see [`FleetMetrics::record_approx`].
+    wvar_sum: f64,
+    /// Approx queries folded into `wvar_sum`.
+    wvar_n: u64,
+    /// Queries whose ESS collapsed below [`DEGENERATE_ESS_FRACTION`] of
+    /// the drawn samples — evidence deep in the tail, LW degenerating.
+    degen: u64,
 }
 
 /// Point-in-time view of one network's serving metrics.
@@ -38,6 +51,12 @@ pub struct NetSnapshot {
     pub qps: f64,
     /// Latency summary over the recent-sample window.
     pub latency: LatencySummary,
+    /// Mean relative weight variance (`n/ESS − 1`) over this network's
+    /// approx queries; `None` until one has been recorded.
+    pub weight_variance: Option<f64>,
+    /// Approx queries whose ESS collapsed (see
+    /// [`DEGENERATE_ESS_FRACTION`]).
+    pub degenerate: u64,
 }
 
 /// Aggregates serving metrics across every network in a fleet.
@@ -69,7 +88,15 @@ impl FleetMetrics {
             .unwrap()
             .entry(net.to_string())
             .and_modify(|c| c.tier = tier)
-            .or_insert_with(|| NetCounters { tier, queries: 0, errors: 0, reservoir: Reservoir::new(WINDOW) });
+            .or_insert_with(|| NetCounters {
+                tier,
+                queries: 0,
+                errors: 0,
+                reservoir: Reservoir::new(WINDOW),
+                wvar_sum: 0.0,
+                wvar_n: 0,
+                degen: 0,
+            });
     }
 
     /// Record one query against `net`: its service time and outcome.
@@ -86,6 +113,25 @@ impl FleetMetrics {
         } else {
             c.errors += 1;
         }
+    }
+
+    /// Record the sampling health of one successful approx-tier query
+    /// (the [`crate::infer::query::ApproxInfo`] the posterior carried).
+    /// Returns whether this query was degenerate (`ESS/n` below
+    /// [`DEGENERATE_ESS_FRACTION`]) so the caller can bump its registry
+    /// counter. Same anti-resurrection rule as [`FleetMetrics::record`]:
+    /// a no-op (returning `false`) for networks without an entry.
+    pub fn record_approx(&self, net: &str, info: &crate::infer::query::ApproxInfo) -> bool {
+        let mut nets = self.nets.lock().unwrap();
+        let Some(c) = nets.get_mut(net) else { return false };
+        c.wvar_sum += info.relative_weight_variance();
+        c.wvar_n += 1;
+        let degenerate =
+            info.n_samples > 0 && info.effective_samples / info.n_samples as f64 < DEGENERATE_ESS_FRACTION;
+        if degenerate {
+            c.degen += 1;
+        }
+        degenerate
     }
 
     /// Drop a network's counters — called on registry eviction so a fleet
@@ -112,12 +158,19 @@ impl FleetMetrics {
                 errors: c.errors,
                 qps: c.queries as f64 / uptime,
                 latency: c.reservoir.summary(),
+                weight_variance: (c.wvar_n > 0).then(|| c.wvar_sum / c.wvar_n as f64),
+                degenerate: c.degen,
             })
             .collect()
     }
 
     /// Render the single-line `STATS` reply:
     /// `STATS uptime_ms=… nets=N | <net> queries=… errors=… qps=… p50_us=… p99_us=… tier=… | …`
+    ///
+    /// Approx-tier networks additionally carry ` wvar=… degen=…` —
+    /// appended after `tier=`, so older scrapers (which ignore unknown
+    /// `key=value` fields, as `cluster::parse_backend_stats` does) keep
+    /// parsing.
     pub fn render(&self) -> String {
         let snaps = self.snapshot();
         let mut out = format!("STATS uptime_ms={} nets={}", self.uptime().as_millis(), snaps.len());
@@ -132,6 +185,9 @@ impl FleetMetrics {
                 s.latency.p99.as_micros(),
                 s.tier
             ));
+            if s.tier == Tier::Approx {
+                out.push_str(&format!(" wvar={:.3} degen={}", s.weight_variance.unwrap_or(0.0), s.degenerate));
+            }
         }
         out
     }
@@ -189,6 +245,29 @@ mod tests {
         assert!(line.contains("p99_us=150"), "{line}");
         assert!(line.contains("tier=approx"), "{line}");
         assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn approx_health_fields_render_for_approx_nets_only() {
+        use crate::infer::query::ApproxInfo;
+        let m = FleetMetrics::new();
+        m.ensure("exact-net", Tier::Exact);
+        m.ensure("approx-net", Tier::Approx);
+        // healthy query: ESS = n → wvar 0, not degenerate
+        assert!(!m.record_approx("approx-net", &ApproxInfo { n_samples: 1000, effective_samples: 1000.0 }));
+        // degenerate query: ESS/n = 0.05 < 0.1; wvar = 1000/50 − 1 = 19
+        assert!(m.record_approx("approx-net", &ApproxInfo { n_samples: 1000, effective_samples: 50.0 }));
+        // anti-resurrection: unknown nets never mint entries
+        assert!(!m.record_approx("ghost", &ApproxInfo { n_samples: 10, effective_samples: 1.0 }));
+        let line = m.render();
+        assert!(line.contains("tier=approx wvar=9.500 degen=1"), "{line}");
+        let exact = line.split(" | ").find(|s| s.starts_with("exact-net")).unwrap();
+        assert!(!exact.contains("wvar="), "{exact}");
+        let snaps = m.snapshot();
+        let approx = snaps.iter().find(|s| s.net == "approx-net").unwrap();
+        assert_eq!(approx.weight_variance, Some(9.5));
+        assert_eq!(approx.degenerate, 1);
+        assert_eq!(snaps.iter().find(|s| s.net == "exact-net").unwrap().weight_variance, None);
     }
 
     #[test]

@@ -35,6 +35,13 @@
 //!                         lines — n evidence lines in, n posterior
 //!                         lines out. Any other verb aborts the batch.
 //! STATS                   fleet-wide per-network counters and latency
+//! METRICS                 Prometheus-style text exposition (header line
+//!                         `OK metrics lines=<n>` followed by n lines):
+//!                         per-net query counters and latency histograms,
+//!                         registry LRU and connection gauges, plus the
+//!                         process-global engine/compiler series
+//! TRACE <on|off|last>     toggle per-query span recording / return the
+//!                         most recent span tree as one line
 //! PING                    liveness probe (the cluster tier's health check)
 //! EVICT <net>             drop a network (cluster registry hand-off)
 //! QUIT                    end the session
@@ -106,6 +113,10 @@ pub struct Fleet {
     registry: Registry,
     router: Router,
     metrics: FleetMetrics,
+    /// Per-fleet observability registry (per-net counters/histograms plus
+    /// LRU and connection gauges) — fleet-scoped, not process-global, so
+    /// in-process fleets (tests, the cluster harness) stay isolated.
+    obs: Arc<crate::obs::Registry>,
     /// Serializes load/evict/ensure so concurrent `LOAD`s cannot leave the
     /// registry and router disagreeing about which networks are servable.
     load_lock: std::sync::Mutex<()>,
@@ -118,13 +129,21 @@ impl Fleet {
         // an approximate fleet never compiles: EngineKind::Approx pins the
         // threshold to 0 so every load lands on the sampling tier
         let max_exact_cost = if cfg.engine == EngineKind::Approx { 0.0 } else { cfg.max_exact_cost };
-        Fleet {
-            registry: Registry::with_max_exact_cost(cfg.registry_capacity, max_exact_cost),
-            router,
-            metrics: FleetMetrics::new(),
-            load_lock: std::sync::Mutex::new(()),
-            cfg,
-        }
+        let registry = Registry::with_max_exact_cost(cfg.registry_capacity, max_exact_cost);
+        let obs = Arc::new(crate::obs::Registry::default());
+        // registry LRU accounting as live gauges (satellite of the verb
+        // surface: previously counted nowhere, now scrapeable)
+        let (hits, misses, evictions) = registry.lru_counter_handles();
+        obs.register_gauge("fastbn_registry_lru_hits_total", move || {
+            hits.load(std::sync::atomic::Ordering::Relaxed)
+        });
+        obs.register_gauge("fastbn_registry_lru_misses_total", move || {
+            misses.load(std::sync::atomic::Ordering::Relaxed)
+        });
+        obs.register_gauge("fastbn_registry_lru_evictions_total", move || {
+            evictions.load(std::sync::atomic::Ordering::Relaxed)
+        });
+        Fleet { registry, router, metrics: FleetMetrics::new(), obs, load_lock: std::sync::Mutex::new(()), cfg }
     }
 
     /// The configuration in use.
@@ -168,6 +187,7 @@ impl Fleet {
         for evicted in &loaded.evicted {
             self.router.remove(evicted);
             self.metrics.remove(evicted);
+            self.obs.remove_matching(&format!("net=\"{evicted}\""));
         }
         self.router.ensure(&loaded.entry.name, &loaded.model)?;
         self.metrics.ensure(&loaded.entry.name, loaded.entry.tier);
@@ -208,6 +228,7 @@ impl Fleet {
         if existed {
             self.router.remove(name);
             self.metrics.remove(name);
+            self.obs.remove_matching(&format!("net=\"{name}\""));
         }
         existed
     }
@@ -220,12 +241,27 @@ impl Fleet {
         match self.router.query(name, ev) {
             Ok((post, service)) => {
                 self.metrics.record(name, service, true);
+                self.record_obs(name, service, &post);
                 Ok(post)
             }
             Err(e) => {
                 // a no-op for unknown names: record never mints entries
                 self.metrics.record(name, Duration::ZERO, false);
+                self.obs.counter(&crate::obs::series("fastbn_query_errors_total", &[("net", name)])).inc();
                 Err(e)
+            }
+        }
+    }
+
+    /// Fold one successful query into the per-net observability series:
+    /// count, latency histogram, and (for approx posteriors) the sampling
+    /// health counters.
+    fn record_obs(&self, name: &str, service: Duration, post: &Posteriors) {
+        self.obs.counter(&crate::obs::series("fastbn_queries_total", &[("net", name)])).inc();
+        self.obs.histogram(&crate::obs::series("fastbn_query_latency_us", &[("net", name)])).record(service);
+        if let Some(info) = &post.approx {
+            if self.metrics.record_approx(name, info) {
+                self.obs.counter(&crate::obs::series("fastbn_approx_degenerate_total", &[("net", name)])).inc();
             }
         }
     }
@@ -246,6 +282,13 @@ impl Fleet {
                 let per_case = service / n;
                 for r in &results {
                     self.metrics.record(name, per_case, r.is_ok());
+                    match r {
+                        Ok(post) => self.record_obs(name, per_case, post),
+                        Err(_) => self
+                            .obs
+                            .counter(&crate::obs::series("fastbn_query_errors_total", &[("net", name)]))
+                            .inc(),
+                    }
                 }
                 Ok(results)
             }
@@ -256,6 +299,9 @@ impl Fleet {
                 for _ in 0..n {
                     self.metrics.record(name, Duration::ZERO, false);
                 }
+                self.obs
+                    .counter(&crate::obs::series("fastbn_query_errors_total", &[("net", name)]))
+                    .add(n as u64);
                 Err(e)
             }
         }
@@ -279,6 +325,21 @@ impl Fleet {
     /// The single-line `STATS` reply.
     pub fn stats_line(&self) -> String {
         self.metrics.render()
+    }
+
+    /// The fleet-scoped observability registry (per-net query series,
+    /// LRU/connection gauges). Engine- and compiler-level series live in
+    /// [`crate::obs::global`]; the two use disjoint series names.
+    pub fn obs(&self) -> &Arc<crate::obs::Registry> {
+        &self.obs
+    }
+
+    /// The `METRICS` verb body: fleet-scoped series followed by the
+    /// process-global engine/compiler series, Prometheus text format.
+    /// Empty registries contribute nothing (the body may be empty).
+    pub fn metrics_exposition(&self) -> String {
+        let parts = [self.obs.render(), crate::obs::global().render()];
+        parts.iter().filter(|p| !p.is_empty()).cloned().collect::<Vec<_>>().join("\n")
     }
 }
 
@@ -352,6 +413,27 @@ mod tests {
         assert!(post.probs.iter().all(|p| (p.iter().sum::<f64>() - 1.0).abs() < 1e-9));
         // the exact resident still answers exactly
         assert!(fleet.query("asia", Evidence::none()).unwrap().approx.is_none());
+    }
+
+    #[test]
+    fn obs_series_track_queries_and_die_with_eviction() {
+        let fleet = small_fleet();
+        fleet.load("asia").unwrap();
+        fleet.query("asia", Evidence::none()).unwrap();
+        fleet.query("asia", Evidence::none()).unwrap();
+        assert!(fleet.query("asia", Evidence::from_pairs(&fleet.tree("asia").unwrap().net, &[]).unwrap()).is_ok());
+        let body = fleet.metrics_exposition();
+        assert!(body.contains("fastbn_queries_total{net=\"asia\"} 3"), "{body}");
+        assert!(body.contains("fastbn_query_latency_us_count{net=\"asia\"} 3"), "{body}");
+        assert!(body.contains("fastbn_registry_lru_misses_total 1"), "{body}");
+        // a failed query counts errors, not queries
+        assert!(fleet.query("ghost", Evidence::none()).is_err());
+        let body = fleet.metrics_exposition();
+        assert!(body.contains("fastbn_query_errors_total{net=\"ghost\"} 1"), "{body}");
+        // eviction reaps the per-net series (counters and histogram alike)
+        fleet.evict("asia");
+        let body = fleet.metrics_exposition();
+        assert!(!body.contains("net=\"asia\""), "{body}");
     }
 
     #[test]

@@ -37,6 +37,7 @@
 //! specs are an operator error compile-once cannot detect.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -171,6 +172,14 @@ pub struct Registry {
     capacity: usize,
     max_exact_cost: f64,
     inner: Mutex<Inner>,
+    /// LRU accounting over `load`/`install` calls (not `get` lookups):
+    /// loads served from cache. `Arc`'d so the fleet can hand live
+    /// handles to metrics gauges without holding the registry.
+    hits: Arc<AtomicU64>,
+    /// Loads that actually resolved and compiled (`freshly_compiled`).
+    misses: Arc<AtomicU64>,
+    /// Networks evicted by capacity pressure (not explicit `remove`).
+    evictions: Arc<AtomicU64>,
 }
 
 /// Result of a [`Registry::load`]: the entry's accounting, the shared
@@ -201,7 +210,26 @@ impl Registry {
     /// entirely; a threshold `<= 0` forces every load approximate.
     pub fn with_max_exact_cost(capacity: usize, max_exact_cost: f64) -> Self {
         let inner = Inner { nets: BTreeMap::new(), aliases: BTreeMap::new(), clock: 0 };
-        Registry { capacity: capacity.max(1), max_exact_cost, inner: Mutex::new(inner) }
+        Registry {
+            capacity: capacity.max(1),
+            max_exact_cost,
+            inner: Mutex::new(inner),
+            hits: Arc::new(AtomicU64::new(0)),
+            misses: Arc::new(AtomicU64::new(0)),
+            evictions: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// LRU accounting: `(hits, misses, evictions)` over loads (see the
+    /// field docs). Surfaced as gauges on the fleet's metrics registry.
+    pub fn lru_counters(&self) -> (u64, u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed), self.evictions.load(Ordering::Relaxed))
+    }
+
+    /// Live handles to the LRU counters, for gauge callbacks that must
+    /// outlive any borrow of the registry.
+    pub fn lru_counter_handles(&self) -> (Arc<AtomicU64>, Arc<AtomicU64>, Arc<AtomicU64>) {
+        (Arc::clone(&self.hits), Arc::clone(&self.misses), Arc::clone(&self.evictions))
     }
 
     fn entry_for(name: &str, model: &Compiled, compile_time: Duration) -> RegistryEntry {
@@ -273,10 +301,12 @@ impl Registry {
         // already resolved (a path) aliased onto a resident name — either
         // way the file is not re-read.
         if let Some((model, ct)) = self.lookup(spec) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Self::cache_hit(spec, model, ct));
         }
         if let Some(name) = self.inner.lock().unwrap().aliases.get(spec).cloned() {
             if let Some((model, ct)) = self.lookup(&name) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
                 return Ok(Self::cache_hit(&name, model, ct));
             }
         }
@@ -304,6 +334,7 @@ impl Registry {
             self.inner.lock().unwrap().aliases.insert(spec.to_string(), name.clone());
         }
         if let Some((model, ct)) = self.lookup(&name) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Self::cache_hit(&name, model, ct));
         }
         let t0 = Instant::now();
@@ -314,6 +345,7 @@ impl Registry {
         if let Some(r) = inner.nets.get(&name) {
             // a concurrent load won the race; keep its model
             let (model, ct) = (r.model.clone(), r.compile_time);
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Self::cache_hit(&name, model, ct));
         }
         inner.clock += 1;
@@ -331,11 +363,13 @@ impl Registry {
                 Some(k) => {
                     inner.nets.remove(&k);
                     inner.aliases.retain(|_, target| *target != k);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
                     evicted.push(k);
                 }
                 None => break,
             }
         }
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let entry = Self::entry_for(&name, &model, compile_time);
         Ok(Loaded { entry, model, evicted, freshly_compiled: true })
     }
@@ -459,6 +493,25 @@ mod tests {
         assert_eq!(reg.names(), vec!["asia".to_string(), "sprinkler".to_string()]);
         // evicted networks can be reloaded (recompiled)
         assert!(reg.load("cancer").unwrap().freshly_compiled);
+    }
+
+    #[test]
+    fn lru_counters_track_hits_misses_and_evictions() {
+        let reg = Registry::new(2);
+        assert_eq!(reg.lru_counters(), (0, 0, 0));
+        reg.load("asia").unwrap(); // miss
+        reg.load("asia").unwrap(); // hit (resident-name fast path)
+        reg.load("cancer").unwrap(); // miss
+        reg.load("sprinkler").unwrap(); // miss + evicts asia
+        assert_eq!(reg.lru_counters(), (1, 3, 1));
+        // explicit remove is not an eviction
+        assert!(reg.remove("cancer"));
+        assert_eq!(reg.lru_counters(), (1, 3, 1));
+        let (h, m, e) = reg.lru_counter_handles();
+        assert_eq!(
+            (h.load(Ordering::Relaxed), m.load(Ordering::Relaxed), e.load(Ordering::Relaxed)),
+            reg.lru_counters()
+        );
     }
 
     #[test]

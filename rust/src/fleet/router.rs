@@ -184,6 +184,11 @@ fn shard_worker(
         // worker dies with its depth stuck and ~1/N of the network's
         // queries fail as "shutting down" forever
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // trace root for the whole dispatch: engines run on this very
+            // thread, so their spans nest under it and the guard's drop
+            // publishes the query's span tree (ring / slow-query log)
+            let dispatch_span = crate::obs::trace::span("shard.infer");
+            dispatch_span.note(&format!("cases={}", job.cases.len()));
             engine.infer_batch(&mut state, &job.cases)
         }));
         depth.fetch_sub(1, Ordering::Relaxed);

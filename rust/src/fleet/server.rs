@@ -32,6 +32,16 @@ impl FleetServer {
                 SessionReply::Quit => None,
             })
         })?;
+        // connection gauges into the fleet's metrics registry: scrapers
+        // see transport health next to query counters
+        let active = inner.active_handle();
+        fleet.obs().register_gauge("fastbn_connections_active", move || {
+            active.load(std::sync::atomic::Ordering::Relaxed) as u64
+        });
+        let reaped = inner.reaped_handle();
+        fleet.obs().register_gauge("fastbn_connections_reaped_total", move || {
+            reaped.load(std::sync::atomic::Ordering::Relaxed)
+        });
         Ok(FleetServer { inner, fleet })
     }
 

@@ -134,6 +134,8 @@ impl Session {
             "BATCH" => self.cmd_batch(rest),
             "CASE" => self.cmd_case(rest),
             "STATS" => self.fleet.stats_line(),
+            "METRICS" => self.cmd_metrics(),
+            "TRACE" => self.cmd_trace(rest),
             "PING" => format!("OK pong nets={}", self.fleet.loaded().len()),
             "EVICT" => self.cmd_evict(rest),
             other => format!("ERR unknown verb {other:?}"),
@@ -413,6 +415,41 @@ impl Session {
             Err(e) => (0..collect.expect).map(|_| format!("ERR {e}")).collect(),
         };
         lines.join("\n")
+    }
+
+    /// `METRICS`: the Prometheus-style exposition as a counted block —
+    /// header `OK metrics lines=<n>` followed by exactly n body lines (the
+    /// line server writes the joined reply as n+1 wire lines), so any
+    /// line-protocol client (the cluster front included) knows how much to
+    /// read without a terminator convention.
+    fn cmd_metrics(&self) -> String {
+        let body = self.fleet.metrics_exposition();
+        if body.is_empty() {
+            return "OK metrics lines=0".into();
+        }
+        format!("OK metrics lines={}\n{body}", body.lines().count())
+    }
+
+    /// `TRACE on|off|last`: per-query span recording. `on`/`off` flip the
+    /// process-wide recorder (spans are captured on the shard worker
+    /// threads that run the engines, so the toggle cannot be per-session);
+    /// `last` returns the most recent completed trace as one line.
+    fn cmd_trace(&self, arg: &str) -> String {
+        match arg.to_ascii_lowercase().as_str() {
+            "on" => {
+                crate::obs::trace::set_enabled(true);
+                "OK trace on".into()
+            }
+            "off" => {
+                crate::obs::trace::set_enabled(false);
+                "OK trace off".into()
+            }
+            "last" => match crate::obs::trace::last() {
+                Some(t) => format!("OK trace {}", t.render()),
+                None => "ERR no trace recorded (TRACE on, then QUERY)".into(),
+            },
+            _ => "ERR usage: TRACE <on|off|last>".into(),
+        }
     }
 
     fn cmd_query(&mut self, rest: &str) -> String {
@@ -782,6 +819,41 @@ mod tests {
         let r = line(&mut s, "NETS");
         assert!(r.starts_with("OK nets=2 asia[cliques=6"), "{r}");
         assert!(r.contains(" cancer[cliques="), "{r}");
+    }
+
+    #[test]
+    fn metrics_verb_returns_a_counted_exposition_block() {
+        let mut s = session();
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        line(&mut s, "QUERY lung");
+        line(&mut s, "QUERY lung | smoke=yes");
+        let reply = line(&mut s, "METRICS");
+        let mut lines = reply.lines();
+        let header = lines.next().unwrap();
+        let body: Vec<&str> = lines.collect();
+        let n: usize = header.strip_prefix("OK metrics lines=").expect(header).parse().unwrap();
+        assert_eq!(n, body.len(), "{reply}");
+        assert!(body.contains(&"fastbn_queries_total{net=\"asia\"} 2"), "{reply}");
+        assert!(body.iter().any(|l| l.starts_with("# TYPE fastbn_query_latency_us histogram")), "{reply}");
+        assert!(body.contains(&"fastbn_query_latency_us_count{net=\"asia\"} 2"), "{reply}");
+    }
+
+    #[test]
+    fn trace_verb_toggles_and_replays() {
+        let _serialized = crate::obs::trace::TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut s = session();
+        assert!(line(&mut s, "TRACE").starts_with("ERR usage: TRACE"));
+        assert!(line(&mut s, "TRACE maybe").starts_with("ERR usage: TRACE"));
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        assert_eq!(line(&mut s, "TRACE on"), "OK trace on");
+        line(&mut s, "QUERY lung");
+        // the ring is process-wide (other tests may also be tracing), so
+        // assert the reply shape, not a specific span tree
+        let r = line(&mut s, "TRACE last");
+        assert!(r.starts_with("OK trace total_us="), "{r}");
+        assert_eq!(line(&mut s, "TRACE off"), "OK trace off");
     }
 
     #[test]

@@ -49,6 +49,18 @@ impl ApproxInfo {
     pub fn max_half_width(&self) -> f64 {
         self.half_width(0.5)
     }
+
+    /// Relative variance of the normalized importance weights,
+    /// `Var(w)/E[w]² = n/ESS − 1`: 0 when every weight is equal (prior
+    /// sampling), growing without bound as likelihood weighting
+    /// degenerates on deep-tail evidence. The fleet surfaces this as the
+    /// `wvar=` health field on `STATS`.
+    pub fn relative_weight_variance(&self) -> f64 {
+        if self.effective_samples <= 0.0 || self.n_samples == 0 {
+            return 0.0;
+        }
+        (self.n_samples as f64 / self.effective_samples - 1.0).max(0.0)
+    }
 }
 
 impl Posteriors {

@@ -159,6 +159,10 @@ impl JunctionTree {
     /// Compile a network into a junction tree with the given triangulation
     /// heuristic.
     pub fn compile(net: &Network, heuristic: TriangulationHeuristic) -> Result<Self> {
+        // Telemetry only: a trace span plus a compile-time histogram on
+        // the global registry; the pipeline itself is untouched.
+        let compile_span = crate::obs::trace::span("jt.compile");
+        let compile_start = std::time::Instant::now();
         let all_cards = net.cards();
         let weights: Vec<f64> = all_cards.iter().map(|&c| (c as f64).ln()).collect();
 
@@ -268,7 +272,7 @@ impl JunctionTree {
             })
             .collect();
 
-        Ok(JunctionTree {
+        let tree = JunctionTree {
             net: net.clone(),
             cliques,
             seps,
@@ -279,7 +283,11 @@ impl JunctionTree {
             arena_proto,
             edge_maps,
             heuristic,
-        })
+        };
+        compile_span
+            .note(&format!("cliques={} entries={}", tree.n_cliques(), tree.total_clique_entries()));
+        crate::obs::global().histogram("fastbn_jt_compile_us").record(compile_start.elapsed());
+        Ok(tree)
     }
 
     /// Prototype potentials of clique `c` (a slice of the flat arena).

@@ -46,6 +46,7 @@ pub mod fleet;
 pub mod infer;
 pub mod jt;
 pub mod learn;
+pub mod obs;
 pub mod prop;
 pub mod rng;
 pub mod runtime;

@@ -1,0 +1,345 @@
+//! Process-wide metrics registry: counters, gauges, and fixed-bucket
+//! latency histograms with a Prometheus-style text exposition.
+//!
+//! Histograms use log2 buckets (`le = 1, 2, 4, … 2^20` µs, then `+Inf`),
+//! so recording is two relaxed atomic adds and percentiles are a bucket
+//! walk — no reservoir lock ever sits on the hot path. The price is
+//! resolution: a percentile read from buckets is an *upper bound* within
+//! 2× of the true value, which is the right trade for serving telemetry.
+//!
+//! Series are keyed by their full exposition name (`name{k="v"}`, built
+//! with [`series`]); a [`Registry`] renders deterministically (BTreeMap
+//! order) so scrapes diff cleanly. One process-global registry
+//! ([`global`]) carries engine/compiler series; each `Fleet` owns its own
+//! registry for per-network series so in-process fleets (tests, the
+//! cluster harness) never bleed counters into each other.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Number of histogram buckets: `le = 2^0 … 2^20` µs plus `+Inf`.
+pub const BUCKETS: usize = 22;
+
+/// A monotonically increasing counter (relaxed atomics; cheap anywhere).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed log2-bucket histogram over non-negative integer values
+/// (latencies in µs, occupancies, …). Recording is lock-free.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0), count: AtomicU64::new(0) }
+    }
+}
+
+/// Index of the first bucket whose upper bound holds `v`.
+fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        return 0;
+    }
+    // ceil(log2 v): 2 → 1 (le=2), 3..=4 → 2 (le=4), …; past 2^20 → +Inf
+    let bits = 64 - (v - 1).leading_zeros() as usize;
+    bits.min(BUCKETS - 1)
+}
+
+/// Upper bound of bucket `i` (`u64::MAX` stands in for `+Inf`).
+pub fn bucket_bound(i: usize) -> u64 {
+    if i + 1 < BUCKETS {
+        1u64 << i
+    } else {
+        u64::MAX
+    }
+}
+
+impl Histogram {
+    /// Record one duration (in µs resolution).
+    pub fn record(&self, d: Duration) {
+        self.record_value(u64::try_from(d.as_micros()).unwrap_or(u64::MAX));
+    }
+
+    /// Record one raw value.
+    pub fn record_value(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket (non-cumulative) counts.
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed))
+    }
+
+    /// Upper bound on the `p`-percentile (0 < p ≤ 1): the bound of the
+    /// bucket holding the nearest-rank observation — within 2× of the
+    /// true value by construction. Overflowed observations report the
+    /// first out-of-range power of two rather than `+Inf`.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let counts = self.bucket_counts();
+        percentile_from_buckets(&counts, p)
+    }
+}
+
+/// Percentile walk over non-cumulative log2 bucket counts — shared with
+/// the cluster's cross-backend bucket merge ([`crate::obs::scrape`]).
+pub fn percentile_from_buckets(counts: &[u64; BUCKETS], p: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let rank = ((p * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= rank {
+            return if i + 1 < BUCKETS { 1u64 << i } else { 1u64 << BUCKETS };
+        }
+    }
+    1u64 << BUCKETS
+}
+
+/// Build a full series key: `name{k="v",…}` (or just `name`).
+pub fn series(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let inner: Vec<String> = labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{name}{{{}}}", inner.join(","))
+}
+
+fn base_of(key: &str) -> &str {
+    key.split('{').next().unwrap_or(key)
+}
+
+fn labels_of(key: &str) -> &str {
+    match key.split_once('{') {
+        Some((_, rest)) => rest.strip_suffix('}').unwrap_or(rest),
+        None => "",
+    }
+}
+
+type GaugeFn = Box<dyn Fn() -> u64 + Send + Sync>;
+
+/// A registry of named series. Lookup takes a short mutex (cold relative
+/// to inference); the returned `Arc` handles record lock-free thereafter.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, GaugeFn>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// Get or create the counter for `key` (a full series name).
+    pub fn counter(&self, key: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap();
+        Arc::clone(map.entry(key.to_string()).or_default())
+    }
+
+    /// Get or create the histogram for `key`.
+    pub fn histogram(&self, key: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap();
+        Arc::clone(map.entry(key.to_string()).or_default())
+    }
+
+    /// Register (or replace) a gauge callback — read at render time, so
+    /// live values (connection counts, LRU totals) need no bookkeeping.
+    pub fn register_gauge(&self, key: &str, f: impl Fn() -> u64 + Send + Sync + 'static) {
+        self.gauges.lock().unwrap().insert(key.to_string(), Box::new(f));
+    }
+
+    /// Drop every counter/histogram series whose key contains `needle` —
+    /// the eviction hook (`needle` is `net="<name>"`), matching the fleet
+    /// metrics' rule that evicted networks never leave ghost series.
+    pub fn remove_matching(&self, needle: &str) {
+        self.counters.lock().unwrap().retain(|k, _| !k.contains(needle));
+        self.histograms.lock().unwrap().retain(|k, _| !k.contains(needle));
+    }
+
+    /// Render the Prometheus-style text exposition: counters, then
+    /// gauges, then histograms, each section in sorted series order with
+    /// one `# TYPE` line per metric base name. Deterministic by
+    /// construction; no trailing newline.
+    pub fn render(&self) -> String {
+        let mut out: Vec<String> = Vec::new();
+        {
+            let counters = self.counters.lock().unwrap();
+            let mut last = "";
+            for (key, c) in counters.iter() {
+                let base = base_of(key);
+                if base != last {
+                    out.push(format!("# TYPE {base} counter"));
+                }
+                out.push(format!("{key} {}", c.get()));
+                last = base_of(key);
+            }
+        }
+        {
+            let gauges = self.gauges.lock().unwrap();
+            let mut last = "";
+            for (key, f) in gauges.iter() {
+                let base = base_of(key);
+                if base != last {
+                    out.push(format!("# TYPE {base} gauge"));
+                }
+                out.push(format!("{key} {}", f()));
+                last = base_of(key);
+            }
+        }
+        {
+            let histograms = self.histograms.lock().unwrap();
+            let mut last = "";
+            for (key, h) in histograms.iter() {
+                let base = base_of(key);
+                let labels = labels_of(key);
+                if base != last {
+                    out.push(format!("# TYPE {base} histogram"));
+                }
+                let with_le = |le: &str| -> String {
+                    if labels.is_empty() {
+                        format!("{{le=\"{le}\"}}")
+                    } else {
+                        format!("{{{labels},le=\"{le}\"}}")
+                    }
+                };
+                let tail = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+                let mut cum = 0u64;
+                for (i, c) in h.bucket_counts().iter().enumerate() {
+                    cum += c;
+                    let le = if i + 1 < BUCKETS { format!("{}", 1u64 << i) } else { "+Inf".to_string() };
+                    out.push(format!("{base}_bucket{} {cum}", with_le(&le)));
+                }
+                out.push(format!("{base}_sum{tail} {}", h.sum()));
+                out.push(format!("{base}_count{tail} {}", h.count()));
+                last = base_of(key);
+            }
+        }
+        out.join("\n")
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-global registry: engine sweeps, pool regions, lane
+/// occupancy, sampling rounds, JT compiles, slow-query counts. Per-fleet
+/// series live on `Fleet`'s own registry instead.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_ceil_log2() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(1 << 20), 20);
+        assert_eq!(bucket_index((1 << 20) + 1), BUCKETS - 1);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_percentile_is_a_tight_upper_bound() {
+        let h = Histogram::default();
+        for v in [3u64, 3, 3, 100] {
+            h.record_value(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 109);
+        // p50 rank 2 lands with the 3s (le=4); p99 rank 4 with the 100 (le=128)
+        assert_eq!(h.percentile(0.50), 4);
+        assert_eq!(h.percentile(0.99), 128);
+        assert!(h.percentile(0.50) >= 3 && h.percentile(0.50) <= 2 * 3);
+        assert!(h.percentile(0.99) >= 100 && h.percentile(0.99) <= 2 * 100);
+        assert_eq!(Histogram::default().percentile(0.99), 0);
+    }
+
+    #[test]
+    fn series_builds_label_sets() {
+        assert_eq!(series("a_total", &[]), "a_total");
+        assert_eq!(series("a_total", &[("net", "asia")]), "a_total{net=\"asia\"}");
+        assert_eq!(series("a", &[("x", "1"), ("y", "2")]), "a{x=\"1\",y=\"2\"}");
+        assert_eq!(base_of("a_total{net=\"asia\"}"), "a_total");
+        assert_eq!(labels_of("a_total{net=\"asia\"}"), "net=\"asia\"");
+        assert_eq!(labels_of("a_total"), "");
+    }
+
+    #[test]
+    fn render_is_deterministic_and_grouped() {
+        let r = Registry::default();
+        r.counter("q_total{net=\"asia\"}").add(3);
+        r.counter("q_total{net=\"cancer\"}").inc();
+        r.register_gauge("conns_active", || 7);
+        let text = r.render();
+        let want = "# TYPE q_total counter\nq_total{net=\"asia\"} 3\nq_total{net=\"cancer\"} 1\n\
+                    # TYPE conns_active gauge\nconns_active 7";
+        assert_eq!(text, want);
+        assert_eq!(text, r.render(), "render must be stable");
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets() {
+        let r = Registry::default();
+        r.histogram("lat_us{net=\"asia\"}").record(Duration::from_micros(3));
+        let text = r.render();
+        assert!(text.contains("# TYPE lat_us histogram"), "{text}");
+        assert!(text.contains("lat_us_bucket{net=\"asia\",le=\"2\"} 0"), "{text}");
+        assert!(text.contains("lat_us_bucket{net=\"asia\",le=\"4\"} 1"), "{text}");
+        assert!(text.contains("lat_us_bucket{net=\"asia\",le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("lat_us_sum{net=\"asia\"} 3"), "{text}");
+        assert!(text.contains("lat_us_count{net=\"asia\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn remove_matching_drops_only_the_named_net() {
+        let r = Registry::default();
+        r.counter("q_total{net=\"asia\"}").inc();
+        r.counter("q_total{net=\"cancer\"}").inc();
+        r.histogram("lat_us{net=\"asia\"}").record_value(1);
+        r.remove_matching("net=\"asia\"");
+        let text = r.render();
+        assert!(!text.contains("asia"), "{text}");
+        assert!(text.contains("q_total{net=\"cancer\"} 1"), "{text}");
+    }
+}

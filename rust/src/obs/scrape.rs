@@ -1,0 +1,197 @@
+//! Parse and merge Prometheus-style text expositions.
+//!
+//! The cluster front scrapes `METRICS` from every live backend and
+//! serves one merged exposition: counters and gauges are summed,
+//! histograms are added bucket-wise (cumulative `le` counts sum
+//! series-wise, so the merge stays a valid cumulative histogram), and
+//! each backend's raw series are re-emitted with a `backend="<id>"`
+//! label so per-backend drill-down survives the merge.
+
+use std::collections::BTreeMap;
+
+use super::registry::{percentile_from_buckets, BUCKETS};
+
+/// A parsed exposition: metric base name → declared type, plus every
+/// raw series (`name{labels}` → value).
+#[derive(Clone, Debug, Default)]
+pub struct Scrape {
+    pub types: BTreeMap<String, String>,
+    pub samples: BTreeMap<String, u64>,
+}
+
+/// Parse exposition text. Unknown or malformed lines are skipped — the
+/// scraper must tolerate backends newer than the front.
+pub fn parse(text: &str) -> Scrape {
+    let mut s = Scrape::default();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            if let (Some(base), Some(kind)) = (it.next(), it.next()) {
+                s.types.insert(base.to_string(), kind.to_string());
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        if let Some((key, value)) = line.rsplit_once(' ') {
+            if let Ok(v) = value.trim().parse::<u64>() {
+                s.samples.insert(key.trim().to_string(), v);
+            }
+        }
+    }
+    s
+}
+
+/// Look up one raw series in exposition text (test/smoke helper).
+pub fn value(text: &str, key: &str) -> Option<u64> {
+    parse(text).samples.get(key).copied()
+}
+
+fn with_backend_label(key: &str, backend: &str) -> String {
+    match key.split_once('{') {
+        Some((base, rest)) => format!("{base}{{backend=\"{backend}\",{rest}"),
+        None => format!("{key}{{backend=\"{backend}\"}}"),
+    }
+}
+
+/// Merge per-backend scrapes into one exposition: for every series, an
+/// aggregate line summing all backends, then the per-backend lines with
+/// a `backend="<id>"` label injected. Deterministic (sorted) order; no
+/// trailing newline.
+pub fn merge(parts: &[(String, Scrape)]) -> String {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut totals: BTreeMap<String, u64> = BTreeMap::new();
+    let mut labeled: BTreeMap<String, u64> = BTreeMap::new();
+    for (backend, scrape) in parts {
+        for (base, kind) in &scrape.types {
+            types.entry(base.clone()).or_insert_with(|| kind.clone());
+        }
+        for (key, v) in &scrape.samples {
+            *totals.entry(key.clone()).or_insert(0) += v;
+            labeled.insert(with_backend_label(key, backend), *v);
+        }
+    }
+    let mut out: Vec<String> = Vec::new();
+    for (base, kind) in &types {
+        out.push(format!("# TYPE {base} {kind}"));
+    }
+    for (key, v) in &totals {
+        out.push(format!("{key} {v}"));
+    }
+    for (key, v) in &labeled {
+        out.push(format!("{key} {v}"));
+    }
+    out.join("\n")
+}
+
+/// Convenience: parse raw exposition texts, then [`merge`].
+pub fn merge_exposition(parts: &[(String, String)]) -> String {
+    let parsed: Vec<(String, Scrape)> = parts.iter().map(|(id, text)| (id.clone(), parse(text))).collect();
+    merge(&parsed)
+}
+
+fn le_to_bucket_index(le: &str) -> Option<usize> {
+    if le == "+Inf" {
+        return Some(BUCKETS - 1);
+    }
+    let bound: u64 = le.parse().ok()?;
+    (0..BUCKETS - 1).find(|&i| 1u64 << i == bound)
+}
+
+/// Extract the `le` label from a `…_bucket{…}` series key.
+fn le_of(key: &str) -> Option<&str> {
+    let (_, labels) = key.split_once('{')?;
+    for part in labels.trim_end_matches('}').split(',') {
+        if let Some(v) = part.strip_prefix("le=") {
+            return Some(v.trim_matches('"'));
+        }
+    }
+    None
+}
+
+/// Sum every `<base>_bucket` series across scrapes (all label sets, all
+/// backends) into one cumulative histogram and read percentiles off it.
+/// Returns `None` when no observations exist — callers fall back to the
+/// count-weighted `LatencySummary::merge` approximation.
+pub fn merged_percentiles(scrapes: &[&Scrape], base: &str, ps: &[f64]) -> Option<Vec<u64>> {
+    let prefix = format!("{base}_bucket{{");
+    let mut cumulative = [0u64; BUCKETS];
+    for s in scrapes {
+        for (key, v) in &s.samples {
+            if !key.starts_with(&prefix) {
+                continue;
+            }
+            if let Some(i) = le_of(key).and_then(le_to_bucket_index) {
+                cumulative[i] += v;
+            }
+        }
+    }
+    // De-cumulate: bucket i's own count is cum[i] - cum[i-1].
+    let mut counts = [0u64; BUCKETS];
+    let mut prev = 0u64;
+    for i in 0..BUCKETS {
+        counts[i] = cumulative[i].saturating_sub(prev);
+        prev = cumulative[i].max(prev);
+    }
+    if counts.iter().sum::<u64>() == 0 {
+        return None;
+    }
+    Some(ps.iter().map(|&p| percentile_from_buckets(&counts, p)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Registry;
+    use std::time::Duration;
+
+    #[test]
+    fn parse_reads_types_and_samples() {
+        let text = "# TYPE q_total counter\nq_total{net=\"asia\"} 3\n# TYPE lat_us histogram\nlat_us_count 2";
+        let s = parse(text);
+        assert_eq!(s.types.get("q_total").map(String::as_str), Some("counter"));
+        assert_eq!(s.types.get("lat_us").map(String::as_str), Some("histogram"));
+        assert_eq!(s.samples.get("q_total{net=\"asia\"}"), Some(&3));
+        assert_eq!(s.samples.get("lat_us_count"), Some(&2));
+        assert_eq!(value(text, "q_total{net=\"asia\"}"), Some(3));
+    }
+
+    #[test]
+    fn merge_sums_and_labels_by_backend() {
+        let a = "# TYPE q_total counter\nq_total{net=\"asia\"} 3";
+        let b = "# TYPE q_total counter\nq_total{net=\"asia\"} 2";
+        let merged = merge_exposition(&[("b0".into(), a.into()), ("b1".into(), b.into())]);
+        assert_eq!(value(&merged, "q_total{net=\"asia\"}"), Some(5));
+        assert_eq!(value(&merged, "q_total{backend=\"b0\",net=\"asia\"}"), Some(3));
+        assert_eq!(value(&merged, "q_total{backend=\"b1\",net=\"asia\"}"), Some(2));
+        assert!(merged.contains("# TYPE q_total counter"));
+    }
+
+    #[test]
+    fn merged_percentiles_come_from_summed_buckets() {
+        // Two "backends": one fast (3µs ×30), one slow (100µs ×10) —
+        // the exact shape where count-weighted percentile averaging is
+        // biased, and bucket merging is not.
+        let fast = Registry::default();
+        for _ in 0..30 {
+            fast.histogram("lat_us{net=\"asia\"}").record(Duration::from_micros(3));
+        }
+        let slow = Registry::default();
+        for _ in 0..10 {
+            slow.histogram("lat_us{net=\"asia\"}").record(Duration::from_micros(100));
+        }
+        let (sa, sb) = (parse(&fast.render()), parse(&slow.render()));
+        let ps = merged_percentiles(&[&sa, &sb], "lat_us", &[0.5, 0.99]).expect("observations exist");
+        // p50 (rank 20 of 40) is a fast query: bound 4µs, not a blend.
+        assert_eq!(ps[0], 4);
+        // p99 (rank 40) is a slow query: bound 128µs.
+        assert_eq!(ps[1], 128);
+        assert!(merged_percentiles(&[], "lat_us", &[0.5]).is_none());
+        assert!(merged_percentiles(&[&Scrape::default()], "lat_us", &[0.5]).is_none());
+    }
+}

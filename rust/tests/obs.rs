@@ -1,0 +1,225 @@
+//! Integration: the observability layer end to end — registry exposition
+//! over a live fleet socket, the cluster-wide scrape merge, the
+//! slow-query log, and the guarantee that tracing never changes a reply.
+//!
+//! The trace toggles (`TRACE on`, the slow threshold) are process-wide;
+//! every test that flips one serializes on [`TOGGLE`] and keys its
+//! assertions on span names unique to that test, so the suite stays
+//! order- and parallelism-independent.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use fastbn::cluster::{BackendConn, ClusterConfig, ClusterHarness};
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::fleet::{Fleet, FleetConfig, FleetServer};
+use fastbn::obs::registry::{bucket_bound, BUCKETS};
+use fastbn::obs::{scrape, series, trace, Registry};
+
+/// Serializes the tests that flip process-wide trace toggles.
+static TOGGLE: Mutex<()> = Mutex::new(());
+
+fn fleet_cfg() -> FleetConfig {
+    FleetConfig {
+        engine: EngineKind::Seq,
+        engine_cfg: EngineConfig::default().with_threads(1),
+        shards: 1,
+        registry_capacity: 8,
+        max_exact_cost: f64::INFINITY,
+    }
+}
+
+fn connect(addr: std::net::SocketAddr) -> BackendConn {
+    BackendConn::connect(addr, Duration::from_secs(1), Duration::from_secs(10)).unwrap()
+}
+
+#[test]
+fn registry_renders_the_exact_exposition() {
+    let r = Registry::default();
+    r.counter(&series("fastbn_test_total", &[("net", "a")])).add(3);
+    r.counter(&series("fastbn_test_total", &[("net", "b")])).inc();
+    r.register_gauge("fastbn_test_active", || 7);
+    r.histogram(&series("fastbn_test_us", &[("net", "a")])).record_value(3);
+
+    let mut want: Vec<String> = vec![
+        "# TYPE fastbn_test_total counter".into(),
+        "fastbn_test_total{net=\"a\"} 3".into(),
+        "fastbn_test_total{net=\"b\"} 1".into(),
+        "# TYPE fastbn_test_active gauge".into(),
+        "fastbn_test_active 7".into(),
+        "# TYPE fastbn_test_us histogram".into(),
+    ];
+    for i in 0..BUCKETS {
+        let le = if i + 1 < BUCKETS { format!("{}", 1u64 << i) } else { "+Inf".into() };
+        // the single observation (3) lands in the le=4 bucket (index 2)
+        let cum = if bucket_bound(i) >= 4 { 1 } else { 0 };
+        want.push(format!("fastbn_test_us_bucket{{net=\"a\",le=\"{le}\"}} {cum}"));
+    }
+    want.push("fastbn_test_us_sum{net=\"a\"} 3".into());
+    want.push("fastbn_test_us_count{net=\"a\"} 1".into());
+    assert_eq!(r.render(), want.join("\n"));
+    assert_eq!(r.render(), r.render(), "render must be deterministic");
+}
+
+#[test]
+fn histogram_percentiles_bound_the_true_values() {
+    let h = fastbn::obs::Histogram::default();
+    let mut samples = vec![10u64, 30, 100, 300, 1000, 3000, 10000, 30000, 100000];
+    for v in &samples {
+        h.record_value(*v);
+    }
+    samples.sort_unstable();
+    let n = samples.len();
+    let mut prev = 0u64;
+    for p in [0.50, 0.90, 0.99] {
+        let rank = ((p * n as f64).ceil() as usize).clamp(1, n);
+        let truth = samples[rank - 1];
+        let got = h.percentile(p);
+        assert!(got >= truth, "p{p}: bucket bound {got} below true value {truth}");
+        assert!(got <= 2 * truth, "p{p}: bucket bound {got} beyond 2x true value {truth}");
+        assert!(got >= prev, "percentiles must be monotone");
+        prev = got;
+    }
+}
+
+#[test]
+fn metrics_and_trace_round_trip_over_a_live_socket() {
+    let server = FleetServer::start(Arc::new(Fleet::new(fleet_cfg())), "127.0.0.1:0").unwrap();
+    let mut conn = connect(server.addr());
+    conn.request("LOAD asia").unwrap();
+    conn.request("LOAD cancer").unwrap();
+    conn.request("USE asia").unwrap();
+    // interleaved queries: two against asia, one against cancer — the
+    // exposition must show exactly those per-net counts
+    assert!(conn.request("QUERY dysp | smoke=yes").unwrap().starts_with("OK "));
+    assert!(conn.request("QUERY dysp").unwrap().starts_with("OK "));
+    conn.request("USE cancer").unwrap();
+    let cancer = fastbn::bn::embedded::by_name("cancer").unwrap();
+    let target = &cancer.vars[cancer.n() - 1].name;
+    assert!(conn.request(&format!("QUERY {target}")).unwrap().starts_with("OK "));
+
+    let (header, body) = conn.request_block("METRICS").unwrap();
+    assert!(header.starts_with("OK metrics lines="), "{header}");
+    let text = body.join("\n");
+    assert_eq!(body.len(), text.lines().count(), "no blank lines inside the block");
+    assert_eq!(scrape::value(&text, "fastbn_queries_total{net=\"asia\"}"), Some(2), "{text}");
+    assert_eq!(scrape::value(&text, "fastbn_queries_total{net=\"cancer\"}"), Some(1), "{text}");
+    assert_eq!(scrape::value(&text, "fastbn_query_latency_us_count{net=\"asia\"}"), Some(2), "{text}");
+    assert_eq!(scrape::value(&text, "fastbn_query_latency_us_bucket{net=\"asia\",le=\"+Inf\"}"), Some(2), "{text}");
+    assert_eq!(scrape::value(&text, "fastbn_query_errors_total{net=\"asia\"}"), None, "no error series before errors");
+
+    // the TRACE verb drives the process-wide toggle: serialize
+    let _serialized = TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    assert_eq!(conn.request("TRACE on").unwrap(), "OK trace on");
+    assert!(conn.request("QUERY dysp | smoke=yes").unwrap().starts_with("OK "));
+    let replay = conn.request("TRACE last").unwrap();
+    assert!(replay.starts_with("OK trace total_us="), "{replay}");
+    assert!(replay.contains("shard.infer="), "{replay}");
+    assert_eq!(conn.request("TRACE off").unwrap(), "OK trace off");
+    assert!(conn.request("TRACE bogus").unwrap().starts_with("ERR usage: TRACE"));
+    server.shutdown();
+}
+
+#[test]
+fn cluster_scrape_merges_the_backend_expositions() {
+    let h = ClusterHarness::start(
+        2,
+        fleet_cfg(),
+        ClusterConfig {
+            replicas: 64,
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_secs(5),
+            probe_timeout: Duration::from_millis(500),
+            probe_interval: Duration::from_millis(100),
+            probe_backoff_max: Duration::from_secs(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut c = h.client().unwrap();
+    assert!(c.request("LOAD asia").unwrap().starts_with("OK loaded asia"));
+    assert!(c.request("LOAD cancer").unwrap().starts_with("OK loaded cancer"));
+    c.request("USE asia").unwrap();
+    assert!(c.request("QUERY dysp | smoke=yes").unwrap().starts_with("OK "));
+    assert!(c.request("QUERY dysp").unwrap().starts_with("OK "));
+    c.request("USE cancer").unwrap();
+    let cancer = fastbn::bn::embedded::by_name("cancer").unwrap();
+    let target = &cancer.vars[cancer.n() - 1].name;
+    assert!(c.request(&format!("QUERY {target}")).unwrap().starts_with("OK "));
+
+    let mut front = connect(h.front_addr());
+    let (header, body) = front.request_block("METRICS").unwrap();
+    assert!(header.starts_with("OK metrics backends=2 lines="), "{header}");
+    let merged = body.join("\n");
+
+    // every alive backend contributes labeled series (the connection and
+    // LRU gauges exist on every fleet, so no backend scrapes empty) …
+    for id in h.live_backend_ids() {
+        assert!(merged.contains(&format!("backend=\"{id}\"")), "no series labeled backend=\"{id}\":\n{merged}");
+    }
+    // … and every per-net aggregate equals the sum of the backends' own
+    // expositions, bucket-wise for histograms. (Only per-net series are
+    // compared: the in-process harness shares one global registry, which
+    // the merge would double-count across backends.)
+    let parts: Vec<String> = h.live_backend_ids().iter().map(|id| h.backend_fleet(id).unwrap().metrics_exposition()).collect();
+    for key in [
+        "fastbn_queries_total{net=\"asia\"}",
+        "fastbn_queries_total{net=\"cancer\"}",
+        "fastbn_query_latency_us_count{net=\"asia\"}",
+        "fastbn_query_latency_us_count{net=\"cancer\"}",
+        "fastbn_query_latency_us_bucket{net=\"asia\",le=\"+Inf\"}",
+        "fastbn_query_latency_us_bucket{net=\"cancer\",le=\"+Inf\"}",
+    ] {
+        let want: u64 = parts.iter().map(|p| scrape::value(p, key).unwrap_or(0)).sum();
+        assert!(want > 0, "no backend recorded {key}");
+        assert_eq!(scrape::value(&merged, key), Some(want), "merged {key} is not the backend sum");
+    }
+}
+
+#[test]
+fn slow_query_log_captures_only_queries_over_the_threshold() {
+    let _serialized = TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    trace::set_slow_query_us(200_000);
+    {
+        let root = trace::span("obs-slow-probe");
+        root.note("deliberate");
+        std::thread::sleep(Duration::from_millis(250));
+    }
+    {
+        let _root = trace::span("obs-fast-probe");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    trace::set_slow_query_us(0);
+    let slow = trace::slow_queries();
+    let roots: Vec<&str> = slow.iter().filter_map(|t| t.root().map(|s| s.name)).collect();
+    assert!(roots.contains(&"obs-slow-probe"), "slow query missing from the log: {roots:?}");
+    assert!(!roots.contains(&"obs-fast-probe"), "fast query leaked into the slow log: {roots:?}");
+    let ours = slow.iter().find(|t| t.root().map(|s| s.name) == Some("obs-slow-probe")).unwrap();
+    assert!(ours.total_us >= 200_000, "total_us={}", ours.total_us);
+    assert!(ours.render().contains("[deliberate]"), "{}", ours.render());
+}
+
+#[test]
+fn tracing_never_changes_a_reply_byte() {
+    let _serialized = TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    trace::set_enabled(false);
+    trace::set_slow_query_us(0);
+    let server = FleetServer::start(Arc::new(Fleet::new(fleet_cfg())), "127.0.0.1:0").unwrap();
+    let mut conn = connect(server.addr());
+    conn.request("LOAD asia").unwrap();
+    conn.request("USE asia").unwrap();
+    let q = "QUERY dysp | smoke=yes";
+
+    let off = conn.request(q).unwrap();
+    trace::set_enabled(true);
+    let on = conn.request(q).unwrap();
+    trace::set_slow_query_us(1); // everything is "slow": the heaviest instrumented path
+    let slow = conn.request(q).unwrap();
+    trace::set_enabled(false);
+    trace::set_slow_query_us(0);
+
+    assert!(off.starts_with("OK "), "{off}");
+    assert_eq!(off, on, "enabling tracing changed the reply");
+    assert_eq!(off, slow, "the slow-query path changed the reply");
+    server.shutdown();
+}
