@@ -78,8 +78,9 @@ batch-smoke:
 # cluster serving smoke: 2 backend fleet *processes* (spawned as children
 # announcing ephemeral ports) behind the consistent-hash front tier; the
 # --smoke switch drives a scripted LOAD/USE/OBSERVE/COMMIT/QUERY/STATS/
-# TOPO session through the router and exits nonzero on any unexpected
-# reply.
+# TOPO/HANDOFF session through the router (including a malformed-JOIN
+# rejection) and exits nonzero on any unexpected reply. Replication and
+# router failover are exercised by `cargo test --test cluster`.
 cluster-smoke:
 	$(CARGO) run --release -- cluster --backends 2 --nets asia,cancer --bind 127.0.0.1:0 --smoke
 

@@ -1,12 +1,16 @@
-//! Bench: the **cluster tier** — backend-count sweep through the front
-//! router.
+//! Bench: the **cluster tier** — backend-count and replica-count sweeps
+//! through the front router.
 //!
 //! Every query crosses two TCP hops (client → front tier → owning
 //! backend), so this measures what the cluster actually adds over an
 //! in-process fleet: routing, proxying, and socket overhead, and how
 //! throughput scales as the same network set spreads over 1/2/4 backend
 //! processes. One client per network holds a sticky session (`USE` once,
-//! then inline-evidence `QUERY`s), matching the serving shape.
+//! then inline-evidence `QUERY`s), matching the serving shape. Those
+//! sessions carry no committed evidence, so with `replicas > 1` the
+//! front round-robins their reads across the owner set — the second
+//! table sweeps R at a fixed backend count to price replication against
+//! the single-owner baseline.
 //!
 //! Scale knob: FASTBN_CLUSTER_QUERIES (default 200 per cell, split
 //! evenly across the nets' clients).
@@ -24,7 +28,7 @@ use fastbn::infer::cases::{generate, CaseSpec};
 
 const NETS: [&str; 4] = ["asia", "cancer", "sprinkler", "mixed12"];
 
-fn harness(n_backends: usize) -> ClusterHarness {
+fn harness(n_backends: usize, replicas: usize) -> ClusterHarness {
     let backend_cfg = FleetConfig {
         engine: EngineKind::Hybrid,
         engine_cfg: EngineConfig::default().with_threads(2),
@@ -32,7 +36,8 @@ fn harness(n_backends: usize) -> ClusterHarness {
         registry_capacity: NETS.len(),
         max_exact_cost: f64::INFINITY,
     };
-    let harness = ClusterHarness::start(n_backends, backend_cfg, ClusterConfig::default()).unwrap();
+    let cluster_cfg = ClusterConfig { replicas, ..ClusterConfig::default() };
+    let harness = ClusterHarness::start(n_backends, backend_cfg, cluster_cfg).unwrap();
     let mut client = harness.client().unwrap();
     for net in NETS {
         let reply = client.request(&format!("LOAD {net}")).unwrap();
@@ -84,7 +89,7 @@ fn main() {
     let mut rows = Vec::new();
     let mut last_topo = String::new();
     for n_backends in [1usize, 2, 4] {
-        let h = harness(n_backends);
+        let h = harness(n_backends, 1);
         let (wall, served) = drive(&h, &cases, per_net);
         let total = (per_net * NETS.len()) as u64;
         rows.push(vec![
@@ -104,4 +109,27 @@ fn main() {
     );
     // ownership spread at the widest topology, for the record
     println!("\n{last_topo}");
+
+    // replica sweep at a fixed backend count: R=1 is the single-owner
+    // baseline; R>1 pays extra LOADs up front and then spreads each
+    // clean session's reads over the owner set
+    let mut rows = Vec::new();
+    for (n_backends, replicas) in [(4usize, 1usize), (4, 2), (4, 4)] {
+        let h = harness(n_backends, replicas);
+        let (wall, served) = drive(&h, &cases, per_net);
+        let total = (per_net * NETS.len()) as u64;
+        rows.push(vec![
+            format!("{n_backends}"),
+            format!("{replicas}"),
+            format!("{served}/{total}"),
+            format!("{wall:.3}s"),
+            format!("{:.1}", served as f64 / wall.max(1e-9)),
+            fmt_duration(std::time::Duration::from_secs_f64(wall / served.max(1) as f64)),
+        ]);
+    }
+    print_table(
+        &format!("cluster: replica sweep ({} nets, {per_net} queries/net, read-spread sessions)", NETS.len()),
+        &["backends", "replicas", "served", "wall", "q/s", "mean/query"],
+        &rows,
+    );
 }

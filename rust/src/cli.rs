@@ -14,7 +14,8 @@
 //! fastbn serve     --nets a,b,c [--shards N] [--registry-cap K] [--batch B] [--bind ...] [--smoke] [--batch-smoke]
 //!                  [--max-exact-cost C] [--samples N] [--approx-smoke] [--metrics-smoke]
 //!                  [--slow-query-ms T] [--metrics-interval SECS]
-//! fastbn cluster   --backends N [--nets a,b,c] [--shards S] [--replicas V] [--bind ...] [--smoke]
+//! fastbn cluster   --backends N [--nets a,b,c] [--shards S] [--replicas R] [--vnodes V]
+//!                  [--join-hosts h:p,...] [--bind ...] [--smoke]
 //!                  [--max-exact-cost C] [--samples N] [--metrics-smoke]
 //! fastbn simulate  --net <spec> [--threads 1,2,4,8,16,32]
 //! fastbn selftest
@@ -215,10 +216,12 @@ COMMANDS:
   cluster   --backends N             cross-process cluster tier: N fleet backend
                                      child processes + a consistent-hash front
                                      router (--nets preload, --shards, --replicas
-                                     ring points, --smoke / --metrics-smoke
+                                     R owners per net, --vnodes ring points,
+                                     --join-hosts h:p,... adopts already-running
+                                     fleets, --smoke / --metrics-smoke
                                      scripted sessions; --max-exact-cost /
                                      --samples forwarded to every backend);
-                                     adds verbs: PING TOPO METRICS
+                                     adds verbs: PING TOPO METRICS JOIN HANDOFF
   simulate  --net S                  modeled parallel times across --threads list
   selftest                           engine-agreement smoke check
   help                               this text
@@ -948,9 +951,20 @@ fn read_ready_addr(reader: &mut impl std::io::BufRead, i: usize) -> Result<std::
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {
-    let n_backends: usize = args.parse_or("backends", 2usize)?;
-    if n_backends == 0 {
-        return Err(Error::msg("--backends must be ≥ 1"));
+    // already-running `fastbn serve --fleet` processes to adopt over TCP
+    // (the static-list twin of the `JOIN <addr>` verb)
+    let join_hosts: Vec<std::net::SocketAddr> = match args.get("join-hosts") {
+        None => Vec::new(),
+        Some(text) => text
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().map_err(|_| Error::msg(format!("bad --join-hosts address {s:?}"))))
+            .collect::<Result<_>>()?,
+    };
+    // with external hosts to adopt, spawning no children is legitimate
+    let n_backends: usize = args.parse_or("backends", if join_hosts.is_empty() { 2usize } else { 0 })?;
+    if n_backends == 0 && join_hosts.is_empty() {
+        return Err(Error::msg("--backends must be ≥ 1 (or pass --join-hosts)"));
     }
     let engine_text = args.get("engine").unwrap_or("hybrid");
     let _validated: EngineKind = engine_text.parse()?; // fail before spawning anything
@@ -1007,12 +1021,21 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         });
     }
 
-    let cluster_cfg = ClusterConfig { replicas: args.parse_or("replicas", 64usize)?, ..Default::default() };
+    let cluster_cfg = ClusterConfig {
+        replicas: args.parse_or("replicas", 1usize)?,
+        vnodes: args.parse_or("vnodes", 64usize)?,
+        ..Default::default()
+    };
     let cluster = Cluster::start(cluster_cfg)?;
     for addr in &addrs {
         let id = cluster.join(*addr)?;
         println!("backend {id} ready at {addr}");
     }
+    for addr in &join_hosts {
+        let id = cluster.join(*addr)?;
+        println!("backend {id} adopted at {addr}");
+    }
+    let n_backends = n_backends + join_hosts.len();
     for spec in &specs {
         let reply = cluster.load(spec);
         println!("{reply}");
@@ -1022,7 +1045,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     let server = ClusterServer::start(Arc::clone(&cluster), bind)?;
     println!(
-        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/METRICS/PING/TOPO/QUIT",
+        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/METRICS/PING/TOPO/JOIN/HANDOFF/QUIT",
         server.addr(),
         specs.len()
     );
@@ -1066,6 +1089,10 @@ fn cluster_smoke(server: &ClusterServer, specs: &[String], n_backends: usize) ->
         (format!("QUERY {target_a}"), "OK ".into(), "logZ=".into()),
         (format!("USE {}", net_b.name), format!("OK using {}", net_b.name), "vars=".into()),
         (format!("QUERY {target_b}"), "OK ".into(), "logZ=".into()),
+        // switching nets reset the evidence mirror: the hand-off export
+        // for this session is empty
+        ("HANDOFF".into(), format!("OK handoff net={}", net_b.name), "evidence=0".into()),
+        ("JOIN nonsense".into(), "ERR usage: JOIN".into(), String::new()),
         ("NETS".into(), "OK nets=".into(), format!("{}[", net_a.name)),
         ("STATS".into(), "STATS cluster".into(), format!("backends={n_backends}")),
         ("USE not-loaded-anywhere".into(), "ERR not loaded".into(), String::new()),

@@ -2,20 +2,29 @@
 //!
 //! One [`Cluster`] owns three pieces of state behind a short-hold lock —
 //! the consistent-hash ring (alive backends only), the backend table
-//! (addresses + health), and the directory (network → spec + owner) — and
-//! a `control` mutex that serializes every *transition* (join, leave,
-//! death, revival, load) so a hand-off can never interleave with another:
-//! all the network I/O a transition performs happens under `control` but
-//! never under the state lock, so sessions keep routing while a
-//! rebalance is in flight.
+//! (addresses + health), and the directory (network → spec + replica
+//! owners) — and a `control` mutex that serializes every *transition*
+//! (join, leave, death, revival, load) so a hand-off can never interleave
+//! with another: all the network I/O a transition performs happens under
+//! `control` but never under the state lock, so sessions keep routing
+//! while a rebalance is in flight.
+//!
+//! Each network is placed on the first R distinct ring members clockwise
+//! from its hash ([`crate::cluster::ring::Ring::owners`],
+//! `ClusterConfig::replicas`). Replicas are byte-identical by
+//! construction — same spec, same deterministic compile (`learn:` specs
+//! re-learn bit-identically) — so a *clean* session's read-only verbs
+//! spread across them and fail over inside the set without an error
+//! reply, while evidence-bearing sessions stay pinned to one replica
+//! (see [`ClusterSession`]).
 //!
 //! Failure handling is two-track. A background prober `PING`s every
 //! backend (exponential backoff once dead); a session that trips over a
 //! dead connection reports it, the report is *verified* with one probe
 //! (transient hiccups must not evict a healthy backend), and a confirmed
 //! death triggers synchronous failover — by the time the session's error
-//! reply reaches the client, the network usually has a new owner and a
-//! plain `USE` resumes service.
+//! reply reaches the client, the network usually has a surviving replica
+//! promoted and a plain `USE` resumes service.
 
 use std::collections::BTreeMap;
 use std::net::SocketAddr;
@@ -26,7 +35,6 @@ use std::time::{Duration, Instant};
 use crate::cluster::backend::BackendConn;
 use crate::cluster::ring::Ring;
 use crate::cluster::ClusterConfig;
-use crate::coordinator::metrics::LatencySummary;
 use crate::fleet::SessionReply;
 use crate::{Error, Result};
 
@@ -39,14 +47,14 @@ pub struct BackendStatus {
     pub addr: SocketAddr,
     /// False once the prober (or a verified session report) declared it dead.
     pub alive: bool,
-    /// Networks the directory currently assigns to it.
+    /// Networks the directory currently places a replica of on it.
     pub owned_nets: usize,
 }
 
-/// Outcome of resolving a network name to its owning backend.
+/// Outcome of resolving a network name to a live replica owner.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Lookup {
-    /// Owned by a live backend.
+    /// At least one live replica; the first (primary-most) is returned.
     Owned {
         /// Owning backend id.
         id: String,
@@ -59,12 +67,13 @@ pub enum Lookup {
     Unknown,
 }
 
-/// Is a session's pinned (network, backend) pair still the owner?
+/// Is a session's pinned (network, backend) pair still a valid route?
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Confirm {
-    /// Yes — forward.
+    /// Yes — the backend is still one of the net's replica owners.
     Current,
-    /// Ownership moved (rebalance or failover) or the net is orphaned.
+    /// Ownership moved off that backend (rebalance or failover) or the
+    /// net is orphaned.
     Moved,
     /// The network left the directory entirely.
     Unloaded,
@@ -80,7 +89,9 @@ struct BackendEntry {
 
 struct NetEntry {
     spec: String,
-    owner: Option<String>,
+    /// Replica owners, primary first (the ring's successor walk at the
+    /// last placement). Empty = orphaned.
+    owners: Vec<String>,
 }
 
 struct State {
@@ -112,7 +123,7 @@ impl Cluster {
     pub fn start(cfg: ClusterConfig) -> Result<Arc<Cluster>> {
         let cluster = Arc::new(Cluster {
             state: Mutex::new(State {
-                ring: Ring::new(cfg.replicas),
+                ring: Ring::new(cfg.vnodes),
                 backends: BTreeMap::new(),
                 directory: BTreeMap::new(),
                 next_backend_seq: 0,
@@ -164,10 +175,13 @@ impl Cluster {
     // ---- membership -----------------------------------------------------
 
     /// Add a backend: verify it answers `PING`, put it on the ring, and
-    /// rebalance — networks whose ring owner becomes the joiner are
-    /// `LOAD`ed there and `EVICT`ed from their previous owner. Returns the
-    /// assigned id (`b0`, `b1`, … in join order). An address that
-    /// previously died rejoins under its old id.
+    /// rebalance — networks whose desired replica set now includes the
+    /// joiner are `LOAD`ed there and `EVICT`ed from owners that fell off
+    /// the set. Returns the assigned id (`b0`, `b1`, … in join order). An
+    /// address that previously died rejoins under its old id. The backend
+    /// can be a child this process spawned or an already-running remote
+    /// `fastbn serve --fleet` adopted over TCP (the `JOIN <addr>` verb /
+    /// `--join-hosts` path) — the wire protocol is identical.
     pub fn join(&self, addr: SocketAddr) -> Result<String> {
         let _ctl = self.control.lock().unwrap();
         if !self.ping_addr(addr) {
@@ -203,9 +217,9 @@ impl Cluster {
     }
 
     /// Gracefully remove a backend: take it off the ring, hand its
-    /// networks to the new ring owners (`LOAD` there, `EVICT` here), then
-    /// forget it. If any hand-off `LOAD` fails the backend is kept —
-    /// alive but off-ring, still serving what it owns — and an error says
+    /// networks to the new replica owners (`LOAD` there, `EVICT` here),
+    /// then forget it. If any hand-off `LOAD` fails the backend is kept —
+    /// alive but off-ring, still serving what it holds — and an error says
     /// so; retrying `leave` retries the hand-off.
     pub fn leave(&self, id: &str) -> Result<()> {
         let _ctl = self.control.lock().unwrap();
@@ -221,7 +235,7 @@ impl Cluster {
         self.rebalance(true);
         let remaining = {
             let st = self.state.lock().unwrap();
-            st.directory.values().filter(|e| e.owner.as_deref() == Some(id)).count()
+            st.directory.values().filter(|e| e.owners.iter().any(|o| o == id)).count()
         };
         if remaining > 0 {
             return Err(Error::msg(format!(
@@ -233,9 +247,10 @@ impl Cluster {
     }
 
     /// Declare a backend dead *now*: off the ring, failover its networks
-    /// to survivors (no `EVICT` — nobody is listening), keep probing it
-    /// with backoff so a revival rejoins automatically. Normally driven by
-    /// the prober or a verified session report, public for operators.
+    /// to surviving replicas (no `EVICT` — nobody is listening), keep
+    /// probing it with backoff so a revival rejoins automatically.
+    /// Normally driven by the prober or a verified session report, public
+    /// for operators.
     pub fn mark_dead(&self, id: &str) {
         let _ctl = self.control.lock().unwrap();
         {
@@ -295,13 +310,14 @@ impl Cluster {
 
     // ---- ownership ------------------------------------------------------
 
-    /// Load `spec` onto its ring owner and record it in the directory.
-    /// Returns the full protocol reply line (`OK loaded … backend=<id>`
-    /// or `ERR …`) — the session passes it straight through.
+    /// Load `spec` onto its R ring owners and record them in the
+    /// directory. Returns the full protocol reply line (`OK loaded …
+    /// backend=<primary> replicas=<k>` or `ERR …`) — the session passes
+    /// it straight through.
     pub fn load(&self, spec: &str) -> String {
         // resolve the *name* locally first: routing needs the network's
         // name (a path spec and its net name must land on the same
-        // owner), and a bad spec should fail here, not on a backend. A
+        // owners), and a bad spec should fail here, not on a backend. A
         // `learn:` spec carries its name in the spec itself, so the
         // (expensive, backend-side) learning never runs on the front.
         let name = if crate::learn::is_learn_spec(spec) {
@@ -318,92 +334,133 @@ impl Cluster {
         self.register_on_owner(&name, spec, &format!("LOAD {spec}"), "LOAD")
     }
 
-    /// `LEARN` passthrough: route the verb to the ring owner of `name`
-    /// (which runs the sample→learn pipeline and registers the result)
-    /// and record the equivalent deterministic `learn:` spec in the
-    /// directory — a later hand-off re-`LOAD`s that spec on the new
-    /// owner, re-learning the **bit-identical** network there.
+    /// `LEARN` passthrough: route the verb to the primary ring owner of
+    /// `name` (which runs the sample→learn pipeline and registers the
+    /// result), replicate the equivalent deterministic `learn:` spec to
+    /// the remaining replicas, and record it in the directory — a later
+    /// hand-off re-`LOAD`s that spec on the new owner, re-learning the
+    /// **bit-identical** network there.
     pub fn learn(&self, name: &str, learn_spec: &str, line: &str) -> String {
         self.register_on_owner(name, learn_spec, line, "LEARN")
     }
 
-    /// Shared LOAD/LEARN routing: send `line` to `name`'s ring owner,
-    /// record `spec` in the directory on success, evict a stale previous
-    /// owner, and annotate the reply with `backend=<id>`.
+    /// Shared LOAD/LEARN routing: send `line` to `name`'s primary ring
+    /// owner, replicate the spec to the remaining R−1 desired owners,
+    /// record the replica set in the directory on success, evict stale
+    /// previous owners, and annotate the reply with
+    /// `backend=<primary> replicas=<k>`.
     ///
     /// Ordinary specs run under the `control` mutex like every transition
-    /// (the RPC is one tree compile, bounded by `io_timeout`). A
+    /// (the RPCs are tree compiles, bounded by `io_timeout`). A
     /// **learn** spec's RPC runs the whole sampling + PC + MLE pipeline
     /// on the backend under `learn_timeout` — minutes, not seconds — so
     /// it executes *outside* `control` and only the directory commit
     /// re-takes the lock: a slow learn must not stall failover, probing,
     /// and every other session's LOAD behind the control mutex. The
-    /// commit records the backend that actually ran the learn if it is
-    /// still alive (ring drift is fine — sessions follow the directory,
-    /// and the next rebalance re-homes the net); an executor that *died*
-    /// between finishing and the commit is re-homed immediately instead
-    /// of being recorded as a dead owner nobody would ever re-route.
+    /// commit records the replicas that ran the verb and are still alive
+    /// (ring drift is fine — sessions follow the directory, and the next
+    /// rebalance re-homes the net); executors that all *died* between
+    /// finishing and the commit are re-homed immediately instead of
+    /// being recorded as dead owners nobody would ever route to.
     fn register_on_owner(&self, name: &str, spec: &str, line: &str, verb: &str) -> String {
         let ctl = if crate::learn::is_learn_spec(spec) { None } else { Some(self.control.lock().unwrap()) };
-        let Some((id, addr)) = self.place(name) else {
+        let desired = self.place_replicas(name);
+        let Some((primary_id, primary_addr)) = desired.first().cloned() else {
             return format!("ERR no live backends to host {name:?}");
         };
-        match self.remote_line_bounded(addr, line, self.control_timeout(spec)) {
+        match self.remote_line_bounded(primary_addr, line, self.control_timeout(spec)) {
             Ok(reply) if reply.starts_with("OK") => {
+                // replicate the spec to the remaining desired owners
+                // before the commit — a replica that fails to load simply
+                // drops out of the recorded set (the next rebalance
+                // retries it)
+                let mut loaded = vec![primary_id.clone()];
+                for (id, addr) in desired.iter().skip(1) {
+                    if self.load_spec_on(*addr, name, spec) {
+                        loaded.push(id.clone());
+                    }
+                }
                 let _ctl = ctl.unwrap_or_else(|| self.control.lock().unwrap());
-                // only reachable on the lockless learn path: the executor
-                // may have been declared dead while it was learning
-                let executor_alive = {
-                    let st = self.state.lock().unwrap();
-                    st.backends.get(&id).map(|b| b.alive).unwrap_or(false)
-                };
-                let owner = executor_alive.then(|| id.clone());
-                let prev = {
+                let (owners, prev) = {
                     let mut st = self.state.lock().unwrap();
-                    st.directory
-                        .insert(name.to_string(), NetEntry { spec: spec.to_string(), owner })
-                        .and_then(|e| e.owner)
+                    // only filters on the lockless learn path: an executor
+                    // may have been declared dead while it was learning
+                    let owners: Vec<String> = loaded
+                        .into_iter()
+                        .filter(|id| st.backends.get(id).map(|b| b.alive).unwrap_or(false))
+                        .collect();
+                    let prev = st
+                        .directory
+                        .insert(name.to_string(), NetEntry { spec: spec.to_string(), owners: owners.clone() })
+                        .map(|e| e.owners)
+                        .unwrap_or_default();
+                    (owners, prev)
                 };
-                if executor_alive {
-                    // a re-LOAD that lands on a new owner (ring changed
+                if let Some(primary) = owners.first() {
+                    let primary = primary.clone();
+                    // a re-LOAD that lands on new owners (ring changed
                     // while the net was orphaned, say) evicts the stale
-                    // resident
-                    self.evict_stale(name, prev.as_deref(), &id);
-                    return format!("{reply} backend={id}");
+                    // residents
+                    self.evict_stale(name, &prev, &owners);
+                    return format!("{reply} backend={primary} replicas={}", owners.len());
                 }
                 // control is held, so re-home right now — a learn spec
-                // re-learns deterministically on the new owner
+                // re-learns deterministically on the new owners
                 self.rebalance(false);
                 match self.owner(name) {
-                    Some(new_owner) => format!("{reply} backend={new_owner}"),
-                    None => format!("ERR backend {id} was lost after {verb}; {name:?} has no live backend to re-home onto"),
+                    Some(new_owner) => {
+                        format!("{reply} backend={new_owner} replicas={}", self.replicas_of(name).len())
+                    }
+                    None => format!(
+                        "ERR backend {primary_id} was lost after {verb}; {name:?} has no live backend to re-home onto"
+                    ),
                 }
             }
             Ok(reply) => reply,
             Err(e) => {
                 drop(ctl); // report_failure takes `control` via mark_dead
-                self.report_failure(&id);
-                format!("ERR backend {id} unreachable during {verb}: {e}")
+                self.report_failure(&primary_id);
+                format!("ERR backend {primary_id} unreachable during {verb}: {e}")
             }
         }
     }
 
-    /// Resolve a network to its owning backend.
+    /// Resolve a network to a live replica owner (the first in placement
+    /// order — the primary, or the senior survivor after a failover).
     pub fn lookup(&self, net: &str) -> Lookup {
         let st = self.state.lock().unwrap();
         let Some(entry) = st.directory.get(net) else { return Lookup::Unknown };
-        let owned = entry.owner.as_ref().and_then(|id| {
-            st.backends.get(id).filter(|b| b.alive).map(|b| (id.clone(), b.addr))
-        });
+        let owned = entry
+            .owners
+            .iter()
+            .find_map(|id| st.backends.get(id).filter(|b| b.alive).map(|b| (id.clone(), b.addr)));
         match owned {
             Some((id, addr)) => Lookup::Owned { id, addr },
             None => Lookup::Orphaned,
         }
     }
 
-    /// Directory owner of `net` (`None` if unknown or orphaned).
+    /// Primary directory owner of `net` (`None` if unknown or orphaned).
     pub fn owner(&self, net: &str) -> Option<String> {
-        self.state.lock().unwrap().directory.get(net).and_then(|e| e.owner.clone())
+        self.state.lock().unwrap().directory.get(net).and_then(|e| e.owners.first().cloned())
+    }
+
+    /// Every directory replica owner of `net`, primary first (empty if
+    /// unknown or orphaned).
+    pub fn replicas_of(&self, net: &str) -> Vec<String> {
+        self.state.lock().unwrap().directory.get(net).map(|e| e.owners.clone()).unwrap_or_default()
+    }
+
+    /// The *alive* replica owners of `net` with their addresses, primary
+    /// first — the targets a clean session's read-only verbs spread over.
+    pub fn read_targets(&self, net: &str) -> Vec<(String, SocketAddr)> {
+        let st = self.state.lock().unwrap();
+        let Some(entry) = st.directory.get(net) else { return Vec::new() };
+        entry
+            .owners
+            .iter()
+            .filter_map(|id| st.backends.get(id).filter(|b| b.alive).map(|b| (id.clone(), b.addr)))
+            .collect()
     }
 
     /// The spec `net` was loaded from.
@@ -411,12 +468,14 @@ impl Cluster {
         self.state.lock().unwrap().directory.get(net).map(|e| e.spec.clone())
     }
 
-    /// Is (net, backend) still the live routing assignment?
+    /// Is (net, backend) still a live routing assignment? `Current` as
+    /// long as the backend remains *one of* the net's replica owners —
+    /// a primary change alone never unpins a session.
     pub fn confirm(&self, net: &str, backend: &str) -> Confirm {
         let st = self.state.lock().unwrap();
         match st.directory.get(net) {
             None => Confirm::Unloaded,
-            Some(e) if e.owner.as_deref() == Some(backend) => Confirm::Current,
+            Some(e) if e.owners.iter().any(|o| o == backend) => Confirm::Current,
             Some(_) => Confirm::Moved,
         }
     }
@@ -430,15 +489,16 @@ impl Cluster {
                 id: id.clone(),
                 addr: b.addr,
                 alive: b.alive,
-                owned_nets: st.directory.values().filter(|e| e.owner.as_deref() == Some(id.as_str())).count(),
+                owned_nets: st.directory.values().filter(|e| e.owners.iter().any(|o| o == id.as_str())).count(),
             })
             .collect()
     }
 
-    /// Directory view: network → owning backend id, sorted by name.
-    pub fn directory(&self) -> Vec<(String, Option<String>)> {
+    /// Directory view: network → replica owner ids (primary first),
+    /// sorted by name.
+    pub fn directory(&self) -> Vec<(String, Vec<String>)> {
         let st = self.state.lock().unwrap();
-        st.directory.iter().map(|(n, e)| (n.clone(), e.owner.clone())).collect()
+        st.directory.iter().map(|(n, e)| (n.clone(), e.owners.clone())).collect()
     }
 
     fn alive_counts(&self) -> (usize, usize, usize) {
@@ -446,12 +506,15 @@ impl Cluster {
         (st.backends.len(), st.backends.values().filter(|b| b.alive).count(), st.directory.len())
     }
 
-    /// Ring owner of `name` among live backends, with its address.
-    fn place(&self, name: &str) -> Option<(String, SocketAddr)> {
+    /// Desired replica owners of `name` among live ring members, primary
+    /// first, with addresses.
+    fn place_replicas(&self, name: &str) -> Vec<(String, SocketAddr)> {
         let st = self.state.lock().unwrap();
-        let id = st.ring.owner(name)?;
-        let addr = st.backends.get(&id).map(|b| b.addr)?;
-        Some((id, addr))
+        st.ring
+            .owners(name, self.cfg.replicas.max(1))
+            .into_iter()
+            .filter_map(|id| st.backends.get(&id).map(|b| (id.clone(), b.addr)))
+            .collect()
     }
 
     fn addr_if_alive(&self, id: &str) -> Option<SocketAddr> {
@@ -459,73 +522,96 @@ impl Cluster {
         st.backends.get(id).filter(|b| b.alive).map(|b| b.addr)
     }
 
-    /// Post-hand-off cleanup: `EVICT` `name` from a previous owner that
-    /// is not the new one and is still alive (a dead one has nothing to
-    /// free; a revival's stale residents are routed around anyway).
-    fn evict_stale(&self, name: &str, prev: Option<&str>, new_owner: &str) {
-        let Some(prev_id) = prev.filter(|p| *p != new_owner) else { return };
-        if let Some(addr) = self.addr_if_alive(prev_id) {
-            let _ = self.remote_line(addr, &format!("EVICT {name}"));
+    /// Post-hand-off cleanup: `EVICT` `name` from previous owners that
+    /// are not in the new replica set and are still alive (a dead one has
+    /// nothing to free; a revival's stale residents are routed around
+    /// anyway).
+    fn evict_stale(&self, name: &str, prev: &[String], keep: &[String]) {
+        for prev_id in prev {
+            if keep.iter().any(|k| k == prev_id) {
+                continue;
+            }
+            if let Some(addr) = self.addr_if_alive(prev_id) {
+                let _ = self.remote_line(addr, &format!("EVICT {name}"));
+            }
         }
     }
 
-    /// Re-home every network whose directory owner disagrees with the
-    /// ring: `LOAD` on the desired owner, then (when `evict_old` — join
-    /// and graceful leave, where the previous owner is still listening)
-    /// `EVICT` on the previous one. Orphans re-home too. A failed
-    /// hand-off `LOAD` keeps a still-alive previous owner routing (it
-    /// still holds the tree) rather than orphaning a working network;
-    /// the next rebalance retries the move. Caller holds `control`;
-    /// state is locked only around reads/commits, never I/O.
+    /// `LOAD` the recorded spec onto one backend, self-healing the
+    /// learn-spec "already resident of different provenance" case (a
+    /// revival that kept residents it no longer owns): evict there and
+    /// retry once — the directory's spec is the truth.
+    fn load_spec_on(&self, addr: SocketAddr, name: &str, spec: &str) -> bool {
+        let timeout = self.control_timeout(spec);
+        let reply = self.remote_line_bounded(addr, &format!("LOAD {spec}"), timeout);
+        let ok = matches!(&reply, Ok(r) if r.starts_with("OK"));
+        if ok || !crate::learn::is_learn_spec(spec) {
+            return ok;
+        }
+        match &reply {
+            Ok(r) if r.contains("already resident") => {
+                let _ = self.remote_line(addr, &format!("EVICT {name}"));
+                let retry = self.remote_line_bounded(addr, &format!("LOAD {spec}"), timeout);
+                matches!(retry, Ok(r) if r.starts_with("OK"))
+            }
+            _ => false,
+        }
+    }
+
+    /// Re-home every network whose directory owners disagree with the
+    /// ring's desired replica set: `LOAD` on the new members of the set,
+    /// then (when `evict_old` — join and graceful leave, where the
+    /// previous owners are still listening) `EVICT` on members that fell
+    /// off it. Orphans re-home too. If *no* desired replica can load the
+    /// net, still-alive previous owners keep routing (they hold the tree)
+    /// rather than orphaning a working network; the next rebalance
+    /// retries the move. Caller holds `control`; state is locked only
+    /// around reads/commits, never I/O.
     fn rebalance(&self, evict_old: bool) {
-        let nets: Vec<(String, String, Option<String>)> = {
+        let nets: Vec<(String, String, Vec<String>)> = {
             let st = self.state.lock().unwrap();
-            st.directory.iter().map(|(n, e)| (n.clone(), e.spec.clone(), e.owner.clone())).collect()
+            st.directory.iter().map(|(n, e)| (n.clone(), e.spec.clone(), e.owners.clone())).collect()
         };
         for (name, spec, prev) in nets {
-            let Some((id, addr)) = self.place(&name) else {
+            let desired = self.place_replicas(&name);
+            if desired.is_empty() {
                 let mut st = self.state.lock().unwrap();
                 if let Some(e) = st.directory.get_mut(&name) {
-                    e.owner = None;
+                    e.owners.clear();
                 }
                 continue;
+            }
+            if desired.len() == prev.len() && desired.iter().map(|(id, _)| id).eq(prev.iter()) {
+                continue;
+            }
+            // keep replicas already holding the net (desired ids come off
+            // the ring, so they are alive); LOAD it on the new ones. A
+            // hand-off re-learning of a learn: spec runs under the learn
+            // budget inside load_spec_on.
+            let mut next: Vec<String> = Vec::with_capacity(desired.len());
+            for (id, addr) in &desired {
+                if prev.iter().any(|p| p == id) || self.load_spec_on(*addr, &name, &spec) {
+                    next.push(id.clone());
+                }
+            }
+            let moved = !next.is_empty();
+            let committed = {
+                let mut st = self.state.lock().unwrap();
+                let next = if moved {
+                    next
+                } else {
+                    prev.iter()
+                        .filter(|p| st.backends.get(*p).map(|b| b.alive).unwrap_or(false))
+                        .cloned()
+                        .collect()
+                };
+                if let Some(e) = st.directory.get_mut(&name) {
+                    e.owners = next.clone();
+                }
+                next
             };
-            if prev.as_deref() == Some(id.as_str()) {
-                continue;
-            }
-            // hand-off re-learning of a learn: spec gets the learn budget
-            let timeout = self.control_timeout(&spec);
-            let reply = self.remote_line_bounded(addr, &format!("LOAD {spec}"), timeout);
-            let mut ok = matches!(&reply, Ok(r) if r.starts_with("OK"));
-            if !ok && crate::learn::is_learn_spec(&spec) {
-                if let Ok(r) = &reply {
-                    if r.contains("already resident") {
-                        // the target holds a stale resident of different
-                        // provenance under this name (a revival that kept
-                        // residents it no longer owns): evict it there and
-                        // retry once — the directory's spec is the truth
-                        let _ = self.remote_line(addr, &format!("EVICT {name}"));
-                        let retry = self.remote_line_bounded(addr, &format!("LOAD {spec}"), timeout);
-                        ok = matches!(retry, Ok(r) if r.starts_with("OK"));
-                    }
-                }
-            }
-            {
-                let mut st = self.state.lock().unwrap();
-                let prev_alive =
-                    prev.as_ref().map(|p| st.backends.get(p).map(|b| b.alive).unwrap_or(false)).unwrap_or(false);
-                if let Some(e) = st.directory.get_mut(&name) {
-                    e.owner = if ok {
-                        Some(id.clone())
-                    } else if prev_alive {
-                        prev.clone()
-                    } else {
-                        None
-                    };
-                }
-            }
-            if ok && evict_old {
-                self.evict_stale(&name, prev.as_deref(), &id);
+            if moved && evict_old {
+                self.evict_stale(&name, &prev, &committed);
             }
         }
     }
@@ -637,12 +723,12 @@ impl Cluster {
     }
 
     /// Cluster-wide `NETS`: every alive backend's residents, filtered to
-    /// directory-owned networks and annotated `@backend`.
+    /// directory-owned networks and annotated `@<primary>`. Any replica's
+    /// listing can fill a network's block (replicas are byte-identical,
+    /// so the attributes agree); the label is always the primary so the
+    /// output is deterministic.
     pub fn nets_line(&self) -> String {
-        let owners: BTreeMap<String, String> = {
-            let st = self.state.lock().unwrap();
-            st.directory.iter().filter_map(|(n, e)| e.owner.clone().map(|o| (n.clone(), o))).collect()
-        };
+        let owners: BTreeMap<String, Vec<String>> = self.directory().into_iter().collect();
         let targets: Vec<(String, SocketAddr)> = {
             let st = self.state.lock().unwrap();
             st.backends.iter().filter(|(_, b)| b.alive).map(|(id, b)| (id.clone(), b.addr)).collect()
@@ -653,8 +739,10 @@ impl Cluster {
             for raw in reply.split(']') {
                 let Some((head, attrs)) = raw.split_once('[') else { continue };
                 let Some(name) = head.split_whitespace().last() else { continue };
-                if owners.get(name) == Some(id) {
-                    blocks.insert(name.to_string(), format!("{name}[{attrs}]@{id}"));
+                let Some(owns) = owners.get(name) else { continue };
+                if owns.iter().any(|o| o == id) {
+                    let primary = owns.first().cloned().unwrap_or_default();
+                    blocks.insert(name.to_string(), format!("{name}[{attrs}]@{primary}"));
                 }
             }
         }
@@ -666,64 +754,72 @@ impl Cluster {
         out
     }
 
-    /// Cluster-wide `STATS`: per-network lines gathered from the owning
-    /// backends plus aggregate totals. Headline percentiles prefer the
-    /// bucket-wise merge of every backend's latency histograms (scraped
-    /// via `METRICS` — exact up to bucket resolution, since log2 bucket
-    /// counts add losslessly across backends); only when no backend
-    /// exposes histograms do they fall back to the count-weighted
-    /// [`LatencySummary::merge`], which is biased under skewed
-    /// per-backend distributions.
+    /// Cluster-wide `STATS`: per-network lines aggregated across each
+    /// network's replica owners plus cluster totals. Headline percentiles
+    /// come from the bucket-wise merge of every backend's latency
+    /// histograms (scraped via `METRICS` — exact up to bucket resolution,
+    /// since log2 bucket counts add losslessly across backends). There is
+    /// deliberately no count-weighted-percentile fallback: a backend that
+    /// fails its scrape — or exposes no histograms while queries were
+    /// served — is *reported* by marking the line `stats=partial` instead
+    /// of silently blending a biased estimate into the headline.
     pub fn stats_line(&self) -> String {
         let targets: Vec<(String, SocketAddr)> = {
             let st = self.state.lock().unwrap();
             st.backends.iter().filter(|(_, b)| b.alive).map(|(id, b)| (id.clone(), b.addr)).collect()
         };
-        let owners: BTreeMap<String, Option<String>> = self.directory().into_iter().collect();
-        // net name → (backend id, parsed per-net segment)
-        let mut per_net: BTreeMap<String, (String, NetStat)> = BTreeMap::new();
+        let owners: BTreeMap<String, Vec<String>> = self.directory().into_iter().collect();
+        let mut per_net: BTreeMap<String, NetAgg> = BTreeMap::new();
         let mut scrapes: Vec<crate::obs::scrape::Scrape> = Vec::new();
+        let mut responded = 0usize;
         for (id, addr) in &targets {
-            let Ok(reply) = self.remote_line(*addr, "STATS") else { continue };
-            for stat in parse_backend_stats(&reply) {
-                if owners.get(&stat.net).map(|o| o.as_deref() == Some(id.as_str())).unwrap_or(false) {
-                    per_net.insert(stat.net.clone(), (id.clone(), stat));
+            let stats_reply = self.remote_line(*addr, "STATS");
+            let metrics_reply = self.remote_block(*addr, "METRICS");
+            let metrics_ok = matches!(&metrics_reply, Ok((h, _)) if h.starts_with("OK metrics"));
+            if stats_reply.is_ok() && metrics_ok {
+                responded += 1;
+            }
+            if let Ok(reply) = &stats_reply {
+                for stat in parse_backend_stats(reply) {
+                    let Some(owns) = owners.get(&stat.net) else { continue };
+                    if !owns.iter().any(|o| o == id) {
+                        continue;
+                    }
+                    let agg = per_net.entry(stat.net.clone()).or_insert_with(|| NetAgg::new(owns));
+                    agg.add(&stat, owns.first().map(|p| p == id).unwrap_or(false));
                 }
             }
-            if let Ok((header, body)) = self.remote_block(*addr, "METRICS") {
-                if header.starts_with("OK metrics") {
-                    scrapes.push(crate::obs::scrape::Scrape::parse(&body.join("\n")));
+            if metrics_ok {
+                if let Ok((_, body)) = metrics_reply {
+                    scrapes.push(crate::obs::scrape::parse(&body.join("\n")));
                 }
             }
         }
         let (backends, alive, nets) = self.alive_counts();
         let scrape_refs: Vec<&crate::obs::scrape::Scrape> = scrapes.iter().collect();
-        let (p50_us, p99_us) = match crate::obs::scrape::merged_percentiles(
-            &scrape_refs,
-            "fastbn_query_latency_us",
-            &[0.5, 0.99],
-        ) {
-            Some(ps) => (ps[0], ps[1]),
-            None => {
-                let parts: Vec<LatencySummary> = per_net.values().map(|(_, s)| s.as_summary()).collect();
-                let merged = LatencySummary::merge(&parts);
-                (merged.p50.as_micros() as u64, merged.p99.as_micros() as u64)
-            }
-        };
-        let queries: u64 = per_net.values().map(|(_, s)| s.queries).sum();
-        let errors: u64 = per_net.values().map(|(_, s)| s.errors).sum();
+        let merged =
+            crate::obs::scrape::merged_percentiles(&scrape_refs, "fastbn_query_latency_us", &[0.5, 0.99]);
+        let queries: u64 = per_net.values().map(|a| a.queries).sum();
+        let errors: u64 = per_net.values().map(|a| a.errors).sum();
+        let (p50_us, p99_us) = merged.as_ref().map(|ps| (ps[0], ps[1])).unwrap_or((0, 0));
+        // partial: some alive backend failed its STATS/METRICS scrape, or
+        // queries were served with no histogram anywhere to merge
+        let partial = responded < targets.len() || (merged.is_none() && queries > 0);
         let mut out = format!(
             "STATS cluster uptime_ms={} backends={backends} alive={alive} nets={nets} queries={queries} errors={errors} p50_us={p50_us} p99_us={p99_us}",
             self.started.elapsed().as_millis(),
         );
-        for (net, (id, s)) in &per_net {
+        if partial {
+            out.push_str(" stats=partial");
+        }
+        for (net, agg) in &per_net {
             out.push_str(&format!(
-                " | {net} backend={id} queries={} errors={} qps={:.2} p50_us={} p99_us={}",
-                s.queries, s.errors, s.qps, s.p50_us, s.p99_us
+                " | {net} backend={} replicas={}/{} queries={} errors={} qps={:.2} p50_us={} p99_us={}",
+                agg.primary, agg.seen, agg.total, agg.queries, agg.errors, agg.qps, agg.p50_us, agg.p99_us
             ));
         }
-        for (net, owner) in &owners {
-            if owner.is_none() {
+        for (net, owns) in &owners {
+            if owns.is_empty() {
                 out.push_str(&format!(" | {net} backend=none orphaned=true"));
             }
         }
@@ -773,22 +869,48 @@ struct NetStat {
     p99_us: u64,
 }
 
-impl NetStat {
-    /// Synthetic summary for cross-backend merging. Only count/p50/p99
-    /// survive the wire, so the other fields are filled from those —
-    /// good enough for a cluster-total headline, documented approximate.
-    fn as_summary(&self) -> LatencySummary {
-        let (p50, p99) = (Duration::from_micros(self.p50_us), Duration::from_micros(self.p99_us));
-        LatencySummary {
-            count: self.queries as usize,
-            total: p50 * (self.queries.min(u64::from(u32::MAX)) as u32),
-            mean: p50,
-            min: p50,
-            max: p99,
-            p50,
-            p95: p99,
-            p99,
+/// One network's stats aggregated across its replica owners: counts and
+/// qps sum (each replica counts only the queries it served); percentiles
+/// are taken from the primary's snapshot (first responder as a fallback)
+/// rather than averaged — per-replica percentiles don't compose, and the
+/// *cluster* headline already has the exact bucket merge.
+struct NetAgg {
+    primary: String,
+    total: usize,
+    seen: usize,
+    queries: u64,
+    errors: u64,
+    qps: f64,
+    p50_us: u64,
+    p99_us: u64,
+    primary_seen: bool,
+}
+
+impl NetAgg {
+    fn new(owners: &[String]) -> Self {
+        NetAgg {
+            primary: owners.first().cloned().unwrap_or_default(),
+            total: owners.len(),
+            seen: 0,
+            queries: 0,
+            errors: 0,
+            qps: 0.0,
+            p50_us: 0,
+            p99_us: 0,
+            primary_seen: false,
         }
+    }
+
+    fn add(&mut self, stat: &NetStat, is_primary: bool) {
+        self.queries += stat.queries;
+        self.errors += stat.errors;
+        self.qps += stat.qps;
+        if is_primary || !self.primary_seen && self.seen == 0 {
+            self.p50_us = stat.p50_us;
+            self.p99_us = stat.p99_us;
+        }
+        self.primary_seen |= is_primary;
+        self.seen += 1;
     }
 }
 
@@ -825,34 +947,158 @@ struct Active {
     conn: BackendConn,
 }
 
-/// One client's front-tier session: routes control verbs to the cluster
-/// and pins data-plane verbs to the owning backend's connection (where
-/// the backend-side session holds the streamed-evidence state).
+/// One pooled read connection: a backend-side session used only for
+/// read-only verbs (`QUERY`, `BATCH`/`CASE`) of a clean front session.
+/// It never carries evidence, so re-`USE`ing it (to switch nets, or
+/// after a reconnect) is always safe.
+struct ReadConn {
+    backend: String,
+    /// Net its backend-side session currently has selected (empty until
+    /// the first `USE` on it succeeds).
+    net: String,
+    conn: BackendConn,
+}
+
+enum ReadOutcome {
+    /// The replica answered (the reply may still be a protocol `ERR`).
+    Reply(String),
+    /// Transport failure — the conn is dropped; report and try another.
+    Dead,
+    /// The replica is reachable but can't serve this net right now.
+    Skip,
+}
+
+/// One client's front-tier session: routes control verbs to the cluster,
+/// pins evidence-bearing data-plane verbs to one owning backend's
+/// connection (where the backend-side session holds the streamed-evidence
+/// state), and spreads a **clean** session's read-only verbs across the
+/// network's replicas.
+///
+/// The front keeps a mirror of the evidence the client staged/committed
+/// through this session (maintained from the `OK` replies of forwarded
+/// `OBSERVE`/`RETRACT`/`COMMIT`). The mirror is what makes the rest safe:
+/// a session is *clean* iff the mirror is empty, and only clean sessions'
+/// `QUERY`/`BATCH` round-robin across replicas — every replica is
+/// byte-identical by construction, so a clean read can hop replicas (and
+/// transparently fail over when one dies) without any risk of misapplying
+/// evidence. Evidence-bearing sessions keep the original sticky contract:
+/// when their pinned backend dies or loses the net, the next verb gets a
+/// clean `ERR … USE it again`, never a silent reroute. The mirror also
+/// backs the `HANDOFF` verb: it exports the committed evidence so a peer
+/// router can replay it (`USE` + one atomic `OBSERVE` + `COMMIT`) and
+/// resume the session with identical state — any replay failure drops the
+/// pin entirely, so a half-applied hand-off can never answer queries.
 ///
 /// `BATCH` passthrough: the front mirrors the backend's batch counting —
 /// it remembers `n` from a successful `BATCH <n> <target>` forward, lets
 /// the first `n-1` `CASE` lines round-trip one-for-one, and reads **n**
 /// reply lines for the final `CASE` (the backend answers the whole batch
-/// at once). Verbs the front answers locally (NETS/STATS/PING/TOPO/LOAD)
-/// never reach the pinned conn, so they leave both sides' batch state
-/// untouched; any *forwarded* non-CASE verb aborts the batch on both
-/// sides at once (the backend on seeing the verb, the front here).
+/// at once). A clean session's batch runs on a replica read conn with
+/// every line buffered: backend acks are deterministic (`OK batch …`,
+/// `OK case i/n`), so if the replica dies mid-collection the front
+/// replays the buffered prefix on a survivor and the client never sees
+/// the failure. Verbs the front answers locally (NETS/STATS/PING/TOPO/
+/// LOAD/JOIN) never reach a backend conn, so they leave both sides'
+/// batch state untouched; any *forwarded* non-CASE verb aborts the batch
+/// on both tiers at once.
 pub struct ClusterSession {
     cluster: Arc<Cluster>,
     active: Option<Active>,
     /// (cases remaining, total) of an in-progress forwarded batch.
     batch: Option<(usize, usize)>,
+    /// Front-side mirror of evidence committed through this session:
+    /// var → state, as the client spelled them.
+    committed: BTreeMap<String, String>,
+    /// Mirror of staged-but-uncommitted deltas, in order (`None` =
+    /// retract). Non-empty pending also pins reads: the safe default.
+    pending: Vec<(String, Option<String>)>,
+    /// Pooled read conns, one per backend this session has read from.
+    read_conns: Vec<ReadConn>,
+    /// Round-robin cursor over a net's read targets.
+    read_rr: usize,
+    /// Backend that answered the most recent spread read.
+    last_read: Option<String>,
+    /// Replica a clean-session batch collection lives on…
+    batch_backend: Option<String>,
+    /// …and the verbatim `BATCH` + `CASE` lines to replay if it dies.
+    batch_lines: Vec<String>,
 }
 
 impl ClusterSession {
     /// New session; nothing selected.
     pub fn new(cluster: Arc<Cluster>) -> Self {
-        ClusterSession { cluster, active: None, batch: None }
+        ClusterSession {
+            cluster,
+            active: None,
+            batch: None,
+            committed: BTreeMap::new(),
+            pending: Vec::new(),
+            read_conns: Vec::new(),
+            read_rr: 0,
+            last_read: None,
+            batch_backend: None,
+            batch_lines: Vec::new(),
+        }
     }
 
     /// Network the session is pinned to, if any.
     pub fn current_net(&self) -> Option<&str> {
         self.active.as_ref().map(|a| a.net.as_str())
+    }
+
+    /// No evidence staged or committed — reads may spread over replicas.
+    fn session_clean(&self) -> bool {
+        self.committed.is_empty() && self.pending.is_empty()
+    }
+
+    /// Forget an in-progress batch (front side only).
+    fn abort_batch(&mut self) {
+        self.batch = None;
+        self.batch_backend = None;
+        self.batch_lines.clear();
+    }
+
+    /// Tear the whole pin down: selection, batch, and evidence mirror.
+    fn drop_pin(&mut self) {
+        self.active = None;
+        self.abort_batch();
+        self.committed.clear();
+        self.pending.clear();
+    }
+
+    /// Keep the evidence mirror in sync with the backend session's
+    /// accounting, from the `OK` reply of a forwarded evidence verb.
+    fn mirror(&mut self, verb: &str, rest: &str, reply: &str) {
+        if !reply.starts_with("OK") {
+            return;
+        }
+        match verb {
+            "OBSERVE" => {
+                for tok in rest.split_whitespace() {
+                    if let Some((var, state)) = tok.split_once('=') {
+                        self.pending.push((var.to_string(), Some(state.to_string())));
+                    }
+                }
+            }
+            "RETRACT" => {
+                for var in rest.split_whitespace() {
+                    self.pending.push((var.to_string(), None));
+                }
+            }
+            "COMMIT" => {
+                for (var, state) in std::mem::take(&mut self.pending) {
+                    match state {
+                        Some(s) => {
+                            self.committed.insert(var, s);
+                        }
+                        None => {
+                            self.committed.remove(&var);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
     }
 
     /// Handle one protocol line, producing one reply.
@@ -876,20 +1122,29 @@ impl ClusterSession {
             }
             "LEARN" => self.cmd_learn(rest),
             "USE" => self.cmd_use(rest),
+            "JOIN" => self.cmd_join(rest),
+            "HANDOFF" => self.cmd_handoff(rest),
             "NETS" => self.cluster.nets_line(),
             "STATS" => self.cluster.stats_line(),
             "METRICS" => self.cluster.metrics_line(),
             "PING" => self.cluster.ping_line(),
             "TOPO" => self.cluster.topo_line(),
-            // a forwarded data verb reaches the pinned backend session (or
-            // tears the pin down), and either way its batch collection is
-            // over — mirror that here. Verbs the front answers locally
-            // (LOAD/NETS/STATS/METRICS/PING/TOPO, unknown) never touch the
-            // conn and must leave the mirrored count alone. TRACE forwards:
-            // the ring lives where the engines run, on the backend.
-            "OBSERVE" | "RETRACT" | "COMMIT" | "QUERY" | "TRACE" => {
-                self.batch = None;
-                self.forward(line)
+            // a forwarded data verb reaches a backend session (or tears
+            // the pin down), and either way any batch collection is over —
+            // mirror that here. Verbs the front answers locally
+            // (LOAD/NETS/STATS/METRICS/PING/TOPO/JOIN, unknown) never
+            // touch a conn and must leave the mirrored count alone. TRACE
+            // forwards: the ring lives where the engines run, on the
+            // backend. Evidence verbs also update the evidence mirror.
+            "OBSERVE" | "RETRACT" | "COMMIT" | "TRACE" => {
+                self.abort_batch();
+                let reply = self.forward(line);
+                self.mirror(&verb, rest, &reply);
+                reply
+            }
+            "QUERY" => {
+                self.abort_batch();
+                self.cmd_query(line)
             }
             "BATCH" => self.cmd_batch(line, rest),
             "CASE" => self.cmd_case(line),
@@ -898,17 +1153,118 @@ impl ClusterSession {
         SessionReply::Line(reply)
     }
 
+    /// `QUERY`: a clean session spreads over replicas; an evidence-bearing
+    /// one forwards on the pinned conn (where the evidence lives).
+    fn cmd_query(&mut self, line: &str) -> String {
+        match self.active.as_ref().map(|a| a.net.clone()) {
+            Some(net) if self.session_clean() => self.spread_read(&net, line),
+            _ => self.forward(line),
+        }
+    }
+
+    /// Route one read-only line for a clean session: round-robin across
+    /// `net`'s alive replicas, hopping to the next on a dead conn —
+    /// replicas are byte-identical, so the client sees no error, just the
+    /// answer. Per-replica registry drift (`ERR network …` teardown) also
+    /// hops; a deterministic protocol `ERR` (bad variable, bad count)
+    /// returns as-is.
+    fn spread_read(&mut self, net: &str, line: &str) -> String {
+        let targets = self.cluster.read_targets(net);
+        if targets.is_empty() {
+            return match self.cluster.lookup(net) {
+                Lookup::Unknown => {
+                    self.drop_pin();
+                    format!("ERR network {net:?} is no longer loaded anywhere; LOAD and USE it again")
+                }
+                _ => format!("ERR network {net:?} has no live backend; retry once rerouted"),
+            };
+        }
+        let len = targets.len();
+        let mut teardown: Option<String> = None;
+        for i in 0..len {
+            let (id, addr) = targets[(self.read_rr + i) % len].clone();
+            match self.read_request(&id, addr, net, line, 1) {
+                ReadOutcome::Reply(reply) => {
+                    if reply.starts_with("ERR network") {
+                        // that replica's resident was evicted/reloaded
+                        // mid-verb; another replica may still answer
+                        teardown = Some(reply);
+                        continue;
+                    }
+                    self.read_rr = (self.read_rr + i + 1) % len;
+                    self.last_read = Some(id);
+                    return reply;
+                }
+                ReadOutcome::Dead => self.cluster.report_failure(&id),
+                ReadOutcome::Skip => {}
+            }
+        }
+        teardown.unwrap_or_else(|| format!("ERR no replica of {net:?} is reachable; retry once rerouted"))
+    }
+
+    /// One request on the pooled read conn for `id`, opening (and
+    /// `USE`-selecting) it as needed. The conn is taken out of the pool
+    /// for the call and returned on success; a transport error drops it.
+    fn read_request(&mut self, id: &str, addr: SocketAddr, net: &str, line: &str, n: usize) -> ReadOutcome {
+        let mut rc = match self.read_conns.iter().position(|c| c.backend == id) {
+            Some(i) => self.read_conns.swap_remove(i),
+            None => match self.cluster.connect(addr) {
+                Ok(conn) => ReadConn { backend: id.to_string(), net: String::new(), conn },
+                Err(_) => return ReadOutcome::Dead,
+            },
+        };
+        if rc.net != net {
+            // select the net on the backend-side read session, with the
+            // same restart self-heal as the pinned path
+            match self.forward_use(&mut rc.conn, net) {
+                Ok(reply) if reply.starts_with("OK") => rc.net = net.to_string(),
+                Ok(_) => {
+                    // conn healthy, replica can't serve this net right now
+                    self.read_conns.push(rc);
+                    return ReadOutcome::Skip;
+                }
+                Err(_) => return ReadOutcome::Dead,
+            }
+        }
+        match rc.conn.request_lines(line, n) {
+            Ok(lines) => {
+                let reply = lines.join("\n");
+                if reply.starts_with("ERR network") {
+                    // backend-side teardown dropped the selection
+                    rc.net.clear();
+                }
+                self.read_conns.push(rc);
+                ReadOutcome::Reply(reply)
+            }
+            Err(_) => ReadOutcome::Dead,
+        }
+    }
+
     /// Forward `BATCH <n> <target>`; on an `OK` reply start mirroring the
-    /// backend's case countdown so the final `CASE` reads n lines.
+    /// backend's case countdown so the final `CASE` reads n lines. A
+    /// clean session's batch runs on a replica read conn with its lines
+    /// buffered for mid-collection failover.
     fn cmd_batch(&mut self, line: &str, rest: &str) -> String {
         // whatever happens next, the previous collection is over on both
         // sides: the backend aborts it on seeing the BATCH verb, and a
         // failed forward tears the pin (and its session) down
-        self.batch = None;
+        self.abort_batch();
         let n: Option<usize> = rest.split_whitespace().next().and_then(|t| t.parse().ok());
+        let clean_net = self.active.as_ref().map(|a| a.net.clone()).filter(|_| self.session_clean());
+        if let Some(net) = clean_net {
+            let reply = self.spread_read(&net, line);
+            if reply.starts_with("OK") {
+                // the backend accepted, so the count parsed there too
+                if let Some(n) = n {
+                    self.batch = Some((n, n));
+                    self.batch_backend = self.last_read.clone();
+                    self.batch_lines = vec![line.to_string()];
+                }
+            }
+            return reply;
+        }
         let reply = self.forward(line);
         if reply.starts_with("OK") {
-            // the backend accepted, so the count parsed there too
             if let Some(n) = n {
                 self.batch = Some((n, n));
             }
@@ -919,31 +1275,174 @@ impl ClusterSession {
     /// Forward one `CASE` line. Mid-batch cases round-trip one-for-one;
     /// the final one comes back as the batch's n result lines.
     fn cmd_case(&mut self, line: &str) -> String {
-        match self.batch {
-            None => self.forward(line), // backend answers "no batch in progress"
-            Some((remaining, total)) if remaining > 1 => {
-                let reply = self.forward(line);
-                // the backend acks every staged case; an ERR mid-batch
-                // means it aborted its collection (tree evicted, conn
-                // rerouted) — mirror that. A transport error also drops
-                // the pin, and the batch with it.
-                if self.active.is_some() && !reply.starts_with("ERR") {
-                    self.batch = Some((remaining - 1, total));
-                } else {
-                    self.batch = None;
-                }
-                reply
-            }
-            Some((_, total)) => {
+        let Some((remaining, total)) = self.batch else {
+            // no open batch on this session: the pinned backend session
+            // answers "no batch in progress" itself
+            return self.forward(line);
+        };
+        if self.batch_backend.is_some() {
+            return self.cmd_case_read(line, remaining, total);
+        }
+        // pinned-path batch (evidence-bearing session): the collection
+        // lives and dies with the pinned conn
+        if remaining > 1 {
+            let reply = self.forward(line);
+            // the backend acks every staged case; an ERR mid-batch means
+            // it aborted its collection (tree evicted, conn rerouted) —
+            // mirror that. A transport error also drops the pin, and the
+            // batch with it.
+            if self.active.is_some() && !reply.starts_with("ERR") {
+                self.batch = Some((remaining - 1, total));
+            } else {
                 self.batch = None;
-                self.forward_multi(line, total)
             }
+            reply
+        } else {
+            self.batch = None;
+            self.forward_multi(line, total)
         }
     }
 
+    /// One `CASE` of a clean-session batch living on a replica read conn.
+    fn cmd_case_read(&mut self, line: &str, remaining: usize, total: usize) -> String {
+        let Some(net) = self.active.as_ref().map(|a| a.net.clone()) else {
+            self.abort_batch();
+            return "ERR no network selected (USE <net> first)".into();
+        };
+        let id = self.batch_backend.clone().expect("read-path batch has a backend");
+        let n = if remaining <= 1 { total } else { 1 };
+        let target = self.cluster.read_targets(&net).into_iter().find(|(tid, _)| *tid == id);
+        let outcome = match target {
+            Some((_, addr)) => self.read_request(&id, addr, &net, line, n),
+            // the collection's replica no longer serves the net (failover
+            // or rebalance): replay the batch on a current replica
+            None => ReadOutcome::Skip,
+        };
+        match outcome {
+            ReadOutcome::Reply(reply) => self.settle_case(reply, line, remaining, total),
+            ReadOutcome::Dead => {
+                self.cluster.report_failure(&id);
+                self.replay_batch(&net, line, remaining, total, &id)
+            }
+            ReadOutcome::Skip => self.replay_batch(&net, line, remaining, total, &id),
+        }
+    }
+
+    /// Account one read-path `CASE` reply against the mirrored countdown.
+    fn settle_case(&mut self, reply: String, line: &str, remaining: usize, total: usize) -> String {
+        if remaining <= 1 || reply.starts_with("ERR") {
+            // final case answered, or the replica aborted its collection
+            // deterministically (a replay would abort identically)
+            self.abort_batch();
+        } else {
+            self.batch = Some((remaining - 1, total));
+            self.batch_lines.push(line.to_string());
+        }
+        reply
+    }
+
+    /// A clean-session batch lost its replica mid-collection: replay the
+    /// buffered `BATCH` + `CASE` prefix on another replica. Backend acks
+    /// are deterministic (`OK batch …`, `OK case i/n` — see
+    /// [`crate::fleet::Session`]), so on success the client never
+    /// observes the failure, fulfilling the replica-failover contract for
+    /// batches too.
+    fn replay_batch(&mut self, net: &str, line: &str, remaining: usize, total: usize, failed: &str) -> String {
+        let targets: Vec<(String, SocketAddr)> =
+            self.cluster.read_targets(net).into_iter().filter(|(id, _)| id != failed).collect();
+        let prefix = self.batch_lines.clone();
+        'replica: for (id, addr) in targets {
+            for prev in &prefix {
+                match self.read_request(&id, addr, net, prev, 1) {
+                    ReadOutcome::Reply(r) if r.starts_with("OK") => {}
+                    ReadOutcome::Dead => {
+                        self.cluster.report_failure(&id);
+                        continue 'replica;
+                    }
+                    _ => continue 'replica,
+                }
+            }
+            let n = if remaining <= 1 { total } else { 1 };
+            match self.read_request(&id, addr, net, line, n) {
+                ReadOutcome::Reply(reply) => {
+                    self.batch_backend = Some(id);
+                    return self.settle_case(reply, line, remaining, total);
+                }
+                ReadOutcome::Dead => {
+                    self.cluster.report_failure(&id);
+                    continue 'replica;
+                }
+                ReadOutcome::Skip => continue 'replica,
+            }
+        }
+        self.abort_batch();
+        format!("ERR no replica of {net:?} can continue the batch; BATCH again once rerouted")
+    }
+
+    /// `JOIN <host:port>`: adopt an already-running `fastbn serve --fleet`
+    /// process as a backend. Control-plane; answered by the front.
+    fn cmd_join(&mut self, rest: &str) -> String {
+        let Ok(addr) = rest.parse::<SocketAddr>() else {
+            return "ERR usage: JOIN <host:port>".into();
+        };
+        match self.cluster.join(addr) {
+            Ok(id) => format!("OK joined {id} addr={addr}"),
+            Err(e) => format!("ERR {e}"),
+        }
+    }
+
+    /// `HANDOFF` (no args): export this session's committed evidence as
+    /// one line a peer router can replay. `HANDOFF <net> [var=state …]`:
+    /// import — re-pin `<net>` on this router and replay the evidence as
+    /// `USE` + one atomic `OBSERVE` + `COMMIT`. Every replay step is
+    /// checked; any failure drops the pin entirely (the backend session
+    /// and any staged evidence die with the conn), so a half-applied
+    /// hand-off can never answer queries with partial evidence.
+    fn cmd_handoff(&mut self, rest: &str) -> String {
+        if rest.is_empty() {
+            let Some(active) = self.active.as_ref() else {
+                return "ERR no network selected (USE <net> first)".into();
+            };
+            let mut out = format!("OK handoff net={} evidence={}", active.net, self.committed.len());
+            for (var, state) in &self.committed {
+                out.push_str(&format!(" {var}={state}"));
+            }
+            return out;
+        }
+        let mut tokens = rest.split_whitespace();
+        let net = tokens.next().unwrap_or("").to_string();
+        let pairs: Vec<&str> = tokens.collect();
+        if net.is_empty() || pairs.iter().any(|t| !t.contains('=')) {
+            return "ERR usage: HANDOFF [<net> var=state ...]".into();
+        }
+        let use_reply = self.cmd_use(&net);
+        if !use_reply.starts_with("OK") {
+            return format!("ERR handoff replay failed at USE: {use_reply}");
+        }
+        if pairs.is_empty() {
+            return format!("OK handoff applied net={net} evidence=0");
+        }
+        let pair_text = pairs.join(" ");
+        // one OBSERVE line — the backend validates every token before
+        // staging any, so a bad pair can never half-apply
+        let observe = self.forward(&format!("OBSERVE {pair_text}"));
+        self.mirror("OBSERVE", &pair_text, &observe);
+        if !observe.starts_with("OK") {
+            self.drop_pin();
+            return format!("ERR handoff replay failed at OBSERVE: {observe}");
+        }
+        let commit = self.forward("COMMIT");
+        self.mirror("COMMIT", "", &commit);
+        if !commit.starts_with("OK") {
+            self.drop_pin();
+            return format!("ERR handoff replay failed at COMMIT: {commit}");
+        }
+        format!("OK handoff applied net={net} evidence={}", self.committed.len())
+    }
+
     /// `LEARN <name> <spec> <samples> <seed>`: validated on the front,
-    /// executed on the ring owner of `<name>` via a control-plane
-    /// connection (like `LOAD` — the session's pinned data conn, and any
+    /// executed on the ring owners of `<name>` via control-plane
+    /// connections (like `LOAD` — the session's pinned data conn, and any
     /// open batch on it, is untouched).
     fn cmd_learn(&mut self, rest: &str) -> String {
         // same grammar as the backend session (one definition, on
@@ -960,24 +1459,40 @@ impl ClusterSession {
         if name.is_empty() {
             return "ERR usage: USE <net>".into();
         }
-        let (id, addr) = match self.cluster.lookup(name) {
-            Lookup::Owned { id, addr } => (id, addr),
-            Lookup::Orphaned => return format!("ERR network {name:?} has no live backend; retry once rerouted"),
-            Lookup::Unknown => return format!("ERR not loaded: {name:?} (LOAD it first)"),
+        // prefer the already-pinned backend when it is still a live
+        // replica owner — a primary change alone must not hop an
+        // evidence-bearing session — else pin to the first live replica
+        let targets = self.cluster.read_targets(name);
+        let pinned = self.active.as_ref().map(|a| a.backend.clone());
+        let chosen = targets
+            .iter()
+            .find(|(tid, _)| pinned.as_deref() == Some(tid.as_str()))
+            .or_else(|| targets.first())
+            .cloned();
+        let Some((id, addr)) = chosen else {
+            return match self.cluster.lookup(name) {
+                Lookup::Unknown => format!("ERR not loaded: {name:?} (LOAD it first)"),
+                _ => format!("ERR network {name:?} has no live backend; retry once rerouted"),
+            };
         };
-        // reuse the sticky conn only when staying on the same backend (its
-        // session's USE applies the evidence-reset semantics); resuming a
-        // *stale* session on another backend could leak old evidence
-        let same_backend = self.active.as_ref().map(|a| a.backend == id).unwrap_or(false);
+        let same_backend = pinned.as_deref() == Some(id.as_str());
         if same_backend {
             // the pinned backend session sees the USE (or the conn dies);
             // either way its batch collection is over — mirror that
-            self.batch = None;
+            self.abort_batch();
             let mut active = self.active.take().expect("checked above");
+            let same_net = active.net == name;
             return match self.forward_use(&mut active.conn, name) {
                 Ok(reply) => {
                     if reply.starts_with("OK") {
                         active.net = name.to_string();
+                        // the backend keeps evidence only on a re-USE of
+                        // the same net (same-model defensive re-USE);
+                        // switching nets resets it — mirror both
+                        if !same_net {
+                            self.committed.clear();
+                            self.pending.clear();
+                        }
                     }
                     // an ERR reply left the backend session untouched, so
                     // the existing pin (and its evidence) survives — the
@@ -987,6 +1502,8 @@ impl ClusterSession {
                 }
                 Err(e) => {
                     // the conn died and the old pin's state died with it
+                    self.committed.clear();
+                    self.pending.clear();
                     self.cluster.report_failure(&id);
                     format!("ERR backend {id} unreachable: {e}; retry USE once rerouted")
                 }
@@ -1007,8 +1524,9 @@ impl ClusterSession {
             Ok(reply) => {
                 if reply.starts_with("OK") {
                     // replacing the pin drops the old conn, and the old
-                    // backend session (incl. any open batch) dies with it
-                    self.batch = None;
+                    // backend session (evidence, any open batch) dies with
+                    // it — the fresh pin starts clean on both tiers
+                    self.drop_pin();
                     self.active = Some(Active { net: name.to_string(), backend: id, conn });
                 }
                 reply
@@ -1058,26 +1576,33 @@ impl ClusterSession {
             Confirm::Moved => {
                 let net = active.net.clone();
                 // dropping the pin closes the conn; the backend session
-                // (and any open batch) dies with it
-                self.active = None;
-                self.batch = None;
+                // (evidence, any open batch) dies with it
+                self.drop_pin();
                 return format!("ERR network {net:?} moved to another backend (rebalance or failover); USE it again");
             }
             Confirm::Unloaded => {
                 let net = active.net.clone();
-                self.active = None;
-                self.batch = None;
+                self.drop_pin();
                 return format!("ERR network {net:?} is no longer loaded anywhere; LOAD and USE it again");
             }
         }
         match active.conn.request_lines(line, n) {
-            Ok(lines) => lines.join("\n"),
+            Ok(lines) => {
+                let reply = lines.join("\n");
+                if reply.starts_with("ERR network") {
+                    // the backend session tore its selection down (net
+                    // evicted or reloaded under it) and cleared its
+                    // evidence — keep the mirror in sync
+                    self.committed.clear();
+                    self.pending.clear();
+                }
+                reply
+            }
             Err(e) => {
                 let (net, id) = (active.net.clone(), active.backend.clone());
-                self.active = None;
-                self.batch = None;
+                self.drop_pin();
                 // verified report: failover runs before we reply, so the
-                // client's very next USE normally lands on the new owner
+                // client's very next USE normally lands on a survivor
                 self.cluster.report_failure(&id);
                 format!("ERR backend {id} for network {net:?} is unreachable ({e}); USE the network again once rerouted")
             }
@@ -1107,8 +1632,13 @@ mod tests {
         assert!(cluster.load("no-such-net").starts_with("ERR unknown network"));
         assert_eq!(cluster.lookup("asia"), Lookup::Unknown);
         assert_eq!(cluster.owner("asia"), None);
+        assert!(cluster.replicas_of("asia").is_empty());
+        assert!(cluster.read_targets("asia").is_empty());
         assert!(cluster.ping_line().contains("backends=0 alive=0 nets=0"));
         assert!(cluster.stats_line().starts_with("STATS cluster"), "{}", cluster.stats_line());
+        // nothing to scrape and nothing served: an empty cluster is not
+        // "partial", it is just empty
+        assert!(!cluster.stats_line().contains("stats=partial"), "{}", cluster.stats_line());
         assert_eq!(cluster.nets_line(), "OK nets=0");
         assert_eq!(cluster.topo_line(), "OK backends=0");
         cluster.shutdown();
@@ -1149,6 +1679,26 @@ mod tests {
     }
 
     #[test]
+    fn join_and_handoff_validate_before_any_io() {
+        let cluster = empty_cluster();
+        let mut session = ClusterSession::new(Arc::clone(&cluster));
+        let line = |s: &mut ClusterSession, input: &str| match s.handle(input) {
+            SessionReply::Line(l) => l,
+            SessionReply::Quit => "QUIT".into(),
+        };
+        assert!(line(&mut session, "JOIN").starts_with("ERR usage: JOIN"));
+        assert!(line(&mut session, "JOIN nonsense").starts_with("ERR usage: JOIN"));
+        // export needs a pinned session
+        assert!(line(&mut session, "HANDOFF").starts_with("ERR no network selected"));
+        // import validates token shape before touching any backend
+        assert!(line(&mut session, "HANDOFF asia notapair").starts_with("ERR usage: HANDOFF"));
+        // well-formed import of an unknown net fails cleanly at the USE step
+        let reply = line(&mut session, "HANDOFF asia smoke=yes");
+        assert!(reply.starts_with("ERR handoff replay failed at USE"), "{reply}");
+        cluster.shutdown();
+    }
+
+    #[test]
     fn learn_verb_validates_before_routing() {
         let cluster = empty_cluster();
         let mut session = ClusterSession::new(Arc::clone(&cluster));
@@ -1181,5 +1731,24 @@ mod tests {
         assert_eq!(parsed[1].net, "cancer");
         assert_eq!(parsed[1].queries, 0);
         assert!(parse_backend_stats("STATS uptime_ms=1 nets=0").is_empty());
+    }
+
+    #[test]
+    fn net_agg_sums_counts_and_keeps_primary_percentiles() {
+        let owners = vec!["b1".to_string(), "b0".to_string()];
+        let mut agg = NetAgg::new(&owners);
+        let s0 = NetStat { net: "asia".into(), queries: 4, errors: 1, qps: 2.0, p50_us: 70, p99_us: 700 };
+        let s1 = NetStat { net: "asia".into(), queries: 6, errors: 0, qps: 3.0, p50_us: 90, p99_us: 900 };
+        // the non-primary replica reports first: its percentiles hold only
+        // until the primary's snapshot arrives; counts always sum
+        agg.add(&s0, false);
+        assert_eq!((agg.p50_us, agg.p99_us), (70, 700));
+        agg.add(&s1, true);
+        assert_eq!(agg.queries, 10);
+        assert_eq!(agg.errors, 1);
+        assert_eq!(agg.seen, 2);
+        assert_eq!((agg.p50_us, agg.p99_us), (90, 900));
+        assert_eq!(agg.primary, "b1");
+        assert_eq!(agg.total, 2);
     }
 }

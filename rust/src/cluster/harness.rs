@@ -11,6 +11,16 @@
 //! server's read-timeout tick), which is how the fault-injection suite
 //! in `rust/tests/cluster.rs` creates a mid-session backend death the
 //! front tier must detect, reroute around, and report cleanly.
+//!
+//! Two more topology levers mirror the PR-8 capabilities: an **external
+//! backend** ([`ClusterHarness::spawn_external_backend`]) runs like a
+//! remote already-serving fleet — started *without* joining, so a test
+//! adopts it through the `JOIN <addr>` verb exactly as an operator
+//! would — and a **peer front router**
+//! ([`ClusterHarness::start_peer_front`]) stands a second
+//! independently-derived router over the same backends, which is what
+//! the `HANDOFF` dual-router tests kill the primary against
+//! ([`ClusterHarness::kill_primary_front`]).
 
 use std::net::SocketAddr;
 use std::sync::Arc;
@@ -25,27 +35,33 @@ use crate::jt::evidence::Evidence;
 use crate::{Error, Result};
 
 struct BackendSlot {
+    /// Cluster-assigned id; empty for an external backend until a `JOIN`
+    /// adopts it and [`ClusterHarness::adopt_external_ids`] syncs it back.
     id: String,
     fleet: Arc<Fleet>,
     server: FleetServer,
 }
 
 /// A self-contained cluster: backends + front tier, all on ephemeral
-/// ports. Dropping it tears everything down (front first, then prober,
+/// ports. Dropping it tears everything down (fronts first, then probers,
 /// then backends, so nothing routes at a half-dead topology).
 pub struct ClusterHarness {
     backend_cfg: FleetConfig,
+    cluster_cfg: ClusterConfig,
     backends: Vec<Option<BackendSlot>>,
     cluster: Arc<Cluster>,
     front: Option<ClusterServer>,
+    peer: Option<(Arc<Cluster>, ClusterServer)>,
 }
 
 impl ClusterHarness {
     /// Spawn `n_backends` fleet servers and a front tier over them.
-    /// `backend_cfg` is reused for late [`Self::add_backend`] joins.
+    /// `backend_cfg` is reused for late [`Self::add_backend`] joins;
+    /// `cluster_cfg` for a late [`Self::start_peer_front`].
     pub fn start(n_backends: usize, backend_cfg: FleetConfig, cluster_cfg: ClusterConfig) -> Result<ClusterHarness> {
-        let cluster = Cluster::start(cluster_cfg)?;
-        let mut harness = ClusterHarness { backend_cfg, backends: Vec::new(), cluster, front: None };
+        let cluster = Cluster::start(cluster_cfg.clone())?;
+        let mut harness =
+            ClusterHarness { backend_cfg, cluster_cfg, backends: Vec::new(), cluster, front: None, peer: None };
         for _ in 0..n_backends {
             harness.add_backend()?;
         }
@@ -64,6 +80,34 @@ impl ClusterHarness {
         Ok(id)
     }
 
+    /// Spawn a fleet server that is **not** joined to the cluster — from
+    /// the front tier's point of view, an already-running remote
+    /// `fastbn serve --fleet` process. Returns its address; the test
+    /// adopts it with the `JOIN <addr>` verb (or `Cluster::join`), then
+    /// calls [`Self::adopt_external_ids`] so the harness can address it
+    /// by its assigned id.
+    pub fn spawn_external_backend(&mut self) -> Result<SocketAddr> {
+        let fleet = Arc::new(Fleet::new(self.backend_cfg.clone()));
+        let server = FleetServer::start(Arc::clone(&fleet), "127.0.0.1:0")?;
+        let addr = server.addr();
+        self.backends.push(Some(BackendSlot { id: String::new(), fleet, server }));
+        Ok(addr)
+    }
+
+    /// Sync cluster-assigned ids back onto external backend slots (by
+    /// address) after `JOIN`s, so [`Self::kill_backend`] and
+    /// [`Self::backend_fleet`] can address them.
+    pub fn adopt_external_ids(&mut self) {
+        let statuses = self.cluster.backends();
+        for slot in self.backends.iter_mut().flatten() {
+            if slot.id.is_empty() {
+                if let Some(s) = statuses.iter().find(|s| s.addr == slot.server.addr()) {
+                    slot.id = s.id.clone();
+                }
+            }
+        }
+    }
+
     /// Kill a backend in place: its listener closes and its connections
     /// drop. The cluster is *not* told — discovery (session report or
     /// prober) is the behavior under test. Returns false for an unknown
@@ -80,14 +124,70 @@ impl ClusterHarness {
         false
     }
 
-    /// The front-tier router state (ownership, health, directory).
+    /// Stand up a **second front router** over the same backends: a fresh
+    /// [`Cluster`] with the same config that joins every backend the
+    /// primary currently sees alive (in id order, so the deterministic
+    /// ring re-derives the identical placement under the identical ids)
+    /// and re-`LOAD`s the primary's directory specs — backend `LOAD` is
+    /// compile-once, so already-resident nets cache-hit and the peer's
+    /// directory converges on the same replica sets without any
+    /// router-to-router state transfer. Returns the peer's client
+    /// address. Session state does *not* converge by itself — that is
+    /// what the `HANDOFF` verb is for.
+    pub fn start_peer_front(&mut self) -> Result<SocketAddr> {
+        if self.peer.is_some() {
+            return Err(Error::msg("peer front already running"));
+        }
+        let peer = Cluster::start(self.cluster_cfg.clone())?;
+        // Cluster::backends() is id-sorted; join order fixes the peer's
+        // id assignment to match the primary's
+        for s in self.cluster.backends().iter().filter(|s| s.alive) {
+            peer.join(s.addr)?;
+        }
+        for (net, _) in self.cluster.directory() {
+            let Some(spec) = self.cluster.spec_of(&net) else { continue };
+            let reply = peer.load(&spec);
+            if !reply.starts_with("OK") {
+                peer.shutdown();
+                return Err(Error::msg(format!("peer front failed to re-load {net:?}: {reply}")));
+            }
+        }
+        let server = ClusterServer::start(Arc::clone(&peer), "127.0.0.1:0")?;
+        let addr = server.addr();
+        self.peer = Some((peer, server));
+        Ok(addr)
+    }
+
+    /// The peer front's router state, if one is running.
+    pub fn peer_cluster(&self) -> Option<&Arc<Cluster>> {
+        self.peer.as_ref().map(|(c, _)| c)
+    }
+
+    /// Address clients connect to on the peer front, if one is running.
+    pub fn peer_front_addr(&self) -> Option<SocketAddr> {
+        self.peer.as_ref().map(|(_, s)| s.addr())
+    }
+
+    /// Kill the **primary** front router: its listener closes, every
+    /// client session on it drops, its prober stops. The backends (and a
+    /// peer front, if any) keep running — the dual-router failover
+    /// surface. Returns false if it was already killed.
+    pub fn kill_primary_front(&mut self) -> bool {
+        let Some(front) = self.front.take() else { return false };
+        front.shutdown();
+        self.cluster.shutdown();
+        true
+    }
+
+    /// The primary front-tier router state (ownership, health,
+    /// directory).
     pub fn cluster(&self) -> &Arc<Cluster> {
         &self.cluster
     }
 
-    /// Address clients connect to.
+    /// Address clients connect to (the primary front).
     pub fn front_addr(&self) -> SocketAddr {
-        self.front.as_ref().expect("front tier runs for the harness lifetime").addr()
+        self.front.as_ref().expect("primary front is running").addr()
     }
 
     /// Direct handle to a live backend's in-process fleet — the
@@ -101,20 +201,31 @@ impl ClusterHarness {
             .map(|s| Arc::clone(&s.fleet))
     }
 
-    /// Ids of backends the harness still has running.
+    /// Ids of backends the harness still has running (externals show up
+    /// once adopted).
     pub fn live_backend_ids(&self) -> Vec<String> {
-        self.backends.iter().flatten().map(|s| s.id.clone()).collect()
+        self.backends.iter().flatten().filter(|s| !s.id.is_empty()).map(|s| s.id.clone()).collect()
     }
 
-    /// A TCP client session against the front tier, with bounded
+    /// A TCP client session against the primary front, with bounded
     /// timeouts so a routing bug is a test failure, not a hang.
     pub fn client(&self) -> Result<ClusterClient> {
         ClusterClient::connect(self.front_addr())
+    }
+
+    /// A TCP client session against the peer front.
+    pub fn peer_client(&self) -> Result<ClusterClient> {
+        let addr = self.peer_front_addr().ok_or_else(|| Error::msg("no peer front running"))?;
+        ClusterClient::connect(addr)
     }
 }
 
 impl Drop for ClusterHarness {
     fn drop(&mut self) {
+        if let Some((peer, server)) = self.peer.take() {
+            server.shutdown();
+            peer.shutdown();
+        }
         if let Some(front) = self.front.take() {
             front.shutdown();
         }
@@ -203,6 +314,7 @@ mod tests {
         let r = c.request("LOAD asia").unwrap();
         assert!(r.starts_with("OK loaded asia"), "{r}");
         assert!(r.contains("backend=b0"), "{r}");
+        assert!(r.contains("replicas=1"), "{r}");
         assert!(c.request("USE asia").unwrap().starts_with("OK using asia"));
         assert!(c.request("QUERY lung | smoke=yes").unwrap().starts_with("OK yes=0.100000"));
         assert_eq!(h.cluster().owner("asia"), Some("b0".to_string()));
@@ -247,6 +359,24 @@ mod tests {
         assert_eq!(h.cluster().backends().len(), 1);
         assert!(h.cluster().leave(&leaver).is_err(), "double leave must error");
         // and service continues through the front tier
+        assert!(c.request("USE asia").unwrap().starts_with("OK using asia"));
+        assert!(c.request("QUERY lung | smoke=yes").unwrap().starts_with("OK yes=0.100000"));
+    }
+
+    #[test]
+    fn external_backend_is_adopted_via_the_join_verb() {
+        let mut h = harness(1);
+        let ext = h.spawn_external_backend().unwrap();
+        // the front knows nothing about it until a client JOINs it
+        assert_eq!(h.cluster().backends().len(), 1);
+        let mut c = h.client().unwrap();
+        let r = c.request(&format!("JOIN {ext}")).unwrap();
+        assert!(r.starts_with("OK joined b1 addr="), "{r}");
+        assert!(c.request(&format!("JOIN {ext}")).unwrap().starts_with("ERR backend b1"), "double join must error");
+        h.adopt_external_ids();
+        assert!(h.live_backend_ids().contains(&"b1".to_string()));
+        // the adopted backend serves like any spawned one
+        assert!(c.request("LOAD asia").unwrap().starts_with("OK loaded asia"));
         assert!(c.request("USE asia").unwrap().starts_with("OK using asia"));
         assert!(c.request("QUERY lung | smoke=yes").unwrap().starts_with("OK yes=0.100000"));
     }

@@ -3,34 +3,44 @@
 //!
 //! [`crate::fleet`] scales one process to many networks; this module
 //! scales past the process boundary: a front-tier [`front::Cluster`] owns
-//! a deterministic consistent-hash [`ring::Ring`] mapping network names
-//! to N backend fleet processes, proxies the existing line protocol to
-//! the owning backend over TCP ([`backend::BackendConn`]), and manages
-//! membership — a join or graceful leave re-homes networks (`LOAD` on the
-//! new owner, `EVICT` on the old), a health prober with exponential
-//! backoff marks dead backends and reroutes their networks to survivors,
-//! and cluster-wide `STATS` aggregates every backend's snapshot.
+//! a deterministic consistent-hash [`ring::Ring`] mapping each network
+//! name to its R replica owners among N backend fleet processes
+//! ([`ring::Ring::owners`] successor walk), proxies the existing line
+//! protocol to an owning backend over TCP ([`backend::BackendConn`]),
+//! and manages membership — a join (spawned child or an already-running
+//! remote fleet adopted via the `JOIN <addr>` verb / `--join-hosts`) or
+//! graceful leave re-homes networks (`LOAD` on new owners, `EVICT` on
+//! old), a health prober with exponential backoff marks dead backends
+//! and reroutes their networks to surviving replicas, and cluster-wide
+//! `STATS` aggregates every backend's snapshot.
 //!
 //! ```text
 //!            clients (same line protocol as a single fleet)
-//!                │
-//!        ┌───────▼────────┐   consistent-hash ring: net name → backend
-//!        │  ClusterServer │   directory: net → {spec, owner}
-//!        │   (front tier) │   prober: PING w/ backoff, failover
-//!        └──┬─────────┬───┘
-//!     TCP   │         │   TCP (LOAD/LEARN/USE/QUERY/…/EVICT/PING)
-//!    ┌──────▼───┐ ┌───▼──────┐
-//!    │ fleet b0 │ │ fleet b1 │  … backend processes (fastbn serve --fleet)
-//!    └──────────┘ └──────────┘
+//!                │                       │
+//!        ┌───────▼────────┐      ┌───────▼────────┐
+//!        │  ClusterServer │      │  peer router   │  same ring, same
+//!        │   (front tier) │◄────►│  (optional)    │  placement — sessions
+//!        └──┬─────────┬───┘ HANDOFF └─┬───────────┘  replay via HANDOFF
+//!     TCP   │         │               │
+//!    ┌──────▼───┐ ┌───▼──────┐ ┌──────▼───┐
+//!    │ fleet b0 │ │ fleet b1 │ │ fleet b2 │ … backends, each net on R
+//!    └──────────┘ └──────────┘ └──────────┘   replicas (byte-identical)
 //! ```
 //!
 //! Front-tier verbs beyond the fleet protocol: `PING` (front liveness +
-//! topology counts) and `TOPO` (per-backend health and ownership).
-//! Sessions are *sticky*: `USE` pins the session to the owning backend's
+//! topology counts), `TOPO` (per-backend health and ownership), `JOIN
+//! <addr>` (adopt a running backend over TCP), and `HANDOFF` (export a
+//! session's committed evidence / replay it on a peer router — see
+//! [`front::ClusterSession`]).
+//! Sessions are *sticky*: `USE` pins the session to an owning backend's
 //! connection so streamed `OBSERVE`/`COMMIT` state lives where the tree
 //! lives; when ownership moves (rebalance or failover) the next verb gets
 //! a clean `ERR … USE it again` instead of silently rerouting — stale
-//! evidence must never be misapplied to a freshly compiled tree.
+//! evidence must never be misapplied to a freshly compiled tree. A
+//! session that has *no* evidence in flight is not pinned at all: its
+//! `QUERY`s round-robin across alive replicas and hop to a surviving
+//! replica transparently when one dies, because every replica answers
+//! byte-identically.
 //!
 //! [`harness::ClusterHarness`] spins a whole topology up in-process (real
 //! TCP, ephemeral ports) and can kill backends mid-session — the
@@ -53,8 +63,17 @@ pub use server::ClusterServer;
 /// Front-tier construction parameters.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
-    /// Virtual points per backend on the consistent-hash ring.
+    /// Replication factor R: each network is placed on the first R
+    /// distinct members clockwise from its hash ([`Ring::owners`]).
+    /// Replicas are byte-identical by construction (same spec → same
+    /// deterministic compile; `learn:` specs re-learn bit-identically),
+    /// so read-only `QUERY`/`BATCH` spread across them and fail over
+    /// inside the set without an error reply, while session verbs stay
+    /// pinned to one replica. Clamped to ≥ 1; clamped to the member
+    /// count at placement time.
     pub replicas: usize,
+    /// Virtual points per backend on the consistent-hash ring.
+    pub vnodes: usize,
     /// TCP connect bound for every backend socket.
     pub connect_timeout: Duration,
     /// Read/write bound on data-plane and control-plane requests
@@ -86,7 +105,8 @@ pub struct ClusterConfig {
 impl Default for ClusterConfig {
     fn default() -> Self {
         ClusterConfig {
-            replicas: 64,
+            replicas: 1,
+            vnodes: 64,
             connect_timeout: Duration::from_secs(1),
             io_timeout: Duration::from_secs(10),
             learn_timeout: Duration::from_secs(300),

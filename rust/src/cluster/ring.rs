@@ -9,10 +9,16 @@
 //! `net-000 … net-199` can land on one member); the finalizer spreads the
 //! high bits the `BTreeSet` ordering routes on.
 //!
-//! Each member contributes `replicas` virtual points so load splits
+//! Each member contributes `vnodes` virtual points so load splits
 //! evenly and membership change moves only the keys adjacent to the
 //! joining/leaving member's points — the minimal-movement property the
 //! unit tests pin down with concrete margins.
+//!
+//! Replication reuses the same walk: [`Ring::owners`] takes the first R
+//! *distinct* members clockwise from the key's hash (the classic
+//! successor-list placement), so `owners(k, 1)[0] == owner(k)` and a
+//! membership change perturbs replica sets as minimally as it perturbs
+//! single ownership.
 
 use std::collections::BTreeSet;
 
@@ -40,16 +46,16 @@ pub fn hash64(key: &str) -> u64 {
 /// pairs, so a (vanishingly unlikely) point collision between two members
 /// resolves by id order — ownership never depends on insertion order.
 pub struct Ring {
-    replicas: usize,
+    vnodes: usize,
     points: BTreeSet<(u64, String)>,
     members: BTreeSet<String>,
 }
 
 impl Ring {
-    /// Empty ring; each member will contribute `replicas` points
+    /// Empty ring; each member will contribute `vnodes` points
     /// (clamped to ≥ 1).
-    pub fn new(replicas: usize) -> Self {
-        Ring { replicas: replicas.max(1), points: BTreeSet::new(), members: BTreeSet::new() }
+    pub fn new(vnodes: usize) -> Self {
+        Ring { vnodes: vnodes.max(1), points: BTreeSet::new(), members: BTreeSet::new() }
     }
 
     /// Add a member (idempotent).
@@ -57,7 +63,7 @@ impl Ring {
         if !self.members.insert(id.to_string()) {
             return;
         }
-        for k in 0..self.replicas {
+        for k in 0..self.vnodes {
             self.points.insert((hash64(&format!("{id}#{k}")), id.to_string()));
         }
     }
@@ -67,7 +73,7 @@ impl Ring {
         if !self.members.remove(id) {
             return;
         }
-        for k in 0..self.replicas {
+        for k in 0..self.vnodes {
             self.points.remove(&(hash64(&format!("{id}#{k}")), id.to_string()));
         }
     }
@@ -80,6 +86,32 @@ impl Ring {
             .next()
             .or_else(|| self.points.iter().next())
             .map(|(_, id)| id.clone())
+    }
+
+    /// The first `r` *distinct* members clockwise from `key`'s hash —
+    /// the replica set for `key`, primary first. Clamped to the member
+    /// count (and to ≥ 1), so a 2-member ring asked for R=3 returns both
+    /// members rather than duplicating one. `owners(key, 1)` is exactly
+    /// `[owner(key)]`.
+    pub fn owners(&self, key: &str, r: usize) -> Vec<String> {
+        let want = r.max(1).min(self.members.len());
+        let mut out: Vec<String> = Vec::with_capacity(want);
+        if want == 0 {
+            return out;
+        }
+        let h = hash64(key);
+        // one full wrap: the clockwise tail, then the whole ring from the
+        // start (duplicate points past the wrap are skipped by the
+        // distinctness check before `out` fills up)
+        for (_, id) in self.points.range((h, String::new())..).chain(self.points.iter()) {
+            if !out.iter().any(|o| o == id) {
+                out.push(id.clone());
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
     }
 
     /// Current members, sorted.
@@ -192,8 +224,50 @@ mod tests {
     }
 
     #[test]
+    fn owners_walk_is_distinct_primary_first_and_clamped() {
+        let ring = ring_of(&["b0", "b1", "b2", "b3"]);
+        for k in keys(100) {
+            let two = ring.owners(&k, 2);
+            assert_eq!(two.len(), 2, "{k}");
+            assert_ne!(two[0], two[1], "{k}: duplicate replica");
+            // primary of the replica set is the single-owner answer
+            assert_eq!(two[0], ring.owner(&k).unwrap(), "{k}");
+            assert_eq!(ring.owners(&k, 1), vec![ring.owner(&k).unwrap()], "{k}");
+            // R past the member count clamps: all four members, distinct
+            let all = ring.owners(&k, 9);
+            assert_eq!(all.len(), 4, "{k}");
+            let set: BTreeSet<&String> = all.iter().collect();
+            assert_eq!(set.len(), 4, "{k}: owners(_, 9) repeated a member");
+            // R=0 clamps to 1 (a replicated deployment never loses the primary)
+            assert_eq!(ring.owners(&k, 0), vec![all[0].clone()], "{k}");
+        }
+        assert!(Ring::new(64).owners("asia", 2).is_empty(), "empty ring has no owners");
+    }
+
+    #[test]
+    fn owners_move_minimally_on_join() {
+        const K: usize = 200;
+        let before = ring_of(&["b0", "b1", "b2"]);
+        let after = ring_of(&["b0", "b1", "b2", "b3"]);
+        let mut changed = 0usize;
+        for k in keys(K) {
+            let was: BTreeSet<String> = before.owners(&k, 2).into_iter().collect();
+            let is: BTreeSet<String> = after.owners(&k, 2).into_iter().collect();
+            if was != is {
+                // a join only ever swaps the new member in — survivors
+                // never trade a key's replica slot among themselves
+                assert!(is.contains("b3"), "{k}: {was:?} -> {is:?} without b3");
+                assert_eq!(was.difference(&is).count(), 1, "{k}: {was:?} -> {is:?}");
+                changed += 1;
+            }
+        }
+        // expected churn ~ 2·K/N = 100; fixed hash keeps it well inside 2x
+        assert!(changed >= 1 && changed <= K, "changed {changed} of {K}");
+    }
+
+    #[test]
     fn membership_edge_cases() {
-        let mut r = Ring::new(0); // clamps to 1 replica
+        let mut r = Ring::new(0); // clamps to 1 vnode
         assert!(r.is_empty());
         assert_eq!(r.owner("asia"), None);
         r.add("b0");

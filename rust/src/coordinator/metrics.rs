@@ -49,13 +49,16 @@ impl LatencySummary {
     /// percentile of the pooled samples and is biased whenever the parts'
     /// distributions differ (one slow backend among fast ones drags every
     /// merged percentile up proportionally to its count, instead of
-    /// landing in the tail where it belongs). The cluster front therefore
-    /// prefers merging the backends' latency *histograms* bucket-wise
-    /// (see `obs::scrape::merged_percentiles` — bucket counts add
-    /// losslessly, so pooled percentiles are exact up to bucket width)
-    /// and uses this only as the fallback when no backend exposes
-    /// histograms. Zero-count parts contribute nothing; an all-empty
-    /// input merges to the zero summary.
+    /// landing in the tail where it belongs). For that reason the cluster
+    /// `STATS` path no longer uses this at all: it merges the backends'
+    /// latency *histograms* bucket-wise (`obs::scrape::merged_percentiles`
+    /// — bucket counts add losslessly, so pooled percentiles are exact up
+    /// to bucket width) and reports `stats=partial` when a backend's
+    /// histograms are missing, rather than blending a biased estimate
+    /// into the headline. This merge remains for same-process batch
+    /// shards, where the bias caveat above still applies. Zero-count
+    /// parts contribute nothing; an all-empty input merges to the zero
+    /// summary.
     pub fn merge(parts: &[LatencySummary]) -> LatencySummary {
         let count: usize = parts.iter().map(|p| p.count).sum();
         if count == 0 {

@@ -117,7 +117,12 @@ impl Session {
         let verb = verb.to_ascii_uppercase();
         // any verb other than CASE aborts an in-progress batch collection
         // (QUIT included — the session ends anyway). The cluster front
-        // mirrors this rule for its forwarded-verb accounting.
+        // mirrors this rule for its forwarded-verb accounting, and it
+        // further relies on mid-collection acks being *deterministic*
+        // ("OK batch …", "OK case i/n" — even for malformed cases, whose
+        // errors surface as result lines): that is what lets a clean
+        // front session replay a buffered batch prefix on a surviving
+        // replica when the collecting backend dies mid-batch.
         if self.batch.is_some() && verb != "CASE" {
             self.batch = None;
         }

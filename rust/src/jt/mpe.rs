@@ -36,7 +36,7 @@ fn max_with_map(src: &[f64], map: &[u32], dst: &mut [f64]) {
     }
 }
 
-/// Compute the MPE for `ev` on a calibrot tree state.
+/// Compute the MPE for `ev` on a calibrated tree state.
 ///
 /// `state` is reset, evidence is applied, one upward max-pass runs, and
 /// the assignment is decoded root-to-leaves.

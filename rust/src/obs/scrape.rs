@@ -116,8 +116,17 @@ fn le_of(key: &str) -> Option<&str> {
 
 /// Sum every `<base>_bucket` series across scrapes (all label sets, all
 /// backends) into one cumulative histogram and read percentiles off it.
-/// Returns `None` when no observations exist — callers fall back to the
-/// count-weighted `LatencySummary::merge` approximation.
+/// Returns `None` when no observations exist — the caller reports that
+/// (`stats=partial`) rather than estimating.
+///
+/// A valid cumulative histogram is monotone in `le`. A corrupt or
+/// mid-write exposition can violate that; the `u64` de-cumulation would
+/// underflow and turn one bad bucket into a ~2^64 count that swamps
+/// every percentile. Each non-monotone step is therefore clamped to
+/// zero and counted on the global `fastbn_scrape_malformed_total`
+/// counter — the merge degrades by at most the corrupt bucket, and the
+/// corruption is visible in the front's own exposition instead of
+/// silent.
 pub fn merged_percentiles(scrapes: &[&Scrape], base: &str, ps: &[f64]) -> Option<Vec<u64>> {
     let prefix = format!("{base}_bucket{{");
     let mut cumulative = [0u64; BUCKETS];
@@ -134,9 +143,16 @@ pub fn merged_percentiles(scrapes: &[&Scrape], base: &str, ps: &[f64]) -> Option
     // De-cumulate: bucket i's own count is cum[i] - cum[i-1].
     let mut counts = [0u64; BUCKETS];
     let mut prev = 0u64;
+    let mut malformed = 0u64;
     for i in 0..BUCKETS {
+        if cumulative[i] < prev {
+            malformed += 1;
+        }
         counts[i] = cumulative[i].saturating_sub(prev);
         prev = cumulative[i].max(prev);
+    }
+    if malformed > 0 {
+        super::registry::global().counter("fastbn_scrape_malformed_total").add(malformed);
     }
     if counts.iter().sum::<u64>() == 0 {
         return None;
@@ -193,5 +209,25 @@ mod tests {
         assert_eq!(ps[1], 128);
         assert!(merged_percentiles(&[], "lat_us", &[0.5]).is_none());
         assert!(merged_percentiles(&[&Scrape::default()], "lat_us", &[0.5]).is_none());
+    }
+
+    #[test]
+    fn non_monotone_buckets_saturate_and_are_counted() {
+        let before = crate::obs::registry::global().counter("fastbn_scrape_malformed_total").get();
+        // a mid-write / corrupt exposition: cumulative counts dip at
+        // le="2" — a plain u64 de-cumulation would underflow to ~2^64
+        let text = "# TYPE lat_us histogram\n\
+                    lat_us_bucket{le=\"1\"} 5\n\
+                    lat_us_bucket{le=\"2\"} 3\n\
+                    lat_us_bucket{le=\"4\"} 8\n\
+                    lat_us_bucket{le=\"+Inf\"} 8";
+        let s = parse(text);
+        let ps = merged_percentiles(&[&s], "lat_us", &[0.5, 0.99]).expect("observations survive the clamp");
+        // the corrupt bucket clamps to zero; ranks land in the real
+        // buckets on either side of it, not at the top of the histogram
+        assert_eq!(ps[0], 1);
+        assert_eq!(ps[1], 4);
+        let after = crate::obs::registry::global().counter("fastbn_scrape_malformed_total").get();
+        assert!(after >= before + 1, "malformed exposition not counted: {before} -> {after}");
     }
 }

@@ -188,7 +188,7 @@ fn cluster_front_tier_passes_the_fallback_through() {
         max_exact_cost: 1e6,
     };
     let cluster_cfg = ClusterConfig {
-        replicas: 64,
+        vnodes: 64,
         connect_timeout: Duration::from_millis(500),
         io_timeout: Duration::from_secs(10),
         probe_timeout: Duration::from_millis(500),

@@ -1,6 +1,7 @@
 //! Integration: the cross-process cluster tier — consistency against a
 //! single-process fleet (including across a membership change) and
-//! fault injection (a backend killed mid-session).
+//! fault injection (backends killed mid-session and mid-batch, the
+//! primary front router killed under a live session).
 //!
 //! Everything runs through [`ClusterHarness`]: real TCP between front
 //! tier and backends, ephemeral ports, bounded timeouts everywhere, so a
@@ -31,7 +32,7 @@ fn backend_cfg() -> FleetConfig {
 /// every timeout stays finite so nothing can hang the suite.
 fn fast_cluster_cfg() -> ClusterConfig {
     ClusterConfig {
-        replicas: 64,
+        vnodes: 64,
         connect_timeout: Duration::from_millis(500),
         io_timeout: Duration::from_secs(5),
         probe_timeout: Duration::from_millis(500),
@@ -44,7 +45,7 @@ fn fast_cluster_cfg() -> ClusterConfig {
 
 /// Write a small synthetic network to a temp `.bif` so the cluster hosts
 /// a *generated* net alongside the embedded ones. The name `gen2` is
-/// load-bearing: under the deterministic ring (64 replicas, ids
+/// load-bearing: under the deterministic ring (64 vnodes per member, ids
 /// `b0`/`b1`/`b2`) it is owned by `b1` at two backends and hands off to
 /// `b2` when the third joins — the movement the join test asserts.
 fn write_gen_net(name: &str) -> std::path::PathBuf {
@@ -151,11 +152,22 @@ fn cluster_matches_single_process_fleet_across_a_join() {
 
     check_consistency(&harness, &reference, &names, &cases);
 
-    // a session pinned before the membership change, to a net that will
-    // move — it must get a clean "moved" error, never silently-rerouted
-    // answers carrying another backend session's state
+    // two sessions straddle the membership change. `clean` has no staged
+    // or committed evidence, so the front is free to reroute it
+    // invisibly — its answers must stay byte-identical across the join.
+    // `pinned` has *committed* evidence living in its backend session, so
+    // it must get a clean "moved" error, never silently-rerouted answers
+    // carrying another backend session's state.
+    let gjt = reference.tree("gen2").unwrap();
+    let (gv, gs) = (gjt.net.vars[0].name.clone(), gjt.net.vars[0].states[0].clone());
+    let mut clean = harness.client().unwrap();
+    assert!(clean.request("USE gen2").unwrap().starts_with("OK using gen2"));
+    let clean_want = clean.request("QUERY x0").unwrap();
+    assert!(clean_want.starts_with("OK "), "{clean_want}");
     let mut pinned = harness.client().unwrap();
     assert!(pinned.request("USE gen2").unwrap().starts_with("OK using gen2"));
+    assert!(pinned.request(&format!("OBSERVE {gv}={gs}")).unwrap().starts_with("OK staged 1"));
+    assert!(pinned.request("COMMIT").unwrap().starts_with("OK committed evidence=1"));
 
     let owners_before: Vec<Option<String>> = names.iter().map(|n| harness.cluster().owner(n)).collect();
     assert_eq!(harness.add_backend().unwrap(), "b2");
@@ -181,6 +193,11 @@ fn cluster_matches_single_process_fleet_across_a_join() {
     let r = pinned.request("QUERY x0").unwrap();
     assert!(r.starts_with("ERR network \"gen2\" moved"), "{r}");
     assert!(pinned.request("USE gen2").unwrap().starts_with("OK using gen2"));
+
+    // the clean session crossed the same join without a single error
+    // line: the front re-derived the new owner from the ring and the
+    // reply is byte-identical to the pre-join one
+    assert_eq!(clean.request("QUERY x0").unwrap(), clean_want, "clean session answer changed across the join");
 
     check_consistency(&harness, &reference, &names, &cases);
     drop(harness);
@@ -341,4 +358,161 @@ fn batch_verb_passes_through_the_front_tier() {
     assert_eq!(c.request("CASE smoke=yes").unwrap(), "OK case 1/2");
     assert!(c.request("QUERY lung").unwrap().starts_with("OK yes=0.055000"));
     assert!(c.request("CASE").unwrap().starts_with("ERR no batch in progress"));
+}
+
+#[test]
+fn replicated_owners_survive_killing_any_single_backend() {
+    // R=2: every net lives on two backends, so killing one owner must
+    // lose nothing — clean sessions keep getting byte-identical answers
+    // with zero error replies, and the ring re-homes every net onto the
+    // survivors.
+    let cfg = ClusterConfig { replicas: 2, ..fast_cluster_cfg() };
+    let mut harness = ClusterHarness::start(3, backend_cfg(), cfg).unwrap();
+    let mut admin = harness.client().unwrap();
+    for name in ["asia", "cancer", "mixed12"] {
+        let r = admin.request(&format!("LOAD {name}")).unwrap();
+        assert!(r.starts_with("OK loaded"), "{r}");
+        assert!(r.contains("replicas=2"), "{r}");
+        assert_eq!(harness.cluster().replicas_of(name).len(), 2, "{name} not replicated");
+    }
+
+    // a clean session reading asia, and a dirty one pinned to its primary
+    let mut clean = harness.client().unwrap();
+    assert!(clean.request("USE asia").unwrap().starts_with("OK using asia"));
+    let want = clean.request("QUERY lung").unwrap();
+    assert!(want.starts_with("OK yes=0.055000"), "{want}");
+
+    let mut dirty = harness.client().unwrap();
+    assert!(dirty.request("USE asia").unwrap().starts_with("OK using asia"));
+    assert!(dirty.request("OBSERVE smoke=yes").unwrap().starts_with("OK staged 1"));
+    assert!(dirty.request("COMMIT").unwrap().starts_with("OK committed evidence=1"));
+    assert!(dirty.request("QUERY lung").unwrap().starts_with("OK yes=0.100000"));
+
+    let victim = harness.cluster().owner("asia").unwrap();
+    assert!(harness.kill_backend(&victim));
+
+    // the clean session never sees the death: the dead replica's reads
+    // fail over inside the front and every reply stays byte-identical
+    for i in 0..8 {
+        let r = clean.request("QUERY lung").unwrap();
+        assert_eq!(r, want, "clean read {i} diverged after killing {victim}");
+    }
+
+    // no net is lost: every name heals back to two live owners
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let healed = ["asia", "cancer", "mixed12"].iter().all(|&n| {
+            let owners = harness.cluster().replicas_of(n);
+            owners.len() == 2 && !owners.contains(&victim)
+        });
+        if healed {
+            break;
+        }
+        assert!(Instant::now() < deadline, "replicas never re-homed after killing {victim}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // the dirty session cannot be silently rerouted — its committed
+    // evidence lived only on the victim — so it errors cleanly, then
+    // recovers to the evidence-free prior after an explicit USE
+    let r = dirty.request("QUERY lung").unwrap();
+    assert!(r.starts_with("ERR"), "{r}");
+    assert!(r.contains("unreachable") || r.contains("moved"), "{r}");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let r = dirty.request("USE asia").unwrap();
+        if r.starts_with("OK using asia") {
+            break;
+        }
+        assert!(r.starts_with("ERR"), "{r}");
+        assert!(Instant::now() < deadline, "USE never recovered: {r}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(dirty.request("QUERY lung").unwrap().starts_with("OK yes=0.055000"), "stale evidence was misapplied");
+}
+
+#[test]
+fn clean_session_batch_replays_on_a_survivor_mid_collection() {
+    // a clean session's BATCH is buffered verbatim at the front; when the
+    // collecting backend dies between CASEs, the buffered prefix replays
+    // on the other replica and the client never sees an error
+    let cfg = ClusterConfig { replicas: 2, ..fast_cluster_cfg() };
+    let harness_cfg = FleetConfig {
+        engine: EngineKind::Batched,
+        engine_cfg: EngineConfig::default().with_threads(1).with_batch(3),
+        shards: 1,
+        registry_capacity: 8,
+        max_exact_cost: f64::INFINITY,
+    };
+    let mut harness = ClusterHarness::start(2, harness_cfg, cfg).unwrap();
+    let mut probe = harness.client().unwrap();
+    assert!(probe.request("LOAD asia").unwrap().starts_with("OK loaded asia"));
+    assert!(probe.request("USE asia").unwrap().starts_with("OK using asia"));
+    let want_yes = probe.request("QUERY lung | smoke=yes").unwrap();
+    let want_prior = probe.request("QUERY lung").unwrap();
+
+    // a fresh client's first spread op lands on the primary owner, so the
+    // batch is collected by a known victim
+    let mut c = harness.client().unwrap();
+    assert!(c.request("USE asia").unwrap().starts_with("OK using asia"));
+    assert_eq!(c.request("BATCH 3 lung").unwrap(), "OK batch expect=3 target=lung");
+    assert_eq!(c.request("CASE smoke=yes").unwrap(), "OK case 1/3");
+
+    let victim = harness.cluster().owner("asia").unwrap();
+    assert!(harness.kill_backend(&victim));
+
+    // the remaining cases replay the buffered prefix on the survivor:
+    // same acks, same final 3-line reply, no error in between
+    assert_eq!(c.request("CASE").unwrap(), "OK case 2/3");
+    let results = c.request_lines("CASE smoke=yes", 3).unwrap();
+    assert_eq!(results, vec![want_yes.clone(), want_prior, want_yes]);
+
+    // and the session is clean and usable afterwards
+    assert!(c.request("CASE").unwrap().starts_with("ERR no batch in progress"));
+    assert!(c.request("QUERY lung | smoke=yes").unwrap().starts_with("OK yes=0.100000"));
+}
+
+#[test]
+fn handoff_replays_a_session_on_the_peer_front() {
+    // router redundancy: a second front derives the same placement from
+    // the deterministic ring, and HANDOFF exports a session's committed
+    // evidence so the client can replay it there after the primary
+    // router dies
+    let mut harness = ClusterHarness::start(2, backend_cfg(), fast_cluster_cfg()).unwrap();
+    let mut c = harness.client().unwrap();
+    assert!(c.request("LOAD asia").unwrap().starts_with("OK loaded asia"));
+    assert!(c.request("USE asia").unwrap().starts_with("OK using asia"));
+
+    // export with nothing selected is refused up front
+    let mut idle = harness.client().unwrap();
+    assert!(idle.request("HANDOFF").unwrap().starts_with("ERR no network selected"));
+
+    assert!(c.request("OBSERVE smoke=yes").unwrap().starts_with("OK staged 1"));
+    assert!(c.request("COMMIT").unwrap().starts_with("OK committed evidence=1"));
+    let want = c.request("QUERY lung").unwrap();
+    assert!(want.starts_with("OK yes=0.100000"), "{want}");
+
+    // positional export format: `OK handoff net=<net> evidence=<k> [pairs…]`
+    let export = c.request("HANDOFF").unwrap();
+    let toks: Vec<&str> = export.split_whitespace().collect();
+    assert_eq!(&toks[..4], &["OK", "handoff", "net=asia", "evidence=1"], "{export}");
+    let pairs = toks[4..].join(" ");
+    assert_eq!(pairs, "smoke=yes", "{export}");
+
+    harness.start_peer_front().unwrap();
+    assert!(harness.kill_primary_front());
+
+    let mut p = harness.peer_client().unwrap();
+    // malformed payloads are rejected before any backend I/O
+    assert!(p.request("HANDOFF asia notapair").unwrap().starts_with("ERR usage: HANDOFF"));
+    let r = p.request(&format!("HANDOFF asia {pairs}")).unwrap();
+    assert_eq!(r, "OK handoff applied net=asia evidence=1");
+    // the replayed session answers byte-identically to the pre-kill one
+    assert_eq!(p.request("QUERY lung").unwrap(), want);
+
+    // and the peer is a full front in its own right: a fresh clean
+    // session reads the evidence-free prior
+    let mut fresh = harness.peer_client().unwrap();
+    assert!(fresh.request("USE asia").unwrap().starts_with("OK using asia"));
+    assert!(fresh.request("QUERY lung").unwrap().starts_with("OK yes=0.055000"));
 }

@@ -126,7 +126,7 @@ fn cluster_scrape_merges_the_backend_expositions() {
         2,
         fleet_cfg(),
         ClusterConfig {
-            replicas: 64,
+            vnodes: 64,
             connect_timeout: Duration::from_millis(500),
             io_timeout: Duration::from_secs(5),
             probe_timeout: Duration::from_millis(500),
