@@ -2,9 +2,14 @@
 #
 #   make build      release build of the fastbn crate (pure-std, offline-safe)
 #   make test       tier-1: cargo test; then the python suite (skips if no pytest)
-#   make bench      run all nine bench targets (criterion-lite, harness=false)
-#   make bench-json refresh BENCH_approx.json, the approx-tier perf-trajectory
-#                   artifact (sample-count × thread sweep vs the exact engine)
+#   make bench      run all ten bench targets (criterion-lite, harness=false)
+#   make bench-json refresh the perf-trajectory artifacts: BENCH_approx.json
+#                   (approx-tier sample-count × thread sweep vs the exact
+#                   engine) and BENCH_kernels.json (lane micro-kernel sweep,
+#                   blocked SIMD drivers vs their scalar twins)
+#   make kernel-smoke run the kernel bit-exactness suites (lane kernels,
+#                   case-major ops, batched MPE vs single-case) under both
+#                   the default `simd` feature and --no-default-features
 #   make serve-smoke start a 2-network fleet, run a scripted session
 #                   through it over TCP, and assert on the replies
 #   make batch-smoke drive the BATCH verb (N evidence lines in, N posterior
@@ -34,7 +39,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-json serve-smoke batch-smoke cluster-smoke learn-smoke approx-smoke metrics-smoke artifacts fmt lint test-xla clean
+.PHONY: build test bench bench-json kernel-smoke serve-smoke batch-smoke cluster-smoke learn-smoke approx-smoke metrics-smoke artifacts fmt lint test-xla clean
 
 build:
 	$(CARGO) build --release
@@ -55,11 +60,21 @@ test: build
 bench:
 	$(CARGO) bench
 
-# perf-trajectory artifact: the approx bench writes its sweep (cost +
-# accuracy vs the exact engine) as stable-schema JSON. CI regenerates and
-# uploads this on every push; the committed copy is the schema baseline.
+# perf-trajectory artifacts: the approx bench writes its sweep (cost +
+# accuracy vs the exact engine) and the kernels bench writes its lane
+# micro-kernel sweep (blocked SIMD drivers vs scalar twins) as
+# stable-schema JSON. CI regenerates and uploads both on every push; the
+# committed copies are the schema baselines.
 bench-json:
 	FASTBN_BENCH_JSON=$(CURDIR)/BENCH_approx.json $(CARGO) bench --bench approx
+	FASTBN_BENCH_JSON=$(CURDIR)/BENCH_kernels.json $(CARGO) bench --bench kernels
+
+# kernel bit-exactness smoke: the lane-kernel, case-major-ops, and
+# batched-MPE suites pin the SIMD path byte-for-byte against the scalar
+# path; run them under both feature configurations so neither side rots.
+kernel-smoke:
+	$(CARGO) test -q -- bit_identical batched_mpe
+	$(CARGO) test -q --no-default-features -- bit_identical batched_mpe
 
 # fleet serving smoke: 2 networks × 2 shards on an ephemeral port; the
 # --smoke switch drives a scripted LOAD/USE/OBSERVE/COMMIT/QUERY/STATS

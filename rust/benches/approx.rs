@@ -113,7 +113,8 @@ fn bench_net(net: Network, sample_counts: &[usize], threads: &[usize], runner: &
 /// job diffs this shape against the committed `BENCH_approx.json`, so
 /// additions must keep every existing key.
 fn render_json(reports: &[NetReport]) -> String {
-    let mut out = String::from("{\n  \"bench\": \"approx\",\n  \"schema_version\": 1,\n  \"nets\": [\n");
+    let mut out = String::from("{\n  \"bench\": \"approx\",\n  \"schema_version\": 1,\n");
+    out.push_str("  \"provenance\": \"measured (cargo bench --bench approx)\",\n  \"nets\": [\n");
     for (i, r) in reports.iter().enumerate() {
         out.push_str(&format!("    {{\"net\": \"{}\", \"exact_ms\": {:.4}, \"sweep\": [\n", r.net, r.exact_ms));
         for (j, p) in r.points.iter().enumerate() {

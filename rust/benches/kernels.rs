@@ -1,0 +1,168 @@
+//! Bench: **lane micro-kernels** — the explicit 8/4/1 fixed-width drivers
+//! in `jt::simd` versus their plain scalar twins, swept over kernel ×
+//! lane count × table size. This is the innermost loop of the batched
+//! tier: every `*_cases` kernel in `jt::ops` walks table entries and
+//! applies one of these four element-wise ops to a `lanes`-wide slice per
+//! entry, so the sweep here is the per-entry shape the propagation and
+//! max-product passes actually execute.
+//!
+//! With the on-by-default `simd` feature the `selected` column times the
+//! blocked drivers; under `--no-default-features` the public names *are*
+//! the scalar loops and the two columns coincide (the schema is identical
+//! either way — `simd_feature` records which build produced the numbers).
+//! Before timing, each point re-asserts the bit-identity contract: the
+//! selected kernel and the scalar twin must agree byte for byte.
+//!
+//! When `FASTBN_BENCH_JSON` names a path (`make bench-json` →
+//! `BENCH_kernels.json`) the sweep is also written as JSON with a stable
+//! schema; the CI perf-trajectory job uploads it as an artifact on every
+//! push, so kernel regressions show up as a trend across commits.
+//!
+//! Scale knobs: FASTBN_KERNEL_LANES (comma list, default 1,4,8,64) and
+//! FASTBN_KERNEL_ENTRIES (comma list, default 1024,16384,262144).
+
+use fastbn::bench::{print_table, Bench};
+use fastbn::jt::simd;
+use fastbn::rng::Rng;
+
+fn env_list(name: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(name)
+        .ok()
+        .map(|v| v.split(',').filter_map(|t| t.trim().parse().ok()).collect::<Vec<usize>>())
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+struct Point {
+    kernel: &'static str,
+    lanes: usize,
+    entries: usize,
+    selected_ms: f64,
+    scalar_ms: f64,
+    melem_per_s: f64,
+}
+
+/// One pass in the shape the `jt::ops` `*_cases` kernels use: per table
+/// entry, apply the lane kernel to that entry's `lanes`-wide slice.
+fn pass(kern: fn(&mut [f64], &[f64]), dst: &mut [f64], src: &[f64], lanes: usize) {
+    for (d, s) in dst.chunks_exact_mut(lanes).zip(src.chunks_exact(lanes)) {
+        kern(d, s);
+    }
+    std::hint::black_box(dst.last());
+}
+
+fn bench_point(
+    kernel: &'static str,
+    selected: fn(&mut [f64], &[f64]),
+    plain: fn(&mut [f64], &[f64]),
+    neutral_src: bool,
+    lanes: usize,
+    entries: usize,
+    runner: &Bench,
+) -> Point {
+    let n = entries * lanes;
+    let mut rng = Rng::new(0x5EED ^ ((lanes as u64) << 32) ^ entries as u64);
+    let d0: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+    // mul/div are applied in place over many timed iterations; a neutral
+    // (all-ones) source keeps the destination away from overflow and
+    // subnormal drift, which would distort timing. add/max tolerate a
+    // random source (linear growth / saturation).
+    let src: Vec<f64> = if neutral_src { vec![1.0; n] } else { (0..n).map(|_| rng.f64()).collect() };
+
+    // bit-identity smoke before timing — the full pinning lives in the
+    // jt::simd / jt::ops test suites
+    let mut got = d0.clone();
+    pass(selected, &mut got, &src, lanes);
+    let mut want = d0.clone();
+    pass(plain, &mut want, &src, lanes);
+    for k in 0..n {
+        assert_eq!(got[k].to_bits(), want[k].to_bits(), "{kernel} lanes {lanes} entries {entries}: drift at {k}");
+    }
+
+    let mut dst = d0.clone();
+    let sel = runner.run(|| pass(selected, &mut dst, std::hint::black_box(&src), lanes));
+    let mut dst = d0;
+    let sca = runner.run(|| pass(plain, &mut dst, std::hint::black_box(&src), lanes));
+
+    Point {
+        kernel,
+        lanes,
+        entries,
+        selected_ms: sel.mean_ms(),
+        scalar_ms: sca.mean_ms(),
+        melem_per_s: n as f64 / (sel.mean_ms() / 1e3) / 1e6,
+    }
+}
+
+/// Render the perf-trajectory artifact. The schema is a contract: the CI
+/// job diffs this shape against the committed `BENCH_kernels.json`, so
+/// additions must keep every existing key.
+fn render_json(points: &[Point]) -> String {
+    let mut out = String::from("{\n  \"bench\": \"kernels\",\n  \"schema_version\": 1,\n");
+    out.push_str("  \"provenance\": \"measured (cargo bench --bench kernels)\",\n");
+    out.push_str(&format!("  \"lane_width\": {},\n", simd::LANE_WIDTH));
+    out.push_str(&format!("  \"simd_feature\": {},\n", cfg!(feature = "simd")));
+    out.push_str("  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"lanes\": {}, \"entries\": {}, \"selected_ms\": {:.4}, \"scalar_ms\": {:.4}, \"speedup\": {:.3}, \"melem_per_s\": {:.1}}}{}\n",
+            p.kernel,
+            p.lanes,
+            p.entries,
+            p.selected_ms,
+            p.scalar_ms,
+            p.scalar_ms / p.selected_ms,
+            p.melem_per_s,
+            if i + 1 < points.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let lane_counts = env_list("FASTBN_KERNEL_LANES", &[1, 4, 8, 64]);
+    let entry_counts = env_list("FASTBN_KERNEL_ENTRIES", &[1_024, 16_384, 262_144]);
+    let runner = Bench::default();
+
+    type Kernel = (&'static str, fn(&mut [f64], &[f64]), fn(&mut [f64], &[f64]), bool);
+    let kernels: [Kernel; 4] = [
+        ("add", simd::add_assign, simd::scalar::add_assign, false),
+        ("mul", simd::mul_assign, simd::scalar::mul_assign, true),
+        ("div", simd::div_assign, simd::scalar::div_assign, true),
+        ("max", simd::max_assign, simd::scalar::max_assign, false),
+    ];
+
+    let mut points = Vec::new();
+    let mut rows = Vec::new();
+    for (kernel, selected, plain, neutral_src) in kernels {
+        for &lanes in &lane_counts {
+            for &entries in &entry_counts {
+                let p = bench_point(kernel, selected, plain, neutral_src, lanes, entries, &runner);
+                rows.push(vec![
+                    p.kernel.to_string(),
+                    format!("{}", p.lanes),
+                    format!("{}", p.entries),
+                    format!("{:.4}", p.selected_ms),
+                    format!("{:.4}", p.scalar_ms),
+                    format!("{:.3}", p.scalar_ms / p.selected_ms),
+                    format!("{:.1}", p.melem_per_s),
+                ]);
+                points.push(p);
+            }
+        }
+    }
+    print_table(
+        &format!(
+            "lane kernels — selected ({}) vs scalar twins",
+            if cfg!(feature = "simd") { "simd 8/4/1 blocks" } else { "scalar build" }
+        ),
+        &["kernel", "lanes", "entries", "selected_ms", "scalar_ms", "speedup", "Melem/s"],
+        &rows,
+    );
+
+    if let Ok(path) = std::env::var("FASTBN_BENCH_JSON") {
+        std::fs::write(&path, render_json(&points)).expect("write bench JSON");
+        println!("\nwrote {path}");
+    }
+}

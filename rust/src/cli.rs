@@ -4,6 +4,7 @@
 //! fastbn nets
 //! fastbn info      --net <spec> [--heuristic min-fill]
 //! fastbn query     --net <spec> --target <var> [--evidence a=x,b=y] [--engine hybrid] [--threads N]
+//! fastbn mpe       --net <spec> [--evidence a=x,b=y] | [--cases N] [--obs 0.2] [--batch B] [--seed S]
 //! fastbn batch     --net <spec> [--cases 2000] [--obs 0.2] [--engine hybrid] [--threads N] [--replicas 1]
 //!                  [--batch B] [--seed S]
 //! fastbn generate  --nodes N [--arcs M] [--max-parents 3] [--seed S] [--out net.bif]
@@ -184,7 +185,11 @@ COMMANDS:
   nets                               list available networks
   info      --net S                  network + junction tree statistics
   query     --net S --target V       posterior of V given --evidence a=x,b=y
-  mpe       --net S                  most probable explanation given --evidence
+  mpe       --net S                  most probable explanation given --evidence;
+                                     --cases N instead sweeps N generated cases
+                                     --batch B lanes at a time (batched max-product)
+                                     and verifies each lane bit-for-bit against
+                                     the single-case driver (--obs, --seed)
   batch     --net S                  run an evidence-case batch (--cases, --obs,
                                      --engine, --threads, --replicas, --seed;
                                      --batch B fuses B cases per sweep — pair
@@ -211,8 +216,9 @@ COMMANDS:
                                      than T, --metrics-interval SECS dumps
                                      the metrics exposition to stderr);
                                      verbs: LOAD LEARN USE NETS OBSERVE
-                                     RETRACT COMMIT QUERY BATCH CASE STATS
-                                     METRICS TRACE PING EVICT QUIT
+                                     RETRACT COMMIT QUERY MPE BATCH CASE
+                                     STATS METRICS TRACE PING EVICT QUIT
+                                     (BATCH <n> MPE batches max-product)
   cluster   --backends N             cross-process cluster tier: N fleet backend
                                      child processes + a consistent-hash front
                                      router (--nets preload, --shards, --replicas
@@ -302,6 +308,12 @@ fn cmd_mpe(args: &Args) -> Result<()> {
     let ev = parse_evidence(&net, args.get("evidence"))?;
     let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?;
     let sched = crate::jt::schedule::Schedule::build(&jt, crate::jt::schedule::RootStrategy::Center);
+    // `--cases N` switches to the batched driver: N generated evidence
+    // cases swept `--batch B` lanes at a time, then re-run through the
+    // single-case driver to check the lane kernels' bit-identity contract
+    if args.get("cases").is_some() {
+        return mpe_batched(args, &net, &jt, &sched);
+    }
     let mut state = TreeState::fresh(&jt);
     let t0 = std::time::Instant::now();
     let mpe = crate::jt::mpe::most_probable_explanation(&jt, &sched, &mut state, &ev)?;
@@ -311,6 +323,58 @@ fn cmd_mpe(args: &Args) -> Result<()> {
         println!("  {:<16} = {}{}", net.vars[v].name, net.vars[v].states[mpe.assignment[v]], marker);
     }
     println!("ln P(assignment) = {:.6}", mpe.log_prob);
+    Ok(())
+}
+
+/// `fastbn mpe --cases N`: the batched max-product sweep as a command —
+/// generate N cases, run them through [`crate::jt::mpe`]'s lane-parallel
+/// driver, and fail unless every lane matches the single-case driver
+/// bit-for-bit (assignment, `to_bits`-equal log-probability, and
+/// feasibility verdict alike).
+fn mpe_batched(
+    args: &Args,
+    net: &Network,
+    jt: &JunctionTree,
+    sched: &crate::jt::schedule::Schedule,
+) -> Result<()> {
+    let spec = CaseSpec {
+        n_cases: args.parse_or("cases", 2000usize)?,
+        observed_fraction: args.parse_or("obs", 0.2f64)?,
+        seed: args.parse_or("seed", 0xCA5Eu64)?,
+    };
+    let lanes = args.parse_or("batch", crate::jt::simd::LANE_WIDTH)?.max(1);
+    let cases = generate(net, &spec);
+    let mut bstate = crate::jt::state::BatchState::fresh(jt, lanes);
+    let t0 = std::time::Instant::now();
+    let batched = crate::jt::mpe::most_probable_explanation_batch(jt, sched, &mut bstate, &cases);
+    let wall = t0.elapsed();
+
+    let mut state = TreeState::fresh(jt);
+    let t1 = std::time::Instant::now();
+    let mut feasible = 0usize;
+    let mut mismatches = 0usize;
+    for (ev, got) in cases.iter().zip(&batched) {
+        match (got, crate::jt::mpe::most_probable_explanation(jt, sched, &mut state, ev)) {
+            (Ok(b), Ok(s)) => {
+                feasible += 1;
+                if b.assignment != s.assignment || b.log_prob.to_bits() != s.log_prob.to_bits() {
+                    mismatches += 1;
+                }
+            }
+            (Err(_), Err(_)) => {}
+            _ => mismatches += 1,
+        }
+    }
+    let single_wall = t1.elapsed();
+    println!("{} | {}", net.stats(), jt.stats());
+    println!(
+        "batched MPE: {} cases × {lanes} lanes in {wall:?} ({:.1} cases/s) | single-case driver {single_wall:?} | {feasible} feasible | {mismatches} mismatches",
+        cases.len(),
+        cases.len() as f64 / wall.as_secs_f64()
+    );
+    if mismatches > 0 {
+        return Err(Error::msg(format!("{mismatches} batched MPE results differ from the single-case driver")));
+    }
     Ok(())
 }
 
@@ -543,7 +607,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // this from child stdout to learn each backend's ephemeral port
         println!("FLEET READY addr={}", server.addr());
         println!(
-            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/METRICS/TRACE/PING/EVICT/QUIT",
+            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/MPE/BATCH/CASE/STATS/METRICS/TRACE/PING/EVICT/QUIT",
             fleet.loaded().len(),
             shards,
             server.addr(),
@@ -587,7 +651,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill)?);
     let server = Server::start(jt, engine, cfg, bind)?;
     println!(
-        "serving {} on {} with {} — protocol: QUERY <var> [| ev=state ...] / STATS / QUIT",
+        "serving {} on {} with {} — protocol: QUERY <var> [| ev=state ...] / MPE [| ev=state ...] / STATS / QUIT",
         net.name,
         server.addr(),
         engine.label()
@@ -727,6 +791,19 @@ fn batch_smoke(server: &FleetServer) -> Result<()> {
     if results[0] != want_obs || results[1] != want_prior || results[2] != want_obs {
         return Err(Error::msg(format!(
             "batch-smoke failed: BATCH results {results:?} do not match QUERY replies [{want_obs:?}, {want_prior:?}]"
+        )));
+    }
+    // same contract for max-product: a `BATCH <n> MPE` reply must match
+    // the single-verb MPE replies byte-for-byte (the lane kernels'
+    // bit-identity over the wire)
+    let want_mpe_obs = client.expect(&format!("MPE | {obs_var}={obs_state}"), "OK mpe logp=")?;
+    let want_mpe_prior = client.expect("MPE", "OK mpe logp=")?;
+    client.expect("BATCH 2 MPE", "OK batch expect=2 target=MPE")?;
+    client.expect(&format!("CASE {obs_var}={obs_state}"), "OK case 1/2")?;
+    let mpe_results = client.ask_lines("CASE", 2)?;
+    if mpe_results[0] != want_mpe_obs || mpe_results[1] != want_mpe_prior {
+        return Err(Error::msg(format!(
+            "batch-smoke failed: BATCH MPE results {mpe_results:?} do not match MPE replies [{want_mpe_obs:?}, {want_mpe_prior:?}]"
         )));
     }
     client.quit()?;
@@ -1045,7 +1122,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     let server = ClusterServer::start(Arc::clone(&cluster), bind)?;
     println!(
-        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/BATCH/CASE/STATS/METRICS/PING/TOPO/JOIN/HANDOFF/QUIT",
+        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/MPE/BATCH/CASE/STATS/METRICS/PING/TOPO/JOIN/HANDOFF/QUIT",
         server.addr(),
         specs.len()
     );
@@ -1087,6 +1164,9 @@ fn cluster_smoke(server: &ClusterServer, specs: &[String], n_backends: usize) ->
         (format!("OBSERVE {obs_var}={obs_state}"), "OK staged 1".into(), "pending=1".into()),
         ("COMMIT".into(), "OK committed evidence=1".into(), "applied=1".into()),
         (format!("QUERY {target_a}"), "OK ".into(), "logZ=".into()),
+        // max-product through the front tier: the committed observation
+        // must appear in the assignment
+        ("MPE".into(), "OK mpe logp=".into(), format!("{obs_var}={obs_state}")),
         (format!("USE {}", net_b.name), format!("OK using {}", net_b.name), "vars=".into()),
         (format!("QUERY {target_b}"), "OK ".into(), "logZ=".into()),
         // switching nets reset the evidence mirror: the hand-off export
@@ -1298,6 +1378,19 @@ mod tests {
             .iter()
             .map(|s| s.to_string())
             .collect();
+        assert_eq!(run(argv), 0);
+    }
+
+    #[test]
+    fn mpe_command_runs_batched_and_self_verifies() {
+        // exit code 0 means every batched lane matched the single-case
+        // driver bit-for-bit (mpe_batched errors on any mismatch)
+        let argv: Vec<String> = [
+            "mpe", "--net", "asia", "--cases", "13", "--obs", "0.3", "--batch", "4", "--seed", "11",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
         assert_eq!(run(argv), 0);
     }
 

@@ -1142,7 +1142,7 @@ impl ClusterSession {
                 self.mirror(&verb, rest, &reply);
                 reply
             }
-            "QUERY" => {
+            "QUERY" | "MPE" => {
                 self.abort_batch();
                 self.cmd_query(line)
             }
@@ -1153,8 +1153,9 @@ impl ClusterSession {
         SessionReply::Line(reply)
     }
 
-    /// `QUERY`: a clean session spreads over replicas; an evidence-bearing
-    /// one forwards on the pinned conn (where the evidence lives).
+    /// `QUERY` (and `MPE`, same routing): a clean session spreads over
+    /// replicas; an evidence-bearing one forwards on the pinned conn
+    /// (where the evidence lives).
     fn cmd_query(&mut self, line: &str) -> String {
         match self.active.as_ref().map(|a| a.net.clone()) {
             Some(net) if self.session_clean() => self.spread_read(&net, line),

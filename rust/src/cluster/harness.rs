@@ -339,6 +339,33 @@ mod tests {
     }
 
     #[test]
+    fn mpe_round_trips_through_the_front_tier() {
+        let h = harness(2);
+        let mut c = h.client().unwrap();
+        c.request("LOAD asia").unwrap();
+        assert!(c.request("USE asia").unwrap().starts_with("OK using asia"));
+        // clean session: MPE spreads over replicas exactly like QUERY —
+        // replicas are byte-identical, so the reply is too
+        let prior = c.request("MPE").unwrap();
+        assert!(prior.starts_with("OK mpe logp=-"), "{prior}");
+        let smoking = c.request("MPE | smoke=yes").unwrap();
+        assert!(smoking.contains(" smoke=yes"), "{smoking}");
+        // evidence-bearing session: the pinned conn answers identically
+        assert!(c.request("OBSERVE smoke=yes").unwrap().starts_with("OK staged 1"));
+        assert!(c.request("COMMIT").unwrap().starts_with("OK committed evidence=1"));
+        assert_eq!(c.request("MPE").unwrap(), smoking);
+        // batched MPE through the front: n CASE lines in, n assignment
+        // lines out, matching the single-verb replies byte-for-byte
+        assert!(c.request("RETRACT smoke").unwrap().starts_with("OK retracted"));
+        assert!(c.request("COMMIT").unwrap().starts_with("OK committed evidence=0"));
+        assert_eq!(c.request("BATCH 2 MPE").unwrap(), "OK batch expect=2 target=MPE");
+        assert_eq!(c.request("CASE smoke=yes").unwrap(), "OK case 1/2");
+        let lines = c.request_lines("CASE", 2).unwrap();
+        assert_eq!(lines[0], smoking);
+        assert_eq!(lines[1], prior);
+    }
+
+    #[test]
     fn graceful_leave_hands_networks_off_and_forgets_the_backend() {
         let h = harness(2);
         let mut c = h.client().unwrap();

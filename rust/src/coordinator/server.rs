@@ -5,6 +5,7 @@
 //!
 //! ```text
 //! QUERY <target-var> [| ev1=state1 ev2=state2 ...]
+//! MPE [| ev1=state1 ev2=state2 ...]
 //! STATS
 //! QUIT
 //! ```
@@ -272,6 +273,38 @@ pub(crate) fn parse_query_args(rest: &str) -> std::result::Result<(&str, Vec<(&s
     Ok((target, pairs))
 }
 
+/// Split `MPE` argument text into `var=state` tokens; both protocols
+/// accept `[| var=state …]` — no target, the answer assigns every
+/// variable. `Err` carries the message to send after `ERR `.
+pub(crate) fn parse_mpe_args(rest: &str) -> std::result::Result<Vec<(&str, &str)>, String> {
+    let ev_text = match rest.split_once('|') {
+        Some((before, e)) if before.trim().is_empty() => e.trim(),
+        None if rest.is_empty() => "",
+        _ => return Err("usage: MPE [| ev=state ...]".to_string()),
+    };
+    let mut pairs = Vec::new();
+    for tok in ev_text.split_whitespace() {
+        match tok.split_once('=') {
+            Some((v, s)) => pairs.push((v, s)),
+            None => return Err(format!("bad evidence token {tok:?} (want var=state)")),
+        }
+    }
+    Ok(pairs)
+}
+
+/// The `OK mpe logp=… <var>=<state> …` reply line both protocols share:
+/// the joint log-probability of the completion, then one `var=state`
+/// token per variable in id order (evidence variables at their observed
+/// states). One place owns the wire precision, like
+/// [`format_ok_posterior`].
+pub(crate) fn format_ok_mpe(net: &crate::bn::network::Network, res: &crate::jt::mpe::MpeResult) -> String {
+    let mut line = format!("OK mpe logp={:.6}", res.log_prob);
+    for (var, &s) in net.vars.iter().zip(&res.assignment) {
+        line.push_str(&format!(" {}={}", var.name, var.states[s]));
+    }
+    line
+}
+
 /// The `OK <state>=<prob> … logZ=…` reply line both protocols share —
 /// one place owns the wire precision. Approximate-tier posteriors append
 /// their accuracy contract: `tier=approx ci95=<worst half-width>
@@ -332,6 +365,23 @@ fn respond(
                 Ok(post) => {
                     queries.fetch_add(1, Ordering::Relaxed);
                     Reply::Line(format_ok_posterior(&jt.net, v, &post))
+                }
+                Err(e) => Reply::Line(format!("ERR {e}")),
+            }
+        }
+        "MPE" => {
+            let pairs = match parse_mpe_args(rest) {
+                Ok(pairs) => pairs,
+                Err(msg) => return Reply::Line(format!("ERR {msg}")),
+            };
+            let ev = match Evidence::from_pairs(&jt.net, &pairs) {
+                Ok(ev) => ev,
+                Err(e) => return Reply::Line(format!("ERR {e}")),
+            };
+            match engine.mpe(state, &ev) {
+                Ok(res) => {
+                    queries.fetch_add(1, Ordering::Relaxed);
+                    Reply::Line(format_ok_mpe(&jt.net, &res))
                 }
                 Err(e) => Reply::Line(format!("ERR {e}")),
             }
@@ -407,6 +457,40 @@ mod tests {
         assert!(replies[1].starts_with("ERR"));
         assert!(replies[2].starts_with("ERR"));
         assert!(replies[3].starts_with("OK yes=0.01"), "{}", replies[3]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn mpe_verb_returns_a_full_assignment_line() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let server = Server::start(
+            jt,
+            EngineKind::Seq,
+            EngineConfig::default().with_threads(1),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let replies = ask(
+            server.addr(),
+            &[
+                "MPE",
+                "MPE | asia=yes xray=yes",
+                "MPE | either=no lung=yes", // impossible evidence
+                "MPE asia=yes",             // evidence without the pipe
+                "MPE | asia",               // bad token
+            ],
+        );
+        // no evidence: one token per variable, all eight of asia's
+        assert!(replies[0].starts_with("OK mpe logp=-"), "{}", replies[0]);
+        assert_eq!(replies[0].split_whitespace().count(), 2 + 8, "{}", replies[0]);
+        // evidence variables come back at their observed states
+        assert!(replies[1].contains(" asia=yes"), "{}", replies[1]);
+        assert!(replies[1].contains(" xray=yes"), "{}", replies[1]);
+        assert!(replies[2].starts_with("ERR evidence is inconsistent"), "{}", replies[2]);
+        assert!(replies[3].starts_with("ERR usage: MPE"), "{}", replies[3]);
+        assert!(replies[4].starts_with("ERR bad evidence token"), "{}", replies[4]);
+        assert_eq!(server.queries_served(), 2);
         server.shutdown();
     }
 

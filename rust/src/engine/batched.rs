@@ -155,10 +155,19 @@ impl BatchedHybridEngine {
         let threads = cfg.resolved_threads();
         let lanes = cfg.batch.max(1);
         let pool = Pool::new(threads);
-        let up_plans: Vec<LayerPlan> =
-            sched.up_layers.iter().map(|l| LayerPlan::build(&jt, l, cfg.min_chunk, cfg.max_chunks)).collect();
-        let down_plans: Vec<LayerPlan> =
-            sched.down_layers.iter().map(|l| LayerPlan::build(&jt, l, cfg.min_chunk, cfg.max_chunks)).collect();
+        // lane-width-aligned task boundaries: a blocked SIMD walk over a
+        // task's lane-expanded window never straddles a chunk split
+        let align = crate::jt::simd::LANE_WIDTH;
+        let up_plans: Vec<LayerPlan> = sched
+            .up_layers
+            .iter()
+            .map(|l| LayerPlan::build_aligned(&jt, l, cfg.min_chunk, cfg.max_chunks, align))
+            .collect();
+        let down_plans: Vec<LayerPlan> = sched
+            .down_layers
+            .iter()
+            .map(|l| LayerPlan::build_aligned(&jt, l, cfg.min_chunk, cfg.max_chunks, align))
+            .collect();
         let max_sep_total = up_plans.iter().chain(&down_plans).map(|p| p.sep_total).max().unwrap_or(0);
         let max_msgs = up_plans.iter().chain(&down_plans).map(|p| p.msgs.len()).max().unwrap_or(0);
         let partials = PerWorker::new(threads, |_| LanePartial {
@@ -433,6 +442,14 @@ impl Engine for BatchedHybridEngine {
         self.infer_cases(cases)
     }
 
+    /// Batched exact MPE through the engine's own lane arena: `lanes`
+    /// cases per upward max sweep via the case-major max kernels
+    /// ([`crate::jt::mpe::most_probable_explanation_batch`]). `state` is
+    /// unused, as in `infer`/`infer_batch`.
+    fn mpe_batch(&mut self, _state: &mut TreeState, cases: &[Evidence]) -> Vec<Result<crate::jt::mpe::MpeResult>> {
+        crate::jt::mpe::most_probable_explanation_batch(&self.jt, &self.sched, &mut self.state, cases)
+    }
+
     fn schedule(&self) -> Option<&Schedule> {
         Some(&self.sched)
     }
@@ -571,6 +588,40 @@ mod tests {
             assert!(g.as_ref().unwrap().max_abs_diff(w.as_ref().unwrap()) < 1e-9, "full case {i}");
         }
         assert!(lone.max_abs_diff(want[3].as_ref().unwrap()) < 1e-9, "lone infer");
+    }
+
+    #[test]
+    fn mpe_batch_matches_single_case_mpe_through_the_trait() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let cases = vec![
+            Evidence::none(),
+            Evidence::from_pairs(&net, &[("xray", "yes")]).unwrap(),
+            Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap(), // infeasible
+            Evidence::from_pairs(&net, &[("dysp", "yes"), ("smoke", "no")]).unwrap(),
+            Evidence::from_pairs(&net, &[("bronc", "no")]).unwrap(),
+        ];
+        let cfg = EngineConfig { threads: 2, batch: 3, ..Default::default() };
+        let mut engine: Box<dyn Engine> = Box::new(BatchedHybridEngine::new(Arc::clone(&jt), &cfg));
+        let mut state = TreeState::fresh(&jt);
+        let got = engine.mpe_batch(&mut state, &cases); // chunks of 3: full + partial
+        let want: Vec<_> = cases.iter().map(|ev| engine.mpe(&mut state, ev)).collect();
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            match (g, w) {
+                (Ok(g), Ok(w)) => {
+                    assert_eq!(g.assignment, w.assignment, "case {i}");
+                    assert_eq!(g.log_prob.to_bits(), w.log_prob.to_bits(), "case {i}");
+                }
+                (Err(_), Err(_)) => {}
+                other => panic!("case {i}: batched/single MPE outcome mismatch: {other:?}"),
+            }
+        }
+        // sum-product sweeps stay clean after a max sweep reused the arena
+        let post = engine.infer(&mut state, &cases[1]).unwrap();
+        let mut seq = SeqEngine::new(Arc::clone(&jt), &EngineConfig::default().with_threads(1));
+        let want_post = seq.infer(&mut state, &cases[1]).unwrap();
+        assert!(post.max_abs_diff(&want_post) < 1e-9);
     }
 
     #[test]

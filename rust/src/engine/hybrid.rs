@@ -42,7 +42,7 @@ use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::engine::pool::{chunk_ranges, Pool};
+use crate::engine::pool::{chunk_ranges_aligned, Pool};
 use crate::engine::share::{PerWorker, SharedTables};
 use crate::engine::{Engine, EngineConfig};
 use crate::infer::query::Posteriors;
@@ -86,6 +86,25 @@ pub(crate) struct LayerPlan {
 
 impl LayerPlan {
     pub(crate) fn build(jt: &JunctionTree, layer: &[Msg], min_chunk: usize, max_chunks: usize) -> Self {
+        Self::build_aligned(jt, layer, min_chunk, max_chunks, 1)
+    }
+
+    /// [`LayerPlan::build`] with every task's entry range aligned: interior
+    /// chunk boundaries are snapped to multiples of `align` entries
+    /// ([`chunk_ranges_aligned`]). The batched engine passes
+    /// [`crate::jt::simd::LANE_WIDTH`] — in the case-major layout each
+    /// entry spans `lanes` contiguous values, so entry boundaries at
+    /// lane-width multiples keep every task's flattened window on a
+    /// whole-block boundary and a fixed-width SIMD walk is never cut into
+    /// a scalar remainder by a task split mid-table. `align = 1` is the
+    /// single-case plan unchanged.
+    pub(crate) fn build_aligned(
+        jt: &JunctionTree,
+        layer: &[Msg],
+        min_chunk: usize,
+        max_chunks: usize,
+        align: usize,
+    ) -> Self {
         let msgs = layer.to_vec();
         let mut sep_off = Vec::with_capacity(msgs.len());
         let mut sep_total = 0usize;
@@ -96,7 +115,7 @@ impl LayerPlan {
         // region A: flatten all source entries
         let mut marg_tasks = Vec::new();
         for (mi, m) in msgs.iter().enumerate() {
-            for r in chunk_ranges(jt.cliques[m.from].len, min_chunk, max_chunks) {
+            for r in chunk_ranges_aligned(jt.cliques[m.from].len, min_chunk, max_chunks, align) {
                 marg_tasks.push((mi, r));
             }
         }
@@ -106,7 +125,7 @@ impl LayerPlan {
         let mut fused = Vec::with_capacity(msgs.len());
         let mut b2_msgs = Vec::new();
         for (mi, m) in msgs.iter().enumerate() {
-            let ranges = chunk_ranges(jt.seps[m.sep].len, min_chunk.min(1 << 12), max_chunks);
+            let ranges = chunk_ranges_aligned(jt.seps[m.sep].len, min_chunk.min(1 << 12), max_chunks, align);
             let single = ranges.len() == 1;
             fused.push(single);
             if !single {
@@ -125,7 +144,7 @@ impl LayerPlan {
         // region C: flatten all receiver entries
         let mut ext_tasks = Vec::new();
         for (gi, (to, _)) in groups.iter().enumerate() {
-            for r in chunk_ranges(jt.cliques[*to].len, min_chunk, max_chunks) {
+            for r in chunk_ranges_aligned(jt.cliques[*to].len, min_chunk, max_chunks, align) {
                 ext_tasks.push((gi, r));
             }
         }

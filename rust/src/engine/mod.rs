@@ -29,6 +29,7 @@ use std::sync::Arc;
 
 use crate::infer::query::Posteriors;
 use crate::jt::evidence::Evidence;
+use crate::jt::mpe::MpeResult;
 use crate::jt::propagate::MapMode;
 use crate::jt::schedule::{RootStrategy, Schedule};
 use crate::jt::state::TreeState;
@@ -60,6 +61,31 @@ pub trait Engine {
     /// entry point so any engine slots in.
     fn infer_batch(&mut self, state: &mut TreeState, cases: &[Evidence]) -> Vec<Result<Posteriors>> {
         cases.iter().map(|ev| self.infer(state, ev)).collect()
+    }
+
+    /// Exact MPE (max-product) for one case: reset `state`, absorb `ev`,
+    /// run the upward max-pass, decode the jointly most probable
+    /// assignment.
+    ///
+    /// Default: [`crate::jt::mpe::most_probable_explanation`] over the
+    /// engine's compiled tree and schedule. Engines without one (the
+    /// sampling tier reports `schedule() == None`) return `Err` — MPE is
+    /// an exact-tier query with no approximate fallback.
+    fn mpe(&mut self, state: &mut TreeState, ev: &Evidence) -> Result<MpeResult> {
+        match (self.tree(), self.schedule()) {
+            (Some(jt), Some(sched)) => crate::jt::mpe::most_probable_explanation(jt, sched, state, ev),
+            _ => Err(crate::Error::msg("MPE requires a compiled junction tree (exact tier)")),
+        }
+    }
+
+    /// Exact MPE for many cases, one result per case in order; a failing
+    /// case yields `Err` for its slot only.
+    ///
+    /// Default: a plain loop over [`Engine::mpe`] reusing `state`. The
+    /// batched engine overrides this with lane-parallel max sweeps
+    /// ([`batched::BatchedHybridEngine`]).
+    fn mpe_batch(&mut self, state: &mut TreeState, cases: &[Evidence]) -> Vec<Result<MpeResult>> {
+        cases.iter().map(|ev| self.mpe(state, ev)).collect()
     }
 
     /// The traversal schedule in use (for layer-count reporting). `None`
@@ -311,6 +337,29 @@ mod tests {
             assert!((lung[0] - 0.1).abs() < 1e-9, "{kind}: P(lung|smoke)={}", lung[0]);
             assert!((post.evidence_probability() - 0.5).abs() < 1e-9, "{kind}");
         }
+    }
+
+    #[test]
+    fn default_mpe_runs_on_exact_engines_and_rejects_the_sampling_tier() {
+        let net = embedded::asia();
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap());
+        let ev = Evidence::from_pairs(&net, &[("xray", "yes")]).unwrap();
+        // exact engine: the trait default delegates to jt::mpe
+        let mut seq = EngineKind::Seq.build(Arc::clone(&jt), &EngineConfig::default().with_threads(1));
+        let mut state = TreeState::fresh(&jt);
+        let got = seq.mpe(&mut state, &ev).unwrap();
+        let sched = Schedule::build(&jt, RootStrategy::Center);
+        let want = crate::jt::mpe::most_probable_explanation(&jt, &sched, &mut state, &ev).unwrap();
+        assert_eq!(got.assignment, want.assignment);
+        assert_eq!(got.log_prob.to_bits(), want.log_prob.to_bits());
+        // batch default loops mpe and isolates the failing slot
+        let bad = Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        let outs = seq.mpe_batch(&mut state, &[ev.clone(), bad, ev.clone()]);
+        assert!(outs[0].is_ok() && outs[2].is_ok());
+        assert!(outs[1].is_err());
+        // the sampling tier has no schedule: MPE is refused, not approximated
+        let mut approx = EngineKind::Approx.build(Arc::clone(&jt), &EngineConfig::default().with_threads(1));
+        assert!(approx.mpe(&mut state, &ev).is_err());
     }
 
     #[test]

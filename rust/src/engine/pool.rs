@@ -206,6 +206,41 @@ pub fn chunk_ranges(len: usize, min_chunk: usize, max_chunks: usize) -> Vec<std:
     out
 }
 
+/// [`chunk_ranges`] with every **interior** boundary snapped to the
+/// nearest multiple of `align` (the first starts at 0 and the last ends
+/// at `len` regardless). The batched engine passes
+/// [`crate::jt::simd::LANE_WIDTH`] so a fixed-width SIMD walk over a
+/// chunk's lane-expanded window never gets cut into a scalar remainder by
+/// a task split mid-table; the final ragged tail — if any — lands once,
+/// at the table's true end.
+///
+/// Chunk-count selection is `chunk_ranges`'s (same `min_chunk` /
+/// `max_chunks` semantics); snapping moves each boundary by less than
+/// `align`, and boundaries that collide after snapping merge their chunks
+/// (so chunks stay non-empty and coverage stays exact). `align ≤ 1`
+/// degrades to plain `chunk_ranges`.
+pub fn chunk_ranges_aligned(
+    len: usize,
+    min_chunk: usize,
+    max_chunks: usize,
+    align: usize,
+) -> Vec<std::ops::Range<usize>> {
+    let plain = chunk_ranges(len, min_chunk, max_chunks);
+    if align <= 1 || plain.len() <= 1 {
+        return plain;
+    }
+    let mut bounds: Vec<usize> = Vec::with_capacity(plain.len() + 1);
+    bounds.push(0);
+    for r in &plain[..plain.len() - 1] {
+        let b = (r.end + align / 2) / align * align;
+        if b > *bounds.last().expect("bounds starts non-empty") && b < len {
+            bounds.push(b);
+        }
+    }
+    bounds.push(len);
+    bounds.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,6 +329,39 @@ mod tests {
             assert_eq!(covered, len, "len={len} min={min} maxc={maxc}");
             if len > 0 {
                 assert!(ranges.len() <= maxc);
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_chunk_ranges_snap_interior_boundaries_only() {
+        for (len, min, maxc, align) in [
+            (100usize, 7usize, 3usize, 8usize), // boundaries 34/67 snap to 32/64
+            (64, 1, 64, 8),                     // min_chunk 1: many 1-wide chunks merge into 8-wide
+            (10, 3, 4, 8),                      // len barely above align: some boundaries collide
+            (4, 1, 8, 8),                       // len < align: collapses to one chunk
+            (0, 1, 4, 8),                       // empty
+            (100, 7, 3, 1),                     // align 1 degrades to chunk_ranges
+            (1 << 16, 1 << 11, 256, 4),         // production-shaped split at 4-wide
+        ] {
+            let ranges = chunk_ranges_aligned(len, min, maxc, align);
+            // exact, ordered, gap-free coverage of 0..len
+            let mut expect_start = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, expect_start, "len={len} min={min} maxc={maxc} align={align}");
+                assert!(!r.is_empty());
+                expect_start = r.end;
+            }
+            assert_eq!(expect_start, len, "len={len} min={min} maxc={maxc} align={align}");
+            if len > 0 {
+                assert!(ranges.len() <= maxc);
+            }
+            // every interior boundary is an align multiple
+            for r in ranges.iter().skip(1) {
+                assert_eq!(r.start % align, 0, "len={len} min={min} maxc={maxc} align={align}: {r:?}");
+            }
+            if align == 1 {
+                assert_eq!(ranges, chunk_ranges(len, min, maxc));
             }
         }
     }

@@ -27,12 +27,19 @@
 //! RETRACT var ...         stage evidence removals
 //! COMMIT                  apply staged deltas to the session's evidence
 //! QUERY <var> [| ev ...]  posterior under committed (+ inline) evidence
+//! MPE [| ev ...]          jointly most probable assignment under
+//!                         committed (+ inline) evidence — max-product
+//!                         over the same tree (exact tier only)
 //! BATCH <n> <var>         open an n-case batch for <var>'s posterior
+//! BATCH <n> MPE           open an n-case MPE batch (the literal verb
+//!                         `MPE` as target; a variable named "MPE" is
+//!                         shadowed — query it per-case via QUERY)
 //! CASE [ev=state ...]     one batch case (committed evidence + inline,
 //!                         inline wins); the n-th CASE dispatches all n
 //!                         cases in ONE shard dispatch (one fused sweep
-//!                         with the batched engine) and returns n reply
-//!                         lines — n evidence lines in, n posterior
+//!                         with the batched engine — lane-parallel max
+//!                         sweeps for an MPE batch) and returns n reply
+//!                         lines — n evidence lines in, n result
 //!                         lines out. Any other verb aborts the batch.
 //! STATS                   fleet-wide per-network counters and latency
 //! METRICS                 Prometheus-style text exposition (header line
@@ -65,6 +72,7 @@ use std::time::Duration;
 use crate::engine::{EngineConfig, EngineKind};
 use crate::infer::query::Posteriors;
 use crate::jt::evidence::Evidence;
+use crate::jt::mpe::MpeResult;
 use crate::jt::tree::JunctionTree;
 use crate::Result;
 
@@ -307,6 +315,72 @@ impl Fleet {
         }
     }
 
+    /// Run one MPE query against a loaded network, recording metrics
+    /// (same counters and latency series as [`Fleet::query`] — an MPE is
+    /// a query to the serving stack).
+    pub fn mpe(&self, name: &str, ev: Evidence) -> Result<MpeResult> {
+        let _ = self.registry.get(name); // refresh the LRU stamp, as in query()
+        match self.router.mpe(name, ev) {
+            Ok((result, service)) => {
+                self.metrics.record(name, service, true);
+                self.obs.counter(&crate::obs::series("fastbn_queries_total", &[("net", name)])).inc();
+                self.obs
+                    .histogram(&crate::obs::series("fastbn_query_latency_us", &[("net", name)]))
+                    .record(service);
+                Ok(result)
+            }
+            Err(e) => {
+                self.metrics.record(name, Duration::ZERO, false);
+                self.obs.counter(&crate::obs::series("fastbn_query_errors_total", &[("net", name)])).inc();
+                Err(e)
+            }
+        }
+    }
+
+    /// Run a multi-case MPE batch against a loaded network in **one shard
+    /// dispatch** (`BATCH <n> MPE`). Accounting mirrors
+    /// [`Fleet::query_batch`]: per-case records at their share of the
+    /// shard-side service time, outer `Err` reserved for transport.
+    pub fn mpe_batch(&self, name: &str, cases: Vec<Evidence>) -> Result<Vec<Result<MpeResult>>> {
+        if cases.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = cases.len() as u32;
+        let _ = self.registry.get(name);
+        match self.router.mpe_batch(name, cases) {
+            Ok((results, service)) => {
+                let per_case = service / n;
+                for r in &results {
+                    self.metrics.record(name, per_case, r.is_ok());
+                    match r {
+                        Ok(_) => {
+                            self.obs
+                                .counter(&crate::obs::series("fastbn_queries_total", &[("net", name)]))
+                                .inc();
+                            self.obs
+                                .histogram(&crate::obs::series("fastbn_query_latency_us", &[("net", name)]))
+                                .record(per_case);
+                        }
+                        Err(_) => self
+                            .obs
+                            .counter(&crate::obs::series("fastbn_query_errors_total", &[("net", name)]))
+                            .inc(),
+                    }
+                }
+                Ok(results)
+            }
+            Err(e) => {
+                for _ in 0..n {
+                    self.metrics.record(name, Duration::ZERO, false);
+                }
+                self.obs
+                    .counter(&crate::obs::series("fastbn_query_errors_total", &[("net", name)]))
+                    .add(n as u64);
+                Err(e)
+            }
+        }
+    }
+
     /// Registry accounting for every resident network, sorted by name.
     pub fn loaded(&self) -> Vec<RegistryEntry> {
         self.registry.entries()
@@ -384,6 +458,31 @@ mod tests {
     fn unknown_network_query_errors() {
         let fleet = small_fleet();
         assert!(fleet.query("asia", Evidence::none()).is_err());
+    }
+
+    #[test]
+    fn mpe_roundtrip_records_metrics_and_matches_direct_mpe() {
+        let fleet = small_fleet();
+        fleet.load("asia").unwrap();
+        let jt = fleet.tree("asia").unwrap();
+        let ev = Evidence::from_pairs(&jt.net, &[("xray", "yes")]).unwrap();
+        let got = fleet.mpe("asia", ev.clone()).unwrap();
+        let sched = crate::jt::schedule::Schedule::build(&jt, crate::jt::schedule::RootStrategy::Center);
+        let mut state = crate::jt::state::TreeState::fresh(&jt);
+        let want = crate::jt::mpe::most_probable_explanation(&jt, &sched, &mut state, &ev).unwrap();
+        assert_eq!(got.assignment, want.assignment);
+        assert_eq!(got.log_prob.to_bits(), want.log_prob.to_bits());
+        // batch path: per-case slots, failures isolated, metrics recorded
+        let bad = Evidence::from_pairs(&jt.net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        let results = fleet.mpe_batch("asia", vec![ev.clone(), bad, ev]).unwrap();
+        assert_eq!(results.len(), 3);
+        assert!(results[0].is_ok() && results[2].is_ok());
+        assert!(results[1].is_err());
+        assert_eq!(results[0].as_ref().unwrap().assignment, want.assignment);
+        let body = fleet.metrics_exposition();
+        assert!(body.contains("fastbn_queries_total{net=\"asia\"} 3"), "{body}");
+        assert!(body.contains("fastbn_query_errors_total{net=\"asia\"} 1"), "{body}");
+        assert!(fleet.mpe("ghost", Evidence::none()).is_err());
     }
 
     #[test]

@@ -24,15 +24,23 @@ use crate::engine::{Engine, EngineConfig, EngineKind};
 use crate::fleet::registry::Compiled;
 use crate::infer::query::Posteriors;
 use crate::jt::evidence::Evidence;
+use crate::jt::mpe::MpeResult;
 use crate::jt::state::TreeState;
 use crate::{Error, Result};
 
+/// Where (and in what shape) a job's per-case results go: sum-product
+/// posteriors for `QUERY`/`BATCH`, max-product assignments for `MPE`.
+enum JobReply {
+    Posteriors(mpsc::Sender<(Vec<Result<Posteriors>>, Duration)>),
+    Mpe(mpsc::Sender<(Vec<Result<MpeResult>>, Duration)>),
+}
+
 struct Job {
     /// One or more evidence cases; a multi-case job runs through the
-    /// engine's `infer_batch` in **one shard dispatch** (the `BATCH` verb
-    /// path — a single sweep with the batched engine).
+    /// engine's `infer_batch` / `mpe_batch` in **one shard dispatch** (the
+    /// `BATCH` verb path — a single sweep with the batched engine).
     cases: Vec<Evidence>,
-    reply: mpsc::Sender<(Vec<Result<Posteriors>>, Duration)>,
+    reply: JobReply,
 }
 
 struct Shard {
@@ -113,6 +121,39 @@ impl ShardGroup {
         if cases.is_empty() {
             return Ok((Vec::new(), Duration::ZERO));
         }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.enqueue(cases, JobReply::Posteriors(reply_tx))?;
+        match reply_rx.recv() {
+            Ok((outcomes, service)) => Ok((outcomes, service)),
+            Err(_) => Err(Error::msg(format!("shard worker for {:?} died", self.name))),
+        }
+    }
+
+    /// Run one MPE query on this group, blocking until its shard replies.
+    pub fn dispatch_mpe(&self, ev: Evidence) -> Result<(MpeResult, Duration)> {
+        let (mut results, service) = self.dispatch_mpe_batch(vec![ev])?;
+        results.pop().expect("one case in, one result out").map(|r| (r, service))
+    }
+
+    /// Run a multi-case MPE batch as **one** shard dispatch; the shard
+    /// worker feeds all cases to `Engine::mpe_batch` (lane-parallel max
+    /// sweeps with the batched engine). Per-case failures come back in
+    /// their slots, exactly like [`ShardGroup::dispatch_batch`].
+    pub fn dispatch_mpe_batch(&self, cases: Vec<Evidence>) -> Result<(Vec<Result<MpeResult>>, Duration)> {
+        if cases.is_empty() {
+            return Ok((Vec::new(), Duration::ZERO));
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.enqueue(cases, JobReply::Mpe(reply_tx))?;
+        match reply_rx.recv() {
+            Ok((outcomes, service)) => Ok((outcomes, service)),
+            Err(_) => Err(Error::msg(format!("shard worker for {:?} died", self.name))),
+        }
+    }
+
+    /// Pick a shard (rotor start, then least depth from there) and hand it
+    /// the job, accounting its depth.
+    fn enqueue(&self, cases: Vec<Evidence>, reply: JobReply) -> Result<()> {
         let start = self.rotor.fetch_add(1, Ordering::Relaxed) % self.shards.len();
         let mut best = start;
         let mut best_depth = self.shards[start].depth.load(Ordering::Relaxed);
@@ -130,16 +171,11 @@ impl ShardGroup {
             None => return Err(Error::msg(format!("network {:?} is shutting down", self.name))),
         };
         shard.depth.fetch_add(1, Ordering::Relaxed);
-        let (reply_tx, reply_rx) = mpsc::channel();
-        if tx.send(Job { cases, reply: reply_tx }).is_err() {
+        if tx.send(Job { cases, reply }).is_err() {
             shard.depth.fetch_sub(1, Ordering::Relaxed);
             return Err(Error::msg(format!("network {:?} is shutting down", self.name)));
         }
-        drop(tx);
-        match reply_rx.recv() {
-            Ok((outcomes, service)) => Ok((outcomes, service)),
-            Err(_) => Err(Error::msg(format!("shard worker for {:?} died", self.name))),
-        }
+        Ok(())
     }
 
     fn shutdown(&self) {
@@ -180,29 +216,55 @@ fn shard_worker(
     let (mut engine, mut state) = build_replica(&model, engine_kind, &cfg);
     while let Ok(job) = rx.recv() {
         let t0 = Instant::now();
+        let Job { cases, reply } = job;
         // a panicking case must not kill the shard: without the catch, the
         // worker dies with its depth stuck and ~1/N of the network's
         // queries fail as "shutting down" forever
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            // trace root for the whole dispatch: engines run on this very
-            // thread, so their spans nest under it and the guard's drop
-            // publishes the query's span tree (ring / slow-query log)
-            let dispatch_span = crate::obs::trace::span("shard.infer");
-            dispatch_span.note(&format!("cases={}", job.cases.len()));
-            engine.infer_batch(&mut state, &job.cases)
-        }));
-        depth.fetch_sub(1, Ordering::Relaxed);
-        match outcome {
-            // the requester may have given up; a dead reply channel is fine
-            Ok(results) => {
-                let _ = job.reply.send((results, t0.elapsed()));
+        match reply {
+            JobReply::Posteriors(reply) => {
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    // trace root for the whole dispatch: engines run on this
+                    // very thread, so their spans nest under it and the
+                    // guard's drop publishes the query's span tree (ring /
+                    // slow-query log)
+                    let dispatch_span = crate::obs::trace::span("shard.infer");
+                    dispatch_span.note(&format!("cases={}", cases.len()));
+                    engine.infer_batch(&mut state, &cases)
+                }));
+                depth.fetch_sub(1, Ordering::Relaxed);
+                match outcome {
+                    // the requester may have given up; a dead reply channel
+                    // is fine
+                    Ok(results) => {
+                        let _ = reply.send((results, t0.elapsed()));
+                    }
+                    Err(_) => {
+                        // engine pool and state may be mid-mutation: rebuild
+                        let msg = "inference panicked; shard engine rebuilt";
+                        let results = cases.iter().map(|_| Err(Error::msg(msg))).collect();
+                        let _ = reply.send((results, t0.elapsed()));
+                        (engine, state) = build_replica(&model, engine_kind, &cfg);
+                    }
+                }
             }
-            Err(_) => {
-                // engine pool and state may be mid-mutation: rebuild both
-                let msg = "inference panicked; shard engine rebuilt";
-                let results = job.cases.iter().map(|_| Err(Error::msg(msg))).collect();
-                let _ = job.reply.send((results, t0.elapsed()));
-                (engine, state) = build_replica(&model, engine_kind, &cfg);
+            JobReply::Mpe(reply) => {
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let dispatch_span = crate::obs::trace::span("shard.mpe");
+                    dispatch_span.note(&format!("cases={}", cases.len()));
+                    engine.mpe_batch(&mut state, &cases)
+                }));
+                depth.fetch_sub(1, Ordering::Relaxed);
+                match outcome {
+                    Ok(results) => {
+                        let _ = reply.send((results, t0.elapsed()));
+                    }
+                    Err(_) => {
+                        let msg = "inference panicked; shard engine rebuilt";
+                        let results = cases.iter().map(|_| Err(Error::msg(msg))).collect();
+                        let _ = reply.send((results, t0.elapsed()));
+                        (engine, state) = build_replica(&model, engine_kind, &cfg);
+                    }
+                }
             }
         }
     }
@@ -255,6 +317,18 @@ impl Router {
     pub fn query_batch(&self, name: &str, cases: Vec<Evidence>) -> Result<(Vec<Result<Posteriors>>, Duration)> {
         let group = self.group(name).ok_or_else(|| Error::msg(format!("network {name:?} is not loaded")))?;
         group.dispatch_batch(cases)
+    }
+
+    /// Dispatch an MPE query to `name`'s group.
+    pub fn mpe(&self, name: &str, ev: Evidence) -> Result<(MpeResult, Duration)> {
+        let group = self.group(name).ok_or_else(|| Error::msg(format!("network {name:?} is not loaded")))?;
+        group.dispatch_mpe(ev)
+    }
+
+    /// Dispatch a multi-case MPE batch to `name`'s group (one dispatch).
+    pub fn mpe_batch(&self, name: &str, cases: Vec<Evidence>) -> Result<(Vec<Result<MpeResult>>, Duration)> {
+        let group = self.group(name).ok_or_else(|| Error::msg(format!("network {name:?} is not loaded")))?;
+        group.dispatch_mpe_batch(cases)
     }
 
     /// Names with live shard groups, sorted.
@@ -351,6 +425,48 @@ mod tests {
         assert!(empty.is_empty());
         assert_eq!(service, Duration::ZERO);
         assert_eq!(group.depths(), vec![0, 0]);
+    }
+
+    #[test]
+    fn mpe_dispatch_matches_direct_mpe_and_isolates_failures() {
+        let jt = asia_tree();
+        let group = ShardGroup::new(
+            "asia",
+            Compiled::Exact(Arc::clone(&jt)),
+            2,
+            EngineKind::Batched,
+            &EngineConfig::default().with_threads(1).with_batch(3),
+        )
+        .unwrap();
+        let good = Evidence::from_pairs(&jt.net, &[("xray", "yes")]).unwrap();
+        let bad = Evidence::from_pairs(&jt.net, &[("either", "no"), ("lung", "yes")]).unwrap();
+        let (results, _service) =
+            group.dispatch_mpe_batch(vec![good.clone(), bad, Evidence::none()]).unwrap();
+        assert_eq!(results.len(), 3);
+        assert!(results[1].is_err());
+        let sched = crate::jt::schedule::Schedule::build(&jt, crate::jt::schedule::RootStrategy::Center);
+        let mut state = TreeState::fresh(&jt);
+        for (i, ev) in [(0usize, &good), (2, &Evidence::none())] {
+            let want = crate::jt::mpe::most_probable_explanation(&jt, &sched, &mut state, ev).unwrap();
+            let got = results[i].as_ref().unwrap();
+            assert_eq!(got.assignment, want.assignment, "case {i}");
+            assert_eq!(got.log_prob.to_bits(), want.log_prob.to_bits(), "case {i}");
+        }
+        // single-case entry point and clean depths afterwards
+        let (one, _) = group.dispatch_mpe(good.clone()).unwrap();
+        assert_eq!(one.assignment, results[0].as_ref().unwrap().assignment);
+        assert_eq!(group.depths(), vec![0, 0]);
+        // the approximate tier refuses MPE instead of approximating it
+        let net = Arc::new(embedded::asia());
+        let approx = ShardGroup::new(
+            "asia-lw",
+            Compiled::Approx { net, cost: 1e12 },
+            1,
+            EngineKind::Hybrid,
+            &EngineConfig::default().with_threads(1),
+        )
+        .unwrap();
+        assert!(approx.dispatch_mpe(good).is_err());
     }
 
     #[test]

@@ -4,9 +4,10 @@
 //! [`crate::fleet::server`] just moves bytes), so the protocol is testable
 //! without sockets. Per-session state is the selected network and an
 //! evidence set built incrementally: `OBSERVE`/`RETRACT` stage deltas,
-//! `COMMIT` applies them atomically, and every `QUERY` runs under the
-//! committed evidence — a connection following a sensor feed sends one
-//! small delta per reading instead of re-sending the full evidence vector.
+//! `COMMIT` applies them atomically, and every `QUERY` (and `MPE`) runs
+//! under the committed evidence — a connection following a sensor feed
+//! sends one small delta per reading instead of re-sending the full
+//! evidence vector.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -36,6 +37,17 @@ enum Delta {
 /// collecting forever (and bound the dispatch allocation).
 pub const MAX_BATCH_CASES: usize = 1024;
 
+/// What an open batch computes per case: the posterior over one target
+/// variable (sum-product), or the jointly most probable assignment
+/// (max-product `MPE`). The literal target token `MPE` selects the
+/// latter — checked before variable resolution, so a variable actually
+/// named "MPE" is shadowed on the batch path (query it per-case via
+/// `QUERY`).
+enum BatchTarget {
+    Posterior(usize),
+    Mpe,
+}
+
 /// An in-progress `BATCH` collection: the model pinned at `BATCH` time,
 /// target variable, expected case count, and the cases staged so far.
 ///
@@ -51,7 +63,7 @@ pub const MAX_BATCH_CASES: usize = 1024;
 struct BatchCollect {
     net: String,
     model: Compiled,
-    target: usize,
+    target: BatchTarget,
     expect: usize,
     cases: Vec<std::result::Result<Evidence, String>>,
 }
@@ -136,6 +148,7 @@ impl Session {
             "RETRACT" => self.cmd_retract(rest),
             "COMMIT" => self.cmd_commit(),
             "QUERY" => self.cmd_query(rest),
+            "MPE" => self.cmd_mpe(rest),
             "BATCH" => self.cmd_batch(rest),
             "CASE" => self.cmd_case(rest),
             "STATS" => self.fleet.stats_line(),
@@ -322,11 +335,12 @@ impl Session {
         format!("OK committed evidence={} applied={applied}", self.committed.len())
     }
 
-    /// `BATCH <n> <target-var>`: open an n-case collection. The next `n`
-    /// `CASE` lines stage one evidence case each; the n-th dispatches all
-    /// of them as **one** shard job (one fused sweep with the batched
-    /// engine) and its reply carries the n result lines — N evidence
-    /// lines in, N posterior lines out.
+    /// `BATCH <n> <target-var|MPE>`: open an n-case collection. The next
+    /// `n` `CASE` lines stage one evidence case each; the n-th dispatches
+    /// all of them as **one** shard job (one fused lane-parallel sweep
+    /// with the batched engine) and its reply carries the n result lines
+    /// — N evidence lines in, N result lines out. The literal target
+    /// `MPE` runs max-product per case instead of a posterior.
     fn cmd_batch(&mut self, rest: &str) -> String {
         let (name, model) = match self.current_model() {
             Ok(current) => current,
@@ -334,17 +348,24 @@ impl Session {
         };
         let mut parts = rest.split_whitespace();
         let (Some(n_text), Some(target), None) = (parts.next(), parts.next(), parts.next()) else {
-            return "ERR usage: BATCH <n> <target-var>".into();
+            return "ERR usage: BATCH <n> <target-var|MPE>".into();
         };
         let n = match n_text.parse::<usize>() {
             Ok(n) if (1..=MAX_BATCH_CASES).contains(&n) => n,
             _ => return format!("ERR batch size must be 1..={MAX_BATCH_CASES} (got {n_text:?})"),
         };
-        let v = match model.net().var_id(target) {
-            Ok(v) => v,
-            Err(e) => return format!("ERR {e}"),
+        // the MPE sentinel is matched before variable resolution (see
+        // `BatchTarget`) — and only in its literal uppercase spelling, so
+        // lowercase state-of-a-variable names stay resolvable
+        let t = if target == "MPE" {
+            BatchTarget::Mpe
+        } else {
+            match model.net().var_id(target) {
+                Ok(v) => BatchTarget::Posterior(v),
+                Err(e) => return format!("ERR {e}"),
+            }
         };
-        self.batch = Some(BatchCollect { net: name, model, target: v, expect: n, cases: Vec::with_capacity(n) });
+        self.batch = Some(BatchCollect { net: name, model, target: t, expect: n, cases: Vec::with_capacity(n) });
         format!("OK batch expect={n} target={target}")
     }
 
@@ -404,20 +425,37 @@ impl Session {
         }
         let evs: Vec<Evidence> =
             collect.cases.iter().map(|c| c.clone().unwrap_or_else(|_| Evidence::none())).collect();
-        let lines: Vec<String> = match self.fleet.query_batch(&collect.net, evs) {
-            Ok(results) => collect
-                .cases
-                .iter()
-                .zip(results)
-                .map(|(parsed, outcome)| match (parsed, outcome) {
-                    (Err(msg), _) => format!("ERR {msg}"),
-                    (Ok(_), Ok(post)) => {
-                        crate::coordinator::server::format_ok_posterior(collect.model.net(), collect.target, &post)
-                    }
-                    (Ok(_), Err(e)) => format!("ERR {e}"),
-                })
-                .collect(),
-            Err(e) => (0..collect.expect).map(|_| format!("ERR {e}")).collect(),
+        let lines: Vec<String> = match collect.target {
+            BatchTarget::Posterior(v) => match self.fleet.query_batch(&collect.net, evs) {
+                Ok(results) => collect
+                    .cases
+                    .iter()
+                    .zip(results)
+                    .map(|(parsed, outcome)| match (parsed, outcome) {
+                        (Err(msg), _) => format!("ERR {msg}"),
+                        (Ok(_), Ok(post)) => {
+                            crate::coordinator::server::format_ok_posterior(collect.model.net(), v, &post)
+                        }
+                        (Ok(_), Err(e)) => format!("ERR {e}"),
+                    })
+                    .collect(),
+                Err(e) => (0..collect.expect).map(|_| format!("ERR {e}")).collect(),
+            },
+            BatchTarget::Mpe => match self.fleet.mpe_batch(&collect.net, evs) {
+                Ok(results) => collect
+                    .cases
+                    .iter()
+                    .zip(results)
+                    .map(|(parsed, outcome)| match (parsed, outcome) {
+                        (Err(msg), _) => format!("ERR {msg}"),
+                        (Ok(_), Ok(res)) => {
+                            crate::coordinator::server::format_ok_mpe(collect.model.net(), &res)
+                        }
+                        (Ok(_), Err(e)) => format!("ERR {e}"),
+                    })
+                    .collect(),
+                Err(e) => (0..collect.expect).map(|_| format!("ERR {e}")).collect(),
+            },
         };
         lines.join("\n")
     }
@@ -454,6 +492,36 @@ impl Session {
                 None => "ERR no trace recorded (TRACE on, then QUERY)".into(),
             },
             _ => "ERR usage: TRACE <on|off|last>".into(),
+        }
+    }
+
+    /// `MPE [| var=state …]`: the jointly most probable assignment under
+    /// the committed evidence plus inline one-shot pairs (inline wins),
+    /// exactly `QUERY`'s evidence grammar without a target — the answer
+    /// assigns every variable. Exact tier only: the sampling tier has no
+    /// junction tree to run a max-product sweep over.
+    fn cmd_mpe(&mut self, rest: &str) -> String {
+        let (name, model) = match self.current_model() {
+            Ok(current) => current,
+            Err(reply) => return reply,
+        };
+        let pairs = match crate::coordinator::server::parse_mpe_args(rest) {
+            Ok(pairs) => pairs,
+            Err(msg) => return format!("ERR {msg}"),
+        };
+        let mut obs = self.committed.clone();
+        for (var, state) in pairs {
+            match model.net().state_id(var, state) {
+                Ok((id, s)) => {
+                    obs.insert(id, s);
+                }
+                Err(e) => return format!("ERR {e}"),
+            }
+        }
+        let ev = Evidence::from_ids(obs.into_iter().collect());
+        match self.fleet.mpe(&name, ev) {
+            Ok(res) => crate::coordinator::server::format_ok_mpe(model.net(), &res),
+            Err(e) => format!("ERR {e}"),
         }
     }
 
@@ -733,6 +801,55 @@ mod tests {
         // the session recovers on the net that displaced its tree
         assert!(line(&mut a, "USE cancer").starts_with("OK using cancer"));
         assert!(line(&mut a, "QUERY Cancer").starts_with("OK True="));
+    }
+
+    #[test]
+    fn mpe_verb_uses_committed_evidence_and_inline_wins() {
+        let mut s = session();
+        assert!(line(&mut s, "MPE").starts_with("ERR no network selected"));
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        let prior = line(&mut s, "MPE");
+        assert!(prior.starts_with("OK mpe logp=-"), "{prior}");
+        // one var=state token per variable, all eight of asia's
+        assert_eq!(prior.split_whitespace().count(), 2 + 8, "{prior}");
+        let oneshot = line(&mut s, "MPE | smoke=yes");
+        assert!(oneshot.contains(" smoke=yes"), "{oneshot}");
+        // committed evidence reproduces the inline answer bit-for-bit
+        line(&mut s, "OBSERVE smoke=yes");
+        line(&mut s, "COMMIT");
+        assert_eq!(line(&mut s, "MPE"), oneshot);
+        // inline wins over committed, exactly like QUERY
+        let flipped = line(&mut s, "MPE | smoke=no");
+        assert!(flipped.contains(" smoke=no"), "{flipped}");
+        assert!(line(&mut s, "MPE | either=no lung=yes").starts_with("ERR evidence is inconsistent"));
+        assert!(line(&mut s, "MPE smoke=yes").starts_with("ERR usage: MPE"));
+        assert!(line(&mut s, "MPE | smoke").starts_with("ERR bad evidence token"));
+    }
+
+    #[test]
+    fn batch_mpe_collects_n_cases_and_returns_n_assignment_lines() {
+        let mut s = session();
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        let want_smoke_yes = line(&mut s, "MPE | smoke=yes");
+        let want_prior = line(&mut s, "MPE");
+
+        assert_eq!(line(&mut s, "BATCH 3 MPE"), "OK batch expect=3 target=MPE");
+        assert_eq!(line(&mut s, "CASE smoke=yes"), "OK case 1/3");
+        assert_eq!(line(&mut s, "CASE either=no lung=yes"), "OK case 2/3");
+        let reply = line(&mut s, "CASE");
+        let lines: Vec<&str> = reply.lines().collect();
+        assert_eq!(lines.len(), 3);
+        // batched max-product matches the single-case verb bit-for-bit,
+        // and an impossible slot fails alone
+        assert_eq!(lines[0], want_smoke_yes.as_str());
+        assert!(lines[1].starts_with("ERR evidence is inconsistent"), "{}", lines[1]);
+        assert_eq!(lines[2], want_prior.as_str());
+        // the batch is closed: a stray CASE errors
+        assert!(line(&mut s, "CASE").starts_with("ERR no batch in progress"));
+        // the sentinel is case-sensitive: lowercase resolves as a variable
+        assert!(line(&mut s, "BATCH 2 mpe").starts_with("ERR unknown variable"));
     }
 
     #[test]

@@ -16,7 +16,8 @@
 //! The potential-table *operations* — marginalization, extension,
 //! reduction — and the **index mappings** between clique and separator
 //! tables that dominate their cost (the bottleneck the paper simplifies)
-//! live in [`ops`] and [`mapping`]. The parallel schedules over this
+//! live in [`ops`] and [`mapping`]; the explicit SIMD lane micro-kernels
+//! backing the batched (case-major) variants live in [`simd`]. The parallel schedules over this
 //! substrate (leveling, root selection, the six engines) live in
 //! [`crate::engine`].
 
@@ -28,6 +29,7 @@ pub mod ops;
 pub mod potential;
 pub mod propagate;
 pub mod schedule;
+pub mod simd;
 pub mod state;
 pub mod tree;
 pub mod triangulate;

@@ -7,10 +7,20 @@
 //! globally optimal by the max-calibration property. An extension beyond
 //! the poster (exact MPE is the other canonical JT workload), reusing the
 //! compiled tree, evidence entry and schedules.
+//!
+//! Two drivers share one decode: [`most_probable_explanation`] runs a
+//! single case over a [`TreeState`]; [`most_probable_explanation_batch`]
+//! runs whole caseloads over a lane-interleaved [`BatchState`] through the
+//! case-major max kernels (`ops::max_with_map_cases` & co.), so MPE rides
+//! the same SIMD lane layer as sum-product batching. Every kernel in the
+//! max-pass is per-lane element-wise, so each lane's answer is
+//! **bit-identical** to the single-case run of the same evidence — pinned
+//! by the oracle tests below, not by prose.
 
 use crate::jt::evidence::Evidence;
+use crate::jt::ops;
 use crate::jt::schedule::Schedule;
-use crate::jt::state::TreeState;
+use crate::jt::state::{BatchState, TreeState};
 use crate::jt::tree::JunctionTree;
 use crate::{Error, Result};
 
@@ -39,7 +49,9 @@ fn max_with_map(src: &[f64], map: &[u32], dst: &mut [f64]) {
 /// Compute the MPE for `ev` on a calibrated tree state.
 ///
 /// `state` is reset, evidence is applied, one upward max-pass runs, and
-/// the assignment is decoded root-to-leaves.
+/// the assignment is decoded root-to-leaves. The reported `log_prob` is
+/// recomputed exactly from the CPTs ([`exact_log_prob`]), so the in-pass
+/// peak scaling never leaks into the value.
 pub fn most_probable_explanation(
     jt: &JunctionTree,
     sched: &Schedule,
@@ -48,7 +60,6 @@ pub fn most_probable_explanation(
 ) -> Result<MpeResult> {
     state.reset(jt);
     ev.apply(jt, state);
-    let mut log_scale = 0.0f64;
 
     // upward max-pass
     let mut new_sep_buf = vec![0.0f64; jt.seps.iter().map(|s| s.len).max().unwrap_or(1)];
@@ -70,18 +81,125 @@ pub fn most_probable_explanation(
             for x in new_sep.iter_mut() {
                 *x /= peak;
             }
-            log_scale += peak.ln();
             let ratio = &mut ratio_buf[..sep_meta.len];
-            crate::jt::ops::ratio(new_sep, state.sep(msg.sep), ratio);
+            ops::ratio(new_sep, state.sep(msg.sep), ratio);
             state.sep_mut(msg.sep).copy_from_slice(new_sep);
-            crate::jt::ops::extend_with_map(state.clique_mut(msg.to), maps.from(sep_meta, msg.to), ratio);
+            ops::extend_with_map(state.clique_mut(msg.to), maps.from(sep_meta, msg.to), ratio);
         }
     }
 
-    // decode: roots first, then children restricted to their parents
+    let assignment = decode(jt, sched, |c, i| state.clique(c)[i])?;
+    let log_prob = exact_log_prob(jt, &assignment)?;
+    Ok(MpeResult { assignment, log_prob })
+}
+
+/// Compute the MPE for every case in `cases` through a lane-interleaved
+/// [`BatchState`], `state.lanes()` cases per sweep.
+///
+/// Each chunk runs one upward max-pass over all its lanes at once via the
+/// case-major kernels; an infeasible lane (some message peaks at 0) is
+/// flagged and keeps propagating zeros with divisor 1 — the same
+/// per-element op sequence as live lanes, so it cannot perturb them.
+/// Results come back in case order; lane `b`'s answer is bit-identical to
+/// [`most_probable_explanation`] on the same evidence.
+pub fn most_probable_explanation_batch(
+    jt: &JunctionTree,
+    sched: &Schedule,
+    state: &mut BatchState,
+    cases: &[Evidence],
+) -> Vec<Result<MpeResult>> {
+    let lanes = state.lanes();
+    let max_sep = jt.seps.iter().map(|s| s.len).max().unwrap_or(1);
+    let mut new_sep_buf = vec![0.0f64; max_sep * lanes];
+    let mut ratio_buf = new_sep_buf.clone();
+    let mut out = Vec::with_capacity(cases.len());
+    for chunk in cases.chunks(lanes) {
+        mpe_chunk(jt, sched, state, chunk, &mut new_sep_buf, &mut ratio_buf, &mut out);
+    }
+    out
+}
+
+/// One batched upward max-pass + per-lane decode for `chunk.len() ≤ lanes`
+/// cases, appending one `Result` per case to `out`.
+fn mpe_chunk(
+    jt: &JunctionTree,
+    sched: &Schedule,
+    state: &mut BatchState,
+    chunk: &[Evidence],
+    new_sep_buf: &mut [f64],
+    ratio_buf: &mut [f64],
+    out: &mut Vec<Result<MpeResult>>,
+) {
+    let lanes = state.lanes();
+    let occ = chunk.len();
+    state.reset();
+    for (b, ev) in chunk.iter().enumerate() {
+        ev.apply_lane(jt, state.data_mut(), lanes, b);
+    }
+    let mut failed = vec![false; occ];
+    let mut peaks = vec![0.0f64; occ];
+    let mut divisors = vec![1.0f64; occ];
+    for layer in &sched.up_layers {
+        for msg in layer {
+            let sep_meta = &jt.seps[msg.sep];
+            let w = sep_meta.len * lanes;
+            let new_sep = &mut new_sep_buf[..w];
+            for x in new_sep.iter_mut() {
+                *x = 0.0;
+            }
+            let maps = &jt.edge_maps[msg.sep];
+            ops::max_with_map_cases(state.clique(msg.from), maps.from(sep_meta, msg.from), lanes, occ, new_sep);
+            for p in peaks.iter_mut() {
+                *p = 0.0;
+            }
+            ops::max_cases(new_sep, lanes, &mut peaks);
+            for (b, &p) in peaks.iter().enumerate() {
+                if p == 0.0 {
+                    failed[b] = true;
+                    divisors[b] = 1.0;
+                } else {
+                    divisors[b] = p;
+                }
+            }
+            ops::scale_max_cases(new_sep, lanes, &divisors);
+            let ratio = &mut ratio_buf[..w];
+            let old = state.sep(msg.sep);
+            for e in 0..sep_meta.len {
+                let o = e * lanes;
+                ops::ratio(&new_sep[o..o + occ], &old[o..o + occ], &mut ratio[o..o + occ]);
+            }
+            // copy only the occupied lanes back; lanes occ..lanes keep
+            // their prototype ones (never read — reset wipes them)
+            let sep = state.sep_mut(msg.sep);
+            for e in 0..sep_meta.len {
+                let o = e * lanes;
+                sep[o..o + occ].copy_from_slice(&new_sep[o..o + occ]);
+            }
+            ops::ext_with_map_cases(state.clique_mut(msg.to), maps.from(sep_meta, msg.to), lanes, occ, ratio);
+        }
+    }
+    for (b, &failed_b) in failed.iter().enumerate() {
+        if failed_b {
+            out.push(Err(Error::InconsistentEvidence));
+            continue;
+        }
+        let r = decode(jt, sched, |c, i| state.clique(c)[i * lanes + b]).and_then(|assignment| {
+            let log_prob = exact_log_prob(jt, &assignment)?;
+            Ok(MpeResult { assignment, log_prob })
+        });
+        out.push(r);
+    }
+}
+
+/// Greedy root-to-leaves decode of a max-calibrated tree: each clique's
+/// restricted argmax (consistent with already-fixed variables) in BFS
+/// order from the schedule roots. `value(c, i)` reads entry `i` of clique
+/// `c`'s calibrated table — an accessor closure so the single-case arena
+/// and one lane of a [`BatchState`] share the exact comparison sequence
+/// (argmax tie-breaks included).
+fn decode(jt: &JunctionTree, sched: &Schedule, value: impl Fn(usize, usize) -> f64) -> Result<Vec<usize>> {
     let n = jt.net.n();
     let mut assignment = vec![usize::MAX; n];
-    let mut log_prob = log_scale;
     let mut order: Vec<usize> = Vec::with_capacity(jt.n_cliques());
     for &r in &sched.roots {
         order.push(r);
@@ -97,11 +215,11 @@ pub fn most_probable_explanation(
 
     for &c in &order {
         let clique = &jt.cliques[c];
-        let data = state.clique(c);
         // restricted argmax: entries whose digits agree with already-fixed vars
         let mut best_idx = usize::MAX;
         let mut best_val = -1.0f64;
-        'entry: for (i, &x) in data.iter().enumerate() {
+        'entry: for i in 0..clique.len {
+            let x = value(c, i);
             if x <= best_val {
                 continue;
             }
@@ -124,28 +242,28 @@ pub fn most_probable_explanation(
                 assignment[v] = (best_idx / clique.strides[pos]) % clique.cards[pos];
             }
         }
-        if sched.parent[c].is_none() {
-            // root clique contributes its (scaled) maximum once
-            log_prob += best_val.ln();
-        }
     }
     debug_assert!(assignment.iter().all(|&s| s != usize::MAX));
+    Ok(assignment)
+}
 
-    // exact joint log-probability of the decoded assignment (cheap and
-    // removes any residual scaling approximation from the reported value)
+/// Exact joint log-probability of a full assignment, recomputed from the
+/// CPTs. Both MPE drivers report this instead of the in-pass scaled
+/// maximum — cheap, removes any residual scaling approximation, and makes
+/// equal assignments yield bitwise-equal `log_prob`.
+fn exact_log_prob(jt: &JunctionTree, assignment: &[usize]) -> Result<f64> {
     let cards = jt.net.cards();
-    let mut exact_logp = 0.0f64;
-    for v in 0..n {
+    let mut logp = 0.0f64;
+    for v in 0..jt.net.n() {
         let cpt = &jt.net.cpts[v];
         let config: Vec<usize> = cpt.parents.iter().map(|&p| assignment[p]).collect();
         let p = cpt.row(&config, &cards)[assignment[v]];
         if p == 0.0 {
             return Err(Error::InconsistentEvidence);
         }
-        exact_logp += p.ln();
+        logp += p.ln();
     }
-    let _ = log_prob;
-    Ok(MpeResult { assignment, log_prob: exact_logp })
+    Ok(logp)
 }
 
 #[cfg(test)]
@@ -270,5 +388,83 @@ mod tests {
         let mut state = TreeState::fresh(&jt);
         let ev = Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap();
         assert!(most_probable_explanation(&jt, &sched, &mut state, &ev).is_err());
+    }
+
+    /// Run both drivers over `cases` at lane width `lanes` and require
+    /// per-case agreement: identical assignments, **bitwise**-identical
+    /// log-probs, and matching feasibility verdicts.
+    fn check_batch_against_single(
+        jt: &JunctionTree,
+        sched: &Schedule,
+        cases: &[Evidence],
+        lanes: usize,
+    ) {
+        let mut single = TreeState::fresh(jt);
+        let want: Vec<Result<MpeResult>> =
+            cases.iter().map(|ev| most_probable_explanation(jt, sched, &mut single, ev)).collect();
+        let mut bstate = BatchState::fresh(jt, lanes);
+        let got = most_probable_explanation_batch(jt, sched, &mut bstate, cases);
+        assert_eq!(got.len(), cases.len());
+        for (b, (g, w)) in got.iter().zip(&want).enumerate() {
+            match (g, w) {
+                (Ok(g), Ok(w)) => {
+                    assert_eq!(g.assignment, w.assignment, "lanes {lanes} case {b}: assignment");
+                    assert_eq!(
+                        g.log_prob.to_bits(),
+                        w.log_prob.to_bits(),
+                        "lanes {lanes} case {b}: {} != {}",
+                        g.log_prob,
+                        w.log_prob
+                    );
+                }
+                (Err(_), Err(_)) => {}
+                _ => panic!("lanes {lanes} case {b}: batched/single disagree on feasibility"),
+            }
+        }
+    }
+
+    /// The batched-MPE oracle: every lane of
+    /// `most_probable_explanation_batch` is bit-identical to an
+    /// independent single-case run, across lane widths straddling the
+    /// caseload (full chunks, partial tail chunks, occ < lanes) — the
+    /// infeasible case rides in the middle of the batch, pinning that a
+    /// dead lane neither poisons its neighbors nor flips feasibility.
+    #[test]
+    fn batched_mpe_matches_single_case_per_lane() {
+        let net = embedded::asia();
+        let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+        let sched = Schedule::build(&jt, RootStrategy::Center);
+        let cases: Vec<Evidence> = vec![
+            Evidence::none(),
+            Evidence::from_pairs(&net, &[("xray", "yes")]).unwrap(),
+            Evidence::from_pairs(&net, &[("dysp", "yes"), ("smoke", "no")]).unwrap(),
+            Evidence::from_pairs(&net, &[("either", "no"), ("lung", "yes")]).unwrap(), // infeasible
+            Evidence::from_pairs(&net, &[("smoke", "yes")]).unwrap(),
+            Evidence::from_pairs(&net, &[("asia", "yes")]).unwrap(),
+            Evidence::from_pairs(&net, &[("bronc", "no")]).unwrap(),
+        ];
+        for lanes in [1usize, 3, 4, 7, 8, 64] {
+            check_batch_against_single(&jt, &sched, &cases, lanes);
+        }
+        // empty caseload: no sweep, no results
+        let mut bstate = BatchState::fresh(&jt, 4);
+        assert!(most_probable_explanation_batch(&jt, &sched, &mut bstate, &[]).is_empty());
+    }
+
+    #[test]
+    fn batched_mpe_oracle_on_random_nets() {
+        for seed in 0..4 {
+            let net = netgen::tiny_random(seed + 500, 7);
+            let jt = JunctionTree::compile(&net, TriangulationHeuristic::MinFill).unwrap();
+            let sched = Schedule::build(&jt, RootStrategy::Center);
+            let mut rng = crate::rng::Rng::new(seed);
+            let cases: Vec<Evidence> = (0..6)
+                .map(|_| {
+                    let full = crate::bn::sample::forward_sample(&net, &mut rng);
+                    Evidence::from_ids(vec![(0, full[0])])
+                })
+                .collect();
+            check_batch_against_single(&jt, &sched, &cases, 4);
+        }
     }
 }

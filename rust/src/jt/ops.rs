@@ -211,6 +211,15 @@ pub fn extend_runs_range(dst: &mut [f64], rm: &RunMap, entries: std::ops::Range<
 // (or a lone `infer` through the batched engine, `occ = 1`) pays
 // per-entry work proportional to the cases actually present instead of
 // the full lane count. Lanes `occ..lanes` are never read or written.
+//
+// The per-lane inner loops all bottom out in the explicit SIMD
+// micro-kernels of [`crate::jt::simd`] (8/4/1 fixed-width blocks behind
+// the on-by-default `simd` feature, plain loops without it). Every one is
+// element-wise — no cross-lane reduction — so the SIMD path is
+// bit-identical to the scalar path by construction; the test suites here
+// and in `simd` pin that byte-for-byte.
+
+use crate::jt::simd;
 
 /// Case-major marginalization: `dst[map[i]*L + b] += src[i*L + b]` for
 /// every entry `i` and occupied lane `b < occ`. `dst` must be pre-zeroed
@@ -222,9 +231,7 @@ pub fn marg_with_map_cases(src: &[f64], map: &[u32], lanes: usize, occ: usize, d
     for (i, &m) in map.iter().enumerate() {
         let d = &mut dst[m as usize * lanes..m as usize * lanes + occ];
         let s = &src[i * lanes..i * lanes + occ];
-        for (dv, &sv) in d.iter_mut().zip(s) {
-            *dv += sv;
-        }
+        simd::add_assign(d, s);
     }
 }
 
@@ -237,9 +244,7 @@ pub fn ext_with_map_cases(dst: &mut [f64], map: &[u32], lanes: usize, occ: usize
     for (i, &m) in map.iter().enumerate() {
         let r = &ratio[m as usize * lanes..m as usize * lanes + occ];
         let d = &mut dst[i * lanes..i * lanes + occ];
-        for (dv, &rv) in d.iter_mut().zip(r) {
-            *dv *= rv;
-        }
+        simd::mul_assign(d, r);
     }
 }
 
@@ -268,10 +273,7 @@ pub fn marg_runs_cases_range(
         let m = rm.map[r] as usize;
         let d = &mut dst[m * lanes..m * lanes + occ];
         for i in lo..hi {
-            let s = &src[i * lanes..i * lanes + occ];
-            for (dv, &sv) in d.iter_mut().zip(s) {
-                *dv += sv;
-            }
+            simd::add_assign(d, &src[i * lanes..i * lanes + occ]);
         }
     }
 }
@@ -300,10 +302,7 @@ pub fn extend_runs_cases_range(
         let m = rm.map[r] as usize;
         let f = &ratio[m * lanes..m * lanes + occ];
         for i in lo..hi {
-            let d = &mut dst[i * lanes..i * lanes + occ];
-            for (dv, &fv) in d.iter_mut().zip(f) {
-                *dv *= fv;
-            }
+            simd::mul_assign(&mut dst[i * lanes..i * lanes + occ], f);
         }
     }
 }
@@ -315,10 +314,9 @@ pub fn extend_runs_cases_range(
 pub fn sum_cases(xs: &[f64], lanes: usize, acc: &mut [f64]) {
     debug_assert!(acc.len() <= lanes && !acc.is_empty());
     debug_assert_eq!(xs.len() % lanes, 0);
+    let occ = acc.len();
     for row in xs.chunks_exact(lanes) {
-        for (a, &x) in acc.iter_mut().zip(row) {
-            *a += x;
-        }
+        simd::add_assign(acc, &row[..occ]);
     }
 }
 
@@ -329,10 +327,54 @@ pub fn sum_cases(xs: &[f64], lanes: usize, acc: &mut [f64]) {
 pub fn scale_cases(xs: &mut [f64], lanes: usize, factors: &[f64]) {
     debug_assert!(factors.len() <= lanes && !factors.is_empty());
     debug_assert_eq!(xs.len() % lanes, 0);
+    let occ = factors.len();
     for row in xs.chunks_exact_mut(lanes) {
-        for (x, &f) in row.iter_mut().zip(factors) {
-            *x *= f;
-        }
+        simd::mul_assign(&mut row[..occ], factors);
+    }
+}
+
+/// Case-major **max**-marginalization — the max-product analog of
+/// [`marg_with_map_cases`] used by the batched MPE upward pass:
+/// `dst[map[i]*L + b] = max(dst[map[i]*L + b], src[i*L + b])` for occupied
+/// lanes `b < occ`, with the same strictly-greater comparison as the
+/// single-case [`crate::jt::mpe`] kernel. `dst` must be pre-zeroed in its
+/// occupied lanes (potentials are nonnegative, so 0 is the identity).
+#[inline]
+pub fn max_with_map_cases(src: &[f64], map: &[u32], lanes: usize, occ: usize, dst: &mut [f64]) {
+    debug_assert_eq!(src.len(), map.len() * lanes);
+    debug_assert!(occ <= lanes && occ > 0);
+    for (i, &m) in map.iter().enumerate() {
+        let d = &mut dst[m as usize * lanes..m as usize * lanes + occ];
+        let s = &src[i * lanes..i * lanes + occ];
+        simd::max_assign(d, s);
+    }
+}
+
+/// Per-lane maxima of a lane-expanded table: `acc[b] = max(acc[b],
+/// xs[i*L + b])` over every entry `i`. Occupancy is `acc.len()`; seed the
+/// accumulator with `0.0` to mirror the single-case peak fold over
+/// nonnegative potentials.
+#[inline]
+pub fn max_cases(xs: &[f64], lanes: usize, acc: &mut [f64]) {
+    debug_assert!(acc.len() <= lanes && !acc.is_empty());
+    debug_assert_eq!(xs.len() % lanes, 0);
+    let occ = acc.len();
+    for row in xs.chunks_exact(lanes) {
+        simd::max_assign(acc, &row[..occ]);
+    }
+}
+
+/// Per-lane peak rescale of a lane-expanded table: `xs[i*L + b] /=
+/// divisors[b]`. Occupancy is `divisors.len()` — lanes beyond it are left
+/// untouched. Division (not multiplication by a reciprocal) so a batched
+/// MPE peak rescale is bit-identical to the single-case `*x /= peak`.
+#[inline]
+pub fn scale_max_cases(xs: &mut [f64], lanes: usize, divisors: &[f64]) {
+    debug_assert!(divisors.len() <= lanes && !divisors.is_empty());
+    debug_assert_eq!(xs.len() % lanes, 0);
+    let occ = divisors.len();
+    for row in xs.chunks_exact_mut(lanes) {
+        simd::div_assign(&mut row[..occ], divisors);
     }
 }
 
@@ -707,6 +749,141 @@ mod tests {
                 assert!((scaled[idx] - expect).abs() < 1e-12, "scale entry {i} lane {b}");
             }
         }
+    }
+
+    /// The bit-exactness contract behind the explicit SIMD layer: every
+    /// batched kernel returns the **exact f64 bit pattern** of its scalar
+    /// per-lane twin, across lane widths spanning the whole 8/4/1
+    /// dispatch ladder and both full and partial occupancy. The source
+    /// tables include exact zeros (evidence-killed entries), so the
+    /// comparison also covers the degenerate values the sweeps produce.
+    /// CI runs this under `--features simd` and `--no-default-features`.
+    #[test]
+    fn case_kernels_bit_identical_to_scalar_per_lane_at_every_width() {
+        use crate::jt::mapping::build_run_map;
+        let src_vars = [0usize, 1, 2];
+        let src_cards = [2usize, 3, 4];
+        let dst_vars = [1usize];
+        let dst_cards = [3usize];
+        let map = build_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+        let rm = build_run_map(&src_vars, &src_cards, &dst_vars, &dst_cards);
+        let n = 24usize;
+        for &lanes in &[1usize, 3, 4, 7, 8, 64] {
+            for occ in [1, lanes / 2, lanes] {
+                if occ == 0 || occ > lanes {
+                    continue;
+                }
+                let mut rng = Rng::new(0xB17 ^ ((lanes as u64) << 16) ^ occ as u64);
+                // per-lane scalar tables (lane b of the interleaved arena),
+                // with exact zeros sprinkled in
+                let lanes_src: Vec<Vec<f64>> = (0..occ)
+                    .map(|_| (0..n).map(|_| if rng.f64() < 0.2 { 0.0 } else { rng.f64() }).collect())
+                    .collect();
+                let mut batched = vec![0.0; n * lanes];
+                for (b, s) in lanes_src.iter().enumerate() {
+                    for (i, &x) in s.iter().enumerate() {
+                        batched[i * lanes + b] = x;
+                    }
+                }
+
+                // marg (map + runs): scalar oracle is the single-case kernel
+                let mut want_marg = vec![vec![0.0; 3]; occ];
+                for (b, s) in lanes_src.iter().enumerate() {
+                    marg_with_map(s, &map, &mut want_marg[b]);
+                }
+                let mut got = vec![0.0; 3 * lanes];
+                marg_with_map_cases(&batched, &map, lanes, occ, &mut got);
+                let mut got_runs = vec![0.0; 3 * lanes];
+                marg_runs_cases_range(&batched, &rm, lanes, occ, 0..n, &mut got_runs);
+                for j in 0..3 {
+                    for b in 0..occ {
+                        let w = want_marg[b][j].to_bits();
+                        assert_eq!(got[j * lanes + b].to_bits(), w, "marg L={lanes} occ={occ} {j}/{b}");
+                        assert_eq!(got_runs[j * lanes + b].to_bits(), w, "marg runs L={lanes} occ={occ} {j}/{b}");
+                    }
+                }
+
+                // max (map + reduce): same shape, strictly-greater compare
+                let mut want_max = vec![vec![0.0; 3]; occ];
+                for (b, s) in lanes_src.iter().enumerate() {
+                    for (i, &m) in map.iter().enumerate() {
+                        if s[i] > want_max[b][m as usize] {
+                            want_max[b][m as usize] = s[i];
+                        }
+                    }
+                }
+                let mut got_max = vec![0.0; 3 * lanes];
+                max_with_map_cases(&batched, &map, lanes, occ, &mut got_max);
+                for j in 0..3 {
+                    for b in 0..occ {
+                        assert_eq!(
+                            got_max[j * lanes + b].to_bits(),
+                            want_max[b][j].to_bits(),
+                            "max L={lanes} occ={occ} {j}/{b}"
+                        );
+                    }
+                }
+                let mut peaks = vec![0.0; occ];
+                max_cases(&batched, lanes, &mut peaks);
+                for (b, peak) in peaks.iter().enumerate() {
+                    let want = lanes_src[b].iter().cloned().fold(0.0f64, f64::max);
+                    assert_eq!(peak.to_bits(), want.to_bits(), "peak L={lanes} occ={occ} lane {b}");
+                }
+
+                // sum / scale / peak-divide: oracle is the scalar fold
+                let mut sums = vec![0.0; occ];
+                sum_cases(&batched, lanes, &mut sums);
+                for (b, s) in sums.iter().enumerate() {
+                    assert_eq!(s.to_bits(), lanes_src[b].iter().sum::<f64>().to_bits(), "sum lane {b}");
+                }
+                let factors: Vec<f64> = (0..occ).map(|b| 0.5 + b as f64).collect();
+                let mut scaled = batched.clone();
+                scale_cases(&mut scaled, lanes, &factors);
+                let divisors: Vec<f64> = peaks.iter().map(|p| p.max(1.0)).collect();
+                let mut divided = batched.clone();
+                scale_max_cases(&mut divided, lanes, &divisors);
+                // ext: lane-expanded ratio, zeros included
+                let ratio_lanes: Vec<f64> =
+                    (0..3 * lanes).map(|k| if k % 5 == 0 { 0.0 } else { 0.25 + k as f64 * 0.1 }).collect();
+                let mut extended = batched.clone();
+                ext_with_map_cases(&mut extended, &map, lanes, occ, &ratio_lanes);
+                let mut extended_runs = batched.clone();
+                extend_runs_cases_range(&mut extended_runs, &rm, lanes, occ, 0..n, &ratio_lanes);
+                for i in 0..n {
+                    for b in 0..occ {
+                        let idx = i * lanes + b;
+                        let x = lanes_src[b][i];
+                        assert_eq!(scaled[idx].to_bits(), (x * factors[b]).to_bits(), "scale {i}/{b}");
+                        assert_eq!(divided[idx].to_bits(), (x / divisors[b]).to_bits(), "divide {i}/{b}");
+                        let r = ratio_lanes[map[i] as usize * lanes + b];
+                        assert_eq!(extended[idx].to_bits(), (x * r).to_bits(), "ext {i}/{b}");
+                        assert_eq!(extended_runs[idx].to_bits(), (x * r).to_bits(), "ext runs {i}/{b}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_kernels_leave_unoccupied_lanes_untouched() {
+        let (lanes, occ) = (4usize, 2usize);
+        // 2 entries → 1 sep slot (map all-zero)
+        let map = vec![0u32, 0];
+        let src = [1.0, 9.0, 9.0, 9.0, 3.0, 2.0, 9.0, 9.0];
+        let mut dst = vec![-7.0; lanes];
+        for b in 0..occ {
+            dst[b] = 0.0;
+        }
+        max_with_map_cases(&src, &map, lanes, occ, &mut dst);
+        assert_eq!(dst, vec![3.0, 9.0, -7.0, -7.0]);
+        let mut xs = src;
+        scale_max_cases(&mut xs, lanes, &[3.0, 2.0]);
+        assert_eq!(xs[0], 1.0 / 3.0);
+        assert_eq!(xs[1], 4.5);
+        assert_eq!(xs[2], 9.0, "unoccupied lane scaled");
+        let mut peaks = vec![0.0; occ];
+        max_cases(&src, lanes, &mut peaks);
+        assert_eq!(peaks, vec![3.0, 9.0]);
     }
 
     #[test]

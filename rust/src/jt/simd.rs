@@ -1,0 +1,223 @@
+//! Explicit SIMD lane micro-kernels for the case-major batched tier.
+//!
+//! The lane-interleaved arena ([`crate::jt::state::BatchState`]) stores
+//! entry `i`, case `b` at `i*lanes + b`, so every batched kernel in
+//! [`crate::jt::ops`] bottoms out in a short element-wise loop over a
+//! contiguous `&[f64]` lane slice. Those loops *should* auto-vectorize,
+//! but nothing guarantees the compiler actually does — this module makes
+//! the vector shape explicit: each operation is driven through fixed-width
+//! `[f64; 8]` blocks, then `[f64; 4]` blocks, then a scalar tail. Stable
+//! Rust guarantees nothing about instruction selection either, but a
+//! fixed-size array of independent element-wise ops is the canonical
+//! shape LLVM turns into vector instructions at every `-C opt-level`
+//! worth using, and the 8/4/1 ladder keeps partial-occupancy slices
+//! (`occ < lanes`) on the widest block they fit.
+//!
+//! **Bit-identity is by construction, not by luck.** Every kernel here is
+//! per-element — `dst[i] op= src[i]` with no cross-element reduction — so
+//! blocking the loop changes *which registers* hold the values, never the
+//! sequence of floating-point operations applied to any one element.
+//! SIMD output is therefore bit-identical to the scalar twin, and the
+//! repo's bitwise-determinism contract survives vectorization. The
+//! `scalar` submodule keeps the plain loops compiled in every
+//! configuration so tests (and `benches/kernels.rs`) can assert exactly
+//! that, byte for byte.
+//!
+//! Selection is compile-time: the on-by-default `simd` cargo feature
+//! routes the public names at the blocked drivers; `--no-default-features`
+//! routes them at `scalar` — the pure-std zero-dependency build is
+//! untouched either way (no `std::simd`, no arch intrinsics, no nightly).
+
+/// Preferred lane-width multiple for batched chunk boundaries: the widest
+/// block the drivers use. Chunk splits aligned to this never cut a full
+/// 8-wide block into scalar-tail work mid-table (see
+/// [`crate::engine::pool::chunk_ranges_aligned`]).
+pub const LANE_WIDTH: usize = 8;
+
+/// Generate one lane-wise `dst op= src` kernel: 8-wide blocks, then
+/// 4-wide on the remainder, then a scalar tail. `$body` is the
+/// per-element statement over `$d: &mut f64`, `$s: f64`.
+macro_rules! lanewise {
+    ($(#[$doc:meta])* $name:ident, |$d:ident, $s:ident| $body:expr) => {
+        $(#[$doc])*
+        #[inline]
+        pub fn $name(dst: &mut [f64], src: &[f64]) {
+            debug_assert_eq!(dst.len(), src.len());
+            let mut d8 = dst.chunks_exact_mut(8);
+            let mut s8 = src.chunks_exact(8);
+            for (db, sb) in d8.by_ref().zip(s8.by_ref()) {
+                let db: &mut [f64; 8] = db.try_into().unwrap();
+                let sb: &[f64; 8] = sb.try_into().unwrap();
+                for k in 0..8 {
+                    let $d = &mut db[k];
+                    let $s = sb[k];
+                    $body;
+                }
+            }
+            let mut d4 = d8.into_remainder().chunks_exact_mut(4);
+            let mut s4 = s8.remainder().chunks_exact(4);
+            for (db, sb) in d4.by_ref().zip(s4.by_ref()) {
+                let db: &mut [f64; 4] = db.try_into().unwrap();
+                let sb: &[f64; 4] = sb.try_into().unwrap();
+                for k in 0..4 {
+                    let $d = &mut db[k];
+                    let $s = sb[k];
+                    $body;
+                }
+            }
+            for ($d, &$s) in d4.into_remainder().iter_mut().zip(s4.remainder()) {
+                $body;
+            }
+        }
+    };
+}
+
+/// Plain-loop twins of every blocked kernel, compiled in **every** feature
+/// configuration: with `simd` off they *are* the public kernels; with
+/// `simd` on they are the reference the bit-exactness suite and
+/// `benches/kernels.rs` compare the blocked drivers against.
+pub mod scalar {
+    /// `dst[k] += src[k]`.
+    #[inline]
+    pub fn add_assign(dst: &mut [f64], src: &[f64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+    }
+
+    /// `dst[k] *= src[k]`.
+    #[inline]
+    pub fn mul_assign(dst: &mut [f64], src: &[f64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d *= s;
+        }
+    }
+
+    /// `dst[k] /= src[k]`.
+    #[inline]
+    pub fn div_assign(dst: &mut [f64], src: &[f64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d /= s;
+        }
+    }
+
+    /// `dst[k] = src[k]` when strictly greater (same comparison as the
+    /// single-case max-product kernels in [`crate::jt::mpe`]).
+    #[inline]
+    pub fn max_assign(dst: &mut [f64], src: &[f64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        for (d, &s) in dst.iter_mut().zip(src) {
+            if s > *d {
+                *d = s;
+            }
+        }
+    }
+}
+
+/// The blocked 8/4/1 drivers (selected by the `simd` feature).
+#[cfg(feature = "simd")]
+mod wide {
+    lanewise!(
+        /// `dst[k] += src[k]`, in fixed-width blocks.
+        add_assign,
+        |d, s| *d += s
+    );
+    lanewise!(
+        /// `dst[k] *= src[k]`, in fixed-width blocks.
+        mul_assign,
+        |d, s| *d *= s
+    );
+    lanewise!(
+        /// `dst[k] /= src[k]`, in fixed-width blocks.
+        div_assign,
+        |d, s| *d /= s
+    );
+    lanewise!(
+        /// `dst[k] = src[k]` when strictly greater, in fixed-width blocks.
+        max_assign,
+        |d, s| {
+            if s > *d {
+                *d = s;
+            }
+        }
+    );
+}
+
+#[cfg(feature = "simd")]
+pub use wide::{add_assign, div_assign, max_assign, mul_assign};
+
+#[cfg(not(feature = "simd"))]
+pub use scalar::{add_assign, div_assign, max_assign, mul_assign};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Slice lengths crossing every dispatch tier: scalar tail only,
+    /// exactly one 4-block, 4-block + tail, exactly one 8-block, 8 + tail,
+    /// 8 + 4, 8 + 4 + tail, and a long mixed run.
+    const LENS: [usize; 10] = [1, 2, 3, 4, 7, 8, 11, 12, 15, 64];
+
+    fn pair(len: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let d: Vec<f64> = (0..len).map(|_| rng.f64() * 4.0 - 2.0).collect();
+        let s: Vec<f64> = (0..len).map(|_| rng.f64() * 4.0 - 2.0).collect();
+        (d, s)
+    }
+
+    /// The selected kernels are **bit-identical** to the plain scalar
+    /// loops at every length across the 8/4/1 dispatch ladder — the
+    /// contract that lets the batched tier vectorize without touching the
+    /// repo's bitwise-determinism guarantees. (With `simd` off the two
+    /// sides are the same function; CI runs both feature configs.)
+    #[test]
+    fn blocked_kernels_bit_identical_to_scalar() {
+        type Kernel = (&'static str, fn(&mut [f64], &[f64]), fn(&mut [f64], &[f64]));
+        let kernels: [Kernel; 4] = [
+            ("add", add_assign, scalar::add_assign),
+            ("mul", mul_assign, scalar::mul_assign),
+            ("div", div_assign, scalar::div_assign),
+            ("max", max_assign, scalar::max_assign),
+        ];
+        for (name, blocked, plain) in kernels {
+            for (case, &len) in LENS.iter().enumerate() {
+                let (d0, s) = pair(len, 0xC0FFEE ^ ((case as u64) << 8));
+                let mut got = d0.clone();
+                blocked(&mut got, &s);
+                let mut want = d0.clone();
+                plain(&mut want, &s);
+                for k in 0..len {
+                    assert_eq!(
+                        got[k].to_bits(),
+                        want[k].to_bits(),
+                        "{name} len {len} element {k}: {} != {}",
+                        got[k],
+                        want[k]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn div_by_zero_and_zero_operands_follow_ieee() {
+        // the kernels are raw IEEE ops — the 0/0 → 0 junction-tree
+        // convention lives in ops::ratio / the lane finish, not here
+        let mut d = vec![1.0, 0.0, -3.0];
+        div_assign(&mut d, &[0.0, 0.0, 1.5]);
+        assert_eq!(d[0], f64::INFINITY);
+        assert!(d[1].is_nan());
+        assert_eq!(d[2], -2.0);
+    }
+
+    #[test]
+    fn max_assign_keeps_dst_on_ties_and_nan_src() {
+        let mut d = vec![1.0, 2.0, 3.0];
+        max_assign(&mut d, &[1.0, f64::NAN, 5.0]);
+        assert_eq!(d, vec![1.0, 2.0, 5.0]);
+    }
+}

@@ -273,6 +273,13 @@ impl BatchState {
         &self.data[r.start * self.lanes..r.end * self.lanes]
     }
 
+    /// Separator `s`'s lane-expanded table, mutable.
+    #[inline]
+    pub fn sep_mut(&mut self, s: usize) -> &mut [f64] {
+        let r = self.layout.sep_range(s);
+        &mut self.data[r.start * self.lanes..r.end * self.lanes]
+    }
+
     /// One lane of clique `c`, gathered into a fresh Vec (test/debug aid;
     /// the hot path never gathers).
     pub fn lane_of_clique(&self, c: usize, lane: usize) -> Vec<f64> {
