@@ -2,11 +2,13 @@
 #
 #   make build      release build of the fastbn crate (pure-std, offline-safe)
 #   make test       tier-1: cargo test; then the python suite (skips if no pytest)
-#   make bench      run all ten bench targets (criterion-lite, harness=false)
+#   make bench      run all eleven bench targets (criterion-lite, harness=false)
 #   make bench-json refresh the perf-trajectory artifacts: BENCH_approx.json
 #                   (approx-tier sample-count × thread sweep vs the exact
-#                   engine) and BENCH_kernels.json (lane micro-kernel sweep,
-#                   blocked SIMD drivers vs their scalar twins)
+#                   engine), BENCH_kernels.json (lane micro-kernel sweep,
+#                   blocked SIMD drivers vs their scalar twins), and
+#                   BENCH_obs.json (tracer/profiler armed-vs-disarmed
+#                   query-path overhead)
 #   make kernel-smoke run the kernel bit-exactness suites (lane kernels,
 #                   case-major ops, batched MPE vs single-case) under both
 #                   the default `simd` feature and --no-default-features
@@ -28,6 +30,11 @@
 #                   socket (counters and histogram counts must match the
 #                   queries), then a 2-backend cluster whose front-tier
 #                   METRICS must merge every backend's scrape
+#   make profile-smoke drive the parallelism profiler + correlated tracing:
+#                   PROFILE on a live hybrid fleet (per-worker busy lanes,
+#                   imbalance within the worker bound), then a 2-backend
+#                   cluster front that mints qids and replays one query's
+#                   cross-tier timeline via TRACE q<n>
 #   make artifacts  AOT-lower the Pallas/JAX kernels to HLO-text artifacts
 #                   (needs the python deps in python/requirements.txt)
 #   make fmt        rustfmt the workspace
@@ -39,7 +46,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-json kernel-smoke serve-smoke batch-smoke cluster-smoke learn-smoke approx-smoke metrics-smoke artifacts fmt lint test-xla clean
+.PHONY: build test bench bench-json kernel-smoke serve-smoke batch-smoke cluster-smoke learn-smoke approx-smoke metrics-smoke profile-smoke artifacts fmt lint test-xla clean
 
 build:
 	$(CARGO) build --release
@@ -61,13 +68,15 @@ bench:
 	$(CARGO) bench
 
 # perf-trajectory artifacts: the approx bench writes its sweep (cost +
-# accuracy vs the exact engine) and the kernels bench writes its lane
-# micro-kernel sweep (blocked SIMD drivers vs scalar twins) as
-# stable-schema JSON. CI regenerates and uploads both on every push; the
-# committed copies are the schema baselines.
+# accuracy vs the exact engine), the kernels bench its lane micro-kernel
+# sweep (blocked SIMD drivers vs scalar twins), and the obs bench its
+# telemetry-overhead sweep (tracer/profiler armed vs disarmed) as
+# stable-schema JSON. CI regenerates and uploads all three on every push;
+# the committed copies are the schema baselines.
 bench-json:
 	FASTBN_BENCH_JSON=$(CURDIR)/BENCH_approx.json $(CARGO) bench --bench approx
 	FASTBN_BENCH_JSON=$(CURDIR)/BENCH_kernels.json $(CARGO) bench --bench kernels
+	FASTBN_BENCH_JSON=$(CURDIR)/BENCH_obs.json $(CARGO) bench --bench obs
 
 # kernel bit-exactness smoke: the lane-kernel, case-major-ops, and
 # batched-MPE suites pin the SIMD path byte-for-byte against the scalar
@@ -125,6 +134,18 @@ approx-smoke:
 metrics-smoke:
 	$(CARGO) run --release -- serve --fleet --shards 1 --slow-query-ms 1000 --bind 127.0.0.1:0 --metrics-smoke
 	$(CARGO) run --release -- cluster --backends 2 --shards 1 --bind 127.0.0.1:0 --metrics-smoke
+
+# hybrid-parallelism profiler smoke, both tiers. Fleet: --profile-smoke
+# arms the pool profiler on a live hybrid server, runs QUERYs against a
+# net with real parallel work (hailfinder-sim), and asserts the PROFILE
+# report shows non-zero busy lanes with imbalance inside [1, workers].
+# Cluster: --profile-smoke turns on cluster-correlated tracing (front
+# mints a qid per query, backends tag their span rings), replays one
+# query's cross-tier timeline via TRACE q<n> (exactly one backend
+# timeline), then merges every backend's PROFILE report.
+profile-smoke:
+	$(CARGO) run --release -- serve --fleet --engine hybrid --threads 2 --shards 1 --bind 127.0.0.1:0 --profile-smoke
+	$(CARGO) run --release -- cluster --backends 2 --shards 1 --bind 127.0.0.1:0 --profile-smoke
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts

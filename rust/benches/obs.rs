@@ -1,0 +1,125 @@
+//! Bench: **observability overhead** — the query-path cost of the span
+//! tracer and the pool parallelism profiler, armed vs disarmed. The
+//! disarmed contract is "one relaxed load per query / per region entry";
+//! this sweep puts a number on it, and on the armed collection cost the
+//! `TRACE`/`PROFILE` verbs buy (two clock reads + two relaxed adds per
+//! claimed task).
+//!
+//! Modes per net × thread count, hybrid engine: `off` (both toggles down
+//! — the production default), `trace` (span recording into the global
+//! ring), `profile` (per-task busy/task tallies in every pool region),
+//! `both`. Overhead is each mode's mean latency over `off`'s.
+//!
+//! When `FASTBN_BENCH_JSON` names a path (`make bench-json` →
+//! `BENCH_obs.json`) the sweep is written as JSON with a stable schema;
+//! the CI perf-trajectory job shape-checks and uploads it on every push,
+//! so telemetry-cost regressions show up as a trend across commits.
+//!
+//! Scale knobs: FASTBN_OBS_NETS (comma list, default asia,hailfinder-sim)
+//! and FASTBN_OBS_THREADS (comma list, default 2).
+
+use std::sync::Arc;
+
+use fastbn::bench::{print_table, Bench};
+use fastbn::engine::{EngineConfig, EngineKind};
+use fastbn::jt::evidence::Evidence;
+use fastbn::jt::state::TreeState;
+use fastbn::jt::tree::JunctionTree;
+use fastbn::jt::triangulate::TriangulationHeuristic;
+use fastbn::obs::{profile, trace};
+
+fn env_list(name: &str, default: &[&str]) -> Vec<String> {
+    std::env::var(name)
+        .ok()
+        .map(|v| v.split(',').map(|t| t.trim().to_string()).filter(|t| !t.is_empty()).collect::<Vec<_>>())
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| default.iter().map(|s| s.to_string()).collect())
+}
+
+struct Point {
+    net: String,
+    threads: usize,
+    mode: &'static str,
+    mean_ms: f64,
+    overhead_pct: f64,
+}
+
+/// (mode label, tracer enabled, profiler armed) — `off` must come first:
+/// it is the baseline the other modes' overhead is computed against.
+const MODES: [(&str, bool, bool); 4] =
+    [("off", false, false), ("trace", true, false), ("profile", false, true), ("both", true, true)];
+
+/// Render the perf-trajectory artifact. The schema is a contract: the CI
+/// job diffs this shape against the committed `BENCH_obs.json`, so
+/// additions must keep every existing key.
+fn render_json(points: &[Point]) -> String {
+    let mut out = String::from("{\n  \"bench\": \"obs\",\n  \"schema_version\": 1,\n");
+    out.push_str("  \"provenance\": \"measured (cargo bench --bench obs)\",\n");
+    out.push_str("  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"net\": \"{}\", \"threads\": {}, \"mode\": \"{}\", \"mean_ms\": {:.4}, \"overhead_pct\": {:.1}}}{}\n",
+            p.net,
+            p.threads,
+            p.mode,
+            p.mean_ms,
+            p.overhead_pct,
+            if i + 1 < points.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let nets = env_list("FASTBN_OBS_NETS", &["asia", "hailfinder-sim"]);
+    let threads: Vec<usize> = env_list("FASTBN_OBS_THREADS", &["2"]).iter().filter_map(|t| t.parse().ok()).collect();
+    let runner = Bench::new(3, 9);
+
+    let mut points: Vec<Point> = Vec::new();
+    let mut rows = Vec::new();
+    for spec in &nets {
+        let net = fastbn::bn::resolve_spec(spec).expect("resolvable net spec");
+        let jt = Arc::new(JunctionTree::compile(&net, TriangulationHeuristic::MinFill).expect("net compiles"));
+        let ev = Evidence::from_pairs(&net, &[(net.vars[0].name.as_str(), net.vars[0].states[0].as_str())])
+            .expect("first variable's first state is valid evidence");
+        for &t in &threads {
+            let cfg = EngineConfig::default().with_threads(t);
+            let mut engine = EngineKind::Hybrid.build(Arc::clone(&jt), &cfg);
+            let mut state = TreeState::fresh(&jt);
+            let mut base_ms = 0.0;
+            for (mode, trace_on, profile_on) in MODES {
+                trace::set_enabled(trace_on);
+                profile::set_armed(profile_on);
+                let stat = runner.run(|| {
+                    let post = engine.infer(&mut state, &ev).expect("inference succeeds");
+                    std::hint::black_box(post.log_z);
+                });
+                trace::set_enabled(false);
+                profile::set_armed(false);
+                if mode == "off" {
+                    base_ms = stat.mean_ms();
+                }
+                let overhead_pct = if base_ms > 0.0 { (stat.mean_ms() / base_ms - 1.0) * 100.0 } else { 0.0 };
+                rows.push(vec![
+                    spec.clone(),
+                    format!("{t}"),
+                    mode.to_string(),
+                    format!("{:.4}", stat.mean_ms()),
+                    format!("{overhead_pct:+.1}%"),
+                ]);
+                points.push(Point { net: spec.clone(), threads: t, mode, mean_ms: stat.mean_ms(), overhead_pct });
+            }
+        }
+    }
+    print_table(
+        "observability overhead — tracer/profiler armed vs disarmed (hybrid engine)",
+        &["net", "threads", "mode", "mean_ms", "overhead"],
+        &rows,
+    );
+
+    if let Ok(path) = std::env::var("FASTBN_BENCH_JSON") {
+        std::fs::write(&path, render_json(&points)).expect("write bench JSON");
+        println!("\nwrote {path}");
+    }
+}

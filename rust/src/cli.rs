@@ -13,11 +13,12 @@
 //!                  [--save-data d.csv] | --data d.csv [--name NAME] [--out net.bif]
 //! fastbn serve     --net <spec> [--bind 127.0.0.1:7979] [--engine hybrid] [--threads N]
 //! fastbn serve     --nets a,b,c [--shards N] [--registry-cap K] [--batch B] [--bind ...] [--smoke] [--batch-smoke]
-//!                  [--max-exact-cost C] [--samples N] [--approx-smoke] [--metrics-smoke]
+//!                  [--max-exact-cost C] [--samples N] [--approx-smoke] [--metrics-smoke] [--profile-smoke]
 //!                  [--slow-query-ms T] [--metrics-interval SECS]
 //! fastbn cluster   --backends N [--nets a,b,c] [--shards S] [--replicas R] [--vnodes V]
 //!                  [--join-hosts h:p,...] [--bind ...] [--smoke]
-//!                  [--max-exact-cost C] [--samples N] [--metrics-smoke]
+//!                  [--max-exact-cost C] [--samples N] [--metrics-smoke] [--profile-smoke]
+//! fastbn profile   --net <spec> [--queries K] [--engine hybrid] [--threads N] [--evidence a=x,b=y]
 //! fastbn simulate  --net <spec> [--threads 1,2,4,8,16,32]
 //! fastbn selftest
 //! ```
@@ -59,8 +60,10 @@ pub struct Args {
 
 /// Flags that are boolean switches: present or absent, never taking a
 /// value. Everything else must be followed by one.
-const SWITCHES: &[&str] =
-    &["smoke", "fleet", "parent-watch", "batch-smoke", "learn-smoke", "approx-smoke", "metrics-smoke"];
+const SWITCHES: &[&str] = &[
+    "smoke", "fleet", "parent-watch", "batch-smoke", "learn-smoke", "approx-smoke", "metrics-smoke",
+    "profile-smoke",
+];
 
 impl Args {
     /// Parse from raw argv (after the subcommand).
@@ -166,6 +169,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "learn" => cmd_learn(&args),
         "serve" => cmd_serve(&args),
         "cluster" => cmd_cluster(&args),
+        "profile" => cmd_profile(&args),
         "simulate" => cmd_simulate(&args),
         "selftest" => cmd_selftest(),
         "help" | "--help" | "-h" => {
@@ -207,8 +211,9 @@ COMMANDS:
                                      --registry-cap K, --batch B lanes/shard
                                      with --engine batched, --smoke and
                                      --batch-smoke / --learn-smoke /
-                                     --approx-smoke / --metrics-smoke
-                                     self-checks; --max-exact-cost C serves
+                                     --approx-smoke / --metrics-smoke /
+                                     --profile-smoke self-checks;
+                                     --max-exact-cost C serves
                                      networks whose estimated junction-tree
                                      cost exceeds C from the approximate tier,
                                      --samples per approx query;
@@ -217,17 +222,27 @@ COMMANDS:
                                      the metrics exposition to stderr);
                                      verbs: LOAD LEARN USE NETS OBSERVE
                                      RETRACT COMMIT QUERY MPE BATCH CASE
-                                     STATS METRICS TRACE PING EVICT QUIT
-                                     (BATCH <n> MPE batches max-product)
+                                     STATS METRICS TRACE PROFILE PING
+                                     EVICT QUIT (BATCH <n> MPE batches
+                                     max-product)
   cluster   --backends N             cross-process cluster tier: N fleet backend
                                      child processes + a consistent-hash front
                                      router (--nets preload, --shards, --replicas
                                      R owners per net, --vnodes ring points,
                                      --join-hosts h:p,... adopts already-running
-                                     fleets, --smoke / --metrics-smoke
-                                     scripted sessions; --max-exact-cost /
-                                     --samples forwarded to every backend);
-                                     adds verbs: PING TOPO METRICS JOIN HANDOFF
+                                     fleets, --smoke / --metrics-smoke /
+                                     --profile-smoke scripted sessions;
+                                     --max-exact-cost / --samples forwarded
+                                     to every backend); adds verbs: PING TOPO
+                                     METRICS TRACE PROFILE JOIN HANDOFF
+                                     (TRACE tags queries with cluster-minted
+                                     qids; TRACE q<n> replays one query's
+                                     cross-tier timeline)
+  profile   --net S                  arm the pool parallelism profiler + span
+                                     tracer, run --queries K inferences, and
+                                     report junction-tree phase times plus
+                                     per-worker busy/idle lanes (--engine,
+                                     --threads, --evidence)
   simulate  --net S                  modeled parallel times across --threads list
   selftest                           engine-agreement smoke check
   help                               this text
@@ -607,7 +622,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // this from child stdout to learn each backend's ephemeral port
         println!("FLEET READY addr={}", server.addr());
         println!(
-            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/MPE/BATCH/CASE/STATS/METRICS/TRACE/PING/EVICT/QUIT",
+            "serving fleet of {} nets × {} shards on {} with {} — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/MPE/BATCH/CASE/STATS/METRICS/TRACE/PROFILE/PING/EVICT/QUIT",
             fleet.loaded().len(),
             shards,
             server.addr(),
@@ -640,6 +655,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // with matching per-net counts, and TRACE must replay the
             // last query's span tree (make metrics-smoke)
             return metrics_smoke(&server);
+        }
+        if args.has("profile-smoke") {
+            // scripted parallelism-profiler self-check over a live socket:
+            // QUERYs under an armed PROFILE must report busy worker lanes
+            // and a bounded imbalance ratio (make profile-smoke)
+            return profile_smoke(&server);
         }
         // serve until killed
         loop {
@@ -922,6 +943,63 @@ fn metrics_smoke(server: &FleetServer) -> Result<()> {
     Ok(())
 }
 
+/// Drive the `PROFILE` verb through a live fleet socket: three QUERYs
+/// under an armed profiler must yield region report lines with non-zero
+/// busy time on at least one worker lane and a load-imbalance ratio
+/// bounded by the lane count — the fleet half of `make profile-smoke`.
+fn profile_smoke(server: &FleetServer) -> Result<()> {
+    // a mid-size suite net so per-lane busy time is comfortably measurable
+    let net = resolve_net("hailfinder-sim")?;
+    let (obs_var, obs_state) = (&net.vars[0].name, &net.vars[0].states[0]);
+    let target = &net.vars[net.n() - 1].name;
+
+    let mut client = SmokeClient::connect("profile-smoke", server.addr())?;
+    client.expect("LOAD hailfinder-sim", "OK loaded hailfinder-sim")?;
+    client.expect("USE hailfinder-sim", "OK using hailfinder-sim")?;
+    client.expect("PROFILE on", "OK profile on")?;
+    for _ in 0..3 {
+        client.expect(&format!("QUERY {target} | {obs_var}={obs_state}"), "OK ")?;
+    }
+    let (header, body) = client.ask_block("PROFILE")?;
+    if !header.starts_with("OK profile lines=") {
+        return Err(Error::msg(format!("profile-smoke failed: PROFILE header {header:?}")));
+    }
+    if body.is_empty() {
+        return Err(Error::msg("profile-smoke failed: no pool regions profiled (queries never hit the pool)"));
+    }
+    let mut busy_lanes = 0usize;
+    for line in &body {
+        let num = |key: &str| -> Result<f64> {
+            line.split_whitespace()
+                .find_map(|tok| tok.strip_prefix(key))
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| Error::msg(format!("profile-smoke failed: no numeric {key} in {line:?}")))
+        };
+        let workers = num("workers=")?;
+        let imbalance = num("imbalance=")?;
+        if imbalance < 1.0 - 1e-9 || imbalance > workers + 1e-9 {
+            return Err(Error::msg(format!(
+                "profile-smoke failed: imbalance {imbalance} outside [1, workers={workers}] in {line:?}"
+            )));
+        }
+        let busy = line
+            .split_whitespace()
+            .find_map(|tok| tok.strip_prefix("busy_us="))
+            .ok_or_else(|| Error::msg(format!("profile-smoke failed: no busy_us in {line:?}")))?;
+        busy_lanes += busy.split(',').filter(|v| *v != "0").count();
+    }
+    if busy_lanes == 0 {
+        return Err(Error::msg("profile-smoke failed: every worker lane reports zero busy time"));
+    }
+    client.expect("PROFILE off", "OK profile off")?;
+    client.quit()?;
+    println!(
+        "profile-smoke passed ({} regions, {busy_lanes} busy lanes, imbalance within the worker bound)",
+        body.len()
+    );
+    Ok(())
+}
+
 /// Drive the cluster-wide scrape through a live front-tier socket: the
 /// merged `METRICS` block must list every backend's labeled series and an
 /// aggregate query counter matching the interleaved QUERYs — the cluster
@@ -954,6 +1032,64 @@ fn cluster_metrics_smoke(server: &ClusterServer, specs: &[String], n_backends: u
     }
     client.quit()?;
     println!("cluster-metrics-smoke passed ({n_backends} backends scraped and merged)");
+    Ok(())
+}
+
+/// Drive the cluster-correlated tracing surface through a live front-tier
+/// socket: an armed `TRACE` must mint a qid for each `QUERY`, `TRACE
+/// <qid>` must assemble exactly one cross-tier timeline (front route →
+/// owning backend → its span tree), and the merged `PROFILE` scrape must
+/// prefix every region line with its backend — the cluster half of
+/// `make profile-smoke`.
+fn cluster_profile_smoke(server: &ClusterServer, specs: &[String], n_backends: usize) -> Result<()> {
+    let net = resolve_net(&specs[0])?;
+    let target = &net.vars[net.n() - 1].name;
+
+    let mut client = SmokeClient::connect("cluster-profile-smoke", server.addr())?;
+    client.expect(&format!("USE {}", net.name), &format!("OK using {}", net.name))?;
+    client.expect("TRACE on", "OK trace on backends=")?;
+    let reply = client.expect(&format!("QUERY {target}"), "OK ")?;
+    let qid = reply
+        .split_whitespace()
+        .rev()
+        .find_map(|tok| tok.strip_prefix("qid="))
+        .ok_or_else(|| Error::msg(format!("cluster-profile-smoke failed: no qid= in QUERY reply {reply:?}")))?
+        .to_string();
+    let timeline = client.expect(&format!("TRACE {qid}"), &format!("OK trace qid={qid} "))?;
+    for want in ["net=", "backend=\"", "route_us=", "total_us="] {
+        if !timeline.contains(want) {
+            return Err(Error::msg(format!("cluster-profile-smoke failed: timeline {timeline:?} lacks {want}")));
+        }
+    }
+    // exactly one merged timeline: one backend tag, one span tree
+    let tags = timeline.matches("backend=\"").count();
+    if tags != 1 {
+        return Err(Error::msg(format!(
+            "cluster-profile-smoke failed: wanted exactly one backend timeline, got {tags}: {timeline:?}"
+        )));
+    }
+    // the merged PROFILE scrape labels every region line with its backend
+    client.expect("PROFILE on", "OK profile on backends=")?;
+    client.expect(&format!("QUERY {target}"), "OK ")?;
+    let (header, body) = client.ask_block("PROFILE")?;
+    let want_header = format!("OK profile backends={n_backends} lines=");
+    if !header.starts_with(&want_header) {
+        return Err(Error::msg(format!(
+            "cluster-profile-smoke failed: PROFILE header {header:?}, wanted prefix {want_header:?}"
+        )));
+    }
+    if body.is_empty() {
+        return Err(Error::msg("cluster-profile-smoke failed: no backend reported any profiled region"));
+    }
+    for line in &body {
+        if !line.starts_with("backend=\"") {
+            return Err(Error::msg(format!("cluster-profile-smoke failed: unlabeled PROFILE line {line:?}")));
+        }
+    }
+    client.expect("PROFILE off", "OK profile off backends=")?;
+    client.expect("TRACE off", "OK trace off backends=")?;
+    client.quit()?;
+    println!("cluster-profile-smoke passed ({n_backends} backends, qid {qid} traced cross-tier)");
     Ok(())
 }
 
@@ -1048,9 +1184,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let bind = args.get("bind").unwrap_or("127.0.0.1:7878");
     let smoke = args.has("smoke");
     let metrics_smoke = args.has("metrics-smoke");
+    let profile_smoke = args.has("profile-smoke");
     let specs: Vec<String> = match args.get("nets") {
         Some(text) => text.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect(),
-        None if smoke || metrics_smoke => vec!["asia".into(), "cancer".into()],
+        None if smoke || metrics_smoke || profile_smoke => vec!["asia".into(), "cancer".into()],
         None => Vec::new(),
     };
     if smoke && specs.len() < 2 {
@@ -1122,7 +1259,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     let server = ClusterServer::start(Arc::clone(&cluster), bind)?;
     println!(
-        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/MPE/BATCH/CASE/STATS/METRICS/PING/TOPO/JOIN/HANDOFF/QUIT",
+        "cluster front tier on {} over {n_backends} backends ({} nets) — verbs: LOAD/LEARN/USE/NETS/OBSERVE/RETRACT/COMMIT/QUERY/MPE/BATCH/CASE/STATS/METRICS/TRACE/PROFILE/PING/TOPO/JOIN/HANDOFF/QUIT",
         server.addr(),
         specs.len()
     );
@@ -1135,6 +1272,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     if metrics_smoke {
         let outcome = cluster_metrics_smoke(&server, &specs, n_backends);
+        server.shutdown();
+        cluster.shutdown();
+        children.kill_all();
+        return outcome;
+    }
+    if profile_smoke {
+        let outcome = cluster_profile_smoke(&server, &specs, n_backends);
         server.shutdown();
         cluster.shutdown();
         children.kill_all();
@@ -1180,6 +1324,78 @@ fn cluster_smoke(server: &ClusterServer, specs: &[String], n_backends: usize) ->
     run_script(server.addr(), &script)?;
     println!("cluster-smoke passed ({n_backends} backends, {} nets)", specs.len());
     Ok(())
+}
+
+/// `fastbn profile`: arm the pool parallelism profiler and the span
+/// tracer, compile the network and run `--queries` inferences locally,
+/// then report where the wall time went — junction-tree phases from the
+/// captured span trees (`jt.compile`, `hybrid.up`, `hybrid.down`, …) and
+/// per-worker lane busy/idle from the profiler store. The CLI face of
+/// the fleet's `PROFILE` verb.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let net = Arc::new(resolve_net(args.require("net")?)?);
+    let engine_kind: EngineKind = args.get("engine").unwrap_or("hybrid").parse()?;
+    let cfg = engine_config(args)?;
+    let queries = args.parse_or("queries", 16usize)?.max(1);
+    let ev = parse_evidence(&net, args.get("evidence"))?;
+
+    crate::obs::profile::set_armed(true);
+    crate::obs::trace::set_enabled(true);
+    let outcome = profile_window(&net, engine_kind, &cfg, queries, &ev);
+    let regions = crate::obs::profile::snapshot();
+    crate::obs::trace::set_enabled(false);
+    crate::obs::profile::set_armed(false);
+    let (compile_trace, query_trace, wall, engine_name) = outcome?;
+
+    println!("network: {}", net.stats());
+    println!(
+        "{queries} queries with {engine_name} in {wall:?} ({:.1} queries/s)",
+        queries as f64 / wall.as_secs_f64()
+    );
+    for (title, trace) in [("compile phases", &compile_trace), ("last query phases", &query_trace)] {
+        let Some(trace) = trace else { continue };
+        println!("{title} ({} µs total):", trace.total_us);
+        for s in &trace.spans {
+            let note = if s.note.is_empty() { String::new() } else { format!(" [{}]", s.note) };
+            println!("  {:>9} µs  {}{}{note}", s.dur_us, ". ".repeat(s.depth), s.name);
+        }
+    }
+    if regions.is_empty() {
+        println!("pool regions: none entered (sequential path — pass --threads 2 or more)");
+    } else {
+        println!("pool regions (per-worker lanes over the whole window):");
+        for p in &regions {
+            println!("  {}", p.render_line());
+        }
+    }
+    Ok(())
+}
+
+/// The measured window of [`cmd_profile`], split out so the arming
+/// toggles around the call wrap every early return.
+fn profile_window(
+    net: &Arc<Network>,
+    engine_kind: EngineKind,
+    cfg: &EngineConfig,
+    queries: usize,
+    ev: &Evidence,
+) -> Result<(Option<crate::obs::trace::Trace>, Option<crate::obs::trace::Trace>, std::time::Duration, String)> {
+    let (mut engine, mut state, compile_trace): (Box<dyn Engine>, TreeState, Option<crate::obs::trace::Trace>) =
+        if engine_kind == EngineKind::Approx {
+            // no junction tree: the approx engine samples the network
+            // directly, so only its round spans show up below
+            (Box::new(ApproxEngine::from_net(Arc::clone(net), cfg)), TreeState::detached(), None)
+        } else {
+            let jt = Arc::new(JunctionTree::compile(net, TriangulationHeuristic::MinFill)?);
+            let compile_trace = crate::obs::trace::last();
+            (engine_kind.build(Arc::clone(&jt), cfg), TreeState::fresh(&jt), compile_trace)
+        };
+    let t0 = std::time::Instant::now();
+    for _ in 0..queries {
+        engine.infer(&mut state, ev)?;
+    }
+    let wall = t0.elapsed();
+    Ok((compile_trace, crate::obs::trace::last(), wall, engine.name().to_string()))
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -1480,6 +1696,38 @@ mod tests {
         let outcome = run(argv);
         crate::obs::trace::set_enabled(false);
         crate::obs::trace::set_slow_query_us(0);
+        assert_eq!(outcome, 0);
+    }
+
+    #[test]
+    fn profile_command_reports_phases_and_lanes() {
+        // flips the process-wide profiler/tracer toggles; serialize with
+        // the other toggle-flipping tests and reset after
+        let _serialized = crate::obs::trace::TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let argv: Vec<String> = [
+            "profile", "--net", "asia", "--queries", "4", "--threads", "2", "--evidence", "smoke=yes",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let outcome = run(argv);
+        crate::obs::trace::set_enabled(false);
+        crate::obs::profile::set_armed(false);
+        assert_eq!(outcome, 0);
+    }
+
+    #[test]
+    fn profile_smoke_drives_the_verb_through_a_socket() {
+        let _serialized = crate::obs::trace::TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let argv: Vec<String> = [
+            "serve", "--fleet", "--shards", "1", "--engine", "hybrid", "--threads", "2",
+            "--bind", "127.0.0.1:0", "--profile-smoke",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let outcome = run(argv);
+        crate::obs::profile::set_armed(false);
         assert_eq!(outcome, 0);
     }
 

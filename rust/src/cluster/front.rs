@@ -26,9 +26,9 @@
 //! reply reaches the client, the network usually has a surviving replica
 //! promoted and a plain `USE` resumes service.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::net::SocketAddr;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 use std::time::{Duration, Instant};
 
@@ -101,6 +101,21 @@ struct State {
     next_backend_seq: usize,
 }
 
+/// One routed query made while tracing was armed: enough to steer
+/// `TRACE <qid>` back to the backend whose ring holds the span tree, and
+/// to prepend the front's routing cost to the assembled timeline.
+struct RouteRecord {
+    qid: String,
+    net: String,
+    backend: String,
+    /// Front-observed wall time for the whole routed round trip.
+    route_us: u64,
+}
+
+/// Bounded route history (oldest evicted) — sized to comfortably cover
+/// the backend trace rings it indexes into.
+const ROUTE_CAP: usize = 256;
+
 /// The cluster front tier. See the module docs for the locking story.
 pub struct Cluster {
     cfg: ClusterConfig,
@@ -110,6 +125,13 @@ pub struct Cluster {
     stop: Arc<AtomicBool>,
     prober: Mutex<Option<std::thread::JoinHandle<()>>>,
     started: Instant,
+    /// Cross-tier tracing armed (`TRACE on`): sessions mint a qid per
+    /// query and tag the forwarded line with it.
+    trace_armed: AtomicBool,
+    /// Monotonic qid counter (`q1`, `q2`, …).
+    qid_seq: AtomicU64,
+    /// Recent tagged-query routes, newest last.
+    routes: Mutex<VecDeque<RouteRecord>>,
 }
 
 enum ProbeAction {
@@ -132,6 +154,9 @@ impl Cluster {
             stop: Arc::new(AtomicBool::new(false)),
             prober: Mutex::new(None),
             started: Instant::now(),
+            trace_armed: AtomicBool::new(false),
+            qid_seq: AtomicU64::new(0),
+            routes: Mutex::new(VecDeque::new()),
             cfg,
         });
         let weak: Weak<Cluster> = Arc::downgrade(&cluster);
@@ -522,6 +547,14 @@ impl Cluster {
         st.backends.get(id).filter(|b| b.alive).map(|b| b.addr)
     }
 
+    /// Every alive backend with its address, sorted by id — the scrape
+    /// set for cluster-wide verbs (`NETS`/`STATS`/`METRICS`/`TRACE`/
+    /// `PROFILE`).
+    fn alive_targets(&self) -> Vec<(String, SocketAddr)> {
+        let st = self.state.lock().unwrap();
+        st.backends.iter().filter(|(_, b)| b.alive).map(|(id, b)| (id.clone(), b.addr)).collect()
+    }
+
     /// Post-hand-off cleanup: `EVICT` `name` from previous owners that
     /// are not in the new replica set and are still alive (a dead one has
     /// nothing to free; a revival's stale residents are routed around
@@ -729,10 +762,7 @@ impl Cluster {
     /// output is deterministic.
     pub fn nets_line(&self) -> String {
         let owners: BTreeMap<String, Vec<String>> = self.directory().into_iter().collect();
-        let targets: Vec<(String, SocketAddr)> = {
-            let st = self.state.lock().unwrap();
-            st.backends.iter().filter(|(_, b)| b.alive).map(|(id, b)| (id.clone(), b.addr)).collect()
-        };
+        let targets = self.alive_targets();
         let mut blocks: BTreeMap<String, String> = BTreeMap::new();
         for (id, addr) in &targets {
             let Ok(reply) = self.remote_line(*addr, "NETS") else { continue };
@@ -764,10 +794,7 @@ impl Cluster {
     /// served — is *reported* by marking the line `stats=partial` instead
     /// of silently blending a biased estimate into the headline.
     pub fn stats_line(&self) -> String {
-        let targets: Vec<(String, SocketAddr)> = {
-            let st = self.state.lock().unwrap();
-            st.backends.iter().filter(|(_, b)| b.alive).map(|(id, b)| (id.clone(), b.addr)).collect()
-        };
+        let targets = self.alive_targets();
         let owners: BTreeMap<String, Vec<String>> = self.directory().into_iter().collect();
         let mut per_net: BTreeMap<String, NetAgg> = BTreeMap::new();
         let mut scrapes: Vec<crate::obs::scrape::Scrape> = Vec::new();
@@ -834,10 +861,7 @@ impl Cluster {
     /// lines. Backends that fail to answer are simply absent from the
     /// scrape (and from `backends=`).
     pub fn metrics_line(&self) -> String {
-        let targets: Vec<(String, SocketAddr)> = {
-            let st = self.state.lock().unwrap();
-            st.backends.iter().filter(|(_, b)| b.alive).map(|(id, b)| (id.clone(), b.addr)).collect()
-        };
+        let targets = self.alive_targets();
         let mut parts: Vec<(String, String)> = Vec::new();
         for (id, addr) in &targets {
             let Ok((header, body)) = self.remote_block(*addr, "METRICS") else { continue };
@@ -850,6 +874,162 @@ impl Cluster {
             return format!("OK metrics backends={} lines=0", parts.len());
         }
         format!("OK metrics backends={} lines={}\n{merged}", parts.len(), merged.lines().count())
+    }
+
+    // ---- cross-tier tracing and profiling -------------------------------
+
+    /// Is cross-tier query tracing armed? (flipped by `TRACE on|off`.)
+    pub fn trace_armed(&self) -> bool {
+        self.trace_armed.load(Ordering::Relaxed)
+    }
+
+    /// Mint the next query id (`q1`, `q2`, …) when tracing is armed.
+    /// `None` when disarmed — the caller forwards the line untouched, so
+    /// disarmed replies stay byte-identical to an untraced cluster's.
+    pub fn mint_qid(&self) -> Option<String> {
+        if !self.trace_armed() {
+            return None;
+        }
+        Some(format!("q{}", self.qid_seq.fetch_add(1, Ordering::Relaxed) + 1))
+    }
+
+    /// Record where a tagged query ran (bounded history, oldest evicted).
+    pub fn record_route(&self, qid: &str, net: &str, backend: &str, route: Duration) {
+        let mut routes = self.routes.lock().unwrap();
+        if routes.len() >= ROUTE_CAP {
+            routes.pop_front();
+        }
+        routes.push_back(RouteRecord {
+            qid: qid.to_string(),
+            net: net.to_string(),
+            backend: backend.to_string(),
+            route_us: route.as_micros() as u64,
+        });
+    }
+
+    fn route_of(&self, qid: &str) -> Option<(String, String, u64)> {
+        let routes = self.routes.lock().unwrap();
+        routes.iter().rev().find(|r| r.qid == qid).map(|r| (r.net.clone(), r.backend.clone(), r.route_us))
+    }
+
+    /// The cluster `TRACE` verb, answered by the front. `on`/`off`
+    /// broadcast the recorder toggle to every alive backend (spans are
+    /// captured where the engines run) and arm/disarm front-side qid
+    /// minting; `last` scrapes every alive backend and returns the
+    /// freshest trace tagged `backend="id"` — spread reads mean the most
+    /// recent query may have run on *any* replica, so asking one owner is
+    /// not enough; `q<digits>` assembles the cross-tier timeline of one
+    /// tagged query (front route → owning backend → its span tree).
+    pub fn trace_line(&self, arg: &str) -> String {
+        match arg.to_ascii_lowercase().as_str() {
+            "on" => self.trace_toggle(true),
+            "off" => self.trace_toggle(false),
+            "last" => self.trace_last(),
+            qid if qid.len() > 1 && qid.starts_with('q') && qid[1..].bytes().all(|b| b.is_ascii_digit()) => {
+                self.trace_qid(qid)
+            }
+            _ => "ERR usage: TRACE <on|off|last|q<n>>".into(),
+        }
+    }
+
+    fn trace_toggle(&self, on: bool) -> String {
+        let word = if on { "on" } else { "off" };
+        let verb = format!("TRACE {word}");
+        let mut acked = 0;
+        for (_, addr) in self.alive_targets() {
+            if matches!(self.remote_line(addr, &verb), Ok(r) if r.starts_with("OK")) {
+                acked += 1;
+            }
+        }
+        self.trace_armed.store(on, Ordering::Relaxed);
+        format!("OK trace {word} backends={acked}")
+    }
+
+    /// Scrape-all `TRACE last`: pick the freshest root span across the
+    /// alive backends by the `at=` publication stamp and tag the line
+    /// with the backend it came from. The tag goes at the END so the
+    /// `OK trace total_us=` reply prefix stays what single-fleet clients
+    /// already parse.
+    fn trace_last(&self) -> String {
+        let mut best: Option<(u64, String, String)> = None;
+        for (id, addr) in self.alive_targets() {
+            let Ok(reply) = self.remote_line(addr, "TRACE last") else { continue };
+            let Some(body) = reply.strip_prefix("OK trace ") else { continue };
+            let at = body
+                .split_whitespace()
+                .rev()
+                .find_map(|t| t.strip_prefix("at=").and_then(|v| v.parse::<u64>().ok()))
+                .unwrap_or(0);
+            if best.as_ref().map(|(b, _, _)| at > *b).unwrap_or(true) {
+                best = Some((at, id, body.to_string()));
+            }
+        }
+        match best {
+            Some((_, id, body)) => format!("OK trace {body} backend=\"{id}\""),
+            None => "ERR no trace recorded on any backend (TRACE on, then QUERY)".into(),
+        }
+    }
+
+    /// Assemble one tagged query's timeline: the route record names the
+    /// backend that served it (asked first; the full alive set is the
+    /// fallback — failover may have moved things since), and the reply
+    /// merges the front's routing view with the backend's span tree into
+    /// a single line.
+    fn trace_qid(&self, qid: &str) -> String {
+        let route = self.route_of(qid);
+        let mut targets = self.alive_targets();
+        if let Some((_, backend, _)) = &route {
+            targets.sort_by_key(|(id, _)| id != backend);
+        }
+        for (id, addr) in targets {
+            let Ok(reply) = self.remote_line(addr, &format!("TRACE {qid}")) else { continue };
+            let Some(body) = reply.strip_prefix("OK trace ") else { continue };
+            let (net, route_us) = match &route {
+                Some((net, _, us)) => (net.as_str(), *us),
+                None => ("?", 0),
+            };
+            return format!("OK trace qid={qid} net={net} backend=\"{id}\" route_us={route_us} {body}");
+        }
+        format!("ERR no trace recorded for qid {qid:?} on any backend")
+    }
+
+    /// The cluster `PROFILE` verb: `on`/`off` broadcast the pool-profiler
+    /// toggle to every alive backend; bare `PROFILE` scrapes each
+    /// backend's per-region report and returns one counted block with
+    /// every line prefixed `backend="id"`, so per-worker lanes stay
+    /// attributable to the process that ran them.
+    pub fn profile_line(&self, arg: &str) -> String {
+        match arg.to_ascii_lowercase().as_str() {
+            word @ ("on" | "off") => {
+                let verb = format!("PROFILE {word}");
+                let mut acked = 0;
+                for (_, addr) in self.alive_targets() {
+                    if matches!(self.remote_line(addr, &verb), Ok(r) if r.starts_with("OK")) {
+                        acked += 1;
+                    }
+                }
+                format!("OK profile {word} backends={acked}")
+            }
+            "" => {
+                let mut lines: Vec<String> = Vec::new();
+                let mut scraped = 0;
+                for (id, addr) in self.alive_targets() {
+                    let Ok((header, body)) = self.remote_block(addr, "PROFILE") else { continue };
+                    if !header.starts_with("OK profile") {
+                        continue;
+                    }
+                    scraped += 1;
+                    for l in body {
+                        lines.push(format!("backend=\"{id}\" {l}"));
+                    }
+                }
+                if lines.is_empty() {
+                    return format!("OK profile backends={scraped} lines=0");
+                }
+                format!("OK profile backends={scraped} lines={}\n{}", lines.len(), lines.join("\n"))
+            }
+            _ => "ERR usage: PROFILE [on|off]".into(),
+        }
     }
 }
 
@@ -1129,14 +1309,19 @@ impl ClusterSession {
             "METRICS" => self.cluster.metrics_line(),
             "PING" => self.cluster.ping_line(),
             "TOPO" => self.cluster.topo_line(),
+            // TRACE and PROFILE are answered by the front over short-lived
+            // control connections (broadcast toggles, scrape-all reads) —
+            // like METRICS/STATS they never touch the pinned conn, so both
+            // sides' batch state is left alone.
+            "TRACE" => self.cluster.trace_line(rest),
+            "PROFILE" => self.cluster.profile_line(rest),
             // a forwarded data verb reaches a backend session (or tears
             // the pin down), and either way any batch collection is over —
             // mirror that here. Verbs the front answers locally
             // (LOAD/NETS/STATS/METRICS/PING/TOPO/JOIN, unknown) never
-            // touch a conn and must leave the mirrored count alone. TRACE
-            // forwards: the ring lives where the engines run, on the
-            // backend. Evidence verbs also update the evidence mirror.
-            "OBSERVE" | "RETRACT" | "COMMIT" | "TRACE" => {
+            // touch a conn and must leave the mirrored count alone.
+            // Evidence verbs also update the evidence mirror.
+            "OBSERVE" | "RETRACT" | "COMMIT" => {
                 self.abort_batch();
                 let reply = self.forward(line);
                 self.mirror(&verb, rest, &reply);
@@ -1156,11 +1341,39 @@ impl ClusterSession {
     /// `QUERY` (and `MPE`, same routing): a clean session spreads over
     /// replicas; an evidence-bearing one forwards on the pinned conn
     /// (where the evidence lives).
+    ///
+    /// While tracing is armed (`TRACE on`) the front mints a qid for the
+    /// query, appends it as a trailing `#<qid>` token on the forwarded
+    /// line (the backend session strips it and tags its trace root),
+    /// records which backend served it, and appends ` qid=<qid>` to the
+    /// `OK` reply so the client can `TRACE <qid>` the cross-tier
+    /// timeline. Disarmed, the line and the reply are byte-identical to
+    /// an untraced cluster's.
     fn cmd_query(&mut self, line: &str) -> String {
-        match self.active.as_ref().map(|a| a.net.clone()) {
-            Some(net) if self.session_clean() => self.spread_read(&net, line),
-            _ => self.forward(line),
+        let qid = self.cluster.mint_qid();
+        let sent = match &qid {
+            Some(q) => format!("{line} #{q}"),
+            None => line.to_string(),
+        };
+        let t0 = Instant::now();
+        let (reply, backend) = match self.active.as_ref().map(|a| a.net.clone()) {
+            Some(net) if self.session_clean() => {
+                let reply = self.spread_read(&net, &sent);
+                (reply, self.last_read.clone())
+            }
+            _ => {
+                let backend = self.active.as_ref().map(|a| a.backend.clone());
+                (self.forward(&sent), backend)
+            }
+        };
+        if let Some(q) = qid {
+            if reply.starts_with("OK") {
+                let net = self.active.as_ref().map(|a| a.net.clone()).unwrap_or_default();
+                self.cluster.record_route(&q, &net, backend.as_deref().unwrap_or("?"), t0.elapsed());
+                return format!("{reply} qid={q}");
+            }
         }
+        reply
     }
 
     /// Route one read-only line for a clean session: round-robin across

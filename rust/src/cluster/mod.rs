@@ -31,7 +31,14 @@
 //! topology counts), `TOPO` (per-backend health and ownership), `JOIN
 //! <addr>` (adopt a running backend over TCP), and `HANDOFF` (export a
 //! session's committed evidence / replay it on a peer router — see
-//! [`front::ClusterSession`]).
+//! [`front::ClusterSession`]). `TRACE` and `PROFILE` are answered by the
+//! front as cluster-wide scrapes: `TRACE on|off` broadcasts the recorder
+//! toggle and arms per-query id minting (each `QUERY`/`MPE` is tagged
+//! `#q<n>` on the wire and its `OK` reply carries ` qid=q<n>`), `TRACE
+//! last` returns the freshest trace across all alive backends tagged
+//! `backend="id"`, `TRACE q<n>` assembles one tagged query's cross-tier
+//! timeline (front route → owner → its span tree), and `PROFILE` merges
+//! every backend's pool-parallelism report with `backend="id"` prefixes.
 //! Sessions are *sticky*: `USE` pins the session to an owning backend's
 //! connection so streamed `OBSERVE`/`COMMIT` state lives where the tree
 //! lives; when ownership moves (rebalance or failover) the next verb gets

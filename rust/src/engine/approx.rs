@@ -149,7 +149,7 @@ impl ApproxEngine {
     /// parallel and fold them into `total` in chunk-index order.
     fn run_round(&self, first_chunk: u64, n_chunks: usize, obs: &[Option<usize>], ev: &Evidence, total: &mut ChunkAcc) {
         let slots: Vec<Mutex<Option<ChunkAcc>>> = (0..n_chunks).map(|_| Mutex::new(None)).collect();
-        self.pool.parallel(n_chunks, &|_w, t| {
+        self.pool.parallel_region("approx.round", n_chunks, &|_w, t| {
             let acc = self.run_chunk(first_chunk + t as u64, CHUNK, obs, ev);
             *slots[t].lock().unwrap() = Some(acc);
         });

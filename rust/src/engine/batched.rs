@@ -293,7 +293,7 @@ impl BatchedHybridEngine {
         {
             let shared = SharedTables::for_batch(&mut self.state);
             let partials = &self.partials;
-            self.pool.parallel(plan.marg_tasks.len(), &|w, t| {
+            self.pool.parallel_region("batched.A", plan.marg_tasks.len(), &|w, t| {
                 let (mi, ref range) = plan.marg_tasks[t];
                 let m = plan.msgs[mi];
                 let sep_meta = &jt.seps[m.sep];
@@ -323,7 +323,7 @@ impl BatchedHybridEngine {
             let finish = &self.finish;
             let ratio_buf = ops::as_atomic(&mut self.ratio[..sep_total * lanes]);
             let n_workers = self.threads;
-            self.pool.parallel(plan.reduce_tasks.len(), &|w, t| {
+            self.pool.parallel_region("batched.B1", plan.reduce_tasks.len(), &|w, t| {
                 let (mi, ref range) = plan.reduce_tasks[t];
                 let off = plan.sep_off[mi];
                 let lo = (off + range.start) * lanes;
@@ -384,7 +384,7 @@ impl BatchedHybridEngine {
             let shared = SharedTables::for_batch(&mut self.state);
             let finish = &self.finish;
             let ratio_buf = ops::as_atomic(&mut self.ratio[..sep_total * lanes]);
-            self.pool.parallel(plan.b2_msgs.len(), &|w, t| {
+            self.pool.parallel_region("batched.B2", plan.b2_msgs.len(), &|w, t| {
                 let mi = plan.b2_msgs[t];
                 // SAFETY: message mi owns its lane window and separator;
                 // worker w owns its finish slot.
@@ -406,7 +406,7 @@ impl BatchedHybridEngine {
         {
             let shared = SharedTables::for_batch(&mut self.state);
             let ratio = &self.ratio;
-            self.pool.parallel(plan.ext_tasks.len(), &|_w, t| {
+            self.pool.parallel_region("batched.C", plan.ext_tasks.len(), &|_w, t| {
                 let (gi, ref range) = plan.ext_tasks[t];
                 let (to, ref mis) = plan.groups[gi];
                 // SAFETY: groups have distinct receivers; entry ranges of

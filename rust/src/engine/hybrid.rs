@@ -281,7 +281,7 @@ impl HybridEngine {
         {
             let shared = SharedTables::new(state);
             let partials = &self.partials;
-            self.pool.parallel(plan.marg_tasks.len(), &|w, t| {
+            self.pool.parallel_region("hybrid.A", plan.marg_tasks.len(), &|w, t| {
                 let (mi, ref range) = plan.marg_tasks[t];
                 let m = plan.msgs[mi];
                 let sep_meta = &jt.seps[m.sep];
@@ -312,7 +312,7 @@ impl HybridEngine {
             let log_z = &self.log_z;
             let ratio_buf = ops::as_atomic(&mut self.ratio[..sep_total]);
             let n_workers = self.threads;
-            self.pool.parallel(plan.reduce_tasks.len(), &|w, t| {
+            self.pool.parallel_region("hybrid.B1", plan.reduce_tasks.len(), &|w, t| {
                 let (mi, ref range) = plan.reduce_tasks[t];
                 let off = plan.sep_off[mi];
                 // SAFETY: tasks of one message cover disjoint sub-ranges of
@@ -353,7 +353,7 @@ impl HybridEngine {
             let shared = SharedTables::new(state);
             let log_z = &self.log_z;
             let ratio_buf = ops::as_atomic(&mut self.ratio[..sep_total]);
-            self.pool.parallel(plan.b2_msgs.len(), &|w, t| {
+            self.pool.parallel_region("hybrid.B2", plan.b2_msgs.len(), &|w, t| {
                 let mi = plan.b2_msgs[t];
                 // SAFETY: message mi owns [off, off+len) of the ratio
                 // buffer and its separator table exclusively.
@@ -375,7 +375,7 @@ impl HybridEngine {
         {
             let shared = SharedTables::new(state);
             let ratio = &self.ratio;
-            self.pool.parallel(plan.ext_tasks.len(), &|_w, t| {
+            self.pool.parallel_region("hybrid.C", plan.ext_tasks.len(), &|_w, t| {
                 let (gi, ref range) = plan.ext_tasks[t];
                 let (to, ref mis) = plan.groups[gi];
                 // SAFETY: groups have distinct receivers; ranges of one

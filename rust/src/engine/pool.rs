@@ -15,6 +15,9 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::obs::profile::{self, RegionTally};
 
 /// Type-erased job: `(worker_id, task_index)` callback plus the shared
 /// task counter. The raw pointer erases the borrow lifetime; safety comes
@@ -26,6 +29,9 @@ struct Job {
     next: Arc<AtomicUsize>,
     /// Total tasks.
     n_tasks: usize,
+    /// Per-worker busy/task tally, present only while the parallelism
+    /// profiler is armed — the disarmed claim loop is untouched.
+    prof: Option<Arc<RegionTally>>,
 }
 
 unsafe impl Send for Job {}
@@ -89,12 +95,38 @@ impl Pool {
     /// `worker_id` is in `0..threads()` (leader = 0) and is stable within a
     /// call — tasks may use it to index per-worker scratch without locking.
     pub fn parallel(&self, n_tasks: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        self.parallel_region("pool.region", n_tasks, f);
+    }
+
+    /// [`Pool::parallel`] under a named profiler region. Engines name
+    /// their regions after the hybrid phases (`hybrid.A`, `batched.B1`,
+    /// `approx.round`, `pc.level`, …); while the profiler is armed every
+    /// entry records per-worker busy time, task counts, region wall time
+    /// and the leader's barrier wait under that name. Disarmed, the name
+    /// costs nothing — one relaxed load decides.
+    pub fn parallel_region(&self, region: &'static str, n_tasks: usize, f: &(dyn Fn(usize, usize) + Sync)) {
         if n_tasks == 0 {
             return;
         }
+        let prof = if profile::armed() { Some((Instant::now(), Arc::new(RegionTally::new(self.threads)))) } else { None };
         if self.threads == 1 || n_tasks == 1 {
-            for t in 0..n_tasks {
-                f(0, t);
+            match &prof {
+                None => {
+                    for t in 0..n_tasks {
+                        f(0, t);
+                    }
+                }
+                Some((_, tally)) => {
+                    for t in 0..n_tasks {
+                        let t0 = Instant::now();
+                        f(0, t);
+                        tally.busy_ns[0].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        tally.tasks[0].fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            if let Some((start, tally)) = prof {
+                profile::record_region(region, start.elapsed(), Duration::ZERO, &tally);
             }
             return;
         }
@@ -114,23 +146,57 @@ impl Pool {
                 },
                 next: Arc::clone(&next),
                 n_tasks,
+                prof: prof.as_ref().map(|(_, tally)| Arc::clone(tally)),
             });
             self.shared.work_cv.notify_all();
         }
         // Leader works too (worker id 0).
-        loop {
-            let t = next.fetch_add(1, Ordering::Relaxed);
-            if t >= n_tasks {
-                break;
-            }
-            f(0, t);
-        }
-        // Wait for the workers to drain the queue.
+        claim_loop(f, &next, n_tasks, 0, prof.as_ref().map(|(_, tally)| tally.as_ref()));
+        // Wait for the workers to drain the queue; while armed, the time
+        // spent here is the region's barrier wait (the leader ran dry
+        // before the slowest worker).
+        let barrier_start = prof.as_ref().map(|_| Instant::now());
         let mut slot = self.shared.slot.lock().unwrap();
         while slot.active > 0 {
             slot = self.shared.done_cv.wait(slot).unwrap();
         }
         slot.job = None;
+        drop(slot);
+        if let Some((start, tally)) = prof {
+            let barrier = barrier_start.map(|b| b.elapsed()).unwrap_or(Duration::ZERO);
+            profile::record_region(region, start.elapsed(), barrier, &tally);
+        }
+    }
+}
+
+/// The dynamic self-scheduling claim loop, shared by leader and workers.
+/// With a tally the per-task cost is two monotonic clock reads and two
+/// relaxed atomic adds; without one it is the bare `fetch_add` claim.
+fn claim_loop(
+    f: &(dyn Fn(usize, usize) + Sync),
+    next: &AtomicUsize,
+    n_tasks: usize,
+    wid: usize,
+    tally: Option<&RegionTally>,
+) {
+    match tally {
+        None => loop {
+            let t = next.fetch_add(1, Ordering::Relaxed);
+            if t >= n_tasks {
+                break;
+            }
+            f(wid, t);
+        },
+        Some(tally) => loop {
+            let t = next.fetch_add(1, Ordering::Relaxed);
+            if t >= n_tasks {
+                break;
+            }
+            let t0 = Instant::now();
+            f(wid, t);
+            tally.busy_ns[wid].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            tally.tasks[wid].fetch_add(1, Ordering::Relaxed);
+        },
     }
 }
 
@@ -138,7 +204,7 @@ fn worker_loop(shared: Arc<Shared>, wid: usize) {
     let mut last_gen = 0u64;
     loop {
         // wait for a new generation (or shutdown)
-        let (f, next, n_tasks) = {
+        let (f, next, n_tasks, prof) = {
             let mut slot = shared.slot.lock().unwrap();
             loop {
                 if slot.shutdown {
@@ -147,7 +213,7 @@ fn worker_loop(shared: Arc<Shared>, wid: usize) {
                 if slot.generation != last_gen {
                     if let Some(job) = &slot.job {
                         last_gen = slot.generation;
-                        break (job.f, Arc::clone(&job.next), job.n_tasks);
+                        break (job.f, Arc::clone(&job.next), job.n_tasks, job.prof.clone());
                     }
                 }
                 slot = shared.work_cv.wait(slot).unwrap();
@@ -156,13 +222,7 @@ fn worker_loop(shared: Arc<Shared>, wid: usize) {
         // SAFETY: the leader blocks in `parallel()` until we decrement
         // `active`, so `f` is alive for the whole claim loop.
         let f = unsafe { &*f };
-        loop {
-            let t = next.fetch_add(1, Ordering::Relaxed);
-            if t >= n_tasks {
-                break;
-            }
-            f(wid, t);
-        }
+        claim_loop(f, &next, n_tasks, wid, prof.as_deref());
         let mut slot = shared.slot.lock().unwrap();
         slot.active -= 1;
         if slot.active == 0 {
@@ -371,5 +431,54 @@ mod tests {
         let pool = Pool::new(4);
         pool.parallel(10, &|_w, _t| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn armed_profiler_tallies_every_task_once() {
+        let _serialized = crate::obs::trace::TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        crate::obs::profile::set_armed(true);
+        let pool = Pool::new(2);
+        let ran = AtomicUsize::new(0);
+        pool.parallel_region("pool-test-armed", 64, &|_w, _t| {
+            ran.fetch_add(1, Ordering::Relaxed);
+            std::hint::black_box((0..500u64).sum::<u64>());
+        });
+        crate::obs::profile::set_armed(false);
+        assert_eq!(ran.load(Ordering::Relaxed), 64, "profiling must not change scheduling");
+        let snap = crate::obs::profile::snapshot();
+        let p = snap.iter().find(|p| p.region == "pool-test-armed").expect("region was profiled");
+        assert_eq!(p.entries, 1);
+        assert_eq!(p.workers(), 2);
+        assert_eq!(p.tasks.iter().sum::<u64>(), 64);
+        assert!(p.imbalance() >= 1.0 - 1e-9, "{}", p.imbalance());
+        assert!(p.imbalance() <= p.workers() as f64 + 1e-9, "{}", p.imbalance());
+        // every lane's busy time fits inside the region wall (µs slop for
+        // clock truncation on near-instant tasks)
+        for b in &p.busy_us {
+            assert!(*b <= p.wall_us + 1_000, "busy {b} vs wall {}", p.wall_us);
+        }
+    }
+
+    #[test]
+    fn armed_inline_path_profiles_as_the_leader_lane() {
+        let _serialized = crate::obs::trace::TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        crate::obs::profile::set_armed(true);
+        let pool = Pool::new(1);
+        pool.parallel_region("pool-test-inline", 5, &|w, _t| assert_eq!(w, 0));
+        crate::obs::profile::set_armed(false);
+        let snap = crate::obs::profile::snapshot();
+        let p = snap.iter().find(|p| p.region == "pool-test-inline").expect("region was profiled");
+        assert_eq!(p.tasks, vec![5]);
+        assert_eq!(p.barrier_us, 0, "inline regions have no barrier");
+    }
+
+    #[test]
+    fn disarmed_regions_record_nothing() {
+        let _serialized = crate::obs::trace::TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        crate::obs::profile::set_armed(false);
+        crate::obs::profile::reset();
+        let pool = Pool::new(2);
+        pool.parallel_region("pool-test-disarmed", 32, &|_w, _t| {});
+        assert!(crate::obs::profile::snapshot().iter().all(|p| p.region != "pool-test-disarmed"));
     }
 }

@@ -47,8 +47,16 @@
 //!                         per-net query counters and latency histograms,
 //!                         registry LRU and connection gauges, plus the
 //!                         process-global engine/compiler series
-//! TRACE <on|off|last>     toggle per-query span recording / return the
-//!                         most recent span tree as one line
+//! TRACE <on|off|last|qid> toggle per-query span recording / return the
+//!                         most recent span tree as one line / look a
+//!                         specific query up by its cluster-minted id
+//!                         (`q<digits>`, propagated as a trailing `#qid`
+//!                         token on QUERY/MPE lines)
+//! PROFILE [on|off]        arm/disarm the pool parallelism profiler;
+//!                         bare PROFILE returns the per-region report as
+//!                         a counted block (`OK profile lines=<n>`):
+//!                         per-worker busy/idle lanes, utilization,
+//!                         load-imbalance ratio, barrier-wait share
 //! PING                    liveness probe (the cluster tier's health check)
 //! EVICT <net>             drop a network (cluster registry hand-off)
 //! QUIT                    end the session
@@ -243,10 +251,17 @@ impl Fleet {
 
     /// Run one query against a loaded network, recording metrics.
     pub fn query(&self, name: &str, ev: Evidence) -> Result<Posteriors> {
+        self.query_tagged(name, ev, None)
+    }
+
+    /// [`Fleet::query`] with an optional cluster-minted query id: the
+    /// shard worker tags its trace root with it so `TRACE <qid>` can find
+    /// this dispatch's span tree later. Accounting is identical.
+    pub fn query_tagged(&self, name: &str, ev: Evidence, qid: Option<String>) -> Result<Posteriors> {
         // serving traffic refreshes the LRU stamp: a hot network must not
         // be evicted in favor of an idle one just because it loaded first
         let _ = self.registry.get(name);
-        match self.router.query(name, ev) {
+        match self.router.query_tagged(name, ev, qid) {
             Ok((post, service)) => {
                 self.metrics.record(name, service, true);
                 self.record_obs(name, service, &post);
@@ -319,8 +334,14 @@ impl Fleet {
     /// (same counters and latency series as [`Fleet::query`] — an MPE is
     /// a query to the serving stack).
     pub fn mpe(&self, name: &str, ev: Evidence) -> Result<MpeResult> {
+        self.mpe_tagged(name, ev, None)
+    }
+
+    /// [`Fleet::mpe`] with an optional query id for trace correlation
+    /// (see [`Fleet::query_tagged`]).
+    pub fn mpe_tagged(&self, name: &str, ev: Evidence, qid: Option<String>) -> Result<MpeResult> {
         let _ = self.registry.get(name); // refresh the LRU stamp, as in query()
-        match self.router.mpe(name, ev) {
+        match self.router.mpe_tagged(name, ev, qid) {
             Ok((result, service)) => {
                 self.metrics.record(name, service, true);
                 self.obs.counter(&crate::obs::series("fastbn_queries_total", &[("net", name)])).inc();

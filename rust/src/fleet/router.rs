@@ -41,6 +41,10 @@ struct Job {
     /// `BATCH` verb path — a single sweep with the batched engine).
     cases: Vec<Evidence>,
     reply: JobReply,
+    /// Cluster-minted query id: the shard worker tags its trace root with
+    /// it so `TRACE <qid>` can find this dispatch's span tree. `None` on
+    /// every untagged path (direct fleet clients, batches).
+    qid: Option<String>,
 }
 
 struct Shard {
@@ -108,7 +112,13 @@ impl ShardGroup {
     /// Returns the posteriors and the shard-side service time (queue wait
     /// excluded from neither — the clock starts when the job is accepted).
     pub fn dispatch(&self, ev: Evidence) -> Result<(Posteriors, Duration)> {
-        let (mut results, service) = self.dispatch_batch(vec![ev])?;
+        self.dispatch_tagged(ev, None)
+    }
+
+    /// [`ShardGroup::dispatch`] with an optional query id for trace
+    /// correlation (see [`Job::qid`]).
+    pub fn dispatch_tagged(&self, ev: Evidence, qid: Option<String>) -> Result<(Posteriors, Duration)> {
+        let (mut results, service) = self.dispatch_cases(vec![ev], qid)?;
         results.pop().expect("one case in, one result out").map(|p| (p, service))
     }
 
@@ -118,11 +128,15 @@ impl ShardGroup {
     /// back in their slots; the outer `Err` is reserved for transport
     /// (shutdown, dead worker).
     pub fn dispatch_batch(&self, cases: Vec<Evidence>) -> Result<(Vec<Result<Posteriors>>, Duration)> {
+        self.dispatch_cases(cases, None)
+    }
+
+    fn dispatch_cases(&self, cases: Vec<Evidence>, qid: Option<String>) -> Result<(Vec<Result<Posteriors>>, Duration)> {
         if cases.is_empty() {
             return Ok((Vec::new(), Duration::ZERO));
         }
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.enqueue(cases, JobReply::Posteriors(reply_tx))?;
+        self.enqueue(cases, JobReply::Posteriors(reply_tx), qid)?;
         match reply_rx.recv() {
             Ok((outcomes, service)) => Ok((outcomes, service)),
             Err(_) => Err(Error::msg(format!("shard worker for {:?} died", self.name))),
@@ -131,7 +145,13 @@ impl ShardGroup {
 
     /// Run one MPE query on this group, blocking until its shard replies.
     pub fn dispatch_mpe(&self, ev: Evidence) -> Result<(MpeResult, Duration)> {
-        let (mut results, service) = self.dispatch_mpe_batch(vec![ev])?;
+        self.dispatch_mpe_tagged(ev, None)
+    }
+
+    /// [`ShardGroup::dispatch_mpe`] with an optional query id for trace
+    /// correlation (see [`Job::qid`]).
+    pub fn dispatch_mpe_tagged(&self, ev: Evidence, qid: Option<String>) -> Result<(MpeResult, Duration)> {
+        let (mut results, service) = self.dispatch_mpe_cases(vec![ev], qid)?;
         results.pop().expect("one case in, one result out").map(|r| (r, service))
     }
 
@@ -140,11 +160,19 @@ impl ShardGroup {
     /// sweeps with the batched engine). Per-case failures come back in
     /// their slots, exactly like [`ShardGroup::dispatch_batch`].
     pub fn dispatch_mpe_batch(&self, cases: Vec<Evidence>) -> Result<(Vec<Result<MpeResult>>, Duration)> {
+        self.dispatch_mpe_cases(cases, None)
+    }
+
+    fn dispatch_mpe_cases(
+        &self,
+        cases: Vec<Evidence>,
+        qid: Option<String>,
+    ) -> Result<(Vec<Result<MpeResult>>, Duration)> {
         if cases.is_empty() {
             return Ok((Vec::new(), Duration::ZERO));
         }
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.enqueue(cases, JobReply::Mpe(reply_tx))?;
+        self.enqueue(cases, JobReply::Mpe(reply_tx), qid)?;
         match reply_rx.recv() {
             Ok((outcomes, service)) => Ok((outcomes, service)),
             Err(_) => Err(Error::msg(format!("shard worker for {:?} died", self.name))),
@@ -153,7 +181,7 @@ impl ShardGroup {
 
     /// Pick a shard (rotor start, then least depth from there) and hand it
     /// the job, accounting its depth.
-    fn enqueue(&self, cases: Vec<Evidence>, reply: JobReply) -> Result<()> {
+    fn enqueue(&self, cases: Vec<Evidence>, reply: JobReply, qid: Option<String>) -> Result<()> {
         let start = self.rotor.fetch_add(1, Ordering::Relaxed) % self.shards.len();
         let mut best = start;
         let mut best_depth = self.shards[start].depth.load(Ordering::Relaxed);
@@ -171,7 +199,7 @@ impl ShardGroup {
             None => return Err(Error::msg(format!("network {:?} is shutting down", self.name))),
         };
         shard.depth.fetch_add(1, Ordering::Relaxed);
-        if tx.send(Job { cases, reply }).is_err() {
+        if tx.send(Job { cases, reply, qid }).is_err() {
             shard.depth.fetch_sub(1, Ordering::Relaxed);
             return Err(Error::msg(format!("network {:?} is shutting down", self.name)));
         }
@@ -216,7 +244,7 @@ fn shard_worker(
     let (mut engine, mut state) = build_replica(&model, engine_kind, &cfg);
     while let Ok(job) = rx.recv() {
         let t0 = Instant::now();
-        let Job { cases, reply } = job;
+        let Job { cases, reply, qid } = job;
         // a panicking case must not kill the shard: without the catch, the
         // worker dies with its depth stuck and ~1/N of the network's
         // queries fail as "shutting down" forever
@@ -229,6 +257,9 @@ fn shard_worker(
                     // slow-query log)
                     let dispatch_span = crate::obs::trace::span("shard.infer");
                     dispatch_span.note(&format!("cases={}", cases.len()));
+                    if let Some(q) = &qid {
+                        crate::obs::trace::tag_qid(q);
+                    }
                     engine.infer_batch(&mut state, &cases)
                 }));
                 depth.fetch_sub(1, Ordering::Relaxed);
@@ -251,6 +282,9 @@ fn shard_worker(
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let dispatch_span = crate::obs::trace::span("shard.mpe");
                     dispatch_span.note(&format!("cases={}", cases.len()));
+                    if let Some(q) = &qid {
+                        crate::obs::trace::tag_qid(q);
+                    }
                     engine.mpe_batch(&mut state, &cases)
                 }));
                 depth.fetch_sub(1, Ordering::Relaxed);
@@ -309,8 +343,13 @@ impl Router {
 
     /// Dispatch a query to `name`'s group.
     pub fn query(&self, name: &str, ev: Evidence) -> Result<(Posteriors, Duration)> {
+        self.query_tagged(name, ev, None)
+    }
+
+    /// [`Router::query`] with an optional query id for trace correlation.
+    pub fn query_tagged(&self, name: &str, ev: Evidence, qid: Option<String>) -> Result<(Posteriors, Duration)> {
         let group = self.group(name).ok_or_else(|| Error::msg(format!("network {name:?} is not loaded")))?;
-        group.dispatch(ev)
+        group.dispatch_tagged(ev, qid)
     }
 
     /// Dispatch a multi-case batch to `name`'s group (one shard dispatch).
@@ -321,8 +360,13 @@ impl Router {
 
     /// Dispatch an MPE query to `name`'s group.
     pub fn mpe(&self, name: &str, ev: Evidence) -> Result<(MpeResult, Duration)> {
+        self.mpe_tagged(name, ev, None)
+    }
+
+    /// [`Router::mpe`] with an optional query id for trace correlation.
+    pub fn mpe_tagged(&self, name: &str, ev: Evidence, qid: Option<String>) -> Result<(MpeResult, Duration)> {
         let group = self.group(name).ok_or_else(|| Error::msg(format!("network {name:?} is not loaded")))?;
-        group.dispatch_mpe(ev)
+        group.dispatch_mpe_tagged(ev, qid)
     }
 
     /// Dispatch a multi-case MPE batch to `name`'s group (one dispatch).

@@ -154,6 +154,7 @@ impl Session {
             "STATS" => self.fleet.stats_line(),
             "METRICS" => self.cmd_metrics(),
             "TRACE" => self.cmd_trace(rest),
+            "PROFILE" => self.cmd_profile(rest),
             "PING" => format!("OK pong nets={}", self.fleet.loaded().len()),
             "EVICT" => self.cmd_evict(rest),
             other => format!("ERR unknown verb {other:?}"),
@@ -473,10 +474,14 @@ impl Session {
         format!("OK metrics lines={}\n{body}", body.lines().count())
     }
 
-    /// `TRACE on|off|last`: per-query span recording. `on`/`off` flip the
-    /// process-wide recorder (spans are captured on the shard worker
+    /// `TRACE on|off|last|q<n>`: per-query span recording. `on`/`off` flip
+    /// the process-wide recorder (spans are captured on the shard worker
     /// threads that run the engines, so the toggle cannot be per-session);
-    /// `last` returns the most recent completed trace as one line.
+    /// `last` returns the most recent completed trace as one line; a
+    /// `q<digits>` argument looks a specific query up by the correlation
+    /// id it was tagged with (the trailing `#<qid>` token on its
+    /// QUERY/MPE line — minted by the cluster front). Only that exact
+    /// shape is a lookup: every other argument stays a usage error.
     fn cmd_trace(&self, arg: &str) -> String {
         match arg.to_ascii_lowercase().as_str() {
             "on" => {
@@ -491,7 +496,41 @@ impl Session {
                 Some(t) => format!("OK trace {}", t.render()),
                 None => "ERR no trace recorded (TRACE on, then QUERY)".into(),
             },
-            _ => "ERR usage: TRACE <on|off|last>".into(),
+            qid if qid.len() > 1 && qid.starts_with('q') && qid[1..].bytes().all(|b| b.is_ascii_digit()) => {
+                match crate::obs::trace::find(qid) {
+                    Some(t) => format!("OK trace {}", t.render()),
+                    None => format!("ERR no trace recorded for qid {qid:?}"),
+                }
+            }
+            _ => "ERR usage: TRACE <on|off|last|q<n>>".into(),
+        }
+    }
+
+    /// `PROFILE [on|off]`: the pool parallelism profiler (see
+    /// [`crate::obs::profile`]). `on` arms it process-wide and clears
+    /// prior tallies, `off` disarms it; bare `PROFILE` returns the
+    /// per-region report as a counted block (`OK profile lines=<n>`,
+    /// mirroring `METRICS`), one line per pool region with per-worker
+    /// busy/idle lanes, utilization, load-imbalance ratio, and
+    /// barrier-wait share.
+    fn cmd_profile(&self, arg: &str) -> String {
+        match arg.to_ascii_lowercase().as_str() {
+            "on" => {
+                crate::obs::profile::set_armed(true);
+                "OK profile on".into()
+            }
+            "off" => {
+                crate::obs::profile::set_armed(false);
+                "OK profile off".into()
+            }
+            "" => {
+                let body = crate::obs::profile::render();
+                if body.is_empty() {
+                    return "OK profile lines=0".into();
+                }
+                format!("OK profile lines={}\n{body}", body.lines().count())
+            }
+            _ => "ERR usage: PROFILE [on|off]".into(),
         }
     }
 
@@ -501,6 +540,7 @@ impl Session {
     /// assigns every variable. Exact tier only: the sampling tier has no
     /// junction tree to run a max-product sweep over.
     fn cmd_mpe(&mut self, rest: &str) -> String {
+        let (rest, qid) = split_qid(rest);
         let (name, model) = match self.current_model() {
             Ok(current) => current,
             Err(reply) => return reply,
@@ -519,13 +559,14 @@ impl Session {
             }
         }
         let ev = Evidence::from_ids(obs.into_iter().collect());
-        match self.fleet.mpe(&name, ev) {
+        match self.fleet.mpe_tagged(&name, ev, qid) {
             Ok(res) => crate::coordinator::server::format_ok_mpe(model.net(), &res),
             Err(e) => format!("ERR {e}"),
         }
     }
 
     fn cmd_query(&mut self, rest: &str) -> String {
+        let (rest, qid) = split_qid(rest);
         let (name, model) = match self.current_model() {
             Ok(current) => current,
             Err(reply) => return reply,
@@ -551,10 +592,27 @@ impl Session {
             }
         }
         let ev = Evidence::from_ids(obs.into_iter().collect());
-        match self.fleet.query(&name, ev) {
+        match self.fleet.query_tagged(&name, ev, qid) {
             Ok(post) => crate::coordinator::server::format_ok_posterior(model.net(), v, &post),
             Err(e) => format!("ERR {e}"),
         }
+    }
+}
+
+/// Split a trailing `#<qid>` correlation token off a `QUERY`/`MPE`
+/// argument string. The cluster front appends one when tracing is armed;
+/// `#` is invalid in every position of the existing grammar (targets, the
+/// `|` separator, `var=state` pairs), so stripping the final token is
+/// unambiguous and untagged clients can never collide with it. The shard
+/// worker tags its trace root with the id (see
+/// [`crate::obs::trace::tag_qid`]) so `TRACE <qid>` finds the query later.
+fn split_qid(rest: &str) -> (&str, Option<String>) {
+    let tail = rest.rsplit(char::is_whitespace).next().unwrap_or("");
+    if tail.len() > 1 && tail.starts_with('#') {
+        let head = rest[..rest.len() - tail.len()].trim_end();
+        (head, Some(tail[1..].to_string()))
+    } else {
+        (rest, None)
     }
 }
 
@@ -975,6 +1033,55 @@ mod tests {
         // assert the reply shape, not a specific span tree
         let r = line(&mut s, "TRACE last");
         assert!(r.starts_with("OK trace total_us="), "{r}");
+        assert_eq!(line(&mut s, "TRACE off"), "OK trace off");
+    }
+
+    #[test]
+    fn profile_verb_arms_reports_and_disarms() {
+        let _serialized = crate::obs::trace::TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut s = session();
+        assert!(line(&mut s, "PROFILE maybe").starts_with("ERR usage: PROFILE"));
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        assert_eq!(line(&mut s, "PROFILE on"), "OK profile on");
+        line(&mut s, "QUERY lung");
+        // the profiler store is process-wide (concurrent tests may be
+        // driving pool regions), so assert the counted-block shape, not
+        // specific regions
+        let reply = line(&mut s, "PROFILE");
+        let mut lines = reply.lines();
+        let header = lines.next().unwrap();
+        let body: Vec<&str> = lines.collect();
+        let n: usize = header.strip_prefix("OK profile lines=").expect(header).parse().unwrap();
+        assert_eq!(n, body.len(), "{reply}");
+        for l in &body {
+            assert!(l.starts_with("region="), "{l}");
+        }
+        assert_eq!(line(&mut s, "PROFILE off"), "OK profile off");
+    }
+
+    #[test]
+    fn trace_qid_token_is_stripped_and_correlates() {
+        let _serialized = crate::obs::trace::TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut s = session();
+        line(&mut s, "LOAD asia");
+        line(&mut s, "USE asia");
+        assert_eq!(line(&mut s, "TRACE on"), "OK trace on");
+        // a trailing #<qid> token is correlation metadata, not evidence:
+        // the reply is byte-identical to the untagged query's
+        let plain = line(&mut s, "QUERY lung | smoke=yes");
+        assert_eq!(line(&mut s, "QUERY lung | smoke=yes #q770001"), plain);
+        let r = line(&mut s, "TRACE q770001");
+        assert!(r.starts_with("OK trace total_us="), "{r}");
+        assert!(r.ends_with(" qid=q770001"), "{r}");
+        // MPE takes the token through the same path
+        let mpe_plain = line(&mut s, "MPE | smoke=yes");
+        assert_eq!(line(&mut s, "MPE | smoke=yes #q770002"), mpe_plain);
+        let r = line(&mut s, "TRACE q770002");
+        assert!(r.starts_with("OK trace total_us="), "{r}");
+        // an unknown qid is a clean error; non-qid args stay usage errors
+        assert!(line(&mut s, "TRACE q770999").starts_with("ERR no trace recorded for qid"));
+        assert!(line(&mut s, "TRACE qabc").starts_with("ERR usage: TRACE"));
         assert_eq!(line(&mut s, "TRACE off"), "OK trace off");
     }
 

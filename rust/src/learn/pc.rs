@@ -120,7 +120,7 @@ pub fn skeleton(data: &Dataset, alpha: f64, max_cond: usize, pool: &Pool) -> Ske
         {
             let (frozen, edges, slots) = (&frozen, &edges, &slots);
             let (scratches, counters) = (&scratches, &counters);
-            pool.parallel(edges.len(), &|w, t| {
+            pool.parallel_region("pc.level", edges.len(), &|w, t| {
                 let (x, y) = edges[t];
                 // SAFETY: the pool runs one task per worker id at a time.
                 let scratch = unsafe { scratches.get(w) };

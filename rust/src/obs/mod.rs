@@ -1,16 +1,20 @@
 //! Zero-dependency observability: a process/fleet metrics registry with
 //! Prometheus-style text exposition ([`registry`]), per-query trace
-//! spans with a bounded ring and slow-query log ([`trace`]), and the
-//! cluster-side scrape parser/merger ([`scrape`]).
+//! spans with a bounded ring and slow-query log ([`trace`]), the
+//! pool parallelism profiler ([`profile`]), and the cluster-side scrape
+//! parser/merger ([`scrape`]).
 //!
 //! Layering: engines and the JT compiler record into the process-global
-//! registry ([`global`]) and open [`trace::span`]s; each `Fleet` owns a
-//! private registry for per-network series; the fleet wire surface adds
-//! `METRICS` / `TRACE <on|off|last>` verbs; the cluster front scrapes
-//! and merges its backends. Instrumentation reads clocks and bumps
-//! atomics only — posteriors are byte-identical with telemetry on or
-//! off.
+//! registry ([`global`]) and open [`trace::span`]s; pool regions fold
+//! per-worker busy/idle tallies into [`profile`] when armed; each
+//! `Fleet` owns a private registry for per-network series; the fleet
+//! wire surface adds `METRICS` / `TRACE <on|off|last|qid>` / `PROFILE`
+//! verbs; the cluster front scrapes and merges its backends and
+//! correlates traces across tiers by query id. Instrumentation reads
+//! clocks and bumps atomics only — posteriors are byte-identical with
+//! telemetry on or off.
 
+pub mod profile;
 pub mod registry;
 pub mod scrape;
 pub mod trace;

@@ -1,0 +1,293 @@
+//! Continuous parallelism profiler for the worker pool.
+//!
+//! The paper's hybrid design lives or dies on how well the per-layer
+//! pool regions keep every worker busy; this module measures exactly
+//! that. When **armed**, [`crate::engine::pool::Pool::parallel_region`]
+//! allocates one [`RegionTally`] per region entry and each task claim
+//! pays two monotonic clock reads plus two relaxed atomic adds (busy
+//! nanoseconds + task count, per worker lane). The leader folds the
+//! tally into a process-wide store keyed by region name and into
+//! `fastbn_pool_*` series on the global registry. **Disarmed** (the
+//! default), the only cost is one relaxed load per region entry — the
+//! same contract as [`crate::obs::trace`]: telemetry never changes a
+//! reply byte.
+//!
+//! Derived per region: **utilization** (Σ busy / (wall × workers)),
+//! **load imbalance** (max worker busy / mean worker busy, ≥ 1, ≤
+//! worker count by construction), and **barrier-wait share** (leader
+//! time blocked on the end-of-region barrier / wall). Idle is derived,
+//! not measured: `wall − busy` per lane.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+static STORE: Mutex<BTreeMap<&'static str, RegionAcc>> = Mutex::new(BTreeMap::new());
+
+/// Arm or disarm the profiler. Arming resets the store so every report
+/// describes one contiguous profiling window.
+pub fn set_armed(on: bool) {
+    if on {
+        reset();
+    }
+    ARMED.store(on, Ordering::Relaxed);
+}
+
+/// Is the profiler collecting? One relaxed load — the pool checks this
+/// once per region entry.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Drop all accumulated region profiles.
+pub fn reset() {
+    STORE.lock().unwrap().clear();
+}
+
+/// Per-region-entry scratch shared between the leader and the workers:
+/// one busy-nanoseconds and one task-count lane per pool thread. All
+/// adds are relaxed — lanes are only read after the region barrier.
+pub struct RegionTally {
+    pub busy_ns: Vec<AtomicU64>,
+    pub tasks: Vec<AtomicU64>,
+}
+
+impl RegionTally {
+    /// Zeroed tally with one lane per pool thread.
+    pub fn new(threads: usize) -> Self {
+        RegionTally {
+            busy_ns: (0..threads).map(|_| AtomicU64::new(0)).collect(),
+            tasks: (0..threads).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+/// Accumulated totals for one region name across entries. Kept in
+/// nanoseconds so sub-microsecond region entries (small layers on small
+/// nets) still accumulate instead of flooring to zero per entry; the
+/// snapshot converts once, after summation.
+#[derive(Clone, Default)]
+struct RegionAcc {
+    entries: u64,
+    wall_ns: u64,
+    barrier_ns: u64,
+    busy_ns: Vec<u64>,
+    tasks: Vec<u64>,
+}
+
+/// One region's accumulated profile, as reported by [`snapshot`].
+#[derive(Clone, Debug)]
+pub struct RegionProfile {
+    /// Region name (e.g. `hybrid.B1`).
+    pub region: &'static str,
+    /// Times the region was entered while armed.
+    pub entries: u64,
+    /// Total wall time inside the region (leader-measured), µs.
+    pub wall_us: u64,
+    /// Leader time blocked on the end-of-region barrier, µs.
+    pub barrier_us: u64,
+    /// Per-worker-lane busy time, µs (lane 0 = leader).
+    pub busy_us: Vec<u64>,
+    /// Per-worker-lane completed task counts.
+    pub tasks: Vec<u64>,
+}
+
+impl RegionProfile {
+    /// Worker lanes seen for this region (the pool's thread count).
+    pub fn workers(&self) -> usize {
+        self.busy_us.len()
+    }
+
+    /// Σ busy / (wall × workers): 1.0 = every lane busy for the whole
+    /// region, every entry.
+    pub fn utilization(&self) -> f64 {
+        let denom = self.wall_us.saturating_mul(self.workers() as u64);
+        if denom == 0 {
+            return 0.0;
+        }
+        self.busy_us.iter().sum::<u64>() as f64 / denom as f64
+    }
+
+    /// Max lane busy / mean lane busy. 1.0 = perfectly balanced; equal
+    /// to the worker count when one lane did all the work.
+    pub fn imbalance(&self) -> f64 {
+        let total: u64 = self.busy_us.iter().sum();
+        if total == 0 || self.busy_us.is_empty() {
+            return 1.0;
+        }
+        let max = *self.busy_us.iter().max().expect("non-empty") as f64;
+        max / (total as f64 / self.busy_us.len() as f64)
+    }
+
+    /// Fraction of region wall time the leader spent in the barrier.
+    pub fn barrier_share(&self) -> f64 {
+        if self.wall_us == 0 {
+            return 0.0;
+        }
+        self.barrier_us as f64 / self.wall_us as f64
+    }
+
+    /// Per-lane derived idle time (`wall − busy`, saturating), µs.
+    pub fn idle_us(&self) -> Vec<u64> {
+        self.busy_us.iter().map(|b| self.wall_us.saturating_sub(*b)).collect()
+    }
+
+    /// One self-describing report line, `key=value` tokens only —
+    /// machine-greppable and append-only extensible.
+    pub fn render_line(&self) -> String {
+        let join = |v: &[u64]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+        format!(
+            "region={} entries={} workers={} wall_us={} barrier_us={} util={:.3} imbalance={:.2} \
+             barrier_share={:.3} busy_us={} idle_us={} tasks={}",
+            self.region,
+            self.entries,
+            self.workers(),
+            self.wall_us,
+            self.barrier_us,
+            self.utilization(),
+            self.imbalance(),
+            self.barrier_share(),
+            join(&self.busy_us),
+            join(&self.idle_us()),
+            join(&self.tasks)
+        )
+    }
+}
+
+/// Fold one completed region entry into the store and the global
+/// registry (`fastbn_pool_*` series). Called by the pool leader after
+/// the region barrier; never on the per-task path.
+pub fn record_region(region: &'static str, wall: Duration, barrier: Duration, tally: &RegionTally) {
+    let wall_ns = wall.as_nanos() as u64;
+    let barrier_ns = barrier.as_nanos() as u64;
+    let busy_ns: Vec<u64> = tally.busy_ns.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+    let tasks: Vec<u64> = tally.tasks.iter().map(|t| t.load(Ordering::Relaxed)).collect();
+    {
+        let mut store = STORE.lock().unwrap();
+        let acc = store.entry(region).or_default();
+        acc.entries += 1;
+        acc.wall_ns += wall_ns;
+        acc.barrier_ns += barrier_ns;
+        if acc.busy_ns.len() < busy_ns.len() {
+            acc.busy_ns.resize(busy_ns.len(), 0);
+            acc.tasks.resize(busy_ns.len(), 0);
+        }
+        for (lane, b) in busy_ns.iter().enumerate() {
+            acc.busy_ns[lane] += b;
+        }
+        for (lane, t) in tasks.iter().enumerate() {
+            acc.tasks[lane] += t;
+        }
+    }
+    // registry counters are µs (the exposition's convention); sub-µs
+    // entries round down here but stay exact in the ns store above
+    let reg = crate::obs::global();
+    let rl = [("region", region)];
+    reg.counter(&crate::obs::series("fastbn_pool_region_entries_total", &rl)).inc();
+    reg.counter(&crate::obs::series("fastbn_pool_region_wall_us_total", &rl)).add(wall_ns / 1_000);
+    reg.counter(&crate::obs::series("fastbn_pool_region_barrier_us_total", &rl)).add(barrier_ns / 1_000);
+    for (lane, (b, t)) in busy_ns.iter().zip(&tasks).enumerate() {
+        if *t == 0 && *b == 0 {
+            continue;
+        }
+        let lane = lane.to_string();
+        let wl = [("region", region), ("worker", lane.as_str())];
+        reg.counter(&crate::obs::series("fastbn_pool_worker_busy_us_total", &wl)).add(*b / 1_000);
+        reg.counter(&crate::obs::series("fastbn_pool_worker_tasks_total", &wl)).add(*t);
+    }
+}
+
+/// Snapshot of every profiled region, sorted by region name.
+pub fn snapshot() -> Vec<RegionProfile> {
+    let store = STORE.lock().unwrap();
+    store
+        .iter()
+        .map(|(region, acc)| RegionProfile {
+            region,
+            entries: acc.entries,
+            wall_us: acc.wall_ns / 1_000,
+            barrier_us: acc.barrier_ns / 1_000,
+            busy_us: acc.busy_ns.iter().map(|b| b / 1_000).collect(),
+            tasks: acc.tasks.clone(),
+        })
+        .collect()
+}
+
+/// The `PROFILE` counted-block body: one [`RegionProfile::render_line`]
+/// per region (empty string when nothing was profiled).
+pub fn render() -> String {
+    snapshot().iter().map(|p| p.render_line()).collect::<Vec<_>>().join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The store is process-wide and arming resets it, so every test
+    // touching it serializes on the shared obs toggle lock and keys its
+    // assertions on unique region names.
+
+    #[test]
+    fn record_and_snapshot_round_trip() {
+        let _serialized = crate::obs::trace::TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let tally = RegionTally::new(2);
+        tally.busy_ns[0].store(90_000, Ordering::Relaxed); // 90 µs
+        tally.busy_ns[1].store(30_000, Ordering::Relaxed); // 30 µs
+        tally.tasks[0].store(3, Ordering::Relaxed);
+        tally.tasks[1].store(1, Ordering::Relaxed);
+        record_region("prof-test-rt", Duration::from_micros(100), Duration::from_micros(10), &tally);
+        let snap = snapshot();
+        let p = snap.iter().find(|p| p.region == "prof-test-rt").expect("recorded region");
+        assert_eq!(p.entries, 1);
+        assert_eq!(p.workers(), 2);
+        assert_eq!(p.busy_us, vec![90, 30]);
+        assert_eq!(p.tasks, vec![3, 1]);
+        // util = 120 / (100 × 2); imbalance = 90 / 60; barrier = 10/100
+        assert!((p.utilization() - 0.6).abs() < 1e-9);
+        assert!((p.imbalance() - 1.5).abs() < 1e-9);
+        assert!((p.barrier_share() - 0.1).abs() < 1e-9);
+        assert_eq!(p.idle_us(), vec![10, 70]);
+        let line = p.render_line();
+        assert!(line.starts_with("region=prof-test-rt entries=1 workers=2 wall_us=100"), "{line}");
+        assert!(line.contains("busy_us=90,30"), "{line}");
+        assert!(line.contains("tasks=3,1"), "{line}");
+        // registry series landed too
+        let text = crate::obs::global().render();
+        assert!(text.contains("fastbn_pool_region_entries_total{region=\"prof-test-rt\"}"), "{text}");
+        assert!(text.contains("fastbn_pool_worker_busy_us_total{region=\"prof-test-rt\",worker=\"0\"} 90"), "{text}");
+    }
+
+    #[test]
+    fn entries_accumulate_and_imbalance_is_bounded_by_workers() {
+        let _serialized = crate::obs::trace::TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        for _ in 0..2 {
+            let tally = RegionTally::new(4);
+            tally.busy_ns[2].store(50_000, Ordering::Relaxed);
+            tally.tasks[2].store(5, Ordering::Relaxed);
+            record_region("prof-test-acc", Duration::from_micros(60), Duration::ZERO, &tally);
+        }
+        let snap = snapshot();
+        let p = snap.iter().find(|p| p.region == "prof-test-acc").expect("recorded region");
+        assert_eq!(p.entries, 2);
+        assert_eq!(p.busy_us[2], 100);
+        assert_eq!(p.tasks[2], 10);
+        // one lane did everything: imbalance hits exactly the lane count
+        assert!((p.imbalance() - 4.0).abs() < 1e-9);
+        assert!(p.imbalance() <= p.workers() as f64 + 1e-9);
+    }
+
+    #[test]
+    fn zero_work_region_is_well_defined() {
+        let _serialized = crate::obs::trace::TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let tally = RegionTally::new(3);
+        record_region("prof-test-zero", Duration::ZERO, Duration::ZERO, &tally);
+        let snap = snapshot();
+        let p = snap.iter().find(|p| p.region == "prof-test-zero").expect("recorded region");
+        assert_eq!(p.utilization(), 0.0);
+        assert_eq!(p.imbalance(), 1.0);
+        assert_eq!(p.barrier_share(), 0.0);
+    }
+}

@@ -1,7 +1,7 @@
 //! Process-wide metrics registry: counters, gauges, and fixed-bucket
 //! latency histograms with a Prometheus-style text exposition.
 //!
-//! Histograms use log2 buckets (`le = 1, 2, 4, … 2^20` µs, then `+Inf`),
+//! Histograms use log2 buckets (`le = 1, 2, 4, … 2^26` µs, then `+Inf`),
 //! so recording is two relaxed atomic adds and percentiles are a bucket
 //! walk — no reservoir lock ever sits on the hot path. The price is
 //! resolution: a percentile read from buckets is an *upper bound* within
@@ -19,8 +19,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
-/// Number of histogram buckets: `le = 2^0 … 2^20` µs plus `+Inf`.
-pub const BUCKETS: usize = 22;
+/// Number of histogram buckets: `le = 2^0 … 2^26` µs plus `+Inf`. The
+/// top finite bound (~67 s) leaves room for learn-spec `LOAD`s and big
+/// JT compiles, which blew past the original 2^20 (~1 s) ladder and
+/// vanished into `+Inf`.
+pub const BUCKETS: usize = 28;
 
 /// A monotonically increasing counter (relaxed atomics; cheap anywhere).
 #[derive(Debug, Default)]
@@ -63,7 +66,7 @@ fn bucket_index(v: u64) -> usize {
     if v <= 1 {
         return 0;
     }
-    // ceil(log2 v): 2 → 1 (le=2), 3..=4 → 2 (le=4), …; past 2^20 → +Inf
+    // ceil(log2 v): 2 → 1 (le=2), 3..=4 → 2 (le=4), …; past 2^26 → +Inf
     let bits = 64 - (v - 1).leading_zeros() as usize;
     bits.min(BUCKETS - 1)
 }
@@ -275,7 +278,8 @@ mod tests {
         assert_eq!(bucket_index(4), 2);
         assert_eq!(bucket_index(5), 3);
         assert_eq!(bucket_index(1 << 20), 20);
-        assert_eq!(bucket_index((1 << 20) + 1), BUCKETS - 1);
+        assert_eq!(bucket_index(1 << 26), 26);
+        assert_eq!(bucket_index((1 << 26) + 1), BUCKETS - 1);
         assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
     }
 

@@ -42,16 +42,23 @@ pub struct Span {
     pub note: String,
 }
 
-/// A completed span tree, spans in start order.
+/// A completed span tree, spans in start order. `at_unix_us` is the
+/// publish instant (µs since the Unix epoch) — the cluster front uses
+/// it to pick the freshest trace across replicas; `qid` is the
+/// cluster-minted query id, if the query carried one.
 #[derive(Clone, Debug)]
 pub struct Trace {
     pub spans: Vec<Span>,
     pub total_us: u64,
+    pub qid: Option<String>,
+    pub at_unix_us: u64,
 }
 
 impl Trace {
     /// Single-line rendering (wire replies are one line per trace):
-    /// `total_us=N root=Nus .child=Nus[note] ..grandchild=Nus`.
+    /// `total_us=N root=Nus .child=Nus[note] … at=N [qid=qN]`. The
+    /// `at=`/`qid=` tokens are appended at the **end** so every client
+    /// asserting `starts_with("OK trace total_us=")` keeps parsing.
     pub fn render(&self) -> String {
         let mut out = format!("total_us={}", self.total_us);
         for s in &self.spans {
@@ -63,6 +70,10 @@ impl Trace {
             if !s.note.is_empty() {
                 out.push_str(&format!("[{}]", s.note));
             }
+        }
+        out.push_str(&format!(" at={}", self.at_unix_us));
+        if let Some(qid) = &self.qid {
+            out.push_str(&format!(" qid={qid}"));
         }
         out
     }
@@ -77,6 +88,7 @@ struct Builder {
     started: Instant,
     open: Vec<usize>,
     spans: Vec<Span>,
+    qid: Option<String>,
 }
 
 thread_local! {
@@ -117,7 +129,9 @@ pub fn span(name: &'static str) -> SpanGuard {
     }
     BUILDER.with(|cell| {
         let mut slot = cell.borrow_mut();
-        let b = slot.get_or_insert_with(|| Builder { started: Instant::now(), open: Vec::new(), spans: Vec::new() });
+        let b = slot.get_or_insert_with(|| {
+            Builder { started: Instant::now(), open: Vec::new(), spans: Vec::new(), qid: None }
+        });
         let depth = b.open.len();
         let start_us = b.started.elapsed().as_micros() as u64;
         let idx = b.spans.len();
@@ -172,9 +186,25 @@ impl Drop for SpanGuard {
     }
 }
 
+/// Tag the thread's in-progress trace with a query id (the cluster
+/// front mints these and backends thread them through the shard
+/// dispatch). No-op when no trace is being built — so, like spans, it
+/// costs nothing while tracing is inactive.
+pub fn tag_qid(qid: &str) {
+    BUILDER.with(|cell| {
+        if let Some(b) = cell.borrow_mut().as_mut() {
+            b.qid = Some(qid.to_string());
+        }
+    });
+}
+
 fn publish(b: Builder) {
     let total_us = b.spans.first().map(|s| s.dur_us).unwrap_or(0);
-    let trace = Trace { spans: b.spans, total_us };
+    let at_unix_us = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0);
+    let trace = Trace { spans: b.spans, total_us, qid: b.qid, at_unix_us };
     if enabled() {
         let mut ring = RING.lock().unwrap();
         if ring.len() >= RING_CAP {
@@ -196,6 +226,14 @@ fn publish(b: Builder) {
 /// The most recently completed trace, if recording has captured one.
 pub fn last() -> Option<Trace> {
     RING.lock().unwrap().back().cloned()
+}
+
+/// The newest trace tagged with `qid`, searching the ring first and the
+/// slow-query log as a fallback (a slow trace may have aged out of the
+/// main ring but still be held by the slow log).
+pub fn find(qid: &str) -> Option<Trace> {
+    let hit = RING.lock().unwrap().iter().rev().find(|t| t.qid.as_deref() == Some(qid)).cloned();
+    hit.or_else(|| SLOW.lock().unwrap().iter().rev().find(|t| t.qid.as_deref() == Some(qid)).cloned())
 }
 
 /// Snapshot of the slow-query log, oldest first.
@@ -241,6 +279,25 @@ mod tests {
             assert!(line.contains(".trace-test-child="), "{line}");
             assert!(line.contains("[k=1]"), "{line}");
         }
+    }
+
+    #[test]
+    fn qid_tag_is_published_and_findable() {
+        let _serialized = TEST_TOGGLE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        {
+            let root = span("trace-test-qid-root");
+            tag_qid("q900001");
+            drop(root);
+        }
+        set_enabled(false);
+        let t = find("q900001").expect("tagged trace is findable by qid");
+        assert_eq!(t.qid.as_deref(), Some("q900001"));
+        assert!(t.at_unix_us > 0, "publish stamps a wall-clock instant");
+        let line = t.render();
+        assert!(line.ends_with(" qid=q900001"), "{line}");
+        assert!(line.contains(" at="), "{line}");
+        assert!(find("q900001-never-minted").is_none());
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! Integration: the observability layer end to end — registry exposition
 //! over a live fleet socket, the cluster-wide scrape merge, the
-//! slow-query log, and the guarantee that tracing never changes a reply.
+//! slow-query log, the pool parallelism profiler, cluster-correlated
+//! query tracing, and the guarantee that telemetry never changes a reply.
 //!
-//! The trace toggles (`TRACE on`, the slow threshold) are process-wide;
-//! every test that flips one serializes on [`TOGGLE`] and keys its
-//! assertions on span names unique to that test, so the suite stays
-//! order- and parallelism-independent.
+//! The trace/profiler toggles (`TRACE on`, `PROFILE on`, the slow
+//! threshold) are process-wide; every test that flips one serializes on
+//! [`TOGGLE`] and keys its assertions on span/region names unique to
+//! that test, so the suite stays order- and parallelism-independent.
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -161,7 +162,8 @@ fn cluster_scrape_merges_the_backend_expositions() {
     // expositions, bucket-wise for histograms. (Only per-net series are
     // compared: the in-process harness shares one global registry, which
     // the merge would double-count across backends.)
-    let parts: Vec<String> = h.live_backend_ids().iter().map(|id| h.backend_fleet(id).unwrap().metrics_exposition()).collect();
+    let parts: Vec<String> =
+        h.live_backend_ids().iter().map(|id| h.backend_fleet(id).unwrap().metrics_exposition()).collect();
     for key in [
         "fastbn_queries_total{net=\"asia\"}",
         "fastbn_queries_total{net=\"cancer\"}",
@@ -222,4 +224,122 @@ fn tracing_never_changes_a_reply_byte() {
     assert_eq!(off, on, "enabling tracing changed the reply");
     assert_eq!(off, slow, "the slow-query path changed the reply");
     server.shutdown();
+}
+
+/// A fleet whose shards run the hybrid engine on a real 2-thread pool —
+/// the configuration whose parallel regions the profiler instruments.
+fn hybrid_fleet_cfg() -> FleetConfig {
+    FleetConfig {
+        engine: EngineKind::Hybrid,
+        engine_cfg: EngineConfig::default().with_threads(2),
+        ..fleet_cfg()
+    }
+}
+
+#[test]
+fn profiler_never_changes_a_reply_byte() {
+    let _serialized = TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    fastbn::obs::profile::set_armed(false);
+    let server = FleetServer::start(Arc::new(Fleet::new(hybrid_fleet_cfg())), "127.0.0.1:0").unwrap();
+    let mut conn = connect(server.addr());
+    conn.request("LOAD asia").unwrap();
+    conn.request("USE asia").unwrap();
+    let q = "QUERY dysp | smoke=yes";
+
+    let off = conn.request(q).unwrap();
+    assert!(off.starts_with("OK "), "{off}");
+    // arm over the wire — the same toggle the PROFILE verb flips
+    assert_eq!(conn.request("PROFILE on").unwrap(), "OK profile on");
+    let on = conn.request(q).unwrap();
+    assert_eq!(conn.request("PROFILE off").unwrap(), "OK profile off");
+    let off_again = conn.request(q).unwrap();
+
+    assert_eq!(off, on, "arming the profiler changed the reply");
+    assert_eq!(off, off_again, "disarming the profiler did not restore the reply");
+    assert!(conn.request("PROFILE bogus").unwrap().starts_with("ERR usage: PROFILE"));
+    server.shutdown();
+}
+
+#[test]
+fn armed_hybrid_profile_accounts_busy_plus_idle_per_lane() {
+    let _serialized = TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    let server = FleetServer::start(Arc::new(Fleet::new(hybrid_fleet_cfg())), "127.0.0.1:0").unwrap();
+    let mut conn = connect(server.addr());
+    conn.request("LOAD asia").unwrap();
+    conn.request("USE asia").unwrap();
+    assert_eq!(conn.request("PROFILE on").unwrap(), "OK profile on");
+    for _ in 0..3 {
+        assert!(conn.request("QUERY dysp | smoke=yes").unwrap().starts_with("OK "));
+    }
+    let snap = fastbn::obs::profile::snapshot();
+    assert_eq!(conn.request("PROFILE off").unwrap(), "OK profile off");
+
+    let regions: Vec<&str> = snap.iter().map(|p| p.region).collect();
+    let hybrid: Vec<_> = snap.iter().filter(|p| p.region.starts_with("hybrid.")).collect();
+    assert!(!hybrid.is_empty(), "no hybrid.* regions profiled: {regions:?}");
+    for p in &hybrid {
+        assert!(p.entries > 0, "region {} recorded no entries", p.region);
+        assert!(p.tasks.iter().sum::<u64>() > 0, "region {} ran no tasks", p.region);
+        // per-lane accounting: busy + derived idle reproduces the region
+        // wall — exact when busy ≤ wall, with a small one-sided slop for
+        // clock truncation on the armed path's per-task Instant reads
+        let idle = p.idle_us();
+        for (lane, (b, i)) in p.busy_us.iter().zip(&idle).enumerate() {
+            let sum = b + i;
+            assert!(sum >= p.wall_us, "lane {lane} of {}: busy+idle {sum} < wall {}", p.region, p.wall_us);
+            assert!(sum <= p.wall_us + 2_000, "lane {lane} of {}: busy+idle {sum} overshoots wall {}", p.region, p.wall_us);
+        }
+        let imb = p.imbalance();
+        assert!(imb >= 1.0 - 1e-9 && imb <= p.workers() as f64 + 1e-9, "region {}: imbalance {imb}", p.region);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn cluster_trace_qid_returns_one_cross_tier_timeline_under_replication() {
+    let _serialized = TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    let h = ClusterHarness::start(
+        2,
+        fleet_cfg(),
+        ClusterConfig {
+            replicas: 2,
+            vnodes: 64,
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_secs(5),
+            probe_timeout: Duration::from_millis(500),
+            probe_interval: Duration::from_millis(100),
+            probe_backoff_max: Duration::from_secs(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut c = h.client().unwrap();
+    assert!(c.request("LOAD asia").unwrap().starts_with("OK loaded asia"));
+    c.request("USE asia").unwrap();
+    assert_eq!(c.request("TRACE on").unwrap(), "OK trace on backends=2");
+
+    let reply = c.request("QUERY dysp | smoke=yes").unwrap();
+    assert!(reply.starts_with("OK "), "{reply}");
+    let qid = reply
+        .split_whitespace()
+        .rev()
+        .find_map(|t| t.strip_prefix("qid="))
+        .unwrap_or_else(|| panic!("armed cluster QUERY reply carries no qid=: {reply:?}"))
+        .to_string();
+
+    // with R=2 both owners could answer for the net, but TRACE <qid>
+    // assembles exactly one merged timeline: one backend tag, one span
+    // tree, prefixed with the front's own routing view
+    let timeline = c.request(&format!("TRACE {qid}")).unwrap();
+    assert!(timeline.starts_with(&format!("OK trace qid={qid} net=asia backend=\"")), "{timeline}");
+    assert!(timeline.contains(" route_us="), "{timeline}");
+    assert!(timeline.contains(" total_us="), "{timeline}");
+    assert_eq!(timeline.matches("backend=\"").count(), 1, "more than one timeline: {timeline}");
+    assert_eq!(timeline.matches(" total_us=").count(), 1, "more than one span tree: {timeline}");
+
+    // unknown ids are a clean error; junk stays a usage error
+    assert!(c.request("TRACE q999983").unwrap().starts_with("ERR no trace recorded for qid"));
+    assert!(c.request("TRACE qabc").unwrap().starts_with("ERR usage: TRACE"));
+    assert_eq!(c.request("TRACE off").unwrap(), "OK trace off backends=2");
+    trace::set_enabled(false);
 }
